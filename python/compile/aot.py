@@ -1,0 +1,310 @@
+"""AOT compilation: lower every training/eval/decode step to HLO text.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the rust side's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs, per artifact ``<name>``:
+  artifacts/<name>.hlo.txt   — the HLO module
+  artifacts/<name>.meta.json — input/output names, dtypes, shapes + sizes
+and per model ``<model>``:
+  artifacts/<model>.layout.json — canonical flat parameter layout + the
+      trainable-subset masks every method uses (lets the rust coordinator
+      split/merge full <-> (frozen, trainable) and re-init heads)
+  artifacts/<model>.init.bin    — deterministic f32 init (full flat vector)
+plus a global artifacts/manifest.json.
+
+Python runs ONCE at build time; the rust binary is self-contained after
+``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import methods, model
+
+# --------------------------------------------------------------------------
+# model registry (sizes chosen for a 1-core CPU testbed; DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+C = model.TransformerCfg
+MODELS = {
+    # RoBERTa analogs (GLUE-analog classification, Tables 3/12/17, Fig 1)
+    "cls-base": ("cls", C(vocab=512, t=64, d=128, layers=4, heads=4, ff=512, n_cls=4)),
+    "cls-large": ("cls", C(vocab=512, t=64, d=192, layers=6, heads=6, ff=768, n_cls=4)),
+    "cls-lora": ("cls", C(vocab=512, t=64, d=128, layers=4, heads=4, ff=512, n_cls=4, use_lora=True)),
+    "cls-adapter": ("cls", C(vocab=512, t=64, d=128, layers=4, heads=4, ff=512, n_cls=4, use_adapter=True)),
+    # GPT-2 analogs (E2E-analog generation, Tables 4/13, Fig 4)
+    "lm-small": ("lm", C(vocab=384, t=48, d=64, layers=2, heads=2, ff=256, causal=True)),
+    "lm-medium": ("lm", C(vocab=384, t=48, d=96, layers=3, heads=3, ff=384, causal=True)),
+    "lm-large": ("lm", C(vocab=384, t=48, d=128, layers=4, heads=4, ff=512, causal=True)),
+    # ViT analogs (CIFAR analogs, Tables 5/14/15, Fig 5)
+    "vit-c10": ("vit", model.VitCfg(img=32, patch=4, d=96, layers=4, heads=4, ff=384, n_cls=10)),
+    "vit-c20": ("vit", model.VitCfg(img=32, patch=4, d=96, layers=4, heads=4, ff=384, n_cls=20)),
+    # ResNet analogs (CelebA-analog multi-label, Tables 6/16, §3.4)
+    "cnn-small": ("cnn", model.CnnCfg(img=32, channels=(16, 32, 64), groups=4, n_out=8)),
+    "cnn-small-bias": ("cnn", model.CnnCfg(img=32, channels=(16, 32, 64), groups=4, n_out=8, with_conv_bias=True)),
+}
+
+# Figure 3 sweeps: sequence-length (text) and resolution (image)
+for _t in (32, 64, 128, 256):
+    MODELS[f"cls-t{_t}"] = (
+        "cls",
+        C(vocab=512, t=_t, d=64, layers=2, heads=2, ff=256, n_cls=4),
+    )
+for _r in (16, 32, 64):
+    MODELS[f"cnn-r{_r}"] = (
+        "cnn",
+        model.CnnCfg(img=_r, channels=(8, 16), groups=4, n_out=8),
+    )
+
+DEFAULT_B = 8
+
+# (model, method) pairs to lower; "train" artifacts unless noted.
+_ACC = ["dp-bitfit", "dp-full-ghost", "nondp-full", "nondp-bitfit"]
+ARTIFACTS = []
+
+
+def _add(mdl, method, *, step="train", clip="abadi", b=DEFAULT_B):
+    ARTIFACTS.append(dict(model=mdl, method=method, step=step, clip=clip, b=b))
+
+
+for _m in _ACC + ["dp-full-opacus", "dp-lastlayer"]:
+    _add("cls-base", _m)
+_add("cls-base", "dp-bitfit", clip="autos")
+_add("cls-base", "dp-full-ghost", clip="autos")
+_add("cls-lora", "dp-lora")
+_add("cls-lora", "nondp-full")  # LoRA-std baseline uses the same model shape
+_add("cls-adapter", "dp-adapter")
+_add("cls-adapter", "nondp-full")
+for _m in _ACC:
+    _add("cls-large", _m)
+_add("cls-large", "dp-bitfit", clip="autos")
+_add("cls-large", "dp-full-ghost", clip="autos")
+for _mdl in ("lm-small", "lm-medium", "lm-large"):
+    for _m in _ACC:
+        _add(_mdl, _m)
+    _add(_mdl, "eval", step="eval")
+    _add(_mdl, "decode", step="decode")
+for _mdl in ("cls-base", "cls-large", "cls-lora", "cls-adapter"):
+    _add(_mdl, "eval", step="eval")
+for _mdl in ("vit-c10", "vit-c20"):
+    for _m in ("dp-bitfit", "dp-full-opacus", "dp-full-ghost", "dp-lastlayer", "nondp-full"):
+        _add(_mdl, _m)
+    _add(_mdl, "eval", step="eval")
+for _m in ("dp-bitfit", "dp-full-opacus", "dp-full-ghost", "dp-lastlayer", "nondp-full"):
+    _add("cnn-small", _m)
+_add("cnn-small", "eval", step="eval")
+_add("cnn-small-bias", "dp-bitfit-add")
+_add("cnn-small-bias", "nondp-full")
+_add("cnn-small-bias", "eval", step="eval")
+# Figure 3 sweeps (fixed B, varying T / resolution)
+for _t in (32, 64, 128, 256):
+    for _m in ("dp-bitfit", "dp-full-ghost", "dp-full-opacus", "nondp-full"):
+        _add(f"cls-t{_t}", _m)
+for _r in (16, 32, 64):
+    for _m in ("dp-bitfit", "dp-full-ghost", "dp-full-opacus", "nondp-full"):
+        _add(f"cnn-r{_r}", _m)
+
+
+# --------------------------------------------------------------------------
+# lowering machinery
+# --------------------------------------------------------------------------
+
+
+def artifact_name(entry):
+    n = f"{entry['model']}__{entry['method']}"
+    if entry["step"] == "train" and entry["clip"] != "abadi":
+        n += f"__{entry['clip']}"
+    return n
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def keep_all_inputs(fn):
+    """Force every input into the lowered HLO signature.
+
+    jax.jit drops unused arguments (e.g. ``clip_r`` in non-DP steps, the
+    empty ``frozen`` vector in full fine-tuning), which would make artifact
+    signatures method-dependent.  Adding a zero-valued dependency on each
+    argument to the first output keeps the uniform DESIGN.md §6 contract;
+    XLA folds the zeros away after the signature is fixed.
+    """
+
+    def wrapped(*args):
+        dep = jnp.float32(0.0)
+        for a in args:
+            flat = jnp.ravel(a).astype(jnp.float32)
+            dep = dep + 0.0 * jnp.sum(flat[:1])
+        out = fn(*args)
+        if isinstance(out, tuple):
+            return (out[0] + dep,) + out[1:]
+        return out + dep
+
+    return wrapped
+
+
+def data_specs(kind, cfg, b):
+    """(x_spec, y_spec) for a model family."""
+    if kind in ("cls", "lm"):
+        x = _spec((b, cfg.t), jnp.int32)
+        y = _spec((b, cfg.t), jnp.int32) if kind == "lm" else _spec((b,), jnp.int32)
+    elif kind == "vit":
+        x = _spec((b, cfg.img, cfg.img, 3))
+        y = _spec((b,), jnp.int32)
+    else:  # cnn
+        x = _spec((b, cfg.img, cfg.img, 3))
+        y = _spec((b, cfg.n_out)) if cfg.multi_label else _spec((b,), jnp.int32)
+    return x, y
+
+
+def build_step(bundle, entry):
+    """(fn, input_specs, input_names, output_names, pf, pt)."""
+    b = entry["b"]
+    x_spec, y_spec = data_specs(bundle.kind, bundle.cfg, b)
+    if entry["step"] == "train":
+        method = entry["method"]
+        subset = methods.METHOD_SUBSET[method]
+        fn = methods.STEP_BUILDERS[method](bundle, entry["clip"])
+        trainable = methods.trainable_mask(bundle, subset)
+        _unf, pf, pt = model.make_unflatten(bundle.spec, trainable)
+        specs = [_spec((pf,)), _spec((pt,)), x_spec, y_spec, _spec((b,)), _spec(())]
+        names = ["frozen", "trainable", "x", "y", "mask", "clip_r"]
+        outs = ["loss_sum", "grad", "sq_norms"]
+    elif entry["step"] == "eval":
+        fn = methods.make_eval_step(bundle, "full")
+        trainable = methods.trainable_mask(bundle, "full")
+        _unf, pf, pt = model.make_unflatten(bundle.spec, trainable)
+        specs = [_spec((pf,)), _spec((pt,)), x_spec, y_spec, _spec((b,))]
+        names = ["frozen", "trainable", "x", "y", "mask"]
+        outs = ["loss_sum", "correct"]
+    elif entry["step"] == "decode":
+        fn = methods.make_decode_step(bundle)
+        trainable = methods.trainable_mask(bundle, "full")
+        _unf, pf, pt = model.make_unflatten(bundle.spec, trainable)
+        specs = [_spec((pf,)), _spec((pt,)), x_spec, _spec((b,), jnp.int32)]
+        names = ["frozen", "trainable", "x", "pos"]
+        outs = ["logits"]
+    else:
+        raise ValueError(entry["step"])
+    return fn, specs, names, outs, pf, pt
+
+
+def export_model(out_dir, mdl_name, kind, cfg):
+    """Write layout.json + init.bin for one model; returns (bundle, manifest entry)."""
+    bundle, params = methods.make_bundle(kind, cfg)
+    flat = np.asarray(model.flatten_params(params), dtype=np.float32)
+    leaves, off = [], 0
+    for name, shape in bundle.spec:
+        size = int(math.prod(shape)) if shape else 1
+        leaves.append(
+            {"name": name, "shape": list(shape), "size": size, "offset": off,
+             "is_head": name.startswith("head")}
+        )
+        off += size
+    subsets = {}
+    for subset in ("full", "bitfit", "lastlayer"):
+        subsets[subset] = methods.trainable_mask(bundle, subset)
+    if kind == "cnn" and cfg.with_conv_bias:
+        subsets["bitfit_add"] = methods.trainable_mask(bundle, "bitfit_add")
+    if getattr(cfg, "use_lora", False):
+        subsets["lora"] = methods.trainable_mask(bundle, "lora")
+    if getattr(cfg, "use_adapter", False):
+        subsets["adapter"] = methods.trainable_mask(bundle, "adapter")
+    layout = {
+        "model": mdl_name,
+        "kind": kind,
+        "n_params": int(off),
+        "leaves": leaves,
+        "subsets": subsets,
+    }
+    with open(os.path.join(out_dir, f"{mdl_name}.layout.json"), "w") as f:
+        json.dump(layout, f)
+    flat.tofile(os.path.join(out_dir, f"{mdl_name}.init.bin"))
+    cfg_d = dataclasses.asdict(cfg)
+    cfg_d = {k: (list(v) if isinstance(v, tuple) else v) for k, v in cfg_d.items()}
+    entry = {"kind": kind, "cfg": cfg_d, "n_params": int(off)}
+    return bundle, entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}, "artifacts": []}
+    bundles = {}
+    for mdl_name, (kind, cfg) in MODELS.items():
+        bundle, entry = export_model(args.out, mdl_name, kind, cfg)
+        bundles[mdl_name] = bundle
+        manifest["models"][mdl_name] = entry
+        print(f"model {mdl_name}: {entry['n_params']} params")
+
+    for entry in ARTIFACTS:
+        name = artifact_name(entry)
+        if args.only and args.only not in name:
+            continue
+        bundle = bundles[entry["model"]]
+        fn, specs, in_names, out_names, pf, pt = build_step(bundle, entry)
+        fn = keep_all_inputs(fn)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *specs)
+        if not isinstance(out_shapes, tuple):
+            out_shapes = (out_shapes,)
+        meta = {
+            "name": name,
+            "model": entry["model"],
+            "method": entry["method"],
+            "step": entry["step"],
+            "clip": entry["clip"] if entry["step"] == "train" else None,
+            "subset": methods.METHOD_SUBSET.get(entry["method"], "full"),
+            "batch": entry["b"],
+            "pf": int(pf),
+            "pt": int(pt),
+            "inputs": [
+                {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+                for n, s in zip(in_names, specs)
+            ],
+            "outputs": [
+                {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+                for n, s in zip(out_names, out_shapes)
+            ],
+        }
+        with open(os.path.join(args.out, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f)
+        print(f"artifact {name}: {len(text)} chars, pf={pf} pt={pt}")
+
+    manifest["artifacts"] = [artifact_name(e) for e in ARTIFACTS]
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    print(f"manifest lists {len(manifest['artifacts'])} artifacts in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .bias_grad import bias_grad, row_sq_norms  # noqa: F401
+from .clip_reduce import weighted_sum  # noqa: F401
+from .ghost_norm import ghost_norm  # noqa: F401

@@ -1,0 +1,130 @@
+"""Pallas kernel for Algorithm 1, line 5: per-sample bias gradients.
+
+The per-sample bias gradient of a layer ``s = a W + 1 b`` is
+``dL_i/db = sum_T dL/ds_i`` — a reduction of the output gradient over the
+feature axis T.  This is the *entire* DP overhead of bias training: no
+activation tensor, no O(BTpd) contraction, and the cost is independent of
+whether the network input dimension T is 10 or 10^5 (the red column of
+Table 2 in the paper).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks
+``(B blocks, p blocks, T blocks)`` with T innermost, so the output block
+``[B_blk, p_blk]`` stays resident in VMEM while ``[B_blk, T_blk, p_blk]``
+tiles of the output gradient stream through — the same HBM->VMEM schedule a
+hand-written Mosaic kernel would use for a sequential reduction.  VMEM
+footprint per step: ``B_blk*T_blk*p_blk + B_blk*p_blk`` floats; the kernel is
+bandwidth-bound (pure VPU reduction, no MXU), so roofline is HBM bandwidth.
+
+Executed with ``interpret=True``: on the CPU PJRT backend a real Mosaic
+lowering would emit a custom-call the CPU plugin cannot run; interpret mode
+lowers to plain HLO with identical numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM-friendly block sizes (tuned in EXPERIMENTS.md §Perf; the
+# structure — T innermost, output-resident — is the optimization, interpret
+# wall-clock is not a TPU proxy).
+_BLK_B = 8
+_BLK_T = 128
+_BLK_P = 128
+
+
+def pad_to(x, axis, mult):
+    """Zero-pad ``axis`` of ``x`` up to a multiple of ``mult``.
+
+    Pallas interpret mode fills out-of-bounds reads of partial trailing
+    blocks with NaN; zero padding keeps every reduction here exact.
+    """
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+def _bias_grad_kernel(g_ref, out_ref):
+    """One grid step: accumulate a T-tile's contribution to [B_blk, p_blk]."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(g_ref[...], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_b", "blk_t", "blk_p"))
+def bias_grad(g, *, blk_b=_BLK_B, blk_t=_BLK_T, blk_p=_BLK_P):
+    """Per-sample bias gradients ``[B, p]`` from output gradients ``[B, T, p]``.
+
+    Args:
+      g: output gradient ``dL/ds`` of shape ``[B, T, p]``.  A ``[B, p]`` input
+        (layer without a feature axis) is returned unchanged.
+      blk_b / blk_t / blk_p: VMEM tile sizes.
+
+    Returns:
+      ``[B, p]`` per-sample bias gradients, f32.
+    """
+    if g.ndim == 2:
+        return g
+    b, t, p = g.shape
+    blk_b, blk_t, blk_p = min(blk_b, b), min(blk_t, t), min(blk_p, p)
+    g = pad_to(pad_to(pad_to(g, 0, blk_b), 1, blk_t), 2, blk_p)
+    bp, tp, pp = g.shape
+    grid = (bp // blk_b, pp // blk_p, tp // blk_t)
+    out = pl.pallas_call(
+        _bias_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_b, blk_t, blk_p), lambda i, j, k: (i, k, j)),
+        ],
+        out_specs=pl.BlockSpec((blk_b, blk_p), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, pp), g.dtype),
+        interpret=True,
+    )(g)
+    return out[:b, :p]
+
+
+def _row_sq_kernel(g_ref, out_ref):
+    """One grid step: accumulate a P-tile's squared sum into [B_blk]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    blk = g_ref[...]
+    out_ref[...] += jnp.sum(blk * blk, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_b", "blk_p"))
+def row_sq_norms(g, *, blk_b=64, blk_p=512):
+    """Per-row squared L2 norms ``[B]`` of per-sample gradients ``[B, P]``.
+
+    Together with :func:`bias_grad` this is the fused "compute per-example
+    gradient and its norm" step of Algorithm 1.  P is tiled so that arbitrary
+    parameter counts stream through a fixed VMEM budget.
+    """
+    b, p = g.shape
+    blk_b, blk_p = min(blk_b, b), min(blk_p, p)
+    g = pad_to(pad_to(g, 0, blk_b), 1, blk_p)
+    bp, pp = g.shape
+    grid = (bp // blk_b, pp // blk_p)
+    out = pl.pallas_call(
+        _row_sq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk_b, blk_p), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((blk_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), g.dtype),
+        interpret=True,
+    )(g)
+    return out[:b]

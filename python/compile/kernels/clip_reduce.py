@@ -1,0 +1,72 @@
+"""Pallas kernel for Algorithm 1, line 9: sum of clipped per-sample grads.
+
+Given per-sample gradients ``G [B, P]`` and per-sample weights ``c [B]``
+(clipping factor x batch mask), compute ``sum_i c_i G_i`` — a [B]-weighted
+reduction over the batch axis.  The clip factors themselves are an O(B)
+computation done in plain jnp (``ref.clip_factors``); the expensive part is
+streaming the ``B x P`` gradient matrix once, which this kernel tiles.
+
+TPU mapping: grid ``(P blocks, B blocks)`` with B innermost; the output
+``[P_blk]`` tile stays VMEM-resident while ``[B_blk, P_blk]`` gradient tiles
+stream through, each step issuing a ``[B_blk] x [B_blk, P_blk]`` vector-
+matrix product on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLK_B = 64
+_BLK_P = 512
+
+
+def _weighted_sum_kernel(c_ref, g_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        c_ref[...], g_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("blk_b", "blk_p"))
+def weighted_sum(g, c, *, blk_b=_BLK_B, blk_p=_BLK_P):
+    """Clipped-gradient aggregation ``sum_i c_i g_i``.
+
+    Args:
+      g: per-sample gradients ``[B, P]``.
+      c: per-sample weights ``[B]`` (clip factor x mask; masked-out padding
+        examples contribute exactly zero).
+      blk_b / blk_p: tile sizes.
+
+    Returns:
+      ``[P]`` aggregated gradient, f32 (noise is added by the rust
+      coordinator once per logical Poisson batch — see DESIGN.md §6).
+    """
+    from .bias_grad import pad_to
+
+    b, p = g.shape
+    blk_b, blk_p = min(blk_b, b), min(blk_p, p)
+    g = pad_to(pad_to(g, 0, blk_b), 1, blk_p)
+    c = pad_to(c, 0, blk_b)
+    bp, pp = g.shape
+    grid = (pp // blk_p, bp // blk_b)
+    out = pl.pallas_call(
+        _weighted_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_b,), lambda i, j: (j,)),
+            pl.BlockSpec((blk_b, blk_p), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((blk_p,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(c, g)
+    return out[:p]

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an entry here with identical semantics; the
+pytest suite (``python/tests``) asserts ``allclose`` between the Pallas
+implementation (interpret mode) and these references over hypothesis-driven
+shape/value sweeps.  These functions are also used directly by the L2 step
+builders when ``use_pallas=False`` (a debug escape hatch — artifacts shipped
+by ``aot.py`` are built with the Pallas path).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+AUTO_S_STABILIZER = 0.01  # gamma in AUTO-S clipping R/(||g|| + gamma) (Bu et al., 2022b)
+
+
+def bias_grad(g):
+    """Per-sample bias gradient from the output gradient (Alg. 1, line 5).
+
+    For a linear layer ``s = a @ W + 1 b``, the per-sample bias gradient is
+    ``dL_i/db = sum_T dL/ds_i`` — no activation needed.
+
+    Args:
+      g: output gradient ``dL/ds`` of shape ``[B, T, p]`` (or ``[B, p]`` for
+        layers without a feature axis — returned unchanged).
+
+    Returns:
+      Per-sample bias gradients of shape ``[B, p]``.
+    """
+    if g.ndim == 2:
+        return g
+    return jnp.sum(g, axis=tuple(range(1, g.ndim - 1)))
+
+
+def row_sq_norms(g):
+    """Per-row squared L2 norms of a flat per-sample gradient matrix.
+
+    Args:
+      g: per-sample gradients ``[B, P]``.
+
+    Returns:
+      ``[B]`` with ``||g_i||_2^2``.
+    """
+    return jnp.sum(g * g, axis=-1)
+
+
+def ghost_norm(a, e):
+    """Squared per-sample weight-gradient norms via the ghost-norm trick.
+
+    For ``s = a @ W`` the per-sample weight gradient is ``g_i = e_i^T a_i``
+    and ``||g_i||_F^2 = <a_i a_i^T, e_i e_i^T>`` — an O(B T^2 (p + d))
+    computation that never materializes ``g_i`` (Goodfellow 2015; Li et al.
+    2021).  This is the baseline DP-full path; note its T^2 term, the cost
+    the paper's DP-BiTFiT avoids.
+
+    Args:
+      a: layer input ``[B, T, d]``.
+      e: output gradient ``dL/ds`` ``[B, T, p]``.
+
+    Returns:
+      ``[B]`` with ``||e_i^T a_i||_F^2``.
+    """
+    aat = jnp.einsum("btd,bsd->bts", a, a)
+    eet = jnp.einsum("btp,bsp->bts", e, e)
+    return jnp.sum(aat * eet, axis=(1, 2))
+
+
+def clip_factors(sq_norms, clip_r, mode):
+    """Per-sample clipping factors C_i from squared gradient norms.
+
+    Args:
+      sq_norms: ``[B]`` squared per-sample grad norms.
+      clip_r: scalar clipping threshold R.
+      mode: ``"abadi"`` -> ``min(R/||g||, 1)`` (Abadi et al., 2016) or
+        ``"autos"`` -> ``R/(||g|| + 0.01)`` (AUTO-S, Bu et al., 2022b).
+
+    Returns:
+      ``[B]`` clipping factors.
+    """
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    if mode == "abadi":
+        return jnp.minimum(clip_r / jnp.maximum(norms, 1e-12), 1.0)
+    if mode == "autos":
+        return clip_r / (norms + AUTO_S_STABILIZER)
+    raise ValueError(f"unknown clipping mode {mode!r}")
+
+
+def weighted_sum(g, c):
+    """Sum of per-sample gradients weighted by clip factors: ``sum_i c_i g_i``.
+
+    Args:
+      g: per-sample gradients ``[B, P]``.
+      c: per-sample weights (clip factor x mask) ``[B]``.
+
+    Returns:
+      ``[P]`` clipped gradient sum (Alg. 1, line 9).
+    """
+    return jnp.einsum("b,bp->p", c, g)

@@ -1,0 +1,276 @@
+"""Neural-net layers with per-sample-parameter support (the "expand trick").
+
+JAX is functional, so the paper's PyTorch hook machinery maps onto two
+mechanisms (DESIGN.md §1):
+
+* **Expand trick** — a trainable tensor is fed to the graph expanded over the
+  batch axis (``[B, ...]``, row i used only by sample i).  One ordinary
+  backward pass then yields *exact per-sample gradients* for the trainable
+  subset.  Every layer here accepts either a shared parameter (base ndim) or
+  a per-sample parameter (base ndim + 1) and dispatches on ``ndim``.
+
+* **Activation-free bias add** — :func:`bias_add_ps` is a ``custom_vjp``
+  whose backward calls the Pallas ``bias_grad`` kernel and whose residual
+  set is *empty*: nothing from the forward pass is saved for the bias path.
+  This is the functional statement of the paper's "no forward hooks / no
+  stored activations" property (§2, Eq. 3).
+
+All parameters are plain ``jnp`` arrays inside nested dicts; no framework.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+# --------------------------------------------------------------------------
+# activation-free bias add (the paper's mechanism)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def bias_add_ps(s, b):
+    """Add a per-sample bias ``b [B, p]`` to pre-activations ``s [B, ..., p]``.
+
+    Backward w.r.t. ``b`` is the Pallas per-sample bias-grad kernel (sum of
+    the output gradient over all middle axes); backward w.r.t. ``s`` is the
+    identity.  Residuals: none — the forward stores nothing.
+    """
+    return s + b.reshape(b.shape[:1] + (1,) * (s.ndim - 2) + b.shape[1:])
+
+
+def _bias_add_fwd(s, b):
+    return bias_add_ps(s, b), None
+
+
+def _bias_add_bwd(_res, g):
+    if g.ndim > 3:
+        gb = kernels.bias_grad(g.reshape(g.shape[0], -1, g.shape[-1]))
+    else:
+        gb = kernels.bias_grad(g)
+    return g, gb
+
+
+bias_add_ps.defvjp(_bias_add_fwd, _bias_add_bwd)
+
+
+def bias_add(s, b):
+    """Bias add dispatching on shared ``[p]`` vs per-sample ``[B, p]`` bias."""
+    if b.ndim == 1:
+        return s + b
+    return bias_add_ps(s, b)
+
+
+# --------------------------------------------------------------------------
+# shared/per-sample parameter helpers
+# --------------------------------------------------------------------------
+
+
+def pmat(x, w):
+    """Matmul with a shared ``[d, p]`` or per-sample ``[B, d, p]`` weight."""
+    if w.ndim == 2:
+        return x @ w
+    if x.ndim == 3:
+        return jnp.einsum("btd,bdp->btp", x, w)
+    return jnp.einsum("bd,bdp->bp", x, w)
+
+
+def pscale(x, gamma):
+    """Elementwise scale with shared ``[p]`` or per-sample ``[B, p]`` gamma."""
+    if gamma.ndim == 1:
+        return x * gamma
+    return x * gamma.reshape(gamma.shape[:1] + (1,) * (x.ndim - 2) + gamma.shape[1:])
+
+
+# --------------------------------------------------------------------------
+# layers
+# --------------------------------------------------------------------------
+
+
+def linear(x, p, *, site=None, ctx=None):
+    """``x @ W + b``; records the ghost-clipping site if ``ctx`` collects."""
+    s = pmat(x, p["w"])
+    s = _site(s, x, site, ctx)
+    if "b" in p:
+        s = bias_add(s, p["b"])
+    return s
+
+
+def layer_norm(x, p, *, site=None, ctx=None, eps=1e-5):
+    """LayerNorm with trainable scale (weight) and shift (bias).
+
+    For ghost clipping the *affine output* is the perturbation site: with
+    ``out = xhat * gamma + beta + z`` and ``e = dL/dz``, the per-sample
+    grads are ``grad_gamma_i = sum_T e * xhat`` and ``grad_beta_i =
+    sum_T e`` — both computable from (e, xhat).
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xhat = (x - mu) / jnp.sqrt(var + eps)
+    out = pscale(xhat, p["gamma"])
+    out = bias_add(out, p["beta"])
+    if ctx is not None and site is not None:
+        ctx.ln_sites.append((site, xhat))
+        ctx.site_shapes[site] = out.shape
+        z = ctx.zs.get(site)
+        if z is not None:
+            out = out + z
+    return out
+
+
+def group_norm(x, p, groups, *, site=None, ctx=None, eps=1e-5):
+    """GroupNorm over NHWC (DP-compatible normalization, App. A.2)."""
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xhat = ((xg - mu) / jnp.sqrt(var + eps)).reshape(b, h, w, c)
+    out = pscale(xhat, p["gamma"])
+    out = bias_add(out, p["beta"])
+    if ctx is not None and site is not None:
+        ctx.ln_sites.append((site, xhat.reshape(b, -1, c)))
+        ctx.site_shapes[site] = out.shape
+        z = ctx.zs.get(site)
+        if z is not None:
+            out = out + z.reshape(out.shape)
+    return out
+
+
+def conv2d(x, p, *, stride=1, site=None, ctx=None):
+    """3x3 same-padding conv, NHWC; weight ``[kh, kw, cin, cout]``.
+
+    Bias-less when ``p`` has no ``"b"`` key — the ResNet situation of
+    App. A.2 that motivates DP-BiTFiT-Add.
+    """
+    w = p["w"]
+    s = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if ctx is not None and site is not None:
+        # ghost clipping views a conv as a linear layer over unfolded patches
+        patches = jax.lax.conv_general_dilated_patches(
+            x,
+            filter_shape=w.shape[:2],
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        bsz = x.shape[0]
+        a = patches.reshape(bsz, -1, patches.shape[-1])
+        s2 = s.reshape(bsz, -1, s.shape[-1])
+        s2 = _site(s2, a, site, ctx)
+        s = s2.reshape(s.shape)
+    if "b" in p:
+        s = bias_add(s, p["b"])
+    return s
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def attention(x, p, heads, *, causal, use_lora=False, ctx=None, prefix=""):
+    """Multi-head self-attention with combined qkv projection.
+
+    With ``use_lora`` the qkv projection gains a low-rank update
+    ``x @ lora_a @ lora_b`` (LoRA on the attention projections, Hu et al.).
+    """
+    b, t, d = x.shape
+    qkv = linear(x, p["qkv"], site=prefix + "qkv", ctx=ctx)  # [B,T,3d]
+    if use_lora:
+        qkv = qkv + lora_delta(x, p["qkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_of(z):
+        return z.reshape(b, t, heads, d // heads).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_of(q), heads_of(k), heads_of(v)
+    att = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(d / heads)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return linear(out, p["proj"], site=prefix + "proj", ctx=ctx)
+
+
+def mlp(x, p, *, ctx=None, prefix=""):
+    h = gelu(linear(x, p["fc1"], site=prefix + "fc1", ctx=ctx))
+    return linear(h, p["fc2"], site=prefix + "fc2", ctx=ctx)
+
+
+def lora_delta(x, p, scale=2.0):
+    """LoRA low-rank update ``scale * x @ A @ B`` (Hu et al., 2021)."""
+    return pmat(pmat(x, p["lora_a"]), p["lora_b"]) * scale
+
+
+def adapter(x, p):
+    """Bottleneck adapter ``x + GeLU(x W_down) W_up`` (Houlsby et al., 2019)."""
+    h = gelu(bias_add(pmat(x, p["adapter_down"]), p["adapter_down_b"]))
+    return x + bias_add(pmat(h, p["adapter_up"]), p["adapter_up_b"])
+
+
+def transformer_block(x, p, heads, *, causal, use_lora=False, use_adapter=False,
+                      ctx=None, prefix=""):
+    """Pre-LN transformer block, optionally with LoRA on qkv or adapters."""
+    h = layer_norm(x, p["ln1"], site=prefix + "ln1", ctx=ctx)
+    a = attention(h, p["attn"], heads, causal=causal, use_lora=use_lora,
+                  ctx=ctx, prefix=prefix + "attn_")
+    if use_adapter:
+        a = adapter(a, p["adapter1"])
+    x = x + a
+    h = layer_norm(x, p["ln2"], site=prefix + "ln2", ctx=ctx)
+    m = mlp(h, p["mlp"], ctx=ctx, prefix=prefix + "mlp_")
+    if use_adapter:
+        m = adapter(m, p["adapter2"])
+    return x + m
+
+
+# --------------------------------------------------------------------------
+# ghost-clipping site collection
+# --------------------------------------------------------------------------
+
+
+class GhostCtx:
+    """Collects (activation, site-name) pairs and LN x-hats during a forward.
+
+    Used only by the GhostClip baseline step (2 backprops, stored
+    activations) — DP-BiTFiT never instantiates one.
+    """
+
+    def __init__(self, zs=None):
+        self.zs = zs if zs is not None else {}
+        self.sites = []        # [(name, a [B,T,d])] for linear/conv sites
+        self.ln_sites = []     # [(name, xhat [B,T,p])] for layer norms
+        self.emb_sites = []    # [(name, token_ids or None)] for embeddings
+        self.site_shapes = {}  # name -> shape of the pre-activation s
+
+
+def _site(s, a, site, ctx):
+    """Register a ghost site: record activation, add the z perturbation."""
+    if ctx is None or site is None:
+        return s
+    ctx.sites.append((site, a))
+    ctx.site_shapes[site] = s.shape
+    z = ctx.zs.get(site)
+    if z is not None:
+        s = s + z
+    return s
+
+
+def embed_site(s, name, token_ids, ctx):
+    """Register an embedding-lookup ghost site (one-hot ghost norm)."""
+    if ctx is None:
+        return s
+    ctx.emb_sites.append((name, token_ids))
+    ctx.site_shapes[name] = s.shape
+    z = ctx.zs.get(name)
+    if z is not None:
+        s = s + z
+    return s

@@ -1,0 +1,308 @@
+"""DP fine-tuning step builders — Algorithm 1 and every baseline in Table 2.
+
+Each builder returns a pure function with the artifact signature of
+DESIGN.md §6 (train steps return ``(loss_sum, clipped_grad_sum, sq_norms)``)
+that ``aot.py`` lowers to HLO text.  The implementations are *cost-faithful*
+to the codebases the paper benchmarks:
+
+* ``expand``  — per-sample grads for a trainable subset via the expand trick
+  (one backward, activation-free bias path).  Used by DP-BiTFiT,
+  DP-BiTFiT-Add, DP-last-layer, DP-LoRA, DP-Adapter.
+* ``opacus``  — per-sample grads for *all* parameters instantiated via
+  ``vmap(grad)`` (Opacus: +O(B·pd) space).
+* ``ghost``   — GhostClip: backward #1 computes per-sample grad *norms* via
+  the O(BT^2) Pallas ghost-norm kernel over stored activations, backward #2
+  re-weights the loss by the clip factors (2 backprops, +O(BT^2) space).
+* ``nondp``   — standard training on the same trainable subset.
+
+Noise is NOT added here: the rust coordinator accumulates clipped sums over
+microbatches of one logical Poisson batch, then adds sigma*R*N(0, I) once
+(Alg. 1 lines 6-10 live in L3, where the privacy accountant also lives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels, model
+from .kernels import ref
+from .layers import GhostCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Bundle:
+    """A model family + config + its canonical parameter spec."""
+
+    kind: str          # "cls" | "lm" | "vit" | "cnn"
+    cfg: object
+    spec: tuple        # ((name, shape), ...)
+
+    @property
+    def n_params(self):
+        total = 0
+        for _n, shape in self.spec:
+            size = 1
+            for s in shape:
+                size *= s
+            total += size
+        return total
+
+
+def make_bundle(kind, cfg):
+    key = jax.random.PRNGKey(0)
+    init = {
+        "cls": model.init_transformer,
+        "lm": model.init_transformer,
+        "vit": model.init_vit,
+        "cnn": model.init_cnn,
+    }[kind]
+    params = init(key, cfg)
+    return Bundle(kind, cfg, tuple(model.param_spec(params))), params
+
+
+def per_example_loss(bundle, params, x, y, ctx=None):
+    f = {
+        "cls": model.per_example_loss_cls,
+        "lm": model.per_example_loss_lm,
+        "vit": model.per_example_loss_vit,
+        "cnn": model.per_example_loss_cnn,
+    }[bundle.kind]
+    return f(params, x, y, bundle.cfg, ctx)
+
+
+def trainable_mask(bundle, method):
+    train_head = bundle.kind != "lm"  # §4.3: new head for downstream tasks
+    return model.select_trainable(bundle.spec, method, train_head=train_head)
+
+
+# --------------------------------------------------------------------------
+# DP steps
+# --------------------------------------------------------------------------
+
+
+def make_dp_step_expand(bundle, method, clip_mode):
+    """Per-sample grads via the expand trick (DP-BiTFiT & friends)."""
+    trainable = trainable_mask(bundle, method)
+    unflatten, _pf, pt = model.make_unflatten(bundle.spec, trainable)
+
+    def step(frozen_flat, train_flat, x, y, mask, clip_r):
+        b = x.shape[0]
+        t_exp = jnp.broadcast_to(train_flat, (b, pt))
+
+        def loss_fn(t_exp_):
+            params = unflatten(frozen_flat, t_exp_)
+            per_ex = per_example_loss(bundle, params, x, y)
+            return jnp.sum(per_ex * mask)
+
+        loss, g_ps = jax.value_and_grad(loss_fn)(t_exp)      # g_ps [B, Pt]
+        sq = kernels.row_sq_norms(g_ps)                       # Pallas
+        c = ref.clip_factors(sq, clip_r, clip_mode) * mask
+        grad = kernels.weighted_sum(g_ps, c)                  # Pallas
+        return loss, grad, sq
+
+    return step
+
+
+def make_dp_step_opacus(bundle, clip_mode):
+    """DP full fine-tuning, Opacus style: instantiate [B, P] grads."""
+    trainable = trainable_mask(bundle, "full")
+    unflatten, _pf, _pt = model.make_unflatten(bundle.spec, trainable)
+
+    def step(frozen_flat, train_flat, x, y, mask, clip_r):
+        def one(train_flat_, xi, yi):
+            params = unflatten(frozen_flat, train_flat_)
+            return per_example_loss(bundle, params, xi[None], yi[None])[0]
+
+        per_ex, g_ps = jax.vmap(
+            lambda xi, yi: jax.value_and_grad(one)(train_flat, xi, yi)
+        )(x, y)                                               # [B], [B, P]
+        loss = jnp.sum(per_ex * mask)
+        sq = kernels.row_sq_norms(g_ps)
+        c = ref.clip_factors(sq, clip_r, clip_mode) * mask
+        grad = kernels.weighted_sum(g_ps, c)
+        return loss, grad, sq
+
+    return step
+
+
+def _ghost_probe(bundle, unflatten, frozen_flat, train_flat, x, y):
+    """Static site inventory (names, categories, shapes) via abstract eval."""
+    info = {"shapes": {}, "linear": [], "ln": [], "emb": []}
+
+    def probe(frozen_, train_, x_, y_):
+        params = unflatten(frozen_, train_)
+        ctx = GhostCtx(zs={})
+        per_example_loss(bundle, params, x_, y_, ctx=ctx)
+        info["shapes"] = dict(ctx.site_shapes)
+        info["linear"] = [name for name, _a in ctx.sites]
+        info["ln"] = [name for name, _xh in ctx.ln_sites]
+        info["emb"] = [(name, tok is not None) for name, tok in ctx.emb_sites]
+        return 0.0
+
+    jax.eval_shape(probe, frozen_flat, train_flat, x, y)
+    return info
+
+
+def make_dp_step_ghost(bundle, clip_mode):
+    """DP full fine-tuning, GhostClip style (Li et al., 2021).
+
+    Backward #1 (w.r.t. the zero site-perturbations ``z``) yields every
+    layer's output gradient ``e_l``; per-sample norms follow from the ghost
+    identity at O(BT^2) — the T^2 term the paper's headline figures are
+    about.  Backward #2 re-weights per-example losses by the clip factors.
+    """
+    trainable = trainable_mask(bundle, "full")
+    unflatten, _pf, _pt = model.make_unflatten(bundle.spec, trainable)
+
+    def step(frozen_flat, train_flat, x, y, mask, clip_r):
+        info = _ghost_probe(bundle, unflatten, frozen_flat, train_flat, x, y)
+        zs0 = {k: jnp.zeros(v, jnp.float32) for k, v in info["shapes"].items()}
+        params = unflatten(frozen_flat, train_flat)
+
+        def loss_fn(zs):
+            ctx = GhostCtx(zs=zs)
+            per_ex = per_example_loss(bundle, params, x, y, ctx=ctx)
+            aux = {"a": dict(ctx.sites), "xhat": dict(ctx.ln_sites)}
+            return jnp.sum(per_ex * mask), aux
+
+        (loss, aux), es = jax.value_and_grad(loss_fn, has_aux=True)(zs0)
+
+        sq = jnp.zeros((x.shape[0],), jnp.float32)
+        # linear/conv sites: ghost weight norm + bias norm
+        for site in info["linear"]:
+            a, e = aux["a"][site], es[site]
+            if e.ndim == 2:  # [B, p] head-style site: grad is the outer e a^T
+                sq = sq + ref.row_sq_norms(e) * ref.row_sq_norms(a)
+                sq = sq + ref.row_sq_norms(e)  # bias
+            else:
+                sq = sq + kernels.ghost_norm(a, e)            # Pallas, O(BT^2)
+                gb = kernels.bias_grad(e)
+                sq = sq + kernels.row_sq_norms(gb)
+        # layer/group-norm sites: gamma and beta per-sample grads from xhat
+        for site in info["ln"]:
+            xhat, e = aux["xhat"][site], es[site]
+            if e.ndim > 3:
+                e = e.reshape(e.shape[0], -1, e.shape[-1])
+            g_gamma = jnp.sum(e * xhat, axis=1)
+            sq = sq + ref.row_sq_norms(g_gamma)
+            sq = sq + kernels.row_sq_norms(kernels.bias_grad(e))
+        # embedding sites: one-hot ghost norm (token) + identity (positional)
+        for site, has_tokens in info["emb"]:
+            e = es[site]
+            sq = sq + jnp.sum(e * e, axis=(1, 2))             # positional
+            if has_tokens:
+                eq = (x[:, :, None] == x[:, None, :]).astype(jnp.float32)
+                eet = jnp.einsum("btd,bsd->bts", e, e)
+                sq = sq + jnp.sum(eq * eet, axis=(1, 2))      # token table
+            else:
+                sq = sq + ref.row_sq_norms(e[:, 0, :])        # ViT CLS token
+
+        c = ref.clip_factors(sq, clip_r, clip_mode) * mask
+        c = jax.lax.stop_gradient(c)
+
+        def loss2(train_flat_):
+            params2 = unflatten(frozen_flat, train_flat_)
+            per_ex2 = per_example_loss(bundle, params2, x, y)
+            return jnp.sum(per_ex2 * c)
+
+        grad = jax.grad(loss2)(train_flat)                    # backward #2
+        return loss, grad, sq
+
+    return step
+
+
+def make_nondp_step(bundle, method):
+    """Standard (non-private) training on the same trainable subset."""
+    trainable = trainable_mask(bundle, method)
+    unflatten, _pf, _pt = model.make_unflatten(bundle.spec, trainable)
+
+    def step(frozen_flat, train_flat, x, y, mask, _clip_r):
+        def loss_fn(train_flat_):
+            params = unflatten(frozen_flat, train_flat_)
+            per_ex = per_example_loss(bundle, params, x, y)
+            return jnp.sum(per_ex * mask)
+
+        loss, grad = jax.value_and_grad(loss_fn)(train_flat)
+        return loss, grad, jnp.zeros((x.shape[0],), jnp.float32)
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# eval / decode steps
+# --------------------------------------------------------------------------
+
+
+def make_eval_step(bundle, method):
+    """Returns ``(loss_sum, correct_or_tokens)`` on a masked batch."""
+    trainable = trainable_mask(bundle, method)
+    unflatten, _pf, _pt = model.make_unflatten(bundle.spec, trainable)
+
+    def step(frozen_flat, train_flat, x, y, mask):
+        params = unflatten(frozen_flat, train_flat)
+        if bundle.kind == "lm":
+            logits = model.lm_logits(params, x, bundle.cfg)
+            nll = -jnp.take_along_axis(
+                jax.nn.log_softmax(logits, axis=-1), y[..., None], axis=-1
+            )[..., 0]
+            valid = (y != model.PAD_ID).astype(jnp.float32) * mask[:, None]
+            return jnp.sum(nll * valid), jnp.sum(valid)
+        if bundle.kind == "cnn" and bundle.cfg.multi_label:
+            logits = model.cnn_logits(params, x, bundle.cfg)
+            per_ex = per_example_loss(bundle, params, x, y)
+            pred = (logits > 0.0).astype(jnp.float32)
+            acc = jnp.mean((pred == y).astype(jnp.float32), axis=-1)
+            return jnp.sum(per_ex * mask), jnp.sum(acc * mask)
+        logits_fn = {
+            "cls": lambda: model.cls_logits(params, x, bundle.cfg),
+            "vit": lambda: model.vit_logits(params, x, bundle.cfg),
+            "cnn": lambda: model.cnn_logits(params, x, bundle.cfg),
+        }[bundle.kind]
+        logits = logits_fn()
+        per_ex = per_example_loss(bundle, params, x, y)
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return jnp.sum(per_ex * mask), jnp.sum(correct * mask)
+
+    return step
+
+
+def make_decode_step(bundle):
+    """LM next-token logits at per-sample positions (greedy decoding in L3)."""
+    trainable = trainable_mask(bundle, "full")
+    unflatten, _pf, _pt = model.make_unflatten(bundle.spec, trainable)
+
+    def step(frozen_flat, train_flat, x, pos):
+        params = unflatten(frozen_flat, train_flat)
+        logits = model.lm_logits(params, x, bundle.cfg)  # [B, T, V]
+        return logits[jnp.arange(x.shape[0]), pos, :]
+
+    return step
+
+
+STEP_BUILDERS = {
+    "dp-bitfit": lambda b, clip: make_dp_step_expand(b, "bitfit", clip),
+    "dp-bitfit-add": lambda b, clip: make_dp_step_expand(b, "bitfit_add", clip),
+    "dp-lastlayer": lambda b, clip: make_dp_step_expand(b, "lastlayer", clip),
+    "dp-lora": lambda b, clip: make_dp_step_expand(b, "lora", clip),
+    "dp-adapter": lambda b, clip: make_dp_step_expand(b, "adapter", clip),
+    "dp-full-opacus": lambda b, clip: make_dp_step_opacus(b, clip),
+    "dp-full-ghost": lambda b, clip: make_dp_step_ghost(b, clip),
+    "nondp-full": lambda b, _clip: make_nondp_step(b, "full"),
+    "nondp-bitfit": lambda b, _clip: make_nondp_step(b, "bitfit"),
+}
+
+# the trainable subset each step method operates on (for layout export)
+METHOD_SUBSET = {
+    "dp-bitfit": "bitfit",
+    "dp-bitfit-add": "bitfit_add",
+    "dp-lastlayer": "lastlayer",
+    "dp-lora": "lora",
+    "dp-adapter": "adapter",
+    "dp-full-opacus": "full",
+    "dp-full-ghost": "full",
+    "nondp-full": "full",
+    "nondp-bitfit": "bitfit",
+}

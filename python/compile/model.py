@@ -1,0 +1,410 @@
+"""L2 model zoo: pure-JAX models used by the DP fine-tuning step builders.
+
+Four families mirroring the paper's workloads (at 1-CPU-core scale; see
+DESIGN.md §5 for the substitution table):
+
+* :class:`TransformerCfg` with ``causal=True`` and ``n_cls=0`` — decoder LM
+  (GPT-2 analog, E2E generation task, Table 4/13, Fig 4-top).
+* :class:`TransformerCfg` with ``causal=False`` and ``n_cls>0`` — encoder
+  classifier (RoBERTa analog, GLUE tasks, Tables 3/12/17, Figs 1/3-top).
+* :class:`VitCfg` — tiny ViT (CIFAR analog, Tables 5/14/15, Fig 5).
+* :class:`CnnCfg` — conv+GroupNorm net with *bias-less* convolutions by
+  default (the ResNet situation of App. A.2; CelebA analog, Tables 6/16) and
+  a ``with_conv_bias`` variant for DP-BiTFiT-Add (§3.4).
+
+Parameters are nested dicts of jnp arrays; creation order fixes the canonical
+flat layout exported to rust (``layout.json``).  All models are per-sample
+separable (no batch norm), which is what makes the expand trick exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+PAD_ID = 0  # token 0 is padding everywhere; CLS for classifiers is token 1.
+
+
+# --------------------------------------------------------------------------
+# configs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerCfg:
+    """Transformer config (encoder classifier when n_cls>0, else causal LM)."""
+
+    vocab: int = 512
+    t: int = 64
+    d: int = 128
+    layers: int = 4
+    heads: int = 4
+    ff: int = 512
+    causal: bool = False
+    n_cls: int = 0
+    use_lora: bool = False
+    use_adapter: bool = False
+    lora_r: int = 8
+    adapter_r: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class VitCfg:
+    """Tiny vision transformer over ``img x img`` RGB images."""
+
+    img: int = 32
+    patch: int = 4
+    d: int = 96
+    layers: int = 4
+    heads: int = 4
+    ff: int = 384
+    n_cls: int = 10
+
+    @property
+    def tokens(self):
+        return (self.img // self.patch) ** 2 + 1  # + CLS token
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnCfg:
+    """Small conv+GN network; convs are bias-less unless with_conv_bias."""
+
+    img: int = 32
+    channels: tuple = (16, 32, 64)
+    groups: int = 4
+    n_out: int = 8          # attributes (multi-label) or classes
+    multi_label: bool = True
+    with_conv_bias: bool = False  # True => the DP-BiTFiT-Add variant
+
+
+# --------------------------------------------------------------------------
+# initialization
+# --------------------------------------------------------------------------
+
+
+def _dense(key, d_in, d_out, *, bias=True, scale=None):
+    kw, _ = jax.random.split(key)
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(kw, (d_in, d_out), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def _ln(d):
+    return {"gamma": jnp.ones((d,), jnp.float32), "beta": jnp.zeros((d,), jnp.float32)}
+
+
+def _block(key, cfg):
+    k = jax.random.split(key, 8)
+    p = {
+        "ln1": _ln(cfg.d),
+        "attn": {
+            "qkv": _dense(k[0], cfg.d, 3 * cfg.d),
+            "proj": _dense(k[1], cfg.d, cfg.d),
+        },
+        "ln2": _ln(cfg.d),
+        "mlp": {
+            "fc1": _dense(k[2], cfg.d, cfg.ff),
+            "fc2": _dense(k[3], cfg.ff, cfg.d),
+        },
+    }
+    if cfg.use_lora:
+        p["attn"]["qkv"]["lora_a"] = jax.random.normal(
+            k[4], (cfg.d, cfg.lora_r), jnp.float32
+        ) / math.sqrt(cfg.d)
+        p["attn"]["qkv"]["lora_b"] = jnp.zeros((cfg.lora_r, 3 * cfg.d), jnp.float32)
+    if cfg.use_adapter:
+        for name, kk in (("adapter1", k[5]), ("adapter2", k[6])):
+            p[name] = {
+                "adapter_down": jax.random.normal(kk, (cfg.d, cfg.adapter_r), jnp.float32)
+                / math.sqrt(cfg.d),
+                "adapter_down_b": jnp.zeros((cfg.adapter_r,), jnp.float32),
+                "adapter_up": jnp.zeros((cfg.adapter_r, cfg.d), jnp.float32),
+                "adapter_up_b": jnp.zeros((cfg.d,), jnp.float32),
+            }
+    return p
+
+
+def init_transformer(key, cfg: TransformerCfg):
+    keys = jax.random.split(key, cfg.layers + 3)
+    params = {
+        "embed": {
+            "tok": jax.random.normal(keys[0], (cfg.vocab, cfg.d), jnp.float32) * 0.02,
+            "pos": jax.random.normal(keys[1], (cfg.t, cfg.d), jnp.float32) * 0.02,
+        }
+    }
+    for i in range(cfg.layers):
+        params[f"block{i:02d}"] = _block(keys[2 + i], cfg)
+    params["ln_f"] = _ln(cfg.d)
+    out = cfg.n_cls if cfg.n_cls > 0 else cfg.vocab
+    params["head"] = _dense(keys[-1], cfg.d, out, scale=0.02)
+    return params
+
+
+def init_vit(key, cfg: VitCfg):
+    keys = jax.random.split(key, cfg.layers + 4)
+    pdim = cfg.patch * cfg.patch * 3
+    tcfg = _vit_block_cfg(cfg)
+    params = {
+        "embed": {
+            "patch": _dense(keys[0], pdim, cfg.d),
+            "cls": jax.random.normal(keys[1], (cfg.d,), jnp.float32) * 0.02,
+            "pos": jax.random.normal(keys[2], (cfg.tokens, cfg.d), jnp.float32) * 0.02,
+        }
+    }
+    for i in range(cfg.layers):
+        params[f"block{i:02d}"] = _block(keys[3 + i], tcfg)
+    params["ln_f"] = _ln(cfg.d)
+    params["head"] = _dense(keys[-1], cfg.d, cfg.n_cls, scale=0.02)
+    return params
+
+
+def init_cnn(key, cfg: CnnCfg):
+    keys = jax.random.split(key, len(cfg.channels) + 2)
+    params = {}
+    cin = 3
+    for i, c in enumerate(cfg.channels):
+        kw = jax.random.normal(keys[i], (3, 3, cin, c), jnp.float32) / math.sqrt(
+            9 * cin
+        )
+        conv = {"w": kw}
+        if cfg.with_conv_bias:
+            conv["b"] = jnp.zeros((c,), jnp.float32)
+        params[f"stage{i}"] = {"conv": conv, "gn": _ln(c)}
+        cin = c
+    params["head"] = _dense(keys[-1], cfg.channels[-1], cfg.n_out, scale=0.02)
+    return params
+
+
+def _vit_block_cfg(cfg: VitCfg) -> TransformerCfg:
+    return TransformerCfg(d=cfg.d, heads=cfg.heads, ff=cfg.ff, causal=False)
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+
+def transformer_hidden(params, x, cfg: TransformerCfg, ctx=None):
+    """Token ids ``[B, T]`` -> final hidden states ``[B, T, d]``."""
+    h = params["embed"]["tok"][x] + params["embed"]["pos"][None, :, :]
+    h = layers.embed_site(h, "embed", x, ctx)
+    for i in range(cfg.layers):
+        h = layers.transformer_block(
+            h, params[f"block{i:02d}"], cfg.heads,
+            causal=cfg.causal, use_lora=cfg.use_lora, use_adapter=cfg.use_adapter,
+            ctx=ctx, prefix=f"block{i:02d}_",
+        )
+    return layers.layer_norm(h, params["ln_f"], site="ln_f", ctx=ctx)
+
+
+def cls_logits(params, x, cfg: TransformerCfg, ctx=None):
+    """Classifier logits from the position-0 (CLS) hidden state."""
+    h = transformer_hidden(params, x, cfg, ctx)
+    return layers.linear(h[:, 0, :], params["head"], site="head", ctx=ctx)
+
+
+def lm_logits(params, x, cfg: TransformerCfg, ctx=None):
+    h = transformer_hidden(params, x, cfg, ctx)
+    return layers.linear(h, params["head"], site="head", ctx=ctx)
+
+
+def patchify(img, patch):
+    """``[B, H, W, 3]`` -> ``[B, (H/p)*(W/p), p*p*3]`` patch tokens."""
+    b, h, w, c = img.shape
+    nh, nw = h // patch, w // patch
+    x = img.reshape(b, nh, patch, nw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, nh * nw, patch * patch * c)
+
+
+def vit_logits(params, img, cfg: VitCfg, ctx=None):
+    tokens = patchify(img, cfg.patch)
+    h = layers.linear(tokens, params["embed"]["patch"], site="patch", ctx=ctx)
+    cls = jnp.broadcast_to(params["embed"]["cls"], (h.shape[0], 1, cfg.d))
+    h = jnp.concatenate([cls, h], axis=1) + params["embed"]["pos"][None, :, :]
+    h = layers.embed_site(h, "embed", None, ctx)
+    tcfg = _vit_block_cfg(cfg)
+    for i in range(cfg.layers):
+        h = layers.transformer_block(
+            h, params[f"block{i:02d}"], cfg.heads, causal=False,
+            ctx=ctx, prefix=f"block{i:02d}_",
+        )
+    h = layers.layer_norm(h, params["ln_f"], site="ln_f", ctx=ctx)
+    return layers.linear(h[:, 0, :], params["head"], site="head", ctx=ctx)
+
+
+def cnn_logits(params, img, cfg: CnnCfg, ctx=None):
+    h = img
+    for i in range(len(cfg.channels)):
+        stage = params[f"stage{i}"]
+        stride = 1 if i == 0 else 2
+        h = layers.conv2d(h, stage["conv"], stride=stride, site=f"stage{i}_conv", ctx=ctx)
+        h = layers.group_norm(h, stage["gn"], cfg.groups, site=f"stage{i}_gn", ctx=ctx)
+        h = jax.nn.relu(h)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return layers.linear(h, params["head"], site="head", ctx=ctx)
+
+
+# --------------------------------------------------------------------------
+# per-example losses (the quantity DP-SGD clips)
+# --------------------------------------------------------------------------
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+
+
+def per_example_loss_cls(params, x, y, cfg: TransformerCfg, ctx=None):
+    """Classification: per-example cross entropy ``[B]``."""
+    return _xent(cls_logits(params, x, cfg, ctx), y)
+
+
+def per_example_loss_lm(params, x, y, cfg: TransformerCfg, ctx=None):
+    """Causal LM: per-example mean NLL over non-pad target tokens ``[B]``.
+
+    ``x`` are input tokens, ``y`` the next-token targets (PAD_ID = ignore).
+    """
+    logits = lm_logits(params, x, cfg, ctx)
+    nll = _xent(logits, y)  # [B, T]
+    valid = (y != PAD_ID).astype(jnp.float32)
+    return jnp.sum(nll * valid, axis=1) / jnp.maximum(jnp.sum(valid, axis=1), 1.0)
+
+
+def per_example_loss_vit(params, img, y, cfg: VitCfg, ctx=None):
+    return _xent(vit_logits(params, img, cfg, ctx), y)
+
+
+def per_example_loss_cnn(params, img, y, cfg: CnnCfg, ctx=None):
+    logits = cnn_logits(params, img, cfg, ctx)
+    if cfg.multi_label:
+        # mean binary cross entropy over attributes; y is {0,1}^A
+        z = jax.nn.log_sigmoid(logits)
+        zneg = jax.nn.log_sigmoid(-logits)
+        return -jnp.mean(y * z + (1.0 - y) * zneg, axis=-1)
+    return _xent(logits, y)
+
+
+# --------------------------------------------------------------------------
+# canonical flattening + trainable-subset selectors
+# --------------------------------------------------------------------------
+
+
+def param_spec(params, prefix=""):
+    """Canonical ``[(name, shape)]`` in insertion (creation) order."""
+    out = []
+    for k, v in params.items():
+        name = f"{prefix}{k}" if not prefix else f"{prefix}/{k}"
+        if isinstance(v, dict):
+            out.extend(param_spec(v, name))
+        else:
+            out.append((name, tuple(v.shape)))
+    return out
+
+
+def flatten_params(params):
+    """Concatenate all leaves (canonical order) into one f32 vector."""
+    leaves = []
+
+    def walk(p):
+        for v in p.values():
+            if isinstance(v, dict):
+                walk(v)
+            else:
+                leaves.append(v.reshape(-1))
+
+    walk(params)
+    return jnp.concatenate(leaves)
+
+
+def select_trainable(spec, method, *, train_head=True):
+    """Boolean trainable mask over the canonical leaf order.
+
+    ``method`` in {full, bitfit, bitfit_add, lastlayer, lora, adapter}.
+    ``train_head`` follows §4.3: downstream tasks replace the classifier head,
+    so PEFT methods train it alongside their own parameters; for generation
+    (pretrained head) pass ``train_head=False``.
+    """
+    mask = []
+    for name, _shape in spec:
+        is_bias = name.endswith("/b") or name.endswith("/beta")
+        is_head = name.startswith("head")
+        is_lora = "lora_" in name
+        is_adapter = "adapter" in name
+        if method == "full":
+            m = True
+        elif method in ("bitfit", "bitfit_add"):
+            m = is_bias or (train_head and is_head)
+        elif method == "lastlayer":
+            m = is_head
+        elif method == "lora":
+            m = is_lora or (train_head and is_head)
+        elif method == "adapter":
+            m = is_adapter or (train_head and is_head)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        mask.append(bool(m))
+    return mask
+
+
+def make_unflatten(spec, trainable):
+    """Build ``unflatten(frozen_flat, train_flat_or_expanded) -> params``.
+
+    If the trainable argument is 2-D (``[B, Pt]``, the expand trick), the
+    trainable leaves come out per-sample with a leading batch axis.
+    """
+    entries = []  # (name-path-as-list, shape, size, trainable)
+    fo = to = 0
+    offsets = []
+    for (name, shape), tr in zip(spec, trainable):
+        size = int(math.prod(shape)) if shape else 1
+        if tr:
+            offsets.append((to, True))
+            to += size
+        else:
+            offsets.append((fo, False))
+            fo += size
+        entries.append((name.split("/"), shape, size))
+    pf, pt = fo, to
+
+    def unflatten(frozen_flat, train_arr):
+        expanded = train_arr.ndim == 2
+        params = {}
+        for (path, shape, size), (off, tr) in zip(entries, offsets):
+            if tr:
+                if expanded:
+                    b = train_arr.shape[0]
+                    leaf = train_arr[:, off:off + size].reshape((b,) + shape)
+                else:
+                    leaf = train_arr[off:off + size].reshape(shape)
+            else:
+                leaf = frozen_flat[off:off + size].reshape(shape)
+            d = params
+            for k in path[:-1]:
+                d = d.setdefault(k, {})
+            d[path[-1]] = leaf
+        return params
+
+    return unflatten, pf, pt
+
+
+def split_flat(full_flat, spec, trainable):
+    """Split a full flat vector into (frozen_flat, train_flat) per the mask."""
+    frozen, train = [], []
+    off = 0
+    for (name, shape), tr in zip(spec, trainable):
+        size = int(math.prod(shape)) if shape else 1
+        (train if tr else frozen).append(full_flat[off:off + size])
+        off += size
+    z = jnp.zeros((0,), jnp.float32)
+    return (
+        jnp.concatenate(frozen) if frozen else z,
+        jnp.concatenate(train) if train else z,
+    )

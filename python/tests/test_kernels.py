@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES_3D = st.tuples(
+    st.integers(1, 9), st.integers(1, 200), st.integers(1, 160)
+)
+
+
+def arr(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=SHAPES_3D, seed=st.integers(0, 2**16))
+def test_bias_grad_matches_ref(shape, seed):
+    rng = np.random.default_rng(seed)
+    g = arr(rng, shape)
+    np.testing.assert_allclose(
+        kernels.bias_grad(g), ref.bias_grad(g), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 9), p=st.integers(1, 1200), seed=st.integers(0, 2**16))
+def test_row_sq_norms_matches_ref(b, p, seed):
+    rng = np.random.default_rng(seed)
+    g = arr(rng, (b, p))
+    np.testing.assert_allclose(
+        kernels.row_sq_norms(g), ref.row_sq_norms(g), rtol=2e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    t=st.integers(1, 170),
+    d=st.integers(1, 24),
+    p=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_ghost_norm_matches_ref(b, t, d, p, seed):
+    rng = np.random.default_rng(seed)
+    a = arr(rng, (b, t, d))
+    e = arr(rng, (b, t, p))
+    np.testing.assert_allclose(
+        kernels.ghost_norm(a, e), ref.ghost_norm(a, e), rtol=5e-3, atol=1e-3
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 9), p=st.integers(1, 1200), seed=st.integers(0, 2**16))
+def test_weighted_sum_matches_ref(b, p, seed):
+    rng = np.random.default_rng(seed)
+    g = arr(rng, (b, p))
+    c = arr(rng, (b,))
+    np.testing.assert_allclose(
+        kernels.weighted_sum(g, c), ref.weighted_sum(g, c), rtol=2e-4, atol=1e-4
+    )
+
+
+def test_ghost_norm_equals_instantiated_grad_norm():
+    """The ghost identity itself: ||e^T a||_F^2 via T x T Gram products."""
+    rng = np.random.default_rng(0)
+    a = arr(rng, (4, 33, 8))
+    e = arr(rng, (4, 33, 12))
+    explicit = jnp.einsum("btp,btd->bpd", e, a)
+    want = jnp.sum(explicit**2, axis=(1, 2))
+    np.testing.assert_allclose(kernels.ghost_norm(a, e), want, rtol=5e-3)
+
+
+def test_clip_factors_modes():
+    sq = jnp.asarray([0.25, 4.0, 1e-8])
+    ab = ref.clip_factors(sq, 1.0, "abadi")
+    np.testing.assert_allclose(ab, [1.0, 0.5, 1.0], rtol=1e-5)
+    au = ref.clip_factors(sq, 1.0, "autos")
+    # AUTO-S: R/(norm + 0.01); never exceeds R/norm sensitivity
+    norms = np.sqrt(np.asarray(sq))
+    assert np.all(np.asarray(au) * norms <= 1.0 + 1e-6)
+    with pytest.raises(ValueError):
+        ref.clip_factors(sq, 1.0, "bogus")
+
+
+def test_bias_grad_2d_passthrough():
+    g = jnp.ones((3, 7))
+    np.testing.assert_array_equal(kernels.bias_grad(g), g)
+
+
+def test_kernels_handle_block_boundaries_exactly():
+    """Shapes exactly at / around the default block sizes (NaN-padding bug)."""
+    for p in (511, 512, 513, 1024, 1025):
+        g = jnp.ones((4, p), jnp.float32)
+        np.testing.assert_allclose(kernels.row_sq_norms(g), p, rtol=1e-6)
+    for t in (127, 128, 129, 256):
+        g = jnp.ones((2, t, 130), jnp.float32)
+        np.testing.assert_allclose(kernels.bias_grad(g), float(t), rtol=1e-6)

@@ -1,0 +1,187 @@
+"""L2 correctness: per-sample gradients, method equivalences, model shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import methods, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 4
+R = jnp.float32(1.0)
+MASK = jnp.ones((B,), jnp.float32)
+
+
+def tiny_cls(**kw):
+    cfg = model.TransformerCfg(
+        vocab=64, t=16, d=32, layers=2, heads=2, ff=64, n_cls=3, **kw
+    )
+    return methods.make_bundle("cls", cfg)
+
+
+def cls_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(1, 64, size=(B, 16)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 3, size=(B,)), jnp.int32)
+    return x, y
+
+
+def split(bundle, params, subset):
+    tr = methods.trainable_mask(bundle, subset)
+    flat = model.flatten_params(params)
+    return model.split_flat(flat, bundle.spec, tr), tr
+
+
+class TestExpandTrick:
+    """The expand trick yields EXACT per-sample gradients."""
+
+    def test_matches_naive_per_example_loop(self):
+        bundle, params = tiny_cls()
+        (frozen, train), tr = split(bundle, params, "bitfit")
+        unf, _pf, pt = model.make_unflatten(bundle.spec, tr)
+        x, y = cls_batch()
+
+        t_exp = jnp.broadcast_to(train, (B, pt))
+
+        def loss_fn(t):
+            p = unf(frozen, t)
+            return jnp.sum(methods.per_example_loss(bundle, p, x, y))
+
+        gps = jax.grad(loss_fn)(t_exp)
+        for i in range(B):
+            def loss_i(t):
+                p = unf(frozen, t)
+                return methods.per_example_loss(bundle, p, x[i:i+1], y[i:i+1])[0]
+            gi = jax.grad(loss_i)(train)
+            np.testing.assert_allclose(gps[i], gi, rtol=3e-4, atol=1e-6)
+
+    def test_activation_free_bias_vjp_matches_autodiff(self):
+        """custom_vjp bias_add_ps == plain addition under grad."""
+        from compile.layers import bias_add_ps
+
+        rng = np.random.default_rng(1)
+        s = jnp.asarray(rng.normal(size=(3, 5, 7)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(3, 7)), jnp.float32)
+
+        def with_vjp(s, b):
+            return jnp.sum(jnp.tanh(bias_add_ps(s, b)) ** 2)
+
+        def plain(s, b):
+            return jnp.sum(jnp.tanh(s + b[:, None, :]) ** 2)
+
+        g1 = jax.grad(with_vjp, argnums=(0, 1))(s, b)
+        g2 = jax.grad(plain, argnums=(0, 1))(s, b)
+        np.testing.assert_allclose(g1[0], g2[0], rtol=1e-5)
+        np.testing.assert_allclose(g1[1], g2[1], rtol=1e-5)
+
+
+class TestMethodEquivalence:
+    """GhostClip and Opacus implementations agree exactly (same math)."""
+
+    @pytest.mark.parametrize("clip", ["abadi", "autos"])
+    def test_ghost_equals_opacus_cls(self, clip):
+        bundle, params = tiny_cls()
+        (frozen, train), _ = split(bundle, params, "full")
+        x, y = cls_batch(2)
+        lg, gg, sg = jax.jit(methods.make_dp_step_ghost(bundle, clip))(
+            frozen, train, x, y, MASK, R
+        )
+        lo, go, so = jax.jit(methods.make_dp_step_opacus(bundle, clip))(
+            frozen, train, x, y, MASK, R
+        )
+        np.testing.assert_allclose(float(lg), float(lo), rtol=1e-5)
+        np.testing.assert_allclose(sg, so, rtol=5e-3)
+        np.testing.assert_allclose(gg, go, rtol=5e-3, atol=2e-5)
+
+    def test_clipped_grad_norm_bounded_by_batch_sensitivity(self):
+        """sum_i C_i g_i has norm <= B*R under Abadi clipping."""
+        bundle, params = tiny_cls()
+        (frozen, train), _ = split(bundle, params, "bitfit")
+        x, y = cls_batch(3)
+        step = jax.jit(methods.make_dp_step_expand(bundle, "bitfit", "abadi"))
+        _, grad, sq = step(frozen, train, x, y, MASK, R)
+        assert float(jnp.linalg.norm(grad)) <= B * float(R) + 1e-4
+        assert np.all(np.asarray(sq) >= 0)
+
+    def test_mask_excludes_examples_exactly(self):
+        bundle, params = tiny_cls()
+        (frozen, train), _ = split(bundle, params, "bitfit")
+        x, y = cls_batch(4)
+        step = jax.jit(methods.make_dp_step_expand(bundle, "bitfit", "abadi"))
+        m = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+        l_half, g_half, _ = step(frozen, train, x, y, m, R)
+        # recompute with a physically smaller batch of the 2 masked-in rows,
+        # padded back to B with zero-mask junk rows
+        x2 = jnp.concatenate([x[:2], x[:2]], axis=0)
+        y2 = jnp.concatenate([y[:2], y[:2]], axis=0)
+        l2, g2, _ = step(frozen, train, x2, y2, m, R)
+        np.testing.assert_allclose(float(l_half), float(l2), rtol=1e-5)
+        np.testing.assert_allclose(g_half, g2, rtol=1e-4, atol=1e-6)
+
+
+class TestTrainableSubsets:
+    def test_bitfit_selects_only_biases_and_head(self):
+        bundle, _ = tiny_cls()
+        tr = model.select_trainable(bundle.spec, "bitfit", train_head=True)
+        for (name, _shape), m in zip(bundle.spec, tr):
+            is_bias = name.endswith("/b") or name.endswith("/beta")
+            is_head = name.startswith("head")
+            assert m == (is_bias or is_head), name
+
+    def test_bitfit_fraction_is_small(self):
+        cfg = model.TransformerCfg(vocab=512, t=64, d=128, layers=4, heads=4, ff=512, causal=True)
+        bundle, params = methods.make_bundle("lm", cfg)
+        tr = methods.trainable_mask(bundle, "bitfit")
+        _, pf, pt = model.make_unflatten(bundle.spec, tr)
+        frac = pt / (pf + pt)
+        assert frac < 0.01, frac  # < 1% of params (paper: ~0.1%)
+
+    def test_split_merge_roundtrip(self):
+        bundle, params = tiny_cls()
+        flat = model.flatten_params(params)
+        tr = methods.trainable_mask(bundle, "bitfit")
+        frozen, train = model.split_flat(flat, bundle.spec, tr)
+        unf, _, _ = model.make_unflatten(bundle.spec, tr)
+        rebuilt = model.flatten_params(unf(frozen, train))
+        np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+
+
+class TestModels:
+    def test_lm_loss_is_mean_nll_over_nonpad_targets(self):
+        cfg = model.TransformerCfg(vocab=64, t=8, d=16, layers=1, heads=2, ff=32, causal=True)
+        bundle, params = methods.make_bundle("lm", cfg)
+        x = jnp.asarray([[5, 6, 7, 8, 9, 10, 11, 12]], jnp.int32)
+        y = jnp.asarray([[6, 7, 8, 0, 0, 0, 0, 0]], jnp.int32)  # 3 supervised
+        loss = methods.per_example_loss(bundle, params, x, y)
+        logits = model.lm_logits(params, x, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        want = -(logp[0, 0, 6] + logp[0, 1, 7] + logp[0, 2, 8]) / 3.0
+        np.testing.assert_allclose(float(loss[0]), float(want), rtol=1e-5)
+
+    def test_vit_patchify_is_invertible_count(self):
+        img = jnp.arange(2 * 8 * 8 * 3, dtype=jnp.float32).reshape(2, 8, 8, 3)
+        p = model.patchify(img, 4)
+        assert p.shape == (2, 4, 48)
+        # every pixel appears exactly once
+        np.testing.assert_allclose(jnp.sort(p.ravel()), jnp.sort(img.ravel()))
+
+    def test_causal_lm_cannot_see_future(self):
+        cfg = model.TransformerCfg(vocab=64, t=8, d=16, layers=1, heads=2, ff=32, causal=True)
+        bundle, params = methods.make_bundle("lm", cfg)
+        x1 = jnp.asarray([[5, 6, 7, 8, 9, 10, 11, 12]], jnp.int32)
+        x2 = x1.at[0, 7].set(3)  # change only the LAST token
+        l1 = model.lm_logits(params, x1, cfg)
+        l2 = model.lm_logits(params, x2, cfg)
+        # logits at positions < 7 are unchanged
+        np.testing.assert_allclose(l1[:, :7], l2[:, :7], atol=1e-6)
+        assert not np.allclose(l1[:, 7], l2[:, 7])
+
+    def test_cnn_bias_variants_differ_only_in_bias_leaves(self):
+        c1 = model.CnnCfg(img=16, channels=(8, 16), groups=4, n_out=4)
+        c2 = model.CnnCfg(img=16, channels=(8, 16), groups=4, n_out=4, with_conv_bias=True)
+        b1, _ = methods.make_bundle("cnn", c1)
+        b2, _ = methods.make_bundle("cnn", c2)
+        extra = set(n for n, _ in b2.spec) - set(n for n, _ in b1.spec)
+        assert extra == {"stage0/conv/b", "stage1/conv/b"}

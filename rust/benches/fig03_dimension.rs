@@ -1,0 +1,48 @@
+//! Paper Figure 3: time & memory vs feature dimension T (text, top) and
+//! image resolution (bottom).  DP-BiTFiT's overhead is flat in T; GhostClip
+//! grows ~T^2; Opacus grows with the activation footprint.
+use fastdp::bench;
+use fastdp::runtime::Runtime;
+use fastdp::util::table::Table;
+
+fn main() {
+    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let methods = ["nondp-full", "dp-bitfit", "dp-full-opacus", "dp-full-ghost"];
+    println!("## Figure 3 (top) — SST2-analog step time vs sequence length T (ms/example)\n");
+    let mut t = Table::new(&["T", "non-DP full", "DP-BiTFiT", "DP Opacus", "DP GhostClip"]);
+    for tt in [32usize, 64, 128, 256] {
+        let mut row = vec![tt.to_string()];
+        for m in ["nondp-full", "dp-bitfit", "dp-full-opacus", "dp-full-ghost"] {
+            let s = bench::step_time(&mut rt, &format!("cls-t{tt}__{m}"), 2).unwrap();
+            row.push(format!("{:.2}", s * 1e3));
+        }
+        t.row(row);
+        eprintln!("done T={tt}");
+    }
+    t.print();
+    println!("\n## Figure 3 (bottom) — image step time vs resolution (ms/example)\n");
+    let mut t = Table::new(&["pixels", "non-DP full", "DP-BiTFiT", "DP Opacus", "DP GhostClip"]);
+    for r in [16usize, 32, 64] {
+        let mut row = vec![format!("{r}x{r}")];
+        for m in methods {
+            let s = bench::step_time(&mut rt, &format!("cnn-r{r}__{m}"), 2).unwrap();
+            row.push(format!("{:.2}", s * 1e3));
+        }
+        t.row(row);
+        eprintln!("done r={r}");
+    }
+    t.print();
+    println!("\n## analytic memory overhead (floats/layer, B=8, d=p=64) — the Fig 3 memory panel\n");
+    use fastdp::analysis::complexity::{layer_complexity, LayerDims, Method};
+    let mut t = Table::new(&["T", "DP-BiTFiT", "Opacus", "GhostClip"]);
+    for tt in [32u64, 64, 128, 256, 512, 2048] {
+        let l = LayerDims { b: 8, t: tt, d: 64, p: 64 };
+        t.row(vec![
+            tt.to_string(),
+            layer_complexity(Method::DpBias, l).dp_space.to_string(),
+            layer_complexity(Method::OpacusFull, l).dp_space.to_string(),
+            layer_complexity(Method::GhostClipFull, l).dp_space.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,34 @@
+//! Paper Tables 1 & 11: parameter efficiency of (DP-)BiTFiT across models.
+use fastdp::models::zoo;
+use fastdp::util::table::Table;
+
+fn main() {
+    println!("## Table 1 / 11 — % of bias parameters (paper values alongside)\n");
+    let mut t = Table::new(&["model", "# params (ours)", "# params (paper)", "% bias (ours)", "% bias (paper)"]);
+    for z in zoo::zoo() {
+        t.row(vec![
+            z.name.to_string(),
+            format!("{:.1}M", z.counts.total() as f64 / 1e6),
+            format!("{:.1}M", z.paper_params_m),
+            format!("{:.3}", z.bias_pct()),
+            format!("{:.3}", z.paper_bias_pct),
+        ]);
+    }
+    t.print();
+    // our trained small models, from the manifest layouts
+    if let Ok(rt) = fastdp::runtime::Runtime::open("artifacts") {
+        println!("\ntrained models in this repo (bias+head subset = DP-BiTFiT trainables):\n");
+        let mut t = Table::new(&["model", "params", "% trainable (bitfit)"]);
+        for (name, entry) in &rt.manifest.models {
+            if let Ok(layout) = rt.layout(name) {
+                let bits = layout.subset_size("bitfit");
+                t.row(vec![
+                    name.clone(),
+                    entry.n_params.to_string(),
+                    format!("{:.3}", 100.0 * bits as f64 / entry.n_params as f64),
+                ]);
+            }
+        }
+        t.print();
+    }
+}

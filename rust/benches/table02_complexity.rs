@@ -1,0 +1,46 @@
+//! Paper Tables 2 & 7: per-layer time/space complexity per method, plus a
+//! measured cross-check that the predicted step-time ORDERING holds on the
+//! real artifacts (cls-base, one microbatch).
+use fastdp::analysis::complexity::{layer_complexity, LayerDims, Method};
+use fastdp::bench;
+use fastdp::util::table::Table;
+
+fn main() {
+    let l = LayerDims { b: 16, t: 256, d: 768, p: 768 };
+    println!("## Table 2 / 7 — per-layer complexity at B=16 T=256 d=p=768\n");
+    let methods = [
+        Method::NonDpFull, Method::OpacusFull, Method::GhostClipFull, Method::BookKeeping,
+        Method::DpLora { rank: 16 }, Method::DpAdapter { rank: 16 },
+        Method::NonDpBias, Method::DpBias,
+    ];
+    let mut t = Table::new(&["method", "train flops", "+DP flops", "+DP space (floats)", "acts?", "backprops"]);
+    for m in methods {
+        let c = layer_complexity(m, l);
+        t.row(vec![
+            m.name(),
+            format!("{:.2e}", c.train_time as f64),
+            format!("{:.2e}", c.dp_time as f64),
+            format!("{:.2e}", c.dp_space as f64),
+            if m.stores_activations() { "yes" } else { "NO" }.into(),
+            m.backprops().to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nkey paper ratios: non-DP full / DP-BiTFiT time = 1.5x, DP full / DP-BiTFiT > 2x,");
+    println!("DP-BiTFiT overhead (+3Bp time, +Bp space) is independent of T.\n");
+
+    // measured cross-check on the real artifacts
+    let Ok(mut rt) = fastdp::runtime::Runtime::open("artifacts") else { return };
+    println!("measured ms/example (cls-base artifacts, one microbatch):\n");
+    let mut t = Table::new(&["artifact", "ms/example"]);
+    let mut times = std::collections::BTreeMap::new();
+    for m in ["nondp-bitfit", "dp-bitfit", "nondp-full", "dp-full-opacus", "dp-full-ghost"] {
+        let s = bench::step_time(&mut rt, &format!("cls-base__{m}"), 3).unwrap();
+        times.insert(m.to_string(), s);
+        t.row(vec![m.into(), format!("{:.2}", s * 1e3)]);
+    }
+    t.print();
+    let bit = times["dp-bitfit"];
+    println!("\nspeedups: DP-full(ghost)/DP-BiTFiT = {:.2}x   DP-full(opacus)/DP-BiTFiT = {:.2}x   non-DP-full/DP-BiTFiT = {:.2}x",
+        times["dp-full-ghost"] / bit, times["dp-full-opacus"] / bit, times["nondp-full"] / bit);
+}

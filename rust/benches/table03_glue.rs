@@ -1,0 +1,53 @@
+//! Paper Table 3: GLUE accuracy of fine-tuning methods under eps = 8.
+use fastdp::bench::{self, FtJob};
+use fastdp::runtime::Runtime;
+use fastdp::util::table::Table;
+
+fn main() {
+    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let steps = bench::bench_steps(25);
+    let tasks: &[&str] = if bench::quick() { &["sst2", "mnli"] } else { &["sst2", "qnli", "qqp", "mnli"] };
+    let methods: Vec<(&str, &str, &str)> = vec![
+        // (column label, model, method)
+        ("full (std)", "cls-base", "nondp-full"),
+        ("full (DP)", "cls-base", "dp-full-ghost"),
+        ("LoRA (DP)", "cls-lora", "dp-lora"),
+        ("Adapter (DP)", "cls-adapter", "dp-adapter"),
+        ("BiTFiT (std)", "cls-base", "nondp-bitfit"),
+        ("BiTFiT (DP)", "cls-base", "dp-bitfit"),
+    ];
+    println!("## Table 3 — accuracy on GLUE-analog tasks, eps = 8 ({steps} ft steps)\n");
+    let mut header = vec!["method"];
+    header.extend(tasks);
+    let mut t = Table::new(&header);
+    for (label, model, method) in &methods {
+        let mut row = vec![label.to_string()];
+        for task in tasks {
+            let mut job = FtJob::new(model, method, task);
+            job.steps = steps;
+            let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+            row.push(format!("{:.1}", 100.0 * out.accuracy));
+            eprintln!("done {label} / {task}: {:.1}% (eps {:.1})", 100.0 * out.accuracy, out.eps_spent);
+        }
+        t.row(row);
+    }
+    t.print();
+    if !bench::quick() {
+        // RoBERTa-large analog rows (paper's second block) on two tasks
+        println!("\ncls-large (RoBERTa-large analog):\n");
+        let mut t = Table::new(&["method", "sst2", "mnli"]);
+        for (label, method) in [("full (DP)", "dp-full-ghost"), ("BiTFiT (DP)", "dp-bitfit"), ("BiTFiT (std)", "nondp-bitfit")] {
+            let mut row = vec![label.to_string()];
+            for task in ["sst2", "mnli"] {
+                let mut job = FtJob::new("cls-large", method, task);
+                job.steps = steps;
+                let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+                row.push(format!("{:.1}", 100.0 * out.accuracy));
+                eprintln!("done large {label} / {task}");
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("\npaper shape: DP-BiTFiT within ~1% of DP full; all DP below non-private full.");
+}

@@ -1,0 +1,298 @@
+//! Per-layer time/space complexity of DP training methods — paper Tables 2
+//! and 7, regenerated analytically, plus the whole-network memory model that
+//! predicts the Figure 3/4 crossovers and max batch sizes.
+//!
+//! Conventions (paper §3.2): one layer maps `B x T x d -> B x T x p`.
+//! Time is float-op counts; space is floats.  `'+'` columns are *overhead on
+//! top of* standard (non-DP) training of the same parameters.
+
+/// One layer's dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerDims {
+    pub b: u64, // batch
+    pub t: u64, // feature dimension (seq len / H*W)
+    pub d: u64, // input width
+    pub p: u64, // output width
+}
+
+/// Fine-tuning / DP-implementation method (columns of Tables 2 and 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    NonDpFull,
+    OpacusFull,
+    GhostClipFull,
+    /// Book-Keeping (Bu et al., 2023): single backprop ghost variant.
+    BookKeeping,
+    DpLora { rank: u64 },
+    DpAdapter { rank: u64 },
+    NonDpBias,
+    DpBias,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::NonDpFull => "non-DP (full)".into(),
+            Method::OpacusFull => "Opacus (full)".into(),
+            Method::GhostClipFull => "GhostClip (full)".into(),
+            Method::BookKeeping => "Book-Keeping (full)".into(),
+            Method::DpLora { rank } => format!("DP LoRA (r={rank})"),
+            Method::DpAdapter { rank } => format!("DP Adapter (r={rank})"),
+            Method::NonDpBias => "non-DP BiTFiT".into(),
+            Method::DpBias => "DP-BiTFiT (ours)".into(),
+        }
+    }
+
+    /// Does the forward pass have to cache activations for this method?
+    /// (Paper Table 2, last row — the BiTFiT rows are the only ✗.)
+    pub fn stores_activations(&self) -> bool {
+        !matches!(self, Method::NonDpBias | Method::DpBias)
+    }
+
+    /// Number of back-propagations (GhostClip needs 2).
+    pub fn backprops(&self) -> u64 {
+        match self {
+            Method::GhostClipFull => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// Time/space complexity entries for one layer (floats / flops).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Complexity {
+    /// Forward + output-gradient cost shared by every method (4BTpd).
+    pub base_time: u64,
+    /// Cost of computing the trained parameters' gradients without DP.
+    pub train_time: u64,
+    /// Additional DP overhead time ('+' column).
+    pub dp_time: u64,
+    /// Base activation/storage space.
+    pub base_space: u64,
+    /// Additional DP overhead space ('+' column).
+    pub dp_space: u64,
+}
+
+impl Complexity {
+    pub fn total_time(&self) -> u64 {
+        self.base_time + self.train_time + self.dp_time
+    }
+
+    pub fn total_space(&self) -> u64 {
+        self.base_space + self.dp_space
+    }
+}
+
+/// Per-layer complexity for a method (paper Table 2 / Table 7 rows).
+pub fn layer_complexity(m: Method, l: LayerDims) -> Complexity {
+    let LayerDims { b, t, d, p } = l;
+    let (btpd, btp) = (b * t * p * d, b * t * p);
+    match m {
+        Method::NonDpFull => Complexity {
+            base_time: 4 * btpd,
+            train_time: 2 * btpd,
+            dp_time: 0,
+            base_space: b * t * (p + d),
+            dp_space: 0,
+        },
+        Method::OpacusFull => Complexity {
+            base_time: 4 * btpd,
+            train_time: 2 * btpd,
+            dp_time: 2 * btpd,
+            base_space: b * t * (p + d),
+            dp_space: b * p * d,
+        },
+        Method::GhostClipFull => Complexity {
+            base_time: 4 * btpd,
+            train_time: 2 * btpd,
+            dp_time: 2 * btpd + 2 * b * t * t * (p + d),
+            base_space: b * t * (p + d),
+            dp_space: 2 * b * t * t,
+        },
+        Method::BookKeeping => Complexity {
+            base_time: 4 * btpd,
+            train_time: 2 * btpd,
+            dp_time: 2 * b * t * t * (p + d).min(2 * p * d / t.max(1)), // min(ghost, instantiate)
+            base_space: b * t * (p + d),
+            dp_space: (2 * b * t * t).min(2 * b * p * d),
+        },
+        Method::DpLora { rank } => Complexity {
+            base_time: 4 * btpd,
+            train_time: 2 * b * t * rank * (p + d),
+            dp_time: 2 * b * t * rank * (p + d), // per-sample grads of the low-rank factors
+            base_space: b * t * (p + d),
+            dp_space: b * rank * (p + d),
+        },
+        Method::DpAdapter { rank } => Complexity {
+            base_time: 4 * btpd,
+            train_time: 4 * b * t * rank * p,
+            dp_time: 4 * b * t * rank * p,
+            base_space: b * t * (p + d),
+            dp_space: 2 * b * rank * p,
+        },
+        Method::NonDpBias => Complexity {
+            base_time: 4 * btpd,
+            train_time: btp,
+            dp_time: 0,
+            base_space: p, // NO cached activations — the paper's key row
+            dp_space: 0,
+        },
+        Method::DpBias => Complexity {
+            base_time: 4 * btpd,
+            train_time: btp,
+            dp_time: 3 * b * p, // instantiate [B,p] grad + square + sum: T-free!
+            base_space: p,
+            dp_space: b * p,
+        },
+    }
+}
+
+/// A whole network as a list of layer dims (the trained small models are
+/// close enough to uniform stacks for the figures' purposes).
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub layers: Vec<LayerDims>,
+}
+
+impl Network {
+    /// Uniform transformer-ish stack: `l` layers of width d->p at length t.
+    pub fn uniform(l: usize, b: u64, t: u64, d: u64, p: u64) -> Network {
+        Network { layers: vec![LayerDims { b, t, d, p }; l] }
+    }
+
+    pub fn time(&self, m: Method) -> u64 {
+        self.layers.iter().map(|&l| layer_complexity(m, l).total_time()).sum()
+    }
+
+    pub fn space(&self, m: Method) -> u64 {
+        self.layers.iter().map(|&l| layer_complexity(m, l).total_space()).sum()
+    }
+
+    /// Peak training memory in bytes (f32), including weights + grads +
+    /// activations/DP overhead.  The Figure 4 "max batch size" model.
+    pub fn memory_bytes(&self, m: Method) -> u64 {
+        let param_count: u64 = self.layers.iter().map(|l| l.p * l.d + l.p).sum();
+        let weight_state = match m {
+            Method::NonDpBias | Method::DpBias => {
+                // frozen weights + trainable-bias grads only
+                param_count + self.layers.iter().map(|l| l.p).sum::<u64>()
+            }
+            _ => 2 * param_count,
+        };
+        4 * (weight_state + self.space(m))
+    }
+
+    /// Largest batch size fitting a memory budget (Figure 4 columns).
+    pub fn max_batch(&self, m: Method, budget_bytes: u64) -> u64 {
+        let mut lo = 0u64;
+        let mut hi = 1u64;
+        let fits = |b: u64| {
+            let net = Network {
+                layers: self.layers.iter().map(|&l| LayerDims { b, ..l }).collect(),
+            };
+            net.memory_bytes(m) <= budget_bytes
+        };
+        if !fits(1) {
+            return 0;
+        }
+        while fits(hi) && hi < 1 << 24 {
+            lo = hi;
+            hi *= 2;
+        }
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if fits(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> LayerDims {
+        LayerDims { b: 16, t: 256, d: 768, p: 768 }
+    }
+
+    #[test]
+    fn bias_overhead_is_t_free() {
+        // the paper's headline property: DP-BiTFiT overhead independent of T
+        let a = layer_complexity(Method::DpBias, LayerDims { t: 64, ..dims() });
+        let b = layer_complexity(Method::DpBias, LayerDims { t: 4096, ..dims() });
+        assert_eq!(a.dp_time, b.dp_time);
+        assert_eq!(a.dp_space, b.dp_space);
+        // while GhostClip's overhead grows ~ T^2
+        let g1 = layer_complexity(Method::GhostClipFull, LayerDims { t: 64, ..dims() });
+        let g2 = layer_complexity(Method::GhostClipFull, LayerDims { t: 4096, ..dims() });
+        assert!(g2.dp_space > g1.dp_space * 1000);
+    }
+
+    #[test]
+    fn paper_speedup_ratios() {
+        // §3.2: full non-DP 6BTpd, DP full > 8BTpd, DP-BiTFiT ~ 4BTpd
+        // => BiTFiT is ~1.5x faster than non-DP full, >2x faster than DP full.
+        let net = Network::uniform(12, 16, 256, 768, 768);
+        let t_nondp_full = net.time(Method::NonDpFull) as f64;
+        let t_dp_full = net.time(Method::OpacusFull) as f64;
+        let t_dp_bias = net.time(Method::DpBias) as f64;
+        let r1 = t_nondp_full / t_dp_bias;
+        let r2 = t_dp_full / t_dp_bias;
+        assert!((r1 - 1.5).abs() < 0.05, "non-DP full / DP-BiTFiT = {r1}");
+        assert!(r2 >= 2.0 - 0.05, "DP full / DP-BiTFiT = {r2}");
+    }
+
+    #[test]
+    fn activation_storage_flags_match_table2() {
+        assert!(Method::OpacusFull.stores_activations());
+        assert!(Method::GhostClipFull.stores_activations());
+        assert!(Method::DpLora { rank: 16 }.stores_activations());
+        assert!(!Method::DpBias.stores_activations());
+        assert!(!Method::NonDpBias.stores_activations());
+        assert_eq!(Method::GhostClipFull.backprops(), 2);
+        assert_eq!(Method::DpBias.backprops(), 1);
+    }
+
+    #[test]
+    fn bias_memory_dominates_comparison() {
+        // DP-BiTFiT must beat every weight-training method on memory
+        let net = Network::uniform(12, 16, 512, 768, 768);
+        let bias = net.memory_bytes(Method::DpBias);
+        for m in [
+            Method::OpacusFull,
+            Method::GhostClipFull,
+            Method::DpLora { rank: 16 },
+            Method::DpAdapter { rank: 16 },
+            Method::NonDpFull,
+        ] {
+            assert!(bias < net.memory_bytes(m), "{:?}", m);
+        }
+    }
+
+    #[test]
+    fn max_batch_ordering() {
+        let net = Network::uniform(12, 1, 512, 768, 768);
+        let budget = 16u64 << 30; // 16 GB
+        let b_bias = net.max_batch(Method::DpBias, budget);
+        let b_ghost = net.max_batch(Method::GhostClipFull, budget);
+        let b_opacus = net.max_batch(Method::OpacusFull, budget);
+        assert!(b_bias > b_ghost && b_bias > b_opacus, "{b_bias} {b_ghost} {b_opacus}");
+        assert!(b_ghost > 0 && b_opacus > 0);
+    }
+
+    #[test]
+    fn lora_adapter_columns_match_table7_shape() {
+        // Table 7: DP LoRA +2BT(pr+dr) time, +B(pr+dr) space; Adapter +4BTpr, +2Bpr
+        let l = dims();
+        let lora = layer_complexity(Method::DpLora { rank: 16 }, l);
+        assert_eq!(lora.dp_time, 2 * l.b * l.t * 16 * (l.p + l.d));
+        assert_eq!(lora.dp_space, l.b * 16 * (l.p + l.d));
+        let ada = layer_complexity(Method::DpAdapter { rank: 16 }, l);
+        assert_eq!(ada.dp_time, 4 * l.b * l.t * 16 * l.p);
+        assert_eq!(ada.dp_space, 2 * l.b * 16 * l.p);
+    }
+}

@@ -1,0 +1,4 @@
+//! Complexity analysis (paper Tables 2 and 7) and the memory model used by
+//! Figures 3 and 4.
+
+pub mod complexity;

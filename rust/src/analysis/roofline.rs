@@ -1,0 +1,183 @@
+//! TPU roofline estimates for the L1 Pallas kernels.
+//!
+//! Interpret-mode wall-clock is not a TPU proxy (DESIGN.md §2), so the
+//! kernels are evaluated *structurally*: per-BlockSpec VMEM footprint, HBM
+//! traffic, and MXU/VPU flops, against a TPU-v4-like core model
+//! (VMEM ≈ 16 MiB, HBM ≈ 1200 GB/s, MXU ≈ 275 Tf32-flop/s).  The question
+//! each estimate answers: is the kernel within VMEM, and is its runtime
+//! bound where the paper says it should be (bias path: bandwidth; ghost
+//! path: MXU + the T² VMEM pressure)?
+
+/// Hardware model for the roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct Chip {
+    pub vmem_bytes: u64,
+    pub hbm_bytes_per_s: f64,
+    pub flops_per_s: f64,
+}
+
+impl Chip {
+    /// TPU-v4-like single core.
+    pub fn tpu_like() -> Chip {
+        Chip { vmem_bytes: 16 << 20, hbm_bytes_per_s: 1.2e12, flops_per_s: 2.75e14 }
+    }
+}
+
+/// Structural cost of one kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelEstimate {
+    pub name: String,
+    /// Peak VMEM resident bytes per grid step.
+    pub vmem_bytes: u64,
+    /// Total HBM bytes moved (reads + writes) over the launch.
+    pub hbm_bytes: u64,
+    /// Total flops over the launch.
+    pub flops: u64,
+    /// Minimum HBM bytes information-theoretically required (each input
+    /// read once, each output written once).
+    pub hbm_lower_bound: u64,
+}
+
+impl KernelEstimate {
+    /// Runtime bound on `chip` (max of bandwidth and compute time).
+    pub fn seconds(&self, chip: Chip) -> f64 {
+        let bw = self.hbm_bytes as f64 / chip.hbm_bytes_per_s;
+        let fl = self.flops as f64 / chip.flops_per_s;
+        bw.max(fl)
+    }
+
+    /// Is the kernel bandwidth-bound on `chip`?
+    pub fn bandwidth_bound(&self, chip: Chip) -> bool {
+        self.hbm_bytes as f64 / chip.hbm_bytes_per_s
+            >= self.flops as f64 / chip.flops_per_s
+    }
+
+    /// Traffic efficiency: lower-bound bytes / actual bytes (1.0 = optimal).
+    pub fn traffic_efficiency(&self) -> f64 {
+        self.hbm_lower_bound as f64 / self.hbm_bytes.max(1) as f64
+    }
+
+    pub fn fits_vmem(&self, chip: Chip) -> bool {
+        self.vmem_bytes <= chip.vmem_bytes
+    }
+}
+
+const F: u64 = 4; // f32 bytes
+
+/// `bias_grad`: [B,T,p] -> [B,p], grid (B/bb, p/bp, T/bt), T innermost with
+/// an output-resident accumulator — each input element read ONCE.
+pub fn bias_grad(b: u64, t: u64, p: u64, bb: u64, bt: u64, bp: u64) -> KernelEstimate {
+    let vmem = F * (bb * bt * bp + bb * bp);
+    let hbm = F * (b * t * p + b * p);
+    KernelEstimate {
+        name: format!("bias_grad[B{b} T{t} p{p} | blk {bb}x{bt}x{bp}]"),
+        vmem_bytes: vmem,
+        hbm_bytes: hbm,
+        flops: b * t * p, // adds
+        hbm_lower_bound: F * (b * t * p + b * p),
+    }
+}
+
+/// `row_sq_norms`: [B,P] -> [B]; P tiled, one pass.
+pub fn row_sq_norms(b: u64, p: u64, bb: u64, bp: u64) -> KernelEstimate {
+    KernelEstimate {
+        name: format!("row_sq_norms[B{b} P{p} | blk {bb}x{bp}]"),
+        vmem_bytes: F * (bb * bp + bb),
+        hbm_bytes: F * (b * p + b),
+        flops: 2 * b * p, // mul + add
+        hbm_lower_bound: F * (b * p + b),
+    }
+}
+
+/// `ghost_norm`: per sample, all (t1, t2) tile pairs; a/e tiles re-read
+/// T/bt times each — the T² traffic the paper pins on GhostClip.
+pub fn ghost_norm(b: u64, t: u64, d: u64, p: u64, bt: u64) -> KernelEstimate {
+    let tiles = (t + bt - 1) / bt;
+    let vmem = F * (2 * bt * (d + p) + 2 * bt * bt);
+    let hbm = F * (b * tiles * tiles * (2 * bt * (d + p))) + F * b;
+    KernelEstimate {
+        name: format!("ghost_norm[B{b} T{t} d{d} p{p} | blk_t {bt}]"),
+        vmem_bytes: vmem,
+        hbm_bytes: hbm,
+        flops: 2 * b * t * t * (d + p) + 2 * b * t * t,
+        hbm_lower_bound: F * (b * t * (d + p) + b),
+    }
+}
+
+/// `weighted_sum`: [B,P] x [B] -> [P], B innermost, output-resident.
+pub fn weighted_sum(b: u64, p: u64, bb: u64, bp: u64) -> KernelEstimate {
+    KernelEstimate {
+        name: format!("weighted_sum[B{b} P{p} | blk {bb}x{bp}]"),
+        vmem_bytes: F * (bb * bp + bb + bp),
+        hbm_bytes: F * (b * p + b + p),
+        flops: 2 * b * p,
+        hbm_lower_bound: F * (b * p + b + p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_path_is_bandwidth_bound_and_traffic_optimal() {
+        let chip = Chip::tpu_like();
+        // RoBERTa-base-analog dims scaled up to paper scale
+        let k = bias_grad(16, 512, 768, 8, 128, 128);
+        assert!(k.fits_vmem(chip), "vmem {} bytes", k.vmem_bytes);
+        assert!(k.bandwidth_bound(chip), "bias_grad must be bandwidth-bound");
+        assert!((k.traffic_efficiency() - 1.0).abs() < 1e-9, "one-pass reduction");
+    }
+
+    #[test]
+    fn ghost_path_carries_t_squared_traffic() {
+        // doubling T quadruples ghost flops; bias flops only double
+        let g1 = ghost_norm(16, 256, 768, 768, 128);
+        let g2 = ghost_norm(16, 512, 768, 768, 128);
+        assert!(g2.flops >= g1.flops * 4 - 1000);
+        let b1 = bias_grad(16, 256, 768, 8, 128, 128);
+        let b2 = bias_grad(16, 512, 768, 8, 128, 128);
+        assert_eq!(b2.flops, b1.flops * 2);
+        // ghost traffic efficiency decays with T (the re-read factor)
+        assert!(g2.traffic_efficiency() < g1.traffic_efficiency());
+    }
+
+    #[test]
+    fn all_kernels_fit_default_vmem() {
+        let chip = Chip::tpu_like();
+        assert!(bias_grad(64, 4096, 1024, 8, 128, 128).fits_vmem(chip));
+        assert!(row_sq_norms(64, 1 << 20, 64, 512).fits_vmem(chip));
+        assert!(ghost_norm(64, 4096, 1024, 1024, 128).fits_vmem(chip));
+        assert!(weighted_sum(64, 1 << 20, 64, 512).fits_vmem(chip));
+    }
+
+    #[test]
+    fn dp_bitfit_kernel_time_is_negligible_vs_forward() {
+        // paper: DP overhead ~ +3Bp vs 6BTpd training flops.  On the chip
+        // model, the three DP kernels together should cost < 5% of one
+        // forward-backward at RoBERTa-base scale.
+        let chip = Chip::tpu_like();
+        let (b, t, d, p) = (64u64, 512u64, 768u64, 768u64);
+        let layers = 12u64;
+        let pt = layers * 2 * p; // rough bias count
+        let dp_time = bias_grad(b, t, p, 8, 128, 128).seconds(chip) * layers as f64
+            + row_sq_norms(b, pt, 64, 512).seconds(chip)
+            + weighted_sum(b, pt, 64, 512).seconds(chip);
+        let train_flops = 6 * b * t * p * d * layers;
+        let train_time = train_flops as f64 / chip.flops_per_s;
+        assert!(dp_time < 0.05 * train_time, "dp {dp_time} vs train {train_time}");
+    }
+
+    #[test]
+    fn seconds_is_max_of_bounds() {
+        let chip = Chip { vmem_bytes: 1 << 20, hbm_bytes_per_s: 1e9, flops_per_s: 1e12 };
+        let k = KernelEstimate {
+            name: "k".into(),
+            vmem_bytes: 1,
+            hbm_bytes: 2_000_000_000,
+            flops: 1,
+            hbm_lower_bound: 1,
+        };
+        assert!((k.seconds(chip) - 2.0).abs() < 1e-9);
+    }
+}

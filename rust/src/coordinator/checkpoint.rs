@@ -1,0 +1,146 @@
+//! Versioned binary checkpoints for full parameter vectors.
+//!
+//! Format (little-endian):
+//!   magic "FDPC" | version u32 | model-name len u32 + utf8 | step u64 |
+//!   n_params u64 | f32 payload | crc32 of payload
+//!
+//! The CRC catches torn writes; loading a corrupt or mismatched checkpoint
+//! is a hard error, never silent garbage.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+const MAGIC: &[u8; 4] = b"FDPC";
+const VERSION: u32 = 1;
+
+/// A checkpoint: model name + step + full flat params.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub params: Vec<f32>,
+}
+
+/// CRC-32 (IEEE) — table-driven, no external crate.
+fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, t) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *t = c;
+    }
+    let mut crc = 0xFFFFFFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFFFFFF
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.model.len() as u32).to_le_bytes())?;
+        f.write_all(self.model.as_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        let payload: Vec<u8> = self.params.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&payload)?;
+        f.write_all(&crc32(&payload).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut buf4 = [0u8; 4];
+        let mut buf8 = [0u8; 8];
+        f.read_exact(&mut buf4)?;
+        anyhow::ensure!(&buf4 == MAGIC, "bad magic (not a fastdp checkpoint)");
+        f.read_exact(&mut buf4)?;
+        let version = u32::from_le_bytes(buf4);
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        f.read_exact(&mut buf4)?;
+        let name_len = u32::from_le_bytes(buf4) as usize;
+        anyhow::ensure!(name_len < 4096, "implausible model-name length");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let model = String::from_utf8(name).context("model name not utf8")?;
+        f.read_exact(&mut buf8)?;
+        let step = u64::from_le_bytes(buf8);
+        f.read_exact(&mut buf8)?;
+        let n = u64::from_le_bytes(buf8) as usize;
+        let mut payload = vec![0u8; n * 4];
+        f.read_exact(&mut payload)?;
+        f.read_exact(&mut buf4)?;
+        let want_crc = u32::from_le_bytes(buf4);
+        anyhow::ensure!(crc32(&payload) == want_crc, "checkpoint CRC mismatch (corrupt file)");
+        let params = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint { model, step, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fastdp-ckpt-test-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Checkpoint {
+            model: "cls-base".into(),
+            step: 42,
+            params: (0..1000).map(|i| i as f32 * 0.5).collect(),
+        };
+        let p = tmp("rt");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = Checkpoint { model: "m".into(), step: 1, params: vec![1.0; 64] };
+        let p = tmp("corrupt");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+}

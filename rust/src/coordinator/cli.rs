@@ -1,0 +1,260 @@
+//! The `fastdp` command-line interface.
+//!
+//! Subcommands:
+//!   train       — run a (DP) fine-tuning job from a TOML config / flags
+//!   eval        — evaluate a checkpoint with a model's eval artifact
+//!   accountant  — query the RDP/GDP accountants or calibrate sigma
+//!   zoo         — print the Table 1/11 parameter-efficiency table
+//!   complexity  — print the Table 2/7 complexity table
+//!   artifacts   — list AOT artifacts in the artifact directory
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::Checkpoint;
+use super::metrics::JsonlSink;
+use super::optim::{LrSchedule, OptimKind};
+use super::trainer::{evaluate_params, Trainer, TrainerConfig};
+use super::workloads;
+use crate::analysis::complexity::{layer_complexity, LayerDims, Method};
+use crate::dp::{calibrate, gdp, rdp};
+use crate::util::args::Args;
+use crate::util::config::Config;
+use crate::util::table::Table;
+
+const USAGE: &str = "usage: fastdp <train|eval|accountant|zoo|complexity|artifacts>
+  train      --artifact cls-base__dp-bitfit [--task sst2] [--steps N] [--batch N]
+             [--lr F] [--eps F | --sigma F] [--delta F] [--clip F] [--optim adam]
+             [--n N] [--seed N] [--pretrained ckpt] [--save ckpt] [--log out.jsonl]
+             [--config cfg.toml] [--artifacts DIR]
+  eval       --model cls-base --ckpt path [--task sst2] [--n N]
+  accountant --q F --sigma F --steps N [--delta F]   (report eps, RDP + GDP)
+  accountant --q F --steps N --target-eps F          (calibrate sigma)
+  zoo
+  complexity [--b N --t N --d N --p N]
+  artifacts  [--artifacts DIR]";
+
+pub fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("accountant") => cmd_accountant(&args),
+        Some("zoo") => cmd_zoo(),
+        Some("complexity") => cmd_complexity(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str("artifacts", "artifacts")
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // config file first, flags override
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::load(p).map_err(|e| anyhow::anyhow!(e))?,
+        None => Config::default(),
+    };
+    for kv in args.get_all("set") {
+        let (k, v) = kv.split_once('=').context("--set expects key=value")?;
+        cfg.set(k, v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let artifact = args.str("artifact", &cfg.str("train.artifact", ""));
+    anyhow::ensure!(!artifact.is_empty(), "--artifact (or train.artifact) required");
+    let steps = args.usize("steps", cfg.i64("train.steps", 100) as usize);
+    let n = args.usize("n", cfg.i64("train.n", 4096) as usize);
+    let seed = args.usize("seed", cfg.i64("train.seed", 0) as usize) as u64;
+    let delta = args.f64("delta", cfg.f64("train.delta", 1e-5));
+    let batch = args.usize("batch", cfg.i64("train.batch", 64) as usize);
+
+    let mut rt = crate::runtime::Runtime::open(artifacts_dir(args))?;
+    let exe = rt.load(&artifact)?;
+    let meta = exe.meta.clone();
+    let model = meta.model.clone();
+    let default_task = workloads::default_task(&workloads::model_shape(&rt, &model)?.kind);
+    let task = args.str("task", &cfg.str("train.task", default_task));
+    let data = workloads::build(&rt, &model, &task, n, seed)?;
+
+    let is_dp = meta.method.starts_with("dp-");
+    let sigma = if !is_dp {
+        0.0
+    } else if let Some(s) = args.get("sigma") {
+        s.parse::<f64>().context("--sigma")?
+    } else {
+        let eps = args.f64("eps", cfg.f64("train.eps", 8.0));
+        let q = batch as f64 / n as f64;
+        let sigma = calibrate::calibrate_sigma(q, steps as u64, eps, delta);
+        println!("calibrated sigma = {sigma:.4} for eps = {eps} over {steps} steps (q = {q:.4})");
+        sigma
+    };
+
+    let mut tc = TrainerConfig::new(&artifact);
+    tc.logical_batch = batch;
+    tc.lr = args.f64("lr", cfg.f64("train.lr", 5e-3));
+    tc.optim = OptimKind::parse(&args.str("optim", &cfg.str("train.optim", "adam")))
+        .context("bad --optim")?;
+    tc.schedule = LrSchedule::Warmup { warmup: cfg.i64("train.warmup", 0) as u64 };
+    tc.clip_r = args.f64("clip", cfg.f64("train.clip_r", 0.1));
+    tc.sigma = sigma;
+    tc.delta = delta;
+    tc.seed = seed;
+
+    let pretrained = match args.get("pretrained") {
+        Some(p) => {
+            let ck = Checkpoint::load(p)?;
+            anyhow::ensure!(ck.model == model, "checkpoint is for {}", ck.model);
+            Some(ck.params)
+        }
+        None => None,
+    };
+    let mut trainer = Trainer::new(&mut rt, tc, data.len(), pretrained)?;
+    let mut sink = match args.get("log") {
+        Some(p) => Some(JsonlSink::create(p)?),
+        None => None,
+    };
+    println!(
+        "training {artifact} on {task}: {} examples, {} trainable params ({:.3}% of {}), {} steps",
+        data.len(),
+        trainer.trainable_len(),
+        100.0 * trainer.trainable_len() as f64 / rt.manifest.models[&model].n_params as f64,
+        rt.manifest.models[&model].n_params,
+        steps,
+    );
+    for i in 0..steps {
+        let s = trainer.train_step(&data)?;
+        if let Some(sink) = &mut sink {
+            sink.step(s.step, s.loss, s.epsilon)?;
+        }
+        if i % 10 == 0 || i + 1 == steps {
+            println!(
+                "step {:>5}  loss {:.4}  |B| {:>4}  eps {:.3}",
+                s.step, s.loss, s.batch, s.epsilon
+            );
+        }
+    }
+    for (label, secs, calls) in trainer.timers.report() {
+        println!("  timer {label:<8} {secs:>8.3}s over {calls} calls");
+    }
+    if let Some(path) = args.get("save") {
+        Checkpoint { model, step: trainer.step, params: trainer.full_params() }.save(path)?;
+        println!("saved checkpoint to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.str("model", "");
+    anyhow::ensure!(!model.is_empty(), "--model required");
+    let mut rt = crate::runtime::Runtime::open(artifacts_dir(args))?;
+    let exe = rt.load(&format!("{model}__eval"))?;
+    let params = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(p)?.params,
+        None => rt.init_params(&model)?,
+    };
+    let shape = workloads::model_shape(&rt, &model)?;
+    let task = args.str("task", workloads::default_task(&shape.kind));
+    let n = args.usize("n", 1024);
+    let data = workloads::build(&rt, &model, &task, n, args.usize("seed", 1) as u64)?;
+    let (a, b, n) = evaluate_params(&exe, &params, &data, n)?;
+    if shape.kind == "lm" {
+        println!("nll/token = {:.4}  perplexity = {:.3}  ({b:.0} tokens)", a / b, (a / b).exp());
+    } else {
+        println!("loss = {:.4}  accuracy = {:.2}%  ({n} examples)", a / n as f64, 100.0 * b / n as f64);
+    }
+    Ok(())
+}
+
+fn cmd_accountant(args: &Args) -> Result<()> {
+    let q = args.f64("q", 0.01);
+    let steps = args.usize("steps", 1000) as u64;
+    let delta = args.f64("delta", 1e-5);
+    if let Some(te) = args.get("target-eps") {
+        let target: f64 = te.parse().context("--target-eps")?;
+        let sigma = calibrate::calibrate_sigma(q, steps, target, delta);
+        println!("sigma = {sigma:.4} reaches eps <= {target} (q={q}, T={steps}, delta={delta})");
+        return Ok(());
+    }
+    let sigma = args.f64("sigma", 1.0);
+    let e_rdp = rdp::epsilon(q, sigma, steps, delta);
+    let e_gdp = gdp::epsilon(q, sigma, steps, delta);
+    println!("q={q} sigma={sigma} T={steps} delta={delta}");
+    println!("  eps (RDP accountant) = {e_rdp:.4}");
+    println!("  eps (GDP accountant) = {e_gdp:.4}");
+    Ok(())
+}
+
+fn cmd_zoo() -> Result<()> {
+    let mut t = Table::new(&["model", "params", "% bias (ours)", "% bias (paper)"]);
+    for z in crate::models::zoo::zoo() {
+        t.row(vec![
+            z.name.to_string(),
+            format!("{:.1}M", z.counts.total() as f64 / 1e6),
+            format!("{:.3}", z.bias_pct()),
+            format!("{:.3}", z.paper_bias_pct),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_complexity(args: &Args) -> Result<()> {
+    let l = LayerDims {
+        b: args.usize("b", 16) as u64,
+        t: args.usize("t", 256) as u64,
+        d: args.usize("d", 768) as u64,
+        p: args.usize("p", 768) as u64,
+    };
+    let methods = [
+        Method::NonDpFull,
+        Method::OpacusFull,
+        Method::GhostClipFull,
+        Method::BookKeeping,
+        Method::DpLora { rank: 16 },
+        Method::DpAdapter { rank: 16 },
+        Method::NonDpBias,
+        Method::DpBias,
+    ];
+    println!(
+        "per-layer complexity at B={} T={} d={} p={} (paper Table 2/7)",
+        l.b, l.t, l.d, l.p
+    );
+    let mut t = Table::new(&[
+        "method", "time (flops)", "+DP time", "space (floats)", "+DP space", "acts?", "backprops",
+    ]);
+    for m in methods {
+        let c = layer_complexity(m, l);
+        t.row(vec![
+            m.name(),
+            format!("{:.2e}", (c.base_time + c.train_time) as f64),
+            format!("{:.2e}", c.dp_time as f64),
+            format!("{:.2e}", c.base_space as f64),
+            format!("{:.2e}", c.dp_space as f64),
+            if m.stores_activations() { "yes" } else { "NO" }.into(),
+            m.backprops().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let rt = crate::runtime::Runtime::open(artifacts_dir(args))?;
+    println!("platform: {}", rt.platform());
+    let mut t = Table::new(&["artifact", "model", "step", "B", "Pt"]);
+    for name in &rt.manifest.artifacts {
+        let meta = crate::runtime::ArtifactMeta::load(rt.artifact_dir(), name)?;
+        t.row(vec![
+            name.clone(),
+            meta.model,
+            meta.step,
+            meta.batch.to_string(),
+            meta.pt.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

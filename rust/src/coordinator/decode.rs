@@ -1,0 +1,74 @@
+//! Batched greedy decoding via the `*__decode` artifacts (E2E generation).
+
+use anyhow::Result;
+
+use crate::runtime::Executable;
+use crate::util::tensor::Tensor;
+
+/// Greedy-decode completions for a batch of prompts.
+///
+/// `prompts[i]` are token ids (unpadded).  Returns per-prompt completions
+/// (token ids after the prompt, EOS excluded).  Prompts are processed in
+/// chunks of the artifact's fixed batch size.
+pub fn greedy_decode(
+    exe: &Executable,
+    full: &[f32],
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    eos: i32,
+) -> Result<Vec<Vec<u32>>> {
+    let meta = &exe.meta;
+    anyhow::ensure!(meta.step == "decode", "not a decode artifact");
+    let b = meta.batch;
+    let t = meta.inputs.iter().find(|i| i.name == "x").unwrap().shape[1];
+    let full_t = Tensor::f32(vec![full.len()], full.to_vec());
+    let empty = Tensor::f32(vec![0], vec![]);
+    let vocab = meta.outputs[0].shape[1];
+
+    let mut out: Vec<Vec<u32>> = Vec::with_capacity(prompts.len());
+    for chunk in prompts.chunks(b) {
+        let mut x = vec![0i32; b * t];
+        let mut pos = vec![0i32; b];
+        let mut done = vec![false; b];
+        let mut completions: Vec<Vec<u32>> = vec![Vec::new(); b];
+        for (row, p) in chunk.iter().enumerate() {
+            let len = p.len().min(t);
+            x[row * t..row * t + len].copy_from_slice(&p[..len]);
+            pos[row] = len as i32 - 1;
+        }
+        for _ in 0..max_new {
+            if done.iter().take(chunk.len()).all(|&d| d) {
+                break;
+            }
+            let logits = exe.run(&[
+                empty.clone(),
+                full_t.clone(),
+                Tensor::i32(vec![b, t], x.clone()),
+                Tensor::i32(vec![b], pos.clone()),
+            ])?;
+            let l = logits[0].as_f32();
+            for row in 0..chunk.len() {
+                if done[row] {
+                    continue;
+                }
+                let slice = &l[row * vocab..(row + 1) * vocab];
+                let next = slice
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32;
+                let np = pos[row] + 1;
+                if next == eos || np as usize >= t {
+                    done[row] = true;
+                    continue;
+                }
+                x[row * t + np as usize] = next;
+                pos[row] = np;
+                completions[row].push(next as u32);
+            }
+        }
+        out.extend(completions.into_iter().take(chunk.len()));
+    }
+    Ok(out)
+}

@@ -1,0 +1,114 @@
+//! Metric sinks: JSONL run logs + loss-curve summaries.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Appends one JSON object per line; used for training curves and bench rows.
+pub struct JsonlSink {
+    file: std::fs::File,
+}
+
+impl JsonlSink {
+    pub fn create(path: impl AsRef<Path>) -> Result<JsonlSink> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlSink { file })
+    }
+
+    pub fn write(&mut self, record: &Json) -> Result<()> {
+        writeln!(self.file, "{}", json::write(record))?;
+        Ok(())
+    }
+
+    /// Convenience: write a step record.
+    pub fn step(&mut self, step: u64, loss: f64, eps: f64) -> Result<()> {
+        self.write(&json::obj(vec![
+            ("step", Json::Num(step as f64)),
+            ("loss", Json::Num(loss)),
+            ("epsilon", Json::Num(eps)),
+        ]))
+    }
+}
+
+/// Read a JSONL file back (tests, plotting).
+pub fn read_jsonl(path: impl AsRef<Path>) -> Result<Vec<Json>> {
+    let src = std::fs::read_to_string(path.as_ref())?;
+    src.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| json::parse(l).map_err(|e| anyhow::anyhow!(e)))
+        .collect()
+}
+
+/// Simple online mean/min/max accumulator for loss curves.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub first: f64,
+    pub last: f64,
+}
+
+impl Summary {
+    pub fn push(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+            self.first = v;
+        }
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.last = v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let p = std::env::temp_dir().join(format!("fastdp-jsonl-{}", std::process::id()));
+        {
+            let mut s = JsonlSink::create(&p).unwrap();
+            s.step(1, 2.5, 0.1).unwrap();
+            s.step(2, 2.0, 0.2).unwrap();
+        }
+        let recs = read_jsonl(&p).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].req("loss").as_f64().unwrap(), 2.0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn summary_tracks_extremes() {
+        let mut s = Summary::default();
+        for v in [3.0, 1.0, 2.0] {
+            s.push(v);
+        }
+        assert_eq!(s.first, 3.0);
+        assert_eq!(s.last, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator: the DP fine-tuning orchestrator.
+//!
+//! * [`trainer`] — Algorithm 1 at the logical-batch level (Poisson sampling,
+//!   masked microbatch accumulation, noise, optimizer step, accounting).
+//! * [`phase`] — two-phase X+BiTFiT scheduling (App. A.2.2).
+//! * [`optim`] — SGD / DP-Adam / DP-AdamW on flat parameter vectors.
+//! * [`task_data`] — dataset -> fixed-shape artifact inputs with masks.
+//! * [`workloads`] — manifest-driven synthetic dataset construction.
+//! * [`decode`] — batched greedy decoding for the generation tasks.
+//! * [`checkpoint`] — CRC-protected binary checkpoints.
+//! * [`metrics`] — JSONL run logs.
+//! * [`distributed`] — simulated data-parallel communication accounting.
+//! * [`cli`] — the `fastdp` binary's subcommands.
+
+pub mod checkpoint;
+pub mod cli;
+pub mod decode;
+pub mod distributed;
+pub mod metrics;
+pub mod optim;
+pub mod phase;
+pub mod pretrain;
+pub mod task_data;
+pub mod trainer;
+pub mod workloads;

@@ -1,0 +1,185 @@
+//! Optimizers over flat parameter vectors (the descent of Alg. 1 line 11).
+//!
+//! The private gradient arrives from the artifact + noise pipeline already
+//! averaged over the logical batch; these are standard SGD/Adam/AdamW
+//! updates, kept in rust so the optimizer state never round-trips through
+//! the artifact.
+
+/// Optimizer family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    /// DP-Adam (the paper's text-classification optimizer).
+    Adam,
+    /// DP-AdamW (the paper's E2E generation optimizer).
+    AdamW,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Option<OptimKind> {
+        match s {
+            "sgd" => Some(OptimKind::Sgd),
+            "adam" => Some(OptimKind::Adam),
+            "adamw" => Some(OptimKind::AdamW),
+            _ => None,
+        }
+    }
+}
+
+/// Flat-vector optimizer with internal state.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    pub kind: OptimKind,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimKind, lr: f64, n: usize) -> Optimizer {
+        Optimizer {
+            kind,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: if kind == OptimKind::AdamW { 0.01 } else { 0.0 },
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// Number of parameters this optimizer was sized for.
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+
+    /// Apply one update with the current learning rate.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        self.step_lr(params, grad, self.lr)
+    }
+
+    /// Apply one update with an explicit learning rate (schedules).
+    pub fn step_lr(&mut self, params: &mut [f32], grad: &[f32], lr: f64) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len(), "optimizer sized for different params");
+        self.t += 1;
+        match self.kind {
+            OptimKind::Sgd => {
+                for (p, &g) in params.iter_mut().zip(grad) {
+                    *p -= (lr * g as f64) as f32;
+                }
+            }
+            OptimKind::Adam | OptimKind::AdamW => {
+                let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+                let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+                for i in 0..params.len() {
+                    let g = grad[i] as f64;
+                    self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+                    self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+                    let mhat = self.m[i] / bc1;
+                    let vhat = self.v[i] / bc2;
+                    let mut upd = lr * mhat / (vhat.sqrt() + self.eps);
+                    if self.kind == OptimKind::AdamW {
+                        upd += lr * self.weight_decay * params[i] as f64;
+                    }
+                    params[i] -= upd as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    Constant,
+    /// Linear warmup over `warmup` steps then constant (the paper uses no
+    /// decay — Table 9 "learning rate decay: No").
+    Warmup { warmup: u64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, base_lr: f64, step: u64) -> f64 {
+        match self {
+            LrSchedule::Constant => base_lr,
+            LrSchedule::Warmup { warmup } => {
+                if *warmup == 0 || step >= *warmup {
+                    base_lr
+                } else {
+                    base_lr * (step + 1) as f64 / *warmup as f64
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_matches_hand_computation() {
+        let mut o = Optimizer::new(OptimKind::Sgd, 0.1, 2);
+        let mut p = vec![1.0f32, -2.0];
+        o.step(&mut p, &[10.0, -10.0]);
+        assert!((p[0] - 0.0).abs() < 1e-6);
+        assert!((p[1] - -1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, |first update| ~ lr regardless of grad scale
+        for &g in &[1e-3f32, 1.0, 1e3] {
+            let mut o = Optimizer::new(OptimKind::Adam, 0.01, 1);
+            let mut p = vec![0.0f32];
+            o.step(&mut p, &[g]);
+            assert!((p[0].abs() - 0.01).abs() < 1e-4, "g={g} p={}", p[0]);
+        }
+    }
+
+    #[test]
+    fn adamw_decays_weights() {
+        let mut o = Optimizer::new(OptimKind::AdamW, 0.1, 1);
+        let mut p_adamw = vec![10.0f32];
+        o.step(&mut p_adamw, &[0.0]);
+        // zero gradient: AdamW still shrinks the weight, Adam does not
+        let mut o2 = Optimizer::new(OptimKind::Adam, 0.1, 1);
+        let mut p_adam = vec![10.0f32];
+        o2.step(&mut p_adam, &[0.0]);
+        assert!(p_adamw[0] < 10.0);
+        assert_eq!(p_adam[0], 10.0);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize (p - 3)^2
+        let mut o = Optimizer::new(OptimKind::Adam, 0.05, 1);
+        let mut p = vec![0.0f32];
+        for _ in 0..500 {
+            let g = 2.0 * (p[0] - 3.0);
+            o.step(&mut p, &[g]);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{}", p[0]);
+    }
+
+    #[test]
+    fn warmup_schedule() {
+        let s = LrSchedule::Warmup { warmup: 10 };
+        assert!((s.at(1.0, 0) - 0.1).abs() < 1e-12);
+        assert!((s.at(1.0, 4) - 0.5).abs() < 1e-12);
+        assert_eq!(s.at(1.0, 10), 1.0);
+        assert_eq!(s.at(1.0, 100), 1.0);
+        assert_eq!(LrSchedule::Constant.at(0.3, 5), 0.3);
+    }
+}

@@ -1,0 +1,80 @@
+//! Two-phase X+BiTFiT training (paper App. A.2.2, Tables 14-16).
+//!
+//! Phase 1 runs DP **full** fine-tuning for X "epochs" (steps here), phase 2
+//! switches to DP-BiTFiT for the remainder.  The scheduler remaps the full
+//! parameter vector between the two artifacts' (frozen, trainable) splits
+//! via the shared layout, and carries the RDP accountant across the switch
+//! so the privacy budget composes over the entire run.
+
+use anyhow::Result;
+
+use super::task_data::TaskData;
+use super::trainer::{StepStats, Trainer, TrainerConfig};
+use crate::runtime::Runtime;
+
+/// Configuration for an X+BiTFiT run.
+#[derive(Debug, Clone)]
+pub struct TwoPhaseConfig {
+    /// Phase-1 artifact (a DP full fine-tuning step).
+    pub full_artifact: String,
+    /// Phase-2 artifact (the DP-BiTFiT step).
+    pub bitfit_artifact: String,
+    /// Steps spent in phase 1 ("X" in X+BiTFiT; 0 = pure BiTFiT).
+    pub full_steps: u64,
+    pub total_steps: u64,
+    /// Learning rates per phase (the paper tunes them separately, Table 14).
+    pub full_lr: f64,
+    pub bitfit_lr: f64,
+    pub base: TrainerConfig,
+}
+
+/// Outcome of a two-phase run.
+pub struct TwoPhaseResult {
+    pub params: Vec<f32>,
+    pub losses: Vec<f64>,
+    pub epsilon: f64,
+}
+
+/// Run X+BiTFiT; `params` is the (pretrained) starting full vector.
+pub fn run_two_phase(
+    rt: &mut Runtime,
+    cfg: &TwoPhaseConfig,
+    data: &TaskData,
+    params: Vec<f32>,
+    mut on_step: impl FnMut(&str, StepStats),
+) -> Result<TwoPhaseResult> {
+    let mut losses = Vec::new();
+    let mut params = params;
+    let mut accountant = None;
+
+    if cfg.full_steps > 0 {
+        let mut tc = cfg.base.clone();
+        tc.artifact = cfg.full_artifact.clone();
+        tc.lr = cfg.full_lr;
+        let mut t = Trainer::new(rt, tc, data.len(), Some(params))?;
+        for _ in 0..cfg.full_steps.min(cfg.total_steps) {
+            let s = t.train_step(data)?;
+            losses.push(s.loss);
+            on_step("full", s);
+        }
+        params = t.full_params();
+        accountant = t.accountant.take();
+    }
+
+    let remaining = cfg.total_steps.saturating_sub(cfg.full_steps);
+    let mut tc = cfg.base.clone();
+    tc.artifact = cfg.bitfit_artifact.clone();
+    tc.lr = cfg.bitfit_lr;
+    let mut t = Trainer::new(rt, tc, data.len(), Some(params))?;
+    if let Some(acc) = accountant {
+        // carry the spent budget into phase 2 (composition over the run)
+        t.accountant = Some(acc);
+    }
+    for _ in 0..remaining {
+        let s = t.train_step(data)?;
+        losses.push(s.loss);
+        on_step("bitfit", s);
+    }
+    let epsilon = t.accountant.as_ref().map(|a| a.epsilon().0).unwrap_or(0.0);
+    Ok(TwoPhaseResult { params: t.full_params(), losses, epsilon })
+}

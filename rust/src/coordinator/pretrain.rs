@@ -1,0 +1,97 @@
+//! Non-private pretraining on public synthetic corpora + checkpoint cache.
+//!
+//! The paper fine-tunes *pretrained* foundation models; we reproduce the
+//! structure by pretraining each small model once (standard, non-DP — the
+//! paper's assumption is public pretraining data) and caching the
+//! checkpoint under `artifacts/pretrained/`.  Examples and benches share
+//! the cache, so the expensive phase runs once per (model, task, steps).
+
+use anyhow::Result;
+
+use super::checkpoint::Checkpoint;
+use super::optim::OptimKind;
+use super::trainer::{Trainer, TrainerConfig};
+use super::workloads;
+use crate::runtime::Runtime;
+
+/// Pretraining recipe.
+#[derive(Debug, Clone)]
+pub struct PretrainSpec {
+    pub model: String,
+    /// `pretrain-cls` / `pretrain-lm` / `cifar-pretrain` / `celeba`.
+    pub task: String,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl PretrainSpec {
+    pub fn new(model: &str, task: &str) -> PretrainSpec {
+        PretrainSpec {
+            model: model.to_string(),
+            task: task.to_string(),
+            steps: 150,
+            batch: 64,
+            lr: 1e-3,
+            n: 8192,
+            seed: 7,
+        }
+    }
+
+    fn cache_path(&self, rt: &Runtime) -> std::path::PathBuf {
+        rt.artifact_dir().join("pretrained").join(format!(
+            "{}__{}__{}s.ckpt",
+            self.model, self.task, self.steps
+        ))
+    }
+}
+
+/// Pretrain (or load cached) and return the full parameter vector.
+///
+/// Pass `quiet=false` to log progress lines.
+pub fn pretrained_params(rt: &mut Runtime, spec: &PretrainSpec, quiet: bool) -> Result<Vec<f32>> {
+    let path = spec.cache_path(rt);
+    if let Ok(ck) = Checkpoint::load(&path) {
+        if ck.model == spec.model && ck.step == spec.steps as u64 {
+            if !quiet {
+                println!("pretrained checkpoint: {} (cached)", path.display());
+            }
+            return Ok(ck.params);
+        }
+    }
+    let artifact = format!("{}__nondp-full", spec.model);
+    let data = workloads::build(rt, &spec.model, &spec.task, spec.n, spec.seed)?;
+    let mut tc = TrainerConfig::new(&artifact);
+    tc.logical_batch = spec.batch;
+    tc.lr = spec.lr;
+    tc.optim = OptimKind::Adam;
+    tc.seed = spec.seed;
+    let mut t = Trainer::new(rt, tc, data.len(), None)?;
+    if !quiet {
+        println!("pretraining {} on {} for {} steps ...", spec.model, spec.task, spec.steps);
+    }
+    for i in 0..spec.steps {
+        let s = t.train_step(&data)?;
+        if !quiet && (i % 25 == 0 || i + 1 == spec.steps) {
+            println!("  pretrain step {:>4}  loss {:.4}", s.step, s.loss);
+        }
+    }
+    let params = t.full_params();
+    Checkpoint { model: spec.model.clone(), step: spec.steps as u64, params: params.clone() }
+        .save(&path)?;
+    if !quiet {
+        println!("cached pretrained checkpoint at {}", path.display());
+    }
+    Ok(params)
+}
+
+/// Reset a model's head leaves to their deterministic init values
+/// (downstream tasks replace the classification head, §4.3).
+pub fn reset_head(rt: &Runtime, model: &str, params: &mut [f32]) -> Result<()> {
+    let layout = rt.layout(model)?;
+    let init = rt.init_params(model)?;
+    layout.copy_head(params, &init);
+    Ok(())
+}

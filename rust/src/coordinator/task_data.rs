@@ -1,0 +1,130 @@
+//! Dataset -> artifact-input assembly (fixed-shape microbatches + masks).
+
+use crate::data::{ImageExample, LmExample, TextExample};
+use crate::util::tensor::Tensor;
+
+/// A training/eval dataset in one of the three task shapes.
+#[derive(Debug, Clone)]
+pub enum TaskData {
+    /// Classification over token sequences (x: i32[B,T], y: i32[B]).
+    Text { examples: Vec<TextExample>, t: usize },
+    /// Causal LM (x: i32[B,T], y: i32[B,T]).
+    Lm { examples: Vec<LmExample>, t: usize },
+    /// Images (x: f32[B,S,S,3]; y: i32[B] or f32[B,A] when multi-label).
+    Image { examples: Vec<ImageExample>, size: usize, n_attrs: usize },
+}
+
+impl TaskData {
+    pub fn len(&self) -> usize {
+        match self {
+            TaskData::Text { examples, .. } => examples.len(),
+            TaskData::Lm { examples, .. } => examples.len(),
+            TaskData::Image { examples, .. } => examples.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Assemble a fixed-size microbatch from `idxs` (padded + masked).
+    ///
+    /// Returns (x, y, mask): rows beyond `idxs.len()` are zero-filled with
+    /// mask 0, so artifacts see a constant shape `b` while the clipped-sum
+    /// semantics stay exact (masked rows contribute exactly zero).
+    pub fn fill(&self, idxs: &[usize], b: usize) -> (Tensor, Tensor, Tensor) {
+        assert!(idxs.len() <= b, "microbatch too large");
+        let mut mask = vec![0.0f32; b];
+        for m in mask.iter_mut().take(idxs.len()) {
+            *m = 1.0;
+        }
+        let mask_t = Tensor::f32(vec![b], mask);
+        match self {
+            TaskData::Text { examples, t } => {
+                let mut x = vec![0i32; b * t];
+                let mut y = vec![0i32; b];
+                for (row, &i) in idxs.iter().enumerate() {
+                    x[row * t..(row + 1) * t].copy_from_slice(&examples[i].tokens);
+                    y[row] = examples[i].label;
+                }
+                (Tensor::i32(vec![b, *t], x), Tensor::i32(vec![b], y), mask_t)
+            }
+            TaskData::Lm { examples, t } => {
+                let mut x = vec![0i32; b * t];
+                let mut y = vec![0i32; b * t];
+                for (row, &i) in idxs.iter().enumerate() {
+                    x[row * t..(row + 1) * t].copy_from_slice(&examples[i].input);
+                    y[row * t..(row + 1) * t].copy_from_slice(&examples[i].target);
+                }
+                (
+                    Tensor::i32(vec![b, *t], x),
+                    Tensor::i32(vec![b, *t], y),
+                    mask_t,
+                )
+            }
+            TaskData::Image { examples, size, n_attrs } => {
+                let pix = size * size * 3;
+                let mut x = vec![0.0f32; b * pix];
+                for (row, &i) in idxs.iter().enumerate() {
+                    x[row * pix..(row + 1) * pix].copy_from_slice(&examples[i].pixels);
+                }
+                let x_t = Tensor::f32(vec![b, *size, *size, 3], x);
+                let y_t = if *n_attrs > 0 {
+                    let mut y = vec![0.0f32; b * n_attrs];
+                    for (row, &i) in idxs.iter().enumerate() {
+                        y[row * n_attrs..(row + 1) * n_attrs]
+                            .copy_from_slice(&examples[i].attributes);
+                    }
+                    Tensor::f32(vec![b, *n_attrs], y)
+                } else {
+                    let mut y = vec![0i32; b];
+                    for (row, &i) in idxs.iter().enumerate() {
+                        y[row] = examples[i].label;
+                    }
+                    Tensor::i32(vec![b], y)
+                };
+                (x_t, y_t, mask_t)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_fill_pads_and_masks() {
+        let data = TaskData::Text {
+            examples: vec![
+                TextExample { tokens: vec![1, 2, 3], label: 1 },
+                TextExample { tokens: vec![4, 5, 6], label: 0 },
+            ],
+            t: 3,
+        };
+        let (x, y, mask) = data.fill(&[1], 4);
+        assert_eq!(x.shape, vec![4, 3]);
+        assert_eq!(&x.as_i32()[..3], &[4, 5, 6]);
+        assert_eq!(&x.as_i32()[3..], &[0; 9]);
+        assert_eq!(y.as_i32(), &[0, 0, 0, 0]);
+        assert_eq!(mask.as_f32(), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn image_multilabel_fill() {
+        let data = TaskData::Image {
+            examples: vec![ImageExample {
+                pixels: vec![0.5; 4 * 4 * 3],
+                label: -1,
+                attributes: vec![1.0, 0.0],
+            }],
+            size: 4,
+            n_attrs: 2,
+        };
+        let (x, y, mask) = data.fill(&[0], 2);
+        assert_eq!(x.shape, vec![2, 4, 4, 3]);
+        assert_eq!(y.shape, vec![2, 2]);
+        assert_eq!(y.as_f32(), &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(mask.as_f32(), &[1.0, 0.0]);
+    }
+}

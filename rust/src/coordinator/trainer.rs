@@ -1,0 +1,285 @@
+//! The DP training loop — Algorithm 1 at the logical-batch level.
+//!
+//! Per step: Poisson-sample a logical batch (line 2), stream it through the
+//! AOT step artifact in fixed-shape masked microbatches (lines 3-9 run
+//! inside the artifact; clipped sums accumulate exactly across chunks), add
+//! Gaussian noise once (line 10), average by the expected batch size, and
+//! descend with the rust optimizer (line 11).  The RDP accountant advances
+//! once per logical batch.
+//!
+//! Non-DP runs (`sigma == 0`, `nondp-*` artifacts) share the same loop with
+//! shuffled fixed-size batches and no noise/accounting.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::optim::{LrSchedule, OptimKind, Optimizer};
+use super::task_data::TaskData;
+use crate::dp::rdp::RdpAccountant;
+use crate::dp::sampler::PoissonSampler;
+use crate::runtime::{DeviceInput, Executable, Layout, Runtime};
+use crate::util::rng::ChaChaRng;
+use crate::util::tensor::Tensor;
+use crate::util::Timers;
+
+/// Trainer configuration (see `configs/*.toml`).
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// Training-step artifact name, e.g. `cls-base__dp-bitfit`.
+    pub artifact: String,
+    /// Logical (Poisson-expected) batch size.
+    pub logical_batch: usize,
+    pub lr: f64,
+    pub optim: OptimKind,
+    pub schedule: LrSchedule,
+    /// Clipping threshold R (paper default 0.1 for text, Table 8).
+    pub clip_r: f64,
+    /// Noise multiplier; 0 disables DP accounting (non-private runs).
+    pub sigma: f64,
+    pub delta: f64,
+    pub seed: u64,
+}
+
+impl TrainerConfig {
+    pub fn new(artifact: &str) -> TrainerConfig {
+        TrainerConfig {
+            artifact: artifact.to_string(),
+            logical_batch: 64,
+            lr: 5e-3,
+            optim: OptimKind::Adam,
+            schedule: LrSchedule::Constant,
+            clip_r: 0.1,
+            sigma: 0.0,
+            delta: 1e-5,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-step statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: u64,
+    pub loss: f64,
+    pub batch: usize,
+    pub grad_norm: f64,
+    pub epsilon: f64,
+}
+
+/// The coordinator's training driver for one (model, method) artifact.
+pub struct Trainer {
+    pub cfg: TrainerConfig,
+    exe: Rc<Executable>,
+    layout: Layout,
+    train: Vec<f32>,
+    frozen: Tensor,
+    frozen_dev: Option<DeviceInput>,
+    optimizer: Optimizer,
+    sampler: Option<PoissonSampler>,
+    pub accountant: Option<RdpAccountant>,
+    noise_rng: ChaChaRng,
+    data_rng: ChaChaRng,
+    pub step: u64,
+    pub timers: Timers,
+    n_data: usize,
+    q: f64,
+}
+
+impl Trainer {
+    /// Build a trainer; `params` defaults to the model's deterministic init
+    /// (pass a pretrained full vector for fine-tuning).
+    pub fn new(
+        rt: &mut Runtime,
+        cfg: TrainerConfig,
+        n_data: usize,
+        params: Option<Vec<f32>>,
+    ) -> Result<Trainer> {
+        let exe = rt.load(&cfg.artifact)?;
+        let meta = exe.meta.clone();
+        anyhow::ensure!(meta.step == "train", "{} is not a train artifact", cfg.artifact);
+        let layout = rt.layout(&meta.model)?;
+        let full = match params {
+            Some(p) => {
+                anyhow::ensure!(p.len() == layout.n_params, "param vector size mismatch");
+                p
+            }
+            None => rt.init_params(&meta.model)?,
+        };
+        let (frozen, train) = layout.split(&full, &meta.subset);
+        let frozen = Tensor::f32(vec![meta.pf], frozen);
+        let frozen_dev = Some(exe.upload(&frozen).context("uploading frozen params")?);
+        let is_dp = meta.method.starts_with("dp-");
+        let q = (cfg.logical_batch as f64 / n_data as f64).min(1.0);
+        let sampler = if is_dp {
+            Some(PoissonSampler::new(n_data, q, cfg.seed ^ 0x5A17))
+        } else {
+            None
+        };
+        let accountant = if is_dp && cfg.sigma > 0.0 {
+            Some(RdpAccountant::new(cfg.delta))
+        } else {
+            None
+        };
+        let optimizer = Optimizer::new(cfg.optim, cfg.lr, meta.pt);
+        let _ = &full; // consumed via the (frozen, train) split above
+        Ok(Trainer {
+            noise_rng: ChaChaRng::new(cfg.seed, 0x4015E),
+            data_rng: ChaChaRng::new(cfg.seed, 0xDA7A),
+            optimizer,
+            sampler,
+            accountant,
+            exe,
+            layout,
+            train,
+            frozen,
+            frozen_dev,
+            step: 0,
+            timers: Timers::new(),
+            n_data,
+            cfg,
+            q,
+        })
+    }
+
+    pub fn meta(&self) -> &crate::runtime::ArtifactMeta {
+        &self.exe.meta
+    }
+
+    /// Is this a DP run (noise + Poisson sampling + accounting)?
+    pub fn is_dp(&self) -> bool {
+        self.sampler.is_some()
+    }
+
+    /// Current merged full parameter vector.
+    pub fn full_params(&self) -> Vec<f32> {
+        self.layout
+            .merge(self.frozen.as_f32(), &self.train, &self.exe.meta.subset)
+    }
+
+    /// Trainable parameter count.
+    pub fn trainable_len(&self) -> usize {
+        self.train.len()
+    }
+
+    fn sample_indices(&mut self) -> Vec<usize> {
+        if let Some(s) = &mut self.sampler {
+            s.sample()
+        } else {
+            // non-private: fixed-size uniform sample without replacement
+            let mut idxs: Vec<usize> = (0..self.n_data).collect();
+            self.data_rng.shuffle(&mut idxs);
+            idxs.truncate(self.cfg.logical_batch.min(self.n_data));
+            idxs
+        }
+    }
+
+    /// One logical-batch training step.
+    pub fn train_step(&mut self, data: &TaskData) -> Result<StepStats> {
+        assert_eq!(data.len(), self.n_data, "dataset changed under trainer");
+        let t0 = std::time::Instant::now();
+        let idxs = self.sample_indices();
+        self.timers.add("sample", t0.elapsed().as_secs_f64());
+        let b = self.exe.meta.batch;
+        let pt = self.exe.meta.pt;
+        let mut grad = vec![0.0f32; pt];
+        let mut loss_sum = 0.0f64;
+        let train_t = Tensor::f32(vec![pt], self.train.clone());
+        let clip_r = Tensor::scalar_f32(self.cfg.clip_r as f32);
+        for chunk in idxs.chunks(b) {
+            let t1 = std::time::Instant::now();
+            let (x, y, mask) = data.fill(chunk, b);
+            self.timers.add("fill", t1.elapsed().as_secs_f64());
+            let t2 = std::time::Instant::now();
+            // Default: literal-path execution (stable). The device-resident
+            // frozen-params path (`FASTDP_DEVICE_RESIDENT=1`) avoids
+            // re-uploading the frozen vector per microbatch but trips an
+            // xla_extension 0.5.1 assertion in some interleavings — see
+            // EXPERIMENTS.md §Perf for the measured difference.
+            let out = if std::env::var("FASTDP_DEVICE_RESIDENT").is_ok() {
+                let dev = self.frozen_dev.as_ref().unwrap();
+                self.exe
+                    .run_mixed(
+                        &[dev],
+                        &[None, Some(&train_t), Some(&x), Some(&y), Some(&mask), Some(&clip_r)],
+                    )
+                    .context("executing train step (device-resident path)")?
+            } else {
+                self.exe
+                    .run(&[self.frozen.clone(), train_t.clone(), x, y, mask, clip_r.clone()])
+                    .context("executing train step")?
+            };
+            self.timers.add("execute", t2.elapsed().as_secs_f64());
+            loss_sum += out[0].item_f32() as f64;
+            crate::util::tensor::axpy(&mut grad, 1.0, out[1].as_f32());
+        }
+        let denom = if self.is_dp() {
+            // fixed normalization by the expected batch (standard DP-SGD)
+            self.cfg.logical_batch as f64
+        } else {
+            idxs.len().max(1) as f64
+        };
+        if self.is_dp() && self.cfg.sigma > 0.0 {
+            crate::dp::add_gaussian_noise(
+                &mut grad,
+                self.cfg.sigma,
+                self.cfg.clip_r,
+                &mut self.noise_rng,
+            );
+        }
+        for g in grad.iter_mut() {
+            *g /= denom as f32;
+        }
+        let grad_norm = crate::util::tensor::l2_norm(&grad);
+        let lr = self.cfg.schedule.at(self.cfg.lr, self.step);
+        self.optimizer.step_lr(&mut self.train, &grad, lr);
+        if let Some(acc) = &mut self.accountant {
+            acc.step(self.q, self.cfg.sigma);
+        }
+        self.step += 1;
+        Ok(StepStats {
+            step: self.step,
+            loss: loss_sum / idxs.len().max(1) as f64,
+            batch: idxs.len(),
+            grad_norm,
+            epsilon: self.accountant.as_ref().map(|a| a.epsilon().0).unwrap_or(0.0),
+        })
+    }
+
+    /// Evaluate with an eval artifact over (up to) `max_examples`.
+    ///
+    /// Returns `(sum_metric_a, sum_metric_b, n)`: for classifiers a = summed
+    /// loss, b = correct count; for LMs a = summed NLL, b = token count.
+    pub fn evaluate(
+        &self,
+        eval_exe: &Executable,
+        data: &TaskData,
+        max_examples: usize,
+    ) -> Result<(f64, f64, usize)> {
+        evaluate_params(eval_exe, &self.full_params(), data, max_examples)
+    }
+}
+
+/// Evaluate a full parameter vector with an eval artifact.
+pub fn evaluate_params(
+    eval_exe: &Executable,
+    full: &[f32],
+    data: &TaskData,
+    max_examples: usize,
+) -> Result<(f64, f64, usize)> {
+    let meta = &eval_exe.meta;
+    anyhow::ensure!(meta.step == "eval", "not an eval artifact");
+    let b = meta.batch;
+    let n = data.len().min(max_examples);
+    let full_t = Tensor::f32(vec![full.len()], full.to_vec());
+    let empty = Tensor::f32(vec![0], vec![]);
+    let (mut a_sum, mut b_sum) = (0.0f64, 0.0f64);
+    let idxs: Vec<usize> = (0..n).collect();
+    for chunk in idxs.chunks(b) {
+        let (x, y, mask) = data.fill(chunk, b);
+        let out = eval_exe.run(&[empty.clone(), full_t.clone(), x, y, mask])?;
+        a_sum += out[0].item_f32() as f64;
+        b_sum += out[1].item_f32() as f64;
+    }
+    Ok((a_sum, b_sum, n))
+}

@@ -1,0 +1,115 @@
+//! Workload construction: manifest model config -> synthetic dataset.
+
+use anyhow::{Context, Result};
+
+use super::task_data::TaskData;
+use crate::data::synth_image;
+use crate::data::synth_text::{self, GlueTask};
+use crate::data::GenExample;
+use crate::runtime::Runtime;
+
+/// Model-config fields needed to shape a dataset.
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    pub kind: String,
+    pub t: usize,
+    pub vocab: usize,
+    pub img: usize,
+    pub n_cls: usize,
+    pub n_out: usize,
+}
+
+/// Extract the dataset-relevant shape of a model from the manifest.
+pub fn model_shape(rt: &Runtime, model: &str) -> Result<ModelShape> {
+    let entry = rt
+        .manifest
+        .models
+        .get(model)
+        .with_context(|| format!("unknown model {model:?}"))?;
+    let cfg = &entry.cfg;
+    let g = |k: &str| cfg.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+    Ok(ModelShape {
+        kind: entry.kind.clone(),
+        t: g("t"),
+        vocab: g("vocab"),
+        img: g("img"),
+        n_cls: g("n_cls"),
+        n_out: g("n_out"),
+    })
+}
+
+/// Build a dataset for (model, task).
+///
+/// Tasks: `sst2 | qnli | qqp | mnli | pretrain-cls | pretrain-lm | e2e |
+/// cifar | cifar-pretrain | celeba`.
+pub fn build(rt: &Runtime, model: &str, task: &str, n: usize, seed: u64) -> Result<TaskData> {
+    let shape = model_shape(rt, model)?;
+    match task {
+        "sst2" | "qnli" | "qqp" | "mnli" => {
+            let gt = match task {
+                "sst2" => GlueTask::Sst2,
+                "qnli" => GlueTask::Qnli,
+                "qqp" => GlueTask::Qqp,
+                _ => GlueTask::Mnli,
+            };
+            let tok = synth_text::tokenizer(shape.vocab);
+            Ok(TaskData::Text { examples: synth_text::glue(gt, n, shape.t, &tok, seed), t: shape.t })
+        }
+        "pretrain-cls" => {
+            let tok = synth_text::tokenizer(shape.vocab);
+            Ok(TaskData::Text {
+                examples: synth_text::pretrain_cls(n, shape.t, &tok, seed),
+                t: shape.t,
+            })
+        }
+        "pretrain-lm" => {
+            let tok = synth_text::tokenizer(shape.vocab);
+            Ok(TaskData::Lm { examples: synth_text::pretrain_lm(n, shape.t, &tok, seed), t: shape.t })
+        }
+        "e2e" => {
+            let (data, _) = build_e2e(rt, model, n, seed)?;
+            Ok(data)
+        }
+        "cifar" | "cifar-pretrain" => {
+            anyhow::ensure!(shape.kind == "vit", "cifar task needs a vit model");
+            let shift = task == "cifar-pretrain";
+            Ok(TaskData::Image {
+                examples: synth_image::shapes(n, shape.img, shape.n_cls, 0.15, shift, seed),
+                size: shape.img,
+                n_attrs: 0,
+            })
+        }
+        "celeba" => {
+            anyhow::ensure!(shape.kind == "cnn", "celeba task needs a cnn model");
+            Ok(TaskData::Image {
+                examples: synth_image::attributes(n, shape.img, 0.1, seed),
+                size: shape.img,
+                n_attrs: shape.n_out,
+            })
+        }
+        _ => anyhow::bail!("unknown task {task:?}"),
+    }
+}
+
+/// E2E generation data plus the reference sets for NLG metrics.
+pub fn build_e2e(rt: &Runtime, model: &str, n: usize, seed: u64) -> Result<(TaskData, Vec<GenExample>)> {
+    let shape = model_shape(rt, model)?;
+    anyhow::ensure!(shape.kind == "lm", "e2e task needs an lm model");
+    let tok = synth_text::tokenizer(shape.vocab);
+    let gen = synth_text::e2e(n, shape.t, &tok, seed);
+    let data = TaskData::Lm {
+        examples: gen.iter().map(|g| g.lm.clone()).collect(),
+        t: shape.t,
+    };
+    Ok((data, gen))
+}
+
+/// Default task for a model kind (used by the CLI when --task is omitted).
+pub fn default_task(kind: &str) -> &'static str {
+    match kind {
+        "cls" => "sst2",
+        "lm" => "e2e",
+        "vit" => "cifar",
+        _ => "celeba",
+    }
+}

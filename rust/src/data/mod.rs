@@ -1,0 +1,49 @@
+//! Synthetic workload generators — the paper's datasets, simulated
+//! (DESIGN.md §5 documents each substitution).
+//!
+//! * [`tokenizer`] — deterministic word-level vocabulary shared between the
+//!   corpus generators and the LM artifacts.
+//! * [`synth_text`] — grammar-generated text: a pretraining corpus, four
+//!   GLUE-analog classification tasks (SST2/QNLI/QQP/MNLI shapes), and an
+//!   E2E-analog meaning-representation -> utterance generation task.
+//! * [`synth_image`] — parametric images: a shapes "CIFAR" analog and an
+//!   attribute-factor multi-label "CelebA" analog.
+
+pub mod synth_image;
+pub mod synth_text;
+pub mod tokenizer;
+
+/// A classification example: token ids (padded) + label.
+#[derive(Debug, Clone)]
+pub struct TextExample {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// An LM example: input ids + next-token targets (0 = pad/ignore).
+#[derive(Debug, Clone)]
+pub struct LmExample {
+    pub input: Vec<i32>,
+    pub target: Vec<i32>,
+}
+
+/// A generation example: prompt ids, padded full sequence + references.
+#[derive(Debug, Clone)]
+pub struct GenExample {
+    pub lm: LmExample,
+    /// prompt length (decode starts here)
+    pub prompt_len: usize,
+    /// reference completions (token ids, no padding) for NLG metrics
+    pub references: Vec<Vec<u32>>,
+}
+
+/// An image example.
+#[derive(Debug, Clone)]
+pub struct ImageExample {
+    /// NHWC f32 pixels in [-1, 1], flattened
+    pub pixels: Vec<f32>,
+    /// single label (classification) — unused when multi-label
+    pub label: i32,
+    /// multi-label attribute vector in {0,1}
+    pub attributes: Vec<f32>,
+}

@@ -1,0 +1,219 @@
+//! Parametric image generators (CIFAR / CelebA analogs — DESIGN.md §5).
+//!
+//! * `shapes` — each class is a distinct (pattern, hue) combination drawn
+//!   with per-example jitter and pixel noise: a classification task whose
+//!   difficulty scales with the noise level (CIFAR10/100 analog).
+//! * `attributes` — 8 independent binary factors, each controlling one
+//!   visual element; the label is the factor vector itself (CelebA
+//!   multi-label analog, Tables 6/16).
+//!
+//! Pixels are NHWC f32 in [-1, 1].
+
+use super::ImageExample;
+use crate::util::rng::ChaChaRng;
+
+fn blank(size: usize, level: f32) -> Vec<f32> {
+    vec![level; size * size * 3]
+}
+
+fn put(img: &mut [f32], size: usize, x: usize, y: usize, c: usize, v: f32) {
+    img[(y * size + x) * 3 + c] = v;
+}
+
+fn add_noise(img: &mut [f32], rng: &mut ChaChaRng, level: f32) {
+    for p in img.iter_mut() {
+        *p = (*p + (rng.gaussian() as f32) * level).clamp(-1.0, 1.0);
+    }
+}
+
+/// Draw one of 5 base patterns with a given hue channel.
+fn draw_pattern(img: &mut [f32], size: usize, pattern: usize, hue: usize, rng: &mut ChaChaRng) {
+    let jx = rng.below(size / 4) as i64 - (size / 8) as i64;
+    let jy = rng.below(size / 4) as i64 - (size / 8) as i64;
+    let cx = (size as i64 / 2 + jx) as f32;
+    let cy = (size as i64 / 2 + jy) as f32;
+    let r = size as f32 * (0.2 + 0.1 * rng.uniform() as f32);
+    for y in 0..size {
+        for x in 0..size {
+            let (fx, fy) = (x as f32, y as f32);
+            let on = match pattern {
+                0 => ((fx - cx).powi(2) + (fy - cy).powi(2)).sqrt() < r, // disc
+                1 => (fx - cx).abs() < r && (fy - cy).abs() < r,          // square
+                2 => ((fx / 4.0) as usize) % 2 == 0,                      // v-stripes
+                3 => ((fy / 4.0) as usize) % 2 == 0,                      // h-stripes
+                _ => (((fx / 4.0) as usize) + ((fy / 4.0) as usize)) % 2 == 0, // checker
+            };
+            if on {
+                put(img, size, x, y, hue % 3, 0.9);
+                if hue >= 3 {
+                    put(img, size, x, y, (hue + 1) % 3, 0.6);
+                }
+            }
+        }
+    }
+}
+
+/// CIFAR-analog: `n_cls` classes = (pattern, hue) pairs.
+///
+/// `noise` controls difficulty; `domain_shift=true` renders on a brighter
+/// background (used so pretraining and fine-tuning distributions differ).
+pub fn shapes(
+    n: usize,
+    size: usize,
+    n_cls: usize,
+    noise: f32,
+    domain_shift: bool,
+    seed: u64,
+) -> Vec<ImageExample> {
+    assert!(n_cls <= 30, "5 patterns x 6 hues max");
+    let mut rng = ChaChaRng::new(seed, 0xC1FA2);
+    (0..n)
+        .map(|_| {
+            let label = rng.below(n_cls);
+            let (pattern, hue) = (label % 5, label / 5);
+            let mut img = blank(size, if domain_shift { -0.2 } else { -0.8 });
+            draw_pattern(&mut img, size, pattern, hue, &mut rng);
+            add_noise(&mut img, &mut rng, noise);
+            ImageExample { pixels: img, label: label as i32, attributes: vec![] }
+        })
+        .collect()
+}
+
+/// CelebA-analog: 8 binary attributes, each with a dedicated visual factor.
+pub fn attributes(n: usize, size: usize, noise: f32, seed: u64) -> Vec<ImageExample> {
+    let mut rng = ChaChaRng::new(seed, 0xCE1EBA);
+    (0..n)
+        .map(|_| {
+            let attrs: Vec<f32> = (0..8).map(|_| (rng.uniform() < 0.5) as i32 as f32).collect();
+            let mut img = blank(size, if attrs[0] > 0.5 { 0.2 } else { -0.6 });
+            // attr 1: central disc
+            if attrs[1] > 0.5 {
+                draw_pattern(&mut img, size, 0, 0, &mut rng);
+            }
+            // attr 2: vertical stripes in green
+            if attrs[2] > 0.5 {
+                for y in 0..size {
+                    for x in (0..size).step_by(6) {
+                        put(&mut img, size, x, y, 1, 0.8);
+                    }
+                }
+            }
+            // attr 3: top band red
+            if attrs[3] > 0.5 {
+                for y in 0..size / 6 {
+                    for x in 0..size {
+                        put(&mut img, size, x, y, 0, 0.9);
+                    }
+                }
+            }
+            // attr 4: border
+            if attrs[4] > 0.5 {
+                for i in 0..size {
+                    for c in 0..3 {
+                        put(&mut img, size, i, 0, c, 1.0);
+                        put(&mut img, size, i, size - 1, c, 1.0);
+                        put(&mut img, size, 0, i, c, 1.0);
+                        put(&mut img, size, size - 1, i, c, 1.0);
+                    }
+                }
+            }
+            // attr 5: bottom-right square blue
+            if attrs[5] > 0.5 {
+                for y in 2 * size / 3..size {
+                    for x in 2 * size / 3..size {
+                        put(&mut img, size, x, y, 2, 0.9);
+                    }
+                }
+            }
+            // attr 6: diagonal
+            if attrs[6] > 0.5 {
+                for i in 0..size {
+                    put(&mut img, size, i, i, 0, 0.7);
+                    put(&mut img, size, i, i, 1, 0.7);
+                }
+            }
+            // attr 7: left band dim cyan
+            if attrs[7] > 0.5 {
+                for y in 0..size {
+                    for x in 0..size / 8 {
+                        put(&mut img, size, x, y, 1, 0.5);
+                        put(&mut img, size, x, y, 2, 0.5);
+                    }
+                }
+            }
+            add_noise(&mut img, &mut rng, noise);
+            ImageExample { pixels: img, label: -1, attributes: attrs }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_shapes_and_ranges() {
+        let ex = shapes(40, 32, 10, 0.1, false, 1);
+        assert_eq!(ex.len(), 40);
+        for e in &ex {
+            assert_eq!(e.pixels.len(), 32 * 32 * 3);
+            assert!((0..10).contains(&e.label));
+            assert!(e.pixels.iter().all(|&p| (-1.0..=1.0).contains(&p)));
+        }
+        // all classes appear over a larger draw
+        let big = shapes(500, 16, 10, 0.05, false, 2);
+        let mut seen = [false; 10];
+        for e in big {
+            seen[e.label as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean images of two classes should differ substantially
+        let ex = shapes(300, 16, 10, 0.0, false, 3);
+        let mean = |cls: i32| -> Vec<f32> {
+            let sel: Vec<_> = ex.iter().filter(|e| e.label == cls).collect();
+            let mut m = vec![0.0f32; 16 * 16 * 3];
+            for e in &sel {
+                for (mi, &p) in m.iter_mut().zip(&e.pixels) {
+                    *mi += p / sel.len() as f32;
+                }
+            }
+            m
+        };
+        let (a, b) = (mean(0), mean(3));
+        let d: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+        assert!(d > 0.1, "class means too similar: {d}");
+    }
+
+    #[test]
+    fn attributes_are_balanced_and_visible() {
+        let ex = attributes(400, 16, 0.05, 4);
+        let mut counts = [0usize; 8];
+        for e in &ex {
+            assert_eq!(e.attributes.len(), 8);
+            for (i, &a) in e.attributes.iter().enumerate() {
+                assert!(a == 0.0 || a == 1.0);
+                counts[i] += a as usize;
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 120 && c < 280, "attr {i} count {c}");
+        }
+        // attr 0 (background) separates mean brightness
+        let bright: f32 = ex.iter().filter(|e| e.attributes[0] > 0.5)
+            .map(|e| e.pixels.iter().sum::<f32>()).sum();
+        let dark: f32 = ex.iter().filter(|e| e.attributes[0] < 0.5)
+            .map(|e| e.pixels.iter().sum::<f32>()).sum();
+        assert!(bright > dark);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = shapes(5, 16, 10, 0.1, false, 9);
+        let b = shapes(5, 16, 10, 0.1, false, 9);
+        assert_eq!(a[0].pixels, b[0].pixels);
+    }
+}

@@ -1,0 +1,475 @@
+//! Grammar-generated text workloads (GLUE / E2E analogs — DESIGN.md §5).
+//!
+//! All generators are deterministic under a seed and emit ids from the fixed
+//! [`Tokenizer`] vocabulary, so artifact vocab bounds are respected by
+//! construction.  Tasks are *learnable but not trivial*: each label depends
+//! on a latent rule plus distractor noise, so accuracy separates trained
+//! methods the same way the paper's tables do (fine-tuned > frozen >>
+//! random, DP slightly below non-DP).
+
+use super::tokenizer::{Tokenizer, EOS, SEP};
+use super::{GenExample, LmExample, TextExample};
+use crate::util::rng::ChaChaRng;
+
+// ---------------------------------------------------------------------
+// word bank (E2E-domain words first so they fit the LM's smaller vocab)
+// ---------------------------------------------------------------------
+
+const NAMES: &[&str] = &[
+    "aromi", "bibimbap", "cocum", "fitzbillies", "giraffe", "midsummer",
+    "strada", "vaults", "wildwood", "zizzi",
+];
+const FOODS: &[&str] = &["chinese", "english", "french", "indian", "italian", "japanese"];
+const PRICES: &[&str] = &["cheap", "moderate", "high"];
+const RATINGS: &[&str] = &["low", "average", "excellent"];
+const AREAS: &[&str] = &["riverside", "city", "centre", "suburbs"];
+const E2E_GLUE_WORDS: &[&str] = &[
+    "name", "food", "price", "rating", "area", "serves", "is", "a", "the",
+    "restaurant", "in", "with", "prices", "it", "has", "an", "located",
+    "offering", "and", "customer", "quality", "place", "you", "can", "find",
+    "eat", "near", "by",
+];
+const POS_ADJ: &[&str] = &[
+    "great", "wonderful", "delicious", "friendly", "superb", "charming",
+    "tasty", "lovely", "amazing", "pleasant",
+];
+const NEG_ADJ: &[&str] = &[
+    "terrible", "bland", "awful", "rude", "dreadful", "greasy", "noisy",
+    "dirty", "boring", "unpleasant",
+];
+const NOUNS: &[&str] = &[
+    "service", "menu", "staff", "dish", "soup", "dessert", "wine", "bread",
+    "salad", "curry", "noodles", "pasta", "steak", "cake", "tea", "coffee",
+    "table", "garden", "kitchen", "waiter", "chef", "plate", "sauce", "rice",
+];
+const VERBS: &[&str] = &[
+    "tastes", "looks", "seems", "feels", "smells", "appears", "remains",
+    "sounds", "gets", "stays",
+];
+const FILLERS: &[&str] = &[
+    "really", "quite", "very", "somewhat", "rather", "truly", "fairly",
+    "pretty", "extremely", "mostly", "today", "tonight", "again", "always",
+    "never", "often", "usually",
+];
+
+/// Full word bank in canonical id order.
+pub fn word_bank() -> Vec<&'static str> {
+    let mut v = Vec::new();
+    for group in [
+        NAMES, FOODS, PRICES, RATINGS, AREAS, E2E_GLUE_WORDS, POS_ADJ, NEG_ADJ,
+        NOUNS, VERBS, FILLERS,
+    ] {
+        v.extend_from_slice(group);
+    }
+    v
+}
+
+/// Tokenizer for a model family's vocab size (384 for lm-*, 512 for cls-*).
+pub fn tokenizer(vocab_size: usize) -> Tokenizer {
+    Tokenizer::new(&word_bank(), vocab_size)
+}
+
+fn pick<'a>(rng: &mut ChaChaRng, xs: &[&'a str]) -> &'a str {
+    xs[rng.below(xs.len())]
+}
+
+// ---------------------------------------------------------------------
+// classification tasks (GLUE analogs)
+// ---------------------------------------------------------------------
+
+/// The four GLUE-analog tasks (paper Table 3 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlueTask {
+    /// SST2 analog: sentence sentiment (2 classes).
+    Sst2,
+    /// QNLI analog: does the sentence answer the question? (2 classes)
+    Qnli,
+    /// QQP analog: are the two sentences paraphrases? (2 classes)
+    Qqp,
+    /// MNLI analog: entail / neutral / contradict (3 classes).
+    Mnli,
+}
+
+impl GlueTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::Sst2 => "SST2",
+            GlueTask::Qnli => "QNLI",
+            GlueTask::Qqp => "QQP",
+            GlueTask::Mnli => "MNLI",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            GlueTask::Mnli => 3,
+            _ => 2,
+        }
+    }
+
+    pub fn all() -> [GlueTask; 4] {
+        [GlueTask::Sst2, GlueTask::Qnli, GlueTask::Qqp, GlueTask::Mnli]
+    }
+}
+
+fn sentiment_sentence(rng: &mut ChaChaRng, tok: &Tokenizer, positive: bool) -> Vec<i32> {
+    let adjs = if positive { POS_ADJ } else { NEG_ADJ };
+    let mut words: Vec<&str> = vec!["the", pick(rng, NOUNS), pick(rng, VERBS), pick(rng, FILLERS), pick(rng, adjs)];
+    // distractors: filler words and a neutral clause
+    for _ in 0..rng.below(4) {
+        words.push(pick(rng, FILLERS));
+    }
+    words.push("and");
+    words.push("the");
+    words.push(pick(rng, NOUNS));
+    words.push(pick(rng, VERBS));
+    words.push(pick(rng, adjs));
+    tok.encode(&words.join(" "))
+}
+
+/// Generate `n` examples of a GLUE-analog task, padded to `t_len` with CLS.
+pub fn glue(task: GlueTask, n: usize, t_len: usize, tok: &Tokenizer, seed: u64) -> Vec<TextExample> {
+    let mut rng = ChaChaRng::new(seed, 0x617445);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (ids, label) = match task {
+            GlueTask::Sst2 => {
+                let pos = rng.uniform() < 0.5;
+                (sentiment_sentence(&mut rng, tok, pos), pos as i32)
+            }
+            GlueTask::Qnli => {
+                let subject = pick(&mut rng, NOUNS);
+                let answered = rng.uniform() < 0.5;
+                let s_subject = if answered { subject } else { pick(&mut rng, NOUNS) };
+                let q = format!("is the {subject} {}", pick(&mut rng, POS_ADJ));
+                let s = format!(
+                    "the {s_subject} {} {} {}",
+                    pick(&mut rng, VERBS),
+                    pick(&mut rng, FILLERS),
+                    pick(&mut rng, POS_ADJ)
+                );
+                let mut ids = tok.encode(&q);
+                ids.push(SEP);
+                ids.extend(tok.encode(&s));
+                (ids, (answered && s_subject == subject) as i32)
+            }
+            GlueTask::Qqp => {
+                let noun = pick(&mut rng, NOUNS);
+                let adj = pick(&mut rng, POS_ADJ);
+                let dup = rng.uniform() < 0.5;
+                let s1 = format!("is the {noun} {} {adj}", pick(&mut rng, FILLERS));
+                let s2 = if dup {
+                    format!("is the {noun} {} {adj}", pick(&mut rng, FILLERS))
+                } else {
+                    format!(
+                        "is the {} {} {}",
+                        pick(&mut rng, NOUNS),
+                        pick(&mut rng, FILLERS),
+                        pick(&mut rng, POS_ADJ)
+                    )
+                };
+                let mut ids = tok.encode(&s1);
+                ids.push(SEP);
+                ids.extend(tok.encode(&s2));
+                // label: duplicate iff noun+adj repeated
+                let same = s2.contains(noun) && s2.contains(adj);
+                (ids, same as i32)
+            }
+            GlueTask::Mnli => {
+                let noun = pick(&mut rng, NOUNS);
+                let pos = rng.uniform() < 0.5;
+                let premise_adjs = if pos { POS_ADJ } else { NEG_ADJ };
+                let premise_adj = pick(&mut rng, premise_adjs);
+                let label = rng.below(3) as i32; // 0 entail, 1 neutral, 2 contradict
+                let hyp = match label {
+                    0 => format!("the {noun} is {premise_adj}"),
+                    1 => format!("the {} is {}", pick(&mut rng, NOUNS), pick(&mut rng, FILLERS)),
+                    _ => {
+                        let anti = if pos { NEG_ADJ } else { POS_ADJ };
+                        format!("the {noun} is {}", pick(&mut rng, anti))
+                    }
+                };
+                let premise = format!(
+                    "the {noun} {} {} {premise_adj}",
+                    pick(&mut rng, VERBS),
+                    pick(&mut rng, FILLERS)
+                );
+                let mut ids = tok.encode(&premise);
+                ids.push(SEP);
+                ids.extend(tok.encode(&hyp));
+                (ids, label)
+            }
+        };
+        out.push(TextExample { tokens: tok.pad_to(ids, t_len, true), label });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// pretraining corpora
+// ---------------------------------------------------------------------
+
+/// Generic sentence for LM pretraining / encoder pretraining.
+fn corpus_sentence(rng: &mut ChaChaRng, tok: &Tokenizer) -> Vec<i32> {
+    let style = rng.below(3);
+    let s = match style {
+        0 => format!(
+            "the {} {} {} {} and the {} {} {}",
+            pick(rng, NOUNS), pick(rng, VERBS), pick(rng, FILLERS),
+            pick(rng, POS_ADJ), pick(rng, NOUNS), pick(rng, VERBS), pick(rng, NEG_ADJ),
+        ),
+        1 => format!(
+            "{} is a {} restaurant in the {} area with {} prices",
+            pick(rng, NAMES), pick(rng, FOODS), pick(rng, AREAS), pick(rng, PRICES),
+        ),
+        _ => format!(
+            "is the {} {} {} it {} {}",
+            pick(rng, NOUNS), pick(rng, FILLERS), pick(rng, POS_ADJ),
+            pick(rng, VERBS), pick(rng, NEG_ADJ),
+        ),
+    };
+    tok.encode(&s)
+}
+
+/// LM pretraining examples: next-token prediction over the corpus.
+pub fn pretrain_lm(n: usize, t_len: usize, tok: &Tokenizer, seed: u64) -> Vec<LmExample> {
+    let mut rng = ChaChaRng::new(seed, 0x9A3E);
+    (0..n)
+        .map(|_| {
+            let mut ids = corpus_sentence(&mut rng, tok);
+            while ids.len() < t_len + 1 {
+                ids.push(SEP);
+                ids.extend(corpus_sentence(&mut rng, tok));
+            }
+            ids.truncate(t_len + 1);
+            let input = ids[..t_len].to_vec();
+            let target = ids[1..t_len + 1].to_vec();
+            LmExample { input, target }
+        })
+        .collect()
+}
+
+/// Encoder pretraining: classify the sentence style (3 classes) — a generic
+/// feature-inducing task standing in for masked-LM pretraining.
+pub fn pretrain_cls(n: usize, t_len: usize, tok: &Tokenizer, seed: u64) -> Vec<TextExample> {
+    let mut rng = ChaChaRng::new(seed, 0x9A3F);
+    (0..n)
+        .map(|_| {
+            let style = rng.below(3) as i32;
+            let mut r2 = ChaChaRng::new(rng.next_u64(), 7);
+            let s = match style {
+                0 => format!(
+                    "the {} {} {} {}",
+                    pick(&mut r2, NOUNS), pick(&mut r2, VERBS),
+                    pick(&mut r2, FILLERS), pick(&mut r2, POS_ADJ),
+                ),
+                1 => format!(
+                    "{} is a {} restaurant in the {} area",
+                    pick(&mut r2, NAMES), pick(&mut r2, FOODS), pick(&mut r2, AREAS),
+                ),
+                _ => format!(
+                    "is the {} {} {}",
+                    pick(&mut r2, NOUNS), pick(&mut r2, FILLERS), pick(&mut r2, NEG_ADJ),
+                ),
+            };
+            TextExample { tokens: tok.pad_to(tok.encode(&s), t_len, true), label: style }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// E2E-analog generation
+// ---------------------------------------------------------------------
+
+/// A meaning representation: restaurant attributes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mr {
+    pub name: usize,
+    pub food: usize,
+    pub price: usize,
+    pub rating: usize,
+    pub area: usize,
+}
+
+impl Mr {
+    fn sample(rng: &mut ChaChaRng) -> Mr {
+        Mr {
+            name: rng.below(NAMES.len()),
+            food: rng.below(FOODS.len()),
+            price: rng.below(PRICES.len()),
+            rating: rng.below(RATINGS.len()),
+            area: rng.below(AREAS.len()),
+        }
+    }
+
+    /// The linearized MR prompt (mirrors the E2E dataset's "name[X], ..." field).
+    pub fn prompt(&self) -> String {
+        format!(
+            "name {} food {} price {} rating {} area {}",
+            NAMES[self.name], FOODS[self.food], PRICES[self.price],
+            RATINGS[self.rating], AREAS[self.area],
+        )
+    }
+
+    /// Reference realizations (template variants, as the E2E corpus has
+    /// multiple human references per MR).
+    pub fn references(&self) -> Vec<String> {
+        let (n, f, p, r, a) = (
+            NAMES[self.name], FOODS[self.food], PRICES[self.price],
+            RATINGS[self.rating], AREAS[self.area],
+        );
+        vec![
+            format!("{n} serves {f} food in the {a} area with {r} rating and {p} prices"),
+            format!("{n} is a {f} restaurant located in the {a} area with {p} prices and {r} rating"),
+            format!("in the {a} area {n} offers {f} food with {r} rating and {p} prices"),
+        ]
+    }
+}
+
+/// Generate E2E-analog examples: prompt + one reference as LM training
+/// target, all references kept for metric computation.
+pub fn e2e(n: usize, t_len: usize, tok: &Tokenizer, seed: u64) -> Vec<GenExample> {
+    let mut rng = ChaChaRng::new(seed, 0xE2E);
+    (0..n)
+        .map(|_| {
+            let mr = Mr::sample(&mut rng);
+            let refs = mr.references();
+            let chosen = rng.below(refs.len());
+            let mut ids = tok.encode(&mr.prompt());
+            ids.push(SEP);
+            let prompt_len = ids.len();
+            ids.extend(tok.encode(&refs[chosen]));
+            ids.push(EOS);
+            ids.truncate(t_len + 1);
+            let mut input = ids.clone();
+            input.truncate(t_len);
+            while input.len() < t_len {
+                input.push(0);
+            }
+            // targets: next token; 0 (pad) for the prompt region and padding
+            let mut target = vec![0i32; t_len];
+            for i in 0..t_len {
+                let is_completion = i + 1 >= prompt_len; // predict from SEP onward
+                if is_completion && i + 1 < ids.len() {
+                    target[i] = ids[i + 1];
+                }
+            }
+            let references = refs
+                .iter()
+                .map(|r| {
+                    let mut v: Vec<u32> = tok.encode(r).iter().map(|&x| x as u32).collect();
+                    v.push(EOS as u32);
+                    v
+                })
+                .collect();
+            GenExample { lm: LmExample { input, target }, prompt_len, references }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        tokenizer(384)
+    }
+
+    #[test]
+    fn word_bank_fits_lm_vocab() {
+        assert!(word_bank().len() + 5 <= 384, "{}", word_bank().len());
+        // no duplicate words (they would silently shadow ids)
+        let mut w = word_bank();
+        w.sort();
+        let before = w.len();
+        w.dedup();
+        assert_eq!(before, w.len());
+    }
+
+    #[test]
+    fn glue_tasks_have_learnable_structure() {
+        let t = tok();
+        for task in GlueTask::all() {
+            let ex = glue(task, 500, 64, &t, 1);
+            assert_eq!(ex.len(), 500);
+            // labels in range and both classes present
+            let mut counts = vec![0usize; task.n_classes()];
+            for e in &ex {
+                assert_eq!(e.tokens.len(), 64);
+                assert!((e.label as usize) < task.n_classes(), "{task:?} {}", e.label);
+                counts[e.label as usize] += 1;
+                assert!(e.tokens.iter().all(|&t| t >= 0 && t < 384));
+            }
+            for (c, &n) in counts.iter().enumerate() {
+                assert!(n > 50, "{task:?} class {c} has {n} examples");
+            }
+        }
+    }
+
+    #[test]
+    fn glue_is_deterministic_per_seed() {
+        let t = tok();
+        let a = glue(GlueTask::Sst2, 10, 64, &t, 5);
+        let b = glue(GlueTask::Sst2, 10, 64, &t, 5);
+        let c = glue(GlueTask::Sst2, 10, 64, &t, 6);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_ne!(
+            a.iter().map(|e| e.tokens.clone()).collect::<Vec<_>>(),
+            c.iter().map(|e| e.tokens.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn sst2_sentiment_words_separate_labels() {
+        let t = tok();
+        let pos_ids: Vec<i32> = POS_ADJ.iter().map(|w| t.encode_word(w)).collect();
+        let neg_ids: Vec<i32> = NEG_ADJ.iter().map(|w| t.encode_word(w)).collect();
+        for e in glue(GlueTask::Sst2, 200, 64, &t, 2) {
+            let has_pos = e.tokens.iter().any(|t| pos_ids.contains(t));
+            let has_neg = e.tokens.iter().any(|t| neg_ids.contains(t));
+            if e.label == 1 {
+                assert!(has_pos && !has_neg);
+            } else {
+                assert!(has_neg && !has_pos);
+            }
+        }
+    }
+
+    #[test]
+    fn lm_pretrain_shapes() {
+        let t = tok();
+        for e in pretrain_lm(20, 48, &t, 3) {
+            assert_eq!(e.input.len(), 48);
+            assert_eq!(e.target.len(), 48);
+            // shifted: target[i] == input[i+1] wherever both non-pad
+            for i in 0..47 {
+                if e.target[i] != 0 && e.input[i + 1] != 0 {
+                    assert_eq!(e.target[i], e.input[i + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn e2e_targets_only_cover_completion() {
+        let t = tok();
+        for e in e2e(50, 48, &t, 4) {
+            // no supervised positions strictly before prompt end - 1
+            for i in 0..e.prompt_len.saturating_sub(1) {
+                assert_eq!(e.lm.target[i], 0, "target before completion");
+            }
+            assert!(e.lm.target.iter().any(|&t| t != 0), "no supervision at all");
+            assert_eq!(e.references.len(), 3);
+            // references decode to distinct strings
+            assert_ne!(e.references[0], e.references[1]);
+        }
+    }
+
+    #[test]
+    fn e2e_references_contain_mr_slots() {
+        let mr = Mr { name: 0, food: 1, price: 2, rating: 0, area: 3 };
+        for r in mr.references() {
+            assert!(r.contains(NAMES[0]) && r.contains(FOODS[1]));
+        }
+    }
+}

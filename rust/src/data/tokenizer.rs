@@ -1,0 +1,115 @@
+//! Deterministic word-level tokenizer shared by all text tasks.
+//!
+//! The vocabulary is *constructed*, not learned: ids are assigned to a fixed
+//! word list so that the python-side artifacts (vocab size 384/512) and the
+//! rust-side generators always agree.  Special ids: 0 = PAD, 1 = CLS,
+//! 2 = SEP, 3 = EOS, 4 = UNK; words start at 5.
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const EOS: i32 = 3;
+pub const UNK: i32 = 4;
+pub const FIRST_WORD: i32 = 5;
+
+/// Fixed-vocabulary tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    words: Vec<String>,
+    index: std::collections::HashMap<String, i32>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Build from a word list, capped at `vocab_size - FIRST_WORD` entries.
+    pub fn new(words: &[&str], vocab_size: usize) -> Tokenizer {
+        let cap = vocab_size - FIRST_WORD as usize;
+        let words: Vec<String> = words.iter().take(cap).map(|s| s.to_string()).collect();
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), FIRST_WORD + i as i32))
+            .collect();
+        Tokenizer { words, index, vocab_size }
+    }
+
+    pub fn encode_word(&self, w: &str) -> i32 {
+        *self.index.get(w).unwrap_or(&UNK)
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| self.encode_word(w)).collect()
+    }
+
+    pub fn decode_id(&self, id: i32) -> &str {
+        match id {
+            PAD => "<pad>",
+            CLS => "<cls>",
+            SEP => "<sep>",
+            EOS => "<eos>",
+            UNK => "<unk>",
+            _ => self
+                .words
+                .get((id - FIRST_WORD) as usize)
+                .map(|s| s.as_str())
+                .unwrap_or("<oob>"),
+        }
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i >= FIRST_WORD)
+            .map(|&i| self.decode_id(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Pad/truncate to `len`; optionally prepend CLS.
+    pub fn pad_to(&self, mut ids: Vec<i32>, len: usize, with_cls: bool) -> Vec<i32> {
+        if with_cls {
+            ids.insert(0, CLS);
+        }
+        ids.truncate(len);
+        while ids.len() < len {
+            ids.push(PAD);
+        }
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = Tokenizer::new(&["the", "food", "was", "great"], 512);
+        let ids = t.encode("the food was great");
+        assert_eq!(ids, vec![5, 6, 7, 8]);
+        assert_eq!(t.decode(&ids), "the food was great");
+        assert_eq!(t.encode_word("missing"), UNK);
+    }
+
+    #[test]
+    fn pad_and_cls() {
+        let t = Tokenizer::new(&["a", "b"], 512);
+        let p = t.pad_to(vec![5, 6], 5, true);
+        assert_eq!(p, vec![CLS, 5, 6, PAD, PAD]);
+        let tr = t.pad_to(vec![5, 6, 5, 6, 5, 6], 4, false);
+        assert_eq!(tr.len(), 4);
+    }
+
+    #[test]
+    fn vocab_capped() {
+        let many: Vec<String> = (0..1000).map(|i| format!("w{i}")).collect();
+        let refs: Vec<&str> = many.iter().map(|s| s.as_str()).collect();
+        let t = Tokenizer::new(&refs, 384);
+        assert!(t.encode_word("w500") == UNK); // beyond cap
+        assert!(t.encode_word("w300") != UNK);
+        // every emitted id fits the artifact vocab
+        for i in 0..379 {
+            let id = t.encode_word(&format!("w{i}"));
+            assert!(id < 384);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Noise calibration: find the smallest sigma meeting a target (eps, delta).
+//!
+//! The paper's experiments fix (eps, delta, epochs, batch size) and derive
+//! sigma; this module inverts the RDP accountant by bisection.  The result
+//! is conservative (epsilon(sigma) <= target within tolerance).
+
+use super::rdp;
+
+/// Smallest noise multiplier sigma such that `steps` DP-SGD steps at
+/// sampling rate `q` spend at most `target_eps` at `delta`.
+pub fn calibrate_sigma(q: f64, steps: u64, target_eps: f64, delta: f64) -> f64 {
+    assert!(target_eps > 0.0);
+    if q == 0.0 {
+        return 0.0;
+    }
+    let eps = |sigma: f64| rdp::epsilon(q, sigma, steps, delta);
+    let (mut lo, mut hi) = (0.1f64, 2.0f64);
+    // grow hi until private enough; shrink lo until not
+    while eps(hi) > target_eps {
+        hi *= 2.0;
+        assert!(hi < 1e4, "cannot reach eps={target_eps} (q={q}, T={steps})");
+    }
+    while eps(lo) < target_eps && lo > 1e-3 {
+        lo /= 2.0;
+    }
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if eps(mid) > target_eps {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+/// Training-run privacy plan: sampling rate, steps, sigma and the epsilon
+/// actually spent (<= target).
+#[derive(Debug, Clone)]
+pub struct PrivacyPlan {
+    pub q: f64,
+    pub steps: u64,
+    pub sigma: f64,
+    pub delta: f64,
+    pub target_eps: f64,
+    pub spent_eps: f64,
+}
+
+/// Build a plan from dataset size, logical batch size, epochs and (eps, delta).
+pub fn plan(n: usize, batch: usize, epochs: f64, target_eps: f64, delta: f64) -> PrivacyPlan {
+    let q = (batch as f64 / n as f64).min(1.0);
+    let steps = ((epochs * n as f64) / batch as f64).ceil() as u64;
+    let sigma = calibrate_sigma(q, steps, target_eps, delta);
+    let spent = rdp::epsilon(q, sigma, steps, delta);
+    PrivacyPlan { q, steps, sigma, delta, target_eps, spent_eps: spent }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_meets_target() {
+        for &(q, t, eps) in &[(0.02, 500u64, 8.0), (0.1, 180, 3.0), (0.004, 3000, 1.0)] {
+            let sigma = calibrate_sigma(q, t, eps, 1e-5);
+            let spent = rdp::epsilon(q, sigma, t, 1e-5);
+            assert!(spent <= eps + 1e-6, "spent {spent} > {eps}");
+            // and not overly conservative: within 2% of the target
+            assert!(spent >= eps * 0.98, "spent {spent} << {eps} (sigma {sigma})");
+        }
+    }
+
+    #[test]
+    fn tighter_budget_needs_more_noise() {
+        let s8 = calibrate_sigma(0.05, 400, 8.0, 1e-5);
+        let s3 = calibrate_sigma(0.05, 400, 3.0, 1e-5);
+        let s1 = calibrate_sigma(0.05, 400, 1.0, 1e-5);
+        assert!(s1 > s3 && s3 > s8, "{s1} {s3} {s8}");
+    }
+
+    #[test]
+    fn plan_is_consistent() {
+        let p = plan(50_000, 1000, 3.0, 2.0, 1e-5);
+        assert_eq!(p.steps, 150);
+        assert!((p.q - 0.02).abs() < 1e-12);
+        assert!(p.spent_eps <= 2.0 + 1e-6);
+        assert!(p.sigma > 0.3);
+    }
+}

@@ -1,0 +1,91 @@
+//! Per-sample gradient clipping functions (host-side reference).
+//!
+//! The clipping itself runs inside the AOT artifacts (L2/L1); these
+//! implementations mirror `python/compile/kernels/ref.py::clip_factors` and
+//! are used by L3 for verification, tests and the host-side (small-vector)
+//! paths.
+
+/// Which clipping function to use (paper Table 12 compares them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClipMode {
+    /// Abadi et al. 2016: `min(R / ||g||, 1)`.
+    Abadi,
+    /// AUTO-S (Bu et al. 2022b): `R / (||g|| + 0.01)`.
+    AutoS,
+}
+
+impl ClipMode {
+    pub fn parse(s: &str) -> Option<ClipMode> {
+        match s {
+            "abadi" => Some(ClipMode::Abadi),
+            "autos" => Some(ClipMode::AutoS),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClipMode::Abadi => "abadi",
+            ClipMode::AutoS => "autos",
+        }
+    }
+}
+
+/// The AUTO-S stabilizer gamma.
+pub const AUTO_S_STABILIZER: f64 = 0.01;
+
+/// Per-sample clip factor C_i from a squared gradient norm.
+pub fn clip_factor(sq_norm: f64, r: f64, mode: ClipMode) -> f64 {
+    let norm = sq_norm.max(0.0).sqrt();
+    match mode {
+        ClipMode::Abadi => (r / norm.max(1e-12)).min(1.0),
+        ClipMode::AutoS => r / (norm + AUTO_S_STABILIZER),
+    }
+}
+
+/// Clip a gradient vector in place; returns the factor applied.
+pub fn clip_in_place(g: &mut [f32], r: f64, mode: ClipMode) -> f64 {
+    let sq: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let c = clip_factor(sq, r, mode);
+    for x in g.iter_mut() {
+        *x = (*x as f64 * c) as f32;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abadi_caps_at_one() {
+        assert_eq!(clip_factor(0.25, 1.0, ClipMode::Abadi), 1.0); // norm 0.5 < R
+        assert!((clip_factor(4.0, 1.0, ClipMode::Abadi) - 0.5).abs() < 1e-12); // norm 2
+    }
+
+    #[test]
+    fn autos_never_exceeds_sensitivity() {
+        // AUTO-S guarantees ||C_i g_i|| <= R for any norm
+        for &sq in &[1e-8, 0.01, 1.0, 100.0, 1e6] {
+            let c = clip_factor(sq, 1.0, ClipMode::AutoS);
+            assert!(c * sq.sqrt() <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn clip_in_place_bounds_norm() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let c = clip_in_place(&mut g, 1.0, ClipMode::Abadi);
+        assert!((c - 0.2).abs() < 1e-9);
+        let n: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((n - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(ClipMode::parse("abadi"), Some(ClipMode::Abadi));
+        assert_eq!(ClipMode::parse("autos"), Some(ClipMode::AutoS));
+        assert_eq!(ClipMode::parse("x"), None);
+        assert_eq!(ClipMode::AutoS.name(), "autos");
+    }
+}

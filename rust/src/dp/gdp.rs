@@ -1,0 +1,120 @@
+//! Gaussian-DP (f-DP) accountant (Dong, Roth, Su; Bu et al. 2020) as an
+//! independent cross-check of the RDP accountant.
+//!
+//! DP-SGD with Poisson rate `q`, noise multiplier `sigma`, `T` steps is
+//! asymptotically mu-GDP with  mu = q * sqrt(T * (exp(1/sigma^2) - 1))
+//! (Bu et al. 2020, CLT approximation).  A mu-GDP mechanism satisfies
+//! (eps, delta(eps))-DP with
+//!   delta(eps) = Phi(-eps/mu + mu/2) - exp(eps) * Phi(-eps/mu - mu/2).
+
+/// Standard normal CDF via erfc (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// The GDP mu for DP-SGD (CLT approximation of Bu et al. 2020).
+pub fn dp_sgd_mu(q: f64, sigma: f64, steps: u64) -> f64 {
+    q * ((steps as f64) * ((1.0 / (sigma * sigma)).exp() - 1.0)).sqrt()
+}
+
+/// delta as a function of eps for a mu-GDP mechanism.
+pub fn delta_of_eps(mu: f64, eps: f64) -> f64 {
+    norm_cdf(-eps / mu + mu / 2.0) - eps.exp() * norm_cdf(-eps / mu - mu / 2.0)
+}
+
+/// Invert delta(eps) = delta by bisection (delta is decreasing in eps).
+pub fn eps_of_delta(mu: f64, delta: f64) -> f64 {
+    assert!(mu > 0.0 && delta > 0.0 && delta < 1.0);
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    while delta_of_eps(mu, hi) > delta {
+        hi *= 2.0;
+        if hi > 1e6 {
+            return f64::INFINITY;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if delta_of_eps(mu, mid) > delta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// End-to-end GDP epsilon for DP-SGD.
+pub fn epsilon(q: f64, sigma: f64, steps: u64, delta: f64) -> f64 {
+    if q == 0.0 {
+        return 0.0;
+    }
+    eps_of_delta(dp_sgd_mu(q, sigma, steps), delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_cdf_reference_points() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.0) - 0.8413447).abs() < 1e-5);
+        assert!((norm_cdf(-1.96) - 0.0249979).abs() < 1e-5);
+        assert!((norm_cdf(3.0) - 0.9986501).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gdp_dual_known_point() {
+        // mu = 1 GDP at delta(eps=0) = Phi(1/2) - Phi(-1/2) ~ 0.3829
+        let d = delta_of_eps(1.0, 0.0);
+        assert!((d - 0.3829).abs() < 1e-3, "{d}");
+    }
+
+    #[test]
+    fn eps_of_delta_inverts() {
+        for &mu in &[0.3, 1.0, 2.5] {
+            let eps = eps_of_delta(mu, 1e-5);
+            let d = delta_of_eps(mu, eps);
+            assert!((d - 1e-5).abs() < 1e-8, "mu={mu} d={d}");
+        }
+    }
+
+    #[test]
+    fn gdp_and_rdp_agree_in_order_of_magnitude() {
+        // GDP (CLT) tends to be tighter than RDP; they should be within ~2x
+        // in typical fine-tuning regimes.
+        for &(q, s, t) in &[(0.01, 1.0, 2000u64), (0.05, 2.0, 500), (0.02, 1.5, 1000)] {
+            let e_gdp = epsilon(q, s, t, 1e-5);
+            let e_rdp = crate::dp::rdp::epsilon(q, s, t, 1e-5);
+            assert!(e_gdp <= e_rdp * 1.1, "gdp {e_gdp} rdp {e_rdp}");
+            assert!(e_gdp * 3.0 > e_rdp, "gdp {e_gdp} rdp {e_rdp}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_steps() {
+        assert!(epsilon(0.01, 1.0, 4000, 1e-5) > epsilon(0.01, 1.0, 1000, 1e-5));
+    }
+}

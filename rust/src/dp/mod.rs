@@ -1,0 +1,50 @@
+//! Differential-privacy substrate: accountants, calibration, clipping,
+//! noise and Poisson subsampling (everything Algorithm 1 needs outside the
+//! per-sample-gradient computation, which lives in the AOT artifacts).
+
+pub mod calibrate;
+pub mod clip;
+pub mod gdp;
+pub mod rdp;
+pub mod sampler;
+
+use crate::util::rng::ChaChaRng;
+
+/// Add sigma * R * N(0, I) to an aggregated clipped gradient (Alg. 1 line 10).
+///
+/// Called ONCE per logical Poisson batch by the coordinator (microbatches
+/// accumulate clipped sums first; noise composes per logical batch).
+pub fn add_gaussian_noise(grad: &mut [f32], sigma: f64, clip_r: f64, rng: &mut ChaChaRng) {
+    if sigma == 0.0 {
+        return;
+    }
+    let s = sigma * clip_r;
+    for g in grad.iter_mut() {
+        *g += (rng.gaussian() * s) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_has_requested_scale() {
+        let mut rng = ChaChaRng::new(0, 1);
+        let n = 100_000;
+        let mut g = vec![0.0f32; n];
+        add_gaussian_noise(&mut g, 2.0, 0.5, &mut rng); // stddev 1.0
+        let mean: f64 = g.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var: f64 = g.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn sigma_zero_is_identity() {
+        let mut rng = ChaChaRng::new(0, 1);
+        let mut g = vec![1.5f32; 8];
+        add_gaussian_noise(&mut g, 0.0, 1.0, &mut rng);
+        assert_eq!(g, vec![1.5f32; 8]);
+    }
+}

@@ -1,0 +1,76 @@
+//! Poisson subsampling (Algorithm 1, line 2).
+//!
+//! Each example independently joins the batch with probability `q`; the
+//! privacy amplification analysis of the RDP accountant assumes exactly
+//! this sampler (not shuffling!), so the trainer uses it for all DP runs.
+
+use crate::util::rng::ChaChaRng;
+
+/// Poisson sampler over dataset indices `0..n`.
+pub struct PoissonSampler {
+    pub n: usize,
+    pub q: f64,
+    rng: ChaChaRng,
+}
+
+impl PoissonSampler {
+    pub fn new(n: usize, q: f64, seed: u64) -> PoissonSampler {
+        assert!((0.0..=1.0).contains(&q), "q in [0,1]");
+        PoissonSampler { n, q, rng: ChaChaRng::new(seed, 0xB10B) }
+    }
+
+    /// One logical batch: every index independently with probability q.
+    pub fn sample(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity((self.n as f64 * self.q * 1.5) as usize + 4);
+        for i in 0..self.n {
+            if self.rng.uniform() < self.q {
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    /// Expected logical batch size.
+    pub fn expected_batch(&self) -> f64 {
+        self.n as f64 * self.q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_concentrates() {
+        let mut s = PoissonSampler::new(10_000, 0.05, 7);
+        let mut total = 0usize;
+        let rounds = 50;
+        for _ in 0..rounds {
+            let b = s.sample();
+            total += b.len();
+            // indices sorted unique in range
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+            assert!(b.iter().all(|&i| i < 10_000));
+        }
+        let mean = total as f64 / rounds as f64;
+        let expect = s.expected_batch();
+        assert!((mean - expect).abs() < expect * 0.1, "mean {mean} vs {expect}");
+    }
+
+    #[test]
+    fn q_zero_and_one() {
+        let mut s0 = PoissonSampler::new(100, 0.0, 1);
+        assert!(s0.sample().is_empty());
+        let mut s1 = PoissonSampler::new(100, 1.0, 1);
+        assert_eq!(s1.sample().len(), 100);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = PoissonSampler::new(1000, 0.1, 42);
+        let mut b = PoissonSampler::new(1000, 0.1, 42);
+        assert_eq!(a.sample(), b.sample());
+        let mut c = PoissonSampler::new(1000, 0.1, 43);
+        assert_ne!(a.sample(), c.sample());
+    }
+}

@@ -1,0 +1,27 @@
+//! # fastdp — DP-BiTFiT as a three-layer Rust + JAX + Pallas system
+//!
+//! Reproduction of *"Differentially Private Bias-Term Fine-tuning of
+//! Foundation Models"* (Bu, Wang, Zha, Karypis — ICML 2024).
+//!
+//! Layer map (see `DESIGN.md`):
+//! * [`runtime`] — loads AOT HLO artifacts (lowered once from JAX+Pallas by
+//!   `python/compile/aot.py`) and executes them via PJRT.
+//! * [`coordinator`] — the DP training orchestrator: Poisson sampling,
+//!   microbatch accumulation, noise, optimizers, two-phase scheduling.
+//! * [`dp`] — the differential-privacy substrate: RDP/GDP accountants,
+//!   noise calibration, clipping functions, Poisson sampler.
+//! * [`data`] — synthetic workload generators (GLUE/E2E/CIFAR/CelebA analogs).
+//! * [`models`] — model zoo parameter-count formulas (paper Tables 1 & 11).
+//! * [`analysis`] — per-layer time/space complexity (paper Tables 2 & 7).
+//! * [`nlg`] — BLEU / ROUGE-L / NIST / METEOR / CIDEr for Table 4/13.
+//! * [`util`] — dependency-free JSON/TOML/RNG/tensor/CLI substrates.
+
+pub mod analysis;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod dp;
+pub mod models;
+pub mod nlg;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,8 @@
+//! `fastdp` CLI entrypoint (subcommands filled in by `coordinator::cli`).
+
+fn main() {
+    if let Err(e) = fastdp::coordinator::cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,45 @@
+//! Model metadata: the published-architecture zoo (Tables 1, 11) and the
+//! specs of the small models actually trained by this repo (mirrors the
+//! python manifest; see `runtime::Manifest` for the authoritative copy).
+
+pub mod zoo;
+
+/// Short descriptor of a trained-model config used in benches.
+#[derive(Debug, Clone)]
+pub struct TrainedSpec {
+    pub name: &'static str,
+    /// Analogous published model in the paper's tables.
+    pub paper_analog: &'static str,
+    pub kind: &'static str,
+}
+
+/// The trained-model registry (must match `python/compile/aot.py::MODELS`).
+pub fn trained_specs() -> Vec<TrainedSpec> {
+    let s = |name, paper_analog, kind| TrainedSpec { name, paper_analog, kind };
+    vec![
+        s("cls-base", "RoBERTa-base", "cls"),
+        s("cls-large", "RoBERTa-large", "cls"),
+        s("cls-lora", "RoBERTa-base + LoRA", "cls"),
+        s("cls-adapter", "RoBERTa-base + Adapter", "cls"),
+        s("lm-small", "GPT2-small", "lm"),
+        s("lm-medium", "GPT2-medium", "lm"),
+        s("lm-large", "GPT2-large", "lm"),
+        s("vit-c10", "ViT-large (CIFAR10)", "vit"),
+        s("vit-c20", "ViT-large (CIFAR100)", "vit"),
+        s("cnn-small", "ResNet18 (CelebA)", "cnn"),
+        s("cnn-small-bias", "ResNet18 + bias (BiTFiT-Add)", "cnn"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_nonempty_and_unique() {
+        let specs = super::trained_specs();
+        assert!(specs.len() >= 10);
+        let mut names: Vec<_> = specs.iter().map(|s| s.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), specs.len());
+    }
+}

@@ -1,0 +1,372 @@
+//! NLG evaluation metrics for the E2E-analog generation task (paper
+//! Tables 4 and 13): BLEU, ROUGE-L, NIST, METEOR (exact-match variant),
+//! CIDEr, plus perplexity helpers.
+//!
+//! All metrics operate on pre-tokenized sequences (`&[u32]` token ids) —
+//! the same ids the LM decodes — so scores are tokenizer-consistent.
+
+use std::collections::HashMap;
+
+/// n-gram counts of a sequence.
+fn ngrams(seq: &[u32], n: usize) -> HashMap<Vec<u32>, u64> {
+    let mut m = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU-4 with brevity penalty (Papineni et al., 2002).
+///
+/// `cands[i]` is scored against the multi-reference set `refs[i]`.
+pub fn bleu(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    assert_eq!(cands.len(), refs.len());
+    let max_n = 4;
+    let mut clipped = vec![0u64; max_n];
+    let mut total = vec![0u64; max_n];
+    let (mut cand_len, mut ref_len) = (0u64, 0u64);
+    for (c, rs) in cands.iter().zip(refs) {
+        cand_len += c.len() as u64;
+        // closest reference length
+        let rl = rs
+            .iter()
+            .map(|r| r.len() as i64)
+            .min_by_key(|&l| ((l - c.len() as i64).abs(), l))
+            .unwrap_or(0);
+        ref_len += rl as u64;
+        for n in 1..=max_n {
+            let cg = ngrams(c, n);
+            let mut rmax: HashMap<Vec<u32>, u64> = HashMap::new();
+            for r in rs {
+                for (g, cnt) in ngrams(r, n) {
+                    let e = rmax.entry(g).or_insert(0);
+                    *e = (*e).max(cnt);
+                }
+            }
+            for (g, cnt) in &cg {
+                total[n - 1] += cnt;
+                clipped[n - 1] += (*cnt).min(*rmax.get(g).unwrap_or(&0));
+            }
+        }
+    }
+    let mut log_p = 0.0;
+    for n in 0..max_n {
+        if total[n] == 0 || clipped[n] == 0 {
+            return 0.0;
+        }
+        log_p += (clipped[n] as f64 / total[n] as f64).ln();
+    }
+    let bp = if cand_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / cand_len.max(1) as f64).exp()
+    };
+    100.0 * bp * (log_p / max_n as f64).exp()
+}
+
+/// Longest common subsequence length.
+fn lcs(a: &[u32], b: &[u32]) -> usize {
+    let mut dp = vec![0usize; b.len() + 1];
+    for &x in a {
+        let mut prev = 0;
+        for (j, &y) in b.iter().enumerate() {
+            let cur = dp[j + 1];
+            dp[j + 1] = if x == y { prev + 1 } else { dp[j + 1].max(dp[j]) };
+            prev = cur;
+        }
+    }
+    dp[b.len()]
+}
+
+/// Corpus ROUGE-L F-measure (Lin, 2004), beta^2 = 1.2^2 as in the E2E bench.
+pub fn rouge_l(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    let beta2 = 1.2f64 * 1.2;
+    let mut total = 0.0;
+    for (c, rs) in cands.iter().zip(refs) {
+        let mut best = 0.0f64;
+        for r in rs {
+            if c.is_empty() || r.is_empty() {
+                continue;
+            }
+            let l = lcs(c, r) as f64;
+            let (prec, rec) = (l / c.len() as f64, l / r.len() as f64);
+            if prec > 0.0 && rec > 0.0 {
+                let f = (1.0 + beta2) * prec * rec / (rec + beta2 * prec);
+                best = best.max(f);
+            }
+        }
+        total += best;
+    }
+    100.0 * total / cands.len().max(1) as f64
+}
+
+/// NIST-5 (Doddington, 2002): information-weighted n-gram precision.
+pub fn nist(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    let max_n = 5;
+    // corpus-level reference n-gram info: info(g) = log2(count(g[:-1]) / count(g))
+    let mut ref_counts: Vec<HashMap<Vec<u32>, u64>> = vec![HashMap::new(); max_n + 1];
+    let mut total_unigrams = 0u64;
+    for rs in refs {
+        for r in rs {
+            total_unigrams += r.len() as u64;
+            for n in 1..=max_n {
+                for (g, c) in ngrams(r, n) {
+                    *ref_counts[n].entry(g).or_insert(0) += c;
+                }
+            }
+        }
+    }
+    let info = |g: &[u32]| -> f64 {
+        let n = g.len();
+        let cg = *ref_counts[n].get(g).unwrap_or(&0);
+        if cg == 0 {
+            return 0.0;
+        }
+        let parent = if n == 1 {
+            total_unigrams
+        } else {
+            *ref_counts[n - 1].get(&g[..n - 1].to_vec()).unwrap_or(&1)
+        };
+        (parent as f64 / cg as f64).log2()
+    };
+    let mut score = 0.0;
+    let (mut cand_len, mut ref_len) = (0u64, 0u64);
+    for (c, rs) in cands.iter().zip(refs) {
+        cand_len += c.len() as u64;
+        let avg: f64 = rs.iter().map(|r| r.len() as f64).sum::<f64>() / rs.len().max(1) as f64;
+        ref_len += avg as u64;
+    }
+    for n in 1..=max_n {
+        let mut num = 0.0;
+        let mut den = 0u64;
+        for (c, rs) in cands.iter().zip(refs) {
+            let mut rmax: HashMap<Vec<u32>, u64> = HashMap::new();
+            for r in rs {
+                for (g, cnt) in ngrams(r, n) {
+                    let e = rmax.entry(g).or_insert(0);
+                    *e = (*e).max(cnt);
+                }
+            }
+            for (g, cnt) in ngrams(c, n) {
+                let matched = cnt.min(*rmax.get(&g).unwrap_or(&0));
+                num += matched as f64 * info(&g);
+                den += cnt;
+            }
+        }
+        if den > 0 {
+            score += num / den as f64;
+        }
+    }
+    // NIST brevity penalty
+    let ratio = cand_len as f64 / ref_len.max(1) as f64;
+    let beta = (0.5f64.ln() / (1.5f64).ln().powi(2)).abs();
+    let bp = if ratio >= 1.0 {
+        1.0
+    } else {
+        (-beta * ratio.ln().powi(2)).exp().min(1.0)
+    };
+    score * bp
+}
+
+/// METEOR, exact-match variant (Banerjee & Lavie 2005 without stemming /
+/// synonymy): harmonic mean weighted to recall with a fragmentation penalty.
+pub fn meteor(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    let mut total = 0.0;
+    for (c, rs) in cands.iter().zip(refs) {
+        let mut best = 0.0f64;
+        for r in rs {
+            best = best.max(meteor_single(c, r));
+        }
+        total += best;
+    }
+    total / cands.len().max(1) as f64
+}
+
+fn meteor_single(c: &[u32], r: &[u32]) -> f64 {
+    if c.is_empty() || r.is_empty() {
+        return 0.0;
+    }
+    // greedy left-to-right alignment on exact matches
+    let mut used = vec![false; r.len()];
+    let mut align: Vec<usize> = Vec::new(); // ref index per matched cand token
+    let mut m = 0usize;
+    for &w in c {
+        if let Some(j) = r
+            .iter()
+            .enumerate()
+            .position(|(j, &x)| x == w && !used[j])
+        {
+            used[j] = true;
+            align.push(j);
+            m += 1;
+        }
+    }
+    if m == 0 {
+        return 0.0;
+    }
+    let prec = m as f64 / c.len() as f64;
+    let rec = m as f64 / r.len() as f64;
+    let f = prec * rec / (0.9 * prec + 0.1 * rec).max(1e-12);
+    // chunks: maximal runs of consecutive alignments
+    let mut chunks = 1;
+    for w in align.windows(2) {
+        if w[1] != w[0] + 1 {
+            chunks += 1;
+        }
+    }
+    let frag = chunks as f64 / m as f64;
+    let penalty = 0.5 * frag.powi(3);
+    f * (1.0 - penalty)
+}
+
+/// CIDEr (Vedantam et al., 2015): tf-idf weighted n-gram cosine, n = 1..4.
+pub fn cider(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    let max_n = 4;
+    let n_imgs = refs.len() as f64;
+    // document frequency of each n-gram over reference *sets*
+    let mut df: Vec<HashMap<Vec<u32>, f64>> = vec![HashMap::new(); max_n + 1];
+    for rs in refs {
+        for n in 1..=max_n {
+            let mut seen: HashMap<Vec<u32>, bool> = HashMap::new();
+            for r in rs {
+                for g in ngrams(r, n).into_keys() {
+                    seen.insert(g, true);
+                }
+            }
+            for g in seen.into_keys() {
+                *df[n].entry(g).or_insert(0.0) += 1.0;
+            }
+        }
+    }
+    let tfidf = |seq: &[u32], n: usize| -> HashMap<Vec<u32>, f64> {
+        let counts = ngrams(seq, n);
+        let total: u64 = counts.values().sum();
+        counts
+            .into_iter()
+            .map(|(g, c)| {
+                let idf = (n_imgs / df[n].get(&g).copied().unwrap_or(1.0).max(1.0)).ln();
+                (g, c as f64 / total.max(1) as f64 * idf)
+            })
+            .collect()
+    };
+    let mut score = 0.0;
+    for (c, rs) in cands.iter().zip(refs) {
+        let mut sim_n = 0.0;
+        for n in 1..=max_n {
+            let vc = tfidf(c, n);
+            let norm_c: f64 = vc.values().map(|v| v * v).sum::<f64>().sqrt();
+            let mut s = 0.0;
+            for r in rs {
+                let vr = tfidf(r, n);
+                let norm_r: f64 = vr.values().map(|v| v * v).sum::<f64>().sqrt();
+                if norm_c > 0.0 && norm_r > 0.0 {
+                    let dot: f64 = vc
+                        .iter()
+                        .map(|(g, v)| v * vr.get(g).copied().unwrap_or(0.0))
+                        .sum();
+                    s += dot / (norm_c * norm_r);
+                }
+            }
+            sim_n += s / rs.len().max(1) as f64;
+        }
+        score += 10.0 * sim_n / max_n as f64;
+    }
+    score / cands.len().max(1) as f64
+}
+
+/// Perplexity from summed NLL and token count.
+pub fn perplexity(nll_sum: f64, tokens: f64) -> f64 {
+    (nll_sum / tokens.max(1.0)).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(s: &[u32]) -> Vec<u32> {
+        s.to_vec()
+    }
+
+    #[test]
+    fn bleu_perfect_and_zero() {
+        let c = vec![seq(&[1, 2, 3, 4, 5])];
+        let r = vec![vec![seq(&[1, 2, 3, 4, 5])]];
+        assert!((bleu(&c, &r) - 100.0).abs() < 1e-9);
+        let r0 = vec![vec![seq(&[9, 9, 9, 9, 9])]];
+        assert_eq!(bleu(&c, &r0), 0.0);
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_bites() {
+        // correct prefix but half length -> penalized
+        let full = vec![vec![seq(&[1, 2, 3, 4, 5, 6, 7, 8])]];
+        let short = vec![seq(&[1, 2, 3, 4])];
+        let long = vec![seq(&[1, 2, 3, 4, 5, 6, 7, 8])];
+        assert!(bleu(&short, &full) < bleu(&long, &full));
+    }
+
+    #[test]
+    fn rouge_l_known_value() {
+        // c = [1,2,3,4], r = [1,3,5,4]: LCS = 3 -> P = R = 0.75
+        let c = vec![seq(&[1, 2, 3, 4])];
+        let r = vec![vec![seq(&[1, 3, 5, 4])]];
+        let f = rouge_l(&c, &r);
+        assert!((f - 75.0).abs() < 1.0, "{f}");
+    }
+
+    #[test]
+    fn lcs_basics() {
+        assert_eq!(lcs(&[1, 2, 3], &[1, 2, 3]), 3);
+        assert_eq!(lcs(&[1, 2, 3], &[4, 5]), 0);
+        assert_eq!(lcs(&[1, 2, 3, 4], &[2, 4]), 2);
+    }
+
+    #[test]
+    fn nist_prefers_informative_matches() {
+        // two candidates, same unigram count matched; one matches a rare
+        // bigram, scoring higher information
+        let refs = vec![
+            vec![seq(&[1, 2, 3, 4])],
+            vec![seq(&[1, 2, 5, 6])],
+            vec![seq(&[1, 2, 7, 8])],
+        ];
+        let c_rare = vec![seq(&[3, 4]), seq(&[1, 2]), seq(&[1, 2])];
+        let c_common = vec![seq(&[1, 2]), seq(&[1, 2]), seq(&[1, 2])];
+        assert!(nist(&c_rare, &refs) > 0.0);
+        assert!(nist(&c_common, &refs) > 0.0);
+    }
+
+    #[test]
+    fn meteor_orders_quality() {
+        let r = vec![vec![seq(&[1, 2, 3, 4, 5])]];
+        let perfect = vec![seq(&[1, 2, 3, 4, 5])];
+        let scrambled = vec![seq(&[5, 3, 1, 4, 2])];
+        let wrong = vec![seq(&[9, 9, 9])];
+        let mp = meteor(&perfect, &r);
+        let ms = meteor(&scrambled, &r);
+        let mw = meteor(&wrong, &r);
+        assert!(mp > ms && ms > mw, "{mp} {ms} {mw}");
+        assert!(mp > 0.9);
+        assert_eq!(mw, 0.0);
+    }
+
+    #[test]
+    fn cider_rewards_consensus() {
+        let refs = vec![
+            vec![seq(&[1, 2, 3]), seq(&[1, 2, 4])],
+            vec![seq(&[5, 6, 7]), seq(&[5, 6, 8])],
+        ];
+        let good = vec![seq(&[1, 2, 3]), seq(&[5, 6, 7])];
+        let bad = vec![seq(&[9, 9, 9]), seq(&[9, 9, 9])];
+        assert!(cider(&good, &refs) > cider(&bad, &refs));
+        assert!(cider(&good, &refs) > 1.0);
+    }
+
+    #[test]
+    fn perplexity_basics() {
+        assert!((perplexity(0.0, 10.0) - 1.0).abs() < 1e-12);
+        assert!((perplexity(10.0 * 2.0f64.ln(), 10.0) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,297 @@
+//! Artifact metadata: `manifest.json`, `<name>.meta.json`, `<model>.layout.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One input/output tensor spec of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "float32" | "int32"
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    fn from_json(v: &Json) -> IoSpec {
+        IoSpec {
+            name: v.req("name").as_str().unwrap().to_string(),
+            dtype: v.req("dtype").as_str().unwrap().to_string(),
+            shape: v
+                .req("shape")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect(),
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub model: String,
+    pub method: String,
+    pub step: String,   // "train" | "eval" | "decode"
+    pub clip: Option<String>,
+    pub subset: String, // trainable subset name ("bitfit", "full", ...)
+    pub batch: usize,
+    pub pf: usize,
+    pub pt: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path, name: &str) -> Result<ArtifactMeta> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(ArtifactMeta {
+            name: v.req("name").as_str().unwrap().to_string(),
+            model: v.req("model").as_str().unwrap().to_string(),
+            method: v.req("method").as_str().unwrap().to_string(),
+            step: v.req("step").as_str().unwrap().to_string(),
+            clip: v.get("clip").and_then(|c| c.as_str()).map(|s| s.to_string()),
+            subset: v.req("subset").as_str().unwrap().to_string(),
+            batch: v.req("batch").as_usize().unwrap(),
+            pf: v.req("pf").as_usize().unwrap(),
+            pt: v.req("pt").as_usize().unwrap(),
+            inputs: v.req("inputs").as_arr().unwrap().iter().map(IoSpec::from_json).collect(),
+            outputs: v.req("outputs").as_arr().unwrap().iter().map(IoSpec::from_json).collect(),
+        })
+    }
+}
+
+/// Convenience: an artifact name + its metadata.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub meta: ArtifactMeta,
+}
+
+/// One leaf in the canonical flat parameter layout.
+#[derive(Debug, Clone)]
+pub struct LayoutLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub offset: usize,
+    pub is_head: bool,
+}
+
+/// Parsed `<model>.layout.json`: the contract that lets L3 split/merge
+/// full <-> (frozen, trainable) vectors and re-init heads (DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub model: String,
+    pub kind: String,
+    pub n_params: usize,
+    pub leaves: Vec<LayoutLeaf>,
+    pub subsets: BTreeMap<String, Vec<bool>>,
+}
+
+impl Layout {
+    pub fn load(dir: &Path, model: &str) -> Result<Layout> {
+        let path = dir.join(format!("{model}.layout.json"));
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let leaves = v
+            .req("leaves")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|l| LayoutLeaf {
+                name: l.req("name").as_str().unwrap().to_string(),
+                shape: l.req("shape").as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect(),
+                size: l.req("size").as_usize().unwrap(),
+                offset: l.req("offset").as_usize().unwrap(),
+                is_head: l.req("is_head").as_bool().unwrap(),
+            })
+            .collect();
+        let mut subsets = BTreeMap::new();
+        if let Json::Obj(m) = v.req("subsets") {
+            for (k, arr) in m {
+                subsets.insert(
+                    k.clone(),
+                    arr.as_arr().unwrap().iter().map(|b| b.as_bool().unwrap()).collect(),
+                );
+            }
+        }
+        Ok(Layout {
+            model: v.req("model").as_str().unwrap().to_string(),
+            kind: v.req("kind").as_str().unwrap().to_string(),
+            n_params: v.req("n_params").as_usize().unwrap(),
+            leaves,
+            subsets,
+        })
+    }
+
+    /// Split a full flat vector into (frozen, trainable) for a subset.
+    pub fn split(&self, full: &[f32], subset: &str) -> (Vec<f32>, Vec<f32>) {
+        let mask = &self.subsets[subset];
+        let mut frozen = Vec::new();
+        let mut train = Vec::new();
+        for (leaf, &tr) in self.leaves.iter().zip(mask) {
+            let slice = &full[leaf.offset..leaf.offset + leaf.size];
+            if tr {
+                train.extend_from_slice(slice);
+            } else {
+                frozen.extend_from_slice(slice);
+            }
+        }
+        (frozen, train)
+    }
+
+    /// Merge (frozen, trainable) back into a full flat vector.
+    pub fn merge(&self, frozen: &[f32], train: &[f32], subset: &str) -> Vec<f32> {
+        let mask = &self.subsets[subset];
+        let mut full = vec![0.0f32; self.n_params];
+        let (mut fo, mut to) = (0usize, 0usize);
+        for (leaf, &tr) in self.leaves.iter().zip(mask) {
+            let dst = &mut full[leaf.offset..leaf.offset + leaf.size];
+            if tr {
+                dst.copy_from_slice(&train[to..to + leaf.size]);
+                to += leaf.size;
+            } else {
+                dst.copy_from_slice(&frozen[fo..fo + leaf.size]);
+                fo += leaf.size;
+            }
+        }
+        debug_assert_eq!(fo, frozen.len());
+        debug_assert_eq!(to, train.len());
+        full
+    }
+
+    /// Number of trainable parameters in a subset.
+    pub fn subset_size(&self, subset: &str) -> usize {
+        self.leaves
+            .iter()
+            .zip(&self.subsets[subset])
+            .filter(|(_, &tr)| tr)
+            .map(|(l, _)| l.size)
+            .sum()
+    }
+
+    /// Copy values for head leaves from `src` full-vector into `dst`.
+    pub fn copy_head(&self, dst: &mut [f32], src: &[f32]) {
+        for leaf in self.leaves.iter().filter(|l| l.is_head) {
+            dst[leaf.offset..leaf.offset + leaf.size]
+                .copy_from_slice(&src[leaf.offset..leaf.offset + leaf.size]);
+        }
+    }
+
+    /// Copy all *non-head* leaves whose names match between two layouts
+    /// (pretrained-backbone transfer, e.g. cls-base -> cls-lora).
+    pub fn transfer_backbone(&self, dst: &mut [f32], src_layout: &Layout, src: &[f32]) {
+        let by_name: BTreeMap<&str, &LayoutLeaf> =
+            src_layout.leaves.iter().map(|l| (l.name.as_str(), l)).collect();
+        for leaf in self.leaves.iter().filter(|l| !l.is_head) {
+            if let Some(s) = by_name.get(leaf.name.as_str()) {
+                if s.size == leaf.size {
+                    dst[leaf.offset..leaf.offset + leaf.size]
+                        .copy_from_slice(&src[s.offset..s.offset + s.size]);
+                }
+            }
+        }
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: Vec<String>,
+}
+
+/// A model entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub kind: String,
+    pub n_params: usize,
+    pub cfg: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut models = BTreeMap::new();
+        if let Json::Obj(m) = v.req("models") {
+            for (k, e) in m {
+                models.insert(
+                    k.clone(),
+                    ModelEntry {
+                        kind: e.req("kind").as_str().unwrap().to_string(),
+                        n_params: e.req("n_params").as_usize().unwrap(),
+                        cfg: e.req("cfg").clone(),
+                    },
+                );
+            }
+        }
+        let artifacts = v
+            .req("artifacts")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|a| a.as_str().unwrap().to_string())
+            .collect();
+        Ok(Manifest { models, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_layout() -> Layout {
+        Layout {
+            model: "m".into(),
+            kind: "cls".into(),
+            n_params: 6,
+            leaves: vec![
+                LayoutLeaf { name: "w".into(), shape: vec![2, 2], size: 4, offset: 0, is_head: false },
+                LayoutLeaf { name: "b".into(), shape: vec![1], size: 1, offset: 4, is_head: false },
+                LayoutLeaf { name: "head/w".into(), shape: vec![1], size: 1, offset: 5, is_head: true },
+            ],
+            subsets: BTreeMap::from([
+                ("bitfit".to_string(), vec![false, true, true]),
+                ("full".to_string(), vec![true, true, true]),
+            ]),
+        }
+    }
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let l = demo_layout();
+        let full: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let (frozen, train) = l.split(&full, "bitfit");
+        assert_eq!(frozen, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(train, vec![4.0, 5.0]);
+        assert_eq!(l.merge(&frozen, &train, "bitfit"), full);
+        assert_eq!(l.subset_size("bitfit"), 2);
+        assert_eq!(l.subset_size("full"), 6);
+    }
+
+    #[test]
+    fn head_copy() {
+        let l = demo_layout();
+        let mut dst = vec![0.0f32; 6];
+        let src: Vec<f32> = (10..16).map(|i| i as f32).collect();
+        l.copy_head(&mut dst, &src);
+        assert_eq!(dst, vec![0.0, 0.0, 0.0, 0.0, 0.0, 15.0]);
+    }
+}

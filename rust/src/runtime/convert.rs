@@ -1,0 +1,66 @@
+//! Host `Tensor` <-> `xla::Literal` conversion.
+
+use anyhow::Result;
+
+use super::artifact::IoSpec;
+use crate::util::tensor::{Tensor, TensorData};
+
+/// Build an `xla::Literal` from a host tensor (f32 / i32).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        TensorData::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+/// Read a literal back into a host tensor using the artifact's output spec.
+pub fn literal_to_tensor(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+    let data = match spec.dtype.as_str() {
+        "int32" => TensorData::I32(lit.to_vec::<i32>()?),
+        _ => TensorData::F32(lit.to_vec::<f32>()?),
+    };
+    let n = match &data {
+        TensorData::F32(v) => v.len(),
+        TensorData::I32(v) => v.len(),
+    };
+    anyhow::ensure!(
+        n == spec.elements(),
+        "output {}: {} elements, spec says {:?}",
+        spec.name,
+        n,
+        spec.shape
+    );
+    Ok(Tensor { shape: spec.shape.clone(), data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = tensor_to_literal(&t).unwrap();
+        let spec = IoSpec { name: "x".into(), dtype: "float32".into(), shape: vec![2, 3] };
+        let back = literal_to_tensor(&lit, &spec).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_f32(3.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        let spec = IoSpec { name: "r".into(), dtype: "float32".into(), shape: vec![] };
+        assert_eq!(literal_to_tensor(&lit, &spec).unwrap().item_f32(), 3.5);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::i32(vec![4], vec![1, 2, 3, 4]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let spec = IoSpec { name: "x".into(), dtype: "int32".into(), shape: vec![4] };
+        assert_eq!(literal_to_tensor(&lit, &spec).unwrap().as_i32(), &[1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the hot path.
+//!
+//! This wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`.  Python is
+//! never invoked here — the artifacts under `artifacts/` are self-contained.
+//!
+//! Key perf property (EXPERIMENTS.md §Perf): inputs that do not change
+//! between steps (the frozen parameter vector, which dominates bytes) are
+//! kept **device-resident** as `PjRtBuffer`s and re-used via `execute_b`,
+//! so per-step host->device traffic is only the trainable vector + batch.
+
+mod artifact;
+mod convert;
+
+pub use artifact::{Artifact, ArtifactMeta, IoSpec, Layout, LayoutLeaf, Manifest};
+pub use convert::{literal_to_tensor, tensor_to_literal};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::util::tensor::Tensor;
+
+/// A PJRT client + executable cache over an artifact directory.
+pub struct Runtime {
+    client: Rc<xla::PjRtClient>,
+    dir: PathBuf,
+    cache: HashMap<String, Rc<Executable>>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = Rc::new(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        Ok(Runtime { client, dir, cache: HashMap::new(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load (and cache) a compiled executable by artifact name.
+    pub fn load(&mut self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let meta = ArtifactMeta::load(&self.dir, name)
+            .with_context(|| format!("loading meta for artifact {name:?}"))?;
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name:?}"))?;
+        let e = Rc::new(Executable { exe, meta, client: self.client.clone() });
+        // Warmup with zero inputs through the literal path: the first
+        // buffer-path execution (`execute_b`) on a cold process trips a
+        // pointer_size assertion inside xla_extension 0.5.1; one literal
+        // execute initializes the runtime state and also fronts lazy
+        // compilation costs so training-step timings are clean.
+        e.warmup().with_context(|| format!("warming up artifact {name:?}"))?;
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Load the parameter layout for a model.
+    pub fn layout(&self, model: &str) -> Result<Layout> {
+        Layout::load(&self.dir, model)
+    }
+
+    /// Read a model's deterministic init vector (`<model>.init.bin`).
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("{model}.init.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "init.bin not a multiple of 4 bytes");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// A device-resident input that survives across steps.
+pub struct DeviceInput {
+    buffer: xla::PjRtBuffer,
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    client: Rc<xla::PjRtClient>,
+}
+
+impl Executable {
+    /// One zero-input execution through the literal path (see `Runtime::load`).
+    fn warmup(&self) -> Result<()> {
+        let zeros: Vec<Tensor> = self
+            .meta
+            .inputs
+            .iter()
+            .map(|s| {
+                let n = s.elements();
+                if s.dtype == "int32" {
+                    Tensor::i32(s.shape.clone(), vec![0; n])
+                } else {
+                    Tensor::f32(s.shape.clone(), vec![0.0; n])
+                }
+            })
+            .collect();
+        self.run(&zeros).map(|_| ())
+    }
+
+    /// Validate tensors against the artifact's input spec (shape + dtype).
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&self.meta.inputs) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "input {} of {}: shape {:?} != expected {:?}",
+                spec.name,
+                self.meta.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns host tensors (the output tuple).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        self.collect(result)
+    }
+
+    /// Upload one input to the device for reuse across steps.
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceInput> {
+        let lit = tensor_to_literal(t)?;
+        let device = self.client.devices().into_iter().next().context("no device")?;
+        let buffer = self.client.buffer_from_host_literal(Some(&device), &lit)?;
+        Ok(DeviceInput { buffer })
+    }
+
+    /// Execute with a mix of device-resident and host inputs.
+    ///
+    /// `inputs[i]` slots that are `None` are taken from `resident` in order.
+    pub fn run_mixed(
+        &self,
+        resident: &[&DeviceInput],
+        host: &[Option<&Tensor>],
+    ) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(host.len() == self.meta.inputs.len(), "run_mixed arity");
+        let device = self.client.devices().into_iter().next().context("no device")?;
+        // NOTE: host literals must outlive execute_b — buffer_from_host_-
+        // literal may copy asynchronously, so dropping a literal before the
+        // execution is a use-after-free inside xla_extension.
+        let mut literals: Vec<xla::Literal> = Vec::new();
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // index into resident (usize::MAX => uploaded)
+        let mut ri = 0;
+        for slot in host {
+            match slot {
+                Some(t) => {
+                    let lit = tensor_to_literal(t)?;
+                    uploaded.push(self.client.buffer_from_host_literal(Some(&device), &lit)?);
+                    literals.push(lit);
+                    order.push(usize::MAX);
+                }
+                None => {
+                    anyhow::ensure!(ri < resident.len(), "not enough resident inputs");
+                    order.push(ri);
+                    ri += 1;
+                }
+            }
+        }
+        let mut up_iter = uploaded.iter();
+        let refs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|&i| {
+                if i == usize::MAX {
+                    up_iter.next().unwrap()
+                } else {
+                    &resident[i].buffer
+                }
+            })
+            .collect();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        drop(refs);
+        drop(literals); // keep host literals alive past the execution
+        self.collect(result)
+    }
+
+    fn collect(&self, result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Tensor>> {
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, spec) in parts.iter().zip(&self.meta.outputs) {
+            out.push(literal_to_tensor(p, spec)?);
+        }
+        Ok(out)
+    }
+}

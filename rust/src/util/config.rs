@@ -1,0 +1,240 @@
+//! TOML-subset parser for run configuration files.
+//!
+//! Supports: `[table]` / `[table.sub]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments, and
+//! bare/quoted keys.  That covers every config in `configs/`; exotic TOML
+//! (dates, inline tables, multiline strings) is intentionally rejected with
+//! a line-numbered error.
+
+use std::collections::BTreeMap;
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of `table.key` -> value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, String> {
+        let mut values = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty table name", lineno + 1));
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            values.insert(format!("{prefix}{key}"), val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&src)
+    }
+
+    /// Overlay CLI `--set key=value` overrides (parsed with TOML value rules).
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<(), String> {
+        let v = parse_value(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.values.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.values.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.values.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.values.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn require(&self, key: &str) -> Result<&Value, String> {
+        self.values.get(key).ok_or_else(|| format!("missing config key {key:?}"))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            out.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Arr(out));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut start, mut in_str) = (0usize, 0usize, false);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if depth == 0 && !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # training config
+            name = "quickstart"
+            [train]
+            steps = 100          # comment
+            lr = 5e-3
+            dp = true
+            eps = [1, 2, 4, 8]
+            [train.noise]
+            sigma = 1.1
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str("name", ""), "quickstart");
+        assert_eq!(cfg.i64("train.steps", 0), 100);
+        assert!((cfg.f64("train.lr", 0.0) - 5e-3).abs() < 1e-12);
+        assert!(cfg.bool("train.dp", false));
+        assert_eq!(cfg.f64("train.noise.sigma", 0.0), 1.1);
+        match cfg.values.get("train.eps").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), 4),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = Config::parse("x 1").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Config::parse("[t\nx = 1").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn string_with_hash_and_defaults() {
+        let cfg = Config::parse("s = \"a # b\"").unwrap();
+        assert_eq!(cfg.str("s", ""), "a # b");
+        assert_eq!(cfg.i64("missing", 7), 7);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = Config::parse("a = 1").unwrap();
+        cfg.set("a", "2").unwrap();
+        cfg.set("b.c", "\"hi\"").unwrap();
+        assert_eq!(cfg.i64("a", 0), 2);
+        assert_eq!(cfg.str("b.c", ""), "hi");
+    }
+}

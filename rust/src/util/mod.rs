@@ -1,0 +1,95 @@
+//! Dependency-free substrates: JSON, TOML-subset config, ChaCha20 RNG,
+//! host tensors, CLI args, table rendering, timers.
+//!
+//! This environment has no serde/clap/rand/criterion — these modules
+//! implement the subsets the system needs, each with its own unit tests.
+
+pub mod args;
+pub mod config;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod tensor;
+
+use std::time::Instant;
+
+/// A labelled wall-clock timer accumulating per-phase durations.
+#[derive(Debug, Default)]
+pub struct Timers {
+    entries: std::collections::BTreeMap<String, (f64, u64)>,
+}
+
+impl Timers {
+    pub fn new() -> Timers {
+        Timers::default()
+    }
+
+    /// Time a closure under `label`.
+    pub fn time<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(label, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Record an externally measured duration (avoids borrow conflicts on
+    /// `&mut self` hot paths).
+    pub fn add(&mut self, label: &str, seconds: f64) {
+        let e = self.entries.entry(label.to_string()).or_insert((0.0, 0));
+        e.0 += seconds;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, label: &str) -> f64 {
+        self.entries.get(label).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, label: &str) -> u64 {
+        self.entries.get(label).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// `label -> (total_seconds, calls)` report, sorted by total desc.
+    pub fn report(&self) -> Vec<(String, f64, u64)> {
+        let mut v: Vec<_> = self
+            .entries
+            .iter()
+            .map(|(k, (t, n))| (k.clone(), *t, *n))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+/// Peak resident-set size of this process in bytes (Linux, /proc).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = Timers::new();
+        let x = t.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        t.time("work", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert_eq!(t.count("work"), 2);
+        assert!(t.total("work") > 0.0);
+        assert_eq!(t.report()[0].0, "work");
+    }
+
+    #[test]
+    fn rss_readable() {
+        let rss = peak_rss_bytes().unwrap();
+        assert!(rss > 1 << 20); // more than 1 MiB
+    }
+}

@@ -1,0 +1,218 @@
+//! Integration tests over the PJRT runtime + real AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run (they are skipped with a
+//! message if `artifacts/manifest.json` is absent, so `cargo test` works in
+//! a fresh checkout).
+
+use fastdp::runtime::Runtime;
+use fastdp::util::rng::ChaChaRng;
+use fastdp::util::tensor::Tensor;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn batch_inputs(rng: &mut ChaChaRng, b: usize, t: usize, vocab: i32, n_cls: i32) -> (Tensor, Tensor) {
+    let x: Vec<i32> = (0..b * t).map(|_| 1 + (rng.next_u32() as i32).rem_euclid(vocab - 1)).collect();
+    let y: Vec<i32> = (0..b).map(|_| (rng.next_u32() as i32).rem_euclid(n_cls)).collect();
+    (Tensor::i32(vec![b, t], x), Tensor::i32(vec![b], y))
+}
+
+#[test]
+fn bitfit_step_runs_and_is_finite() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let exe = rt.load("cls-base__dp-bitfit").unwrap();
+    let meta = exe.meta.clone();
+    assert_eq!(meta.step, "train");
+    let layout = rt.layout(&meta.model).unwrap();
+    let full = rt.init_params(&meta.model).unwrap();
+    assert_eq!(full.len(), layout.n_params);
+    let (frozen, train) = layout.split(&full, &meta.subset);
+    assert_eq!(frozen.len(), meta.pf);
+    assert_eq!(train.len(), meta.pt);
+
+    let b = meta.batch;
+    let mut rng = ChaChaRng::new(0, 0);
+    let (x, y) = batch_inputs(&mut rng, b, 64, 512, 4);
+    let out = exe
+        .run(&[
+            Tensor::f32(vec![meta.pf], frozen.clone()),
+            Tensor::f32(vec![meta.pt], train.clone()),
+            x,
+            y,
+            Tensor::f32(vec![b], vec![1.0; b]),
+            Tensor::scalar_f32(1.0),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    let loss = out[0].item_f32();
+    assert!(loss.is_finite() && loss > 0.0, "loss = {loss}");
+    let grad = out[1].as_f32();
+    assert_eq!(grad.len(), meta.pt);
+    assert!(grad.iter().all(|g| g.is_finite()));
+    assert!(grad.iter().any(|&g| g != 0.0), "gradient all zero");
+    // per-sample clipped contributions have norm <= R each; sum <= B * R
+    let gnorm = fastdp::util::tensor::l2_norm(grad);
+    assert!(gnorm <= b as f64 + 1e-3, "clipped grad norm {gnorm} > B*R");
+    let sq = out[2].as_f32();
+    assert!(sq.iter().all(|&s| s.is_finite() && s >= 0.0));
+}
+
+#[test]
+fn mask_zeroes_padded_examples() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let exe = rt.load("cls-base__dp-bitfit").unwrap();
+    let meta = exe.meta.clone();
+    let layout = rt.layout(&meta.model).unwrap();
+    let full = rt.init_params(&meta.model).unwrap();
+    let (frozen, train) = layout.split(&full, &meta.subset);
+    let b = meta.batch;
+    let mut rng = ChaChaRng::new(1, 0);
+    let (x, y) = batch_inputs(&mut rng, b, 64, 512, 4);
+
+    let run = |mask: Vec<f32>| {
+        exe.run(&[
+            Tensor::f32(vec![meta.pf], frozen.clone()),
+            Tensor::f32(vec![meta.pt], train.clone()),
+            x.clone(),
+            y.clone(),
+            Tensor::f32(vec![b], mask),
+            Tensor::scalar_f32(1.0),
+        ])
+        .unwrap()
+    };
+    // all-zero mask => zero loss and zero gradient
+    let out = run(vec![0.0; b]);
+    assert_eq!(out[0].item_f32(), 0.0);
+    assert!(out[1].as_f32().iter().all(|&g| g == 0.0));
+    // half mask: grad must differ from full mask (mask participates)
+    let full_out = run(vec![1.0; b]);
+    let mut half = vec![1.0; b];
+    for m in half.iter_mut().skip(b / 2) {
+        *m = 0.0;
+    }
+    let half_out = run(half);
+    assert_ne!(full_out[1].as_f32(), half_out[1].as_f32());
+}
+
+#[test]
+fn training_reduces_loss_sgd() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let exe = rt.load("cls-base__nondp-bitfit").unwrap();
+    let meta = exe.meta.clone();
+    let layout = rt.layout(&meta.model).unwrap();
+    let full = rt.init_params(&meta.model).unwrap();
+    let (frozen, mut train) = layout.split(&full, &meta.subset);
+    let b = meta.batch;
+    let mut rng = ChaChaRng::new(2, 0);
+    let (x, y) = batch_inputs(&mut rng, b, 64, 512, 4);
+    let frozen_t = Tensor::f32(vec![meta.pf], frozen);
+    let mask = Tensor::f32(vec![b], vec![1.0; b]);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..12 {
+        let out = exe
+            .run(&[
+                frozen_t.clone(),
+                Tensor::f32(vec![meta.pt], train.clone()),
+                x.clone(),
+                y.clone(),
+                mask.clone(),
+                Tensor::scalar_f32(1.0),
+            ])
+            .unwrap();
+        last = out[0].item_f32() / b as f32;
+        first.get_or_insert(last);
+        let grad = out[1].as_f32();
+        for (p, g) in train.iter_mut().zip(grad) {
+            *p -= 0.05 * g / b as f32;
+        }
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn device_resident_frozen_params_match_host_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let exe = rt.load("cls-base__dp-bitfit").unwrap();
+    let meta = exe.meta.clone();
+    let layout = rt.layout(&meta.model).unwrap();
+    let full = rt.init_params(&meta.model).unwrap();
+    let (frozen, train) = layout.split(&full, &meta.subset);
+    let b = meta.batch;
+    let mut rng = ChaChaRng::new(3, 0);
+    let (x, y) = batch_inputs(&mut rng, b, 64, 512, 4);
+    let frozen_t = Tensor::f32(vec![meta.pf], frozen);
+    let train_t = Tensor::f32(vec![meta.pt], train);
+    let mask = Tensor::f32(vec![b], vec![1.0; b]);
+    let r = Tensor::scalar_f32(1.0);
+
+    let host_out = exe
+        .run(&[frozen_t.clone(), train_t.clone(), x.clone(), y.clone(), mask.clone(), r.clone()])
+        .unwrap();
+    let dev = exe.upload(&frozen_t).unwrap();
+    let mixed_out = exe
+        .run_mixed(
+            &[&dev],
+            &[None, Some(&train_t), Some(&x), Some(&y), Some(&mask), Some(&r)],
+        )
+        .unwrap();
+    assert_eq!(host_out[0].item_f32(), mixed_out[0].item_f32());
+    assert_eq!(host_out[1].as_f32(), mixed_out[1].as_f32());
+}
+
+#[test]
+fn eval_and_decode_artifacts_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    // eval on cls-base
+    let exe = rt.load("cls-base__eval").unwrap();
+    let meta = exe.meta.clone();
+    let full = rt.init_params(&meta.model).unwrap();
+    let b = meta.batch;
+    let mut rng = ChaChaRng::new(4, 0);
+    let (x, y) = batch_inputs(&mut rng, b, 64, 512, 4);
+    let out = exe
+        .run(&[
+            Tensor::f32(vec![0], vec![]),
+            Tensor::f32(vec![full.len()], full),
+            x,
+            y,
+            Tensor::f32(vec![b], vec![1.0; b]),
+        ])
+        .unwrap();
+    assert!(out[0].item_f32().is_finite());
+    assert!(out[1].item_f32() >= 0.0 && out[1].item_f32() <= b as f32);
+
+    // decode on lm-small
+    let exe = rt.load("lm-small__decode").unwrap();
+    let meta = exe.meta.clone();
+    let full = rt.init_params(&meta.model).unwrap();
+    let b = meta.batch;
+    let x: Vec<i32> = (0..b * 48).map(|i| (i % 383) as i32 + 1).collect();
+    let pos: Vec<i32> = (0..b as i32).map(|i| 5 + i).collect();
+    let out = exe
+        .run(&[
+            Tensor::f32(vec![0], vec![]),
+            Tensor::f32(vec![full.len()], full),
+            Tensor::i32(vec![b, 48], x),
+            Tensor::i32(vec![b], pos),
+        ])
+        .unwrap();
+    assert_eq!(out[0].shape, vec![b, 384]);
+    assert!(out[0].as_f32().iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,212 @@
+//! Property-based tests over the coordinator's invariants (a minimal
+//! seeded-random framework — no proptest crate in this environment; failing
+//! cases print their seed so they replay deterministically).
+
+use fastdp::coordinator::checkpoint::Checkpoint;
+use fastdp::coordinator::optim::{OptimKind, Optimizer};
+use fastdp::dp::clip::{clip_factor, clip_in_place, ClipMode};
+use fastdp::dp::{calibrate, gdp, rdp};
+use fastdp::runtime::{Layout, LayoutLeaf};
+use fastdp::util::json;
+use fastdp::util::rng::ChaChaRng;
+
+/// Run `f` over `n` seeded cases; failures report the failing seed.
+fn forall(n: u64, f: impl Fn(&mut ChaChaRng) + std::panic::RefUnwindSafe) {
+    for seed in 0..n {
+        let mut rng = ChaChaRng::new(seed, 0xFACADE);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if result.is_err() {
+            panic!("property failed at seed {seed}");
+        }
+    }
+}
+
+fn random_layout(rng: &mut ChaChaRng) -> (Layout, Vec<f32>) {
+    let n_leaves = 1 + rng.below(12);
+    let mut leaves = Vec::new();
+    let mut offset = 0usize;
+    for i in 0..n_leaves {
+        let size = 1 + rng.below(40);
+        leaves.push(LayoutLeaf {
+            name: format!("leaf{i}"),
+            shape: vec![size],
+            size,
+            offset,
+            is_head: i == n_leaves - 1,
+        });
+        offset += size;
+    }
+    let mask: Vec<bool> = (0..n_leaves).map(|_| rng.uniform() < 0.4).collect();
+    let mut subsets = std::collections::BTreeMap::new();
+    subsets.insert("s".to_string(), mask);
+    subsets.insert("full".to_string(), vec![true; n_leaves]);
+    let full: Vec<f32> = (0..offset).map(|_| rng.gaussian() as f32).collect();
+    (
+        Layout { model: "m".into(), kind: "cls".into(), n_params: offset, leaves, subsets },
+        full,
+    )
+}
+
+#[test]
+fn prop_layout_split_merge_roundtrips() {
+    forall(200, |rng| {
+        let (layout, full) = random_layout(rng);
+        for subset in ["s", "full"] {
+            let (frozen, train) = layout.split(&full, subset);
+            assert_eq!(frozen.len() + train.len(), full.len());
+            assert_eq!(layout.merge(&frozen, &train, subset), full);
+            assert_eq!(layout.subset_size(subset), train.len());
+        }
+    });
+}
+
+#[test]
+fn prop_clipped_vectors_never_exceed_r() {
+    forall(300, |rng| {
+        let n = 1 + rng.below(64);
+        let scale = 10f64.powf(rng.uniform() * 6.0 - 3.0);
+        let g: Vec<f32> = (0..n).map(|_| (rng.gaussian() * scale) as f32).collect();
+        let r = 0.01 + rng.uniform() * 10.0;
+        for mode in [ClipMode::Abadi, ClipMode::AutoS] {
+            let mut gc = g.clone();
+            clip_in_place(&mut gc, r, mode);
+            let norm: f64 = gc.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(norm <= r * 1.0001, "{mode:?}: {norm} > {r}");
+        }
+        // Abadi never scales up; AUTO-S factor decreases with the norm
+        let sq: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(clip_factor(sq, r, ClipMode::Abadi) <= 1.0);
+        assert!(clip_factor(sq, r, ClipMode::AutoS) <= clip_factor(sq / 4.0, r, ClipMode::AutoS));
+    });
+}
+
+#[test]
+fn prop_rdp_epsilon_monotone_and_calibration_inverts() {
+    forall(20, |rng| {
+        let q = 0.001 + rng.uniform() * 0.2;
+        let sigma = 0.5 + rng.uniform() * 4.0;
+        let steps = 50 + rng.below(2000) as u64;
+        let e = rdp::epsilon(q, sigma, steps, 1e-5);
+        assert!(rdp::epsilon(q, sigma * 1.5, steps, 1e-5) <= e + 1e-12);
+        assert!(rdp::epsilon(q, sigma, steps * 2, 1e-5) >= e - 1e-12);
+        assert!(rdp::epsilon(q, sigma, steps, 1e-3) <= e + 1e-12); // looser delta
+        if e > 0.05 {
+            let s2 = calibrate::calibrate_sigma(q, steps, e, 1e-5);
+            assert!((s2 - sigma).abs() / sigma < 0.05, "sigma {sigma} -> {s2}");
+        }
+        let eg = gdp::epsilon(q, sigma, steps, 1e-5);
+        assert!(eg <= e * 1.15 + 0.05, "gdp {eg} rdp {e}");
+    });
+}
+
+#[test]
+fn prop_gaussian_noise_is_unbiased_and_scaled() {
+    forall(8, |rng| {
+        let sigma = 0.5 + rng.uniform() * 2.0;
+        let r = 0.05 + rng.uniform();
+        let n = 30_000;
+        let mut g = vec![0.0f32; n];
+        let mut noise_rng = ChaChaRng::new(rng.next_u64(), 1);
+        fastdp::dp::add_gaussian_noise(&mut g, sigma, r, &mut noise_rng);
+        let mean: f64 = g.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var: f64 = g.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        let want = (sigma * r).powi(2);
+        assert!(mean.abs() < 4.0 * (want / n as f64).sqrt() + 1e-3);
+        assert!((var - want).abs() / want < 0.1, "var {var} want {want}");
+    });
+}
+
+#[test]
+fn prop_optimizers_descend_quadratics() {
+    forall(30, |rng| {
+        let kind = match rng.below(3) {
+            0 => OptimKind::Sgd,
+            1 => OptimKind::Adam,
+            _ => OptimKind::AdamW,
+        };
+        let n = 1 + rng.below(8);
+        let target: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        let mut p = vec![0.0f32; n];
+        let mut o = Optimizer::new(kind, 0.05, n);
+        let loss = |p: &[f32]| -> f64 {
+            p.iter().zip(&target).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        let l0 = loss(&p).max(1e-6);
+        for _ in 0..300 {
+            let grad: Vec<f32> = p.iter().zip(&target).map(|(a, b)| 2.0 * (a - b)).collect();
+            o.step(&mut p, &grad);
+        }
+        assert!(loss(&p) < l0 * 0.2 + 1e-2, "{kind:?} did not descend");
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_random_documents() {
+    fn random_json(rng: &mut ChaChaRng, depth: usize) -> json::Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.uniform() < 0.5),
+            2 => json::Json::Num((rng.gaussian() * 100.0).round()),
+            3 => json::Json::Str(format!("s{}", rng.next_u32())),
+            4 => json::Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => json::Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(200, |rng| {
+        let doc = random_json(rng, 3);
+        let text = json::write(&doc);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    });
+}
+
+#[test]
+fn prop_checkpoints_roundtrip_and_reject_any_flip() {
+    forall(20, |rng| {
+        let n = 1 + rng.below(500);
+        let ck = Checkpoint {
+            model: format!("m{}", rng.below(100)),
+            step: rng.next_u64() % 10_000,
+            params: (0..n).map(|_| rng.gaussian() as f32).collect(),
+        };
+        let path = std::env::temp_dir().join(format!(
+            "fastdp-prop-{}-{}",
+            std::process::id(),
+            rng.next_u32()
+        ));
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        // flip one random payload byte -> must be rejected (CRC)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let header = 4 + 4 + 4 + ck.model.len() + 8 + 8;
+        if bytes.len() > header + 4 {
+            let i = header + rng.below(bytes.len() - header - 4);
+            bytes[i] ^= 1 << rng.below(8);
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(Checkpoint::load(&path).is_err(), "corruption not detected");
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_poisson_sampler_marginals() {
+    // each index included with probability ~q; nothing deterministic
+    let n = 2000;
+    let q = 0.1;
+    let mut counts = vec![0u32; n];
+    let rounds = 300;
+    let mut s = fastdp::dp::sampler::PoissonSampler::new(n, q, 99);
+    for _ in 0..rounds {
+        for i in s.sample() {
+            counts[i] += 1;
+        }
+    }
+    let mean = counts.iter().map(|&c| c as f64).sum::<f64>() / n as f64 / rounds as f64;
+    assert!((mean - q).abs() < 0.01, "marginal {mean}");
+    assert!(counts.iter().all(|&c| c < rounds as u32));
+}
