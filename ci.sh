@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# CI for the fastdp Rust workspace: format check, lints, then tier-1
+# (build + tests).  Everything runs offline — dependencies are vendored
+# under rust/vendor/.
+#
+# Usage: ./ci.sh [--no-fmt] [--no-clippy]
+
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+run_fmt=1
+run_clippy=1
+for arg in "$@"; do
+    case "$arg" in
+        --no-fmt) run_fmt=0 ;;
+        --no-clippy) run_clippy=0 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
+
+if [ "$run_fmt" = 1 ]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "==> cargo fmt --check"
+        cargo fmt --all -- --check
+    else
+        echo "==> cargo fmt unavailable (rustfmt not installed); skipping"
+    fi
+fi
+
+if [ "$run_clippy" = 1 ]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "==> cargo clippy -D warnings"
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "==> cargo clippy unavailable; skipping"
+    fi
+fi
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+echo "CI OK"

@@ -1,100 +1,93 @@
-//! End-to-end driver (DESIGN.md deliverable): proves all three layers
-//! compose on a real small workload.
+//! End-to-end driver: proves all layers compose on a real small workload,
+//! exclusively through `fastdp::engine`.
 //!
 //! 1. Non-private **pretraining** of the GPT-2-analog transformer LM on a
-//!    synthetic corpus for a few hundred steps (loss curve logged).
+//!    synthetic corpus (loss curve logged via the engine's metric sink).
 //! 2. **DP-BiTFiT fine-tuning** (Algorithm 1) on the E2E-analog
-//!    MR-to-utterance task at eps = 8: Poisson sampling, in-graph per-sample
-//!    clipping through the Pallas kernels, rust-side noise + Adam.
-//! 3. **Generation**: batched greedy decoding through the decode artifact,
+//!    MR-to-utterance task at eps = 8: Poisson sampling, in-step per-sample
+//!    clipping, engine-side noise + AdamW.
+//! 3. **Generation**: batched greedy decoding through the decode step,
 //!    scored with BLEU / ROUGE-L / NIST / METEOR / CIDEr + perplexity.
-//!
-//! The loss curves land in `artifacts/runs/e2e_*.jsonl`; the whole run is
-//! recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example dp_training_e2e`
 
 use anyhow::Result;
 use fastdp::coordinator::decode::greedy_decode;
-use fastdp::coordinator::metrics::JsonlSink;
-use fastdp::coordinator::optim::OptimKind;
 use fastdp::coordinator::pretrain::{pretrained_params, PretrainSpec};
-use fastdp::coordinator::trainer::{evaluate_params, Trainer, TrainerConfig};
-use fastdp::coordinator::workloads;
 use fastdp::data::synth_text;
-use fastdp::dp::calibrate;
+use fastdp::engine::{Engine, JobSpec, Method, OptimKind};
 use fastdp::nlg;
-use fastdp::runtime::Runtime;
 
-fn env_usize(k: &str, d: usize) -> usize {
+fn env_u64(k: &str, d: u64) -> u64 {
     std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(d)
 }
 
 fn main() -> Result<()> {
     let model = "lm-large";
-    let pre_steps = env_usize("E2E_PRETRAIN_STEPS", 300);
-    let ft_steps = env_usize("E2E_FINETUNE_STEPS", 120);
-    let mut rt = Runtime::open("artifacts")?;
+    let pre_steps = env_u64("E2E_PRETRAIN_STEPS", 300) as usize;
+    let ft_steps = env_u64("E2E_FINETUNE_STEPS", 120);
+    let mut engine = Engine::auto("artifacts");
+    println!("backend: {}", engine.backend_name());
     std::fs::create_dir_all("artifacts/runs").ok();
+    engine.set_metrics_dir("artifacts/runs");
 
     // --- phase 1: pretrain the LM (non-private, public corpus) -----------
     let mut spec = PretrainSpec::new(model, "pretrain-lm");
     spec.steps = pre_steps;
     spec.batch = 64;
     spec.lr = 1e-3;
-    let params = pretrained_params(&mut rt, &spec, false)?;
+    let params = pretrained_params(&mut engine, &spec, false)?;
 
-    let eval_exe = rt.load(&format!("{model}__eval"))?;
-    let (test_data, test_gen) = workloads::build_e2e(&rt, model, 256, 21)?;
-    let (nll, toks, _) = evaluate_params(&eval_exe, &params, &test_data, 256)?;
-    println!("pretrained perplexity on E2E-analog: {:.2}", nlg::perplexity(nll, toks));
+    let (test_data, test_gen) = engine.dataset_e2e(model, 256, 21)?;
+    let pre_eval = engine.evaluate(model, &params, &test_data, 256)?;
+    println!("pretrained perplexity on E2E-analog: {:.2}", pre_eval.perplexity());
 
     // --- phase 2: DP-BiTFiT fine-tune on the private generation task -----
     let n = 4096;
-    let (train_data, _) = workloads::build_e2e(&rt, model, n, 22)?;
-    let (batch, eps, delta) = (256, 8.0, 1e-5);
-    let sigma = calibrate::calibrate_sigma(batch as f64 / n as f64, ft_steps as u64, eps, delta);
-    println!("fine-tuning with DP-BiTFiT: sigma = {sigma:.3}, target eps = {eps}");
-
-    let mut tc = TrainerConfig::new(&format!("{model}__dp-bitfit"));
-    tc.logical_batch = batch;
-    tc.lr = 1e-2; // paper Table 9: BiTFiT lr 1e-2 on E2E
-    tc.optim = OptimKind::AdamW;
-    tc.clip_r = 0.1;
-    tc.sigma = sigma;
-    tc.delta = delta;
-    let mut trainer = Trainer::new(&mut rt, tc, train_data.len(), Some(params))?;
-    let mut sink = JsonlSink::create("artifacts/runs/e2e_finetune.jsonl")?;
+    let (train_data, _) = engine.dataset_e2e(model, n, 22)?;
+    let ft = JobSpec::builder(model, Method::BiTFiT)
+        .task("e2e")
+        .eps(8.0)
+        .delta(1e-5)
+        .optim(OptimKind::AdamW)
+        .lr(1e-2) // paper Table 9: BiTFiT lr 1e-2 on E2E
+        .clip_r(0.1)
+        .batch(256)
+        .steps(ft_steps)
+        .n_train(n)
+        .name("e2e_finetune")
+        .build()?;
+    let mut session = engine.session_from(&ft, params)?;
+    let n_params = engine.model_info(model)?.n_params;
     println!(
-        "trainable: {} bias params of {} total ({:.3}%)",
-        trainer.trainable_len(),
-        rt.manifest.models[model].n_params,
-        100.0 * trainer.trainable_len() as f64 / rt.manifest.models[model].n_params as f64
+        "fine-tuning with DP-BiTFiT: sigma = {:.3}, target eps = 8\ntrainable: {} bias params of {} total ({:.3}%)",
+        session.privacy_spent().sigma,
+        session.trainable_len(),
+        n_params,
+        100.0 * session.trainable_len() as f64 / n_params as f64
     );
     for i in 0..ft_steps {
-        let s = trainer.train_step(&train_data)?;
-        sink.step(s.step, s.loss, s.epsilon)?;
+        let s = session.run_step(&train_data)?;
         if i % 20 == 0 || i + 1 == ft_steps {
             println!("ft step {:>4}  loss {:.4}  eps {:.3}", s.step, s.loss, s.epsilon);
         }
     }
-    let tuned = trainer.full_params();
-    let eps_spent = trainer.accountant.as_ref().unwrap().epsilon().0;
+    let tuned = session.full_params();
+    let eps_spent = session.privacy_spent().epsilon;
 
     // --- phase 3: generate + score ---------------------------------------
-    let (nll, toks, _) = evaluate_params(&eval_exe, &tuned, &test_data, 256)?;
-    println!("fine-tuned perplexity: {:.2}", nlg::perplexity(nll, toks));
+    let post_eval = session.evaluate(&test_data, 256)?;
+    println!("fine-tuned perplexity: {:.2}", post_eval.perplexity());
 
-    let dec = rt.load(&format!("{model}__decode"))?;
+    let dec = engine.decoder(model)?;
     let n_gen = 64.min(test_gen.len());
-    let prompts: Vec<Vec<i32>> = test_gen[..n_gen]
-        .iter()
-        .map(|g| g.lm.input[..g.prompt_len].to_vec())
-        .collect();
-    let hyps = greedy_decode(&dec, &tuned, &prompts, 32, fastdp::data::tokenizer::EOS)?;
+    let prompts: Vec<Vec<i32>> =
+        test_gen[..n_gen].iter().map(|g| g.lm.input[..g.prompt_len].to_vec()).collect();
+    let hyps = greedy_decode(dec.as_ref(), &tuned, &prompts, 32, fastdp::data::tokenizer::EOS)?;
     let refs: Vec<Vec<Vec<u32>>> = test_gen[..n_gen].iter().map(|g| g.references.clone()).collect();
     println!("--- sample generations ---");
-    let tok = synth_text::tokenizer(384);
+    let vocab = engine.model_info(model)?.shape.vocab;
+    let tok = synth_text::tokenizer(vocab);
     for g in hyps.iter().take(3) {
         let ids: Vec<i32> = g.iter().map(|&t| t as i32).collect();
         println!("  {}", tok.decode(&ids));
@@ -107,6 +100,6 @@ fn main() -> Result<()> {
         nlg::meteor(&hyps, &refs),
         nlg::cider(&hyps, &refs),
     );
-    println!("privacy spent: eps = {eps_spent:.2} at delta = {delta}");
+    println!("privacy spent: eps = {eps_spent:.2} at delta = 1e-5");
     Ok(())
 }

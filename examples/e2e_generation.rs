@@ -1,22 +1,23 @@
 //! Generation method comparison on the E2E-analog (paper Table 4, one
-//! model): DP vs non-private, full vs BiTFiT, with all five NLG metrics.
+//! model): DP vs non-private, full vs BiTFiT, with all five NLG metrics —
+//! driven entirely through `fastdp::engine` + the shared bench harness.
 //!
 //! Run: `cargo run --release --example e2e_generation`
 
 use anyhow::Result;
 use fastdp::bench::{self, FtJob};
 use fastdp::coordinator::decode::greedy_decode;
-use fastdp::coordinator::workloads;
 use fastdp::data::tokenizer::EOS;
+use fastdp::engine::Engine;
 use fastdp::nlg;
-use fastdp::runtime::Runtime;
 use fastdp::util::table::Table;
 
 fn main() -> Result<()> {
     let model = "lm-medium";
     let steps = std::env::var("GEN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40usize);
-    let mut rt = Runtime::open("artifacts")?;
-    let (_, test_gen) = workloads::build_e2e(&rt, model, 48, 61)?;
+    let mut engine = Engine::auto("artifacts");
+    println!("backend: {}", engine.backend_name());
+    let (_, test_gen) = engine.dataset_e2e(model, 48, 61)?;
     let prompts: Vec<Vec<i32>> =
         test_gen.iter().map(|g| g.lm.input[..g.prompt_len].to_vec()).collect();
     let refs: Vec<Vec<Vec<u32>>> = test_gen.iter().map(|g| g.references.clone()).collect();
@@ -31,9 +32,9 @@ fn main() -> Result<()> {
         let mut job = FtJob::new(model, method, "e2e");
         job.steps = steps;
         job.lr = if method.contains("bitfit") { 1e-2 } else { 1e-3 };
-        let (out, params) = bench::finetune(&mut rt, &job)?;
-        let dec = rt.load(&format!("{model}__decode"))?;
-        let hyps = greedy_decode(&dec, &params, &prompts, 28, EOS)?;
+        let (out, params) = bench::finetune(&mut engine, &job)?;
+        let dec = engine.decoder(model)?;
+        let hyps = greedy_decode(dec.as_ref(), &params, &prompts, 28, EOS)?;
         t.row(vec![
             label.into(),
             privacy.into(),

@@ -1,63 +1,58 @@
 //! DP image classification with a ViT (paper §4.3 / Table 5 / Figure 5):
 //! pretrain on a shifted rendering distribution, then DP fine-tune on the
 //! CIFAR-analog under a sweep of privacy budgets, comparing DP-BiTFiT
-//! against DP last-layer (linear probing).
+//! against DP last-layer (linear probing) — all through `fastdp::engine`.
 //!
 //! Run: `cargo run --release --example image_classification`
 
 use anyhow::Result;
-use fastdp::coordinator::optim::OptimKind;
-use fastdp::coordinator::pretrain::{pretrained_params, reset_head, PretrainSpec};
-use fastdp::coordinator::trainer::{evaluate_params, Trainer, TrainerConfig};
-use fastdp::coordinator::workloads;
-use fastdp::dp::calibrate;
-use fastdp::runtime::Runtime;
+use fastdp::coordinator::pretrain::{pretrained_params, PretrainSpec};
+use fastdp::engine::{Engine, JobSpec, Method, OptimKind};
 use fastdp::util::table::Table;
 
 fn main() -> Result<()> {
-    let steps: usize = std::env::var("IMG_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
+    let steps: u64 = std::env::var("IMG_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
     let model = "vit-c10";
-    let mut rt = Runtime::open("artifacts")?;
+    let mut engine = Engine::auto("artifacts");
+    println!("backend: {}", engine.backend_name());
 
     let mut spec = PretrainSpec::new(model, "cifar-pretrain");
     spec.steps = 120;
     spec.lr = 1e-3;
-    let pre = pretrained_params(&mut rt, &spec, false)?;
+    let pre = pretrained_params(&mut engine, &spec, false)?;
 
     let n = 4096;
-    let train = workloads::build(&rt, model, "cifar", n, 31)?;
-    let test = workloads::build(&rt, model, "cifar", 1024, 32)?;
-    let eval_exe = rt.load(&format!("{model}__eval"))?;
+    let train = engine.dataset(model, "cifar", n, 31)?;
+    let test = engine.dataset(model, "cifar", 1024, 32)?;
 
     let mut table = Table::new(&["eps", "DP last-layer", "DP-BiTFiT"]);
     for eps in [1.0, 2.0, 4.0, 8.0] {
         let mut row = vec![format!("{eps}")];
-        for (artifact, lr) in [
-            (format!("{model}__dp-lastlayer"), 5e-3),
-            (format!("{model}__dp-bitfit"), 5e-3),
-        ] {
+        for method in [Method::LastLayer, Method::BiTFiT] {
             let mut params = pre.clone();
-            reset_head(&rt, model, &mut params)?;
-            let batch = 256;
-            let sigma =
-                calibrate::calibrate_sigma(batch as f64 / n as f64, steps as u64, eps, 1e-5);
-            let mut tc = TrainerConfig::new(&artifact);
-            tc.logical_batch = batch;
-            tc.lr = lr;
-            tc.optim = OptimKind::Adam;
-            tc.clip_r = 0.1;
-            tc.sigma = sigma;
-            let mut t = Trainer::new(&mut rt, tc, train.len(), Some(params))?;
+            engine.reset_head(model, &mut params)?;
+            let job = JobSpec::builder(model, method)
+                .task("cifar")
+                .eps(eps)
+                .delta(1e-5)
+                .optim(OptimKind::Adam)
+                .lr(5e-3)
+                .clip_r(0.1)
+                .batch(256)
+                .steps(steps)
+                .n_train(n)
+                .build()?;
+            let mut session = engine.session_from(&job, params)?;
             for _ in 0..steps {
-                t.train_step(&train)?;
+                session.run_step(&train)?;
             }
-            let (_, correct, n_eval) = evaluate_params(&eval_exe, &t.full_params(), &test, 1024)?;
-            row.push(format!("{:.1}%", 100.0 * correct / n_eval as f64));
+            let out = session.evaluate(&test, 1024)?;
+            row.push(format!("{:.1}%", 100.0 * out.accuracy()));
         }
         table.row(row);
         println!("finished eps sweep point");
     }
-    println!("\nDP ViT on CIFAR-analog ({} steps each, paper Table 5 shape):", steps);
+    println!("\nDP ViT on CIFAR-analog ({steps} steps each, paper Table 5 shape):");
     table.print();
     Ok(())
 }

@@ -1,69 +1,75 @@
-//! Quickstart: DP-BiTFiT fine-tuning in ~40 lines of driver code.
+//! Quickstart: DP-BiTFiT fine-tuning through `fastdp::engine` in ~40 lines.
 //!
 //! Pretrains a small RoBERTa-analog encoder on a public synthetic corpus
-//! (cached), then privately fine-tunes ONLY the bias terms + head on an
-//! SST2-analog sentiment task at (eps = 8, delta = 1e-5), evaluating before
-//! and after.
+//! (cached when the backend has a disk home), then privately fine-tunes ONLY
+//! the bias terms + head on an SST2-analog sentiment task at
+//! (eps = 8, delta = 1e-5), evaluating before and after.
+//!
+//! Runs on the PJRT backend when `artifacts/` exists, else on the built-in
+//! reference interpreter — same code either way.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
-use fastdp::coordinator::optim::OptimKind;
-use fastdp::coordinator::pretrain::{pretrained_params, reset_head, PretrainSpec};
-use fastdp::coordinator::trainer::{evaluate_params, Trainer, TrainerConfig};
-use fastdp::coordinator::workloads;
-use fastdp::dp::calibrate;
-use fastdp::runtime::Runtime;
+use fastdp::coordinator::pretrain::{pretrained_params, PretrainSpec};
+use fastdp::engine::{Engine, JobSpec, Method, OptimKind};
 
 fn main() -> Result<()> {
-    let steps = std::env::var("QUICKSTART_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(60usize);
-    let mut rt = Runtime::open("artifacts")?;
+    let steps: u64 =
+        std::env::var("QUICKSTART_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let mut engine = Engine::auto("artifacts");
+    println!("backend: {}", engine.backend_name());
 
-    // 1. pretrained backbone (cached under artifacts/pretrained/)
-    let mut params = pretrained_params(&mut rt, &PretrainSpec::new("cls-base", "pretrain-cls"), false)?;
-    reset_head(&rt, "cls-base", &mut params)?; // new task, new head (§4.3)
+    // 1. pretrained backbone, then a fresh head for the new task (§4.3)
+    let mut params = pretrained_params(&mut engine, &PretrainSpec::new("cls-base", "pretrain-cls"), false)?;
+    engine.reset_head("cls-base", &mut params)?;
 
     // 2. the "private" downstream dataset
     let n = 4096;
-    let train = workloads::build(&rt, "cls-base", "sst2", n, 11)?;
-    let test = workloads::build(&rt, "cls-base", "sst2", 1024, 12)?;
-    let eval_exe = rt.load("cls-base__eval")?;
+    let train = engine.dataset("cls-base", "sst2", n, 11)?;
+    let test = engine.dataset("cls-base", "sst2", 1024, 12)?;
 
-    let (_, acc0, _) = evaluate_params(&eval_exe, &params, &test, 1024)?;
-    println!("pre-finetune accuracy: {:.1}%", 100.0 * acc0 / 1024.0);
+    let before = engine.evaluate("cls-base", &params, &test, 1024)?;
+    println!("pre-finetune accuracy: {:.1}%", 100.0 * before.accuracy());
 
-    // 3. DP-BiTFiT at (eps = 8, delta = 1e-5)
-    let (batch, eps, delta) = (256, 8.0, 1e-5);
-    let sigma = calibrate::calibrate_sigma(batch as f64 / n as f64, steps as u64, eps, delta);
-    println!("DP plan: sigma = {sigma:.3}, q = {:.3}, {steps} steps", batch as f64 / n as f64);
-
-    let mut tc = TrainerConfig::new("cls-base__dp-bitfit");
-    tc.logical_batch = batch;
-    tc.lr = 5e-3; // BiTFiT wants ~10x the full-finetuning lr (paper Table 8)
-    tc.optim = OptimKind::Adam;
-    tc.clip_r = 0.1;
-    tc.sigma = sigma;
-    tc.delta = delta;
-    let mut trainer = Trainer::new(&mut rt, tc, train.len(), Some(params))?;
+    // 3. DP-BiTFiT at (eps = 8, delta = 1e-5) — sigma is calibrated for us
+    let spec = JobSpec::builder("cls-base", Method::BiTFiT)
+        .task("sst2")
+        .eps(8.0)
+        .delta(1e-5)
+        .optim(OptimKind::Adam)
+        .lr(5e-3) // BiTFiT wants ~10x the full-finetuning lr (paper Table 8)
+        .clip_r(0.1)
+        .batch(256)
+        .steps(steps)
+        .n_train(n)
+        .seed(11)
+        .build()?;
+    let mut session = engine.session_from(&spec, params)?;
+    let n_params = engine.model_info("cls-base")?.n_params;
+    let plan = session.privacy_spent();
+    println!("DP plan: sigma = {:.3}, q = {:.3}, {steps} steps", plan.sigma, plan.q);
     println!(
         "trainable: {} of {} params ({:.3}%)",
-        trainer.trainable_len(),
-        rt.manifest.models["cls-base"].n_params,
-        100.0 * trainer.trainable_len() as f64 / rt.manifest.models["cls-base"].n_params as f64
+        session.trainable_len(),
+        n_params,
+        100.0 * session.trainable_len() as f64 / n_params as f64
     );
     for i in 0..steps {
-        let s = trainer.train_step(&train)?;
+        let s = session.run_step(&train)?;
         if i % 10 == 0 || i + 1 == steps {
             println!("step {:>4}  loss {:.4}  eps-spent {:.3}", s.step, s.loss, s.epsilon);
         }
     }
 
-    let (_, acc1, _) = evaluate_params(&eval_exe, &trainer.full_params(), &test, 1024)?;
-    let eps_spent = trainer.accountant.as_ref().unwrap().epsilon().0;
+    let after = session.evaluate(&test, 1024)?;
+    let spent = session.privacy_spent();
     println!(
-        "DP-BiTFiT accuracy: {:.1}% (was {:.1}%) at eps = {eps_spent:.2}, delta = {delta}",
-        100.0 * acc1 / 1024.0,
-        100.0 * acc0 / 1024.0
+        "DP-BiTFiT accuracy: {:.1}% (was {:.1}%) at eps = {:.2}, delta = {}",
+        100.0 * after.accuracy(),
+        100.0 * before.accuracy(),
+        spent.epsilon,
+        spent.delta
     );
     Ok(())
 }

@@ -1,29 +1,26 @@
 //! Two-phase X+BiTFiT training (paper App. A.2.2, Tables 14/15):
-//! X steps of DP full fine-tuning followed by DP-BiTFiT, interpolating
-//! between the two methods while the RDP accountant composes across the
-//! phase switch.
+//! X steps of DP full fine-tuning followed by DP-BiTFiT.  The engine runs
+//! both phases inside ONE session — the RDP accountant composes across the
+//! phase switch automatically.
 //!
 //! Run: `cargo run --release --example two_phase`
 
 use anyhow::Result;
-use fastdp::coordinator::phase::{run_two_phase, TwoPhaseConfig};
-use fastdp::coordinator::pretrain::{pretrained_params, reset_head, PretrainSpec};
-use fastdp::coordinator::trainer::{evaluate_params, TrainerConfig};
-use fastdp::coordinator::workloads;
+use fastdp::coordinator::pretrain::{pretrained_params, PretrainSpec};
 use fastdp::dp::calibrate;
-use fastdp::runtime::Runtime;
+use fastdp::engine::{Engine, JobSpec, Method};
 use fastdp::util::table::Table;
 
 fn main() -> Result<()> {
     let total: u64 = std::env::var("TP_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
     let model = "cls-base";
-    let mut rt = Runtime::open("artifacts")?;
-    let pre = pretrained_params(&mut rt, &PretrainSpec::new(model, "pretrain-cls"), false)?;
+    let mut engine = Engine::auto("artifacts");
+    println!("backend: {}", engine.backend_name());
+    let pre = pretrained_params(&mut engine, &PretrainSpec::new(model, "pretrain-cls"), false)?;
 
     let n = 4096;
-    let train = workloads::build(&rt, model, "mnli", n, 41)?;
-    let test = workloads::build(&rt, model, "mnli", 1024, 42)?;
-    let eval_exe = rt.load(&format!("{model}__eval"))?;
+    let train = engine.dataset(model, "mnli", n, 41)?;
+    let test = engine.dataset(model, "mnli", 1024, 42)?;
 
     let batch = 256;
     let sigma = calibrate::calibrate_sigma(batch as f64 / n as f64, total, 3.0, 1e-5);
@@ -32,28 +29,28 @@ fn main() -> Result<()> {
     let mut table = Table::new(&["schedule", "accuracy", "eps spent"]);
     for x in [0u64, total / 8, total / 4, total] {
         let mut params = pre.clone();
-        reset_head(&rt, model, &mut params)?;
-        let mut base = TrainerConfig::new("unused");
-        base.logical_batch = batch;
-        base.clip_r = 0.1;
-        base.sigma = sigma;
-        base.seed = 5;
-        let cfg = TwoPhaseConfig {
-            full_artifact: format!("{model}__dp-full-ghost"),
-            bitfit_artifact: format!("{model}__dp-bitfit"),
-            full_steps: x,
-            total_steps: total,
-            full_lr: 5e-4,
-            bitfit_lr: 5e-3,
-            base,
-        };
-        let res = run_two_phase(&mut rt, &cfg, &train, params, |_phase, _s| {})?;
-        let (_, correct, n_eval) = evaluate_params(&eval_exe, &res.params, &test, 1024)?;
+        engine.reset_head(model, &mut params)?;
+        let job = JobSpec::builder(model, Method::TwoPhase { full_steps: x, full_lr: 5e-4 })
+            .task("mnli")
+            .sigma(sigma)
+            .delta(1e-5)
+            .lr(5e-3) // phase-2 (BiTFiT) lr; the paper tunes phases separately
+            .clip_r(0.1)
+            .batch(batch)
+            .steps(total)
+            .n_train(n)
+            .seed(5)
+            .build()?;
+        let mut session = engine.session_from(&job, params)?;
+        for _ in 0..total {
+            session.run_step(&train)?;
+        }
+        let out = session.evaluate(&test, 1024)?;
         let label = if x == total { "DP full".to_string() } else { format!("{x}+BiTFiT") };
         table.row(vec![
             label,
-            format!("{:.1}%", 100.0 * correct / n_eval as f64),
-            format!("{:.2}", res.epsilon),
+            format!("{:.1}%", 100.0 * out.accuracy()),
+            format!("{:.2}", session.privacy_spent().epsilon),
         ]);
         println!("finished schedule x = {x}");
     }

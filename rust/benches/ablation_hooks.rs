@@ -1,15 +1,15 @@
 //! Paper §3 ablation (RoBERTa/QQP waterfall): DP full fine-tuning ->
 //! freeze weight grads -> remove forward hooks (activation-free) -> larger
 //! batch.  Our functional analog measures the same waterfall as step time
-//! per example on the QQP-analog artifacts.
+//! per example on the QQP-analog steps.
 use fastdp::bench;
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
-    println!("## §3 ablation — where DP-BiTFiT's speedup comes from (cls-base)\n");
-    // waterfall stages mapped to artifacts:
+    let mut engine = Engine::auto("artifacts");
+    println!("## §3 ablation — where DP-BiTFiT's speedup comes from (cls-base, {} backend)\n", engine.backend_name());
+    // waterfall stages mapped to steps:
     //   full DP (GhostClip)            = dp-full-ghost
     //   no weight grads, acts stored   = dp-lastlayer (head-only grads, forward residuals kept)
     //   activation-free bias training  = dp-bitfit
@@ -23,7 +23,7 @@ fn main() {
     let mut t = Table::new(&["stage", "ms/example", "vs full"]);
     let mut base = None;
     for (label, artifact) in stages {
-        let s = bench::step_time(&mut rt, artifact, 3).unwrap() * 1e3;
+        let s = bench::step_time(&mut engine, artifact, 3).unwrap() * 1e3;
         let b = *base.get_or_insert(s);
         t.row(vec![label.into(), format!("{s:.2}"), format!("{:.0}%", 100.0 * s / b)]);
     }

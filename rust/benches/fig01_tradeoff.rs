@@ -1,13 +1,13 @@
 //! Paper Figure 1: accuracy / time / memory trade-off of DP fine-tuning
 //! methods on the MNLI-analog task with the RoBERTa-base analog.
 use fastdp::bench::{self, FtJob};
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let steps = bench::bench_steps(30);
-    println!("## Figure 1 — accuracy vs time vs memory on MNLI-analog ({} ft steps)\n", steps);
+    println!("## Figure 1 — accuracy vs time vs memory on MNLI-analog ({steps} ft steps)\n");
     let methods: Vec<(&str, &str)> = vec![
         ("cls-base", "dp-full-ghost"),
         ("cls-lora", "dp-lora"),
@@ -19,8 +19,8 @@ fn main() {
     for (model, method) in methods {
         let mut job = FtJob::new(model, method, "mnli");
         job.steps = steps;
-        let (out, _) = bench::finetune(&mut rt, &job).unwrap();
-        let mem = bench::memory_estimate(&rt, model, method, 256).unwrap();
+        let (out, _) = bench::finetune(&mut engine, &job).unwrap();
+        let mem = bench::memory_estimate(&engine, model, method, 256).unwrap();
         t.row(vec![
             method.into(),
             format!("{:.1}%", 100.0 * out.accuracy),

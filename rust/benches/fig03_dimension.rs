@@ -2,18 +2,18 @@
 //! image resolution (bottom).  DP-BiTFiT's overhead is flat in T; GhostClip
 //! grows ~T^2; Opacus grows with the activation footprint.
 use fastdp::bench;
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let methods = ["nondp-full", "dp-bitfit", "dp-full-opacus", "dp-full-ghost"];
     println!("## Figure 3 (top) — SST2-analog step time vs sequence length T (ms/example)\n");
     let mut t = Table::new(&["T", "non-DP full", "DP-BiTFiT", "DP Opacus", "DP GhostClip"]);
     for tt in [32usize, 64, 128, 256] {
         let mut row = vec![tt.to_string()];
-        for m in ["nondp-full", "dp-bitfit", "dp-full-opacus", "dp-full-ghost"] {
-            let s = bench::step_time(&mut rt, &format!("cls-t{tt}__{m}"), 2).unwrap();
+        for m in methods {
+            let s = bench::step_time(&mut engine, &format!("cls-t{tt}__{m}"), 2).unwrap();
             row.push(format!("{:.2}", s * 1e3));
         }
         t.row(row);
@@ -25,7 +25,7 @@ fn main() {
     for r in [16usize, 32, 64] {
         let mut row = vec![format!("{r}x{r}")];
         for m in methods {
-            let s = bench::step_time(&mut rt, &format!("cnn-r{r}__{m}"), 2).unwrap();
+            let s = bench::step_time(&mut engine, &format!("cnn-r{r}__{m}"), 2).unwrap();
             row.push(format!("{:.2}", s * 1e3));
         }
         t.row(row);

@@ -1,23 +1,27 @@
 //! Paper Figure 4: max throughput and max batch size vs model size
 //! (GPT2-small/medium/large analogs).  Max batch comes from the analytic
 //! memory model under a fixed budget; throughput is measured at the
-//! artifact's microbatch size.
+//! step's microbatch size.
 use fastdp::analysis::complexity::Network;
 use fastdp::bench;
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     println!("## Figure 4 — throughput (examples/s, measured) & max batch (16 GB budget, modeled)\n");
     let mut t = Table::new(&["model", "method", "examples/s", "max batch @16GB"]);
     for model in ["lm-small", "lm-medium", "lm-large"] {
-        let shape = fastdp::coordinator::workloads::model_shape(&rt, model).unwrap();
-        let entry = &rt.manifest.models[model];
-        let g = |k: &str| entry.cfg.get(k).and_then(|v| v.as_usize()).unwrap_or(1) as u64;
-        let net = Network::uniform(g("layers") as usize, 1, shape.t as u64, g("d"), g("d"));
+        let info = engine.model_info(model).unwrap();
+        let net = Network::uniform(
+            info.layers.max(1),
+            1,
+            info.shape.t.max(1) as u64,
+            info.d.max(16) as u64,
+            info.d.max(16) as u64,
+        );
         for m in ["nondp-full", "dp-full-ghost", "dp-bitfit", "nondp-bitfit"] {
-            let s = bench::step_time(&mut rt, &format!("{model}__{m}"), 2).unwrap();
+            let s = bench::step_time(&mut engine, &format!("{model}__{m}"), 2).unwrap();
             let max_b = net.max_batch(bench::parse_method(m), 16 << 30);
             t.row(vec![
                 model.into(),

@@ -1,4 +1,5 @@
 //! Paper Tables 1 & 11: parameter efficiency of (DP-)BiTFiT across models.
+use fastdp::engine::Engine;
 use fastdp::models::zoo;
 use fastdp::util::table::Table;
 
@@ -15,20 +16,20 @@ fn main() {
         ]);
     }
     t.print();
-    // our trained small models, from the manifest layouts
-    if let Ok(rt) = fastdp::runtime::Runtime::open("artifacts") {
-        println!("\ntrained models in this repo (bias+head subset = DP-BiTFiT trainables):\n");
-        let mut t = Table::new(&["model", "params", "% trainable (bitfit)"]);
-        for (name, entry) in &rt.manifest.models {
-            if let Ok(layout) = rt.layout(name) {
-                let bits = layout.subset_size("bitfit");
-                t.row(vec![
-                    name.clone(),
-                    entry.n_params.to_string(),
-                    format!("{:.3}", 100.0 * bits as f64 / entry.n_params as f64),
-                ]);
-            }
-        }
-        t.print();
+    // the serving backend's models (bias+head subset = DP-BiTFiT trainables)
+    let engine = Engine::auto("artifacts");
+    println!("\nmodels served by the {} backend:\n", engine.backend_name());
+    let mut t = Table::new(&["model", "params", "% trainable (bitfit)"]);
+    for name in engine.models() {
+        let (Ok(info), Ok(layout)) = (engine.model_info(&name), engine.layout(&name)) else {
+            continue;
+        };
+        let bits = layout.subset_size("bitfit");
+        t.row(vec![
+            name.clone(),
+            info.n_params.to_string(),
+            format!("{:.3}", 100.0 * bits as f64 / info.n_params.max(1) as f64),
+        ]);
     }
+    t.print();
 }

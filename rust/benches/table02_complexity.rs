@@ -1,8 +1,9 @@
 //! Paper Tables 2 & 7: per-layer time/space complexity per method, plus a
 //! measured cross-check that the predicted step-time ORDERING holds on the
-//! real artifacts (cls-base, one microbatch).
+//! serving backend (cls-base, one microbatch).
 use fastdp::analysis::complexity::{layer_complexity, LayerDims, Method};
 use fastdp::bench;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
@@ -29,13 +30,13 @@ fn main() {
     println!("\nkey paper ratios: non-DP full / DP-BiTFiT time = 1.5x, DP full / DP-BiTFiT > 2x,");
     println!("DP-BiTFiT overhead (+3Bp time, +Bp space) is independent of T.\n");
 
-    // measured cross-check on the real artifacts
-    let Ok(mut rt) = fastdp::runtime::Runtime::open("artifacts") else { return };
-    println!("measured ms/example (cls-base artifacts, one microbatch):\n");
+    // measured cross-check on the serving backend
+    let mut engine = Engine::auto("artifacts");
+    println!("measured ms/example (cls-base, one microbatch, {} backend):\n", engine.backend_name());
     let mut t = Table::new(&["artifact", "ms/example"]);
     let mut times = std::collections::BTreeMap::new();
     for m in ["nondp-bitfit", "dp-bitfit", "nondp-full", "dp-full-opacus", "dp-full-ghost"] {
-        let s = bench::step_time(&mut rt, &format!("cls-base__{m}"), 3).unwrap();
+        let s = bench::step_time(&mut engine, &format!("cls-base__{m}"), 3).unwrap();
         times.insert(m.to_string(), s);
         t.row(vec![m.into(), format!("{:.2}", s * 1e3)]);
     }

@@ -1,10 +1,10 @@
 //! Paper Table 3: GLUE accuracy of fine-tuning methods under eps = 8.
 use fastdp::bench::{self, FtJob};
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let steps = bench::bench_steps(25);
     let tasks: &[&str] = if bench::quick() { &["sst2", "mnli"] } else { &["sst2", "qnli", "qqp", "mnli"] };
     let methods: Vec<(&str, &str, &str)> = vec![
@@ -16,7 +16,7 @@ fn main() {
         ("BiTFiT (std)", "cls-base", "nondp-bitfit"),
         ("BiTFiT (DP)", "cls-base", "dp-bitfit"),
     ];
-    println!("## Table 3 — accuracy on GLUE-analog tasks, eps = 8 ({steps} ft steps)\n");
+    println!("## Table 3 — accuracy on GLUE-analog tasks, eps = 8 ({steps} ft steps, {} backend)\n", engine.backend_name());
     let mut header = vec!["method"];
     header.extend(tasks);
     let mut t = Table::new(&header);
@@ -25,7 +25,7 @@ fn main() {
         for task in tasks {
             let mut job = FtJob::new(model, method, task);
             job.steps = steps;
-            let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+            let (out, _) = bench::finetune(&mut engine, &job).unwrap();
             row.push(format!("{:.1}", 100.0 * out.accuracy));
             eprintln!("done {label} / {task}: {:.1}% (eps {:.1})", 100.0 * out.accuracy, out.eps_spent);
         }
@@ -41,7 +41,7 @@ fn main() {
             for task in ["sst2", "mnli"] {
                 let mut job = FtJob::new("cls-large", method, task);
                 job.steps = steps;
-                let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+                let (out, _) = bench::finetune(&mut engine, &job).unwrap();
                 row.push(format!("{:.1}", 100.0 * out.accuracy));
                 eprintln!("done large {label} / {task}");
             }

@@ -2,20 +2,19 @@
 //! perplexity + BLEU/ROUGE-L/NIST/METEOR/CIDEr for full vs BiTFiT, DP & std.
 use fastdp::bench::{self, FtJob};
 use fastdp::coordinator::decode::greedy_decode;
-use fastdp::coordinator::workloads;
 use fastdp::data::tokenizer::EOS;
+use fastdp::engine::Engine;
 use fastdp::nlg;
-use fastdp::runtime::Runtime;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let steps = bench::bench_steps(40);
     let models: &[&str] = if bench::quick() { &["lm-small"] } else { &["lm-small", "lm-medium", "lm-large"] };
-    println!("## Table 4 — E2E-analog generation ({steps} ft steps, greedy decode)\n");
+    println!("## Table 4 — E2E-analog generation ({steps} ft steps, greedy decode, {} backend)\n", engine.backend_name());
     let mut t = Table::new(&["model", "method", "privacy", "ppl", "BLEU", "ROUGE-L", "NIST", "METEOR", "CIDEr"]);
     for model in models {
-        let (_, test_gen) = workloads::build_e2e(&rt, model, 64, 77).unwrap();
+        let (_, test_gen) = engine.dataset_e2e(model, 64, 77).unwrap();
         let prompts: Vec<Vec<i32>> = test_gen.iter().map(|g| g.lm.input[..g.prompt_len].to_vec()).collect();
         let refs: Vec<Vec<Vec<u32>>> = test_gen.iter().map(|g| g.references.clone()).collect();
         for (method, label, privacy) in [
@@ -27,10 +26,10 @@ fn main() {
             let mut job = FtJob::new(model, method, "e2e");
             job.steps = steps;
             job.lr = if method.contains("bitfit") { 1e-2 } else { 1e-3 };
-            let (out, params) = bench::finetune(&mut rt, &job).unwrap();
+            let (out, params) = bench::finetune(&mut engine, &job).unwrap();
             let ppl = nlg::perplexity(out.metric_a, out.metric_b);
-            let dec = rt.load(&format!("{model}__decode")).unwrap();
-            let hyps = greedy_decode(&dec, &params, &prompts, 28, EOS).unwrap();
+            let dec = engine.decoder(model).unwrap();
+            let hyps = greedy_decode(dec.as_ref(), &params, &prompts, 28, EOS).unwrap();
             t.row(vec![
                 model.to_string(),
                 label.into(),

@@ -1,11 +1,11 @@
 //! Paper Table 5 + Figure 5: DP ViT on CIFAR-analogs across privacy budgets
 //! (DP last-layer vs DP-BiTFiT vs DP full).
 use fastdp::bench::{self, FtJob};
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let steps = bench::bench_steps(30);
     let epss: &[f64] = if bench::quick() { &[2.0, 8.0] } else { &[1.0, 2.0, 4.0, 8.0] };
     for (model, label) in [("vit-c10", "CIFAR10-analog"), ("vit-c20", "CIFAR100-analog")] {
@@ -18,7 +18,7 @@ fn main() {
                 let mut job = FtJob::new(model, method, "cifar");
                 job.steps = steps;
                 job.eps = eps;
-                let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+                let (out, _) = bench::finetune(&mut engine, &job).unwrap();
                 row.push(format!("{:.1}", 100.0 * out.accuracy));
                 eprintln!("done {model} {method} eps={eps}");
             }

@@ -1,11 +1,11 @@
 //! Paper Tables 6 & 16: CelebA-analog multi-label classification with the
 //! bias-less CNN — last-layer vs BiTFiT vs BiTFiT-Add (§3.4) vs DP full.
 use fastdp::bench::{self, FtJob};
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let steps = bench::bench_steps(40);
     println!("## Table 6 — CelebA-analog multi-label (mean attr accuracy), eps = 8, {steps} steps\n");
     let mut t = Table::new(&["method", "model", "accuracy"]);
@@ -20,7 +20,7 @@ fn main() {
         let mut job = FtJob::new(model, method, "celeba");
         job.steps = steps;
         job.lr = if method.contains("full") { 1e-3 } else { 8e-3 }; // paper Table 10
-        let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+        let (out, _) = bench::finetune(&mut engine, &job).unwrap();
         t.row(vec![label.into(), model.into(), format!("{:.2}%", 100.0 * out.accuracy)]);
         eprintln!("done {label}");
     }

@@ -1,27 +1,26 @@
 //! Paper Table 12: Abadi clipping vs AUTO-S clipping, full vs BiTFiT,
 //! eps in {3, 8} on the SST2-analog.
 use fastdp::bench::{self, FtJob};
-use fastdp::runtime::Runtime;
+use fastdp::dp::clip::ClipMode;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let steps = bench::bench_steps(25);
     println!("## Table 12 — clipping-function ablation on SST2-analog ({steps} steps)\n");
     let mut t = Table::new(&["method", "clip", "eps=3", "eps=8"]);
     for (label, method) in [("full (DP)", "dp-full-ghost"), ("BiTFiT (DP)", "dp-bitfit")] {
-        for clip in ["abadi", "autos"] {
-            let mut row = vec![label.to_string(), clip.to_string()];
+        for clip in [ClipMode::Abadi, ClipMode::AutoS] {
+            let mut row = vec![label.to_string(), clip.name().to_string()];
             for eps in [3.0, 8.0] {
                 let mut job = FtJob::new("cls-base", method, "sst2");
                 job.steps = steps;
                 job.eps = eps;
-                if clip == "autos" {
-                    job.clip_mode_suffix = Some("autos".into());
-                }
-                let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+                job.clip_mode = clip;
+                let (out, _) = bench::finetune(&mut engine, &job).unwrap();
                 row.push(format!("{:.1}", 100.0 * out.accuracy));
-                eprintln!("done {label} {clip} eps={eps}");
+                eprintln!("done {label} {} eps={eps}", clip.name());
             }
             t.row(row);
         }

@@ -1,49 +1,52 @@
-//! Paper Tables 14/15: two-phase X+BiTFiT interpolation (App. A.2.2).
+//! Paper Tables 14/15: two-phase X+BiTFiT interpolation (App. A.2.2),
+//! running both phases inside one engine session.
 use fastdp::bench;
-use fastdp::coordinator::phase::{run_two_phase, TwoPhaseConfig};
-use fastdp::coordinator::pretrain::{pretrained_params, reset_head, PretrainSpec};
-use fastdp::coordinator::trainer::{evaluate_params, TrainerConfig};
-use fastdp::coordinator::workloads;
+use fastdp::coordinator::pretrain::{pretrained_params, PretrainSpec};
 use fastdp::dp::calibrate;
-use fastdp::runtime::Runtime;
+use fastdp::engine::{Engine, JobSpec, Method};
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let total = bench::bench_steps(32) as u64;
     let model = "vit-c10";
     println!("## Tables 14/15 — X+BiTFiT on CIFAR-analog ({model}, {total} total steps, eps = 2)\n");
     let mut spec = PretrainSpec::new(model, "cifar-pretrain");
-    spec.steps = 120; spec.lr = 1e-3;
-    let pre = pretrained_params(&mut rt, &spec, true).unwrap();
+    spec.steps = 120;
+    spec.lr = 1e-3;
+    let pre = pretrained_params(&mut engine, &spec, true).unwrap();
     let n = 4096;
-    let train = workloads::build(&rt, model, "cifar", n, 51).unwrap();
-    let test = workloads::build(&rt, model, "cifar", 1024, 52).unwrap();
-    let eval_exe = rt.load(&format!("{model}__eval")).unwrap();
+    let train = engine.dataset(model, "cifar", n, 51).unwrap();
+    let test = engine.dataset(model, "cifar", 1024, 52).unwrap();
     let batch = 256;
     let sigma = calibrate::calibrate_sigma(batch as f64 / n as f64, total, 2.0, 1e-5);
     let mut t = Table::new(&["schedule", "accuracy", "eps"]);
     let xs: Vec<u64> = vec![0, total / 8, total / 4, total];
     for x in xs {
         let mut params = pre.clone();
-        reset_head(&rt, model, &mut params).unwrap();
-        let mut base = TrainerConfig::new("unused");
-        base.logical_batch = batch;
-        base.clip_r = 0.1;
-        base.sigma = sigma;
-        let cfg = TwoPhaseConfig {
-            full_artifact: format!("{model}__dp-full-ghost"),
-            bitfit_artifact: format!("{model}__dp-bitfit"),
-            full_steps: x,
-            total_steps: total,
-            full_lr: 1e-3,
-            bitfit_lr: 5e-3,
-            base,
-        };
-        let res = run_two_phase(&mut rt, &cfg, &train, params, |_p, _s| {}).unwrap();
-        let (_, correct, n_eval) = evaluate_params(&eval_exe, &res.params, &test, 1024).unwrap();
+        engine.reset_head(model, &mut params).unwrap();
+        let job = JobSpec::builder(model, Method::TwoPhase { full_steps: x, full_lr: 1e-3 })
+            .task("cifar")
+            .sigma(sigma)
+            .delta(1e-5)
+            .lr(5e-3) // phase-2 (BiTFiT) lr
+            .clip_r(0.1)
+            .batch(batch)
+            .steps(total)
+            .n_train(n)
+            .build()
+            .unwrap();
+        let mut session = engine.session_from(&job, params).unwrap();
+        for _ in 0..total {
+            session.run_step(&train).unwrap();
+        }
+        let out = session.evaluate(&test, 1024).unwrap();
         let label = if x == total { "DP full".into() } else { format!("{x}+BiTFiT") };
-        t.row(vec![label, format!("{:.1}%", 100.0 * correct / n_eval as f64), format!("{:.2}", res.epsilon)]);
+        t.row(vec![
+            label,
+            format!("{:.1}%", 100.0 * out.accuracy()),
+            format!("{:.2}", session.privacy_spent().epsilon),
+        ]);
         eprintln!("done x={x}");
     }
     t.print();

@@ -1,11 +1,11 @@
 //! Paper Table 17: learning-rate robustness — BiTFiT's optimum sits ~10x
 //! higher than full fine-tuning's, and tuning is no harder.
 use fastdp::bench::{self, FtJob};
-use fastdp::runtime::Runtime;
+use fastdp::engine::Engine;
 use fastdp::util::table::Table;
 
 fn main() {
-    let mut rt = Runtime::open("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::auto("artifacts");
     let steps = bench::bench_steps(25);
     println!("## Table 17 — SST2-analog accuracy vs learning rate, eps = 8 ({steps} steps)\n");
     let lrs = [5e-4, 1e-3, 2e-3, 5e-3, 1e-2];
@@ -16,7 +16,7 @@ fn main() {
             let mut job = FtJob::new("cls-base", method, "sst2");
             job.steps = steps;
             job.lr = lr;
-            let (out, _) = bench::finetune(&mut rt, &job).unwrap();
+            let (out, _) = bench::finetune(&mut engine, &job).unwrap();
             row.push(format!("{:.1}", 100.0 * out.accuracy));
             eprintln!("done {method} lr={lr}");
         }

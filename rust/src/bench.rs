@@ -1,4 +1,5 @@
-//! Shared bench harness: fine-tune-and-evaluate jobs + step timing.
+//! Shared bench harness: fine-tune-and-evaluate jobs + step timing, all on
+//! top of `fastdp::engine` (so every bench runs against either backend).
 //!
 //! Every `benches/*.rs` target regenerates one paper table/figure through
 //! these helpers.  Wall-clock scale is controlled by env vars so the same
@@ -6,14 +7,10 @@
 //!   FASTDP_BENCH_STEPS  — fine-tuning steps per run (default 30)
 //!   FASTDP_BENCH_QUICK  — set to skip the slowest sweep points
 
-use anyhow::Result;
-
 use crate::coordinator::optim::OptimKind;
-use crate::coordinator::pretrain::{pretrained_params, reset_head, PretrainSpec};
-use crate::coordinator::trainer::{evaluate_params, Trainer, TrainerConfig};
-use crate::coordinator::workloads;
-use crate::dp::calibrate;
-use crate::runtime::Runtime;
+use crate::coordinator::pretrain::{pretrained_params, PretrainSpec};
+use crate::dp::clip::ClipMode;
+use crate::engine::{Engine, EngineError, JobSpec, Method};
 use crate::util::tensor::Tensor;
 
 pub fn bench_steps(default: usize) -> usize {
@@ -28,15 +25,16 @@ pub fn quick() -> bool {
 #[derive(Debug, Clone)]
 pub struct FtJob {
     pub model: String,
-    pub artifact: String,
+    /// Artifact method fragment, e.g. `dp-bitfit` / `nondp-full`.
+    pub method: String,
     pub task: String,
     pub pretrain_task: String,
     pub steps: usize,
     pub batch: usize,
     pub lr: f64,
-    /// Target epsilon; 0.0 => non-private.
+    /// Target epsilon for `dp-*` methods (ignored for `nondp-*`).
     pub eps: f64,
-    pub clip_mode_suffix: Option<String>,
+    pub clip_mode: ClipMode,
     pub seed: u64,
     pub n_train: usize,
     pub n_eval: usize,
@@ -52,25 +50,43 @@ impl FtJob {
         };
         FtJob {
             model: model.to_string(),
-            artifact: format!("{model}__{method}"),
+            method: method.to_string(),
             task: task.to_string(),
             pretrain_task: pretrain_task.to_string(),
             steps: bench_steps(30),
             batch: 128,
             lr: if method.contains("bitfit") || method.contains("lastlayer") { 5e-3 } else { 5e-4 },
             eps: if method.starts_with("dp-") { 8.0 } else { 0.0 },
-            clip_mode_suffix: None,
+            clip_mode: ClipMode::Abadi,
             seed: 3,
             n_train: 4096,
             n_eval: 1024,
         }
     }
 
-    fn artifact_name(&self) -> String {
-        match &self.clip_mode_suffix {
-            Some(s) => format!("{}__{s}", self.artifact),
-            None => self.artifact.clone(),
+    /// Translate into an engine `JobSpec`.
+    pub fn spec(&self) -> Result<JobSpec, EngineError> {
+        let (method, private) = Method::parse(&self.method)
+            .ok_or_else(|| EngineError::spec(format!("unknown method {:?}", self.method)))?;
+        let mut b = JobSpec::builder(&self.model, method)
+            .task(&self.task)
+            .optim(if self.task == "e2e" { OptimKind::AdamW } else { OptimKind::Adam })
+            .lr(self.lr)
+            .clip_r(0.1)
+            .clip_mode(self.clip_mode)
+            .batch(self.batch)
+            .steps(self.steps.max(1) as u64)
+            .n_train(self.n_train)
+            .seed(self.seed);
+        if private {
+            b = if self.eps > 0.0 {
+                b.eps(self.eps).delta(1e-5)
+            } else {
+                // DP pipeline (Poisson sampling, clipping) with no noise
+                b.sigma(0.0).delta(1e-5)
+            };
         }
+        b.build()
     }
 }
 
@@ -88,7 +104,7 @@ pub struct FtOutcome {
 /// Pretrain (cached) -> reset head -> fine-tune -> evaluate.
 ///
 /// Returns the outcome and the fine-tuned full parameter vector.
-pub fn finetune(rt: &mut Runtime, job: &FtJob) -> Result<(FtOutcome, Vec<f32>)> {
+pub fn finetune(engine: &mut Engine, job: &FtJob) -> Result<(FtOutcome, Vec<f32>), EngineError> {
     let mut spec = PretrainSpec::new(&job.model, &job.pretrain_task);
     if job.pretrain_task == "celeba" {
         // CelebA runs fine-tune from scratch-ish backbone (paper uses
@@ -96,63 +112,46 @@ pub fn finetune(rt: &mut Runtime, job: &FtJob) -> Result<(FtOutcome, Vec<f32>)> 
         // attribute distribution with a different seed)
         spec.seed = 17;
     }
-    let mut params = pretrained_params(rt, &spec, true)?;
+    let mut params = pretrained_params(engine, &spec, true)?;
     if job.task != "e2e" {
-        reset_head(rt, &job.model, &mut params)?;
+        engine.reset_head(&job.model, &mut params)?;
     }
-    let train = workloads::build(rt, &job.model, &job.task, job.n_train, job.seed * 100 + 1)?;
-    let test = workloads::build(rt, &job.model, &job.task, job.n_eval, job.seed * 100 + 2)?;
-    let eval_exe = rt.load(&format!("{}__eval", job.model))?;
+    let train = engine.dataset(&job.model, &job.task, job.n_train, job.seed * 100 + 1)?;
+    let test = engine.dataset(&job.model, &job.task, job.n_eval, job.seed * 100 + 2)?;
 
-    let mut tc = TrainerConfig::new(&job.artifact_name());
-    tc.logical_batch = job.batch;
-    tc.lr = job.lr;
-    tc.optim = if job.task == "e2e" { OptimKind::AdamW } else { OptimKind::Adam };
-    tc.clip_r = 0.1;
-    tc.seed = job.seed;
-    if job.eps > 0.0 {
-        tc.sigma = calibrate::calibrate_sigma(
-            job.batch as f64 / job.n_train as f64,
-            job.steps as u64,
-            job.eps,
-            1e-5,
-        );
-    }
-    let mut t = Trainer::new(rt, tc, train.len(), Some(params))?;
+    let job_spec = job.spec()?;
+    let mut session = engine.session_from(&job_spec, params)?;
     let t0 = std::time::Instant::now();
     for _ in 0..job.steps {
-        t.train_step(&train)?;
+        session.run_step(&train)?;
     }
     let sec_per_step = t0.elapsed().as_secs_f64() / job.steps.max(1) as f64;
-    let eps_spent = t.accountant.as_ref().map(|a| a.epsilon().0).unwrap_or(0.0);
-    let full = t.full_params();
-    let (a, b, n) = evaluate_params(&eval_exe, &full, &test, job.n_eval)?;
+    let eps_spent = session.privacy_spent().epsilon;
+    let out = session.evaluate(&test, job.n_eval)?;
     Ok((
         FtOutcome {
-            metric_a: a,
-            metric_b: b,
-            accuracy: b / n.max(1) as f64,
+            metric_a: out.metric_a,
+            metric_b: out.metric_b,
+            accuracy: out.accuracy(),
             eps_spent,
             sec_per_step,
         },
-        full,
+        session.full_params(),
     ))
 }
 
-/// Measure seconds per microbatch execution of a train artifact (init
-/// params, synthetic batch, `iters` timed runs after one warmup).
-pub fn step_time(rt: &mut Runtime, artifact: &str, iters: usize) -> Result<f64> {
-    let exe = rt.load(artifact)?;
-    let meta = exe.meta.clone();
-    let layout = rt.layout(&meta.model)?;
-    let full = rt.init_params(&meta.model)?;
+/// Measure seconds per microbatch example of a train step (init params,
+/// synthetic batch, `iters` timed runs after one warmup).
+pub fn step_time(engine: &mut Engine, artifact: &str, iters: usize) -> Result<f64, EngineError> {
+    let step = engine.runner(artifact)?;
+    let meta = step.meta().clone();
+    let layout = engine.layout(&meta.model)?;
+    let full = engine.init_params(&meta.model)?;
     let (frozen, train) = layout.split(&full, &meta.subset);
     let b = meta.batch;
     let inputs: Vec<Tensor> = {
-        let mut v = vec![
-            Tensor::f32(vec![meta.pf], frozen),
-            Tensor::f32(vec![meta.pt], train),
-        ];
+        let mut v =
+            vec![Tensor::f32(vec![meta.pf], frozen), Tensor::f32(vec![meta.pt], train)];
         for spec in &meta.inputs[2..] {
             let n = spec.elements();
             if spec.dtype == "int32" {
@@ -165,25 +164,31 @@ pub fn step_time(rt: &mut Runtime, artifact: &str, iters: usize) -> Result<f64> 
         }
         v
     };
-    exe.run(&inputs)?; // warmup
+    step.run(&inputs)?; // warmup
     let t0 = std::time::Instant::now();
     for _ in 0..iters {
-        exe.run(&inputs)?;
+        step.run(&inputs)?;
     }
     Ok(t0.elapsed().as_secs_f64() / iters.max(1) as f64 / b as f64)
 }
 
 /// Estimated training memory (bytes) for one of our trained models under a
 /// method, via the analytical model of `analysis::complexity`.
-pub fn memory_estimate(rt: &Runtime, model: &str, method: &str, b: u64) -> Result<u64> {
-    let shape = workloads::model_shape(rt, model)?;
-    let entry = &rt.manifest.models[model];
-    let cfg = &entry.cfg;
-    let g = |k: &str| cfg.get(k).and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+pub fn memory_estimate(
+    engine: &Engine,
+    model: &str,
+    method: &str,
+    b: u64,
+) -> Result<u64, EngineError> {
+    let info = engine.model_info(model)?;
+    let shape = &info.shape;
     let (t, d, layers) = match shape.kind.as_str() {
-        "cls" | "lm" => (g("t"), g("d"), g("layers")),
-        "vit" => ((g("img") / g("patch")).pow(2) + 1, g("d"), g("layers")),
-        _ => (g("img").pow(2), 32, 3),
+        "cls" | "lm" => (shape.t as u64, info.d as u64, info.layers as u64),
+        "vit" => {
+            let patch = info.patch.max(1) as u64;
+            (((shape.img as u64) / patch).pow(2).max(1) + 1, info.d as u64, info.layers as u64)
+        }
+        _ => ((shape.img as u64).pow(2), 32, 3),
     };
     let net = crate::analysis::complexity::Network::uniform(
         layers.max(1) as usize,

@@ -1,37 +1,41 @@
-//! The `fastdp` command-line interface.
+//! The `fastdp` command-line interface — a thin translator from flags/TOML
+//! into `engine::JobSpec`s.  All execution goes through `fastdp::engine`.
 //!
 //! Subcommands:
-//!   train       — run a (DP) fine-tuning job from a TOML config / flags
-//!   eval        — evaluate a checkpoint with a model's eval artifact
+//!   train       — run a (DP) fine-tuning job (`--dry-run` prints the plan)
+//!   eval        — evaluate a checkpoint with a model's eval step
 //!   accountant  — query the RDP/GDP accountants or calibrate sigma
 //!   zoo         — print the Table 1/11 parameter-efficiency table
 //!   complexity  — print the Table 2/7 complexity table
-//!   artifacts   — list AOT artifacts in the artifact directory
+//!   artifacts   — list the steps the selected backend can serve
 
 use anyhow::{Context, Result};
 
-use super::checkpoint::Checkpoint;
-use super::metrics::JsonlSink;
-use super::optim::{LrSchedule, OptimKind};
-use super::trainer::{evaluate_params, Trainer, TrainerConfig};
-use super::workloads;
-use crate::analysis::complexity::{layer_complexity, LayerDims, Method};
+use crate::analysis::complexity::{layer_complexity, LayerDims, Method as CMethod};
+use crate::dp::clip::ClipMode;
 use crate::dp::{calibrate, gdp, rdp};
+use crate::engine::{evaluate_params, Engine, JobSpec, LrSchedule, Method, OptimKind};
 use crate::util::args::Args;
 use crate::util::config::Config;
 use crate::util::table::Table;
 
+use super::metrics::JsonlSink;
+
 const USAGE: &str = "usage: fastdp <train|eval|accountant|zoo|complexity|artifacts>
-  train      --artifact cls-base__dp-bitfit [--task sst2] [--steps N] [--batch N]
-             [--lr F] [--eps F | --sigma F] [--delta F] [--clip F] [--optim adam]
-             [--n N] [--seed N] [--pretrained ckpt] [--save ckpt] [--log out.jsonl]
-             [--config cfg.toml] [--artifacts DIR]
+  train      --model cls-base --method bitfit [--task sst2] [--steps N] [--batch N]
+             [--lr F] [--eps F | --sigma F] [--delta F] [--clip F] [--clip-mode abadi|autos]
+             [--optim sgd|adam|adamw] [--warmup N] [--n N] [--seed N]
+             [--full-steps N --full-lr F]            (method two-phase)
+             [--pretrained ckpt] [--save ckpt] [--log out.jsonl]
+             [--config cfg.toml] [--set k=v]... [--artifacts DIR]
+             [--backend auto|pjrt|interp] [--dry-run]
+             (legacy: --artifact cls-base__dp-bitfit instead of --model/--method)
   eval       --model cls-base --ckpt path [--task sst2] [--n N]
   accountant --q F --sigma F --steps N [--delta F]   (report eps, RDP + GDP)
   accountant --q F --steps N --target-eps F          (calibrate sigma)
   zoo
   complexity [--b N --t N --d N --p N]
-  artifacts  [--artifacts DIR]";
+  artifacts  [--artifacts DIR] [--backend auto|pjrt|interp]";
 
 pub fn main() -> Result<()> {
     let args = Args::from_env();
@@ -53,7 +57,20 @@ fn artifacts_dir(args: &Args) -> String {
     args.str("artifacts", "artifacts")
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// Open the engine the flags ask for.
+fn open_engine(args: &Args) -> Result<Engine> {
+    let dir = artifacts_dir(args);
+    let engine = match args.str("backend", "auto").as_str() {
+        "pjrt" => Engine::pjrt(&dir)?,
+        "interp" | "interpreter" => Engine::interpreter(),
+        "auto" => Engine::auto(&dir),
+        other => anyhow::bail!("unknown --backend {other:?} (auto|pjrt|interp)"),
+    };
+    Ok(engine)
+}
+
+/// Resolve flags + TOML into a validated `JobSpec`.  Pure — no backend.
+fn build_spec(args: &Args) -> Result<JobSpec> {
     // config file first, flags override
     let mut cfg = match args.get("config") {
         Some(p) => Config::load(p).map_err(|e| anyhow::anyhow!(e))?,
@@ -63,69 +80,155 @@ fn cmd_train(args: &Args) -> Result<()> {
         let (k, v) = kv.split_once('=').context("--set expects key=value")?;
         cfg.set(k, v).map_err(|e| anyhow::anyhow!(e))?;
     }
+
+    // model + method, either split or as a legacy artifact name
+    let mut model = args.str("model", &cfg.str("train.model", ""));
+    let mut method_str = args.str("method", &cfg.str("train.method", ""));
+    let mut clip_mode_str = args.str("clip-mode", &cfg.str("train.clip_mode", "abadi"));
+    let mut forced_private: Option<bool> = None;
     let artifact = args.str("artifact", &cfg.str("train.artifact", ""));
-    anyhow::ensure!(!artifact.is_empty(), "--artifact (or train.artifact) required");
-    let steps = args.usize("steps", cfg.i64("train.steps", 100) as usize);
-    let n = args.usize("n", cfg.i64("train.n", 4096) as usize);
-    let seed = args.usize("seed", cfg.i64("train.seed", 0) as usize) as u64;
-    let delta = args.f64("delta", cfg.f64("train.delta", 1e-5));
-    let batch = args.usize("batch", cfg.i64("train.batch", 64) as usize);
+    if !artifact.is_empty() {
+        // conflict check covers flags AND config-file keys: model/method_str
+        // are non-empty here only if one of those supplied them
+        anyhow::ensure!(
+            model.is_empty() && method_str.is_empty(),
+            "--artifact (or train.artifact) conflicts with --model/--method \
+             (or train.model/train.method); pass one or the other"
+        );
+        let parts: Vec<&str> = artifact.split("__").collect();
+        anyhow::ensure!(
+            parts.len() == 2 || parts.len() == 3,
+            "--artifact must look like model__method[__clipmode]"
+        );
+        model = parts[0].to_string();
+        method_str = parts[1].to_string();
+        if let Some(c) = parts.get(2) {
+            clip_mode_str = c.to_string();
+        }
+        let (_, private) =
+            Method::parse(&method_str).with_context(|| format!("bad method in --artifact {artifact:?}"))?;
+        forced_private = Some(private);
+    }
+    anyhow::ensure!(!model.is_empty(), "--model (or --artifact / train.model) required");
+    anyhow::ensure!(!method_str.is_empty(), "--method (or --artifact / train.method) required");
+    // an explicit dp-/nondp- prefix on --method pins the privacy regime just
+    // like a legacy artifact name does (dp-* with no budget defaults to eps=8)
+    if forced_private.is_none() {
+        if method_str.starts_with("dp-") {
+            forced_private = Some(true);
+        } else if method_str.starts_with("nondp-") {
+            forced_private = Some(false);
+        }
+    }
 
-    let mut rt = crate::runtime::Runtime::open(artifacts_dir(args))?;
-    let exe = rt.load(&artifact)?;
-    let meta = exe.meta.clone();
-    let model = meta.model.clone();
-    let default_task = workloads::default_task(&workloads::model_shape(&rt, &model)?.kind);
-    let task = args.str("task", &cfg.str("train.task", default_task));
-    let data = workloads::build(&rt, &model, &task, n, seed)?;
-
-    let is_dp = meta.method.starts_with("dp-");
-    let sigma = if !is_dp {
-        0.0
-    } else if let Some(s) = args.get("sigma") {
-        s.parse::<f64>().context("--sigma")?
+    let method = if method_str == "two-phase" {
+        Method::TwoPhase {
+            full_steps: args.usize("full-steps", cfg.i64("train.full_steps", 0) as usize) as u64,
+            full_lr: args.f64("full-lr", cfg.f64("train.full_lr", 5e-4)),
+        }
     } else {
-        let eps = args.f64("eps", cfg.f64("train.eps", 8.0));
-        let q = batch as f64 / n as f64;
-        let sigma = calibrate::calibrate_sigma(q, steps as u64, eps, delta);
-        println!("calibrated sigma = {sigma:.4} for eps = {eps} over {steps} steps (q = {q:.4})");
-        sigma
+        Method::parse(&method_str)
+            .with_context(|| format!("unknown --method {method_str:?}"))?
+            .0
     };
+    let clip_mode = ClipMode::parse(&clip_mode_str)
+        .with_context(|| format!("unknown --clip-mode {clip_mode_str:?}"))?;
 
-    let mut tc = TrainerConfig::new(&artifact);
-    tc.logical_batch = batch;
-    tc.lr = args.f64("lr", cfg.f64("train.lr", 5e-3));
-    tc.optim = OptimKind::parse(&args.str("optim", &cfg.str("train.optim", "adam")))
-        .context("bad --optim")?;
-    tc.schedule = LrSchedule::Warmup { warmup: cfg.i64("train.warmup", 0) as u64 };
-    tc.clip_r = args.f64("clip", cfg.f64("train.clip_r", 0.1));
-    tc.sigma = sigma;
-    tc.delta = delta;
-    tc.seed = seed;
+    let mut b = JobSpec::builder(&model, method)
+        .optim(
+            OptimKind::parse(&args.str("optim", &cfg.str("train.optim", "adam")))
+                .context("bad --optim")?,
+        )
+        .lr(args.f64("lr", cfg.f64("train.lr", 5e-3)))
+        .schedule(LrSchedule::Warmup {
+            warmup: args.usize("warmup", cfg.i64("train.warmup", 0) as usize) as u64,
+        })
+        .clip_r(args.f64("clip", cfg.f64("train.clip_r", 0.1)))
+        .clip_mode(clip_mode)
+        .batch(args.usize("batch", cfg.i64("train.batch", 64) as usize))
+        .steps(args.usize("steps", cfg.i64("train.steps", 100) as usize) as u64)
+        .n_train(args.usize("n", cfg.i64("train.n", 4096) as usize))
+        .seed(args.usize("seed", cfg.i64("train.seed", 0) as usize) as u64);
+    let task = args.str("task", &cfg.str("train.task", ""));
+    if !task.is_empty() {
+        b = b.task(&task);
+    }
+
+    // privacy: --sigma wins over --eps; legacy nondp-* artifacts force
+    // non-private; legacy dp-* artifacts default to eps=8 like before
+    let delta = args.f64("delta", cfg.f64("train.delta", 1e-5));
+    let sigma_flag = args.get("sigma").map(|s| s.parse::<f64>()).transpose().context("--sigma")?;
+    let sigma_cfg = cfg.values.get("train.sigma").and_then(|v| v.as_f64());
+    let eps_flag = args.get("eps").map(|s| s.parse::<f64>()).transpose().context("--eps")?;
+    let eps_cfg = cfg.values.get("train.eps").and_then(|v| v.as_f64());
+    match forced_private {
+        Some(false) => {} // non-private artifact: ignore any budget flags
+        Some(true) => {
+            b = b.delta(delta);
+            if let Some(s) = sigma_flag.or(sigma_cfg) {
+                b = b.sigma(s);
+            } else {
+                b = b.eps(eps_flag.or(eps_cfg).unwrap_or(8.0));
+            }
+        }
+        None => {
+            if let Some(s) = sigma_flag.or(sigma_cfg) {
+                b = b.sigma(s).delta(delta);
+            } else if let Some(e) = eps_flag.or(eps_cfg) {
+                b = b.eps(e).delta(delta);
+            }
+        }
+    }
+    Ok(b.build()?)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let spec = build_spec(args)?;
+    if args.flag("dry-run") {
+        // resolve + validate + pretty-print, never touching a backend
+        let plan = spec.plan();
+        print!("{}", plan.describe(&spec));
+        println!("  (dry run: no backend touched)");
+        return Ok(());
+    }
+
+    let mut engine = open_engine(args)?;
+    let task = match &spec.task {
+        Some(t) => t.clone(),
+        None => engine.default_task(&spec.model)?.to_string(),
+    };
+    let data = engine.dataset(&spec.model, &task, spec.n_train, spec.seed)?;
 
     let pretrained = match args.get("pretrained") {
-        Some(p) => {
-            let ck = Checkpoint::load(p)?;
-            anyhow::ensure!(ck.model == model, "checkpoint is for {}", ck.model);
-            Some(ck.params)
-        }
+        Some(p) => Some(engine.load_checkpoint(&spec.model, p)?),
         None => None,
     };
-    let mut trainer = Trainer::new(&mut rt, tc, data.len(), pretrained)?;
+    let mut session = match pretrained {
+        Some(params) => engine.session_from(&spec, params)?,
+        None => engine.session(&spec)?,
+    };
     let mut sink = match args.get("log") {
         Some(p) => Some(JsonlSink::create(p)?),
         None => None,
     };
+    let info = engine.model_info(&spec.model)?;
     println!(
-        "training {artifact} on {task}: {} examples, {} trainable params ({:.3}% of {}), {} steps",
+        "training {} on {task} [{} backend]: {} examples, {} trainable params ({:.3}% of {}), {} steps",
+        spec.run_name(),
+        engine.backend_name(),
         data.len(),
-        trainer.trainable_len(),
-        100.0 * trainer.trainable_len() as f64 / rt.manifest.models[&model].n_params as f64,
-        rt.manifest.models[&model].n_params,
-        steps,
+        session.trainable_len(),
+        100.0 * session.trainable_len() as f64 / info.n_params.max(1) as f64,
+        info.n_params,
+        spec.steps,
     );
+    if spec.privacy.is_private() {
+        let spent = session.privacy_spent();
+        println!("privacy plan: sigma = {:.4}, q = {:.4}, delta = {}", spent.sigma, spent.q, spent.delta);
+    }
+    let steps = spec.steps;
     for i in 0..steps {
-        let s = trainer.train_step(&data)?;
+        let s = session.run_step(&data)?;
         if let Some(sink) = &mut sink {
             sink.step(s.step, s.loss, s.epsilon)?;
         }
@@ -136,11 +239,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
     }
-    for (label, secs, calls) in trainer.timers.report() {
+    for (label, secs, calls) in session.timers.report() {
         println!("  timer {label:<8} {secs:>8.3}s over {calls} calls");
     }
     if let Some(path) = args.get("save") {
-        Checkpoint { model, step: trainer.step, params: trainer.full_params() }.save(path)?;
+        session.checkpoint(path)?;
         println!("saved checkpoint to {path}");
     }
     Ok(())
@@ -149,21 +252,31 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.str("model", "");
     anyhow::ensure!(!model.is_empty(), "--model required");
-    let mut rt = crate::runtime::Runtime::open(artifacts_dir(args))?;
-    let exe = rt.load(&format!("{model}__eval"))?;
+    let mut engine = open_engine(args)?;
     let params = match args.get("ckpt") {
-        Some(p) => Checkpoint::load(p)?.params,
-        None => rt.init_params(&model)?,
+        Some(p) => engine.load_checkpoint(&model, p)?,
+        None => engine.init_params(&model)?,
     };
-    let shape = workloads::model_shape(&rt, &model)?;
-    let task = args.str("task", workloads::default_task(&shape.kind));
+    let info = engine.model_info(&model)?;
+    let task = args.str("task", engine.default_task(&model)?);
     let n = args.usize("n", 1024);
-    let data = workloads::build(&rt, &model, &task, n, args.usize("seed", 1) as u64)?;
-    let (a, b, n) = evaluate_params(&exe, &params, &data, n)?;
-    if shape.kind == "lm" {
-        println!("nll/token = {:.4}  perplexity = {:.3}  ({b:.0} tokens)", a / b, (a / b).exp());
+    let data = engine.dataset(&model, &task, n, args.usize("seed", 1) as u64)?;
+    let eval = engine.evaluator(&model)?;
+    let out = evaluate_params(eval.as_ref(), &params, &data, n)?;
+    if info.shape.kind == "lm" {
+        println!(
+            "nll/token = {:.4}  perplexity = {:.3}  ({:.0} tokens)",
+            out.metric_a / out.metric_b,
+            out.perplexity(),
+            out.metric_b
+        );
     } else {
-        println!("loss = {:.4}  accuracy = {:.2}%  ({n} examples)", a / n as f64, 100.0 * b / n as f64);
+        println!(
+            "loss = {:.4}  accuracy = {:.2}%  ({} examples)",
+            out.metric_a / out.n as f64,
+            100.0 * out.accuracy(),
+            out.n
+        );
     }
     Ok(())
 }
@@ -209,14 +322,14 @@ fn cmd_complexity(args: &Args) -> Result<()> {
         p: args.usize("p", 768) as u64,
     };
     let methods = [
-        Method::NonDpFull,
-        Method::OpacusFull,
-        Method::GhostClipFull,
-        Method::BookKeeping,
-        Method::DpLora { rank: 16 },
-        Method::DpAdapter { rank: 16 },
-        Method::NonDpBias,
-        Method::DpBias,
+        CMethod::NonDpFull,
+        CMethod::OpacusFull,
+        CMethod::GhostClipFull,
+        CMethod::BookKeeping,
+        CMethod::DpLora { rank: 16 },
+        CMethod::DpAdapter { rank: 16 },
+        CMethod::NonDpBias,
+        CMethod::DpBias,
     ];
     println!(
         "per-layer complexity at B={} T={} d={} p={} (paper Table 2/7)",
@@ -242,11 +355,11 @@ fn cmd_complexity(args: &Args) -> Result<()> {
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {
-    let rt = crate::runtime::Runtime::open(artifacts_dir(args))?;
-    println!("platform: {}", rt.platform());
+    let engine = open_engine(args)?;
+    println!("backend: {}  ({})", engine.backend_name(), engine.platform());
     let mut t = Table::new(&["artifact", "model", "step", "B", "Pt"]);
-    for name in &rt.manifest.artifacts {
-        let meta = crate::runtime::ArtifactMeta::load(rt.artifact_dir(), name)?;
+    for name in engine.artifacts() {
+        let meta = engine.artifact_meta(&name)?;
         t.row(vec![
             name.clone(),
             meta.model,
@@ -257,4 +370,88 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     }
     t.print();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Privacy;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn spec_from_flags() {
+        let args = parse(
+            "train --model cls-base --method bitfit --task sst2 --eps 4 --batch 128 \
+             --steps 30 --n 2048 --lr 0.005 --seed 3",
+        );
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.model, "cls-base");
+        assert_eq!(spec.method, Method::BiTFiT);
+        assert_eq!(spec.task.as_deref(), Some("sst2"));
+        assert_eq!(spec.privacy, Privacy::Eps { eps: 4.0, delta: 1e-5 });
+        assert_eq!(spec.logical_batch, 128);
+        assert_eq!(spec.steps, 30);
+        assert_eq!(spec.phases()[0].artifact, "cls-base__dp-bitfit");
+    }
+
+    #[test]
+    fn spec_from_legacy_artifact_flag() {
+        let args = parse("train --artifact cls-base__nondp-full --steps 10");
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.model, "cls-base");
+        assert_eq!(spec.privacy, Privacy::NonPrivate);
+        assert_eq!(spec.phases()[0].artifact, "cls-base__nondp-full");
+        // dp artifact defaults to eps = 8 like the old CLI
+        let args = parse("train --artifact cls-base__dp-bitfit --steps 10");
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.privacy, Privacy::Eps { eps: 8.0, delta: 1e-5 });
+        // clip-mode suffix survives
+        let args = parse("train --artifact cls-base__dp-bitfit__autos --steps 10");
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.clip_mode, ClipMode::AutoS);
+        assert_eq!(spec.phases()[0].artifact, "cls-base__dp-bitfit__autos");
+    }
+
+    #[test]
+    fn dp_prefixed_method_pins_privacy() {
+        // an explicit dp- method without a budget must NOT silently train
+        // non-private: it defaults to eps = 8 like the legacy artifact path
+        let args = parse("train --model cls-base --method dp-bitfit --steps 10");
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.privacy, Privacy::Eps { eps: 8.0, delta: 1e-5 });
+        assert_eq!(spec.phases()[0].artifact, "cls-base__dp-bitfit");
+        // and nondp- pins non-private even if an eps flag is present
+        let args = parse("train --model cls-base --method nondp-bitfit --eps 4 --steps 10");
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.privacy, Privacy::NonPrivate);
+    }
+
+    #[test]
+    fn cli_sigma_wins_over_eps() {
+        // the CLI resolves the conflict (explicit multiplier beats target);
+        // the builder-level both-set rejection is tested in engine::spec
+        let args = parse("train --model cls-base --method bitfit --eps 8 --sigma 1.0");
+        let spec = build_spec(&args).unwrap();
+        assert!(matches!(spec.privacy, Privacy::Sigma { .. }));
+    }
+
+    #[test]
+    fn two_phase_flags() {
+        let args = parse(
+            "train --model vit-c10 --method two-phase --full-steps 8 --full-lr 0.001 \
+             --sigma 1.0 --steps 32",
+        );
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.phases().len(), 2);
+        assert_eq!(spec.phases()[0].steps, 8);
+    }
+
+    #[test]
+    fn missing_model_is_an_error() {
+        let args = parse("train --method bitfit");
+        assert!(build_spec(&args).is_err());
+    }
 }

@@ -1,26 +1,31 @@
-//! Batched greedy decoding via the `*__decode` artifacts (E2E generation).
+//! Batched greedy decoding via the `*__decode` steps (E2E generation).
 
-use anyhow::Result;
-
-use crate::runtime::Executable;
+use crate::engine::{EngineError, StepRunner};
 use crate::util::tensor::Tensor;
 
 /// Greedy-decode completions for a batch of prompts.
 ///
 /// `prompts[i]` are token ids (unpadded).  Returns per-prompt completions
 /// (token ids after the prompt, EOS excluded).  Prompts are processed in
-/// chunks of the artifact's fixed batch size.
+/// chunks of the step's fixed batch size.
 pub fn greedy_decode(
-    exe: &Executable,
+    step: &dyn StepRunner,
     full: &[f32],
     prompts: &[Vec<i32>],
     max_new: usize,
     eos: i32,
-) -> Result<Vec<Vec<u32>>> {
-    let meta = &exe.meta;
-    anyhow::ensure!(meta.step == "decode", "not a decode artifact");
+) -> Result<Vec<Vec<u32>>, EngineError> {
+    let meta = step.meta();
+    if meta.step != "decode" {
+        return Err(EngineError::Data(format!("{} is not a decode artifact", meta.name)));
+    }
     let b = meta.batch;
-    let t = meta.inputs.iter().find(|i| i.name == "x").unwrap().shape[1];
+    let t = meta
+        .inputs
+        .iter()
+        .find(|i| i.name == "x")
+        .ok_or_else(|| EngineError::Data(format!("{}: no x input", meta.name)))?
+        .shape[1];
     let full_t = Tensor::f32(vec![full.len()], full.to_vec());
     let empty = Tensor::f32(vec![0], vec![]);
     let vocab = meta.outputs[0].shape[1];
@@ -40,7 +45,7 @@ pub fn greedy_decode(
             if done.iter().take(chunk.len()).all(|&d| d) {
                 break;
             }
-            let logits = exe.run(&[
+            let logits = step.run(&[
                 empty.clone(),
                 full_t.clone(),
                 Tensor::i32(vec![b, t], x.clone()),

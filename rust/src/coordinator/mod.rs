@@ -1,16 +1,19 @@
-//! L3 coordinator: the DP fine-tuning orchestrator.
+//! L3 coordinator: orchestration building blocks consumed by
+//! [`crate::engine`].
 //!
-//! * [`trainer`] — Algorithm 1 at the logical-batch level (Poisson sampling,
-//!   masked microbatch accumulation, noise, optimizer step, accounting).
-//! * [`phase`] — two-phase X+BiTFiT scheduling (App. A.2.2).
+//! The training loop itself lives in `engine::Session`; this module holds
+//! the substrates it composes:
+//!
 //! * [`optim`] — SGD / DP-Adam / DP-AdamW on flat parameter vectors.
-//! * [`task_data`] — dataset -> fixed-shape artifact inputs with masks.
-//! * [`workloads`] — manifest-driven synthetic dataset construction.
+//! * [`task_data`] — dataset -> fixed-shape step inputs with masks.
+//! * [`workloads`] — shape-driven synthetic dataset construction.
 //! * [`decode`] — batched greedy decoding for the generation tasks.
+//! * [`pretrain`] — cached non-private pretraining of the small models.
 //! * [`checkpoint`] — CRC-protected binary checkpoints.
 //! * [`metrics`] — JSONL run logs.
 //! * [`distributed`] — simulated data-parallel communication accounting.
-//! * [`cli`] — the `fastdp` binary's subcommands.
+//! * [`cli`] — the `fastdp` binary's subcommands (a thin flag/TOML ->
+//!   `JobSpec` translator).
 
 pub mod checkpoint;
 pub mod cli;
@@ -18,8 +21,6 @@ pub mod decode;
 pub mod distributed;
 pub mod metrics;
 pub mod optim;
-pub mod phase;
 pub mod pretrain;
 pub mod task_data;
-pub mod trainer;
 pub mod workloads;

@@ -3,16 +3,13 @@
 //! The paper fine-tunes *pretrained* foundation models; we reproduce the
 //! structure by pretraining each small model once (standard, non-DP — the
 //! paper's assumption is public pretraining data) and caching the
-//! checkpoint under `artifacts/pretrained/`.  Examples and benches share
-//! the cache, so the expensive phase runs once per (model, task, steps).
+//! checkpoint under `<cache_dir>/pretrained/` when the backend has an
+//! on-disk home (PJRT).  The interpreter backend has no artifact directory
+//! and retrains on demand — its reference models are small enough that this
+//! is cheap.
 
-use anyhow::Result;
-
-use super::checkpoint::Checkpoint;
-use super::optim::OptimKind;
-use super::trainer::{Trainer, TrainerConfig};
-use super::workloads;
-use crate::runtime::Runtime;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::engine::{Engine, EngineError, JobSpec, Method, OptimKind};
 
 /// Pretraining recipe.
 #[derive(Debug, Clone)]
@@ -40,58 +37,74 @@ impl PretrainSpec {
         }
     }
 
-    fn cache_path(&self, rt: &Runtime) -> std::path::PathBuf {
-        rt.artifact_dir().join("pretrained").join(format!(
-            "{}__{}__{}s.ckpt",
-            self.model, self.task, self.steps
-        ))
+    /// The full recipe identity — both cache layers key on this, so specs
+    /// differing in any hyperparameter never collide.
+    fn recipe(&self) -> String {
+        format!(
+            "{}__{}__{}s__n{}__b{}__lr{:e}__s{}",
+            self.model, self.task, self.steps, self.n, self.batch, self.lr, self.seed
+        )
+    }
+
+    fn cache_path(&self, engine: &Engine) -> Option<std::path::PathBuf> {
+        engine.cache_dir().map(|d| d.join("pretrained").join(format!("{}.ckpt", self.recipe())))
     }
 }
 
 /// Pretrain (or load cached) and return the full parameter vector.
 ///
 /// Pass `quiet=false` to log progress lines.
-pub fn pretrained_params(rt: &mut Runtime, spec: &PretrainSpec, quiet: bool) -> Result<Vec<f32>> {
-    let path = spec.cache_path(rt);
-    if let Ok(ck) = Checkpoint::load(&path) {
-        if ck.model == spec.model && ck.step == spec.steps as u64 {
-            if !quiet {
-                println!("pretrained checkpoint: {} (cached)", path.display());
+pub fn pretrained_params(
+    engine: &mut Engine,
+    spec: &PretrainSpec,
+    quiet: bool,
+) -> Result<Vec<f32>, EngineError> {
+    let memo_key = format!("pretrain/{}", spec.recipe());
+    if let Some(params) = engine.cached_params(&memo_key) {
+        return Ok(params);
+    }
+    let cache = spec.cache_path(engine);
+    if let Some(path) = &cache {
+        if let Ok(ck) = Checkpoint::load(path) {
+            if ck.model == spec.model && ck.step == spec.steps as u64 {
+                if !quiet {
+                    println!("pretrained checkpoint: {} (cached)", path.display());
+                }
+                engine.cache_params(&memo_key, ck.params.clone());
+                return Ok(ck.params);
             }
-            return Ok(ck.params);
         }
     }
-    let artifact = format!("{}__nondp-full", spec.model);
-    let data = workloads::build(rt, &spec.model, &spec.task, spec.n, spec.seed)?;
-    let mut tc = TrainerConfig::new(&artifact);
-    tc.logical_batch = spec.batch;
-    tc.lr = spec.lr;
-    tc.optim = OptimKind::Adam;
-    tc.seed = spec.seed;
-    let mut t = Trainer::new(rt, tc, data.len(), None)?;
+    let data = engine.dataset(&spec.model, &spec.task, spec.n, spec.seed)?;
+    let job = JobSpec::builder(&spec.model, Method::Full { ghost: true })
+        .task(&spec.task)
+        .optim(OptimKind::Adam)
+        .lr(spec.lr)
+        .batch(spec.batch)
+        .steps(spec.steps.max(1) as u64)
+        .n_train(spec.n)
+        .seed(spec.seed)
+        .name(&format!("{}__pretrain", spec.model))
+        .build()?;
+    let mut session = engine.session(&job)?;
     if !quiet {
         println!("pretraining {} on {} for {} steps ...", spec.model, spec.task, spec.steps);
     }
     for i in 0..spec.steps {
-        let s = t.train_step(&data)?;
+        let s = session.run_step(&data)?;
         if !quiet && (i % 25 == 0 || i + 1 == spec.steps) {
             println!("  pretrain step {:>4}  loss {:.4}", s.step, s.loss);
         }
     }
-    let params = t.full_params();
-    Checkpoint { model: spec.model.clone(), step: spec.steps as u64, params: params.clone() }
-        .save(&path)?;
-    if !quiet {
-        println!("cached pretrained checkpoint at {}", path.display());
+    let params = session.full_params();
+    if let Some(path) = &cache {
+        Checkpoint { model: spec.model.clone(), step: spec.steps as u64, params: params.clone() }
+            .save(path)
+            .map_err(|e| EngineError::Checkpoint(format!("{e:#}")))?;
+        if !quiet {
+            println!("cached pretrained checkpoint at {}", path.display());
+        }
     }
+    engine.cache_params(&memo_key, params.clone());
     Ok(params)
-}
-
-/// Reset a model's head leaves to their deterministic init values
-/// (downstream tasks replace the classification head, §4.3).
-pub fn reset_head(rt: &Runtime, model: &str, params: &mut [f32]) -> Result<()> {
-    let layout = rt.layout(model)?;
-    let init = rt.init_params(model)?;
-    layout.copy_head(params, &init);
-    Ok(())
 }

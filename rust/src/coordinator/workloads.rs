@@ -1,12 +1,14 @@
-//! Workload construction: manifest model config -> synthetic dataset.
+//! Workload construction: model shape -> synthetic dataset.
+//!
+//! Shapes come from the engine (`Engine::model_info`), so datasets build
+//! identically against the PJRT and interpreter backends.
 
-use anyhow::{Context, Result};
-
-use super::task_data::TaskData;
 use crate::data::synth_image;
 use crate::data::synth_text::{self, GlueTask};
 use crate::data::GenExample;
-use crate::runtime::Runtime;
+use crate::engine::EngineError;
+
+use super::task_data::TaskData;
 
 /// Model-config fields needed to shape a dataset.
 #[derive(Debug, Clone)]
@@ -19,31 +21,11 @@ pub struct ModelShape {
     pub n_out: usize,
 }
 
-/// Extract the dataset-relevant shape of a model from the manifest.
-pub fn model_shape(rt: &Runtime, model: &str) -> Result<ModelShape> {
-    let entry = rt
-        .manifest
-        .models
-        .get(model)
-        .with_context(|| format!("unknown model {model:?}"))?;
-    let cfg = &entry.cfg;
-    let g = |k: &str| cfg.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
-    Ok(ModelShape {
-        kind: entry.kind.clone(),
-        t: g("t"),
-        vocab: g("vocab"),
-        img: g("img"),
-        n_cls: g("n_cls"),
-        n_out: g("n_out"),
-    })
-}
-
-/// Build a dataset for (model, task).
+/// Build a dataset for (model shape, task).
 ///
 /// Tasks: `sst2 | qnli | qqp | mnli | pretrain-cls | pretrain-lm | e2e |
 /// cifar | cifar-pretrain | celeba`.
-pub fn build(rt: &Runtime, model: &str, task: &str, n: usize, seed: u64) -> Result<TaskData> {
-    let shape = model_shape(rt, model)?;
+pub fn build(shape: &ModelShape, task: &str, n: usize, seed: u64) -> Result<TaskData, EngineError> {
     match task {
         "sst2" | "qnli" | "qqp" | "mnli" => {
             let gt = match task {
@@ -67,11 +49,16 @@ pub fn build(rt: &Runtime, model: &str, task: &str, n: usize, seed: u64) -> Resu
             Ok(TaskData::Lm { examples: synth_text::pretrain_lm(n, shape.t, &tok, seed), t: shape.t })
         }
         "e2e" => {
-            let (data, _) = build_e2e(rt, model, n, seed)?;
+            let (data, _) = build_e2e(shape, n, seed)?;
             Ok(data)
         }
         "cifar" | "cifar-pretrain" => {
-            anyhow::ensure!(shape.kind == "vit", "cifar task needs a vit model");
+            if shape.kind != "vit" {
+                return Err(EngineError::Data(format!(
+                    "cifar task needs a vit model, got kind {:?}",
+                    shape.kind
+                )));
+            }
             let shift = task == "cifar-pretrain";
             Ok(TaskData::Image {
                 examples: synth_image::shapes(n, shape.img, shape.n_cls, 0.15, shift, seed),
@@ -80,31 +67,42 @@ pub fn build(rt: &Runtime, model: &str, task: &str, n: usize, seed: u64) -> Resu
             })
         }
         "celeba" => {
-            anyhow::ensure!(shape.kind == "cnn", "celeba task needs a cnn model");
+            if shape.kind != "cnn" {
+                return Err(EngineError::Data(format!(
+                    "celeba task needs a cnn model, got kind {:?}",
+                    shape.kind
+                )));
+            }
             Ok(TaskData::Image {
                 examples: synth_image::attributes(n, shape.img, 0.1, seed),
                 size: shape.img,
                 n_attrs: shape.n_out,
             })
         }
-        _ => anyhow::bail!("unknown task {task:?}"),
+        _ => Err(EngineError::Data(format!("unknown task {task:?}"))),
     }
 }
 
 /// E2E generation data plus the reference sets for NLG metrics.
-pub fn build_e2e(rt: &Runtime, model: &str, n: usize, seed: u64) -> Result<(TaskData, Vec<GenExample>)> {
-    let shape = model_shape(rt, model)?;
-    anyhow::ensure!(shape.kind == "lm", "e2e task needs an lm model");
+pub fn build_e2e(
+    shape: &ModelShape,
+    n: usize,
+    seed: u64,
+) -> Result<(TaskData, Vec<GenExample>), EngineError> {
+    if shape.kind != "lm" {
+        return Err(EngineError::Data(format!(
+            "e2e task needs an lm model, got kind {:?}",
+            shape.kind
+        )));
+    }
     let tok = synth_text::tokenizer(shape.vocab);
     let gen = synth_text::e2e(n, shape.t, &tok, seed);
-    let data = TaskData::Lm {
-        examples: gen.iter().map(|g| g.lm.clone()).collect(),
-        t: shape.t,
-    };
+    let data = TaskData::Lm { examples: gen.iter().map(|g| g.lm.clone()).collect(), t: shape.t };
     Ok((data, gen))
 }
 
-/// Default task for a model kind (used by the CLI when --task is omitted).
+/// Default task for a model kind (used when `--task` / `task(...)` is
+/// omitted).
 pub fn default_task(kind: &str) -> &'static str {
     match kind {
         "cls" => "sst2",

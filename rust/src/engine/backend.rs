@@ -1,0 +1,130 @@
+//! The pluggable execution backend: the contract between the engine and
+//! whatever actually runs model steps.
+//!
+//! Two implementations ship with the crate:
+//! * [`super::pjrt::PjrtBackend`] — the AOT HLO artifacts executed via PJRT
+//!   (the fast path; requires a compiled artifact directory).
+//! * [`super::interp::InterpreterBackend`] — a dependency-free pure-Rust
+//!   reference implementation of the same step contract, so the full
+//!   train/checkpoint/eval path runs (and is testable in CI) with no
+//!   artifact directory present.
+//!
+//! A backend hands out [`StepRunner`]s keyed by artifact name
+//! (`<model>__<method>[__<clipmode>]`); the runner's [`ArtifactMeta`]
+//! describes its fixed-shape I/O contract.  Device residency is exposed via
+//! [`StepRunner::pin`] / [`StepRunner::run_pinned`], so inputs that do not
+//! change between steps (the frozen parameter vector) can stay resident.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::coordinator::workloads::ModelShape;
+use crate::runtime::{ArtifactMeta, Layout};
+use crate::util::tensor::Tensor;
+
+use super::error::EngineError;
+
+/// Everything the engine needs to know about a model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    /// Dataset-relevant dimensions (kind, t, vocab, img, n_cls, n_out).
+    pub shape: ModelShape,
+    pub n_params: usize,
+    /// Hidden width (analytic memory/throughput models).
+    pub d: usize,
+    /// Layer count (analytic memory/throughput models).
+    pub layers: usize,
+    /// ViT patch size (0 when the model has no patch structure).
+    pub patch: usize,
+}
+
+/// An input pinned for reuse across step executions (device-resident under
+/// PJRT, host-retained under the interpreter).
+pub enum Pinned {
+    Device(crate::runtime::DeviceInput),
+    Host(Tensor),
+}
+
+/// A loaded, executable step (train / eval / decode).
+pub trait StepRunner {
+    /// The step's I/O contract and provenance.
+    fn meta(&self) -> &ArtifactMeta;
+
+    /// Execute with host tensors (one fixed-shape microbatch).
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError>;
+
+    /// Pin one input for reuse across steps (device residency hook).
+    fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError>;
+
+    /// Execute with a mix of pinned and host inputs; `host[i]` slots that are
+    /// `None` are taken from `pinned` in order.
+    fn run_pinned(
+        &self,
+        pinned: &[&Pinned],
+        host: &[Option<&Tensor>],
+    ) -> Result<Vec<Tensor>, EngineError>;
+
+    /// Whether the pinned path is the preferred steady-state path.  (The
+    /// PJRT buffer path trips an xla_extension 0.5.1 assertion in some
+    /// interleavings, so it stays opt-in there; the interpreter always
+    /// prefers it.)
+    fn prefers_pinned(&self) -> bool {
+        false
+    }
+}
+
+/// A pluggable execution backend.
+pub trait Backend {
+    /// Short backend identifier (`"pjrt"` / `"interpreter"`).
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform description.
+    fn platform(&self) -> String;
+
+    /// Models this backend can serve.
+    fn models(&self) -> Vec<String>;
+
+    /// Step artifacts this backend can serve.
+    fn artifacts(&self) -> Vec<String>;
+
+    fn model_info(&self, model: &str) -> Result<ModelInfo, EngineError>;
+
+    /// The flat-parameter layout contract for a model.
+    fn layout(&self, model: &str) -> Result<Layout, EngineError>;
+
+    /// The model's deterministic initial parameter vector.
+    fn init_params(&self, model: &str) -> Result<Vec<f32>, EngineError>;
+
+    /// Artifact metadata without loading/compiling the step.
+    fn artifact_meta(&self, artifact: &str) -> Result<ArtifactMeta, EngineError>;
+
+    /// Load (and cache) an executable step by artifact name.
+    fn load(&mut self, artifact: &str) -> Result<Rc<dyn StepRunner>, EngineError>;
+
+    /// Directory for cached derived state (pretrained checkpoints);
+    /// `None` when the backend has no on-disk home (interpreter).
+    fn cache_dir(&self) -> Option<PathBuf> {
+        None
+    }
+}
+
+/// Validate host inputs against a step's input specs (shape check).
+pub fn check_inputs(meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<(), EngineError> {
+    if inputs.len() != meta.inputs.len() {
+        return Err(EngineError::Data(format!(
+            "artifact {} expects {} inputs, got {}",
+            meta.name,
+            meta.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (t, spec) in inputs.iter().zip(&meta.inputs) {
+        if t.shape != spec.shape {
+            return Err(EngineError::Data(format!(
+                "input {} of {}: shape {:?} != expected {:?}",
+                spec.name, meta.name, t.shape, spec.shape
+            )));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Typed errors for the engine API.
+//!
+//! Everything the engine can reject is enumerated here; `EngineError`
+//! implements `std::error::Error`, so callers that live in `anyhow`-land
+//! (examples, the CLI) can still use `?` on engine results.
+
+use std::fmt;
+
+/// The engine's error type.
+#[derive(Debug)]
+pub enum EngineError {
+    /// A `JobSpec` failed validation (builder reports the offending field).
+    InvalidSpec(String),
+    /// The backend does not know the requested model.
+    UnknownModel(String),
+    /// The backend cannot provide the requested artifact/step.
+    UnknownArtifact { name: String, detail: String },
+    /// Dataset construction failed (unknown task, shape mismatch, ...).
+    Data(String),
+    /// The backend failed to load or execute a step.
+    Backend { backend: String, detail: String },
+    /// Checkpoint I/O failed (missing file, CRC mismatch, wrong model, ...).
+    Checkpoint(String),
+    /// Metric-sink I/O failed.
+    Metrics(String),
+}
+
+impl EngineError {
+    /// Shorthand for a backend failure.
+    pub fn backend(backend: &str, detail: impl fmt::Display) -> EngineError {
+        EngineError::Backend { backend: backend.to_string(), detail: detail.to_string() }
+    }
+
+    /// Shorthand for an invalid-spec failure.
+    pub fn spec(detail: impl fmt::Display) -> EngineError {
+        EngineError::InvalidSpec(detail.to_string())
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::InvalidSpec(d) => write!(f, "invalid job spec: {d}"),
+            EngineError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+            EngineError::UnknownArtifact { name, detail } => {
+                write!(f, "artifact {name:?} unavailable: {detail}")
+            }
+            EngineError::Data(d) => write!(f, "dataset error: {d}"),
+            EngineError::Backend { backend, detail } => {
+                write!(f, "backend {backend:?} failed: {detail}")
+            }
+            EngineError::Checkpoint(d) => write!(f, "checkpoint error: {d}"),
+            EngineError::Metrics(d) => write!(f, "metrics error: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_variant() {
+        let e = EngineError::spec("batch must be positive");
+        assert!(e.to_string().contains("invalid job spec"));
+        let e = EngineError::backend("interpreter", "boom");
+        assert!(e.to_string().contains("interpreter"));
+        // EngineError flows into anyhow-land via std::error::Error
+        let a: anyhow::Error = EngineError::UnknownModel("x".into()).into();
+        assert!(a.to_string().contains("unknown model"));
+    }
+}

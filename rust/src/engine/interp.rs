@@ -1,0 +1,1224 @@
+//! The reference interpreter backend: a dependency-free, pure-Rust
+//! implementation of the step contract the AOT artifacts expose.
+//!
+//! Every model is a small reference network with the same
+//! frozen/trainable-split, per-sample-clipped-gradient semantics as the
+//! compiled artifacts (Algorithm 1 lines 3-9 per microbatch):
+//!
+//! * `cls-*`  — masked-mean token embedding -> hidden -> softmax head.
+//! * `lm-*`   — per-token embedding -> hidden -> vocab softmax (causal by
+//!              construction: position t sees only token t).
+//! * `vit-*`  — flattened pixels -> hidden -> softmax head.
+//! * `cnn-*`  — flattened pixels -> hidden -> sigmoid multi-label head;
+//!              `cnn-small` has **no** first-layer bias (the paper's
+//!              bias-less CNN, §3.4), `cnn-small-bias` adds it back
+//!              (BiTFiT-Add).
+//!
+//! Model names are parsed, not enumerated: `cls-t128` gives a sequence
+//! length of 128, `cnn-r32` a 32x32 image, `vit-c20` 20 classes — so the
+//! dimension-sweep benches run against the interpreter too.  Everything is
+//! deterministic given the model name; there is **no artifact directory**.
+//!
+//! Trainable subsets: `full`, `bitfit` (biases + head), `lastlayer` (head
+//! only).  LoRA/adapter methods approximate to `bitfit` here — the
+//! interpreter is a correctness reference, not a parameter-efficiency
+//! simulator.
+//!
+//! Gradients are computed analytically in f64 and verified against finite
+//! differences in the unit tests below.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::coordinator::workloads::ModelShape;
+use crate::dp::clip::{clip_factor, ClipMode};
+use crate::runtime::{ArtifactMeta, IoSpec, Layout, LayoutLeaf};
+use crate::util::rng::ChaChaRng;
+use crate::util::tensor::Tensor;
+
+use super::backend::{check_inputs, Backend, ModelInfo, Pinned, StepRunner};
+use super::error::EngineError;
+
+const NAME: &str = "interpreter";
+
+/// Built-in model names (parametric names like `cls-t128` also resolve).
+const BUILTIN_MODELS: &[&str] = &[
+    "cls-base",
+    "cls-large",
+    "lm-small",
+    "lm-medium",
+    "lm-large",
+    "vit-c10",
+    "vit-c20",
+    "cnn-small",
+    "cnn-small-bias",
+];
+
+const TRAIN_FRAGMENTS: &[&str] = &[
+    "nondp-full",
+    "dp-full-ghost",
+    "dp-full-opacus",
+    "nondp-bitfit",
+    "dp-bitfit",
+    "dp-bitfit-add",
+    "dp-lastlayer",
+];
+
+/// The dependency-free reference backend.
+#[derive(Default)]
+pub struct InterpreterBackend {
+    // RefCell so the read-only Backend methods (&self) share the cache
+    models: std::cell::RefCell<HashMap<String, Rc<RefModel>>>,
+    steps: HashMap<String, Rc<RefStep>>,
+}
+
+impl InterpreterBackend {
+    pub fn new() -> InterpreterBackend {
+        InterpreterBackend::default()
+    }
+
+    fn model_ref(&self, name: &str) -> Result<Rc<RefModel>, EngineError> {
+        if let Some(m) = self.models.borrow().get(name) {
+            return Ok(m.clone());
+        }
+        let m = Rc::new(RefModel::parse(name)?);
+        self.models.borrow_mut().insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+}
+
+impl Backend for InterpreterBackend {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn platform(&self) -> String {
+        "pure-rust reference interpreter (no artifacts required)".to_string()
+    }
+
+    fn models(&self) -> Vec<String> {
+        BUILTIN_MODELS.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn artifacts(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        for m in BUILTIN_MODELS {
+            for f in TRAIN_FRAGMENTS {
+                v.push(format!("{m}__{f}"));
+            }
+            v.push(format!("{m}__eval"));
+            if m.starts_with("lm") {
+                v.push(format!("{m}__decode"));
+            }
+        }
+        v
+    }
+
+    fn model_info(&self, model: &str) -> Result<ModelInfo, EngineError> {
+        let m = self.model_ref(model)?;
+        Ok(m.info())
+    }
+
+    fn layout(&self, model: &str) -> Result<Layout, EngineError> {
+        Ok(self.model_ref(model)?.layout.clone())
+    }
+
+    fn init_params(&self, model: &str) -> Result<Vec<f32>, EngineError> {
+        Ok(self.model_ref(model)?.init_params())
+    }
+
+    fn artifact_meta(&self, artifact: &str) -> Result<ArtifactMeta, EngineError> {
+        let (model, kind) = parse_artifact(artifact)?;
+        let m = self.model_ref(&model)?;
+        m.meta_for(artifact, &kind)
+    }
+
+    fn load(&mut self, artifact: &str) -> Result<Rc<dyn StepRunner>, EngineError> {
+        if let Some(s) = self.steps.get(artifact) {
+            return Ok(s.clone());
+        }
+        let (model, kind) = parse_artifact(artifact)?;
+        let m = self.model_ref(&model)?;
+        let meta = m.meta_for(artifact, &kind)?;
+        let step = Rc::new(RefStep { model: m, meta });
+        self.steps.insert(artifact.to_string(), step.clone());
+        Ok(step)
+    }
+}
+
+/// What an artifact name asks for.
+enum StepKind {
+    Train { fragment: String, clip: Option<String> },
+    Eval,
+    Decode,
+}
+
+/// Split `model__method[__clip]` / `model__eval` / `model__decode`.
+fn parse_artifact(artifact: &str) -> Result<(String, StepKind), EngineError> {
+    let parts: Vec<&str> = artifact.split("__").collect();
+    let unknown = |detail: &str| EngineError::UnknownArtifact {
+        name: artifact.to_string(),
+        detail: detail.to_string(),
+    };
+    if parts.len() < 2 || parts.len() > 3 {
+        return Err(unknown("expected model__method[__clipmode]"));
+    }
+    let model = parts[0].to_string();
+    let kind = match parts[1] {
+        "eval" => StepKind::Eval,
+        "decode" => StepKind::Decode,
+        frag => StepKind::Train {
+            fragment: frag.to_string(),
+            clip: parts.get(2).map(|s| s.to_string()),
+        },
+    };
+    Ok((model, kind))
+}
+
+/// Architecture family of a reference model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RefKind {
+    Cls,
+    Lm,
+    Vit,
+    Cnn,
+}
+
+/// A reference model: dims + canonical flat-parameter layout.
+struct RefModel {
+    name: String,
+    kind: RefKind,
+    vocab: usize,
+    t: usize,
+    /// Embedding width (Cls/Lm); 0 for image models.
+    d: usize,
+    /// Hidden width.
+    h: usize,
+    /// Output width (n_cls / vocab / n_out).
+    out: usize,
+    img: usize,
+    layout: Layout,
+}
+
+impl RefModel {
+    fn parse(name: &str) -> Result<RefModel, EngineError> {
+        let (kind, vocab, t, d, h, out, img, first_bias) = if name.starts_with("cls") {
+            let t = name.strip_prefix("cls-t").and_then(|s| s.parse().ok()).unwrap_or(64);
+            let d = if name == "cls-large" { 48 } else { 32 };
+            (RefKind::Cls, 512, t, d, d, 4, 0, true)
+        } else if name.starts_with("lm") {
+            let d = match name {
+                "lm-medium" => 32,
+                "lm-large" => 40,
+                _ => 24,
+            };
+            (RefKind::Lm, 384, 48, d, d, 384, 0, true)
+        } else if name.starts_with("vit") {
+            let n_cls = name.strip_prefix("vit-c").and_then(|s| s.parse().ok()).unwrap_or(10);
+            (RefKind::Vit, 0, 0, 0, 32, n_cls, 16, true)
+        } else if name.starts_with("cnn") {
+            let img = name.strip_prefix("cnn-r").and_then(|s| s.parse().ok()).unwrap_or(16);
+            (RefKind::Cnn, 0, 0, 0, 24, 8, img, name.contains("bias"))
+        } else {
+            return Err(EngineError::UnknownModel(name.to_string()));
+        };
+        let feat = match kind {
+            RefKind::Cls | RefKind::Lm => d,
+            RefKind::Vit | RefKind::Cnn => img * img * 3,
+        };
+        let mut leaves = Vec::new();
+        let mut offset = 0usize;
+        let mut push = |leaves: &mut Vec<LayoutLeaf>, name: &str, shape: Vec<usize>, head: bool| {
+            let size: usize = shape.iter().product();
+            leaves.push(LayoutLeaf {
+                name: name.to_string(),
+                shape,
+                size,
+                offset,
+                is_head: head,
+            });
+            offset += size;
+        };
+        // (trainable-in-bitfit?, leaf) pairs, in canonical order
+        let mut bitfit = Vec::new();
+        if matches!(kind, RefKind::Cls | RefKind::Lm) {
+            push(&mut leaves, "embed", vec![vocab, d], false);
+            bitfit.push(false);
+        }
+        push(&mut leaves, "enc/w", vec![feat, h], false);
+        bitfit.push(false);
+        if first_bias {
+            push(&mut leaves, "enc/b", vec![h], false);
+            bitfit.push(true);
+        }
+        push(&mut leaves, "head/w", vec![h, out], true);
+        bitfit.push(true);
+        push(&mut leaves, "head/b", vec![out], true);
+        bitfit.push(true);
+        let n = leaves.len();
+        let lastlayer: Vec<bool> = leaves.iter().map(|l| l.is_head).collect();
+        let layout = Layout {
+            model: name.to_string(),
+            kind: match kind {
+                RefKind::Cls => "cls",
+                RefKind::Lm => "lm",
+                RefKind::Vit => "vit",
+                RefKind::Cnn => "cnn",
+            }
+            .to_string(),
+            n_params: offset,
+            leaves,
+            subsets: std::collections::BTreeMap::from([
+                ("full".to_string(), vec![true; n]),
+                ("bitfit".to_string(), bitfit),
+                ("lastlayer".to_string(), lastlayer),
+            ]),
+        };
+        Ok(RefModel { name: name.to_string(), kind, vocab, t, d, h, out, img, layout })
+    }
+
+    fn feat_dim(&self) -> usize {
+        match self.kind {
+            RefKind::Cls | RefKind::Lm => self.d,
+            RefKind::Vit | RefKind::Cnn => self.img * self.img * 3,
+        }
+    }
+
+    fn microbatch(&self) -> usize {
+        match self.kind {
+            RefKind::Lm => 16,
+            _ => 32,
+        }
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            shape: ModelShape {
+                kind: self.layout.kind.clone(),
+                t: self.t,
+                vocab: self.vocab,
+                img: self.img,
+                n_cls: if self.kind == RefKind::Vit || self.kind == RefKind::Cls {
+                    self.out
+                } else {
+                    0
+                },
+                n_out: if self.kind == RefKind::Cnn { self.out } else { 0 },
+            },
+            n_params: self.layout.n_params,
+            d: self.h,
+            layers: 1,
+            patch: if self.kind == RefKind::Vit { 4 } else { 0 },
+        }
+    }
+
+    /// Deterministic init: weights ~ N(0, 1/fan_in), embeddings ~ N(0, 0.25),
+    /// biases zero.  Seeded from the model name.
+    fn init_params(&self) -> Vec<f32> {
+        let seed = self.name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+        let mut rng = ChaChaRng::new(seed, 0x1217);
+        let mut out = vec![0.0f32; self.layout.n_params];
+        for leaf in &self.layout.leaves {
+            let dst = &mut out[leaf.offset..leaf.offset + leaf.size];
+            if leaf.name == "embed" {
+                rng.fill_gaussian(dst, 0.5);
+            } else if leaf.name.ends_with("/w") {
+                let fan_in = leaf.shape[0].max(1) as f64;
+                rng.fill_gaussian(dst, 1.0 / fan_in.sqrt());
+            }
+            // biases stay zero
+        }
+        out
+    }
+
+    fn leaf_slice<'a>(&self, full: &'a [f32], name: &str) -> Option<&'a [f32]> {
+        self.layout
+            .leaves
+            .iter()
+            .find(|l| l.name == name)
+            .map(|l| &full[l.offset..l.offset + l.size])
+    }
+
+    /// Ranges of each trainable leaf inside the flat trainable vector.
+    fn train_slots(&self, subset: &str) -> HashMap<String, (usize, usize)> {
+        let mask = &self.layout.subsets[subset];
+        let mut slots = HashMap::new();
+        let mut off = 0usize;
+        for (leaf, &tr) in self.layout.leaves.iter().zip(mask) {
+            if tr {
+                slots.insert(leaf.name.clone(), (off, leaf.size));
+                off += leaf.size;
+            }
+        }
+        slots
+    }
+
+    fn subset_for_fragment(&self, fragment: &str) -> Result<&'static str, EngineError> {
+        let rest = fragment
+            .strip_prefix("dp-")
+            .or_else(|| fragment.strip_prefix("nondp-"))
+            .unwrap_or(fragment);
+        let subset = if rest.starts_with("full") {
+            "full"
+        } else if rest.starts_with("bitfit") {
+            "bitfit"
+        } else if rest == "lastlayer" {
+            "lastlayer"
+        } else if rest == "lora" || rest == "adapter" {
+            // closest low-parameter analog the reference net has
+            "bitfit"
+        } else {
+            return Err(EngineError::UnknownArtifact {
+                name: format!("{}__{fragment}", self.name),
+                detail: format!("unknown method fragment {rest:?}"),
+            });
+        };
+        Ok(subset)
+    }
+
+    fn x_spec(&self, b: usize) -> IoSpec {
+        match self.kind {
+            RefKind::Cls | RefKind::Lm => {
+                IoSpec { name: "x".into(), dtype: "int32".into(), shape: vec![b, self.t] }
+            }
+            RefKind::Vit | RefKind::Cnn => IoSpec {
+                name: "x".into(),
+                dtype: "float32".into(),
+                shape: vec![b, self.img, self.img, 3],
+            },
+        }
+    }
+
+    fn y_spec(&self, b: usize) -> IoSpec {
+        match self.kind {
+            RefKind::Cls | RefKind::Vit => {
+                IoSpec { name: "y".into(), dtype: "int32".into(), shape: vec![b] }
+            }
+            RefKind::Lm => IoSpec { name: "y".into(), dtype: "int32".into(), shape: vec![b, self.t] },
+            RefKind::Cnn => {
+                IoSpec { name: "y".into(), dtype: "float32".into(), shape: vec![b, self.out] }
+            }
+        }
+    }
+
+    fn meta_for(&self, artifact: &str, kind: &StepKind) -> Result<ArtifactMeta, EngineError> {
+        let b = self.microbatch();
+        let f32s = |name: &str, shape: Vec<usize>| IoSpec {
+            name: name.into(),
+            dtype: "float32".into(),
+            shape,
+        };
+        match kind {
+            StepKind::Train { fragment, clip } => {
+                if let Some(c) = clip {
+                    if ClipMode::parse(c).is_none() {
+                        return Err(EngineError::UnknownArtifact {
+                            name: artifact.to_string(),
+                            detail: format!("unknown clip mode {c:?}"),
+                        });
+                    }
+                }
+                let subset = self.subset_for_fragment(fragment)?;
+                let pt = self.layout.subset_size(subset);
+                let pf = self.layout.n_params - pt;
+                Ok(ArtifactMeta {
+                    name: artifact.to_string(),
+                    model: self.name.clone(),
+                    method: fragment.clone(),
+                    step: "train".to_string(),
+                    clip: clip.clone(),
+                    subset: subset.to_string(),
+                    batch: b,
+                    pf,
+                    pt,
+                    inputs: vec![
+                        f32s("frozen", vec![pf]),
+                        f32s("train", vec![pt]),
+                        self.x_spec(b),
+                        self.y_spec(b),
+                        f32s("mask", vec![b]),
+                        f32s("clip_r", vec![]),
+                    ],
+                    outputs: vec![
+                        f32s("loss", vec![]),
+                        f32s("grad", vec![pt]),
+                        f32s("sq_norms", vec![b]),
+                    ],
+                })
+            }
+            StepKind::Eval => Ok(ArtifactMeta {
+                name: artifact.to_string(),
+                model: self.name.clone(),
+                method: "eval".to_string(),
+                step: "eval".to_string(),
+                clip: None,
+                subset: "full".to_string(),
+                batch: b,
+                pf: 0,
+                pt: self.layout.n_params,
+                inputs: vec![
+                    f32s("unused", vec![0]),
+                    f32s("params", vec![self.layout.n_params]),
+                    self.x_spec(b),
+                    self.y_spec(b),
+                    f32s("mask", vec![b]),
+                ],
+                outputs: vec![f32s("metric_a", vec![]), f32s("metric_b", vec![])],
+            }),
+            StepKind::Decode => {
+                if self.kind != RefKind::Lm {
+                    return Err(EngineError::UnknownArtifact {
+                        name: artifact.to_string(),
+                        detail: format!("{} is not a language model", self.name),
+                    });
+                }
+                Ok(ArtifactMeta {
+                    name: artifact.to_string(),
+                    model: self.name.clone(),
+                    method: "decode".to_string(),
+                    step: "decode".to_string(),
+                    clip: None,
+                    subset: "full".to_string(),
+                    batch: b,
+                    pf: 0,
+                    pt: self.layout.n_params,
+                    inputs: vec![
+                        f32s("unused", vec![0]),
+                        f32s("params", vec![self.layout.n_params]),
+                        IoSpec { name: "x".into(), dtype: "int32".into(), shape: vec![b, self.t] },
+                        IoSpec { name: "pos".into(), dtype: "int32".into(), shape: vec![b] },
+                    ],
+                    outputs: vec![f32s("logits", vec![b, self.vocab])],
+                })
+            }
+        }
+    }
+}
+
+/// Per-row forward state (f64 for numerically clean gradients).
+struct Forward {
+    feat: Vec<f64>,
+    hpre: Vec<f64>,
+    hact: Vec<f64>,
+    logits: Vec<f64>,
+}
+
+/// Views into a merged full parameter vector.
+struct Net<'a> {
+    embed: &'a [f32],
+    enc_w: &'a [f32],
+    enc_b: Option<&'a [f32]>,
+    head_w: &'a [f32],
+    head_b: &'a [f32],
+}
+
+impl RefModel {
+    fn net<'a>(&self, full: &'a [f32]) -> Net<'a> {
+        Net {
+            embed: self.leaf_slice(full, "embed").unwrap_or(&[]),
+            enc_w: self.leaf_slice(full, "enc/w").expect("enc/w leaf"),
+            enc_b: self.leaf_slice(full, "enc/b"),
+            head_w: self.leaf_slice(full, "head/w").expect("head/w leaf"),
+            head_b: self.leaf_slice(full, "head/b").expect("head/b leaf"),
+        }
+    }
+
+    /// Mean-pooled embedding features for a token row (Cls); returns the
+    /// active token ids alongside so backprop can scatter into the embedding.
+    fn pooled_feat(&self, net: &Net, toks: &[i32]) -> (Vec<f64>, Vec<usize>) {
+        let active: Vec<usize> =
+            toks.iter().filter(|&&t| t > 0).map(|&t| t as usize % self.vocab).collect();
+        let mut feat = vec![0.0f64; self.d];
+        if !active.is_empty() {
+            for &tok in &active {
+                let e = &net.embed[tok * self.d..(tok + 1) * self.d];
+                for i in 0..self.d {
+                    feat[i] += e[i] as f64;
+                }
+            }
+            let inv = 1.0 / active.len() as f64;
+            for f in feat.iter_mut() {
+                *f *= inv;
+            }
+        }
+        (feat, active)
+    }
+
+    /// Single-token embedding features (Lm); returns the canonical token id.
+    fn token_feat(&self, net: &Net, tok: i32) -> (Vec<f64>, usize) {
+        let tok = (tok.max(0) as usize) % self.vocab;
+        let e = &net.embed[tok * self.d..(tok + 1) * self.d];
+        (e.iter().map(|&v| v as f64).collect(), tok)
+    }
+
+    /// Flattened pixel features (Vit/Cnn).
+    fn pixel_feat(&self, x: &Tensor, row: usize) -> Vec<f64> {
+        let pix = self.img * self.img * 3;
+        x.as_f32()[row * pix..(row + 1) * pix].iter().map(|&v| v as f64).collect()
+    }
+
+    /// hidden + logits from a feature vector.
+    fn forward_feat(&self, net: &Net, feat: Vec<f64>) -> Forward {
+        let (h, out) = (self.h, self.out);
+        let mut hpre = vec![0.0f64; h];
+        for (i, &f) in feat.iter().enumerate() {
+            if f == 0.0 {
+                continue;
+            }
+            let row = &net.enc_w[i * h..(i + 1) * h];
+            for j in 0..h {
+                hpre[j] += f * row[j] as f64;
+            }
+        }
+        if let Some(b) = net.enc_b {
+            for j in 0..h {
+                hpre[j] += b[j] as f64;
+            }
+        }
+        let hact: Vec<f64> = hpre.iter().map(|&v| v.max(0.0)).collect();
+        let mut logits = vec![0.0f64; out];
+        for j in 0..h {
+            if hact[j] == 0.0 {
+                continue;
+            }
+            let row = &net.head_w[j * out..(j + 1) * out];
+            for k in 0..out {
+                logits[k] += hact[j] * row[k] as f64;
+            }
+        }
+        for k in 0..out {
+            logits[k] += net.head_b[k] as f64;
+        }
+        Forward { feat, hpre, hact, logits }
+    }
+
+    /// Backprop `dlogits` through head + hidden into `grad` (flat trainable
+    /// vector, per `slots`); returns d(feat) if the embedding needs it.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_feat(
+        &self,
+        net: &Net,
+        fwd: &Forward,
+        dlogits: &[f64],
+        slots: &HashMap<String, (usize, usize)>,
+        grad: &mut [f64],
+        want_dfeat: bool,
+    ) -> Option<Vec<f64>> {
+        let (h, out) = (self.h, self.out);
+        if let Some(&(off, _)) = slots.get("head/b") {
+            for k in 0..out {
+                grad[off + k] += dlogits[k];
+            }
+        }
+        if let Some(&(off, _)) = slots.get("head/w") {
+            for j in 0..h {
+                if fwd.hact[j] == 0.0 {
+                    continue;
+                }
+                let g = &mut grad[off + j * out..off + (j + 1) * out];
+                for k in 0..out {
+                    g[k] += fwd.hact[j] * dlogits[k];
+                }
+            }
+        }
+        let need_dh = want_dfeat
+            || slots.contains_key("enc/b")
+            || slots.contains_key("enc/w")
+            || slots.contains_key("embed");
+        if !need_dh {
+            return None;
+        }
+        let mut dh = vec![0.0f64; h];
+        for j in 0..h {
+            if fwd.hpre[j] <= 0.0 {
+                continue; // relu gate
+            }
+            let row = &net.head_w[j * out..(j + 1) * out];
+            let mut acc = 0.0f64;
+            for k in 0..out {
+                acc += row[k] as f64 * dlogits[k];
+            }
+            dh[j] = acc;
+        }
+        if let Some(&(off, _)) = slots.get("enc/b") {
+            for j in 0..h {
+                grad[off + j] += dh[j];
+            }
+        }
+        if let Some(&(off, _)) = slots.get("enc/w") {
+            for (i, &f) in fwd.feat.iter().enumerate() {
+                if f == 0.0 {
+                    continue;
+                }
+                let g = &mut grad[off + i * h..off + (i + 1) * h];
+                for j in 0..h {
+                    g[j] += f * dh[j];
+                }
+            }
+        }
+        if want_dfeat || slots.contains_key("embed") {
+            let d = self.feat_dim();
+            let mut dfeat = vec![0.0f64; d];
+            for (i, df) in dfeat.iter_mut().enumerate() {
+                let row = &net.enc_w[i * h..(i + 1) * h];
+                let mut acc = 0.0f64;
+                for j in 0..h {
+                    acc += row[j] as f64 * dh[j];
+                }
+                *df = acc;
+            }
+            Some(dfeat)
+        } else {
+            None
+        }
+    }
+}
+
+/// Stable softmax cross-entropy: returns (loss, dlogits).
+fn softmax_ce(logits: &[f64], label: usize) -> (f64, Vec<f64>) {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let loss = z.ln() - (logits[label] - m);
+    let mut dl: Vec<f64> = exps.iter().map(|&e| e / z).collect();
+    dl[label] -= 1.0;
+    (loss, dl)
+}
+
+/// Stable sigmoid binary cross-entropy over a multi-label vector:
+/// returns (loss, dlogits).
+fn sigmoid_bce(logits: &[f64], targets: &[f64]) -> (f64, Vec<f64>) {
+    let mut loss = 0.0f64;
+    let mut dl = vec![0.0f64; logits.len()];
+    for (k, (&l, &y)) in logits.iter().zip(targets).enumerate() {
+        // softplus(l) - y*l, computed stably
+        loss += l.max(0.0) - l * y + (-l.abs()).exp().ln_1p();
+        dl[k] = 1.0 / (1.0 + (-l).exp()) - y;
+    }
+    (loss, dl)
+}
+
+/// An executable interpreter step.
+struct RefStep {
+    model: Rc<RefModel>,
+    meta: ArtifactMeta,
+}
+
+impl RefStep {
+    fn is_dp(&self) -> bool {
+        self.meta.method.starts_with("dp-")
+    }
+
+    fn clip_mode(&self) -> ClipMode {
+        self.meta.clip.as_deref().and_then(ClipMode::parse).unwrap_or(ClipMode::Abadi)
+    }
+
+    fn run_train(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &self.model;
+        let frozen = inputs[0].as_f32();
+        let train = inputs[1].as_f32();
+        let x = &inputs[2];
+        let y = &inputs[3];
+        let mask = inputs[4].as_f32();
+        let clip_r = inputs[5].item_f32() as f64;
+        let full = m.layout.merge(frozen, train, &self.meta.subset);
+        let net = m.net(&full);
+        let slots = m.train_slots(&self.meta.subset);
+        let pt = self.meta.pt;
+        let b = self.meta.batch;
+        let dp = self.is_dp();
+        let mode = self.clip_mode();
+        let embed_slot = slots.get("embed").copied();
+
+        let mut loss_sum = 0.0f64;
+        let mut grad_sum = vec![0.0f64; pt];
+        let mut sq_norms = vec![0.0f32; b];
+        let mut g = vec![0.0f64; pt];
+        for row in 0..b {
+            if mask[row] <= 0.0 {
+                continue;
+            }
+            for v in g.iter_mut() {
+                *v = 0.0;
+            }
+            let mut row_loss = 0.0f64;
+            match m.kind {
+                RefKind::Cls => {
+                    let toks = &x.as_i32()[row * m.t..(row + 1) * m.t];
+                    let (feat, active) = m.pooled_feat(&net, toks);
+                    let fwd = m.forward_feat(&net, feat);
+                    let label = (y.as_i32()[row].max(0) as usize) % m.out;
+                    let (loss, dl) = softmax_ce(&fwd.logits, label);
+                    row_loss = loss;
+                    let dfeat =
+                        m.backward_feat(&net, &fwd, &dl, &slots, &mut g, embed_slot.is_some());
+                    if let (Some((off, _)), Some(dfeat)) = (embed_slot, dfeat) {
+                        if !active.is_empty() {
+                            let inv = 1.0 / active.len() as f64;
+                            for &tok in &active {
+                                let ge = &mut g[off + tok * m.d..off + (tok + 1) * m.d];
+                                for i in 0..m.d {
+                                    ge[i] += dfeat[i] * inv;
+                                }
+                            }
+                        }
+                    }
+                }
+                RefKind::Lm => {
+                    let toks = &x.as_i32()[row * m.t..(row + 1) * m.t];
+                    let targets = &y.as_i32()[row * m.t..(row + 1) * m.t];
+                    for p in 0..m.t {
+                        let target = targets[p];
+                        if target <= 0 {
+                            continue; // pad / ignore
+                        }
+                        let (feat, tok) = m.token_feat(&net, toks[p]);
+                        let fwd = m.forward_feat(&net, feat);
+                        let (loss, dl) = softmax_ce(&fwd.logits, target as usize % m.out);
+                        row_loss += loss;
+                        let dfeat =
+                            m.backward_feat(&net, &fwd, &dl, &slots, &mut g, embed_slot.is_some());
+                        if let (Some((off, _)), Some(dfeat)) = (embed_slot, dfeat) {
+                            let ge = &mut g[off + tok * m.d..off + (tok + 1) * m.d];
+                            for i in 0..m.d {
+                                ge[i] += dfeat[i];
+                            }
+                        }
+                    }
+                }
+                RefKind::Vit | RefKind::Cnn => {
+                    let fwd = m.forward_feat(&net, m.pixel_feat(x, row));
+                    if m.kind == RefKind::Vit {
+                        let label = (y.as_i32()[row].max(0) as usize) % m.out;
+                        let (loss, dl) = softmax_ce(&fwd.logits, label);
+                        row_loss = loss;
+                        m.backward_feat(&net, &fwd, &dl, &slots, &mut g, false);
+                    } else {
+                        let targets: Vec<f64> = y.as_f32()[row * m.out..(row + 1) * m.out]
+                            .iter()
+                            .map(|&v| v as f64)
+                            .collect();
+                        let (loss, dl) = sigmoid_bce(&fwd.logits, &targets);
+                        row_loss = loss;
+                        m.backward_feat(&net, &fwd, &dl, &slots, &mut g, false);
+                    }
+                }
+            }
+            let sq: f64 = g.iter().map(|&v| v * v).sum();
+            sq_norms[row] = sq as f32;
+            let c = if dp { clip_factor(sq, clip_r, mode) } else { 1.0 };
+            for (gs, &gi) in grad_sum.iter_mut().zip(&g) {
+                *gs += c * gi;
+            }
+            loss_sum += row_loss * mask[row] as f64;
+        }
+        Ok(vec![
+            Tensor::scalar_f32(loss_sum as f32),
+            Tensor::f32(vec![pt], grad_sum.iter().map(|&v| v as f32).collect()),
+            Tensor::f32(vec![b], sq_norms),
+        ])
+    }
+
+    fn run_eval(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &self.model;
+        let full = inputs[1].as_f32();
+        let x = &inputs[2];
+        let y = &inputs[3];
+        let mask = inputs[4].as_f32();
+        let net = m.net(full);
+        let b = self.meta.batch;
+        let (mut a_sum, mut b_sum) = (0.0f64, 0.0f64);
+        for row in 0..b {
+            if mask[row] <= 0.0 {
+                continue;
+            }
+            match m.kind {
+                RefKind::Cls => {
+                    let toks = &x.as_i32()[row * m.t..(row + 1) * m.t];
+                    let (feat, _) = m.pooled_feat(&net, toks);
+                    let fwd = m.forward_feat(&net, feat);
+                    let label = (y.as_i32()[row].max(0) as usize) % m.out;
+                    let (loss, _) = softmax_ce(&fwd.logits, label);
+                    a_sum += loss;
+                    b_sum += (argmax(&fwd.logits) == label) as u32 as f64;
+                }
+                RefKind::Lm => {
+                    let toks = &x.as_i32()[row * m.t..(row + 1) * m.t];
+                    let targets = &y.as_i32()[row * m.t..(row + 1) * m.t];
+                    for p in 0..m.t {
+                        let target = targets[p];
+                        if target <= 0 {
+                            continue;
+                        }
+                        let (feat, _) = m.token_feat(&net, toks[p]);
+                        let fwd = m.forward_feat(&net, feat);
+                        let (loss, _) = softmax_ce(&fwd.logits, target as usize % m.out);
+                        a_sum += loss;
+                        b_sum += 1.0;
+                    }
+                }
+                RefKind::Vit => {
+                    let fwd = m.forward_feat(&net, m.pixel_feat(x, row));
+                    let label = (y.as_i32()[row].max(0) as usize) % m.out;
+                    let (loss, _) = softmax_ce(&fwd.logits, label);
+                    a_sum += loss;
+                    b_sum += (argmax(&fwd.logits) == label) as u32 as f64;
+                }
+                RefKind::Cnn => {
+                    let fwd = m.forward_feat(&net, m.pixel_feat(x, row));
+                    let targets: Vec<f64> =
+                        y.as_f32()[row * m.out..(row + 1) * m.out].iter().map(|&v| v as f64).collect();
+                    let (loss, _) = sigmoid_bce(&fwd.logits, &targets);
+                    a_sum += loss;
+                    let correct = fwd
+                        .logits
+                        .iter()
+                        .zip(&targets)
+                        .filter(|(&l, &y)| (l > 0.0) == (y > 0.5))
+                        .count();
+                    b_sum += correct as f64 / m.out as f64;
+                }
+            }
+        }
+        Ok(vec![Tensor::scalar_f32(a_sum as f32), Tensor::scalar_f32(b_sum as f32)])
+    }
+
+    fn run_decode(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &self.model;
+        let full = inputs[1].as_f32();
+        let x = inputs[2].as_i32();
+        let pos = inputs[3].as_i32();
+        let net = m.net(full);
+        let b = self.meta.batch;
+        let mut logits_out = vec![0.0f32; b * m.vocab];
+        for row in 0..b {
+            let p = (pos[row].max(0) as usize).min(m.t - 1);
+            let (feat, _) = m.token_feat(&net, x[row * m.t + p]);
+            let fwd = m.forward_feat(&net, feat);
+            for (k, &l) in fwd.logits.iter().enumerate() {
+                logits_out[row * m.vocab + k] = l as f32;
+            }
+        }
+        Ok(vec![Tensor::f32(vec![b, m.vocab], logits_out)])
+    }
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl StepRunner for RefStep {
+    fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        check_inputs(&self.meta, inputs)?;
+        match self.meta.step.as_str() {
+            "train" => self.run_train(inputs),
+            "eval" => self.run_eval(inputs),
+            "decode" => self.run_decode(inputs),
+            other => Err(EngineError::backend(NAME, format!("unknown step kind {other:?}"))),
+        }
+    }
+
+    fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError> {
+        Ok(Pinned::Host(t.clone()))
+    }
+
+    fn run_pinned(
+        &self,
+        pinned: &[&Pinned],
+        host: &[Option<&Tensor>],
+    ) -> Result<Vec<Tensor>, EngineError> {
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(host.len());
+        let mut pi = 0usize;
+        for slot in host {
+            match slot {
+                Some(t) => inputs.push((*t).clone()),
+                None => {
+                    let p = pinned.get(pi).ok_or_else(|| {
+                        EngineError::backend(NAME, "run_pinned: not enough pinned inputs")
+                    })?;
+                    pi += 1;
+                    match p {
+                        Pinned::Host(t) => inputs.push(t.clone()),
+                        Pinned::Device(_) => {
+                            return Err(EngineError::backend(
+                                NAME,
+                                "run_pinned received a device buffer from another backend",
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        self.run(&inputs)
+    }
+
+    fn prefers_pinned(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(artifact: &str) -> (InterpreterBackend, Rc<dyn StepRunner>) {
+        let mut b = InterpreterBackend::new();
+        let s = b.load(artifact).unwrap();
+        (b, s)
+    }
+
+    /// Build full-shape train inputs for a step, with `rows` active examples.
+    fn train_inputs(
+        backend: &InterpreterBackend,
+        step: &dyn StepRunner,
+        rows: usize,
+        seed: u64,
+    ) -> Vec<Tensor> {
+        let meta = step.meta().clone();
+        let layout = backend.layout(&meta.model).unwrap();
+        let full = backend.init_params(&meta.model).unwrap();
+        let (frozen, train) = layout.split(&full, &meta.subset);
+        let b = meta.batch;
+        let mut rng = ChaChaRng::new(seed, 0x7E57);
+        let x_spec = &meta.inputs[2];
+        let y_spec = &meta.inputs[3];
+        let x = if x_spec.dtype == "int32" {
+            let n = x_spec.elements();
+            Tensor::i32(
+                x_spec.shape.clone(),
+                (0..n).map(|_| 1 + rng.below(300) as i32).collect(),
+            )
+        } else {
+            let n = x_spec.elements();
+            Tensor::f32(
+                x_spec.shape.clone(),
+                (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect(),
+            )
+        };
+        let y = if y_spec.dtype == "int32" {
+            let n = y_spec.elements();
+            Tensor::i32(y_spec.shape.clone(), (0..n).map(|_| rng.below(2) as i32).collect())
+        } else {
+            let n = y_spec.elements();
+            Tensor::f32(
+                y_spec.shape.clone(),
+                (0..n).map(|_| (rng.uniform() < 0.5) as i32 as f32).collect(),
+            )
+        };
+        let mut mask = vec![0.0f32; b];
+        for m in mask.iter_mut().take(rows) {
+            *m = 1.0;
+        }
+        vec![
+            Tensor::f32(vec![meta.pf], frozen),
+            Tensor::f32(vec![meta.pt], train),
+            x,
+            y,
+            Tensor::f32(vec![b], mask),
+            Tensor::scalar_f32(1000.0), // R large enough that clipping is a no-op
+        ]
+    }
+
+    #[test]
+    fn parses_parametric_model_names() {
+        let b = InterpreterBackend::new();
+        assert_eq!(b.model_info("cls-t128").unwrap().shape.t, 128);
+        assert_eq!(b.model_info("cnn-r32").unwrap().shape.img, 32);
+        assert_eq!(b.model_info("vit-c20").unwrap().shape.n_cls, 20);
+        assert!(matches!(b.model_info("mamba-7b"), Err(EngineError::UnknownModel(_))));
+        // bias-less CNN really has no enc/b leaf
+        let l = b.layout("cnn-small").unwrap();
+        assert!(l.leaves.iter().all(|leaf| leaf.name != "enc/b"));
+        let l = b.layout("cnn-small-bias").unwrap();
+        assert!(l.leaves.iter().any(|leaf| leaf.name == "enc/b"));
+    }
+
+    #[test]
+    fn layout_is_consistent() {
+        let b = InterpreterBackend::new();
+        for model in BUILTIN_MODELS {
+            let layout = b.layout(model).unwrap();
+            let init = b.init_params(model).unwrap();
+            assert_eq!(init.len(), layout.n_params, "{model}");
+            let (frozen, train) = layout.split(&init, "bitfit");
+            assert_eq!(layout.merge(&frozen, &train, "bitfit"), init, "{model}");
+            assert!(layout.subset_size("bitfit") < layout.subset_size("full"), "{model}");
+            // init is deterministic
+            assert_eq!(b.init_params(model).unwrap(), init, "{model}");
+        }
+    }
+
+    #[test]
+    fn masked_rows_contribute_nothing() {
+        for artifact in ["cls-base__dp-bitfit", "lm-small__dp-bitfit", "cnn-small-bias__dp-bitfit-add"]
+        {
+            let (backend, step) = load(artifact);
+            let mut inputs = train_inputs(&backend, step.as_ref(), 4, 9);
+            let out4 = step.run(&inputs).unwrap();
+            // zero mask => zero loss + zero grad
+            let b = step.meta().batch;
+            inputs[4] = Tensor::f32(vec![b], vec![0.0; b]);
+            let out0 = step.run(&inputs).unwrap();
+            assert_eq!(out0[0].item_f32(), 0.0, "{artifact}");
+            assert!(out0[1].as_f32().iter().all(|&g| g == 0.0), "{artifact}");
+            assert!(out4[0].item_f32() > 0.0, "{artifact}");
+            assert!(out4[1].as_f32().iter().any(|&g| g != 0.0), "{artifact}");
+        }
+    }
+
+    #[test]
+    fn analytic_gradients_match_finite_differences() {
+        for artifact in [
+            "cls-base__nondp-full",
+            "cls-base__nondp-bitfit",
+            "lm-small__nondp-full",
+            "vit-c10__nondp-full",
+            "cnn-small-bias__nondp-full",
+            "cnn-small__nondp-full",
+        ] {
+            let (backend, step) = load(artifact);
+            let inputs = train_inputs(&backend, step.as_ref(), 3, 11);
+            let out = step.run(&inputs).unwrap();
+            let grad = out[1].as_f32().to_vec();
+            let loss0 = out[0].item_f32() as f64;
+            let pt = step.meta().pt;
+            // probe a few parameters spread across the trainable vector
+            let mut rng = ChaChaRng::new(5, 0xF1D);
+            let eps = 2e-3f32;
+            for _ in 0..6 {
+                let i = rng.below(pt);
+                let mut pert = inputs.clone();
+                let mut train = pert[1].as_f32().to_vec();
+                train[i] += eps;
+                pert[1] = Tensor::f32(vec![pt], train);
+                let loss1 = step.run(&pert).unwrap()[0].item_f32() as f64;
+                let numeric = (loss1 - loss0) / eps as f64;
+                let analytic = grad[i] as f64;
+                let scale = analytic.abs().max(numeric.abs()).max(0.05);
+                assert!(
+                    (numeric - analytic).abs() / scale < 0.08,
+                    "{artifact} param {i}: numeric {numeric} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dp_clipping_bounds_per_sample_norms() {
+        let (backend, step) = load("cls-base__dp-bitfit");
+        let mut inputs = train_inputs(&backend, step.as_ref(), 8, 13);
+        let r = 0.05f32;
+        inputs[5] = Tensor::scalar_f32(r);
+        let out = step.run(&inputs).unwrap();
+        // sum of 8 clipped per-sample grads has norm <= 8 * R
+        let norm = crate::util::tensor::l2_norm(out[1].as_f32());
+        assert!(norm <= 8.0 * r as f64 + 1e-5, "norm {norm}");
+        // squared norms output is finite and non-negative
+        assert!(out[2].as_f32().iter().all(|&s| s.is_finite() && s >= 0.0));
+        // nondp twin does NOT clip: same inputs, bigger gradient
+        let (backend2, step2) = load("cls-base__nondp-bitfit");
+        let mut inputs2 = train_inputs(&backend2, step2.as_ref(), 8, 13);
+        inputs2[5] = Tensor::scalar_f32(r);
+        let out2 = step2.run(&inputs2).unwrap();
+        let norm2 = crate::util::tensor::l2_norm(out2[1].as_f32());
+        assert!(norm2 > norm, "clipped {norm} vs unclipped {norm2}");
+    }
+
+    #[test]
+    fn training_reduces_loss_with_sgd() {
+        let (backend, step) = load("cls-base__nondp-full");
+        let meta = step.meta().clone();
+        let layout = backend.layout(&meta.model).unwrap();
+        let full = backend.init_params(&meta.model).unwrap();
+        let (frozen, mut train) = layout.split(&full, &meta.subset);
+        let b = meta.batch;
+        let base = train_inputs(&backend, step.as_ref(), b, 21);
+        let (x, y, mask) = (base[2].clone(), base[3].clone(), base[4].clone());
+        let frozen_t = Tensor::f32(vec![meta.pf], frozen);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..20 {
+            let out = step
+                .run(&[
+                    frozen_t.clone(),
+                    Tensor::f32(vec![meta.pt], train.clone()),
+                    x.clone(),
+                    y.clone(),
+                    mask.clone(),
+                    Tensor::scalar_f32(1000.0),
+                ])
+                .unwrap();
+            last = out[0].item_f32() / b as f32;
+            first.get_or_insert(last);
+            let grad = out[1].as_f32();
+            for (p, g) in train.iter_mut().zip(grad) {
+                *p -= 0.5 * g / b as f32;
+            }
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.8, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn eval_and_decode_contracts() {
+        let (backend, _step) = load("lm-small__eval");
+        let mut b2 = InterpreterBackend::new();
+        let eval = b2.load("lm-small__eval").unwrap();
+        let meta = eval.meta().clone();
+        assert_eq!(meta.step, "eval");
+        let full = backend.init_params("lm-small").unwrap();
+        let b = meta.batch;
+        let t = 48;
+        let x: Vec<i32> = (0..b * t).map(|i| (i % 383) as i32 + 1).collect();
+        let y: Vec<i32> = (0..b * t).map(|i| ((i + 1) % 383) as i32 + 1).collect();
+        let out = eval
+            .run(&[
+                Tensor::f32(vec![0], vec![]),
+                Tensor::f32(vec![full.len()], full.clone()),
+                Tensor::i32(vec![b, t], x.clone()),
+                Tensor::i32(vec![b, t], y),
+                Tensor::f32(vec![b], vec![1.0; b]),
+            ])
+            .unwrap();
+        assert!(out[0].item_f32() > 0.0); // summed nll
+        assert_eq!(out[1].item_f32(), (b * t) as f32); // every target counted
+        let dec = b2.load("lm-small__decode").unwrap();
+        assert_eq!(dec.meta().step, "decode");
+        let pos: Vec<i32> = (0..b as i32).map(|i| 5 + i).collect();
+        let out = dec
+            .run(&[
+                Tensor::f32(vec![0], vec![]),
+                Tensor::f32(vec![full.len()], full),
+                Tensor::i32(vec![b, t], x),
+                Tensor::i32(vec![b], pos),
+            ])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![b, 384]);
+        assert!(out[0].as_f32().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn unknown_artifacts_are_typed_errors() {
+        let mut b = InterpreterBackend::new();
+        assert!(matches!(
+            b.load("cls-base__dp-quantum"),
+            Err(EngineError::UnknownArtifact { .. })
+        ));
+        assert!(matches!(b.load("cls-base"), Err(EngineError::UnknownArtifact { .. })));
+        assert!(matches!(b.load("vit-c10__decode"), Err(EngineError::UnknownArtifact { .. })));
+        assert!(matches!(
+            b.load("cls-base__dp-bitfit__banana"),
+            Err(EngineError::UnknownArtifact { .. })
+        ));
+    }
+}

@@ -1,0 +1,305 @@
+//! `fastdp::engine` — the public entry point for running (DP) fine-tuning
+//! jobs.
+//!
+//! The engine is a PrivacyEngine-style façade: you describe a job as a typed
+//! [`JobSpec`] (model, [`Method`], [`Privacy`] budget, optimizer, sampling
+//! plan), hand it to an [`Engine`] that owns a pluggable [`Backend`] plus
+//! metric sinks, and get back a [`Session`] with `run_step` / `evaluate` /
+//! `checkpoint` / `privacy_spent`.  Multiple sessions can run concurrently
+//! over one engine: compiled steps are cached in the backend and shared.
+//!
+//! ```no_run
+//! use fastdp::engine::{Engine, JobSpec, Method};
+//!
+//! let mut engine = Engine::auto("artifacts"); // PJRT if artifacts exist, else interpreter
+//! let spec = JobSpec::builder("cls-base", Method::BiTFiT)
+//!     .task("sst2")
+//!     .eps(8.0)          // target (eps, delta); sigma is calibrated
+//!     .batch(256)
+//!     .steps(60)
+//!     .n_train(4096)
+//!     .build()?;
+//! let data = engine.dataset(&spec.model, "sst2", spec.n_train, 11)?;
+//! let mut session = engine.session(&spec)?;
+//! for _ in 0..spec.steps {
+//!     session.run_step(&data)?;
+//! }
+//! println!("eps spent: {:.2}", session.privacy_spent().epsilon);
+//! session.checkpoint("runs/sst2.ckpt")?;
+//! # Ok::<(), fastdp::engine::EngineError>(())
+//! ```
+//!
+//! Two backends ship with the crate: [`PjrtBackend`] (AOT HLO artifacts via
+//! PJRT — the fast path) and [`InterpreterBackend`] (a dependency-free
+//! pure-Rust reference that needs no artifact directory — CI, tests, and
+//! laptops).  [`Engine::auto`] picks for you.
+
+mod backend;
+mod error;
+mod interp;
+mod pjrt;
+mod session;
+mod spec;
+
+pub use backend::{check_inputs, Backend, ModelInfo, Pinned, StepRunner};
+pub use error::EngineError;
+pub use interp::InterpreterBackend;
+pub use pjrt::PjrtBackend;
+pub use session::{evaluate_params, EvalOutcome, PrivacySpent, Session, StepStats};
+pub use spec::{JobPlan, JobSpec, JobSpecBuilder, Method, PhaseSpec, Privacy};
+
+// Engine-level re-exports so drivers only import `fastdp::engine`.
+pub use crate::coordinator::optim::{LrSchedule, OptimKind};
+pub use crate::coordinator::task_data::TaskData;
+pub use crate::coordinator::workloads::ModelShape;
+pub use crate::dp::clip::ClipMode;
+pub use crate::runtime::Layout;
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::metrics::JsonlSink;
+use crate::coordinator::workloads;
+use crate::data::GenExample;
+
+/// The façade owning a backend + metric-sink configuration.
+pub struct Engine {
+    backend: Box<dyn Backend>,
+    metrics_dir: Option<PathBuf>,
+    /// In-memory cache of derived parameter vectors (pretrained backbones),
+    /// so backends without a disk home (interpreter) don't re-pretrain per
+    /// job.
+    params_cache: std::collections::HashMap<String, Vec<f32>>,
+}
+
+impl Engine {
+    /// Wrap an explicit backend.
+    pub fn new(backend: Box<dyn Backend>) -> Engine {
+        Engine { backend, metrics_dir: None, params_cache: std::collections::HashMap::new() }
+    }
+
+    /// The dependency-free reference interpreter (no artifacts needed).
+    pub fn interpreter() -> Engine {
+        Engine::new(Box::new(InterpreterBackend::new()))
+    }
+
+    /// The PJRT backend over a compiled artifact directory.
+    pub fn pjrt(artifact_dir: impl AsRef<Path>) -> Result<Engine, EngineError> {
+        Ok(Engine::new(Box::new(PjrtBackend::open(artifact_dir)?)))
+    }
+
+    /// PJRT when `artifact_dir` holds a manifest, else the interpreter.
+    ///
+    /// A present-but-broken artifact directory falls back to the interpreter
+    /// with a loud stderr warning (numbers from the reference interpreter are
+    /// correctness-grade, not performance-grade).
+    pub fn auto(artifact_dir: impl AsRef<Path>) -> Engine {
+        if PjrtBackend::available(&artifact_dir) {
+            match Engine::pjrt(&artifact_dir) {
+                // built against the vendored xla stub, PJRT can open
+                // artifacts but never execute them — don't commit to it
+                Ok(e) if e.platform().contains("xla stub") => eprintln!(
+                    "warning: artifact directory {} exists but this binary links the xla stub \
+                     (no HLO execution); using the reference interpreter",
+                    artifact_dir.as_ref().display()
+                ),
+                Ok(e) => return e,
+                Err(e) => eprintln!(
+                    "warning: artifact directory {} exists but the PJRT backend failed to open \
+                     ({e}); falling back to the reference interpreter",
+                    artifact_dir.as_ref().display()
+                ),
+            }
+        }
+        Engine::interpreter()
+    }
+
+    /// Short backend identifier (`"pjrt"` / `"interpreter"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Human-readable platform description.
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    /// Directory where per-run JSONL metric logs are written (one file per
+    /// session, named after [`JobSpec::run_name`]).
+    pub fn set_metrics_dir(&mut self, dir: impl AsRef<Path>) {
+        self.metrics_dir = Some(dir.as_ref().to_path_buf());
+    }
+
+    /// Models the backend can serve.
+    pub fn models(&self) -> Vec<String> {
+        self.backend.models()
+    }
+
+    /// Step artifacts the backend can serve.
+    pub fn artifacts(&self) -> Vec<String> {
+        self.backend.artifacts()
+    }
+
+    pub fn model_info(&self, model: &str) -> Result<ModelInfo, EngineError> {
+        self.backend.model_info(model)
+    }
+
+    /// The flat-parameter layout contract for a model.
+    pub fn layout(&self, model: &str) -> Result<Layout, EngineError> {
+        self.backend.layout(model)
+    }
+
+    /// The model's deterministic initial parameter vector.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>, EngineError> {
+        self.backend.init_params(model)
+    }
+
+    /// Artifact metadata without loading the step.
+    pub fn artifact_meta(&self, artifact: &str) -> Result<crate::runtime::ArtifactMeta, EngineError> {
+        self.backend.artifact_meta(artifact)
+    }
+
+    /// Load (and cache) an executable step by artifact name.
+    pub fn runner(&mut self, artifact: &str) -> Result<Rc<dyn StepRunner>, EngineError> {
+        self.backend.load(artifact)
+    }
+
+    /// The model's eval step.
+    pub fn evaluator(&mut self, model: &str) -> Result<Rc<dyn StepRunner>, EngineError> {
+        self.backend.load(&format!("{model}__eval"))
+    }
+
+    /// The model's greedy-decode step (LMs only).
+    pub fn decoder(&mut self, model: &str) -> Result<Rc<dyn StepRunner>, EngineError> {
+        self.backend.load(&format!("{model}__decode"))
+    }
+
+    /// Default task for a model (by its kind).
+    pub fn default_task(&self, model: &str) -> Result<&'static str, EngineError> {
+        Ok(workloads::default_task(&self.model_info(model)?.shape.kind))
+    }
+
+    /// Build a synthetic dataset shaped for `model`.
+    pub fn dataset(
+        &self,
+        model: &str,
+        task: &str,
+        n: usize,
+        seed: u64,
+    ) -> Result<TaskData, EngineError> {
+        workloads::build(&self.model_info(model)?.shape, task, n, seed)
+    }
+
+    /// E2E generation data plus reference sets for the NLG metrics.
+    pub fn dataset_e2e(
+        &self,
+        model: &str,
+        n: usize,
+        seed: u64,
+    ) -> Result<(TaskData, Vec<GenExample>), EngineError> {
+        workloads::build_e2e(&self.model_info(model)?.shape, n, seed)
+    }
+
+    /// Reset a model's head leaves to their deterministic init values
+    /// (downstream tasks replace the classification head, paper §4.3).
+    pub fn reset_head(&self, model: &str, params: &mut [f32]) -> Result<(), EngineError> {
+        let layout = self.layout(model)?;
+        let init = self.init_params(model)?;
+        layout.copy_head(params, &init);
+        Ok(())
+    }
+
+    /// Where derived state (pretrained checkpoints) may be cached.
+    pub fn cache_dir(&self) -> Option<PathBuf> {
+        self.backend.cache_dir()
+    }
+
+    /// Look up an in-memory cached parameter vector (pretrained backbones).
+    pub fn cached_params(&self, key: &str) -> Option<Vec<f32>> {
+        self.params_cache.get(key).cloned()
+    }
+
+    /// Store a parameter vector in the in-memory cache.
+    pub fn cache_params(&mut self, key: &str, params: Vec<f32>) {
+        self.params_cache.insert(key.to_string(), params);
+    }
+
+    /// Start a session from the model's deterministic init parameters.
+    pub fn session(&mut self, spec: &JobSpec) -> Result<Session, EngineError> {
+        let params = self.init_params(&spec.model)?;
+        self.session_from(spec, params)
+    }
+
+    /// Start a session from an explicit (e.g. pretrained) parameter vector.
+    pub fn session_from(
+        &mut self,
+        spec: &JobSpec,
+        params: Vec<f32>,
+    ) -> Result<Session, EngineError> {
+        // sigma comes from the same resolution `--dry-run` prints, so plan
+        // and training can never disagree
+        let sigma = spec.plan().sigma;
+        let layout = self.layout(&spec.model)?;
+        let mut phases = Vec::new();
+        for phase in spec.phases() {
+            let runner = self.backend.load(&phase.artifact)?;
+            let meta = runner.meta();
+            if meta.step != "train" {
+                return Err(EngineError::Data(format!(
+                    "{} is not a train artifact",
+                    phase.artifact
+                )));
+            }
+            phases.push((phase, runner));
+        }
+        // best-effort: a missing eval artifact must not block training-only
+        // jobs (the old Trainer had no eval requirement); Session::evaluate
+        // reports the gap if it is ever called
+        let eval_runner = self.evaluator(&spec.model).ok();
+        let sink = match &self.metrics_dir {
+            Some(dir) => {
+                // never truncate an earlier session's log: pick the first
+                // free run_name[__N].jsonl
+                let base = spec.run_name();
+                let mut path = dir.join(format!("{base}.jsonl"));
+                let mut n = 1u32;
+                while path.exists() && n < 10_000 {
+                    n += 1;
+                    path = dir.join(format!("{base}__{n}.jsonl"));
+                }
+                Some(JsonlSink::create(path).map_err(|e| EngineError::Metrics(format!("{e:#}")))?)
+            }
+            None => None,
+        };
+        Session::assemble(spec.clone(), phases, eval_runner, layout, params, sigma, sink)
+    }
+
+    /// Evaluate a checkpointed/explicit parameter vector on a dataset.
+    pub fn evaluate(
+        &mut self,
+        model: &str,
+        params: &[f32],
+        data: &TaskData,
+        max_examples: usize,
+    ) -> Result<EvalOutcome, EngineError> {
+        let eval = self.evaluator(model)?;
+        evaluate_params(eval.as_ref(), params, data, max_examples)
+    }
+
+    /// Load a checkpoint, verifying it belongs to `model`.
+    pub fn load_checkpoint(
+        &self,
+        model: &str,
+        path: impl AsRef<Path>,
+    ) -> Result<Vec<f32>, EngineError> {
+        let ck = Checkpoint::load(path).map_err(|e| EngineError::Checkpoint(format!("{e:#}")))?;
+        if ck.model != model {
+            return Err(EngineError::Checkpoint(format!(
+                "checkpoint is for model {:?}, wanted {model:?}",
+                ck.model
+            )));
+        }
+        Ok(ck.params)
+    }
+}

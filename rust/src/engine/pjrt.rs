@@ -1,0 +1,152 @@
+//! The PJRT backend: AOT HLO artifacts executed through `runtime::Runtime`.
+//!
+//! This is a thin adapter — compilation caching, device upload and the
+//! literal/buffer paths all live in [`crate::runtime`]; this module maps
+//! them onto the [`Backend`] / [`StepRunner`] contract and converts errors
+//! into typed [`EngineError`]s.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::coordinator::workloads::ModelShape;
+use crate::runtime::{ArtifactMeta, Executable, Layout, Runtime};
+use crate::util::tensor::Tensor;
+
+use super::backend::{Backend, ModelInfo, Pinned, StepRunner};
+use super::error::EngineError;
+
+const NAME: &str = "pjrt";
+
+/// Backend over a compiled artifact directory.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Open an artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<PjrtBackend, EngineError> {
+        let rt = Runtime::open(dir).map_err(|e| EngineError::backend(NAME, format!("{e:#}")))?;
+        Ok(PjrtBackend { rt })
+    }
+
+    /// Whether `dir` looks like an artifact directory.
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.rt.manifest.models.keys().cloned().collect()
+    }
+
+    fn artifacts(&self) -> Vec<String> {
+        self.rt.manifest.artifacts.clone()
+    }
+
+    fn model_info(&self, model: &str) -> Result<ModelInfo, EngineError> {
+        let entry = self
+            .rt
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| EngineError::UnknownModel(model.to_string()))?;
+        let g = |k: &str| entry.cfg.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        Ok(ModelInfo {
+            shape: ModelShape {
+                kind: entry.kind.clone(),
+                t: g("t"),
+                vocab: g("vocab"),
+                img: g("img"),
+                n_cls: g("n_cls"),
+                n_out: g("n_out"),
+            },
+            n_params: entry.n_params,
+            d: g("d"),
+            layers: g("layers"),
+            patch: g("patch"),
+        })
+    }
+
+    fn layout(&self, model: &str) -> Result<Layout, EngineError> {
+        self.rt.layout(model).map_err(|e| EngineError::backend(NAME, format!("{e:#}")))
+    }
+
+    fn init_params(&self, model: &str) -> Result<Vec<f32>, EngineError> {
+        self.rt.init_params(model).map_err(|e| EngineError::backend(NAME, format!("{e:#}")))
+    }
+
+    fn artifact_meta(&self, artifact: &str) -> Result<ArtifactMeta, EngineError> {
+        ArtifactMeta::load(self.rt.artifact_dir(), artifact).map_err(|e| {
+            EngineError::UnknownArtifact { name: artifact.to_string(), detail: format!("{e:#}") }
+        })
+    }
+
+    fn load(&mut self, artifact: &str) -> Result<Rc<dyn StepRunner>, EngineError> {
+        let exe = self.rt.load(artifact).map_err(|e| EngineError::UnknownArtifact {
+            name: artifact.to_string(),
+            detail: format!("{e:#}"),
+        })?;
+        Ok(Rc::new(PjrtStep { exe }))
+    }
+
+    fn cache_dir(&self) -> Option<PathBuf> {
+        Some(self.rt.artifact_dir().to_path_buf())
+    }
+}
+
+/// A compiled PJRT executable as a [`StepRunner`].
+struct PjrtStep {
+    exe: Rc<Executable>,
+}
+
+impl StepRunner for PjrtStep {
+    fn meta(&self) -> &ArtifactMeta {
+        &self.exe.meta
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        self.exe.run(inputs).map_err(|e| EngineError::backend(NAME, format!("{e:#}")))
+    }
+
+    fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError> {
+        let dev = self.exe.upload(t).map_err(|e| EngineError::backend(NAME, format!("{e:#}")))?;
+        Ok(Pinned::Device(dev))
+    }
+
+    fn run_pinned(
+        &self,
+        pinned: &[&Pinned],
+        host: &[Option<&Tensor>],
+    ) -> Result<Vec<Tensor>, EngineError> {
+        let mut device: Vec<&crate::runtime::DeviceInput> = Vec::with_capacity(pinned.len());
+        for p in pinned {
+            match p {
+                Pinned::Device(d) => device.push(d),
+                Pinned::Host(_) => {
+                    return Err(EngineError::backend(
+                        NAME,
+                        "run_pinned received a host-pinned input from another backend",
+                    ));
+                }
+            }
+        }
+        self.exe
+            .run_mixed(&device, host)
+            .map_err(|e| EngineError::backend(NAME, format!("{e:#}")))
+    }
+
+    fn prefers_pinned(&self) -> bool {
+        // The buffer path trips an xla_extension 0.5.1 assertion in some
+        // interleavings (see runtime::mod docs); keep it opt-in.
+        std::env::var("FASTDP_DEVICE_RESIDENT").is_ok()
+    }
+}

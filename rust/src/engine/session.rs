@@ -1,0 +1,394 @@
+//! `Session`: one training job running over a backend.
+//!
+//! This is Algorithm 1 at the logical-batch level, lifted off the raw PJRT
+//! runtime and onto the [`StepRunner`] contract: Poisson-sample a logical
+//! batch, stream it through the step in fixed-shape masked microbatches
+//! (per-sample clipping happens inside the step; clipped sums accumulate
+//! exactly across chunks), add Gaussian noise once, average by the expected
+//! batch size, descend with the flat-vector optimizer, advance the RDP
+//! accountant.  Two-phase X+BiTFiT jobs switch artifacts mid-run while the
+//! accountant composes across the switch.
+
+use std::rc::Rc;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::metrics::JsonlSink;
+use crate::coordinator::optim::Optimizer;
+use crate::coordinator::task_data::TaskData;
+use crate::dp::rdp::RdpAccountant;
+use crate::dp::sampler::PoissonSampler;
+use crate::runtime::{ArtifactMeta, Layout};
+use crate::util::rng::ChaChaRng;
+use crate::util::tensor::Tensor;
+use crate::util::Timers;
+
+use super::backend::{Pinned, StepRunner};
+use super::error::EngineError;
+use super::spec::{JobSpec, PhaseSpec};
+
+/// Per-step statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: u64,
+    pub loss: f64,
+    pub batch: usize,
+    pub grad_norm: f64,
+    pub epsilon: f64,
+}
+
+/// Privacy spent so far by a session.
+#[derive(Debug, Clone, Copy)]
+pub struct PrivacySpent {
+    pub epsilon: f64,
+    pub delta: f64,
+    pub sigma: f64,
+    pub q: f64,
+    pub steps: u64,
+}
+
+/// Outcome of an evaluation pass.
+///
+/// For classifiers `metric_a` is summed loss and `metric_b` the correct
+/// count; for LMs `metric_a` is summed NLL and `metric_b` the token count.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutcome {
+    pub metric_a: f64,
+    pub metric_b: f64,
+    pub n: usize,
+}
+
+impl EvalOutcome {
+    /// Classification accuracy in [0, 1].
+    pub fn accuracy(&self) -> f64 {
+        self.metric_b / self.n.max(1) as f64
+    }
+
+    /// LM perplexity (`exp(nll / tokens)`).
+    pub fn perplexity(&self) -> f64 {
+        crate::nlg::perplexity(self.metric_a, self.metric_b)
+    }
+}
+
+/// One phase of a running session.
+struct Phase {
+    spec: PhaseSpec,
+    runner: Rc<dyn StepRunner>,
+}
+
+/// A training session handed out by [`super::Engine::session`].
+pub struct Session {
+    spec: JobSpec,
+    phases: Vec<Phase>,
+    active: usize,
+    /// Steps remaining before the active phase ends.
+    phase_left: u64,
+    layout: Layout,
+    frozen: Tensor,
+    train: Vec<f32>,
+    pinned_frozen: Option<Pinned>,
+    optimizer: Optimizer,
+    sampler: Option<PoissonSampler>,
+    accountant: Option<RdpAccountant>,
+    /// `None` when the backend had no eval step for this model (training
+    /// still works; `evaluate` reports the gap).
+    eval_runner: Option<Rc<dyn StepRunner>>,
+    sink: Option<JsonlSink>,
+    noise_rng: ChaChaRng,
+    data_rng: ChaChaRng,
+    sigma: f64,
+    q: f64,
+    step: u64,
+    pub timers: Timers,
+}
+
+impl Session {
+    /// Assemble a session (called by `Engine::session`).
+    pub(super) fn assemble(
+        spec: JobSpec,
+        phases: Vec<(PhaseSpec, Rc<dyn StepRunner>)>,
+        eval_runner: Option<Rc<dyn StepRunner>>,
+        layout: Layout,
+        start_params: Vec<f32>,
+        sigma: f64,
+        sink: Option<JsonlSink>,
+    ) -> Result<Session, EngineError> {
+        if start_params.len() != layout.n_params {
+            return Err(EngineError::Data(format!(
+                "starting params have {} values, model {} has {}",
+                start_params.len(),
+                spec.model,
+                layout.n_params
+            )));
+        }
+        let phases: Vec<Phase> =
+            phases.into_iter().map(|(spec, runner)| Phase { spec, runner }).collect();
+        let q = spec.q();
+        let meta = phases[0].runner.meta().clone();
+        let is_dp = meta.method.starts_with("dp-");
+        let sampler = if is_dp {
+            Some(PoissonSampler::new(spec.n_train, q, spec.seed ^ 0x5A17))
+        } else {
+            None
+        };
+        let accountant = if is_dp && sigma > 0.0 {
+            Some(RdpAccountant::new(spec.privacy.delta()))
+        } else {
+            None
+        };
+        let mut session = Session {
+            noise_rng: ChaChaRng::new(spec.seed, 0x4015E),
+            data_rng: ChaChaRng::new(spec.seed, 0xDA7A),
+            phase_left: phases[0].spec.steps,
+            optimizer: Optimizer::new(spec.optim, phases[0].spec.lr, 0),
+            active: 0,
+            layout,
+            frozen: Tensor::f32(vec![0], vec![]),
+            train: Vec::new(),
+            pinned_frozen: None,
+            sampler,
+            accountant,
+            eval_runner,
+            sink,
+            sigma,
+            q,
+            step: 0,
+            timers: Timers::new(),
+            phases,
+            spec,
+        };
+        session.load_phase_params(&start_params)?;
+        Ok(session)
+    }
+
+    /// Split `full` for the active phase's subset and (re)build the
+    /// optimizer + pinned frozen input.
+    fn load_phase_params(&mut self, full: &[f32]) -> Result<(), EngineError> {
+        let phase = &self.phases[self.active];
+        let meta = phase.runner.meta();
+        let (frozen, train) = self.layout.split(full, &meta.subset);
+        if frozen.len() != meta.pf || train.len() != meta.pt {
+            return Err(EngineError::Data(format!(
+                "layout split ({}, {}) disagrees with artifact {} ({}, {})",
+                frozen.len(),
+                train.len(),
+                meta.name,
+                meta.pf,
+                meta.pt
+            )));
+        }
+        self.frozen = Tensor::f32(vec![meta.pf], frozen);
+        self.train = train;
+        self.pinned_frozen = if phase.runner.prefers_pinned() {
+            Some(phase.runner.pin(&self.frozen)?)
+        } else {
+            None
+        };
+        self.optimizer = Optimizer::new(self.spec.optim, phase.spec.lr, meta.pt);
+        Ok(())
+    }
+
+    /// Advance to the next phase (two-phase jobs), carrying the accountant.
+    fn switch_phase(&mut self) -> Result<(), EngineError> {
+        let full = self.full_params();
+        self.active += 1;
+        self.phase_left = self.phases[self.active].spec.steps;
+        self.load_phase_params(&full)
+    }
+
+    /// The active phase's step metadata.
+    pub fn meta(&self) -> &ArtifactMeta {
+        self.phases[self.active].runner.meta()
+    }
+
+    /// The job spec this session runs.
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    /// Label of the active phase (`"bitfit"`, `"full"`, ...).
+    pub fn phase_label(&self) -> &'static str {
+        self.phases[self.active].spec.label
+    }
+
+    /// Is this a DP run (noise + Poisson sampling + accounting)?
+    pub fn is_dp(&self) -> bool {
+        self.sampler.is_some()
+    }
+
+    /// Steps taken so far.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Trainable parameter count in the active phase.
+    pub fn trainable_len(&self) -> usize {
+        self.train.len()
+    }
+
+    /// Current merged full parameter vector.
+    pub fn full_params(&self) -> Vec<f32> {
+        self.layout.merge(self.frozen.as_f32(), &self.train, &self.meta().subset)
+    }
+
+    /// Privacy spent so far.
+    pub fn privacy_spent(&self) -> PrivacySpent {
+        PrivacySpent {
+            epsilon: self.accountant.as_ref().map(|a| a.epsilon().0).unwrap_or(0.0),
+            delta: self.spec.privacy.delta(),
+            sigma: self.sigma,
+            q: self.q,
+            steps: self.step,
+        }
+    }
+
+    fn sample_indices(&mut self) -> Vec<usize> {
+        let n = self.spec.n_train;
+        if let Some(s) = &mut self.sampler {
+            s.sample()
+        } else {
+            // non-private: fixed-size uniform sample without replacement
+            let mut idxs: Vec<usize> = (0..n).collect();
+            self.data_rng.shuffle(&mut idxs);
+            idxs.truncate(self.spec.logical_batch.min(n));
+            idxs
+        }
+    }
+
+    /// One logical-batch training step.
+    pub fn run_step(&mut self, data: &TaskData) -> Result<StepStats, EngineError> {
+        if data.len() != self.spec.n_train {
+            return Err(EngineError::Data(format!(
+                "dataset has {} examples but the spec says n_train = {}",
+                data.len(),
+                self.spec.n_train
+            )));
+        }
+        if self.phase_left == 0 && self.active + 1 < self.phases.len() {
+            self.switch_phase()?;
+        }
+        let t0 = std::time::Instant::now();
+        let idxs = self.sample_indices();
+        self.timers.add("sample", t0.elapsed().as_secs_f64());
+        let runner = self.phases[self.active].runner.clone();
+        let meta = runner.meta();
+        let b = meta.batch;
+        let pt = meta.pt;
+        let mut grad = vec![0.0f32; pt];
+        let mut loss_sum = 0.0f64;
+        let train_t = Tensor::f32(vec![pt], self.train.clone());
+        let clip_r = Tensor::scalar_f32(self.spec.clip_r as f32);
+        for chunk in idxs.chunks(b) {
+            let t1 = std::time::Instant::now();
+            let (x, y, mask) = data.fill(chunk, b);
+            self.timers.add("fill", t1.elapsed().as_secs_f64());
+            let t2 = std::time::Instant::now();
+            let out = match &self.pinned_frozen {
+                Some(pinned) => runner.run_pinned(
+                    &[pinned],
+                    &[None, Some(&train_t), Some(&x), Some(&y), Some(&mask), Some(&clip_r)],
+                )?,
+                None => runner.run(&[
+                    self.frozen.clone(),
+                    train_t.clone(),
+                    x,
+                    y,
+                    mask,
+                    clip_r.clone(),
+                ])?,
+            };
+            self.timers.add("execute", t2.elapsed().as_secs_f64());
+            loss_sum += out[0].item_f32() as f64;
+            crate::util::tensor::axpy(&mut grad, 1.0, out[1].as_f32());
+        }
+        let denom = if self.is_dp() {
+            // fixed normalization by the expected batch (standard DP-SGD)
+            self.spec.logical_batch as f64
+        } else {
+            idxs.len().max(1) as f64
+        };
+        if self.is_dp() && self.sigma > 0.0 {
+            crate::dp::add_gaussian_noise(
+                &mut grad,
+                self.sigma,
+                self.spec.clip_r,
+                &mut self.noise_rng,
+            );
+        }
+        for g in grad.iter_mut() {
+            *g /= denom as f32;
+        }
+        let grad_norm = crate::util::tensor::l2_norm(&grad);
+        let lr_base = self.phases[self.active].spec.lr;
+        let lr = self.spec.schedule.at(lr_base, self.step);
+        self.optimizer.step_lr(&mut self.train, &grad, lr);
+        if let Some(acc) = &mut self.accountant {
+            acc.step(self.q, self.sigma);
+        }
+        self.step += 1;
+        self.phase_left = self.phase_left.saturating_sub(1);
+        let stats = StepStats {
+            step: self.step,
+            loss: loss_sum / idxs.len().max(1) as f64,
+            batch: idxs.len(),
+            grad_norm,
+            epsilon: self.accountant.as_ref().map(|a| a.epsilon().0).unwrap_or(0.0),
+        };
+        if let Some(sink) = &mut self.sink {
+            sink.step(stats.step, stats.loss, stats.epsilon)
+                .map_err(|e| EngineError::Metrics(format!("{e:#}")))?;
+        }
+        Ok(stats)
+    }
+
+    /// Evaluate the current parameters over (up to) `max_examples`.
+    pub fn evaluate(
+        &self,
+        data: &TaskData,
+        max_examples: usize,
+    ) -> Result<EvalOutcome, EngineError> {
+        let eval = self.eval_runner.as_ref().ok_or_else(|| EngineError::UnknownArtifact {
+            name: format!("{}__eval", self.spec.model),
+            detail: "the backend could not load the eval step when this session was created"
+                .to_string(),
+        })?;
+        evaluate_params(eval.as_ref(), &self.full_params(), data, max_examples)
+    }
+
+    /// Write a CRC-protected checkpoint of the current full parameters.
+    pub fn checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<(), EngineError> {
+        Checkpoint {
+            model: self.meta().model.clone(),
+            step: self.step,
+            params: self.full_params(),
+        }
+        .save(path)
+        .map_err(|e| EngineError::Checkpoint(format!("{e:#}")))
+    }
+}
+
+/// Evaluate a full parameter vector with an eval step runner.
+pub fn evaluate_params(
+    eval: &dyn StepRunner,
+    full: &[f32],
+    data: &TaskData,
+    max_examples: usize,
+) -> Result<EvalOutcome, EngineError> {
+    let meta = eval.meta();
+    if meta.step != "eval" {
+        return Err(EngineError::Data(format!("{} is not an eval artifact", meta.name)));
+    }
+    let b = meta.batch;
+    let n = data.len().min(max_examples);
+    let full_t = Tensor::f32(vec![full.len()], full.to_vec());
+    let empty = Tensor::f32(vec![0], vec![]);
+    let (mut a_sum, mut b_sum) = (0.0f64, 0.0f64);
+    let idxs: Vec<usize> = (0..n).collect();
+    for chunk in idxs.chunks(b) {
+        let (x, y, mask) = data.fill(chunk, b);
+        let out = eval.run(&[empty.clone(), full_t.clone(), x, y, mask])?;
+        a_sum += out[0].item_f32() as f64;
+        b_sum += out[1].item_f32() as f64;
+    }
+    Ok(EvalOutcome { metric_a: a_sum, metric_b: b_sum, n })
+}
+

@@ -1,0 +1,671 @@
+//! `JobSpec`: the typed, validated description of one training job.
+//!
+//! A spec is backend-independent: it names a model, a fine-tuning
+//! [`Method`], a [`Privacy`] budget (target epsilon *or* an explicit noise
+//! multiplier — never both), the optimizer/schedule, and the sampling plan.
+//! [`JobSpec::plan`] resolves it (artifact names, sampling rate q, calibrated
+//! sigma, projected epsilon) without touching any backend — that is what
+//! `fastdp train --dry-run` prints.
+
+use crate::coordinator::optim::{LrSchedule, OptimKind};
+use crate::dp::clip::ClipMode;
+use crate::dp::{calibrate, rdp};
+
+use super::error::EngineError;
+
+/// Fine-tuning method (paper §2-3; two-phase is App. A.2.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// Bias-term fine-tuning (the paper's method).
+    BiTFiT,
+    /// BiTFiT on a bias-augmented model (§3.4, "BiTFiT-Add").
+    BiTFiTAdd,
+    /// Full fine-tuning; `ghost` selects ghost-norm clipping over Opacus-style
+    /// per-sample gradient instantiation.
+    Full { ghost: bool },
+    /// Linear probing: train the head only.
+    LastLayer,
+    /// LoRA adapters (the `cls-lora` model family).
+    Lora,
+    /// Houlsby adapters (the `cls-adapter` model family).
+    Adapter,
+    /// X+BiTFiT: `full_steps` of full fine-tuning at `full_lr`, then BiTFiT
+    /// for the remaining steps at the spec's learning rate.
+    TwoPhase { full_steps: u64, full_lr: f64 },
+}
+
+impl Method {
+    /// The artifact method fragment for this method under a privacy regime,
+    /// e.g. `dp-bitfit` / `nondp-full` (matches the AOT artifact naming).
+    pub fn fragment(&self, private: bool) -> String {
+        let base = match self {
+            Method::BiTFiT => {
+                if private {
+                    "dp-bitfit"
+                } else {
+                    "nondp-bitfit"
+                }
+            }
+            Method::BiTFiTAdd => {
+                if private {
+                    "dp-bitfit-add"
+                } else {
+                    "nondp-bitfit"
+                }
+            }
+            Method::Full { ghost } => {
+                if !private {
+                    "nondp-full"
+                } else if *ghost {
+                    "dp-full-ghost"
+                } else {
+                    "dp-full-opacus"
+                }
+            }
+            Method::LastLayer => {
+                if private {
+                    "dp-lastlayer"
+                } else {
+                    "nondp-lastlayer"
+                }
+            }
+            Method::Lora => {
+                if private {
+                    "dp-lora"
+                } else {
+                    "nondp-full"
+                }
+            }
+            Method::Adapter => {
+                if private {
+                    "dp-adapter"
+                } else {
+                    "nondp-full"
+                }
+            }
+            Method::TwoPhase { .. } => {
+                if private {
+                    "dp-bitfit"
+                } else {
+                    "nondp-bitfit"
+                }
+            }
+        };
+        base.to_string()
+    }
+
+    /// Parse an artifact method fragment (`dp-bitfit`, `nondp-full`, ...)
+    /// into `(method, private)`.
+    pub fn parse(fragment: &str) -> Option<(Method, bool)> {
+        let (private, rest) = if let Some(r) = fragment.strip_prefix("dp-") {
+            (true, r)
+        } else if let Some(r) = fragment.strip_prefix("nondp-") {
+            (false, r)
+        } else {
+            // bare method names mean "let the privacy budget decide"
+            (true, fragment)
+        };
+        let m = match rest {
+            "bitfit" => Method::BiTFiT,
+            "bitfit-add" => Method::BiTFiTAdd,
+            "full" | "full-ghost" => Method::Full { ghost: true },
+            "full-opacus" => Method::Full { ghost: false },
+            "lastlayer" => Method::LastLayer,
+            "lora" => Method::Lora,
+            "adapter" => Method::Adapter,
+            _ => return None,
+        };
+        Some((m, private))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::BiTFiT => "bitfit",
+            Method::BiTFiTAdd => "bitfit-add",
+            Method::Full { ghost: true } => "full-ghost",
+            Method::Full { ghost: false } => "full-opacus",
+            Method::LastLayer => "lastlayer",
+            Method::Lora => "lora",
+            Method::Adapter => "adapter",
+            Method::TwoPhase { .. } => "two-phase",
+        }
+    }
+}
+
+/// Privacy budget: a target `(eps, delta)` to calibrate sigma for, an
+/// explicit noise multiplier, or non-private training.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Privacy {
+    NonPrivate,
+    Eps { eps: f64, delta: f64 },
+    Sigma { sigma: f64, delta: f64 },
+}
+
+impl Privacy {
+    pub fn is_private(&self) -> bool {
+        !matches!(self, Privacy::NonPrivate)
+    }
+
+    pub fn delta(&self) -> f64 {
+        match self {
+            Privacy::NonPrivate => 0.0,
+            Privacy::Eps { delta, .. } | Privacy::Sigma { delta, .. } => *delta,
+        }
+    }
+}
+
+/// A validated training-job specification.  Construct via [`JobSpec::builder`].
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub model: String,
+    pub method: Method,
+    /// Dataset task; `None` means the model kind's default task.
+    pub task: Option<String>,
+    pub privacy: Privacy,
+    pub optim: OptimKind,
+    pub lr: f64,
+    pub schedule: LrSchedule,
+    /// Clipping threshold R (paper default 0.1 for text, Table 8).
+    pub clip_r: f64,
+    pub clip_mode: ClipMode,
+    /// Logical (Poisson-expected) batch size.
+    pub logical_batch: usize,
+    /// Planned total steps (drives eps -> sigma calibration).
+    pub steps: u64,
+    /// Training-set size (drives the sampling rate q).
+    pub n_train: usize,
+    pub seed: u64,
+    /// Run name for metric sinks; defaults to `model__method`.
+    pub name: Option<String>,
+}
+
+impl JobSpec {
+    pub fn builder(model: &str, method: Method) -> JobSpecBuilder {
+        JobSpecBuilder::new(model, method)
+    }
+
+    /// Run name used for logs/metrics.
+    pub fn run_name(&self) -> String {
+        self.name
+            .clone()
+            .unwrap_or_else(|| format!("{}__{}", self.model, self.method.name()))
+    }
+
+    /// Poisson sampling rate q = B / n.
+    pub fn q(&self) -> f64 {
+        (self.logical_batch as f64 / self.n_train as f64).min(1.0)
+    }
+
+    /// Artifact name suffix for the clip mode (`__autos` for AUTO-S).
+    fn clip_suffix(&self) -> &'static str {
+        match self.clip_mode {
+            ClipMode::Abadi => "",
+            ClipMode::AutoS => "__autos",
+        }
+    }
+
+    /// Artifact names per phase, with per-phase steps and learning rates.
+    pub fn phases(&self) -> Vec<PhaseSpec> {
+        let private = self.privacy.is_private();
+        match self.method {
+            Method::TwoPhase { full_steps, full_lr } => {
+                let full_steps = full_steps.min(self.steps);
+                let mut v = Vec::new();
+                if full_steps > 0 {
+                    v.push(PhaseSpec {
+                        label: "full",
+                        artifact: format!(
+                            "{}__{}{}",
+                            self.model,
+                            Method::Full { ghost: true }.fragment(private),
+                            self.clip_suffix()
+                        ),
+                        steps: full_steps,
+                        lr: full_lr,
+                    });
+                }
+                let remaining = self.steps - full_steps;
+                if remaining > 0 || v.is_empty() {
+                    v.push(PhaseSpec {
+                        label: "bitfit",
+                        artifact: format!(
+                            "{}__{}{}",
+                            self.model,
+                            Method::BiTFiT.fragment(private),
+                            self.clip_suffix()
+                        ),
+                        steps: remaining,
+                        lr: self.lr,
+                    });
+                }
+                v
+            }
+            _ => vec![PhaseSpec {
+                label: self.method.name(),
+                artifact: format!(
+                    "{}__{}{}",
+                    self.model,
+                    self.method.fragment(private),
+                    self.clip_suffix()
+                ),
+                steps: self.steps,
+                lr: self.lr,
+            }],
+        }
+    }
+
+    /// Resolve the spec into a concrete execution plan — pure math, no
+    /// backend.  Calibrates sigma for `Privacy::Eps` budgets.
+    pub fn plan(&self) -> JobPlan {
+        let q = self.q();
+        let (sigma, eps_target) = match self.privacy {
+            Privacy::NonPrivate => (0.0, None),
+            Privacy::Sigma { sigma, .. } => (sigma, None),
+            Privacy::Eps { eps, delta } => {
+                (calibrate::calibrate_sigma(q, self.steps, eps, delta), Some(eps))
+            }
+        };
+        let eps_projected = if self.privacy.is_private() && sigma > 0.0 {
+            rdp::epsilon(q, sigma, self.steps, self.privacy.delta())
+        } else {
+            0.0
+        };
+        JobPlan { q, sigma, eps_target, eps_projected, phases: self.phases() }
+    }
+}
+
+/// One phase of a resolved job (two for X+BiTFiT, one otherwise).
+#[derive(Debug, Clone)]
+pub struct PhaseSpec {
+    pub label: &'static str,
+    pub artifact: String,
+    pub steps: u64,
+    pub lr: f64,
+}
+
+/// The resolved execution plan for a [`JobSpec`].
+#[derive(Debug, Clone)]
+pub struct JobPlan {
+    pub q: f64,
+    /// Resolved noise multiplier (0 for non-private runs).
+    pub sigma: f64,
+    /// The eps target, when the budget was given as `Privacy::Eps`.
+    pub eps_target: Option<f64>,
+    /// Epsilon the RDP accountant projects for the planned steps.
+    pub eps_projected: f64,
+    pub phases: Vec<PhaseSpec>,
+}
+
+impl JobPlan {
+    /// Human-readable rendering (used by `fastdp train --dry-run`).
+    pub fn describe(&self, spec: &JobSpec) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("job {}\n", spec.run_name()));
+        s.push_str(&format!("  model        {}\n", spec.model));
+        s.push_str(&format!("  method       {}\n", spec.method.name()));
+        s.push_str(&format!(
+            "  task         {}\n",
+            spec.task.as_deref().unwrap_or("(model default)")
+        ));
+        match spec.privacy {
+            Privacy::NonPrivate => s.push_str("  privacy      non-private\n"),
+            Privacy::Eps { eps, delta } => {
+                s.push_str(&format!("  privacy      eps <= {eps} at delta = {delta}\n"))
+            }
+            Privacy::Sigma { sigma, delta } => {
+                s.push_str(&format!("  privacy      sigma = {sigma} at delta = {delta}\n"))
+            }
+        }
+        s.push_str(&format!(
+            "  optimizer    {:?} lr {} schedule {:?}\n",
+            spec.optim, spec.lr, spec.schedule
+        ));
+        s.push_str(&format!(
+            "  clipping     R = {} mode {}\n",
+            spec.clip_r,
+            spec.clip_mode.name()
+        ));
+        s.push_str(&format!(
+            "  sampling     |B| = {} of n = {} (q = {:.5}), {} steps, seed {}\n",
+            spec.logical_batch,
+            spec.n_train,
+            self.q,
+            spec.steps,
+            spec.seed
+        ));
+        if spec.privacy.is_private() {
+            s.push_str(&format!(
+                "  resolved     sigma = {:.4}, projected eps = {:.3}\n",
+                self.sigma, self.eps_projected
+            ));
+        }
+        s.push_str("  phases:\n");
+        for p in &self.phases {
+            s.push_str(&format!(
+                "    {:<8} {:>6} steps  lr {:<8}  artifact {}\n",
+                p.label, p.steps, p.lr, p.artifact
+            ));
+        }
+        s
+    }
+}
+
+/// Builder with validation; `build()` returns typed [`EngineError`]s, never
+/// panics.
+#[derive(Debug, Clone)]
+pub struct JobSpecBuilder {
+    model: String,
+    method: Method,
+    task: Option<String>,
+    eps: Option<f64>,
+    sigma: Option<f64>,
+    delta: f64,
+    optim: OptimKind,
+    lr: f64,
+    schedule: LrSchedule,
+    clip_r: f64,
+    clip_mode: ClipMode,
+    logical_batch: usize,
+    steps: u64,
+    n_train: usize,
+    seed: u64,
+    name: Option<String>,
+}
+
+impl JobSpecBuilder {
+    pub fn new(model: &str, method: Method) -> JobSpecBuilder {
+        JobSpecBuilder {
+            model: model.to_string(),
+            method,
+            task: None,
+            eps: None,
+            sigma: None,
+            delta: 1e-5,
+            optim: OptimKind::Adam,
+            lr: 5e-3,
+            schedule: LrSchedule::Constant,
+            clip_r: 0.1,
+            clip_mode: ClipMode::Abadi,
+            logical_batch: 64,
+            steps: 100,
+            n_train: 4096,
+            seed: 0,
+            name: None,
+        }
+    }
+
+    pub fn task(mut self, task: &str) -> Self {
+        self.task = Some(task.to_string());
+        self
+    }
+
+    /// Target epsilon (sigma will be calibrated). Mutually exclusive with
+    /// [`Self::sigma`].
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.eps = Some(eps);
+        self
+    }
+
+    /// Explicit noise multiplier. Mutually exclusive with [`Self::eps`].
+    pub fn sigma(mut self, sigma: f64) -> Self {
+        self.sigma = Some(sigma);
+        self
+    }
+
+    pub fn delta(mut self, delta: f64) -> Self {
+        self.delta = delta;
+        self
+    }
+
+    pub fn optim(mut self, optim: OptimKind) -> Self {
+        self.optim = optim;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: LrSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn clip_r(mut self, clip_r: f64) -> Self {
+        self.clip_r = clip_r;
+        self
+    }
+
+    pub fn clip_mode(mut self, mode: ClipMode) -> Self {
+        self.clip_mode = mode;
+        self
+    }
+
+    pub fn batch(mut self, logical_batch: usize) -> Self {
+        self.logical_batch = logical_batch;
+        self
+    }
+
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn n_train(mut self, n_train: usize) -> Self {
+        self.n_train = n_train;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    /// Validate and build the spec.
+    pub fn build(self) -> Result<JobSpec, EngineError> {
+        if self.model.is_empty() {
+            return Err(EngineError::spec("model name is empty"));
+        }
+        if self.logical_batch == 0 {
+            return Err(EngineError::spec("logical batch must be positive"));
+        }
+        if self.n_train == 0 {
+            return Err(EngineError::spec("n_train must be positive"));
+        }
+        if self.steps == 0 {
+            return Err(EngineError::spec("steps must be positive"));
+        }
+        if !(self.lr.is_finite() && self.lr > 0.0) {
+            return Err(EngineError::spec(format!("learning rate {} must be finite and positive", self.lr)));
+        }
+        if !(self.clip_r.is_finite() && self.clip_r > 0.0) {
+            return Err(EngineError::spec(format!("clip threshold {} must be finite and positive", self.clip_r)));
+        }
+        if let Method::TwoPhase { full_lr, .. } = self.method {
+            if !(full_lr.is_finite() && full_lr > 0.0) {
+                return Err(EngineError::spec("two-phase full_lr must be finite and positive"));
+            }
+        }
+        if matches!(self.method, Method::Lora | Method::Adapter)
+            && self.eps.is_none()
+            && self.sigma.is_none()
+        {
+            // there is no non-private adapter artifact; falling back to full
+            // fine-tuning would silently invalidate parameter-efficiency runs
+            return Err(EngineError::spec(format!(
+                "method {} requires a privacy budget (eps or sigma); \
+                 non-private adapter training is not supported",
+                self.method.name()
+            )));
+        }
+        let privacy = match (self.eps, self.sigma) {
+            (Some(_), Some(_)) => {
+                return Err(EngineError::spec(
+                    "eps and sigma are both set; pick one (eps calibrates sigma)",
+                ));
+            }
+            (Some(eps), None) => {
+                if !(eps.is_finite() && eps > 0.0) {
+                    return Err(EngineError::spec(format!("eps {eps} must be finite and positive")));
+                }
+                if !(self.delta > 0.0 && self.delta < 1.0) {
+                    return Err(EngineError::spec(format!("delta {} must lie in (0, 1)", self.delta)));
+                }
+                Privacy::Eps { eps, delta: self.delta }
+            }
+            (None, Some(sigma)) => {
+                if !(sigma.is_finite() && sigma >= 0.0) {
+                    return Err(EngineError::spec(format!(
+                        "sigma {sigma} must be finite and non-negative"
+                    )));
+                }
+                if !(self.delta > 0.0 && self.delta < 1.0) {
+                    return Err(EngineError::spec(format!("delta {} must lie in (0, 1)", self.delta)));
+                }
+                Privacy::Sigma { sigma, delta: self.delta }
+            }
+            (None, None) => Privacy::NonPrivate,
+        };
+        Ok(JobSpec {
+            model: self.model,
+            method: self.method,
+            task: self.task,
+            privacy,
+            optim: self.optim,
+            lr: self.lr,
+            schedule: self.schedule,
+            clip_r: self.clip_r,
+            clip_mode: self.clip_mode,
+            logical_batch: self.logical_batch,
+            steps: self.steps,
+            n_train: self.n_train,
+            seed: self.seed,
+            name: self.name,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> JobSpecBuilder {
+        JobSpec::builder("cls-base", Method::BiTFiT)
+    }
+
+    #[test]
+    fn valid_spec_builds() {
+        let spec = base().task("sst2").eps(8.0).batch(256).steps(50).build().unwrap();
+        assert_eq!(spec.model, "cls-base");
+        assert!(spec.privacy.is_private());
+        assert_eq!(spec.phases().len(), 1);
+        assert_eq!(spec.phases()[0].artifact, "cls-base__dp-bitfit");
+    }
+
+    #[test]
+    fn nonprivate_artifact_naming() {
+        let spec = base().build().unwrap();
+        assert_eq!(spec.privacy, Privacy::NonPrivate);
+        assert_eq!(spec.phases()[0].artifact, "cls-base__nondp-bitfit");
+        let full = JobSpec::builder("lm-small", Method::Full { ghost: true })
+            .sigma(1.0)
+            .build()
+            .unwrap();
+        assert_eq!(full.phases()[0].artifact, "lm-small__dp-full-ghost");
+    }
+
+    #[test]
+    fn rejects_eps_and_sigma_together() {
+        let err = base().eps(8.0).sigma(1.0).build().unwrap_err();
+        assert!(matches!(err, EngineError::InvalidSpec(_)), "{err}");
+        assert!(err.to_string().contains("both"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        assert!(matches!(base().sigma(-1.0).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().sigma(f64::NAN).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().eps(-2.0).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().eps(f64::INFINITY).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().batch(0).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().steps(0).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().n_train(0).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().lr(0.0).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().lr(f64::NAN).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().clip_r(-0.1).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().eps(8.0).delta(1.5).build(), Err(EngineError::InvalidSpec(_))));
+        // adapters have no non-private artifact: require a budget
+        assert!(matches!(
+            JobSpec::builder("cls-lora", Method::Lora).build(),
+            Err(EngineError::InvalidSpec(_))
+        ));
+        assert!(JobSpec::builder("cls-lora", Method::Lora).eps(8.0).build().is_ok());
+    }
+
+    #[test]
+    fn eps_budget_calibrates_sigma_in_plan() {
+        let spec = base().eps(8.0).batch(256).steps(60).n_train(4096).build().unwrap();
+        let plan = spec.plan();
+        assert!(plan.sigma > 0.0);
+        assert!(plan.eps_projected <= 8.0 + 1e-6);
+        assert!(plan.eps_projected > 8.0 * 0.9, "calibration too loose: {}", plan.eps_projected);
+        let text = plan.describe(&spec);
+        assert!(text.contains("sigma"), "{text}");
+        assert!(text.contains("cls-base__dp-bitfit"), "{text}");
+    }
+
+    #[test]
+    fn two_phase_splits_steps() {
+        let spec = JobSpec::builder("vit-c10", Method::TwoPhase { full_steps: 8, full_lr: 1e-3 })
+            .sigma(1.0)
+            .steps(32)
+            .build()
+            .unwrap();
+        let phases = spec.phases();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].steps, 8);
+        assert_eq!(phases[0].artifact, "vit-c10__dp-full-ghost");
+        assert_eq!(phases[1].steps, 24);
+        assert_eq!(phases[1].artifact, "vit-c10__dp-bitfit");
+        // degenerate: all steps in phase 1
+        let spec = JobSpec::builder("vit-c10", Method::TwoPhase { full_steps: 99, full_lr: 1e-3 })
+            .sigma(1.0)
+            .steps(32)
+            .build()
+            .unwrap();
+        let phases = spec.phases();
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].steps, 32);
+        assert_eq!(phases[0].label, "full");
+    }
+
+    #[test]
+    fn method_fragment_parse_roundtrip() {
+        for (m, private) in [
+            (Method::BiTFiT, true),
+            (Method::BiTFiT, false),
+            (Method::BiTFiTAdd, true),
+            (Method::Full { ghost: true }, true),
+            (Method::Full { ghost: false }, true),
+            (Method::Full { ghost: true }, false),
+            (Method::LastLayer, true),
+            (Method::Lora, true),
+            (Method::Adapter, true),
+        ] {
+            let frag = m.fragment(private);
+            let (m2, p2) = Method::parse(&frag).unwrap_or_else(|| panic!("parse {frag}"));
+            assert_eq!(p2, private, "{frag}");
+            // nondp fragments may collapse (bitfit-add -> bitfit, lora -> full)
+            if private {
+                assert_eq!(m2, m, "{frag}");
+            }
+        }
+        assert!(Method::parse("banana").is_none());
+    }
+}

@@ -1,13 +1,49 @@
-//! # fastdp — DP-BiTFiT as a three-layer Rust + JAX + Pallas system
+//! # fastdp — DP-BiTFiT as an engine with pluggable execution backends
 //!
 //! Reproduction of *"Differentially Private Bias-Term Fine-tuning of
-//! Foundation Models"* (Bu, Wang, Zha, Karypis — ICML 2024).
+//! Foundation Models"* (Bu, Wang, Zha, Karypis — ICML 2024), grown into a
+//! library with a stable API.
 //!
-//! Layer map (see `DESIGN.md`):
+//! ## Engine API quickstart
+//!
+//! Everything runs through [`engine`]: describe a job as a typed
+//! [`engine::JobSpec`], get a [`engine::Session`] from an
+//! [`engine::Engine`], and drive it.
+//!
+//! ```no_run
+//! use fastdp::engine::{Engine, JobSpec, Method};
+//!
+//! let mut engine = Engine::auto("artifacts"); // PJRT if artifacts exist, else interpreter
+//! let spec = JobSpec::builder("cls-base", Method::BiTFiT)
+//!     .task("sst2")
+//!     .eps(8.0)                               // (eps, delta) target; sigma is calibrated
+//!     .batch(256)
+//!     .steps(60)
+//!     .n_train(4096)
+//!     .build()?;
+//! let data = engine.dataset(&spec.model, "sst2", spec.n_train, 11)?;
+//! let mut session = engine.session(&spec)?;
+//! for _ in 0..spec.steps {
+//!     session.run_step(&data)?;
+//! }
+//! println!("eps spent = {:.2}", session.privacy_spent().epsilon);
+//! session.checkpoint("runs/quickstart.ckpt")?;
+//! # Ok::<(), fastdp::engine::EngineError>(())
+//! ```
+//!
+//! ## Layer map
+//!
+//! * [`engine`] — **the public entry point**: `JobSpec` (validated builder,
+//!   typed `EngineError`s), the `Backend`/`StepRunner` traits with two
+//!   implementations (PJRT artifacts; a dependency-free reference
+//!   interpreter), and `Engine`/`Session` (run_step, evaluate, checkpoint,
+//!   privacy_spent; two-phase X+BiTFiT composes inside one session).
 //! * [`runtime`] — loads AOT HLO artifacts (lowered once from JAX+Pallas by
-//!   `python/compile/aot.py`) and executes them via PJRT.
-//! * [`coordinator`] — the DP training orchestrator: Poisson sampling,
-//!   microbatch accumulation, noise, optimizers, two-phase scheduling.
+//!   `python/compile/aot.py`) and executes them via PJRT; wrapped by the
+//!   engine's PJRT backend.
+//! * [`coordinator`] — orchestration substrates the engine composes:
+//!   optimizers, dataset assembly, workload construction, greedy decoding,
+//!   cached pretraining, checkpoints, metric sinks, the CLI translator.
 //! * [`dp`] — the differential-privacy substrate: RDP/GDP accountants,
 //!   noise calibration, clipping functions, Poisson sampler.
 //! * [`data`] — synthetic workload generators (GLUE/E2E/CIFAR/CelebA analogs).
@@ -15,12 +51,14 @@
 //! * [`analysis`] — per-layer time/space complexity (paper Tables 2 & 7).
 //! * [`nlg`] — BLEU / ROUGE-L / NIST / METEOR / CIDEr for Table 4/13.
 //! * [`util`] — dependency-free JSON/TOML/RNG/tensor/CLI substrates.
+//! * [`bench`] — the shared harness behind `benches/*` (paper tables).
 
 pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod dp;
+pub mod engine;
 pub mod models;
 pub mod nlg;
 pub mod runtime;

@@ -1,0 +1,229 @@
+//! End-to-end smoke tests of `fastdp::engine` on the reference interpreter
+//! backend — these run with NO artifact directory present, which is exactly
+//! the point: the full train -> checkpoint -> eval path must work from a
+//! fresh checkout in CI.
+
+use fastdp::engine::{Engine, EngineError, JobSpec, Method, OptimKind, Privacy};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fastdp-engine-e2e-{name}-{}", std::process::id()))
+}
+
+#[test]
+fn train_checkpoint_eval_roundtrip_on_interpreter() {
+    let mut engine = Engine::interpreter();
+    assert_eq!(engine.backend_name(), "interpreter");
+
+    let n = 256;
+    let steps = 8u64;
+    let spec = JobSpec::builder("cls-base", Method::BiTFiT)
+        .task("sst2")
+        .eps(8.0)
+        .delta(1e-5)
+        .optim(OptimKind::Adam)
+        .lr(5e-3)
+        .clip_r(0.1)
+        .batch(64)
+        .steps(steps)
+        .n_train(n)
+        .seed(11)
+        .build()
+        .unwrap();
+    let train = engine.dataset("cls-base", "sst2", n, 11).unwrap();
+    let test = engine.dataset("cls-base", "sst2", 128, 12).unwrap();
+
+    let mut session = engine.session(&spec).unwrap();
+    assert!(session.is_dp());
+    assert!(session.privacy_spent().sigma > 0.0, "eps budget must calibrate sigma");
+    let mut last_eps = 0.0;
+    for _ in 0..steps {
+        let s = session.run_step(&train).unwrap();
+        assert!(s.loss.is_finite(), "loss {}", s.loss);
+        assert!(s.grad_norm.is_finite());
+        assert!(s.epsilon >= last_eps, "epsilon must be monotone");
+        last_eps = s.epsilon;
+    }
+    let spent = session.privacy_spent();
+    assert!(spent.epsilon > 0.0 && spent.epsilon <= 8.0 + 1e-6, "eps {}", spent.epsilon);
+    assert_eq!(spent.steps, steps);
+
+    // checkpoint -> reload -> evaluate identically
+    let path = tmp("roundtrip");
+    session.checkpoint(&path).unwrap();
+    let direct = session.evaluate(&test, 128).unwrap();
+    let reloaded = engine.load_checkpoint("cls-base", &path).unwrap();
+    assert_eq!(reloaded, session.full_params());
+    let via_ckpt = engine.evaluate("cls-base", &reloaded, &test, 128).unwrap();
+    assert_eq!(via_ckpt.metric_a, direct.metric_a);
+    assert_eq!(via_ckpt.metric_b, direct.metric_b);
+    assert!(direct.accuracy() >= 0.0 && direct.accuracy() <= 1.0);
+    // wrong model is a typed checkpoint error
+    assert!(matches!(
+        engine.load_checkpoint("lm-small", &path),
+        Err(EngineError::Checkpoint(_))
+    ));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn nonprivate_training_learns_on_interpreter() {
+    let mut engine = Engine::interpreter();
+    let n = 256;
+    let steps = 30u64;
+    let spec = JobSpec::builder("cls-base", Method::Full { ghost: true })
+        .task("sst2")
+        .optim(OptimKind::Adam)
+        .lr(2e-2)
+        .batch(64)
+        .steps(steps)
+        .n_train(n)
+        .seed(3)
+        .build()
+        .unwrap();
+    assert_eq!(spec.privacy, Privacy::NonPrivate);
+    let train = engine.dataset("cls-base", "sst2", n, 31).unwrap();
+    let mut session = engine.session(&spec).unwrap();
+    assert!(!session.is_dp());
+    let mut first = None;
+    let mut last = f64::INFINITY;
+    for _ in 0..steps {
+        let s = session.run_step(&train).unwrap();
+        first.get_or_insert(s.loss);
+        last = s.loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "non-private full training should reduce loss: {first} -> {last}"
+    );
+    assert_eq!(session.privacy_spent().epsilon, 0.0);
+}
+
+#[test]
+fn two_phase_session_switches_and_composes() {
+    let mut engine = Engine::interpreter();
+    let n = 256;
+    let total = 6u64;
+    let spec = JobSpec::builder("cls-base", Method::TwoPhase { full_steps: 3, full_lr: 1e-3 })
+        .task("sst2")
+        .sigma(1.0)
+        .delta(1e-5)
+        .lr(5e-3)
+        .batch(64)
+        .steps(total)
+        .n_train(n)
+        .build()
+        .unwrap();
+    let train = engine.dataset("cls-base", "sst2", n, 7).unwrap();
+    let mut session = engine.session(&spec).unwrap();
+    let full_pt = session.trainable_len();
+    assert_eq!(session.phase_label(), "full");
+    let mut eps_at_switch = 0.0;
+    for i in 0..total {
+        let s = session.run_step(&train).unwrap();
+        if i == 2 {
+            eps_at_switch = s.epsilon;
+        }
+    }
+    assert_eq!(session.phase_label(), "bitfit");
+    let bitfit_pt = session.trainable_len();
+    assert!(bitfit_pt < full_pt, "bitfit ({bitfit_pt}) must train fewer params than full ({full_pt})");
+    // the accountant composed across the switch
+    let spent = session.privacy_spent();
+    assert!(spent.epsilon > eps_at_switch, "eps must keep growing after the switch");
+    assert_eq!(spent.steps, total);
+}
+
+#[test]
+fn sessions_share_one_cached_backend() {
+    let mut engine = Engine::interpreter();
+    let n = 128;
+    let spec_a = JobSpec::builder("cls-base", Method::BiTFiT)
+        .sigma(0.5)
+        .batch(32)
+        .steps(4)
+        .n_train(n)
+        .seed(1)
+        .build()
+        .unwrap();
+    let spec_b = JobSpec::builder("cls-base", Method::LastLayer)
+        .sigma(0.5)
+        .batch(32)
+        .steps(4)
+        .n_train(n)
+        .seed(2)
+        .build()
+        .unwrap();
+    let data = engine.dataset("cls-base", "sst2", n, 5).unwrap();
+    // two live sessions over one engine, stepped in interleaved order
+    let mut a = engine.session(&spec_a).unwrap();
+    let mut b = engine.session(&spec_b).unwrap();
+    for _ in 0..4 {
+        let sa = a.run_step(&data).unwrap();
+        let sb = b.run_step(&data).unwrap();
+        assert!(sa.loss.is_finite() && sb.loss.is_finite());
+    }
+    assert!(a.trainable_len() > b.trainable_len());
+}
+
+#[test]
+fn image_and_lm_paths_run_end_to_end() {
+    let mut engine = Engine::interpreter();
+    // ViT on the CIFAR-analog
+    let n = 128;
+    let spec = JobSpec::builder("vit-c10", Method::BiTFiT)
+        .task("cifar")
+        .eps(4.0)
+        .batch(32)
+        .steps(3)
+        .n_train(n)
+        .build()
+        .unwrap();
+    let data = engine.dataset("vit-c10", "cifar", n, 9).unwrap();
+    let mut session = engine.session(&spec).unwrap();
+    for _ in 0..3 {
+        session.run_step(&data).unwrap();
+    }
+    let out = session.evaluate(&data, 64).unwrap();
+    assert!(out.metric_a.is_finite() && out.n == 64);
+
+    // LM on the E2E-analog, including greedy decode
+    let (lm_data, gen) = engine.dataset_e2e("lm-small", 64, 13).unwrap();
+    let spec = JobSpec::builder("lm-small", Method::BiTFiT)
+        .task("e2e")
+        .sigma(0.7)
+        .optim(OptimKind::AdamW)
+        .batch(32)
+        .steps(2)
+        .n_train(64)
+        .build()
+        .unwrap();
+    let mut session = engine.session(&spec).unwrap();
+    for _ in 0..2 {
+        session.run_step(&lm_data).unwrap();
+    }
+    let out = session.evaluate(&lm_data, 32).unwrap();
+    assert!(out.perplexity().is_finite() && out.perplexity() > 0.0);
+    let dec = engine.decoder("lm-small").unwrap();
+    let prompts: Vec<Vec<i32>> =
+        gen.iter().take(4).map(|g| g.lm.input[..g.prompt_len].to_vec()).collect();
+    let hyps = fastdp::coordinator::decode::greedy_decode(
+        dec.as_ref(),
+        &session.full_params(),
+        &prompts,
+        8,
+        fastdp::data::tokenizer::EOS,
+    )
+    .unwrap();
+    assert_eq!(hyps.len(), 4);
+}
+
+#[test]
+fn unknown_model_is_a_typed_error() {
+    let mut engine = Engine::interpreter();
+    let spec = JobSpec::builder("gpt5-colossal", Method::BiTFiT)
+        .sigma(1.0)
+        .build()
+        .unwrap();
+    assert!(matches!(engine.session(&spec), Err(EngineError::UnknownModel(_))));
+}

@@ -1,0 +1,235 @@
+//! Compile-time stub of the slice of the `xla` crate (PJRT C API bindings)
+//! that `fastdp::runtime` uses.
+//!
+//! This environment ships no `xla_extension` shared library, so the real
+//! crate cannot link.  The stub keeps the whole PJRT code path *compiling*
+//! (and `Literal` is fully functional as a host container, so conversion
+//! round-trip tests pass), while `PjRtClient::compile` returns a runtime
+//! error — executing HLO requires the real backend.  Swapping this path
+//! dependency for the real `xla` crate re-enables PJRT with no source
+//! changes in `fastdp`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (the real crate's `Error` is richer).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable (built against the vendored xla stub; \
+         link the real xla_extension crate to execute HLO artifacts)"
+    ))
+}
+
+/// Element types the runtime moves across the host boundary.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<&[f32]> {
+        match data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<&[i32]> {
+        match data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Typed storage of a host literal.
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: typed buffer + dims.  Fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the buffer out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("to_vec: literal has a different element type".into()))
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("to_tuple: literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module text (opaque in the stub).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {}: {e}", path.display())))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A PJRT device handle.
+pub struct PjRtDevice {
+    _private: (),
+}
+
+/// A device-resident buffer (host-backed in the stub).
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Marker for argument types accepted by `execute*`.
+pub trait BufferArg {}
+impl BufferArg for Literal {}
+impl BufferArg for &PjRtBuffer {}
+
+/// A compiled executable.  Never constructed by the stub (compile fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: BufferArg>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("execute"))
+    }
+
+    pub fn execute_b<T: BufferArg>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("execute_b"))
+    }
+}
+
+/// A PJRT client.  Construction succeeds (so artifact *metadata* paths work);
+/// compilation is where the stub reports itself.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (xla stub — HLO execution disabled)".to_string()
+    }
+
+    pub fn devices(&self) -> Vec<PjRtDevice> {
+        vec![PjRtDevice { _private: () }]
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: literal.clone() })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(Literal::vec1(&[1i32]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = XlaComputation::from_proto(&HloModuleProto { _text: String::new() });
+        let err = c.compile(&proto).unwrap_err().to_string();
+        assert!(err.contains("PJRT unavailable"), "{err}");
+    }
+}
