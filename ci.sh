@@ -1,19 +1,21 @@
 #!/usr/bin/env bash
-# CI for the fastdp Rust workspace: format check, lints, then tier-1
-# (build + tests).  Everything runs offline — dependencies are vendored
-# under rust/vendor/.
+# CI for the fastdp Rust workspace: format check, lints, tier-1
+# (build + tests), then a bench-smoke of the throughput harness.
+# Everything runs offline — dependencies are vendored under rust/vendor/.
 #
-# Usage: ./ci.sh [--no-fmt] [--no-clippy]
+# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-bench]
 
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
 run_fmt=1
 run_clippy=1
+run_bench=1
 for arg in "$@"; do
     case "$arg" in
         --no-fmt) run_fmt=0 ;;
         --no-clippy) run_clippy=0 ;;
+        --no-bench) run_bench=0 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
     esac
 done
@@ -41,5 +43,22 @@ cargo build --release
 
 echo "==> tier-1: cargo test -q"
 cargo test -q
+
+if [ "$run_bench" = 1 ]; then
+    echo "==> bench-smoke: throughput harness (tiny shapes, 2 thread counts)"
+    # smoke numbers go to a temp file so a full-sweep BENCH_step_throughput.json
+    # at the repo root (the real trajectory) is never clobbered by tiny shapes
+    out="$(mktemp "${TMPDIR:-/tmp}/bench_smoke.XXXXXX.json")"
+    # the harness itself validates the schema and exits non-zero if outputs
+    # are not bit-identical across thread counts / kernel modes
+    FASTDP_BENCH_QUICK=1 FASTDP_BENCH_STEPS=3 FASTDP_BENCH_THREADS=1,2 \
+        FASTDP_BENCH_OUT="$out" cargo bench --bench throughput
+    for key in '"bench"' '"points"' '"steps_per_sec"' '"rows_per_sec"' \
+               '"speedup_vs_scalar"' '"deterministic"' '"overhead_ratio"'; do
+        grep -q "$key" "$out" || { echo "bench-smoke: $key missing from $out" >&2; exit 1; }
+    done
+    rm -f "$out"
+    echo "bench-smoke OK"
+fi
 
 echo "CI OK"

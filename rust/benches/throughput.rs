@@ -1,0 +1,151 @@
+//! Step-throughput trajectory bench: sweeps the interpreter train step
+//! over kernel mode (legacy scalar vs fused) x worker count, verifies the
+//! outputs are bit-identical everywhere, and emits
+//! `BENCH_step_throughput.json` at the repo root so future PRs have a
+//! number to beat.
+//!
+//! Knobs (all env vars):
+//!   FASTDP_BENCH_STEPS    timed steps per point (default 30; quick: 5)
+//!   FASTDP_BENCH_QUICK    set => smallest model/method sweep
+//!   FASTDP_BENCH_THREADS  comma list of worker counts (default "1,2,8")
+//!   FASTDP_BENCH_OUT      output path override
+//!
+//! JSON schema: see the README "Performance" section; the document is
+//! validated right after writing (and again by ci.sh's bench-smoke stage).
+//!
+//! Exit code is non-zero if any (model, method) produced outputs that were
+//! not bit-identical across worker counts and kernel modes.
+
+use fastdp::bench::{self, DpOverhead, ThroughputPoint, ThroughputSummary};
+use fastdp::kernels::KernelMode;
+use fastdp::util::table::Table;
+
+fn main() {
+    let quick = bench::quick();
+    let steps = bench::bench_steps(if quick { 5 } else { 30 });
+    let thread_counts: Vec<usize> = std::env::var("FASTDP_BENCH_THREADS")
+        .unwrap_or_else(|_| "1,2,8".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&n| n >= 1)
+        .collect();
+    let thread_counts = if thread_counts.is_empty() { vec![1, 2, 8] } else { thread_counts };
+    // lm-large is the largest builtin model; the quick sweep keeps one
+    // small model so CI smoke stays fast
+    let models: Vec<&str> = if quick { vec!["cls-base"] } else { vec!["cls-base", "lm-large"] };
+    let methods: Vec<&str> = if quick {
+        vec!["nondp-bitfit", "dp-bitfit"]
+    } else {
+        vec!["nondp-full", "dp-full-opacus", "nondp-bitfit", "dp-bitfit"]
+    };
+    let tmax = *thread_counts.iter().max().unwrap();
+
+    println!(
+        "## step throughput — interpreter backend ({} host threads, {} steps/point)\n",
+        fastdp::runtime::pool::host_parallelism(),
+        steps
+    );
+    let mut points: Vec<ThroughputPoint> = Vec::new();
+    let mut summaries: Vec<ThroughputSummary> = Vec::new();
+    let mut overheads: Vec<DpOverhead> = Vec::new();
+    let mut all_deterministic = true;
+    for model in &models {
+        for method in &methods {
+            let scalar = bench::interp_throughput(model, method, 1, KernelMode::Legacy, steps)
+                .expect("legacy baseline");
+            points.push(scalar.clone());
+            let mut best: Option<ThroughputPoint> = None;
+            for &t in &thread_counts {
+                let p = bench::interp_throughput(model, method, t, KernelMode::Fused, steps)
+                    .expect("fused point");
+                let better = match &best {
+                    None => true,
+                    Some(b) => p.steps_per_sec > b.steps_per_sec,
+                };
+                if better {
+                    best = Some(p.clone());
+                }
+                points.push(p);
+            }
+            // determinism probe: loss/grad/sq_norms bits must match across
+            // every worker count and vs the legacy scalar path
+            let base = bench::interp_output_bits(model, method, 1, KernelMode::Fused)
+                .expect("determinism probe");
+            let mut deterministic = thread_counts.iter().filter(|&&t| t != 1).all(|&t| {
+                bench::interp_output_bits(model, method, t, KernelMode::Fused).unwrap() == base
+            });
+            deterministic &=
+                bench::interp_output_bits(model, method, 1, KernelMode::Legacy).unwrap() == base;
+            all_deterministic &= deterministic;
+            let best = best.expect("at least one fused point");
+            summaries.push(ThroughputSummary {
+                model: model.to_string(),
+                method: method.to_string(),
+                best_threads: best.threads,
+                scalar_steps_per_sec: scalar.steps_per_sec,
+                fused_steps_per_sec: best.steps_per_sec,
+                speedup_vs_scalar: best.steps_per_sec / scalar.steps_per_sec,
+                deterministic,
+            });
+            eprintln!("done {model}__{method}");
+        }
+        // paper headline: DP overhead of BiTFiT at the widest sweep point
+        let find = |method: &str| {
+            points.iter().find(|p| {
+                p.model == *model && p.method == method && p.kernels == "fused" && p.threads == tmax
+            })
+        };
+        if let (Some(dp), Some(nondp)) = (find("dp-bitfit"), find("nondp-bitfit")) {
+            overheads.push(DpOverhead {
+                model: model.to_string(),
+                threads: tmax,
+                dp_steps_per_sec: dp.steps_per_sec,
+                nondp_steps_per_sec: nondp.steps_per_sec,
+                overhead_ratio: nondp.steps_per_sec / dp.steps_per_sec,
+            });
+        }
+    }
+
+    let mut t = Table::new(&[
+        "model",
+        "method",
+        "scalar steps/s",
+        "best fused steps/s",
+        "threads",
+        "speedup",
+        "bit-identical",
+    ]);
+    for s in &summaries {
+        t.row(vec![
+            s.model.clone(),
+            s.method.clone(),
+            format!("{:.2}", s.scalar_steps_per_sec),
+            format!("{:.2}", s.fused_steps_per_sec),
+            s.best_threads.to_string(),
+            format!("{:.2}x", s.speedup_vs_scalar),
+            if s.deterministic { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t.print();
+
+    let doc = bench::throughput_json(&points, &summaries, &overheads, steps);
+    let out_path = std::env::var("FASTDP_BENCH_OUT").unwrap_or_else(|_| {
+        // benches run from rust/; the trajectory file lives at the repo root
+        if std::path::Path::new("ROADMAP.md").exists() {
+            "BENCH_step_throughput.json".to_string()
+        } else if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_step_throughput.json".to_string()
+        } else {
+            "BENCH_step_throughput.json".to_string()
+        }
+    });
+    std::fs::write(&out_path, &doc).expect("write BENCH_step_throughput.json");
+    let back = std::fs::read_to_string(&out_path).expect("read back");
+    bench::validate_throughput_json(&back).expect("emitted JSON failed schema validation");
+    println!("\nwrote {out_path} (schema OK)");
+
+    if !all_deterministic {
+        eprintln!("FAIL: outputs were not bit-identical across thread counts / kernel modes");
+        std::process::exit(1);
+    }
+}

@@ -6,11 +6,22 @@
 //! code runs as a quick smoke or a full reproduction:
 //!   FASTDP_BENCH_STEPS  — fine-tuning steps per run (default 30)
 //!   FASTDP_BENCH_QUICK  — set to skip the slowest sweep points
+//!
+//! The throughput harness (`benches/throughput.rs`) additionally uses the
+//! [`interp_throughput`] / [`interp_output_bits`] helpers below to sweep
+//! kernel mode x worker count on the interpreter backend and emit
+//! `BENCH_step_throughput.json` (schema validated by
+//! [`validate_throughput_json`]; documented in the README "Performance"
+//! section).
 
 use crate::coordinator::optim::OptimKind;
 use crate::coordinator::pretrain::{pretrained_params, PretrainSpec};
 use crate::dp::clip::ClipMode;
-use crate::engine::{Engine, EngineError, JobSpec, Method};
+use crate::engine::{Backend, Engine, EngineError, InterpreterBackend, JobSpec, Method};
+use crate::kernels::KernelMode;
+use crate::runtime::ArtifactMeta;
+use crate::util::json::{self, Json};
+use crate::util::rng::ChaChaRng;
 use crate::util::tensor::Tensor;
 
 pub fn bench_steps(default: usize) -> usize {
@@ -201,6 +212,269 @@ pub fn memory_estimate(
     Ok(net.memory_bytes(m))
 }
 
+// ---------------------------------------------------------------------------
+// Step-throughput harness (benches/throughput.rs)
+// ---------------------------------------------------------------------------
+
+/// One measured throughput point: a (model, method, kernel-mode, workers)
+/// cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct ThroughputPoint {
+    pub model: String,
+    pub method: String,
+    /// `"fused"` or `"legacy"`.
+    pub kernels: String,
+    pub threads: usize,
+    pub sec_per_step: f64,
+    pub steps_per_sec: f64,
+    /// Microbatch rows per second (`batch / sec_per_step`).
+    pub rows_per_sec: f64,
+}
+
+/// Per-(model, method) roll-up: best fused point vs the single-thread
+/// legacy scalar baseline.
+#[derive(Debug, Clone)]
+pub struct ThroughputSummary {
+    pub model: String,
+    pub method: String,
+    /// Worker count of the fastest fused point.
+    pub best_threads: usize,
+    pub scalar_steps_per_sec: f64,
+    pub fused_steps_per_sec: f64,
+    /// `fused_steps_per_sec / scalar_steps_per_sec` (the pre-PR path).
+    pub speedup_vs_scalar: f64,
+    /// Were loss/grad/sq_norms bit-identical across all swept worker
+    /// counts *and* vs the legacy path?
+    pub deterministic: bool,
+}
+
+/// DP-vs-non-DP cost of one model at a fixed worker count (the paper's
+/// headline: for BiTFiT this ratio should stay close to 1).
+#[derive(Debug, Clone)]
+pub struct DpOverhead {
+    pub model: String,
+    pub threads: usize,
+    pub dp_steps_per_sec: f64,
+    pub nondp_steps_per_sec: f64,
+    /// `nondp_steps_per_sec / dp_steps_per_sec`; 1.0 means DP is free.
+    pub overhead_ratio: f64,
+}
+
+/// Deterministic full-shape synthetic inputs for a train or eval
+/// artifact: init params split per the step's subset, seeded x/y, an
+/// all-active mask, and (train steps only) a clip radius of 0.1 so DP
+/// clipping really runs.  Shared by the throughput harness and the
+/// parallel-determinism test suite so both probe the *same* inputs;
+/// callers wanting masked rows or a different radius overwrite
+/// `inputs[4]` / `inputs[5]` on the returned vector.
+pub fn synth_step_inputs(
+    backend: &InterpreterBackend,
+    meta: &ArtifactMeta,
+    seed: u64,
+) -> Result<Vec<Tensor>, EngineError> {
+    let layout = backend.layout(&meta.model)?;
+    let full = backend.init_params(&meta.model)?;
+    let (frozen, train) = layout.split(&full, &meta.subset);
+    let b = meta.batch;
+    let mut rng = ChaChaRng::new(seed, 0xBE2C);
+    let x_spec = &meta.inputs[2];
+    let y_spec = &meta.inputs[3];
+    let x = if x_spec.dtype == "int32" {
+        Tensor::i32(
+            x_spec.shape.clone(),
+            (0..x_spec.elements()).map(|_| 1 + rng.below(300) as i32).collect(),
+        )
+    } else {
+        Tensor::f32(
+            x_spec.shape.clone(),
+            (0..x_spec.elements()).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect(),
+        )
+    };
+    let y = if y_spec.dtype == "int32" {
+        Tensor::i32(
+            y_spec.shape.clone(),
+            (0..y_spec.elements()).map(|_| rng.below(4) as i32).collect(),
+        )
+    } else {
+        Tensor::f32(
+            y_spec.shape.clone(),
+            (0..y_spec.elements()).map(|_| (rng.uniform() < 0.5) as i32 as f32).collect(),
+        )
+    };
+    let mut inputs = vec![
+        Tensor::f32(vec![meta.pf], frozen),
+        Tensor::f32(vec![meta.pt], train),
+        x,
+        y,
+        Tensor::f32(vec![b], vec![1.0; b]),
+    ];
+    if meta.inputs.len() > 5 {
+        inputs.push(Tensor::scalar_f32(0.1)); // clip_r (train steps)
+    }
+    Ok(inputs)
+}
+
+/// Time `iters` executions of one interpreter train step (after one warmup
+/// that also populates the step's scratch caches).
+pub fn interp_throughput(
+    model: &str,
+    method: &str,
+    threads: usize,
+    mode: KernelMode,
+    iters: usize,
+) -> Result<ThroughputPoint, EngineError> {
+    let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    let step = backend.load(&format!("{model}__{method}"))?;
+    let meta = step.meta().clone();
+    let inputs = synth_step_inputs(&backend, &meta, 7)?;
+    step.run(&inputs)?; // warmup
+    let iters = iters.max(1);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        step.run(&inputs)?;
+    }
+    let sec_per_step = t0.elapsed().as_secs_f64() / iters as f64;
+    Ok(ThroughputPoint {
+        model: model.to_string(),
+        method: method.to_string(),
+        kernels: mode.name().to_string(),
+        threads,
+        sec_per_step,
+        steps_per_sec: 1.0 / sec_per_step,
+        rows_per_sec: meta.batch as f64 / sec_per_step,
+    })
+}
+
+/// Bit patterns of one train step's outputs (loss, grad, sq_norms) — the
+/// determinism probe: equal vectors mean bit-identical results.
+pub fn interp_output_bits(
+    model: &str,
+    method: &str,
+    threads: usize,
+    mode: KernelMode,
+) -> Result<Vec<Vec<u32>>, EngineError> {
+    let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    let step = backend.load(&format!("{model}__{method}"))?;
+    let meta = step.meta().clone();
+    let inputs = synth_step_inputs(&backend, &meta, 7)?;
+    let out = step.run(&inputs)?;
+    Ok(out.iter().map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect()).collect())
+}
+
+/// Render the `BENCH_step_throughput.json` document.
+pub fn throughput_json(
+    points: &[ThroughputPoint],
+    summaries: &[ThroughputSummary],
+    overheads: &[DpOverhead],
+    steps_per_point: usize,
+) -> String {
+    let point = |p: &ThroughputPoint| {
+        json::obj(vec![
+            ("model", Json::Str(p.model.clone())),
+            ("method", Json::Str(p.method.clone())),
+            ("kernels", Json::Str(p.kernels.clone())),
+            ("threads", Json::Num(p.threads as f64)),
+            ("sec_per_step", Json::Num(p.sec_per_step)),
+            ("steps_per_sec", Json::Num(p.steps_per_sec)),
+            ("rows_per_sec", Json::Num(p.rows_per_sec)),
+        ])
+    };
+    let summary = |s: &ThroughputSummary| {
+        json::obj(vec![
+            ("model", Json::Str(s.model.clone())),
+            ("method", Json::Str(s.method.clone())),
+            ("best_threads", Json::Num(s.best_threads as f64)),
+            ("scalar_steps_per_sec", Json::Num(s.scalar_steps_per_sec)),
+            ("fused_steps_per_sec", Json::Num(s.fused_steps_per_sec)),
+            ("speedup_vs_scalar", Json::Num(s.speedup_vs_scalar)),
+            ("deterministic", Json::Bool(s.deterministic)),
+        ])
+    };
+    let overhead = |o: &DpOverhead| {
+        json::obj(vec![
+            ("model", Json::Str(o.model.clone())),
+            ("threads", Json::Num(o.threads as f64)),
+            ("dp_steps_per_sec", Json::Num(o.dp_steps_per_sec)),
+            ("nondp_steps_per_sec", Json::Num(o.nondp_steps_per_sec)),
+            ("overhead_ratio", Json::Num(o.overhead_ratio)),
+        ])
+    };
+    let doc = json::obj(vec![
+        ("bench", Json::Str("step_throughput".to_string())),
+        ("created_by", Json::Str("benches/throughput.rs".to_string())),
+        ("steps_per_point", Json::Num(steps_per_point as f64)),
+        (
+            "host_parallelism",
+            Json::Num(crate::runtime::pool::host_parallelism() as f64),
+        ),
+        ("points", Json::Arr(points.iter().map(point).collect())),
+        ("summary", Json::Arr(summaries.iter().map(summary).collect())),
+        ("dp_overhead", Json::Arr(overheads.iter().map(overhead).collect())),
+    ]);
+    json::write(&doc)
+}
+
+/// Validate an emitted `BENCH_step_throughput.json` document against the
+/// schema documented in the README (used by the `ci.sh` bench-smoke stage
+/// and by the harness itself right after writing).
+pub fn validate_throughput_json(src: &str) -> Result<(), String> {
+    let v = json::parse(src)?;
+    let field = |obj: &Json, key: &str| -> Result<(), String> {
+        obj.get(key).map(|_| ()).ok_or_else(|| format!("missing field {key:?}"))
+    };
+    if v.get("bench").and_then(|b| b.as_str()) != Some("step_throughput") {
+        return Err("bench field is not \"step_throughput\"".to_string());
+    }
+    for key in ["steps_per_point", "host_parallelism"] {
+        if v.get(key).and_then(|n| n.as_f64()).is_none() {
+            return Err(format!("missing numeric field {key:?}"));
+        }
+    }
+    let points = v
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| "missing points array".to_string())?;
+    if points.is_empty() {
+        return Err("points array is empty".to_string());
+    }
+    let point_keys =
+        ["model", "method", "kernels", "threads", "sec_per_step", "steps_per_sec", "rows_per_sec"];
+    for p in points {
+        for key in point_keys {
+            field(p, key)?;
+        }
+    }
+    let summary = v
+        .get("summary")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| "missing summary array".to_string())?;
+    let summary_keys = [
+        "model",
+        "method",
+        "best_threads",
+        "scalar_steps_per_sec",
+        "fused_steps_per_sec",
+        "speedup_vs_scalar",
+        "deterministic",
+    ];
+    for s in summary {
+        for key in summary_keys {
+            field(s, key)?;
+        }
+    }
+    let overhead = v
+        .get("dp_overhead")
+        .and_then(|o| o.as_arr())
+        .ok_or_else(|| "missing dp_overhead array".to_string())?;
+    for o in overhead {
+        for key in ["model", "threads", "dp_steps_per_sec", "nondp_steps_per_sec", "overhead_ratio"]
+        {
+            field(o, key)?;
+        }
+    }
+    Ok(())
+}
+
 /// Map artifact method names onto complexity-table methods.
 pub fn parse_method(method: &str) -> crate::analysis::complexity::Method {
     use crate::analysis::complexity::Method;
@@ -212,5 +486,81 @@ pub fn parse_method(method: &str) -> crate::analysis::complexity::Method {
         "dp-lora" => Method::DpLora { rank: 8 },
         "dp-adapter" => Method::DpAdapter { rank: 16 },
         _ => Method::NonDpFull,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_doc() -> String {
+        let points = vec![ThroughputPoint {
+            model: "cls-base".into(),
+            method: "dp-bitfit".into(),
+            kernels: "fused".into(),
+            threads: 2,
+            sec_per_step: 0.5,
+            steps_per_sec: 2.0,
+            rows_per_sec: 64.0,
+        }];
+        let summaries = vec![ThroughputSummary {
+            model: "cls-base".into(),
+            method: "dp-bitfit".into(),
+            best_threads: 2,
+            scalar_steps_per_sec: 0.5,
+            fused_steps_per_sec: 2.0,
+            speedup_vs_scalar: 4.0,
+            deterministic: true,
+        }];
+        let overheads = vec![DpOverhead {
+            model: "cls-base".into(),
+            threads: 2,
+            dp_steps_per_sec: 2.0,
+            nondp_steps_per_sec: 2.2,
+            overhead_ratio: 1.1,
+        }];
+        throughput_json(&points, &summaries, &overheads, 3)
+    }
+
+    #[test]
+    fn throughput_json_roundtrips_and_validates() {
+        let doc = sample_doc();
+        validate_throughput_json(&doc).unwrap();
+        let v = json::parse(&doc).unwrap();
+        assert_eq!(v.req("bench").as_str(), Some("step_throughput"));
+        assert_eq!(v.req("points").as_arr().unwrap().len(), 1);
+        let s = &v.req("summary").as_arr().unwrap()[0];
+        assert_eq!(s.req("speedup_vs_scalar").as_f64(), Some(4.0));
+        assert_eq!(s.req("deterministic").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn validator_rejects_broken_documents() {
+        assert!(validate_throughput_json("{}").is_err());
+        assert!(validate_throughput_json("not json").is_err());
+        // right shape, wrong bench tag
+        let doc = sample_doc().replace("step_throughput", "other_bench");
+        assert!(validate_throughput_json(&doc).is_err());
+        // empty points array is rejected
+        let doc = sample_doc();
+        let start = doc.find("\"points\"").unwrap();
+        let open = doc[start..].find('[').unwrap() + start;
+        let close = doc[open..].find(']').unwrap() + open;
+        let broken = format!("{}{}", &doc[..open + 1], &doc[close..]);
+        assert!(validate_throughput_json(&broken).is_err());
+    }
+
+    #[test]
+    fn interp_throughput_measures_and_is_deterministic() {
+        let p = interp_throughput("cls-base", "dp-bitfit", 2, KernelMode::Fused, 1).unwrap();
+        assert!(p.sec_per_step > 0.0 && p.sec_per_step.is_finite());
+        assert!(p.steps_per_sec > 0.0 && p.rows_per_sec > p.steps_per_sec);
+        assert_eq!(p.kernels, "fused");
+        // same inputs, different worker counts and kernels: identical bits
+        let a = interp_output_bits("cls-base", "dp-bitfit", 1, KernelMode::Fused).unwrap();
+        let b = interp_output_bits("cls-base", "dp-bitfit", 2, KernelMode::Fused).unwrap();
+        let c = interp_output_bits("cls-base", "dp-bitfit", 1, KernelMode::Legacy).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, c);
     }
 }

@@ -110,6 +110,14 @@ pub trait Backend {
 
 /// Validate host inputs against a step's input specs (shape check).
 pub fn check_inputs(meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<(), EngineError> {
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    check_input_refs(meta, &refs)
+}
+
+/// Validate borrowed host inputs against a step's input specs (shape
+/// check).  The borrowing form lets zero-copy step paths (pinned inputs,
+/// cached session tensors) validate without cloning.
+pub fn check_input_refs(meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<(), EngineError> {
     if inputs.len() != meta.inputs.len() {
         return Err(EngineError::Data(format!(
             "artifact {} expects {} inputs, got {}",

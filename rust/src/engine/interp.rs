@@ -24,19 +24,33 @@
 //! interpreter is a correctness reference, not a parameter-efficiency
 //! simulator.
 //!
+//! ## Execution
+//!
+//! Rows run through the fused kernels of [`crate::kernels`] on the scoped
+//! pool of [`crate::runtime::pool`]: per-sample gradients land in per-row
+//! shards and are reduced in fixed row order, so outputs are bit-identical
+//! for any `FASTDP_THREADS` value (and to the pre-optimization scalar path,
+//! selectable with `FASTDP_KERNELS=legacy`).  A loaded step caches its
+//! trainable-slot table, its frozen/train -> full scatter plan, and all
+//! scratch buffers, so the steady state does no per-row heap allocation
+//! and never re-merges parameters from scratch.
+//!
 //! Gradients are computed analytically in f64 and verified against finite
 //! differences in the unit tests below.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::coordinator::workloads::ModelShape;
 use crate::dp::clip::{clip_factor, ClipMode};
+use crate::kernels::{fused, legacy, loss, KernelMode, NetView, TrainSlots, Workspace};
+use crate::runtime::pool;
 use crate::runtime::{ArtifactMeta, IoSpec, Layout, LayoutLeaf};
 use crate::util::rng::ChaChaRng;
 use crate::util::tensor::Tensor;
 
-use super::backend::{check_inputs, Backend, ModelInfo, Pinned, StepRunner};
+use super::backend::{check_input_refs, Backend, ModelInfo, Pinned, StepRunner};
 use super::error::EngineError;
 
 const NAME: &str = "interpreter";
@@ -70,11 +84,49 @@ pub struct InterpreterBackend {
     // RefCell so the read-only Backend methods (&self) share the cache
     models: std::cell::RefCell<HashMap<String, Rc<RefModel>>>,
     steps: HashMap<String, Rc<RefStep>>,
+    /// Worker-count override baked into steps loaded afterwards
+    /// (`None` => steps resolve `FASTDP_THREADS` once when loaded).
+    threads: Option<usize>,
+    /// Kernel-mode override baked into steps loaded afterwards
+    /// (`None` => steps resolve `FASTDP_KERNELS` once when loaded).
+    kernels: Option<KernelMode>,
 }
 
 impl InterpreterBackend {
     pub fn new() -> InterpreterBackend {
         InterpreterBackend::default()
+    }
+
+    /// An interpreter whose steps always run with `n` workers, ignoring
+    /// `FASTDP_THREADS` (used by benches/tests for reproducible sweeps).
+    pub fn with_threads(n: usize) -> InterpreterBackend {
+        InterpreterBackend::with_config(Some(n), None)
+    }
+
+    /// An interpreter with explicit worker-count and kernel-mode overrides
+    /// (`None` defers to the environment, read once per loaded step).
+    pub fn with_config(threads: Option<usize>, kernels: Option<KernelMode>) -> InterpreterBackend {
+        InterpreterBackend {
+            threads: threads.map(|n| n.max(1)),
+            kernels,
+            ..InterpreterBackend::default()
+        }
+    }
+
+    /// Override the worker count.  Drops the step cache so the next
+    /// `load` re-bakes the configuration (step handles already held by
+    /// callers keep their old worker count).
+    pub fn set_threads(&mut self, threads: Option<usize>) {
+        self.threads = threads.map(|n| n.max(1));
+        self.steps.clear();
+    }
+
+    /// Override the kernel mode.  Drops the step cache so the next `load`
+    /// re-bakes the configuration (step handles already held by callers
+    /// keep their old mode).
+    pub fn set_kernels(&mut self, kernels: Option<KernelMode>) {
+        self.kernels = kernels;
+        self.steps.clear();
     }
 
     fn model_ref(&self, name: &str) -> Result<Rc<RefModel>, EngineError> {
@@ -140,7 +192,7 @@ impl Backend for InterpreterBackend {
         let (model, kind) = parse_artifact(artifact)?;
         let m = self.model_ref(&model)?;
         let meta = m.meta_for(artifact, &kind)?;
-        let step = Rc::new(RefStep { model: m, meta });
+        let step = Rc::new(RefStep::new(m, meta, self.threads, self.kernels));
         self.steps.insert(artifact.to_string(), step.clone());
         Ok(step)
     }
@@ -339,7 +391,24 @@ impl RefModel {
             .map(|l| &full[l.offset..l.offset + l.size])
     }
 
-    /// Ranges of each trainable leaf inside the flat trainable vector.
+    /// Borrowed flat views + dims over a merged full parameter vector.
+    fn net_view<'a>(&self, full: &'a [f32]) -> NetView<'a> {
+        NetView {
+            embed: self.leaf_slice(full, "embed").unwrap_or(&[]),
+            enc_w: self.leaf_slice(full, "enc/w").expect("enc/w leaf"),
+            enc_b: self.leaf_slice(full, "enc/b"),
+            head_w: self.leaf_slice(full, "head/w").expect("head/w leaf"),
+            head_b: self.leaf_slice(full, "head/b").expect("head/b leaf"),
+            d: self.d,
+            h: self.h,
+            out: self.out,
+            vocab: self.vocab,
+            feat: self.feat_dim(),
+        }
+    }
+
+    /// Ranges of each trainable leaf inside the flat trainable vector
+    /// (legacy-path representation).
     fn train_slots(&self, subset: &str) -> HashMap<String, (usize, usize)> {
         let mask = &self.layout.subsets[subset];
         let mut slots = HashMap::new();
@@ -351,6 +420,49 @@ impl RefModel {
             }
         }
         slots
+    }
+
+    /// Trainable-leaf offsets as a flat struct (fused-path representation;
+    /// computed once per loaded step).
+    fn train_slots_packed(&self, subset: &str) -> TrainSlots {
+        let mask = &self.layout.subsets[subset];
+        let mut slots = TrainSlots::default();
+        let mut off = 0usize;
+        for (leaf, &tr) in self.layout.leaves.iter().zip(mask) {
+            if !tr {
+                continue;
+            }
+            match leaf.name.as_str() {
+                "embed" => slots.embed = Some(off),
+                "enc/w" => slots.enc_w = Some(off),
+                "enc/b" => slots.enc_b = Some(off),
+                "head/w" => slots.head_w = Some(off),
+                "head/b" => slots.head_b = Some(off),
+                _ => {}
+            }
+            off += leaf.size;
+        }
+        slots.pt = off;
+        slots
+    }
+
+    /// The fixed (frozen, train) -> full scatter plan for a subset, so the
+    /// hot path re-fills one cached buffer instead of calling
+    /// `Layout::merge` (which allocates) per microbatch.
+    fn merge_plan(&self, subset: &str) -> Vec<CopyRange> {
+        let mask = &self.layout.subsets[subset];
+        let (mut fo, mut to) = (0usize, 0usize);
+        let mut plan = Vec::with_capacity(self.layout.leaves.len());
+        for (leaf, &tr) in self.layout.leaves.iter().zip(mask) {
+            let src = if tr { to } else { fo };
+            plan.push(CopyRange { dst: leaf.offset, src, len: leaf.size, from_train: tr });
+            if tr {
+                to += leaf.size;
+            } else {
+                fo += leaf.size;
+            }
+        }
+        plan
     }
 
     fn subset_for_fragment(&self, fragment: &str) -> Result<&'static str, EngineError> {
@@ -495,216 +607,88 @@ impl RefModel {
     }
 }
 
-/// Per-row forward state (f64 for numerically clean gradients).
-struct Forward {
-    feat: Vec<f64>,
-    hpre: Vec<f64>,
-    hact: Vec<f64>,
-    logits: Vec<f64>,
+/// One fixed copy in the (frozen, train) -> full scatter plan.
+struct CopyRange {
+    dst: usize,
+    src: usize,
+    len: usize,
+    from_train: bool,
 }
 
-/// Views into a merged full parameter vector.
-struct Net<'a> {
-    embed: &'a [f32],
-    enc_w: &'a [f32],
-    enc_b: Option<&'a [f32]>,
-    head_w: &'a [f32],
-    head_b: &'a [f32],
+/// Per-row result of a pooled row kernel, reduced in fixed row order.
+#[derive(Clone, Copy, Default)]
+struct RowOut {
+    /// Train: raw row loss.  Eval: metric_a contribution.
+    a: f64,
+    /// Train: squared per-sample gradient norm.  Eval: metric_b contribution.
+    b: f64,
+    /// False for masked-out rows (their shards are skipped in the reduce).
+    active: bool,
 }
 
-impl RefModel {
-    fn net<'a>(&self, full: &'a [f32]) -> Net<'a> {
-        Net {
-            embed: self.leaf_slice(full, "embed").unwrap_or(&[]),
-            enc_w: self.leaf_slice(full, "enc/w").expect("enc/w leaf"),
-            enc_b: self.leaf_slice(full, "enc/b"),
-            head_w: self.leaf_slice(full, "head/w").expect("head/w leaf"),
-            head_b: self.leaf_slice(full, "head/b").expect("head/b leaf"),
-        }
-    }
-
-    /// Mean-pooled embedding features for a token row (Cls); returns the
-    /// active token ids alongside so backprop can scatter into the embedding.
-    fn pooled_feat(&self, net: &Net, toks: &[i32]) -> (Vec<f64>, Vec<usize>) {
-        let active: Vec<usize> =
-            toks.iter().filter(|&&t| t > 0).map(|&t| t as usize % self.vocab).collect();
-        let mut feat = vec![0.0f64; self.d];
-        if !active.is_empty() {
-            for &tok in &active {
-                let e = &net.embed[tok * self.d..(tok + 1) * self.d];
-                for i in 0..self.d {
-                    feat[i] += e[i] as f64;
-                }
-            }
-            let inv = 1.0 / active.len() as f64;
-            for f in feat.iter_mut() {
-                *f *= inv;
-            }
-        }
-        (feat, active)
-    }
-
-    /// Single-token embedding features (Lm); returns the canonical token id.
-    fn token_feat(&self, net: &Net, tok: i32) -> (Vec<f64>, usize) {
-        let tok = (tok.max(0) as usize) % self.vocab;
-        let e = &net.embed[tok * self.d..(tok + 1) * self.d];
-        (e.iter().map(|&v| v as f64).collect(), tok)
-    }
-
-    /// Flattened pixel features (Vit/Cnn).
-    fn pixel_feat(&self, x: &Tensor, row: usize) -> Vec<f64> {
-        let pix = self.img * self.img * 3;
-        x.as_f32()[row * pix..(row + 1) * pix].iter().map(|&v| v as f64).collect()
-    }
-
-    /// hidden + logits from a feature vector.
-    fn forward_feat(&self, net: &Net, feat: Vec<f64>) -> Forward {
-        let (h, out) = (self.h, self.out);
-        let mut hpre = vec![0.0f64; h];
-        for (i, &f) in feat.iter().enumerate() {
-            if f == 0.0 {
-                continue;
-            }
-            let row = &net.enc_w[i * h..(i + 1) * h];
-            for j in 0..h {
-                hpre[j] += f * row[j] as f64;
-            }
-        }
-        if let Some(b) = net.enc_b {
-            for j in 0..h {
-                hpre[j] += b[j] as f64;
-            }
-        }
-        let hact: Vec<f64> = hpre.iter().map(|&v| v.max(0.0)).collect();
-        let mut logits = vec![0.0f64; out];
-        for j in 0..h {
-            if hact[j] == 0.0 {
-                continue;
-            }
-            let row = &net.head_w[j * out..(j + 1) * out];
-            for k in 0..out {
-                logits[k] += hact[j] * row[k] as f64;
-            }
-        }
-        for k in 0..out {
-            logits[k] += net.head_b[k] as f64;
-        }
-        Forward { feat, hpre, hact, logits }
-    }
-
-    /// Backprop `dlogits` through head + hidden into `grad` (flat trainable
-    /// vector, per `slots`); returns d(feat) if the embedding needs it.
-    #[allow(clippy::too_many_arguments)]
-    fn backward_feat(
-        &self,
-        net: &Net,
-        fwd: &Forward,
-        dlogits: &[f64],
-        slots: &HashMap<String, (usize, usize)>,
-        grad: &mut [f64],
-        want_dfeat: bool,
-    ) -> Option<Vec<f64>> {
-        let (h, out) = (self.h, self.out);
-        if let Some(&(off, _)) = slots.get("head/b") {
-            for k in 0..out {
-                grad[off + k] += dlogits[k];
-            }
-        }
-        if let Some(&(off, _)) = slots.get("head/w") {
-            for j in 0..h {
-                if fwd.hact[j] == 0.0 {
-                    continue;
-                }
-                let g = &mut grad[off + j * out..off + (j + 1) * out];
-                for k in 0..out {
-                    g[k] += fwd.hact[j] * dlogits[k];
-                }
-            }
-        }
-        let need_dh = want_dfeat
-            || slots.contains_key("enc/b")
-            || slots.contains_key("enc/w")
-            || slots.contains_key("embed");
-        if !need_dh {
-            return None;
-        }
-        let mut dh = vec![0.0f64; h];
-        for j in 0..h {
-            if fwd.hpre[j] <= 0.0 {
-                continue; // relu gate
-            }
-            let row = &net.head_w[j * out..(j + 1) * out];
-            let mut acc = 0.0f64;
-            for k in 0..out {
-                acc += row[k] as f64 * dlogits[k];
-            }
-            dh[j] = acc;
-        }
-        if let Some(&(off, _)) = slots.get("enc/b") {
-            for j in 0..h {
-                grad[off + j] += dh[j];
-            }
-        }
-        if let Some(&(off, _)) = slots.get("enc/w") {
-            for (i, &f) in fwd.feat.iter().enumerate() {
-                if f == 0.0 {
-                    continue;
-                }
-                let g = &mut grad[off + i * h..off + (i + 1) * h];
-                for j in 0..h {
-                    g[j] += f * dh[j];
-                }
-            }
-        }
-        if want_dfeat || slots.contains_key("embed") {
-            let d = self.feat_dim();
-            let mut dfeat = vec![0.0f64; d];
-            for (i, df) in dfeat.iter_mut().enumerate() {
-                let row = &net.enc_w[i * h..(i + 1) * h];
-                let mut acc = 0.0f64;
-                for j in 0..h {
-                    acc += row[j] as f64 * dh[j];
-                }
-                *df = acc;
-            }
-            Some(dfeat)
-        } else {
-            None
-        }
-    }
+/// Cached buffers of one loaded step — allocated on first run, reused for
+/// every subsequent microbatch.
+#[derive(Default)]
+struct Scratch {
+    /// Merged full parameter vector (refilled in place via the scatter plan).
+    full: Vec<f32>,
+    /// Per-row clipped-gradient shards (`batch * pt`).
+    partials: Vec<f64>,
+    /// f64 gradient accumulator for the fixed-order reduction.
+    grad_sum: Vec<f64>,
+    /// Per-row kernel results.
+    rows: Vec<RowOut>,
+    /// One workspace per worker thread.
+    workspaces: Vec<Workspace>,
 }
 
-/// Stable softmax cross-entropy: returns (loss, dlogits).
-fn softmax_ce(logits: &[f64], label: usize) -> (f64, Vec<f64>) {
-    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
-    let z: f64 = exps.iter().sum();
-    let loss = z.ln() - (logits[label] - m);
-    let mut dl: Vec<f64> = exps.iter().map(|&e| e / z).collect();
-    dl[label] -= 1.0;
-    (loss, dl)
-}
-
-/// Stable sigmoid binary cross-entropy over a multi-label vector:
-/// returns (loss, dlogits).
-fn sigmoid_bce(logits: &[f64], targets: &[f64]) -> (f64, Vec<f64>) {
-    let mut loss = 0.0f64;
-    let mut dl = vec![0.0f64; logits.len()];
-    for (k, (&l, &y)) in logits.iter().zip(targets).enumerate() {
-        // softplus(l) - y*l, computed stably
-        loss += l.max(0.0) - l * y + (-l.abs()).exp().ln_1p();
-        dl[k] = 1.0 / (1.0 + (-l).exp()) - y;
+impl Scratch {
+    fn ensure_workspaces(&mut self, n: usize, feat: usize, h: usize, out: usize, g_len: usize) {
+        while self.workspaces.len() < n {
+            self.workspaces.push(Workspace::new(feat, h, out, g_len));
+        }
     }
-    (loss, dl)
 }
 
 /// An executable interpreter step.
 struct RefStep {
     model: Rc<RefModel>,
     meta: ArtifactMeta,
+    /// Trainable-leaf offsets under this step's subset (train steps).
+    slots: TrainSlots,
+    /// Fixed (frozen, train) -> full scatter plan (train steps).
+    merge_plan: Vec<CopyRange>,
+    /// Worker count, resolved once at load (override or `FASTDP_THREADS`)
+    /// so the hot path never touches the process environment.
+    threads: usize,
+    /// Kernel mode, resolved once at load (override or `FASTDP_KERNELS`).
+    kernels: KernelMode,
+    scratch: RefCell<Scratch>,
 }
 
 impl RefStep {
+    fn new(
+        model: Rc<RefModel>,
+        meta: ArtifactMeta,
+        threads: Option<usize>,
+        kernels: Option<KernelMode>,
+    ) -> RefStep {
+        let (slots, merge_plan) = if meta.step == "train" {
+            (model.train_slots_packed(&meta.subset), model.merge_plan(&meta.subset))
+        } else {
+            (TrainSlots::default(), Vec::new())
+        };
+        RefStep {
+            model,
+            meta,
+            slots,
+            merge_plan,
+            threads: threads.unwrap_or_else(pool::default_threads),
+            kernels: kernels.unwrap_or_else(KernelMode::from_env),
+            scratch: RefCell::new(Scratch::default()),
+        }
+    }
+
     fn is_dp(&self) -> bool {
         self.meta.method.starts_with("dp-")
     }
@@ -713,22 +697,139 @@ impl RefStep {
         self.meta.clip.as_deref().and_then(ClipMode::parse).unwrap_or(ClipMode::Abadi)
     }
 
-    fn run_train(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
-        let m = &self.model;
+    /// Worker count for this run (capped by the microbatch).
+    fn resolve_threads(&self, b: usize) -> usize {
+        self.threads.clamp(1, b.max(1))
+    }
+
+    fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        check_input_refs(&self.meta, inputs)?;
+        match self.meta.step.as_str() {
+            "train" => self.run_train(inputs),
+            "eval" => self.run_eval(inputs),
+            "decode" => self.run_decode(inputs),
+            other => Err(EngineError::backend(NAME, format!("unknown step kind {other:?}"))),
+        }
+    }
+
+    fn run_train(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        if self.kernels == KernelMode::Legacy {
+            return self.run_train_legacy(inputs);
+        }
+        let m = &*self.model;
         let frozen = inputs[0].as_f32();
         let train = inputs[1].as_f32();
-        let x = &inputs[2];
-        let y = &inputs[3];
+        let x = inputs[2];
+        let y = inputs[3];
+        let mask = inputs[4].as_f32();
+        let clip_r = inputs[5].item_f32() as f64;
+        let pt = self.meta.pt;
+        let b = self.meta.batch;
+        let dp = self.is_dp();
+        let mode = self.clip_mode();
+        let threads = self.resolve_threads(b);
+
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.full.resize(m.layout.n_params, 0.0);
+        s.partials.resize(b * pt, 0.0);
+        if s.rows.len() < b {
+            s.rows.resize(b, RowOut::default());
+        }
+        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out, pt);
+        s.grad_sum.clear();
+        s.grad_sum.resize(pt, 0.0);
+        for r in &self.merge_plan {
+            let src = if r.from_train { train } else { frozen };
+            s.full[r.dst..r.dst + r.len].copy_from_slice(&src[r.src..r.src + r.len]);
+        }
+        let net = m.net_view(&s.full);
+        let slots = self.slots;
+        let kind = m.kind;
+        let t_len = m.t;
+        let out_w = m.out;
+        let npix = m.img * m.img * 3;
+        pool::for_each_sharded(
+            b,
+            &mut s.workspaces[..threads],
+            &mut s.rows[..b],
+            &mut s.partials[..b * pt],
+            pt,
+            |row, ws, shard| {
+                if mask[row] <= 0.0 {
+                    return RowOut::default();
+                }
+                ws.zero_grad();
+                let row_loss = match kind {
+                    RefKind::Cls => {
+                        let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                        let label = (y.as_i32()[row].max(0) as usize) % out_w;
+                        fused::row_cls(&net, &slots, ws, toks, label)
+                    }
+                    RefKind::Lm => {
+                        let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                        let targets = &y.as_i32()[row * t_len..(row + 1) * t_len];
+                        fused::row_lm(&net, &slots, ws, toks, targets)
+                    }
+                    RefKind::Vit => {
+                        let pix = &x.as_f32()[row * npix..(row + 1) * npix];
+                        let label = (y.as_i32()[row].max(0) as usize) % out_w;
+                        fused::row_vit(&net, &slots, ws, pix, label)
+                    }
+                    RefKind::Cnn => {
+                        let pix = &x.as_f32()[row * npix..(row + 1) * npix];
+                        let targets = &y.as_f32()[row * out_w..(row + 1) * out_w];
+                        fused::row_cnn(&net, &slots, ws, pix, targets)
+                    }
+                };
+                let sq = fused::clip_into(&ws.g, dp, clip_r, mode, shard);
+                RowOut { a: row_loss, b: sq, active: true }
+            },
+        );
+        // fixed-order reduction: row shards accumulate in row order on this
+        // thread, so the result is independent of the worker count
+        let mut loss_sum = 0.0f64;
+        let mut sq_norms = vec![0.0f32; b];
+        for row in 0..b {
+            let ro = s.rows[row];
+            if !ro.active {
+                continue;
+            }
+            sq_norms[row] = ro.b as f32;
+            let shard = &s.partials[row * pt..(row + 1) * pt];
+            for (gs, &v) in s.grad_sum.iter_mut().zip(shard) {
+                *gs += v;
+            }
+            loss_sum += ro.a * mask[row] as f64;
+        }
+        Ok(vec![
+            Tensor::scalar_f32(loss_sum as f32),
+            Tensor::f32(vec![pt], s.grad_sum.iter().map(|&v| v as f32).collect()),
+            Tensor::f32(vec![b], sq_norms),
+        ])
+    }
+
+    /// The pre-optimization scalar path (see [`crate::kernels::legacy`]):
+    /// single-threaded, allocates per row, re-merges parameters per call.
+    fn run_train_legacy(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &*self.model;
+        let frozen = inputs[0].as_f32();
+        let train = inputs[1].as_f32();
+        let x = inputs[2];
+        let y = inputs[3];
         let mask = inputs[4].as_f32();
         let clip_r = inputs[5].item_f32() as f64;
         let full = m.layout.merge(frozen, train, &self.meta.subset);
-        let net = m.net(&full);
+        let net = m.net_view(&full);
         let slots = m.train_slots(&self.meta.subset);
         let pt = self.meta.pt;
         let b = self.meta.batch;
         let dp = self.is_dp();
         let mode = self.clip_mode();
         let embed_slot = slots.get("embed").copied();
+        let scatter_ctx =
+            legacy::BackwardCtx { net: &net, slots: &slots, want_dfeat: embed_slot.is_some() };
+        let plain_ctx = legacy::BackwardCtx { net: &net, slots: &slots, want_dfeat: false };
 
         let mut loss_sum = 0.0f64;
         let mut grad_sum = vec![0.0f64; pt];
@@ -745,13 +846,13 @@ impl RefStep {
             match m.kind {
                 RefKind::Cls => {
                     let toks = &x.as_i32()[row * m.t..(row + 1) * m.t];
-                    let (feat, active) = m.pooled_feat(&net, toks);
-                    let fwd = m.forward_feat(&net, feat);
+                    let (feat, active) = legacy::pooled_feat(&net, toks);
+                    let fwd = legacy::forward_feat(&net, feat);
                     let label = (y.as_i32()[row].max(0) as usize) % m.out;
-                    let (loss, dl) = softmax_ce(&fwd.logits, label);
+                    let (loss, dl) = legacy::softmax_ce(&fwd.logits, label);
                     row_loss = loss;
                     let dfeat =
-                        m.backward_feat(&net, &fwd, &dl, &slots, &mut g, embed_slot.is_some());
+                        legacy::backward_feat(&scatter_ctx, &fwd, &dl, &mut g);
                     if let (Some((off, _)), Some(dfeat)) = (embed_slot, dfeat) {
                         if !active.is_empty() {
                             let inv = 1.0 / active.len() as f64;
@@ -772,12 +873,12 @@ impl RefStep {
                         if target <= 0 {
                             continue; // pad / ignore
                         }
-                        let (feat, tok) = m.token_feat(&net, toks[p]);
-                        let fwd = m.forward_feat(&net, feat);
-                        let (loss, dl) = softmax_ce(&fwd.logits, target as usize % m.out);
+                        let (feat, tok) = legacy::token_feat(&net, toks[p]);
+                        let fwd = legacy::forward_feat(&net, feat);
+                        let (loss, dl) = legacy::softmax_ce(&fwd.logits, target as usize % m.out);
                         row_loss += loss;
                         let dfeat =
-                            m.backward_feat(&net, &fwd, &dl, &slots, &mut g, embed_slot.is_some());
+                            legacy::backward_feat(&scatter_ctx, &fwd, &dl, &mut g);
                         if let (Some((off, _)), Some(dfeat)) = (embed_slot, dfeat) {
                             let ge = &mut g[off + tok * m.d..off + (tok + 1) * m.d];
                             for i in 0..m.d {
@@ -787,20 +888,22 @@ impl RefStep {
                     }
                 }
                 RefKind::Vit | RefKind::Cnn => {
-                    let fwd = m.forward_feat(&net, m.pixel_feat(x, row));
+                    let npix = m.img * m.img * 3;
+                    let pix = &x.as_f32()[row * npix..(row + 1) * npix];
+                    let fwd = legacy::forward_feat(&net, legacy::pixel_feat(pix));
                     if m.kind == RefKind::Vit {
                         let label = (y.as_i32()[row].max(0) as usize) % m.out;
-                        let (loss, dl) = softmax_ce(&fwd.logits, label);
+                        let (loss, dl) = legacy::softmax_ce(&fwd.logits, label);
                         row_loss = loss;
-                        m.backward_feat(&net, &fwd, &dl, &slots, &mut g, false);
+                        legacy::backward_feat(&plain_ctx, &fwd, &dl, &mut g);
                     } else {
                         let targets: Vec<f64> = y.as_f32()[row * m.out..(row + 1) * m.out]
                             .iter()
                             .map(|&v| v as f64)
                             .collect();
-                        let (loss, dl) = sigmoid_bce(&fwd.logits, &targets);
+                        let (loss, dl) = legacy::sigmoid_bce(&fwd.logits, &targets);
                         row_loss = loss;
-                        m.backward_feat(&net, &fwd, &dl, &slots, &mut g, false);
+                        legacy::backward_feat(&plain_ctx, &fwd, &dl, &mut g);
                     }
                 }
             }
@@ -819,98 +922,131 @@ impl RefStep {
         ])
     }
 
-    fn run_eval(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
-        let m = &self.model;
+    fn run_eval(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &*self.model;
         let full = inputs[1].as_f32();
-        let x = &inputs[2];
-        let y = &inputs[3];
+        let x = inputs[2];
+        let y = inputs[3];
         let mask = inputs[4].as_f32();
-        let net = m.net(full);
         let b = self.meta.batch;
-        let (mut a_sum, mut b_sum) = (0.0f64, 0.0f64);
-        for row in 0..b {
+        let threads = self.resolve_threads(b);
+
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        if s.rows.len() < b {
+            s.rows.resize(b, RowOut::default());
+        }
+        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out, 0);
+        let net = m.net_view(full);
+        let kind = m.kind;
+        let t_len = m.t;
+        let out_w = m.out;
+        let npix = m.img * m.img * 3;
+        pool::for_each(b, &mut s.workspaces[..threads], &mut s.rows[..b], |row, ws| {
             if mask[row] <= 0.0 {
-                continue;
+                return RowOut::default();
             }
-            match m.kind {
+            match kind {
                 RefKind::Cls => {
-                    let toks = &x.as_i32()[row * m.t..(row + 1) * m.t];
-                    let (feat, _) = m.pooled_feat(&net, toks);
-                    let fwd = m.forward_feat(&net, feat);
-                    let label = (y.as_i32()[row].max(0) as usize) % m.out;
-                    let (loss, _) = softmax_ce(&fwd.logits, label);
-                    a_sum += loss;
-                    b_sum += (argmax(&fwd.logits) == label) as u32 as f64;
+                    let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                    fused::pool_tokens(&net, ws, toks);
+                    fused::forward(&net, ws);
+                    let label = (y.as_i32()[row].max(0) as usize) % out_w;
+                    let l = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
+                    let hit = (loss::argmax(&ws.logits) == label) as u32 as f64;
+                    RowOut { a: l, b: hit, active: true }
                 }
                 RefKind::Lm => {
-                    let toks = &x.as_i32()[row * m.t..(row + 1) * m.t];
-                    let targets = &y.as_i32()[row * m.t..(row + 1) * m.t];
-                    for p in 0..m.t {
-                        let target = targets[p];
+                    let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                    let targets = &y.as_i32()[row * t_len..(row + 1) * t_len];
+                    let (mut nll, mut count) = (0.0f64, 0.0f64);
+                    for (p, &target) in targets.iter().enumerate() {
                         if target <= 0 {
                             continue;
                         }
-                        let (feat, _) = m.token_feat(&net, toks[p]);
-                        let fwd = m.forward_feat(&net, feat);
-                        let (loss, _) = softmax_ce(&fwd.logits, target as usize % m.out);
-                        a_sum += loss;
-                        b_sum += 1.0;
+                        fused::load_token(&net, ws, toks[p]);
+                        fused::forward(&net, ws);
+                        nll += loss::softmax_ce_into(
+                            &ws.logits,
+                            target as usize % out_w,
+                            &mut ws.dlogits,
+                        );
+                        count += 1.0;
                     }
+                    RowOut { a: nll, b: count, active: true }
                 }
                 RefKind::Vit => {
-                    let fwd = m.forward_feat(&net, m.pixel_feat(x, row));
-                    let label = (y.as_i32()[row].max(0) as usize) % m.out;
-                    let (loss, _) = softmax_ce(&fwd.logits, label);
-                    a_sum += loss;
-                    b_sum += (argmax(&fwd.logits) == label) as u32 as f64;
+                    let pix = &x.as_f32()[row * npix..(row + 1) * npix];
+                    fused::load_pixels(ws, pix);
+                    fused::forward(&net, ws);
+                    let label = (y.as_i32()[row].max(0) as usize) % out_w;
+                    let l = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
+                    let hit = (loss::argmax(&ws.logits) == label) as u32 as f64;
+                    RowOut { a: l, b: hit, active: true }
                 }
                 RefKind::Cnn => {
-                    let fwd = m.forward_feat(&net, m.pixel_feat(x, row));
-                    let targets: Vec<f64> =
-                        y.as_f32()[row * m.out..(row + 1) * m.out].iter().map(|&v| v as f64).collect();
-                    let (loss, _) = sigmoid_bce(&fwd.logits, &targets);
-                    a_sum += loss;
-                    let correct = fwd
+                    let pix = &x.as_f32()[row * npix..(row + 1) * npix];
+                    fused::load_pixels(ws, pix);
+                    fused::forward(&net, ws);
+                    let targets = &y.as_f32()[row * out_w..(row + 1) * out_w];
+                    let l = loss::sigmoid_bce_into(&ws.logits, targets, &mut ws.dlogits);
+                    let correct = ws
                         .logits
                         .iter()
-                        .zip(&targets)
-                        .filter(|(&l, &y)| (l > 0.0) == (y > 0.5))
+                        .zip(targets)
+                        .filter(|(&l, &t)| (l > 0.0) == (t > 0.5))
                         .count();
-                    b_sum += correct as f64 / m.out as f64;
+                    RowOut { a: l, b: correct as f64 / out_w as f64, active: true }
                 }
             }
+        });
+        let (mut a_sum, mut b_sum) = (0.0f64, 0.0f64);
+        for ro in &s.rows[..b] {
+            if !ro.active {
+                continue;
+            }
+            a_sum += ro.a;
+            b_sum += ro.b;
         }
         Ok(vec![Tensor::scalar_f32(a_sum as f32), Tensor::scalar_f32(b_sum as f32)])
     }
 
-    fn run_decode(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
-        let m = &self.model;
+    fn run_decode(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &*self.model;
         let full = inputs[1].as_f32();
         let x = inputs[2].as_i32();
         let pos = inputs[3].as_i32();
-        let net = m.net(full);
         let b = self.meta.batch;
-        let mut logits_out = vec![0.0f32; b * m.vocab];
-        for row in 0..b {
-            let p = (pos[row].max(0) as usize).min(m.t - 1);
-            let (feat, _) = m.token_feat(&net, x[row * m.t + p]);
-            let fwd = m.forward_feat(&net, feat);
-            for (k, &l) in fwd.logits.iter().enumerate() {
-                logits_out[row * m.vocab + k] = l as f32;
-            }
-        }
-        Ok(vec![Tensor::f32(vec![b, m.vocab], logits_out)])
-    }
-}
+        let threads = self.resolve_threads(b);
 
-fn argmax(xs: &[f64]) -> usize {
-    let mut best = 0;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
-            best = i;
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        if s.rows.len() < b {
+            s.rows.resize(b, RowOut::default());
         }
+        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out, 0);
+        let net = m.net_view(full);
+        let t_len = m.t;
+        let vocab = m.vocab;
+        let mut logits_out = vec![0.0f32; b * vocab];
+        pool::for_each_sharded(
+            b,
+            &mut s.workspaces[..threads],
+            &mut s.rows[..b],
+            &mut logits_out,
+            vocab,
+            |row, ws, lrow| {
+                let p = (pos[row].max(0) as usize).min(t_len - 1);
+                fused::load_token(&net, ws, x[row * t_len + p]);
+                fused::forward(&net, ws);
+                for (o, &l) in lrow.iter_mut().zip(&ws.logits) {
+                    *o = l as f32;
+                }
+                RowOut::default()
+            },
+        );
+        Ok(vec![Tensor::f32(vec![b, vocab], logits_out)])
     }
-    best
 }
 
 impl StepRunner for RefStep {
@@ -919,13 +1055,8 @@ impl StepRunner for RefStep {
     }
 
     fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
-        check_inputs(&self.meta, inputs)?;
-        match self.meta.step.as_str() {
-            "train" => self.run_train(inputs),
-            "eval" => self.run_eval(inputs),
-            "decode" => self.run_decode(inputs),
-            other => Err(EngineError::backend(NAME, format!("unknown step kind {other:?}"))),
-        }
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs)
     }
 
     fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError> {
@@ -937,18 +1068,19 @@ impl StepRunner for RefStep {
         pinned: &[&Pinned],
         host: &[Option<&Tensor>],
     ) -> Result<Vec<Tensor>, EngineError> {
-        let mut inputs: Vec<Tensor> = Vec::with_capacity(host.len());
+        // borrow every input — the steady-state train path copies nothing
+        let mut refs: Vec<&Tensor> = Vec::with_capacity(host.len());
         let mut pi = 0usize;
         for slot in host {
             match slot {
-                Some(t) => inputs.push((*t).clone()),
+                Some(t) => refs.push(*t),
                 None => {
                     let p = pinned.get(pi).ok_or_else(|| {
                         EngineError::backend(NAME, "run_pinned: not enough pinned inputs")
                     })?;
                     pi += 1;
                     match p {
-                        Pinned::Host(t) => inputs.push(t.clone()),
+                        Pinned::Host(t) => refs.push(t),
                         Pinned::Device(_) => {
                             return Err(EngineError::backend(
                                 NAME,
@@ -959,7 +1091,7 @@ impl StepRunner for RefStep {
                 }
             }
         }
-        self.run(&inputs)
+        self.run_refs(&refs)
     }
 
     fn prefers_pinned(&self) -> bool {
@@ -978,6 +1110,12 @@ mod tests {
     }
 
     /// Build full-shape train inputs for a step, with `rows` active examples.
+    ///
+    /// Deliberately NOT `crate::bench::synth_step_inputs` (the shared
+    /// generator used by the throughput harness and the determinism
+    /// suite): the finite-difference and clipping tests below have
+    /// tolerances tuned against exactly these input constants, so this
+    /// pre-existing generator stays frozen with them.
     fn train_inputs(
         backend: &InterpreterBackend,
         step: &dyn StepRunner,
@@ -1055,6 +1193,44 @@ mod tests {
             assert!(layout.subset_size("bitfit") < layout.subset_size("full"), "{model}");
             // init is deterministic
             assert_eq!(b.init_params(model).unwrap(), init, "{model}");
+        }
+    }
+
+    #[test]
+    fn merge_plan_matches_layout_merge() {
+        let b = InterpreterBackend::new();
+        for model in BUILTIN_MODELS {
+            let m = b.model_ref(model).unwrap();
+            let init = m.init_params();
+            for subset in ["full", "bitfit", "lastlayer"] {
+                let (frozen, train) = m.layout.split(&init, subset);
+                let expect = m.layout.merge(&frozen, &train, subset);
+                let mut got = vec![0.0f32; m.layout.n_params];
+                for r in m.merge_plan(subset) {
+                    let src = if r.from_train { &train } else { &frozen };
+                    got[r.dst..r.dst + r.len].copy_from_slice(&src[r.src..r.src + r.len]);
+                }
+                assert_eq!(got, expect, "{model}/{subset}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_slots_match_hashmap_slots() {
+        let b = InterpreterBackend::new();
+        for model in BUILTIN_MODELS {
+            let m = b.model_ref(model).unwrap();
+            for subset in ["full", "bitfit", "lastlayer"] {
+                let map = m.train_slots(subset);
+                let packed = m.train_slots_packed(subset);
+                let lookup = |name: &str| map.get(name).map(|&(off, _)| off);
+                assert_eq!(packed.embed, lookup("embed"), "{model}/{subset}");
+                assert_eq!(packed.enc_w, lookup("enc/w"), "{model}/{subset}");
+                assert_eq!(packed.enc_b, lookup("enc/b"), "{model}/{subset}");
+                assert_eq!(packed.head_w, lookup("head/w"), "{model}/{subset}");
+                assert_eq!(packed.head_b, lookup("head/b"), "{model}/{subset}");
+                assert_eq!(packed.pt, m.layout.subset_size(subset), "{model}/{subset}");
+            }
         }
     }
 
@@ -1220,5 +1396,27 @@ mod tests {
             b.load("cls-base__dp-bitfit__banana"),
             Err(EngineError::UnknownArtifact { .. })
         ));
+    }
+
+    #[test]
+    fn run_pinned_borrows_and_matches_run() {
+        let (backend, step) = load("cls-base__dp-bitfit");
+        let inputs = train_inputs(&backend, step.as_ref(), 8, 17);
+        let by_run = step.run(&inputs).unwrap();
+        let pinned = step.pin(&inputs[0]).unwrap();
+        let by_pinned = step
+            .run_pinned(
+                &[&pinned],
+                &[
+                    None,
+                    Some(&inputs[1]),
+                    Some(&inputs[2]),
+                    Some(&inputs[3]),
+                    Some(&inputs[4]),
+                    Some(&inputs[5]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(by_run, by_pinned);
     }
 }

@@ -41,7 +41,7 @@ mod pjrt;
 mod session;
 mod spec;
 
-pub use backend::{check_inputs, Backend, ModelInfo, Pinned, StepRunner};
+pub use backend::{check_input_refs, check_inputs, Backend, ModelInfo, Pinned, StepRunner};
 pub use error::EngineError;
 pub use interp::InterpreterBackend;
 pub use pjrt::PjrtBackend;
@@ -53,6 +53,7 @@ pub use crate::coordinator::optim::{LrSchedule, OptimKind};
 pub use crate::coordinator::task_data::TaskData;
 pub use crate::coordinator::workloads::ModelShape;
 pub use crate::dp::clip::ClipMode;
+pub use crate::kernels::KernelMode;
 pub use crate::runtime::Layout;
 
 use std::path::{Path, PathBuf};

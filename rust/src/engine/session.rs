@@ -8,6 +8,13 @@
 //! batch size, descend with the flat-vector optimizer, advance the RDP
 //! accountant.  Two-phase X+BiTFiT jobs switch artifacts mid-run while the
 //! accountant composes across the switch.
+//!
+//! Hot-path invariant: nothing parameter-sized is cloned per step.  The
+//! frozen vector is pinned into the backend once per phase, the trainable
+//! vector is one `Tensor` the optimizer updates in place, and the clip
+//! radius is a prebuilt scalar — `run_step` hands the runner borrowed
+//! inputs via `run_pinned` (backends that don't prefer pinning, i.e. PJRT's
+//! literal path, still get owned clones).
 
 use std::rc::Rc;
 
@@ -83,8 +90,15 @@ pub struct Session {
     /// Steps remaining before the active phase ends.
     phase_left: u64,
     layout: Layout,
+    /// Frozen parameters of the active phase.  Backends that prefer the
+    /// pinned path retain their own copy once per phase (`pinned_frozen`),
+    /// so this is never cloned per step on that path; `full_params` reads
+    /// it directly.
     frozen: Tensor,
-    train: Vec<f32>,
+    /// Trainable parameters of the active phase, updated in place.
+    train: Tensor,
+    /// Prebuilt scalar clip-radius input (constant for the whole job).
+    clip_r_t: Tensor,
     pinned_frozen: Option<Pinned>,
     optimizer: Optimizer,
     sampler: Option<PoissonSampler>,
@@ -143,7 +157,8 @@ impl Session {
             active: 0,
             layout,
             frozen: Tensor::f32(vec![0], vec![]),
-            train: Vec::new(),
+            train: Tensor::f32(vec![0], vec![]),
+            clip_r_t: Tensor::scalar_f32(spec.clip_r as f32),
             pinned_frozen: None,
             sampler,
             accountant,
@@ -177,7 +192,7 @@ impl Session {
             )));
         }
         self.frozen = Tensor::f32(vec![meta.pf], frozen);
-        self.train = train;
+        self.train = Tensor::f32(vec![meta.pt], train);
         self.pinned_frozen = if phase.runner.prefers_pinned() {
             Some(phase.runner.pin(&self.frozen)?)
         } else {
@@ -227,7 +242,7 @@ impl Session {
 
     /// Current merged full parameter vector.
     pub fn full_params(&self) -> Vec<f32> {
-        self.layout.merge(self.frozen.as_f32(), &self.train, &self.meta().subset)
+        self.layout.merge(self.frozen.as_f32(), self.train.as_f32(), &self.meta().subset)
     }
 
     /// Privacy spent so far.
@@ -275,25 +290,32 @@ impl Session {
         let pt = meta.pt;
         let mut grad = vec![0.0f32; pt];
         let mut loss_sum = 0.0f64;
-        let train_t = Tensor::f32(vec![pt], self.train.clone());
-        let clip_r = Tensor::scalar_f32(self.spec.clip_r as f32);
         for chunk in idxs.chunks(b) {
             let t1 = std::time::Instant::now();
             let (x, y, mask) = data.fill(chunk, b);
             self.timers.add("fill", t1.elapsed().as_secs_f64());
             let t2 = std::time::Instant::now();
+            // pinned path: every input is borrowed — no parameter-sized
+            // clones anywhere in the steady state
             let out = match &self.pinned_frozen {
                 Some(pinned) => runner.run_pinned(
                     &[pinned],
-                    &[None, Some(&train_t), Some(&x), Some(&y), Some(&mask), Some(&clip_r)],
+                    &[
+                        None,
+                        Some(&self.train),
+                        Some(&x),
+                        Some(&y),
+                        Some(&mask),
+                        Some(&self.clip_r_t),
+                    ],
                 )?,
                 None => runner.run(&[
                     self.frozen.clone(),
-                    train_t.clone(),
+                    self.train.clone(),
                     x,
                     y,
                     mask,
-                    clip_r.clone(),
+                    self.clip_r_t.clone(),
                 ])?,
             };
             self.timers.add("execute", t2.elapsed().as_secs_f64());
@@ -320,7 +342,7 @@ impl Session {
         let grad_norm = crate::util::tensor::l2_norm(&grad);
         let lr_base = self.phases[self.active].spec.lr;
         let lr = self.spec.schedule.at(lr_base, self.step);
-        self.optimizer.step_lr(&mut self.train, &grad, lr);
+        self.optimizer.step_lr(self.train.as_f32_mut(), &grad, lr);
         if let Some(acc) = &mut self.accountant {
             acc.step(self.q, self.sigma);
         }
@@ -381,11 +403,20 @@ pub fn evaluate_params(
     let n = data.len().min(max_examples);
     let full_t = Tensor::f32(vec![full.len()], full.to_vec());
     let empty = Tensor::f32(vec![0], vec![]);
+    // pin the (large, unchanging) parameter vector once; backends that
+    // prefer the pinned path then borrow it per chunk instead of cloning
+    let pinned = if eval.prefers_pinned() { Some(eval.pin(&full_t)?) } else { None };
     let (mut a_sum, mut b_sum) = (0.0f64, 0.0f64);
     let idxs: Vec<usize> = (0..n).collect();
     for chunk in idxs.chunks(b) {
         let (x, y, mask) = data.fill(chunk, b);
-        let out = eval.run(&[empty.clone(), full_t.clone(), x, y, mask])?;
+        let out = match &pinned {
+            Some(p) => eval.run_pinned(
+                &[p],
+                &[Some(&empty), None, Some(&x), Some(&y), Some(&mask)],
+            )?,
+            None => eval.run(&[empty.clone(), full_t.clone(), x, y, mask])?,
+        };
         a_sum += out[0].item_f32() as f64;
         b_sum += out[1].item_f32() as f64;
     }

@@ -1,0 +1,275 @@
+//! Fused, workspace-reusing row kernels.
+//!
+//! One call to a `row_*` kernel runs the full per-sample pipeline for one
+//! microbatch row — feature load, forward, loss, backward into the
+//! per-sample gradient `ws.g` — and [`clip_into`] fuses the squared-norm /
+//! clip-factor / scale pass that follows.  No kernel here allocates: all
+//! scratch lives in the caller's [`Workspace`].
+//!
+//! **Bit-compat contract:** every kernel performs the same floating-point
+//! operations in the same order as [`super::legacy`], so fused and legacy
+//! outputs are bit-identical (asserted in `tests/parallel_determinism.rs`).
+//! Keep that property when editing: reordering a reduction here is a
+//! silent numerical change, not a refactor.
+
+use crate::dp::clip::{clip_factor, ClipMode};
+
+use super::loss;
+use super::view::{NetView, TrainSlots};
+use super::workspace::Workspace;
+
+/// Fill `ws.feat` with the mean-pooled embedding of a token row (Cls) and
+/// record the active token ids in `ws.active` for the backward scatter.
+pub fn pool_tokens(net: &NetView, ws: &mut Workspace, toks: &[i32]) {
+    let d = net.d;
+    ws.active.clear();
+    for &t in toks {
+        if t > 0 {
+            ws.active.push(t as usize % net.vocab);
+        }
+    }
+    for v in ws.feat.iter_mut() {
+        *v = 0.0;
+    }
+    if ws.active.is_empty() {
+        return;
+    }
+    for &tok in &ws.active {
+        let e = &net.embed[tok * d..(tok + 1) * d];
+        for (f, &v) in ws.feat.iter_mut().zip(e) {
+            *f += v as f64;
+        }
+    }
+    let inv = 1.0 / ws.active.len() as f64;
+    for f in ws.feat.iter_mut() {
+        *f *= inv;
+    }
+}
+
+/// Fill `ws.feat` with a single token's embedding (Lm); returns the
+/// canonical token id.
+pub fn load_token(net: &NetView, ws: &mut Workspace, tok: i32) -> usize {
+    let d = net.d;
+    let tok = (tok.max(0) as usize) % net.vocab;
+    let e = &net.embed[tok * d..(tok + 1) * d];
+    for (f, &v) in ws.feat.iter_mut().zip(e) {
+        *f = v as f64;
+    }
+    tok
+}
+
+/// Fill `ws.feat` with flattened pixels (Vit/Cnn).
+pub fn load_pixels(ws: &mut Workspace, pixels: &[f32]) {
+    for (f, &p) in ws.feat.iter_mut().zip(pixels) {
+        *f = p as f64;
+    }
+}
+
+/// hidden + logits from `ws.feat` (into `ws.hpre` / `ws.hact` /
+/// `ws.logits`).
+pub fn forward(net: &NetView, ws: &mut Workspace) {
+    let h = net.h;
+    let out = net.out;
+    for v in ws.hpre.iter_mut() {
+        *v = 0.0;
+    }
+    for (i, &f) in ws.feat.iter().enumerate() {
+        if f == 0.0 {
+            continue;
+        }
+        let row = &net.enc_w[i * h..(i + 1) * h];
+        for (hp, &w) in ws.hpre.iter_mut().zip(row) {
+            *hp += f * w as f64;
+        }
+    }
+    if let Some(b) = net.enc_b {
+        for (hp, &v) in ws.hpre.iter_mut().zip(b) {
+            *hp += v as f64;
+        }
+    }
+    for (a, &p) in ws.hact.iter_mut().zip(&ws.hpre) {
+        *a = p.max(0.0);
+    }
+    for v in ws.logits.iter_mut() {
+        *v = 0.0;
+    }
+    for j in 0..h {
+        if ws.hact[j] == 0.0 {
+            continue;
+        }
+        let a = ws.hact[j];
+        let row = &net.head_w[j * out..(j + 1) * out];
+        for (l, &w) in ws.logits.iter_mut().zip(row) {
+            *l += a * w as f64;
+        }
+    }
+    for (l, &v) in ws.logits.iter_mut().zip(net.head_b) {
+        *l += v as f64;
+    }
+}
+
+/// Backprop `ws.dlogits` through head + hidden, accumulating into `ws.g`;
+/// computes `ws.dfeat` (and returns `true`) when the embedding needs it.
+pub fn backward(net: &NetView, slots: &TrainSlots, ws: &mut Workspace, want_dfeat: bool) -> bool {
+    let h = net.h;
+    let out = net.out;
+    if let Some(off) = slots.head_b {
+        for (g, &d) in ws.g[off..off + out].iter_mut().zip(&ws.dlogits) {
+            *g += d;
+        }
+    }
+    if let Some(off) = slots.head_w {
+        for j in 0..h {
+            if ws.hact[j] == 0.0 {
+                continue;
+            }
+            let a = ws.hact[j];
+            let g = &mut ws.g[off + j * out..off + (j + 1) * out];
+            for (gk, &d) in g.iter_mut().zip(&ws.dlogits) {
+                *gk += a * d;
+            }
+        }
+    }
+    if !slots.needs_dh(want_dfeat) {
+        return false;
+    }
+    for j in 0..h {
+        if ws.hpre[j] <= 0.0 {
+            ws.dh[j] = 0.0; // relu gate
+            continue;
+        }
+        let row = &net.head_w[j * out..(j + 1) * out];
+        let mut acc = 0.0f64;
+        for (&w, &d) in row.iter().zip(&ws.dlogits) {
+            acc += w as f64 * d;
+        }
+        ws.dh[j] = acc;
+    }
+    if let Some(off) = slots.enc_b {
+        for (g, &d) in ws.g[off..off + h].iter_mut().zip(&ws.dh) {
+            *g += d;
+        }
+    }
+    if let Some(off) = slots.enc_w {
+        for (i, &f) in ws.feat.iter().enumerate() {
+            if f == 0.0 {
+                continue;
+            }
+            let g = &mut ws.g[off + i * h..off + (i + 1) * h];
+            for (gj, &d) in g.iter_mut().zip(&ws.dh) {
+                *gj += f * d;
+            }
+        }
+    }
+    if want_dfeat || slots.embed.is_some() {
+        for (i, df) in ws.dfeat.iter_mut().enumerate() {
+            let row = &net.enc_w[i * h..(i + 1) * h];
+            let mut acc = 0.0f64;
+            for (&w, &d) in row.iter().zip(&ws.dh) {
+                acc += w as f64 * d;
+            }
+            *df = acc;
+        }
+        true
+    } else {
+        false
+    }
+}
+
+/// One Cls row: pooled embedding -> forward -> softmax CE -> backward
+/// (with embedding scatter).  Returns the row loss.
+pub fn row_cls(
+    net: &NetView,
+    slots: &TrainSlots,
+    ws: &mut Workspace,
+    toks: &[i32],
+    label: usize,
+) -> f64 {
+    let d = net.d;
+    pool_tokens(net, ws, toks);
+    forward(net, ws);
+    let row_loss = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
+    let have_dfeat = backward(net, slots, ws, slots.embed.is_some());
+    if let (Some(off), true) = (slots.embed, have_dfeat) {
+        if !ws.active.is_empty() {
+            let inv = 1.0 / ws.active.len() as f64;
+            for &tok in &ws.active {
+                let ge = &mut ws.g[off + tok * d..off + (tok + 1) * d];
+                for (g, &df) in ge.iter_mut().zip(&ws.dfeat) {
+                    *g += df * inv;
+                }
+            }
+        }
+    }
+    row_loss
+}
+
+/// One Lm row: per-token embedding -> forward -> softmax CE -> backward,
+/// summed over non-pad target positions.  Returns the row loss.
+pub fn row_lm(
+    net: &NetView,
+    slots: &TrainSlots,
+    ws: &mut Workspace,
+    toks: &[i32],
+    targets: &[i32],
+) -> f64 {
+    let d = net.d;
+    let mut row_loss = 0.0f64;
+    for (p, &target) in targets.iter().enumerate() {
+        if target <= 0 {
+            continue; // pad / ignore
+        }
+        let tok = load_token(net, ws, toks[p]);
+        forward(net, ws);
+        row_loss += loss::softmax_ce_into(&ws.logits, target as usize % net.out, &mut ws.dlogits);
+        let have_dfeat = backward(net, slots, ws, slots.embed.is_some());
+        if let (Some(off), true) = (slots.embed, have_dfeat) {
+            let ge = &mut ws.g[off + tok * d..off + (tok + 1) * d];
+            for (g, &df) in ge.iter_mut().zip(&ws.dfeat) {
+                *g += df;
+            }
+        }
+    }
+    row_loss
+}
+
+/// One Vit row: pixels -> forward -> softmax CE -> backward.
+pub fn row_vit(
+    net: &NetView,
+    slots: &TrainSlots,
+    ws: &mut Workspace,
+    pixels: &[f32],
+    label: usize,
+) -> f64 {
+    load_pixels(ws, pixels);
+    forward(net, ws);
+    let row_loss = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
+    backward(net, slots, ws, false);
+    row_loss
+}
+
+/// One Cnn row: pixels -> forward -> sigmoid BCE -> backward.
+pub fn row_cnn(
+    net: &NetView,
+    slots: &TrainSlots,
+    ws: &mut Workspace,
+    pixels: &[f32],
+    targets: &[f32],
+) -> f64 {
+    load_pixels(ws, pixels);
+    forward(net, ws);
+    let row_loss = loss::sigmoid_bce_into(&ws.logits, targets, &mut ws.dlogits);
+    backward(net, slots, ws, false);
+    row_loss
+}
+
+/// Fused squared-norm + clip-factor + scale: writes `c * g` into `out`
+/// and returns the squared norm (Algorithm 1 lines 6-8 for one sample).
+pub fn clip_into(g: &[f64], dp: bool, clip_r: f64, mode: ClipMode, out: &mut [f64]) -> f64 {
+    let sq: f64 = g.iter().map(|&v| v * v).sum();
+    let c = if dp { clip_factor(sq, clip_r, mode) } else { 1.0 };
+    for (o, &v) in out.iter_mut().zip(g) {
+        *o = c * v;
+    }
+    sq
+}

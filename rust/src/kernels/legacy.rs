@@ -1,0 +1,207 @@
+//! The pre-optimization scalar reference kernels, preserved verbatim.
+//!
+//! This is the interpreter's original per-row path: every row (and every
+//! token position on LM models) allocates fresh `Vec<f64>`s for features,
+//! activations and gradients.  It is kept for two reasons:
+//!
+//! * **correctness oracle** — the fused kernels in [`super::fused`] must
+//!   produce bit-identical outputs (asserted in
+//!   `tests/parallel_determinism.rs`);
+//! * **benchmark baseline** — `benches/throughput.rs` reports the fused
+//!   speedup against this path (`FASTDP_KERNELS=legacy` selects it at
+//!   runtime).
+//!
+//! Do not "optimize" this module; its allocation churn *is* the baseline.
+
+use std::collections::HashMap;
+
+use super::view::NetView;
+
+/// Per-row forward state (f64 for numerically clean gradients).
+pub struct Forward {
+    pub feat: Vec<f64>,
+    pub hpre: Vec<f64>,
+    pub hact: Vec<f64>,
+    pub logits: Vec<f64>,
+}
+
+/// Everything the legacy backward pass reads besides the forward state
+/// (groups what used to be a 7-argument signature).
+pub struct BackwardCtx<'a> {
+    pub net: &'a NetView<'a>,
+    pub slots: &'a HashMap<String, (usize, usize)>,
+    pub want_dfeat: bool,
+}
+
+/// Mean-pooled embedding features for a token row (Cls); returns the
+/// active token ids alongside so backprop can scatter into the embedding.
+pub fn pooled_feat(net: &NetView, toks: &[i32]) -> (Vec<f64>, Vec<usize>) {
+    let d = net.d;
+    let active: Vec<usize> =
+        toks.iter().filter(|&&t| t > 0).map(|&t| t as usize % net.vocab).collect();
+    let mut feat = vec![0.0f64; d];
+    if !active.is_empty() {
+        for &tok in &active {
+            let e = &net.embed[tok * d..(tok + 1) * d];
+            for i in 0..d {
+                feat[i] += e[i] as f64;
+            }
+        }
+        let inv = 1.0 / active.len() as f64;
+        for f in feat.iter_mut() {
+            *f *= inv;
+        }
+    }
+    (feat, active)
+}
+
+/// Single-token embedding features (Lm); returns the canonical token id.
+pub fn token_feat(net: &NetView, tok: i32) -> (Vec<f64>, usize) {
+    let d = net.d;
+    let tok = (tok.max(0) as usize) % net.vocab;
+    let e = &net.embed[tok * d..(tok + 1) * d];
+    (e.iter().map(|&v| v as f64).collect(), tok)
+}
+
+/// Flattened pixel features (Vit/Cnn).
+pub fn pixel_feat(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&v| v as f64).collect()
+}
+
+/// hidden + logits from a feature vector.
+pub fn forward_feat(net: &NetView, feat: Vec<f64>) -> Forward {
+    let (h, out) = (net.h, net.out);
+    let mut hpre = vec![0.0f64; h];
+    for (i, &f) in feat.iter().enumerate() {
+        if f == 0.0 {
+            continue;
+        }
+        let row = &net.enc_w[i * h..(i + 1) * h];
+        for j in 0..h {
+            hpre[j] += f * row[j] as f64;
+        }
+    }
+    if let Some(b) = net.enc_b {
+        for j in 0..h {
+            hpre[j] += b[j] as f64;
+        }
+    }
+    let hact: Vec<f64> = hpre.iter().map(|&v| v.max(0.0)).collect();
+    let mut logits = vec![0.0f64; out];
+    for j in 0..h {
+        if hact[j] == 0.0 {
+            continue;
+        }
+        let row = &net.head_w[j * out..(j + 1) * out];
+        for k in 0..out {
+            logits[k] += hact[j] * row[k] as f64;
+        }
+    }
+    for k in 0..out {
+        logits[k] += net.head_b[k] as f64;
+    }
+    Forward { feat, hpre, hact, logits }
+}
+
+/// Backprop `dlogits` through head + hidden into `grad` (flat trainable
+/// vector, per `ctx.slots`); returns d(feat) if the embedding needs it.
+pub fn backward_feat(
+    ctx: &BackwardCtx,
+    fwd: &Forward,
+    dlogits: &[f64],
+    grad: &mut [f64],
+) -> Option<Vec<f64>> {
+    let net = ctx.net;
+    let slots = ctx.slots;
+    let (h, out) = (net.h, net.out);
+    if let Some(&(off, _)) = slots.get("head/b") {
+        for k in 0..out {
+            grad[off + k] += dlogits[k];
+        }
+    }
+    if let Some(&(off, _)) = slots.get("head/w") {
+        for j in 0..h {
+            if fwd.hact[j] == 0.0 {
+                continue;
+            }
+            let g = &mut grad[off + j * out..off + (j + 1) * out];
+            for k in 0..out {
+                g[k] += fwd.hact[j] * dlogits[k];
+            }
+        }
+    }
+    let need_dh = ctx.want_dfeat
+        || slots.contains_key("enc/b")
+        || slots.contains_key("enc/w")
+        || slots.contains_key("embed");
+    if !need_dh {
+        return None;
+    }
+    let mut dh = vec![0.0f64; h];
+    for j in 0..h {
+        if fwd.hpre[j] <= 0.0 {
+            continue; // relu gate
+        }
+        let row = &net.head_w[j * out..(j + 1) * out];
+        let mut acc = 0.0f64;
+        for k in 0..out {
+            acc += row[k] as f64 * dlogits[k];
+        }
+        dh[j] = acc;
+    }
+    if let Some(&(off, _)) = slots.get("enc/b") {
+        for j in 0..h {
+            grad[off + j] += dh[j];
+        }
+    }
+    if let Some(&(off, _)) = slots.get("enc/w") {
+        for (i, &f) in fwd.feat.iter().enumerate() {
+            if f == 0.0 {
+                continue;
+            }
+            let g = &mut grad[off + i * h..off + (i + 1) * h];
+            for j in 0..h {
+                g[j] += f * dh[j];
+            }
+        }
+    }
+    if ctx.want_dfeat || slots.contains_key("embed") {
+        let d = net.feat;
+        let mut dfeat = vec![0.0f64; d];
+        for (i, df) in dfeat.iter_mut().enumerate() {
+            let row = &net.enc_w[i * h..(i + 1) * h];
+            let mut acc = 0.0f64;
+            for j in 0..h {
+                acc += row[j] as f64 * dh[j];
+            }
+            *df = acc;
+        }
+        Some(dfeat)
+    } else {
+        None
+    }
+}
+
+/// Stable softmax cross-entropy: returns (loss, dlogits).
+pub fn softmax_ce(logits: &[f64], label: usize) -> (f64, Vec<f64>) {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let loss = z.ln() - (logits[label] - m);
+    let mut dl: Vec<f64> = exps.iter().map(|&e| e / z).collect();
+    dl[label] -= 1.0;
+    (loss, dl)
+}
+
+/// Stable sigmoid binary cross-entropy over a multi-label vector:
+/// returns (loss, dlogits).
+pub fn sigmoid_bce(logits: &[f64], targets: &[f64]) -> (f64, Vec<f64>) {
+    let mut loss = 0.0f64;
+    let mut dl = vec![0.0f64; logits.len()];
+    for (k, (&l, &y)) in logits.iter().zip(targets).enumerate() {
+        // softplus(l) - y*l, computed stably
+        loss += l.max(0.0) - l * y + (-l.abs()).exp().ln_1p();
+        dl[k] = 1.0 / (1.0 + (-l).exp()) - y;
+    }
+    (loss, dl)
+}

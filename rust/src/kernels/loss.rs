@@ -1,0 +1,92 @@
+//! Allocation-free loss kernels: numerically stable softmax cross-entropy
+//! and sigmoid binary cross-entropy, writing d(logits) into a caller
+//! buffer.
+//!
+//! Each kernel performs the same floating-point operations in the same
+//! order as its allocating twin in [`super::legacy`], so the two paths are
+//! bit-identical.
+
+/// Stable softmax cross-entropy; writes d(logits) into `dl` and returns
+/// the loss.
+pub fn softmax_ce_into(logits: &[f64], label: usize, dl: &mut [f64]) -> f64 {
+    debug_assert_eq!(logits.len(), dl.len());
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    // first pass: dl holds exp(l - m); z accumulates in index order, which
+    // matches legacy's `exps.iter().sum()`
+    for (d, &l) in dl.iter_mut().zip(logits) {
+        *d = (l - m).exp();
+    }
+    let z: f64 = dl.iter().sum();
+    let loss = z.ln() - (logits[label] - m);
+    for d in dl.iter_mut() {
+        *d /= z;
+    }
+    dl[label] -= 1.0;
+    loss
+}
+
+/// Stable sigmoid binary cross-entropy over a multi-label vector; writes
+/// d(logits) into `dl` and returns the summed loss.  Targets are the raw
+/// `f32` batch values (widened per-element, like the legacy staging copy).
+pub fn sigmoid_bce_into(logits: &[f64], targets: &[f32], dl: &mut [f64]) -> f64 {
+    debug_assert_eq!(logits.len(), dl.len());
+    let mut loss = 0.0f64;
+    for (k, (&l, &t)) in logits.iter().zip(targets).enumerate() {
+        let y = t as f64;
+        // softplus(l) - y*l, computed stably
+        loss += l.max(0.0) - l * y + (-l.abs()).exp().ln_1p();
+        dl[k] = 1.0 / (1.0 + (-l).exp()) - y;
+    }
+    loss
+}
+
+/// Index of the largest element (first on ties).
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::legacy;
+    use super::*;
+
+    #[test]
+    fn softmax_into_matches_allocating_twin_bitwise() {
+        let logits = vec![0.3, -1.2, 2.7, 0.0, 1e-9, -3.5];
+        for label in 0..logits.len() {
+            let (l0, dl0) = legacy::softmax_ce(&logits, label);
+            let mut dl1 = vec![0.0; logits.len()];
+            let l1 = softmax_ce_into(&logits, label, &mut dl1);
+            assert_eq!(l0.to_bits(), l1.to_bits());
+            for (a, b) in dl0.iter().zip(&dl1) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sigmoid_into_matches_allocating_twin_bitwise() {
+        let logits = vec![0.5, -2.0, 30.0, -30.0, 0.0];
+        let targets_f32 = vec![1.0f32, 0.0, 1.0, 0.0, 1.0];
+        let targets_f64: Vec<f64> = targets_f32.iter().map(|&v| v as f64).collect();
+        let (l0, dl0) = legacy::sigmoid_bce(&logits, &targets_f64);
+        let mut dl1 = vec![0.0; logits.len()];
+        let l1 = sigmoid_bce_into(&logits, &targets_f32, &mut dl1);
+        assert_eq!(l0.to_bits(), l1.to_bits());
+        for (a, b) in dl0.iter().zip(&dl1) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Fused CPU kernels for the interpreter backend's hot path.
+//!
+//! The reference interpreter executes Algorithm 1 per microbatch row:
+//! forward -> loss -> backward -> per-sample squared norm -> clip factor ->
+//! accumulate.  The seed implementation allocated fresh `Vec<f64>`s for
+//! every row (and for every token position on LM models) and rebuilt the
+//! merged parameter vector per call.  This module replaces that churn with
+//! flat, workspace-reusing kernels:
+//!
+//! * [`view::NetView`] — borrowed flat-`f32` views into the merged
+//!   parameter vector plus the model dims, cheap to share across threads.
+//! * [`view::TrainSlots`] — precomputed offsets of each trainable leaf in
+//!   the flat trainable vector (replaces per-call `HashMap` lookups).
+//! * [`workspace::Workspace`] — per-worker scratch buffers (features,
+//!   activations, logits, gradients) allocated once and reused for every
+//!   row; after warmup the per-row path performs **zero heap allocations**.
+//! * [`fused`] — the fused row kernels: one call runs
+//!   forward + loss + backward for a row, and [`fused::clip_into`] fuses
+//!   the squared-norm / clip-factor / scale pass.
+//! * [`loss`] — allocation-free softmax-CE and sigmoid-BCE kernels.
+//! * [`legacy`] — the pre-optimization scalar reference path, kept
+//!   verbatim as a correctness oracle and as the benchmark baseline
+//!   (`FASTDP_KERNELS=legacy`).
+//!
+//! Every fused kernel performs the *same floating-point operations in the
+//! same order* as the legacy path, so fused and legacy outputs are
+//! bit-identical — and because per-row work is reduced in fixed row order
+//! (see [`crate::runtime::pool`]), results are also bit-identical across
+//! thread counts.
+
+pub mod fused;
+pub mod legacy;
+pub mod loss;
+pub mod view;
+pub mod workspace;
+
+pub use view::{NetView, TrainSlots};
+pub use workspace::Workspace;
+
+/// Which kernel implementation the interpreter train step runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Workspace-reusing fused kernels (the default).
+    #[default]
+    Fused,
+    /// The pre-optimization per-row-allocating scalar path, kept as a
+    /// correctness oracle and benchmark baseline.  Only the train step has
+    /// a legacy variant; eval/decode always run fused.
+    Legacy,
+}
+
+impl KernelMode {
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fused" => Some(KernelMode::Fused),
+            "legacy" => Some(KernelMode::Legacy),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMode::Fused => "fused",
+            KernelMode::Legacy => "legacy",
+        }
+    }
+
+    /// Resolve from `FASTDP_KERNELS` (unset or unknown value => fused).
+    pub fn from_env() -> KernelMode {
+        std::env::var("FASTDP_KERNELS")
+            .ok()
+            .and_then(|v| KernelMode::parse(&v))
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_mode_parses() {
+        assert_eq!(KernelMode::parse("fused"), Some(KernelMode::Fused));
+        assert_eq!(KernelMode::parse("LEGACY"), Some(KernelMode::Legacy));
+        assert_eq!(KernelMode::parse("simd"), None);
+        assert_eq!(KernelMode::default(), KernelMode::Fused);
+        assert_eq!(KernelMode::Legacy.name(), "legacy");
+    }
+}

@@ -1,0 +1,50 @@
+//! Borrowed flat-`f32` parameter views and precomputed trainable-slot
+//! offsets — the read-only state a row kernel needs, cheap to share across
+//! worker threads.
+
+/// Flat views into a merged full parameter vector plus the model dims.
+///
+/// All slices borrow the caller's merged buffer; the struct is `Copy`-cheap
+/// to hand to every worker.  `embed` is empty for image models and `enc_b`
+/// is `None` for the paper's bias-less CNN (§3.4).
+#[derive(Clone, Copy)]
+pub struct NetView<'a> {
+    pub embed: &'a [f32],
+    pub enc_w: &'a [f32],
+    pub enc_b: Option<&'a [f32]>,
+    pub head_w: &'a [f32],
+    pub head_b: &'a [f32],
+    /// Embedding width (Cls/Lm); 0 for image models.
+    pub d: usize,
+    /// Hidden width.
+    pub h: usize,
+    /// Output width (n_cls / vocab / n_out).
+    pub out: usize,
+    /// Vocabulary size (token models); 0 for image models.
+    pub vocab: usize,
+    /// Feature dim into `enc/w` (`d` for token models, `img*img*3` for
+    /// image models).
+    pub feat: usize,
+}
+
+/// Offsets of each trainable leaf inside the flat trainable vector, in the
+/// canonical layout order.  `None` means the leaf is frozen (or absent)
+/// under the active subset.  Precomputed once per loaded step, replacing
+/// the per-call `HashMap<String, (usize, usize)>` of the legacy path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainSlots {
+    pub embed: Option<usize>,
+    pub enc_w: Option<usize>,
+    pub enc_b: Option<usize>,
+    pub head_w: Option<usize>,
+    pub head_b: Option<usize>,
+    /// Total trainable parameter count.
+    pub pt: usize,
+}
+
+impl TrainSlots {
+    /// Does the backward pass need d(hidden) at all?
+    pub fn needs_dh(&self, want_dfeat: bool) -> bool {
+        want_dfeat || self.enc_b.is_some() || self.enc_w.is_some() || self.embed.is_some()
+    }
+}

@@ -1,0 +1,53 @@
+//! Per-worker scratch buffers for the fused row kernels.
+//!
+//! One `Workspace` serves one worker thread; every buffer is sized for the
+//! model once and reused for every row (and every token position), so the
+//! steady-state row kernels perform no heap allocation at all.
+
+/// Reusable f64 scratch for one worker.
+pub struct Workspace {
+    /// Input features of the current row/token (`feat` long).
+    pub feat: Vec<f64>,
+    /// Pre-activation hidden values (`h` long).
+    pub hpre: Vec<f64>,
+    /// Post-ReLU hidden values (`h` long).
+    pub hact: Vec<f64>,
+    /// Output logits (`out` long).
+    pub logits: Vec<f64>,
+    /// d(loss)/d(logits) (`out` long).
+    pub dlogits: Vec<f64>,
+    /// d(loss)/d(hidden) (`h` long).
+    pub dh: Vec<f64>,
+    /// d(loss)/d(features) (`feat` long).
+    pub dfeat: Vec<f64>,
+    /// Per-sample flat trainable gradient (`pt` long; empty for eval).
+    pub g: Vec<f64>,
+    /// Active token ids of the current row (Cls pooling scratch).
+    pub active: Vec<usize>,
+}
+
+impl Workspace {
+    /// Allocate scratch for a model with `feat` input features, hidden
+    /// width `h`, `out` outputs and `g_len` trainable parameters (pass 0
+    /// for eval/decode steps, which never touch `g`).
+    pub fn new(feat: usize, h: usize, out: usize, g_len: usize) -> Workspace {
+        Workspace {
+            feat: vec![0.0; feat],
+            hpre: vec![0.0; h],
+            hact: vec![0.0; h],
+            logits: vec![0.0; out],
+            dlogits: vec![0.0; out],
+            dh: vec![0.0; h],
+            dfeat: vec![0.0; feat],
+            g: vec![0.0; g_len],
+            active: Vec::new(),
+        }
+    }
+
+    /// Zero the per-sample gradient before a new row.
+    pub fn zero_grad(&mut self) {
+        for v in self.g.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}

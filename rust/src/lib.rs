@@ -37,10 +37,19 @@
 //!   typed `EngineError`s), the `Backend`/`StepRunner` traits with two
 //!   implementations (PJRT artifacts; a dependency-free reference
 //!   interpreter), and `Engine`/`Session` (run_step, evaluate, checkpoint,
-//!   privacy_spent; two-phase X+BiTFiT composes inside one session).
+//!   privacy_spent; two-phase X+BiTFiT composes inside one session).  The
+//!   session hot path clones nothing parameter-sized per step.
+//! * [`kernels`] — fused, workspace-reusing CPU kernels behind the
+//!   interpreter backend (forward + loss + backward + clip in one pass,
+//!   zero steady-state allocation), plus the preserved legacy scalar path
+//!   (`FASTDP_KERNELS=legacy`) used as correctness oracle and benchmark
+//!   baseline.
 //! * [`runtime`] — loads AOT HLO artifacts (lowered once from JAX+Pallas by
 //!   `python/compile/aot.py`) and executes them via PJRT; wrapped by the
-//!   engine's PJRT backend.
+//!   engine's PJRT backend.  Also hosts [`runtime::pool`], the scoped
+//!   thread pool that shards microbatch rows across `FASTDP_THREADS`
+//!   workers with a fixed-order deterministic reduction (bit-identical
+//!   results at any thread count).
 //! * [`coordinator`] — orchestration substrates the engine composes:
 //!   optimizers, dataset assembly, workload construction, greedy decoding,
 //!   cached pretraining, checkpoints, metric sinks, the CLI translator.
@@ -51,7 +60,8 @@
 //! * [`analysis`] — per-layer time/space complexity (paper Tables 2 & 7).
 //! * [`nlg`] — BLEU / ROUGE-L / NIST / METEOR / CIDEr for Table 4/13.
 //! * [`util`] — dependency-free JSON/TOML/RNG/tensor/CLI substrates.
-//! * [`bench`] — the shared harness behind `benches/*` (paper tables).
+//! * [`bench`] — the shared harness behind `benches/*` (paper tables), and
+//!   the step-throughput harness that emits `BENCH_step_throughput.json`.
 
 pub mod analysis;
 pub mod bench;
@@ -59,6 +69,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dp;
 pub mod engine;
+pub mod kernels;
 pub mod models;
 pub mod nlg;
 pub mod runtime;

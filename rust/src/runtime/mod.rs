@@ -11,6 +11,7 @@
 
 mod artifact;
 mod convert;
+pub mod pool;
 
 pub use artifact::{Artifact, ArtifactMeta, IoSpec, Layout, LayoutLeaf, Manifest};
 pub use convert::{literal_to_tensor, tensor_to_literal};

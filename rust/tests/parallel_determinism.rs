@@ -1,0 +1,134 @@
+//! The parallel fused interpreter path must be *bit-identical* — across
+//! worker counts {1, 2, 8} and vs the legacy scalar kernels — for every
+//! reference architecture (cls / lm / vit / cnn) and for train, eval and
+//! decode steps.  Per-row work is reduced in fixed row order (see
+//! `runtime::pool`), so any divergence here is a real kernel bug, not
+//! floating-point reassociation noise.
+//!
+//! Inputs come from `bench::synth_step_inputs` — the same generator the
+//! throughput harness's determinism probe uses — with the mask and clip
+//! radius overridden to exercise masked rows and real DP clipping.
+
+use fastdp::bench::synth_step_inputs;
+use fastdp::engine::{Backend, InterpreterBackend, KernelMode, StepRunner};
+use fastdp::util::tensor::Tensor;
+
+/// Synthetic train inputs with the last 3 rows masked out (inactive-row
+/// skip path) and a clip radius small enough that DP clipping fires.
+fn train_inputs(backend: &InterpreterBackend, step: &dyn StepRunner, seed: u64) -> Vec<Tensor> {
+    let meta = step.meta().clone();
+    let b = meta.batch;
+    let mut inputs = synth_step_inputs(backend, &meta, seed).unwrap();
+    let mut mask = vec![1.0f32; b];
+    for m in mask.iter_mut().skip(b.saturating_sub(3)) {
+        *m = 0.0;
+    }
+    inputs[4] = Tensor::f32(vec![b], mask);
+    inputs[5] = Tensor::scalar_f32(0.05);
+    inputs
+}
+
+/// Run one step of `artifact` under (threads, mode) and return the f32 bit
+/// patterns of every output tensor.
+fn output_bits(artifact: &str, threads: usize, mode: KernelMode) -> Vec<Vec<u32>> {
+    let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    let step = backend.load(artifact).unwrap();
+    let inputs = train_inputs(&backend, step.as_ref(), 29);
+    let out = step.run(&inputs).unwrap();
+    out.iter().map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+/// One train artifact per architecture family, plus full-subset variants
+/// that exercise the embedding/enc-weight backward paths.
+const TRAIN_ARTIFACTS: &[&str] = &[
+    "cls-base__dp-bitfit",
+    "cls-base__dp-full-opacus",
+    "lm-small__dp-bitfit",
+    "lm-small__nondp-full",
+    "vit-c10__dp-lastlayer",
+    "vit-c10__dp-full-ghost",
+    "cnn-small__dp-bitfit",
+    "cnn-small-bias__dp-bitfit-add",
+];
+
+#[test]
+fn train_outputs_bit_identical_across_thread_counts() {
+    for artifact in TRAIN_ARTIFACTS {
+        let base = output_bits(artifact, 1, KernelMode::Fused);
+        for threads in [2usize, 8] {
+            let got = output_bits(artifact, threads, KernelMode::Fused);
+            assert_eq!(base, got, "{artifact}: fused threads=1 vs threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn fused_outputs_bit_identical_to_legacy_scalar_path() {
+    for artifact in TRAIN_ARTIFACTS {
+        let fused = output_bits(artifact, 8, KernelMode::Fused);
+        let legacy = output_bits(artifact, 1, KernelMode::Legacy);
+        assert_eq!(fused, legacy, "{artifact}: fused vs legacy");
+    }
+}
+
+#[test]
+fn eval_outputs_bit_identical_across_thread_counts() {
+    for model in ["cls-base", "lm-small", "vit-c10", "cnn-small"] {
+        let artifact = format!("{model}__eval");
+        let run = |threads: usize| -> Vec<Vec<u32>> {
+            let mut backend = InterpreterBackend::with_threads(threads);
+            let step = backend.load(&artifact).unwrap();
+            let meta = step.meta().clone();
+            let inputs = synth_step_inputs(&backend, &meta, 31).unwrap();
+            let out = step.run(&inputs).unwrap();
+            out.iter().map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect()).collect()
+        };
+        let base = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(base, run(threads), "{artifact}: eval threads=1 vs {threads}");
+        }
+    }
+}
+
+#[test]
+fn decode_outputs_bit_identical_across_thread_counts() {
+    let run = |threads: usize| -> Vec<u32> {
+        let mut backend = InterpreterBackend::with_threads(threads);
+        let step = backend.load("lm-small__decode").unwrap();
+        let meta = step.meta().clone();
+        let full = backend.init_params("lm-small").unwrap();
+        let b = meta.batch;
+        let t = meta.inputs[2].shape[1];
+        let x: Vec<i32> = (0..b * t).map(|i| (i % 383) as i32 + 1).collect();
+        let pos: Vec<i32> = (0..b as i32).map(|i| 3 + i).collect();
+        let out = step
+            .run(&[
+                Tensor::f32(vec![0], vec![]),
+                Tensor::f32(vec![full.len()], full),
+                Tensor::i32(vec![b, t], x),
+                Tensor::i32(vec![b], pos),
+            ])
+            .unwrap();
+        out[0].as_f32().iter().map(|v| v.to_bits()).collect()
+    };
+    let base = run(1);
+    for threads in [2usize, 8] {
+        assert_eq!(base, run(threads), "decode threads=1 vs {threads}");
+    }
+}
+
+#[test]
+fn thread_override_and_env_defaults_agree() {
+    // a backend with no override resolves FASTDP_THREADS when loading; an
+    // explicit override must produce the same bits regardless
+    let a = output_bits("cls-base__dp-bitfit", 1, KernelMode::Fused);
+    let b = output_bits("cls-base__dp-bitfit", 8, KernelMode::Fused);
+    assert_eq!(a, b);
+    let mut backend = InterpreterBackend::new(); // env-resolved threads
+    let step = backend.load("cls-base__dp-bitfit").unwrap();
+    let inputs = train_inputs(&backend, step.as_ref(), 29);
+    let out = step.run(&inputs).unwrap();
+    let bits: Vec<Vec<u32>> =
+        out.iter().map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect()).collect();
+    assert_eq!(a, bits);
+}
