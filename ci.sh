@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI for the fastdp Rust workspace: format check, lints, tier-1
-# (build + tests), then a bench-smoke of the throughput harness.
+# (build + tests), the determinism env matrix, then a bench-smoke of the
+# throughput harness.
 # Everything runs offline — dependencies are vendored under rust/vendor/.
 #
-# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-bench]
+# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-bench] [--no-matrix]
 
 set -euo pipefail
 cd "$(dirname "$0")/rust"
@@ -11,11 +12,13 @@ cd "$(dirname "$0")/rust"
 run_fmt=1
 run_clippy=1
 run_bench=1
+run_matrix=1
 for arg in "$@"; do
     case "$arg" in
         --no-fmt) run_fmt=0 ;;
         --no-clippy) run_clippy=0 ;;
         --no-bench) run_bench=0 ;;
+        --no-matrix) run_matrix=0 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
     esac
 done
@@ -43,6 +46,22 @@ cargo build --release
 
 echo "==> tier-1: cargo test -q"
 cargo test -q
+
+if [ "$run_matrix" = 1 ]; then
+    # The whole suite must hold under every worker-count / kernel-mode
+    # combination: the bit-identity invariants (parallel_determinism,
+    # replica_determinism, the engine e2e trajectories) are supposed to be
+    # insensitive to these knobs, so a pass here on every commit is the
+    # proof — not just the dedicated tests run under one default config.
+    # (The test binaries are already built by the tier-1 run above, so each
+    # cell only pays test execution time.)
+    for threads in 1 4; do
+        for kernels in fused legacy; do
+            echo "==> determinism matrix: FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels"
+            FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels cargo test -q
+        done
+    done
+fi
 
 if [ "$run_bench" = 1 ]; then
     echo "==> bench-smoke: throughput harness (tiny shapes, 2 thread counts)"

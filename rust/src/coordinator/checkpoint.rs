@@ -1,8 +1,15 @@
-//! Versioned binary checkpoints for full parameter vectors.
+//! Versioned binary checkpoints: full parameter vectors ([`Checkpoint`])
+//! and complete mid-run session snapshots ([`SessionState`]).
 //!
-//! Format (little-endian):
+//! `Checkpoint` format (little-endian):
 //!   magic "FDPC" | version u32 | model-name len u32 + utf8 | step u64 |
 //!   n_params u64 | f32 payload | crc32 of payload
+//!
+//! `SessionState` ("FDPS") additionally captures everything a resumed
+//! session needs to continue **bit-identically**: phase position, the
+//! optimizer's moment vectors, the noise/data/sampler RNG states and the
+//! RDP accountant's accumulated orders.  All floats are stored as raw LE
+//! bit patterns, so a save/load round-trip is exact.
 //!
 //! The CRC catches torn writes; loading a corrupt or mismatched checkpoint
 //! is a hard error, never silent garbage.
@@ -12,8 +19,13 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::util::rng::RNG_STATE_WORDS;
+use crate::util::tensor::{f32s_from_le_bytes, f32s_to_le_bytes};
+
 const MAGIC: &[u8; 4] = b"FDPC";
 const VERSION: u32 = 1;
+const STATE_MAGIC: &[u8; 4] = b"FDPS";
+const STATE_VERSION: u32 = 1;
 
 /// A checkpoint: model name + step + full flat params.
 #[derive(Debug, Clone, PartialEq)]
@@ -94,6 +106,182 @@ impl Checkpoint {
     }
 }
 
+/// A complete mid-run session snapshot (see `engine::Session::save_state`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    pub model: String,
+    /// Steps taken so far.
+    pub step: u64,
+    /// Index of the active phase (0 except after an X+BiTFiT switch).
+    pub active_phase: u32,
+    /// Steps remaining before the active phase ends.
+    pub phase_left: u64,
+    /// Merged full parameter vector at save time.
+    pub params: Vec<f32>,
+    /// Optimizer step counter and Adam moment vectors (empty-moment SGD
+    /// still round-trips: the vectors are sized but zero).
+    pub optim_t: u64,
+    pub optim_m: Vec<f64>,
+    pub optim_v: Vec<f64>,
+    pub noise_rng: [u32; RNG_STATE_WORDS],
+    pub data_rng: [u32; RNG_STATE_WORDS],
+    /// `None` for non-private sessions (no Poisson sampler).
+    pub sampler_rng: Option<[u32; RNG_STATE_WORDS]>,
+    /// Accumulated RDP per grid order; empty when the session had no
+    /// accountant (non-private, or sigma = 0).
+    pub rdp_acc: Vec<f64>,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Little-endian cursor over a payload buffer; every read is bounds-checked.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // overflow-safe: pos <= len always holds, so len - pos cannot wrap
+        anyhow::ensure!(n <= self.buf.len() - self.pos, "session state truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n.checked_mul(4).context("implausible element count")?;
+        Ok(f32s_from_le_bytes(self.take(bytes)?))
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        Ok((0..n).map(|_| self.u64()).collect::<Result<Vec<u64>>>()?
+            .into_iter()
+            .map(f64::from_bits)
+            .collect())
+    }
+
+    fn rng(&mut self) -> Result<[u32; RNG_STATE_WORDS]> {
+        let mut w = [0u32; RNG_STATE_WORDS];
+        for v in w.iter_mut() {
+            *v = self.u32()?;
+        }
+        Ok(w)
+    }
+}
+
+impl SessionState {
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        put_u32(&mut p, self.model.len() as u32);
+        p.extend_from_slice(self.model.as_bytes());
+        put_u64(&mut p, self.step);
+        put_u32(&mut p, self.active_phase);
+        put_u64(&mut p, self.phase_left);
+        put_u64(&mut p, self.params.len() as u64);
+        p.extend_from_slice(&f32s_to_le_bytes(&self.params));
+        put_u64(&mut p, self.optim_t);
+        assert_eq!(self.optim_m.len(), self.optim_v.len(), "moment vectors must pair");
+        put_u64(&mut p, self.optim_m.len() as u64);
+        for v in self.optim_m.iter().chain(&self.optim_v) {
+            put_u64(&mut p, v.to_bits());
+        }
+        for w in self.noise_rng.iter().chain(&self.data_rng) {
+            put_u32(&mut p, *w);
+        }
+        p.push(self.sampler_rng.is_some() as u8);
+        if let Some(s) = &self.sampler_rng {
+            for w in s {
+                put_u32(&mut p, *w);
+            }
+        }
+        put_u64(&mut p, self.rdp_acc.len() as u64);
+        for v in &self.rdp_acc {
+            put_u64(&mut p, v.to_bits());
+        }
+        p
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let payload = self.payload();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(STATE_MAGIC)?;
+        f.write_all(&STATE_VERSION.to_le_bytes())?;
+        f.write_all(&payload)?;
+        f.write_all(&crc32(&payload).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<SessionState> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        anyhow::ensure!(bytes.len() >= 12, "file too short for a session state");
+        anyhow::ensure!(&bytes[..4] == STATE_MAGIC, "bad magic (not a fastdp session state)");
+        let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        anyhow::ensure!(version == STATE_VERSION, "unsupported session-state version {version}");
+        let payload = &bytes[8..bytes.len() - 4];
+        let tail = &bytes[bytes.len() - 4..];
+        let want_crc = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        anyhow::ensure!(crc32(payload) == want_crc, "session state CRC mismatch (corrupt file)");
+        let mut c = Cursor { buf: payload, pos: 0 };
+        let name_len = c.u32()? as usize;
+        anyhow::ensure!(name_len < 4096, "implausible model-name length");
+        let model = String::from_utf8(c.take(name_len)?.to_vec()).context("model name not utf8")?;
+        let step = c.u64()?;
+        let active_phase = c.u32()?;
+        let phase_left = c.u64()?;
+        let n_params = c.u64()? as usize;
+        let params = c.f32s(n_params)?;
+        let optim_t = c.u64()?;
+        let n_m = c.u64()? as usize;
+        let optim_m = c.f64s(n_m)?;
+        let optim_v = c.f64s(n_m)?;
+        let noise_rng = c.rng()?;
+        let data_rng = c.rng()?;
+        let has_sampler = c.take(1)?[0];
+        let sampler_rng = if has_sampler != 0 { Some(c.rng()?) } else { None };
+        let n_acc = c.u64()? as usize;
+        let rdp_acc = c.f64s(n_acc)?;
+        anyhow::ensure!(c.pos == payload.len(), "trailing bytes after session state");
+        Ok(SessionState {
+            model,
+            step,
+            active_phase,
+            phase_left,
+            params,
+            optim_t,
+            optim_m,
+            optim_v,
+            noise_rng,
+            data_rng,
+            sampler_rng,
+            rdp_acc,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +330,52 @@ mod tests {
     fn crc32_known_vector() {
         // CRC-32("123456789") = 0xCBF43926
         assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    fn sample_state(private: bool) -> SessionState {
+        SessionState {
+            model: "cls-base".into(),
+            step: 17,
+            active_phase: 1,
+            phase_left: 3,
+            params: (0..300).map(|i| (i as f32).sin()).collect(),
+            optim_t: 17,
+            optim_m: (0..40).map(|i| i as f64 * 0.1).collect(),
+            optim_v: (0..40).map(|i| i as f64 * 0.01).collect(),
+            noise_rng: [7u32; RNG_STATE_WORDS],
+            data_rng: [9u32; RNG_STATE_WORDS],
+            sampler_rng: if private { Some([11u32; RNG_STATE_WORDS]) } else { None },
+            rdp_acc: if private { (0..71).map(|i| i as f64 * 1e-3).collect() } else { vec![] },
+        }
+    }
+
+    #[test]
+    fn session_state_roundtrips_exactly() {
+        for private in [true, false] {
+            let st = sample_state(private);
+            let p = tmp(if private { "state-dp" } else { "state-nondp" });
+            st.save(&p).unwrap();
+            assert_eq!(SessionState::load(&p).unwrap(), st);
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn session_state_corruption_and_magic_detected() {
+        let st = sample_state(true);
+        let p = tmp("state-corrupt");
+        st.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = SessionState::load(&p).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        // a parameter Checkpoint is not a SessionState
+        let ck = Checkpoint { model: "m".into(), step: 1, params: vec![1.0; 8] };
+        ck.save(&p).unwrap();
+        let err = SessionState::load(&p).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        std::fs::remove_file(&p).ok();
     }
 }

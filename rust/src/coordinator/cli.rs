@@ -25,6 +25,7 @@ const USAGE: &str = "usage: fastdp <train|eval|accountant|zoo|complexity|artifac
   train      --model cls-base --method bitfit [--task sst2] [--steps N] [--batch N]
              [--lr F] [--eps F | --sigma F] [--delta F] [--clip F] [--clip-mode abadi|autos]
              [--optim sgd|adam|adamw] [--warmup N] [--n N] [--seed N]
+             [--replicas N]     (data-parallel workers; bit-identical to 1)
              [--full-steps N --full-lr F]            (method two-phase)
              [--pretrained ckpt] [--save ckpt] [--log out.jsonl]
              [--config cfg.toml] [--set k=v]... [--artifacts DIR]
@@ -148,7 +149,8 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         .batch(args.usize("batch", cfg.i64("train.batch", 64) as usize))
         .steps(args.usize("steps", cfg.i64("train.steps", 100) as usize) as u64)
         .n_train(args.usize("n", cfg.i64("train.n", 4096) as usize))
-        .seed(args.usize("seed", cfg.i64("train.seed", 0) as usize) as u64);
+        .seed(args.usize("seed", cfg.i64("train.seed", 0) as usize) as u64)
+        .replicas(args.usize("replicas", cfg.i64("train.replicas", 1) as usize));
     let task = args.str("task", &cfg.str("train.task", ""));
     if !task.is_empty() {
         b = b.task(&task);
@@ -241,6 +243,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     for (label, secs, calls) in session.timers.report() {
         println!("  timer {label:<8} {secs:>8.3}s over {calls} calls");
+    }
+    if let Some(comm) = session.comm_stats() {
+        println!(
+            "replica traffic: {} workers, {} rounds, {} B up + {} B down \
+             ({} B bootstrap, excluded)",
+            comm.workers,
+            comm.rounds,
+            comm.bytes_to_leader,
+            comm.bytes_from_leader,
+            comm.bytes_bootstrap,
+        );
     }
     if let Some(path) = args.get("save") {
         session.checkpoint(path)?;
@@ -452,6 +465,18 @@ mod tests {
     #[test]
     fn missing_model_is_an_error() {
         let args = parse("train --method bitfit");
+        assert!(build_spec(&args).is_err());
+    }
+
+    #[test]
+    fn replicas_flag_flows_into_the_spec() {
+        let args = parse("train --model cls-base --method bitfit --sigma 1.0 --replicas 4");
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.replicas, 4);
+        // default stays in-process; zero is rejected by the builder
+        let args = parse("train --model cls-base --method bitfit --sigma 1.0");
+        assert_eq!(build_spec(&args).unwrap().replicas, 1);
+        let args = parse("train --model cls-base --method bitfit --sigma 1.0 --replicas 0");
         assert!(build_spec(&args).is_err());
     }
 }

@@ -1,97 +1,632 @@
-//! Simulated data-parallel training: measures the communication volume the
-//! paper's §3.1 claims DP-BiTFiT reduces ~1000x (64 M D bits for full
-//! fine-tuning vs 64 M D_bias for BiTFiT).
+//! Real data-parallel replicated training: N replica workers on real
+//! threads, each running the fused kernels of [`crate::kernels`] over a
+//! disjoint microbatch shard of the Poisson logical batch, shipping their
+//! clipped gradient sums to the leader over channels.  Bytes are counted on
+//! the wire (the payloads really are serialized byte vectors), so
+//! `benches/comm_cost.rs` measures the paper's §3.1 claim — 64·M·D bits per
+//! exchange for full fine-tuning vs 64·M·D_bias for DP-BiTFiT — on an
+//! actual training run instead of the synthetic `simulate()` this module
+//! used to ship.
 //!
-//! Workers run on real threads and ship serialized gradient vectors to the
-//! leader over channels; bytes are counted on the wire.  Gradient *values*
-//! are synthetic (the point of this harness is the traffic, not the math —
-//! numerical training happens in `trainer.rs` on the PJRT runtime).
+//! ## Determinism contract (the cross-replica analog of `runtime::pool`)
+//!
+//! The logical batch is split into the same fixed-shape microbatch chunks
+//! the single-replica path uses, and each replica owns a **contiguous run
+//! of chunks** (`ceil(C / N)` per replica, like the pool's row sharding).
+//! Workers return one clipped gradient sum *per owned chunk*, in chunk
+//! order; the leader reduces replies **in fixed replica order**, which —
+//! because the assignment is contiguous — is exactly the global chunk
+//! order.  The leader therefore performs the identical sequence of f32
+//! `axpy` accumulations (and f64 loss additions) as the single-replica
+//! loop in `engine::Session::run_step`, so training is **bit-identical for
+//! any replica count**, including 1.  Gaussian noise is added exactly once
+//! per logical batch, by the leader, after the reduction.
+//!
+//! ## Wire accounting
+//!
+//! [`CommStats`] counts the two payload terms of the paper's formula:
+//! clipped gradient sums shipped up (`bytes_to_leader`) and updated
+//! trainable parameters broadcast back down (`bytes_from_leader`), both as
+//! real serialized f32 little-endian buffers.  Fixed-size control headers
+//! (chunk indices, per-chunk losses, the clip radius) and the one-time
+//! frozen-backbone broadcast at phase start (`bytes_bootstrap`) are
+//! tracked separately or not at all — they are provisioning, not the
+//! per-exchange traffic §3.1 is about.
+//!
+//! Replication is driven by `engine::Session` (see `JobSpec::replicas`);
+//! workers are handed a backend factory so this module never hard-codes an
+//! execution backend.
 
+use std::rc::Rc;
 use std::sync::mpsc;
-use std::thread;
+use std::thread::JoinHandle;
 
-/// Result of a simulated all-to-leader gradient exchange.
-#[derive(Debug, Clone, Copy)]
+use crate::engine::{EngineError, Pinned, StepRunner};
+use crate::util::tensor::{f32s_from_le_bytes, f32s_to_le_bytes, Tensor};
+
+/// Traffic of one (or many, when merged) all-to-leader gradient exchanges.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct CommStats {
+    /// Replica workers in the group.
     pub workers: usize,
+    /// Elements of the exchanged gradient/parameter vectors (D or D_bias).
     pub grad_len: usize,
+    /// Logical-batch exchange rounds counted.
     pub rounds: usize,
-    /// Total bytes received by the leader.
+    /// Serialized clipped-gradient bytes received by the leader.
     pub bytes_to_leader: u64,
-    /// Total bytes broadcast back (updated params).
+    /// Serialized updated-parameter bytes broadcast back to workers.
     pub bytes_from_leader: u64,
+    /// One-time provisioning traffic (frozen-backbone broadcasts), kept out
+    /// of `total_bytes` because §3.1 counts per-exchange traffic only.
+    pub bytes_bootstrap: u64,
     pub wall_seconds: f64,
 }
 
 impl CommStats {
+    /// Per-exchange traffic (gradients up + parameter broadcasts down).
     pub fn total_bytes(&self) -> u64 {
         self.bytes_to_leader + self.bytes_from_leader
     }
+
+    /// Fold another measurement into this one (bytes/rounds/wall add;
+    /// workers and vector length keep their maximum, so merging the two
+    /// phases of an X+BiTFiT job reports the wider exchange).
+    pub fn merge(&mut self, other: &CommStats) {
+        self.workers = self.workers.max(other.workers);
+        self.grad_len = self.grad_len.max(other.grad_len);
+        self.rounds += other.rounds;
+        self.bytes_to_leader += other.bytes_to_leader;
+        self.bytes_from_leader += other.bytes_from_leader;
+        self.bytes_bootstrap += other.bytes_bootstrap;
+        self.wall_seconds += other.wall_seconds;
+    }
 }
 
-/// Run `rounds` of an M-worker parameter-server exchange with `grad_len`
-/// f32 gradients (e.g. `grad_len` = D for full fine-tuning, D_bias for
-/// DP-BiTFiT).
-pub fn simulate(workers: usize, grad_len: usize, rounds: usize) -> CommStats {
-    let t0 = std::time::Instant::now();
-    let mut bytes_up = 0u64;
-    let mut bytes_down = 0u64;
-    for round in 0..rounds {
-        let (tx, rx) = mpsc::channel::<Vec<u8>>();
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let tx = tx.clone();
-            handles.push(thread::spawn(move || {
-                // serialize a synthetic gradient (values derived from ids so
-                // the leader can verify integrity)
-                let grad: Vec<f32> =
-                    (0..grad_len).map(|i| ((i + w + round) % 7) as f32).collect();
-                let bytes: Vec<u8> = grad.iter().flat_map(|v| v.to_le_bytes()).collect();
-                tx.send(bytes).unwrap();
-            }));
+/// The paper's §3.1 analytic per-round exchange volume: each of `workers`
+/// replicas ships a `grad_len`-element f32 gradient up and receives the
+/// `grad_len` updated parameters back — 64·M·D bits per round with 32-bit
+/// floats each way.  Used by `benches/comm_cost.rs` to project the measured
+/// small-model traffic onto the paper's published architectures.
+pub fn paper_round_bytes(workers: usize, grad_len: usize) -> u64 {
+    2 * 4 * workers as u64 * grad_len as u64
+}
+
+/// One microbatch assigned to a replica: its global chunk index plus the
+/// filled fixed-shape step inputs.
+struct ChunkWork {
+    index: usize,
+    x: Tensor,
+    y: Tensor,
+    mask: Tensor,
+}
+
+/// Leader -> worker messages.
+enum ToWorker {
+    /// Serialized frozen parameter vector (once per phase; bootstrap).
+    Frozen(Vec<u8>),
+    /// One logical-batch assignment: current trainable parameters plus the
+    /// chunks this replica owns, in ascending chunk order.
+    Run { train: Vec<u8>, clip_r: f32, chunks: Vec<ChunkWork> },
+}
+
+/// One chunk's result: raw summed loss and the serialized clipped
+/// gradient sum, still keyed by the global chunk index.
+struct ChunkResult {
+    index: usize,
+    loss: f32,
+    grad: Vec<u8>,
+}
+
+/// Worker -> leader messages.
+enum FromWorker {
+    /// Step loaded; the worker is ready for traffic.
+    Ready,
+    /// The factory failed inside the worker thread.
+    Failed(String),
+    /// Results for one `Run` assignment, in the assigned chunk order.
+    Batch(Vec<ChunkResult>),
+    /// A step execution failed.
+    Error(String),
+}
+
+/// The loop each replica worker thread runs: build the step via the
+/// factory, then serve `Frozen` / `Run` messages until the leader hangs up.
+fn worker_loop<F>(factory: F, rx: mpsc::Receiver<ToWorker>, tx: mpsc::Sender<FromWorker>)
+where
+    F: FnOnce() -> Result<Rc<dyn StepRunner>, EngineError>,
+{
+    let runner = match factory() {
+        Ok(r) => {
+            if tx.send(FromWorker::Ready).is_err() {
+                return;
+            }
+            r
         }
-        drop(tx);
-        let mut agg = vec![0.0f64; grad_len];
-        for bytes in rx {
-            bytes_up += bytes.len() as u64;
-            for (i, c) in bytes.chunks_exact(4).enumerate() {
-                agg[i] += f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64;
+        Err(e) => {
+            let _ = tx.send(FromWorker::Failed(e.to_string()));
+            return;
+        }
+    };
+    let meta = runner.meta().clone();
+    let mut pinned_frozen: Option<Pinned> = None;
+    for msg in rx {
+        match msg {
+            ToWorker::Frozen(bytes) => {
+                let t = Tensor::f32(vec![meta.pf], f32s_from_le_bytes(&bytes));
+                match runner.pin(&t) {
+                    Ok(p) => pinned_frozen = Some(p),
+                    Err(e) => {
+                        if tx.send(FromWorker::Error(e.to_string())).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            ToWorker::Run { train, clip_r, chunks } => {
+                let Some(frozen) = pinned_frozen.as_ref() else {
+                    if tx
+                        .send(FromWorker::Error(
+                            "replica received a batch before the frozen broadcast".to_string(),
+                        ))
+                        .is_err()
+                    {
+                        return;
+                    }
+                    continue;
+                };
+                let train_t = Tensor::f32(vec![meta.pt], f32s_from_le_bytes(&train));
+                let clip_t = Tensor::scalar_f32(clip_r);
+                let mut results = Vec::with_capacity(chunks.len());
+                let mut failed = false;
+                for c in &chunks {
+                    let out = runner.run_pinned(
+                        &[frozen],
+                        &[
+                            None,
+                            Some(&train_t),
+                            Some(&c.x),
+                            Some(&c.y),
+                            Some(&c.mask),
+                            Some(&clip_t),
+                        ],
+                    );
+                    match out {
+                        Ok(out) => results.push(ChunkResult {
+                            index: c.index,
+                            loss: out[0].item_f32(),
+                            grad: f32s_to_le_bytes(out[1].as_f32()),
+                        }),
+                        Err(e) => {
+                            if tx.send(FromWorker::Error(e.to_string())).is_err() {
+                                return;
+                            }
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                if !failed && tx.send(FromWorker::Batch(results)).is_err() {
+                    return;
+                }
             }
         }
-        for h in handles {
-            h.join().unwrap();
-        }
-        // broadcast updated parameters back to every worker
-        bytes_down += (workers * grad_len * 4) as u64;
-        std::hint::black_box(&agg);
     }
-    CommStats {
-        workers,
-        grad_len,
-        rounds,
-        bytes_to_leader: bytes_up,
-        bytes_from_leader: bytes_down,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+}
+
+/// One live replica: its channel pair plus the join handle.
+struct Worker {
+    tx: Option<mpsc::Sender<ToWorker>>,
+    rx: mpsc::Receiver<FromWorker>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A group of N persistent replica workers executing one train artifact.
+///
+/// Spawned once per training phase (workers keep their loaded step and
+/// pinned frozen parameters across logical batches), fed one logical batch
+/// at a time by [`ReplicaGroup::run_batch`], and joined on drop.
+pub struct ReplicaGroup {
+    workers: Vec<Worker>,
+    stats: CommStats,
+    /// Set when a round failed: replies may still be queued mid-stream, so
+    /// further rounds would reduce stale gradients.  Poisoned groups refuse
+    /// all traffic instead.
+    poisoned: bool,
+}
+
+impl ReplicaGroup {
+    /// Spawn `n` replica workers.  Each worker thread invokes its own clone
+    /// of `factory` to build the step runner it will serve (backends are
+    /// per-thread: `StepRunner`s are deliberately not `Send`).
+    ///
+    /// Fails — after joining every thread — if any worker's factory fails.
+    pub fn spawn<F>(n: usize, factory: F) -> Result<ReplicaGroup, EngineError>
+    where
+        F: Fn() -> Result<Rc<dyn StepRunner>, EngineError> + Send + Clone + 'static,
+    {
+        if n == 0 {
+            return Err(EngineError::spec("replica group needs at least one worker"));
+        }
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (to_tx, to_rx) = mpsc::channel::<ToWorker>();
+            let (from_tx, from_rx) = mpsc::channel::<FromWorker>();
+            let f = factory.clone();
+            let handle = std::thread::spawn(move || worker_loop(f, to_rx, from_tx));
+            workers.push(Worker { tx: Some(to_tx), rx: from_rx, handle: Some(handle) });
+        }
+        let group = ReplicaGroup {
+            workers,
+            stats: CommStats { workers: n, ..CommStats::default() },
+            poisoned: false,
+        };
+        for (i, w) in group.workers.iter().enumerate() {
+            match w.rx.recv() {
+                Ok(FromWorker::Ready) => {}
+                Ok(FromWorker::Failed(e)) => {
+                    return Err(EngineError::backend(
+                        "replica",
+                        format!("replica {i} failed to load its step: {e}"),
+                    ));
+                }
+                Ok(_) => {
+                    return Err(EngineError::backend(
+                        "replica",
+                        format!("replica {i} sent an unexpected first message"),
+                    ));
+                }
+                Err(_) => {
+                    return Err(EngineError::backend(
+                        "replica",
+                        format!("replica {i} died before reporting ready"),
+                    ));
+                }
+            }
+        }
+        Ok(group)
+    }
+
+    /// Number of replica workers in the group.
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Broadcast the frozen parameter vector to every replica (once per
+    /// phase).  Counted as bootstrap traffic, not per-exchange traffic.
+    pub fn broadcast_frozen(&mut self, frozen: &[f32]) -> Result<(), EngineError> {
+        self.check_poisoned()?;
+        for (i, w) in self.workers.iter().enumerate() {
+            let bytes = f32s_to_le_bytes(frozen);
+            self.stats.bytes_bootstrap += bytes.len() as u64;
+            let tx = w.tx.as_ref().expect("replica group already shut down");
+            if tx.send(ToWorker::Frozen(bytes)).is_err() {
+                self.poisoned = true;
+                return Err(EngineError::backend(
+                    "replica",
+                    format!("replica {i} hung up during broadcast"),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one logical batch: partition `chunks` contiguously over the
+    /// replicas, broadcast the current trainable parameters down, collect
+    /// per-chunk clipped gradient sums up, and reduce them **in fixed
+    /// replica order** (= global chunk order) into `grad`.
+    ///
+    /// Returns the raw summed loss (the same f64 chunk-order fold the
+    /// single-replica path computes) and this round's [`CommStats`].
+    ///
+    /// An `Err` abandons the round: replies still in flight stay queued,
+    /// so the group **poisons itself** — every later call returns a hard
+    /// error instead of silently reducing stale gradients.
+    pub fn run_batch(
+        &mut self,
+        train: &[f32],
+        clip_r: f32,
+        chunks: Vec<(Tensor, Tensor, Tensor)>,
+        grad: &mut [f32],
+    ) -> Result<(f64, CommStats), EngineError> {
+        self.check_poisoned()?;
+        let out = self.run_batch_inner(train, clip_r, chunks, grad);
+        if out.is_err() {
+            self.poisoned = true;
+        }
+        out
+    }
+
+    fn check_poisoned(&self) -> Result<(), EngineError> {
+        if self.poisoned {
+            return Err(EngineError::backend(
+                "replica",
+                "replica group was poisoned by an earlier failed exchange; \
+                 start a new session",
+            ));
+        }
+        Ok(())
+    }
+
+    fn run_batch_inner(
+        &mut self,
+        train: &[f32],
+        clip_r: f32,
+        chunks: Vec<(Tensor, Tensor, Tensor)>,
+        grad: &mut [f32],
+    ) -> Result<(f64, CommStats), EngineError> {
+        let t0 = std::time::Instant::now();
+        let n = self.workers.len();
+        let mut round = CommStats {
+            workers: n,
+            grad_len: grad.len(),
+            rounds: 1,
+            ..CommStats::default()
+        };
+        let c = chunks.len();
+        // contiguous chunk ranges per replica, like the pool's row sharding
+        let per = if c == 0 { 0 } else { (c + n - 1) / n };
+        let mut assigned = vec![false; n];
+        if per > 0 {
+            let mut it = chunks.into_iter().enumerate();
+            'outer: for (w, slot) in assigned.iter_mut().enumerate() {
+                let mut work = Vec::with_capacity(per);
+                for _ in 0..per {
+                    match it.next() {
+                        Some((index, (x, y, mask))) => {
+                            work.push(ChunkWork { index, x, y, mask })
+                        }
+                        None => break,
+                    }
+                }
+                if work.is_empty() {
+                    break 'outer;
+                }
+                *slot = true;
+                let train_bytes = f32s_to_le_bytes(train);
+                round.bytes_from_leader += train_bytes.len() as u64;
+                let tx = self.workers[w].tx.as_ref().expect("replica group already shut down");
+                tx.send(ToWorker::Run { train: train_bytes, clip_r, chunks: work }).map_err(
+                    |_| {
+                        EngineError::backend(
+                            "replica",
+                            format!("replica {w} hung up before the batch"),
+                        )
+                    },
+                )?;
+            }
+        }
+        // collect in fixed replica order; within a reply, chunks arrive in
+        // the worker's assigned (ascending) order, so the whole reduction
+        // is the single-replica chunk-order fold
+        let mut loss_sum = 0.0f64;
+        let mut next_index = 0usize;
+        for (w, was_assigned) in assigned.iter().enumerate() {
+            if !*was_assigned {
+                continue;
+            }
+            match self.workers[w].rx.recv() {
+                Ok(FromWorker::Batch(results)) => {
+                    for r in results {
+                        debug_assert_eq!(
+                            r.index, next_index,
+                            "replica replies must arrive in global chunk order"
+                        );
+                        next_index += 1;
+                        round.bytes_to_leader += r.grad.len() as u64;
+                        let g = f32s_from_le_bytes(&r.grad);
+                        if g.len() != grad.len() {
+                            return Err(EngineError::backend(
+                                "replica",
+                                format!(
+                                    "replica {w} shipped a {}-element gradient, expected {}",
+                                    g.len(),
+                                    grad.len()
+                                ),
+                            ));
+                        }
+                        crate::util::tensor::axpy(grad, 1.0, &g);
+                        loss_sum += r.loss as f64;
+                    }
+                }
+                Ok(FromWorker::Error(e)) => {
+                    return Err(EngineError::backend("replica", format!("replica {w}: {e}")));
+                }
+                Ok(_) => {
+                    return Err(EngineError::backend(
+                        "replica",
+                        format!("replica {w} sent an unexpected message"),
+                    ));
+                }
+                Err(_) => {
+                    return Err(EngineError::backend(
+                        "replica",
+                        format!("replica {w} died mid-batch"),
+                    ));
+                }
+            }
+        }
+        round.wall_seconds = t0.elapsed().as_secs_f64();
+        self.stats.merge(&round);
+        Ok((loss_sum, round))
+    }
+
+    /// Cumulative traffic since the group was spawned.
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+}
+
+impl Drop for ReplicaGroup {
+    fn drop(&mut self) {
+        // hang up first so every worker's recv loop ends, then join
+        for w in &mut self.workers {
+            w.tx = None;
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{Backend, InterpreterBackend};
 
-    #[test]
-    fn byte_accounting_is_exact() {
-        let s = simulate(4, 1000, 3);
-        assert_eq!(s.bytes_to_leader, 4 * 1000 * 4 * 3);
-        assert_eq!(s.bytes_from_leader, 4 * 1000 * 4 * 3);
+    fn factory(artifact: &'static str) -> impl Fn() -> Result<Rc<dyn StepRunner>, EngineError>
+           + Send
+           + Clone
+           + 'static {
+        move || InterpreterBackend::new().load(artifact)
+    }
+
+    /// Fill `c` synthetic chunks shaped for `meta` (all rows active).
+    fn synth_chunks(artifact: &str, c: usize) -> (usize, usize, Vec<(Tensor, Tensor, Tensor)>) {
+        let backend = InterpreterBackend::new();
+        let meta = backend.artifact_meta(artifact).unwrap();
+        let chunks = (0..c)
+            .map(|i| {
+                let inputs =
+                    crate::bench::synth_step_inputs(&backend, &meta, 100 + i as u64).unwrap();
+                (inputs[2].clone(), inputs[3].clone(), inputs[4].clone())
+            })
+            .collect();
+        (meta.pf, meta.pt, chunks)
+    }
+
+    fn split_params(artifact: &str) -> (Vec<f32>, Vec<f32>) {
+        let backend = InterpreterBackend::new();
+        let meta = backend.artifact_meta(artifact).unwrap();
+        let layout = backend.layout(&meta.model).unwrap();
+        let full = backend.init_params(&meta.model).unwrap();
+        layout.split(&full, &meta.subset)
     }
 
     #[test]
-    fn bitfit_reduction_matches_param_ratio() {
-        // full D vs bias D/1000 => ~1000x traffic reduction (§3.1)
-        let full = simulate(2, 100_000, 1);
-        let bias = simulate(2, 100, 1);
-        let ratio = full.total_bytes() as f64 / bias.total_bytes() as f64;
-        assert!((ratio - 1000.0).abs() < 1.0, "{ratio}");
+    fn replica_count_never_changes_the_reduction() {
+        let artifact = "cls-base__dp-bitfit";
+        let (_, pt, _) = synth_chunks(artifact, 1);
+        let (frozen, train) = split_params(artifact);
+        let run = |n: usize| -> (f64, Vec<u32>, CommStats) {
+            let mut g = ReplicaGroup::spawn(n, factory(artifact)).unwrap();
+            g.broadcast_frozen(&frozen).unwrap();
+            let (_, _, chunks) = synth_chunks(artifact, 5);
+            let mut grad = vec![0.0f32; pt];
+            let (loss, stats) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
+            (loss, grad.iter().map(|v| v.to_bits()).collect(), stats)
+        };
+        let (loss1, grad1, _) = run(1);
+        for n in [2usize, 3, 4, 8] {
+            let (loss, grad, stats) = run(n);
+            assert_eq!(loss.to_bits(), loss1.to_bits(), "replicas={n}");
+            assert_eq!(grad, grad1, "replicas={n}");
+            assert_eq!(stats.workers, n);
+        }
+    }
+
+    #[test]
+    fn wire_accounting_counts_payloads_exactly() {
+        let artifact = "cls-base__dp-bitfit";
+        let (pf, pt, chunks) = synth_chunks(artifact, 3);
+        let (frozen, train) = split_params(artifact);
+        let mut g = ReplicaGroup::spawn(2, factory(artifact)).unwrap();
+        g.broadcast_frozen(&frozen).unwrap();
+        let mut grad = vec![0.0f32; pt];
+        let (_, stats) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
+        // 3 chunks of pt-element clipped gradient sums up
+        assert_eq!(stats.bytes_to_leader, 3 * pt as u64 * 4);
+        // ceil(3/2)=2 chunks to replica 0, 1 to replica 1: both active, each
+        // got one pt-element parameter broadcast down
+        assert_eq!(stats.bytes_from_leader, 2 * pt as u64 * 4);
+        assert_eq!(stats.rounds, 1);
+        // frozen bootstrap went to both replicas and stays out of total_bytes
+        let total = g.stats();
+        assert_eq!(total.bytes_bootstrap, 2 * pf as u64 * 4);
+        assert_eq!(total.total_bytes(), stats.bytes_to_leader + stats.bytes_from_leader);
+    }
+
+    #[test]
+    fn idle_replicas_get_no_traffic() {
+        let artifact = "cls-base__dp-bitfit";
+        let (_, pt, chunks) = synth_chunks(artifact, 2);
+        let (frozen, train) = split_params(artifact);
+        // 4 replicas, 2 chunks: ceil(2/4)=1 each for replicas 0 and 1
+        let mut g = ReplicaGroup::spawn(4, factory(artifact)).unwrap();
+        g.broadcast_frozen(&frozen).unwrap();
+        let mut grad = vec![0.0f32; pt];
+        let (_, stats) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
+        assert_eq!(stats.bytes_from_leader, 2 * pt as u64 * 4);
+        assert_eq!(stats.bytes_to_leader, 2 * pt as u64 * 4);
+        // empty logical batch: nothing crosses the wire, round still counted
+        let (loss, stats) = g.run_batch(&train, 0.05, Vec::new(), &mut grad).unwrap();
+        assert_eq!(loss, 0.0);
+        assert_eq!(stats.total_bytes(), 0);
+        assert_eq!(stats.rounds, 1);
+    }
+
+    #[test]
+    fn bad_artifact_fails_at_spawn_with_joined_threads() {
+        let err = ReplicaGroup::spawn(2, factory("cls-base__dp-quantum")).unwrap_err();
+        assert!(matches!(err, EngineError::Backend { .. }), "{err}");
+    }
+
+    #[test]
+    fn failed_exchange_poisons_the_group() {
+        let artifact = "cls-base__dp-bitfit";
+        let (_, pt, chunks) = synth_chunks(artifact, 2);
+        let (frozen, train) = split_params(artifact);
+        let mut g = ReplicaGroup::spawn(2, factory(artifact)).unwrap();
+        g.broadcast_frozen(&frozen).unwrap();
+        // a wrong-sized leader accumulator makes the round fail mid-reduce
+        let mut bad_grad = vec![0.0f32; pt + 1];
+        let err = g.run_batch(&train, 0.05, chunks, &mut bad_grad).unwrap_err();
+        assert!(err.to_string().contains("gradient"), "{err}");
+        // the group must now refuse all traffic rather than reduce the
+        // stale replies still queued in the worker channels
+        let (_, _, chunks) = synth_chunks(artifact, 2);
+        let mut grad = vec![0.0f32; pt];
+        let err = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        let err = g.broadcast_frozen(&frozen).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn paper_round_bytes_matches_the_formula() {
+        // 64·M·D bits per exchange = M·D·4 bytes up + M·D·4 bytes down
+        assert_eq!(paper_round_bytes(4, 1000), 4 * 1000 * 8);
+        assert_eq!(paper_round_bytes(1, 1), 8);
+    }
+
+    #[test]
+    fn comm_stats_merge_adds_traffic() {
+        let mut a = CommStats {
+            workers: 2,
+            grad_len: 10,
+            rounds: 1,
+            bytes_to_leader: 100,
+            bytes_from_leader: 50,
+            bytes_bootstrap: 7,
+            wall_seconds: 0.5,
+        };
+        let b = CommStats {
+            workers: 4,
+            grad_len: 5,
+            rounds: 2,
+            bytes_to_leader: 10,
+            bytes_from_leader: 5,
+            bytes_bootstrap: 1,
+            wall_seconds: 0.25,
+        };
+        a.merge(&b);
+        assert_eq!(a.workers, 4);
+        assert_eq!(a.grad_len, 10);
+        assert_eq!(a.rounds, 3);
+        assert_eq!(a.total_bytes(), 165);
+        assert_eq!(a.bytes_bootstrap, 8);
+        assert!((a.wall_seconds - 0.75).abs() < 1e-12);
     }
 }

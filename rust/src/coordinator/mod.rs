@@ -9,9 +9,11 @@
 //! * [`workloads`] — shape-driven synthetic dataset construction.
 //! * [`decode`] — batched greedy decoding for the generation tasks.
 //! * [`pretrain`] — cached non-private pretraining of the small models.
-//! * [`checkpoint`] — CRC-protected binary checkpoints.
+//! * [`checkpoint`] — CRC-protected binary checkpoints (parameter vectors
+//!   and complete mid-run session snapshots).
 //! * [`metrics`] — JSONL run logs.
-//! * [`distributed`] — simulated data-parallel communication accounting.
+//! * [`distributed`] — real data-parallel replica workers with on-the-wire
+//!   communication accounting (bit-identical aggregation contract).
 //! * [`cli`] — the `fastdp` binary's subcommands (a thin flag/TOML ->
 //!   `JobSpec` translator).
 

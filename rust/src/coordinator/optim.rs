@@ -60,6 +60,28 @@ impl Optimizer {
         self.m.len()
     }
 
+    /// Internal state `(t, m, v)` for session-state checkpoints.
+    pub fn state(&self) -> (u64, &[f64], &[f64]) {
+        (self.t, &self.m, &self.v)
+    }
+
+    /// Restore internal state captured by [`Optimizer::state`].  Fails if
+    /// the moment vectors are sized for a different parameter count.
+    pub fn restore(&mut self, t: u64, m: Vec<f64>, v: Vec<f64>) -> Result<(), String> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            return Err(format!(
+                "optimizer snapshot sized ({}, {}), optimizer has {} params",
+                m.len(),
+                v.len(),
+                self.m.len()
+            ));
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     pub fn is_empty(&self) -> bool {
         self.m.is_empty()
     }

@@ -160,6 +160,25 @@ impl RdpAccountant {
         }
         rdp_to_dp(&self.alphas, &self.acc, self.delta)
     }
+
+    /// Accumulated RDP at each grid order (session-state checkpoints).
+    pub fn accumulated(&self) -> &[f64] {
+        &self.acc
+    }
+
+    /// Restore accumulated RDP from an [`RdpAccountant::accumulated`]
+    /// snapshot.  Fails if the snapshot was taken over a different grid.
+    pub fn restore(&mut self, acc: &[f64]) -> Result<(), String> {
+        if acc.len() != self.alphas.len() {
+            return Err(format!(
+                "accountant snapshot has {} orders, grid has {}",
+                acc.len(),
+                self.alphas.len()
+            ));
+        }
+        self.acc = acc.to_vec();
+        Ok(())
+    }
 }
 
 #[cfg(test)]

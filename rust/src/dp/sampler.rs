@@ -34,6 +34,17 @@ impl PoissonSampler {
     pub fn expected_batch(&self) -> f64 {
         self.n as f64 * self.q
     }
+
+    /// Snapshot the sampler's RNG (session-state checkpoints).
+    pub fn rng_state(&self) -> [u32; crate::util::rng::RNG_STATE_WORDS] {
+        self.rng.state()
+    }
+
+    /// Restore the sampler's RNG from a [`PoissonSampler::rng_state`]
+    /// snapshot; subsequent draws continue the saved sequence exactly.
+    pub fn restore_rng(&mut self, state: &[u32; crate::util::rng::RNG_STATE_WORDS]) {
+        self.rng = ChaChaRng::from_state(state);
+    }
 }
 
 #[cfg(test)]
@@ -63,6 +74,18 @@ mod tests {
         assert!(s0.sample().is_empty());
         let mut s1 = PoissonSampler::new(100, 1.0, 1);
         assert_eq!(s1.sample().len(), 100);
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_draws() {
+        let mut a = PoissonSampler::new(500, 0.1, 21);
+        a.sample();
+        let snap = a.rng_state();
+        let want: Vec<Vec<usize>> = (0..5).map(|_| a.sample()).collect();
+        let mut b = PoissonSampler::new(500, 0.1, 21);
+        b.restore_rng(&snap);
+        let got: Vec<Vec<usize>> = (0..5).map(|_| b.sample()).collect();
+        assert_eq!(got, want);
     }
 
     #[test]

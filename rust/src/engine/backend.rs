@@ -18,6 +18,7 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 
+use crate::coordinator::distributed::ReplicaGroup;
 use crate::coordinator::workloads::ModelShape;
 use crate::runtime::{ArtifactMeta, Layout};
 use crate::util::tensor::Tensor;
@@ -104,6 +105,15 @@ pub trait Backend {
     /// Directory for cached derived state (pretrained checkpoints);
     /// `None` when the backend has no on-disk home (interpreter).
     fn cache_dir(&self) -> Option<PathBuf> {
+        None
+    }
+
+    /// Spawn an `n`-worker data-parallel [`ReplicaGroup`] executing a train
+    /// artifact, each replica on its own thread with its own step instance
+    /// (see `coordinator::distributed` for the bit-identical aggregation
+    /// contract).  `None` means the backend cannot replicate — the default,
+    /// and PJRT's answer: its device buffers are not thread-shardable here.
+    fn replica_group(&self, _artifact: &str, _n: usize) -> Option<Result<ReplicaGroup, EngineError>> {
         None
     }
 }

@@ -196,6 +196,23 @@ impl Backend for InterpreterBackend {
         self.steps.insert(artifact.to_string(), step.clone());
         Ok(step)
     }
+
+    /// Real data-parallel replication: each worker thread builds its own
+    /// interpreter (inheriting this backend's thread/kernel overrides) and
+    /// loads the artifact.  Step outputs are bit-identical across worker
+    /// configurations (see `tests/parallel_determinism.rs`), so sharding a
+    /// logical batch over replicas cannot change the training trajectory.
+    fn replica_group(
+        &self,
+        artifact: &str,
+        n: usize,
+    ) -> Option<Result<crate::coordinator::distributed::ReplicaGroup, EngineError>> {
+        let (threads, kernels) = (self.threads, self.kernels);
+        let artifact = artifact.to_string();
+        Some(crate::coordinator::distributed::ReplicaGroup::spawn(n, move || {
+            InterpreterBackend::with_config(threads, kernels).load(&artifact)
+        }))
+    }
 }
 
 /// What an artifact name asks for.

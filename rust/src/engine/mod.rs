@@ -33,6 +33,13 @@
 //! PJRT — the fast path) and [`InterpreterBackend`] (a dependency-free
 //! pure-Rust reference that needs no artifact directory — CI, tests, and
 //! laptops).  [`Engine::auto`] picks for you.
+//!
+//! Two more session capabilities ride on the facade: `JobSpec::replicas`
+//! runs the job data-parallel over N real replica workers with measured
+//! wire traffic and a bit-identical trajectory (`coordinator::distributed`),
+//! and `Session::save_state` / [`Engine::resume_session`] snapshot and
+//! resume a mid-run session — optimizer moments, RNG streams and the RDP
+//! accountant included — with bit-identical continuation.
 
 mod backend;
 mod error;
@@ -49,6 +56,8 @@ pub use session::{evaluate_params, EvalOutcome, PrivacySpent, Session, StepStats
 pub use spec::{JobPlan, JobSpec, JobSpecBuilder, Method, PhaseSpec, Privacy};
 
 // Engine-level re-exports so drivers only import `fastdp::engine`.
+pub use crate::coordinator::checkpoint::SessionState;
+pub use crate::coordinator::distributed::{CommStats, ReplicaGroup};
 pub use crate::coordinator::optim::{LrSchedule, OptimKind};
 pub use crate::coordinator::task_data::TaskData;
 pub use crate::coordinator::workloads::ModelShape;
@@ -252,7 +261,28 @@ impl Engine {
                     phase.artifact
                 )));
             }
-            phases.push((phase, runner));
+            // data-parallel mode: one persistent replica group per phase
+            // (workers idle until their phase starts); replicas = 1 keeps
+            // the in-process path with no worker threads at all
+            let replicas = if spec.replicas > 1 {
+                match self.backend.replica_group(&phase.artifact, spec.replicas) {
+                    Some(group) => Some(group?),
+                    None => {
+                        return Err(EngineError::backend(
+                            self.backend.name(),
+                            format!(
+                                "backend cannot run data-parallel replicas \
+                                 (spec asked for {}); use the interpreter backend \
+                                 or replicas = 1",
+                                spec.replicas
+                            ),
+                        ));
+                    }
+                }
+            } else {
+                None
+            };
+            phases.push((phase, runner, replicas));
         }
         // best-effort: a missing eval artifact must not block training-only
         // jobs (the old Trainer had no eval requirement); Session::evaluate
@@ -286,6 +316,27 @@ impl Engine {
     ) -> Result<EvalOutcome, EngineError> {
         let eval = self.evaluator(model)?;
         evaluate_params(eval.as_ref(), params, data, max_examples)
+    }
+
+    /// Resume a session from a [`SessionState`] snapshot written by
+    /// `Session::save_state`.  The spec must describe the same job (model,
+    /// phases, privacy regime); the resumed session continues the run
+    /// bit-identically.
+    pub fn resume_session(
+        &mut self,
+        spec: &JobSpec,
+        path: impl AsRef<Path>,
+    ) -> Result<Session, EngineError> {
+        let st = SessionState::load(path).map_err(|e| EngineError::Checkpoint(format!("{e:#}")))?;
+        if st.model != spec.model {
+            return Err(EngineError::Checkpoint(format!(
+                "session state is for model {:?}, the spec says {:?}",
+                st.model, spec.model
+            )));
+        }
+        let mut session = self.session_from(spec, st.params.clone())?;
+        session.restore_state(&st)?;
+        Ok(session)
     }
 
     /// Load a checkpoint, verifying it belongs to `model`.

@@ -15,10 +15,21 @@
 //! radius is a prebuilt scalar — `run_step` hands the runner borrowed
 //! inputs via `run_pinned` (backends that don't prefer pinning, i.e. PJRT's
 //! literal path, still get owned clones).
+//!
+//! With `JobSpec::replicas > 1` the microbatch chunks are sharded over a
+//! [`ReplicaGroup`] of data-parallel workers instead of looping locally;
+//! the leader-side reduction replays the identical chunk-order float fold,
+//! so the trajectory is bit-identical to the in-process path (and
+//! `run_step` additionally reports the measured wire traffic).
+//!
+//! A session can be snapshotted mid-run ([`Session::save_state`]) and
+//! resumed (`Engine::resume_session`) with bit-identical continuation: the
+//! snapshot carries optimizer moments, RNG states and accountant orders.
 
 use std::rc::Rc;
 
-use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::checkpoint::{Checkpoint, SessionState};
+use crate::coordinator::distributed::{CommStats, ReplicaGroup};
 use crate::coordinator::metrics::JsonlSink;
 use crate::coordinator::optim::Optimizer;
 use crate::coordinator::task_data::TaskData;
@@ -41,6 +52,8 @@ pub struct StepStats {
     pub batch: usize,
     pub grad_norm: f64,
     pub epsilon: f64,
+    /// Measured replica traffic for this step (`None` in-process).
+    pub comm: Option<CommStats>,
 }
 
 /// Privacy spent so far by a session.
@@ -80,6 +93,9 @@ impl EvalOutcome {
 struct Phase {
     spec: PhaseSpec,
     runner: Rc<dyn StepRunner>,
+    /// Data-parallel workers for this phase's artifact (`None` when
+    /// `JobSpec::replicas == 1`).
+    replicas: Option<ReplicaGroup>,
 }
 
 /// A training session handed out by [`super::Engine::session`].
@@ -103,6 +119,8 @@ pub struct Session {
     optimizer: Optimizer,
     sampler: Option<PoissonSampler>,
     accountant: Option<RdpAccountant>,
+    /// Traffic of replica groups already retired at phase switches.
+    retired_comm: Option<CommStats>,
     /// `None` when the backend had no eval step for this model (training
     /// still works; `evaluate` reports the gap).
     eval_runner: Option<Rc<dyn StepRunner>>,
@@ -119,7 +137,7 @@ impl Session {
     /// Assemble a session (called by `Engine::session`).
     pub(super) fn assemble(
         spec: JobSpec,
-        phases: Vec<(PhaseSpec, Rc<dyn StepRunner>)>,
+        phases: Vec<(PhaseSpec, Rc<dyn StepRunner>, Option<ReplicaGroup>)>,
         eval_runner: Option<Rc<dyn StepRunner>>,
         layout: Layout,
         start_params: Vec<f32>,
@@ -134,8 +152,10 @@ impl Session {
                 layout.n_params
             )));
         }
-        let phases: Vec<Phase> =
-            phases.into_iter().map(|(spec, runner)| Phase { spec, runner }).collect();
+        let phases: Vec<Phase> = phases
+            .into_iter()
+            .map(|(spec, runner, replicas)| Phase { spec, runner, replicas })
+            .collect();
         let q = spec.q();
         let meta = phases[0].runner.meta().clone();
         let is_dp = meta.method.starts_with("dp-");
@@ -162,6 +182,7 @@ impl Session {
             pinned_frozen: None,
             sampler,
             accountant,
+            retired_comm: None,
             eval_runner,
             sink,
             sigma,
@@ -176,35 +197,59 @@ impl Session {
     }
 
     /// Split `full` for the active phase's subset and (re)build the
-    /// optimizer + pinned frozen input.
+    /// optimizer + pinned frozen input; with replicas, also broadcast the
+    /// new frozen vector to the phase's workers (bootstrap traffic).
     fn load_phase_params(&mut self, full: &[f32]) -> Result<(), EngineError> {
         let phase = &self.phases[self.active];
         let meta = phase.runner.meta();
+        let (pf, pt) = (meta.pf, meta.pt);
+        let lr = phase.spec.lr;
         let (frozen, train) = self.layout.split(full, &meta.subset);
-        if frozen.len() != meta.pf || train.len() != meta.pt {
+        if frozen.len() != pf || train.len() != pt {
             return Err(EngineError::Data(format!(
                 "layout split ({}, {}) disagrees with artifact {} ({}, {})",
                 frozen.len(),
                 train.len(),
                 meta.name,
-                meta.pf,
-                meta.pt
+                pf,
+                pt
             )));
         }
-        self.frozen = Tensor::f32(vec![meta.pf], frozen);
-        self.train = Tensor::f32(vec![meta.pt], train);
-        self.pinned_frozen = if phase.runner.prefers_pinned() {
-            Some(phase.runner.pin(&self.frozen)?)
+        self.frozen = Tensor::f32(vec![pf], frozen);
+        self.train = Tensor::f32(vec![pt], train);
+        // replicated phases train exclusively through the workers' own
+        // pinned copies, so the leader skips its (otherwise unused) pin
+        let replicated = self.phases[self.active].replicas.is_some();
+        self.pinned_frozen = if !replicated && self.phases[self.active].runner.prefers_pinned() {
+            Some(self.phases[self.active].runner.pin(&self.frozen)?)
         } else {
             None
         };
-        self.optimizer = Optimizer::new(self.spec.optim, phase.spec.lr, meta.pt);
+        if let Some(group) = self.phases[self.active].replicas.as_mut() {
+            group.broadcast_frozen(self.frozen.as_f32())?;
+        }
+        self.optimizer = Optimizer::new(self.spec.optim, lr, pt);
         Ok(())
     }
 
+    /// Retire one phase's replica workers (dropping the group joins its
+    /// threads), folding their measured traffic into `retired_comm` so
+    /// `comm_stats` stays complete.
+    fn retire_replicas(&mut self, phase: usize) {
+        if let Some(group) = self.phases[phase].replicas.take() {
+            let s = group.stats();
+            match &mut self.retired_comm {
+                Some(t) => t.merge(&s),
+                None => self.retired_comm = Some(s),
+            }
+        }
+    }
+
     /// Advance to the next phase (two-phase jobs), carrying the accountant.
+    /// The finished phase's replica workers are retired here.
     fn switch_phase(&mut self) -> Result<(), EngineError> {
         let full = self.full_params();
+        self.retire_replicas(self.active);
         self.active += 1;
         self.phase_left = self.phases[self.active].spec.steps;
         self.load_phase_params(&full)
@@ -290,37 +335,58 @@ impl Session {
         let pt = meta.pt;
         let mut grad = vec![0.0f32; pt];
         let mut loss_sum = 0.0f64;
-        for chunk in idxs.chunks(b) {
+        let mut comm: Option<CommStats> = None;
+        if self.phases[self.active].replicas.is_some() {
+            // data-parallel: fill every chunk, ship contiguous chunk runs
+            // to the replica workers, reduce their clipped gradient sums in
+            // fixed replica order — the identical chunk-order float fold
+            // the in-process loop below performs, so the trajectory is
+            // bit-identical for any replica count
             let t1 = std::time::Instant::now();
-            let (x, y, mask) = data.fill(chunk, b);
+            let chunks: Vec<(Tensor, Tensor, Tensor)> =
+                idxs.chunks(b).map(|chunk| data.fill(chunk, b)).collect();
             self.timers.add("fill", t1.elapsed().as_secs_f64());
             let t2 = std::time::Instant::now();
-            // pinned path: every input is borrowed — no parameter-sized
-            // clones anywhere in the steady state
-            let out = match &self.pinned_frozen {
-                Some(pinned) => runner.run_pinned(
-                    &[pinned],
-                    &[
-                        None,
-                        Some(&self.train),
-                        Some(&x),
-                        Some(&y),
-                        Some(&mask),
-                        Some(&self.clip_r_t),
-                    ],
-                )?,
-                None => runner.run(&[
-                    self.frozen.clone(),
-                    self.train.clone(),
-                    x,
-                    y,
-                    mask,
-                    self.clip_r_t.clone(),
-                ])?,
-            };
+            let clip_r = self.clip_r_t.item_f32();
+            let group = self.phases[self.active].replicas.as_mut().expect("checked above");
+            let (replica_loss, stats) =
+                group.run_batch(self.train.as_f32(), clip_r, chunks, &mut grad)?;
+            loss_sum = replica_loss;
+            comm = Some(stats);
             self.timers.add("execute", t2.elapsed().as_secs_f64());
-            loss_sum += out[0].item_f32() as f64;
-            crate::util::tensor::axpy(&mut grad, 1.0, out[1].as_f32());
+        } else {
+            for chunk in idxs.chunks(b) {
+                let t1 = std::time::Instant::now();
+                let (x, y, mask) = data.fill(chunk, b);
+                self.timers.add("fill", t1.elapsed().as_secs_f64());
+                let t2 = std::time::Instant::now();
+                // pinned path: every input is borrowed — no parameter-sized
+                // clones anywhere in the steady state
+                let out = match &self.pinned_frozen {
+                    Some(pinned) => runner.run_pinned(
+                        &[pinned],
+                        &[
+                            None,
+                            Some(&self.train),
+                            Some(&x),
+                            Some(&y),
+                            Some(&mask),
+                            Some(&self.clip_r_t),
+                        ],
+                    )?,
+                    None => runner.run(&[
+                        self.frozen.clone(),
+                        self.train.clone(),
+                        x,
+                        y,
+                        mask,
+                        self.clip_r_t.clone(),
+                    ])?,
+                };
+                self.timers.add("execute", t2.elapsed().as_secs_f64());
+                loss_sum += out[0].item_f32() as f64;
+                crate::util::tensor::axpy(&mut grad, 1.0, out[1].as_f32());
+            }
         }
         let denom = if self.is_dp() {
             // fixed normalization by the expected batch (standard DP-SGD)
@@ -354,6 +420,7 @@ impl Session {
             batch: idxs.len(),
             grad_norm,
             epsilon: self.accountant.as_ref().map(|a| a.epsilon().0).unwrap_or(0.0),
+            comm,
         };
         if let Some(sink) = &mut self.sink {
             sink.step(stats.step, stats.loss, stats.epsilon)
@@ -385,6 +452,107 @@ impl Session {
         }
         .save(path)
         .map_err(|e| EngineError::Checkpoint(format!("{e:#}")))
+    }
+
+    /// Cumulative measured replica traffic across all phases (`None` for
+    /// in-process sessions; see [`CommStats`]).
+    pub fn comm_stats(&self) -> Option<CommStats> {
+        let mut total: Option<CommStats> = self.retired_comm;
+        for p in &self.phases {
+            if let Some(g) = &p.replicas {
+                let s = g.stats();
+                match &mut total {
+                    Some(t) => t.merge(&s),
+                    None => total = Some(s),
+                }
+            }
+        }
+        total
+    }
+
+    /// Write a complete mid-run snapshot: parameters plus phase position,
+    /// optimizer moments, RNG states and accountant orders.  A session
+    /// resumed from it (`Engine::resume_session`) continues the run
+    /// **bit-identically** — same Poisson draws, same noise, same updates —
+    /// as if it had never stopped.
+    pub fn save_state(&self, path: impl AsRef<std::path::Path>) -> Result<(), EngineError> {
+        let (optim_t, m, v) = self.optimizer.state();
+        SessionState {
+            model: self.meta().model.clone(),
+            step: self.step,
+            active_phase: self.active as u32,
+            phase_left: self.phase_left,
+            params: self.full_params(),
+            optim_t,
+            optim_m: m.to_vec(),
+            optim_v: v.to_vec(),
+            noise_rng: self.noise_rng.state(),
+            data_rng: self.data_rng.state(),
+            sampler_rng: self.sampler.as_ref().map(|s| s.rng_state()),
+            rdp_acc: self
+                .accountant
+                .as_ref()
+                .map(|a| a.accumulated().to_vec())
+                .unwrap_or_default(),
+        }
+        .save(path)
+        .map_err(|e| EngineError::Checkpoint(format!("{e:#}")))
+    }
+
+    /// Overwrite this freshly-assembled session with a saved snapshot.
+    ///
+    /// Precondition (upheld by `Engine::resume_session`, the only caller):
+    /// the session was just assembled from `st.params`, so phase 0's
+    /// parameter split — and, for replicated jobs, its one frozen
+    /// broadcast — already match the snapshot; reloading is only needed
+    /// when the snapshot sits in a later phase.
+    pub(super) fn restore_state(&mut self, st: &SessionState) -> Result<(), EngineError> {
+        let target = st.active_phase as usize;
+        if target >= self.phases.len() {
+            return Err(EngineError::Checkpoint(format!(
+                "state is in phase {} but the job has {} phases (spec mismatch?)",
+                st.active_phase,
+                self.phases.len()
+            )));
+        }
+        self.phase_left = st.phase_left;
+        self.step = st.step;
+        if self.active != target {
+            // skipped phases never run: retire their replica workers
+            for i in self.active..target {
+                self.retire_replicas(i);
+            }
+            self.active = target;
+            self.load_phase_params(&st.params)?;
+        }
+        self.optimizer
+            .restore(st.optim_t, st.optim_m.clone(), st.optim_v.clone())
+            .map_err(EngineError::Checkpoint)?;
+        self.noise_rng = ChaChaRng::from_state(&st.noise_rng);
+        self.data_rng = ChaChaRng::from_state(&st.data_rng);
+        match (&mut self.sampler, &st.sampler_rng) {
+            (Some(s), Some(words)) => s.restore_rng(words),
+            (None, None) => {}
+            _ => {
+                return Err(EngineError::Checkpoint(
+                    "session and saved state disagree about Poisson sampling \
+                     (was the spec's privacy budget changed?)"
+                        .to_string(),
+                ));
+            }
+        }
+        match (&mut self.accountant, st.rdp_acc.is_empty()) {
+            (Some(a), false) => a.restore(&st.rdp_acc).map_err(EngineError::Checkpoint)?,
+            (None, true) => {}
+            _ => {
+                return Err(EngineError::Checkpoint(
+                    "session and saved state disagree about RDP accounting \
+                     (was the spec's privacy budget changed?)"
+                        .to_string(),
+                ));
+            }
+        }
+        Ok(())
     }
 }
 

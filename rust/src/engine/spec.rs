@@ -175,6 +175,12 @@ pub struct JobSpec {
     /// Training-set size (drives the sampling rate q).
     pub n_train: usize,
     pub seed: u64,
+    /// Data-parallel replica workers (1 = in-process single-replica
+    /// training).  Replicas shard the logical batch's microbatch chunks and
+    /// exchange clipped gradient sums / updated trainable parameters with
+    /// the leader; results are bit-identical for any value (see
+    /// `coordinator::distributed`).
+    pub replicas: usize,
     /// Run name for metric sinks; defaults to `model__method`.
     pub name: Option<String>,
 }
@@ -333,6 +339,12 @@ impl JobPlan {
             spec.steps,
             spec.seed
         ));
+        if spec.replicas > 1 {
+            s.push_str(&format!(
+                "  replicas     {} data-parallel workers (bit-identical to 1)\n",
+                spec.replicas
+            ));
+        }
         if spec.privacy.is_private() {
             s.push_str(&format!(
                 "  resolved     sigma = {:.4}, projected eps = {:.3}\n",
@@ -369,6 +381,7 @@ pub struct JobSpecBuilder {
     steps: u64,
     n_train: usize,
     seed: u64,
+    replicas: usize,
     name: Option<String>,
 }
 
@@ -390,6 +403,7 @@ impl JobSpecBuilder {
             steps: 100,
             n_train: 4096,
             seed: 0,
+            replicas: 1,
             name: None,
         }
     }
@@ -462,6 +476,12 @@ impl JobSpecBuilder {
         self
     }
 
+    /// Data-parallel replica workers; 1 (the default) trains in-process.
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
     pub fn name(mut self, name: &str) -> Self {
         self.name = Some(name.to_string());
         self
@@ -491,6 +511,15 @@ impl JobSpecBuilder {
             if !(full_lr.is_finite() && full_lr > 0.0) {
                 return Err(EngineError::spec("two-phase full_lr must be finite and positive"));
             }
+        }
+        if self.replicas == 0 {
+            return Err(EngineError::spec("replicas must be >= 1 (1 = in-process)"));
+        }
+        if self.replicas > 64 {
+            return Err(EngineError::spec(format!(
+                "replicas = {} is past the supported group size (64)",
+                self.replicas
+            )));
         }
         if matches!(self.method, Method::Lora | Method::Adapter)
             && self.eps.is_none()
@@ -546,6 +575,7 @@ impl JobSpecBuilder {
             steps: self.steps,
             n_train: self.n_train,
             seed: self.seed,
+            replicas: self.replicas,
             name: self.name,
         })
     }
@@ -566,6 +596,10 @@ mod tests {
         assert!(spec.privacy.is_private());
         assert_eq!(spec.phases().len(), 1);
         assert_eq!(spec.phases()[0].artifact, "cls-base__dp-bitfit");
+        assert_eq!(spec.replicas, 1, "default is in-process single-replica");
+        let spec = base().sigma(1.0).replicas(4).build().unwrap();
+        assert_eq!(spec.replicas, 4);
+        assert!(spec.plan().describe(&spec).contains("4 data-parallel workers"));
     }
 
     #[test]
@@ -599,6 +633,8 @@ mod tests {
         assert!(matches!(base().lr(0.0).build(), Err(EngineError::InvalidSpec(_))));
         assert!(matches!(base().lr(f64::NAN).build(), Err(EngineError::InvalidSpec(_))));
         assert!(matches!(base().clip_r(-0.1).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().replicas(0).build(), Err(EngineError::InvalidSpec(_))));
+        assert!(matches!(base().replicas(65).build(), Err(EngineError::InvalidSpec(_))));
         assert!(matches!(base().eps(8.0).delta(1.5).build(), Err(EngineError::InvalidSpec(_))));
         // adapters have no non-private artifact: require a budget
         assert!(matches!(

@@ -26,7 +26,11 @@
 //! same order* as the legacy path, so fused and legacy outputs are
 //! bit-identical — and because per-row work is reduced in fixed row order
 //! (see [`crate::runtime::pool`]), results are also bit-identical across
-//! thread counts.
+//! thread counts.  The data-parallel replica layer
+//! ([`crate::coordinator::distributed`]) runs these same kernels on every
+//! replica worker and extends the fixed-order-reduction discipline across
+//! the replica boundary, so the contract composes: any `FASTDP_THREADS`
+//! per replica x any replica count => one bit-identical result.
 
 pub mod fused;
 pub mod legacy;

@@ -38,7 +38,10 @@
 //!   implementations (PJRT artifacts; a dependency-free reference
 //!   interpreter), and `Engine`/`Session` (run_step, evaluate, checkpoint,
 //!   privacy_spent; two-phase X+BiTFiT composes inside one session).  The
-//!   session hot path clones nothing parameter-sized per step.
+//!   session hot path clones nothing parameter-sized per step.  Sessions
+//!   scale out with `JobSpec::replicas` (real data-parallel workers, bit
+//!   identical trajectory, measured wire traffic) and snapshot/resume
+//!   bit-identically via `save_state` / `Engine::resume_session`.
 //! * [`kernels`] — fused, workspace-reusing CPU kernels behind the
 //!   interpreter backend (forward + loss + backward + clip in one pass,
 //!   zero steady-state allocation), plus the preserved legacy scalar path
@@ -52,7 +55,12 @@
 //!   results at any thread count).
 //! * [`coordinator`] — orchestration substrates the engine composes:
 //!   optimizers, dataset assembly, workload construction, greedy decoding,
-//!   cached pretraining, checkpoints, metric sinks, the CLI translator.
+//!   cached pretraining, checkpoints (parameter vectors and full session
+//!   snapshots), metric sinks, the CLI translator, and
+//!   [`coordinator::distributed`] — the data-parallel replica layer:
+//!   leader/worker training over channels with per-chunk clipped gradient
+//!   sums reduced in fixed replica order (bit-identical for any replica
+//!   count) and the communication volume measured on the wire (§3.1).
 //! * [`dp`] — the differential-privacy substrate: RDP/GDP accountants,
 //!   noise calibration, clipping functions, Poisson sampler.
 //! * [`data`] — synthetic workload generators (GLUE/E2E/CIFAR/CelebA analogs).

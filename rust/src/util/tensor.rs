@@ -70,6 +70,22 @@ impl Tensor {
     }
 }
 
+/// Serialize f32s as little-endian bytes — the one byte layout shared by
+/// the replica wire protocol and the session-state disk format.
+pub fn f32s_to_le_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_le_bytes`]; the length must be a multiple of 4.
+pub fn f32s_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 4, 0, "f32 byte buffer length must be a multiple of 4");
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
 /// L2 vector norm of a flat f32 slice.
 pub fn l2_norm(xs: &[f32]) -> f64 {
     xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
@@ -109,5 +125,16 @@ mod tests {
         let mut y = vec![1.0f32, 2.0];
         axpy(&mut y, 2.0, &[10.0, 20.0]);
         assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_is_exact() {
+        let xs = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, f32::MAX, -123.456];
+        let bytes = f32s_to_le_bytes(&xs);
+        assert_eq!(bytes.len(), xs.len() * 4);
+        let back = f32s_from_le_bytes(&bytes);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&back), bits(&xs));
+        assert!(f32s_from_le_bytes(&[]).is_empty());
     }
 }

@@ -1,0 +1,146 @@
+//! Accountant correctness battery: the RDP and GDP accountants and the
+//! sigma calibrator are the layer a DP training system lives or dies on
+//! (Yu et al. 2021; Li et al. 2022), so their analytic properties are
+//! pinned here as tests rather than trusted:
+//!
+//! * epsilon is monotone **increasing** in `steps` and in `q`, and
+//!   monotone **decreasing** in `sigma` — for both accountants;
+//! * the two accountants agree within a documented tolerance band on the
+//!   paper's table regimes (GDP's CLT approximation is the tighter one;
+//!   we require `gdp <= 1.1 * rdp` and `rdp <= 3 * gdp`);
+//! * `calibrate_sigma` round-trips: the sigma it returns spends at most
+//!   the target epsilon and at least 95% of it, across a grid of
+//!   (q, T, eps*).
+
+use fastdp::dp::{calibrate, gdp, rdp};
+
+const DELTA: f64 = 1e-5;
+
+/// Representative (q, sigma, T) regimes from the paper's experiment
+/// tables: GLUE-scale text classification (n ~ 67k, B = 1000, ~3 epochs),
+/// E2E generation (n ~ 42k, B = 1024, ~10 epochs), CIFAR-scale vision
+/// (n = 50k, B = 1000, ~3 epochs), and the classic Abadi MNIST regime.
+fn paper_regimes() -> Vec<(f64, f64, u64)> {
+    vec![
+        (1000.0 / 67349.0, 0.85, 202),  // SST-2-like, eps ~ 8
+        (1000.0 / 67349.0, 1.35, 202),  // SST-2-like, eps ~ 3
+        (1024.0 / 42061.0, 0.9, 410),   // E2E-like, eps ~ 8
+        (1000.0 / 50000.0, 1.0, 150),   // CIFAR-like
+        (0.01, 4.0, 10_000),            // Abadi et al. MNIST
+    ]
+}
+
+#[test]
+fn epsilon_is_monotone_in_steps_for_both_accountants() {
+    for &(q, sigma) in &[(0.005, 0.7), (0.02, 1.0), (0.1, 2.0)] {
+        let steps = [50u64, 200, 800, 3200];
+        for w in steps.windows(2) {
+            let (t1, t2) = (w[0], w[1]);
+            let (r1, r2) = (rdp::epsilon(q, sigma, t1, DELTA), rdp::epsilon(q, sigma, t2, DELTA));
+            assert!(r2 > r1, "rdp not increasing in T: q={q} sigma={sigma} {t1}->{t2}: {r1} {r2}");
+            let (g1, g2) = (gdp::epsilon(q, sigma, t1, DELTA), gdp::epsilon(q, sigma, t2, DELTA));
+            assert!(g2 > g1, "gdp not increasing in T: q={q} sigma={sigma} {t1}->{t2}: {g1} {g2}");
+        }
+    }
+}
+
+#[test]
+fn epsilon_is_monotone_in_q_for_both_accountants() {
+    for &(sigma, steps) in &[(0.7f64, 200u64), (1.2, 1000), (2.5, 4000)] {
+        let qs = [0.002, 0.01, 0.05, 0.2];
+        for w in qs.windows(2) {
+            let (q1, q2) = (w[0], w[1]);
+            let (r1, r2) = (rdp::epsilon(q1, sigma, steps, DELTA), rdp::epsilon(q2, sigma, steps, DELTA));
+            assert!(r2 > r1, "rdp not increasing in q: sigma={sigma} T={steps} {q1}->{q2}: {r1} {r2}");
+            let (g1, g2) = (gdp::epsilon(q1, sigma, steps, DELTA), gdp::epsilon(q2, sigma, steps, DELTA));
+            assert!(g2 > g1, "gdp not increasing in q: sigma={sigma} T={steps} {q1}->{q2}: {g1} {g2}");
+        }
+    }
+}
+
+#[test]
+fn epsilon_is_monotone_decreasing_in_sigma_for_both_accountants() {
+    for &(q, steps) in &[(0.005f64, 500u64), (0.02, 1000), (0.1, 200)] {
+        let sigmas = [0.6, 0.9, 1.4, 2.2, 4.0];
+        for w in sigmas.windows(2) {
+            let (s1, s2) = (w[0], w[1]);
+            let (r1, r2) = (rdp::epsilon(q, s1, steps, DELTA), rdp::epsilon(q, s2, steps, DELTA));
+            assert!(r2 < r1, "rdp not decreasing in sigma: q={q} T={steps} {s1}->{s2}: {r1} {r2}");
+            let (g1, g2) = (gdp::epsilon(q, s1, steps, DELTA), gdp::epsilon(q, s2, steps, DELTA));
+            assert!(g2 < g1, "gdp not decreasing in sigma: q={q} T={steps} {s1}->{s2}: {g1} {g2}");
+        }
+    }
+}
+
+#[test]
+fn accountants_agree_on_the_paper_regimes() {
+    // Documented tolerance band: the GDP-CLT bound is expected to be the
+    // tighter of the two but never wildly different — within 10% above RDP
+    // at the top, within 3x below it at the bottom.  A violation means one
+    // accountant regressed, not that the band is too tight.
+    for (q, sigma, steps) in paper_regimes() {
+        let e_rdp = rdp::epsilon(q, sigma, steps, DELTA);
+        let e_gdp = gdp::epsilon(q, sigma, steps, DELTA);
+        assert!(e_rdp.is_finite() && e_rdp > 0.0, "rdp degenerate at q={q} sigma={sigma} T={steps}");
+        assert!(e_gdp.is_finite() && e_gdp > 0.0, "gdp degenerate at q={q} sigma={sigma} T={steps}");
+        assert!(
+            e_gdp <= e_rdp * 1.1 + 0.05,
+            "gdp {e_gdp} above band vs rdp {e_rdp} (q={q} sigma={sigma} T={steps})"
+        );
+        assert!(
+            e_rdp <= e_gdp * 3.0,
+            "rdp {e_rdp} above band vs gdp {e_gdp} (q={q} sigma={sigma} T={steps})"
+        );
+    }
+}
+
+#[test]
+fn streaming_accountant_matches_closed_form_on_paper_regimes() {
+    for (q, sigma, steps) in paper_regimes() {
+        // cap the loop so the 10k-step regime stays fast
+        let steps = steps.min(500);
+        let mut acc = rdp::RdpAccountant::new(DELTA);
+        acc.steps(q, sigma, steps);
+        let (streamed, _) = acc.epsilon();
+        let closed = rdp::epsilon(q, sigma, steps, DELTA);
+        assert!(
+            (streamed - closed).abs() < 1e-9,
+            "streamed {streamed} vs closed {closed} (q={q} sigma={sigma} T={steps})"
+        );
+    }
+}
+
+#[test]
+fn calibrate_sigma_round_trips_across_the_grid() {
+    for &q in &[0.005f64, 0.02, 0.1] {
+        for &steps in &[100u64, 500, 2000] {
+            for &target in &[1.0f64, 3.0, 8.0] {
+                let sigma = calibrate::calibrate_sigma(q, steps, target, DELTA);
+                assert!(sigma > 0.0 && sigma.is_finite());
+                let spent = rdp::epsilon(q, sigma, steps, DELTA);
+                assert!(
+                    spent <= target + 1e-6,
+                    "over budget: q={q} T={steps} eps*={target}: sigma={sigma} spends {spent}"
+                );
+                assert!(
+                    spent >= target * 0.95,
+                    "calibration too loose (must be within 5%): q={q} T={steps} \
+                     eps*={target}: sigma={sigma} spends {spent}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn calibrated_noise_is_monotone_in_the_budget() {
+    // a tighter budget must always demand more noise, everywhere on the grid
+    for &q in &[0.01f64, 0.05] {
+        for &steps in &[200u64, 1000] {
+            let s8 = calibrate::calibrate_sigma(q, steps, 8.0, DELTA);
+            let s3 = calibrate::calibrate_sigma(q, steps, 3.0, DELTA);
+            let s1 = calibrate::calibrate_sigma(q, steps, 1.0, DELTA);
+            assert!(s1 > s3 && s3 > s8, "q={q} T={steps}: {s1} {s3} {s8}");
+        }
+    }
+}

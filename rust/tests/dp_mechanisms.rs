@@ -1,0 +1,138 @@
+//! Statistical battery for the DP mechanisms below the accountant: the
+//! Poisson sampler (whose distribution the amplification analysis
+//! *assumes* — a biased sampler silently voids the epsilon guarantee) and
+//! the per-sample clipping functions (whose norm bound *is* the
+//! sensitivity the Gaussian noise is calibrated to).
+//!
+//! The statistical checks use a fixed seed, so they are deterministic:
+//! the 4-sigma confidence bands are about catching a broken generator or
+//! a broken sampler loop, and a seeded ChaCha stream lands inside them
+//! reproducibly.
+
+use fastdp::dp::clip::{clip_factor, clip_in_place, ClipMode, AUTO_S_STABILIZER};
+use fastdp::dp::sampler::PoissonSampler;
+use fastdp::util::rng::ChaChaRng;
+
+#[test]
+fn poisson_mean_batch_size_is_within_four_sigma_of_nq() {
+    let (n, q) = (20_000usize, 0.05f64);
+    let rounds = 100usize;
+    let mut s = PoissonSampler::new(n, q, 1234);
+    let mut total = 0usize;
+    for _ in 0..rounds {
+        total += s.sample().len();
+    }
+    let mean = total as f64 / rounds as f64;
+    let expect = s.expected_batch(); // n * q = 1000
+    // per-draw variance n*q*(1-q); the mean of `rounds` draws concentrates
+    let sigma_mean = (n as f64 * q * (1.0 - q) / rounds as f64).sqrt();
+    assert!(
+        (mean - expect).abs() <= 4.0 * sigma_mean,
+        "mean batch {mean} outside {expect} +- {:.2}",
+        4.0 * sigma_mean
+    );
+}
+
+#[test]
+fn poisson_same_seed_is_deterministic_draw_by_draw() {
+    let mut a = PoissonSampler::new(5000, 0.02, 42);
+    let mut b = PoissonSampler::new(5000, 0.02, 42);
+    for round in 0..20 {
+        assert_eq!(a.sample(), b.sample(), "diverged at round {round}");
+    }
+}
+
+#[test]
+fn poisson_disjoint_seeds_are_independent() {
+    // two independent q-samplers intersect in ~ n*q^2 indices per draw;
+    // correlated streams (e.g. a shared RNG) would blow far past the band
+    let (n, q) = (20_000usize, 0.05f64);
+    let rounds = 20usize;
+    let mut a = PoissonSampler::new(n, q, 7);
+    let mut b = PoissonSampler::new(n, q, 8);
+    let mut inter_total = 0usize;
+    let mut any_diff = false;
+    for _ in 0..rounds {
+        let sa = a.sample();
+        let sb = b.sample();
+        any_diff |= sa != sb;
+        // both index lists are sorted ascending: merge-count the overlap
+        let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+        while i < sa.len() && j < sb.len() {
+            match sa[i].cmp(&sb[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    inter += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        inter_total += inter;
+    }
+    assert!(any_diff, "disjoint seeds must not produce identical batches");
+    let mean_inter = inter_total as f64 / rounds as f64;
+    let expect = n as f64 * q * q; // 50
+    let sigma_mean = (n as f64 * q * q * (1.0 - q * q) / rounds as f64).sqrt();
+    assert!(
+        (mean_inter - expect).abs() <= 4.0 * sigma_mean,
+        "mean intersection {mean_inter} outside {expect} +- {:.2}",
+        4.0 * sigma_mean
+    );
+}
+
+#[test]
+fn clipped_norm_never_exceeds_r_for_any_mode() {
+    let mut rng = ChaChaRng::new(77, 0xC11F);
+    for case in 0..200 {
+        let dim = 1 + rng.below(128);
+        // norms spanning 1e-3 .. 1e3 around each radius
+        let scale = 10f64.powf(rng.uniform() * 6.0 - 3.0);
+        let g: Vec<f32> = (0..dim).map(|_| (rng.gaussian() * scale) as f32).collect();
+        let r = 0.05 + rng.uniform() * 5.0;
+        for mode in [ClipMode::Abadi, ClipMode::AutoS] {
+            let mut gc = g.clone();
+            let factor = clip_in_place(&mut gc, r, mode);
+            let norm: f64 = gc.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(
+                norm <= r * (1.0 + 1e-5),
+                "case {case} {mode:?}: post-clip norm {norm} > R = {r}"
+            );
+            // the returned factor is the one the formula promises
+            let sq: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum();
+            assert_eq!(factor.to_bits(), clip_factor(sq, r, mode).to_bits(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn abadi_is_the_identity_below_the_radius() {
+    // Abadi's min(R/||g||, 1) promises a fixed point whenever sq_norm <= R^2
+    for &(sq, r) in &[(0.0f64, 1.0f64), (1e-12, 0.5), (0.2499, 0.5), (0.25, 0.5), (99.9, 10.0)] {
+        assert!(sq <= r * r, "test case must sit below the radius");
+        assert_eq!(clip_factor(sq, r, ClipMode::Abadi), 1.0, "sq={sq} r={r}");
+    }
+    // and in-place clipping leaves the vector bit-identical there
+    let g0 = vec![0.3f32, -0.2, 0.1];
+    let mut g = g0.clone();
+    let factor = clip_in_place(&mut g, 1.0, ClipMode::Abadi);
+    assert_eq!(factor, 1.0);
+    assert_eq!(g, g0);
+}
+
+#[test]
+fn auto_s_never_promises_identity_but_always_bounds_sensitivity() {
+    // AUTO-S = R / (||g|| + gamma): strictly below 1 even at the radius...
+    let at_radius = clip_factor(1.0, 1.0, ClipMode::AutoS);
+    assert!(at_radius < 1.0);
+    assert!((at_radius - 1.0 / (1.0 + AUTO_S_STABILIZER)).abs() < 1e-12);
+    // ...scales tiny gradients UP (that is its point: no vanishing bias
+    // gradients)...
+    assert!(clip_factor(1e-6, 1.0, ClipMode::AutoS) > 1.0);
+    // ...and still never lets ||C g|| exceed R, anywhere
+    for &sq in &[1e-10f64, 1e-4, 0.01, 1.0, 25.0, 1e8] {
+        let c = clip_factor(sq, 1.0, ClipMode::AutoS);
+        assert!(c * sq.sqrt() <= 1.0 + 1e-9, "sq={sq}");
+    }
+}

@@ -219,6 +219,95 @@ fn image_and_lm_paths_run_end_to_end() {
 }
 
 #[test]
+fn session_state_roundtrips_across_the_two_phase_switch() {
+    // Save a complete session snapshot mid-phase-1 of an X+BiTFiT job,
+    // resume it in a fresh session, finish training: final parameters and
+    // privacy spent must be bit/value-identical to the uninterrupted run —
+    // the snapshot carries optimizer moments, RNG streams and the RDP
+    // accountant across the full/bitfit artifact switch.
+    let n = 256;
+    let total = 6u64;
+    let spec = JobSpec::builder("cls-base", Method::TwoPhase { full_steps: 3, full_lr: 1e-3 })
+        .task("sst2")
+        .sigma(1.0)
+        .delta(1e-5)
+        .lr(5e-3)
+        .batch(64)
+        .steps(total)
+        .n_train(n)
+        .seed(77)
+        .build()
+        .unwrap();
+    let mut engine = Engine::interpreter();
+    let train = engine.dataset("cls-base", "sst2", n, 41).unwrap();
+    let test = engine.dataset("cls-base", "sst2", 128, 42).unwrap();
+
+    // uninterrupted reference run
+    let mut straight = engine.session(&spec).unwrap();
+    for _ in 0..total {
+        straight.run_step(&train).unwrap();
+    }
+
+    // interrupted run: stop after 2 steps (mid-phase-1, still "full")
+    let mut first_half = engine.session(&spec).unwrap();
+    for _ in 0..2 {
+        first_half.run_step(&train).unwrap();
+    }
+    assert_eq!(first_half.phase_label(), "full", "save point must be inside phase 1");
+    let path = tmp("two-phase-state");
+    first_half.save_state(&path).unwrap();
+
+    let mut resumed = engine.resume_session(&spec, &path).unwrap();
+    assert_eq!(resumed.step(), 2);
+    assert_eq!(resumed.phase_label(), "full");
+    for _ in 2..total {
+        resumed.run_step(&train).unwrap();
+    }
+    assert_eq!(resumed.phase_label(), "bitfit", "run must have crossed the switch");
+
+    // params bit-identical, privacy value-identical
+    let a = straight.full_params();
+    let b = resumed.full_params();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&a), bits(&b), "resumed params must match the uninterrupted run");
+    let (pa, pb) = (straight.privacy_spent(), resumed.privacy_spent());
+    assert_eq!(pa.epsilon.to_bits(), pb.epsilon.to_bits());
+    assert_eq!(pa.steps, pb.steps);
+    // and evaluation agrees exactly
+    let (ea, eb) = (straight.evaluate(&test, 128).unwrap(), resumed.evaluate(&test, 128).unwrap());
+    assert_eq!(ea.metric_a.to_bits(), eb.metric_a.to_bits());
+    assert_eq!(ea.metric_b.to_bits(), eb.metric_b.to_bits());
+
+    // a wrong-model resume is a typed checkpoint error
+    let other = JobSpec::builder("lm-small", Method::BiTFiT)
+        .sigma(1.0)
+        .batch(32)
+        .steps(2)
+        .n_train(64)
+        .build()
+        .unwrap();
+    assert!(matches!(
+        engine.resume_session(&other, &path),
+        Err(EngineError::Checkpoint(_))
+    ));
+    // and so is resuming under a non-private spec (sampler mismatch)
+    let nonprivate = JobSpec::builder("cls-base", Method::TwoPhase { full_steps: 3, full_lr: 1e-3 })
+        .task("sst2")
+        .lr(5e-3)
+        .batch(64)
+        .steps(total)
+        .n_train(n)
+        .seed(77)
+        .build()
+        .unwrap();
+    assert!(matches!(
+        engine.resume_session(&nonprivate, &path),
+        Err(EngineError::Checkpoint(_))
+    ));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn unknown_model_is_a_typed_error() {
     let mut engine = Engine::interpreter();
     let spec = JobSpec::builder("gpt5-colossal", Method::BiTFiT)
