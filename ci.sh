@@ -56,7 +56,7 @@ if [ "$run_matrix" = 1 ]; then
     # (The test binaries are already built by the tier-1 run above, so each
     # cell only pays test execution time.)
     for threads in 1 4; do
-        for kernels in fused legacy; do
+        for kernels in fused legacy ghost; do
             echo "==> determinism matrix: FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels"
             FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels cargo test -q
         done
@@ -73,9 +73,18 @@ if [ "$run_bench" = 1 ]; then
     FASTDP_BENCH_QUICK=1 FASTDP_BENCH_STEPS=3 FASTDP_BENCH_THREADS=1,2 \
         FASTDP_BENCH_OUT="$out" cargo bench --bench throughput
     for key in '"bench"' '"points"' '"steps_per_sec"' '"rows_per_sec"' \
-               '"speedup_vs_scalar"' '"deterministic"' '"overhead_ratio"'; do
+               '"peak_scratch_bytes"' '"ghost_steps_per_sec"' '"ghost_within_tolerance"' \
+               '"speedup_vs_scalar"' '"deterministic"' '"overhead_ratio"' '"ghost"'; do
         grep -q "$key" "$out" || { echo "bench-smoke: $key missing from $out" >&2; exit 1; }
     done
+    # seed the in-repo perf trajectory from the bench stage if it has never
+    # been recorded; a later full sweep (cargo bench --bench throughput)
+    # overwrites it with full-size numbers
+    snap="../BENCH_step_throughput.json"
+    if [ ! -f "$snap" ]; then
+        cp "$out" "$snap"
+        echo "bench-smoke: seeded $snap (smoke-sized; run the full sweep to refresh)"
+    fi
     rm -f "$out"
     echo "bench-smoke OK"
 fi

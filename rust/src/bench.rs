@@ -222,17 +222,21 @@ pub fn memory_estimate(
 pub struct ThroughputPoint {
     pub model: String,
     pub method: String,
-    /// `"fused"` or `"legacy"`.
+    /// `"fused"`, `"ghost"` or `"legacy"`.
     pub kernels: String,
     pub threads: usize,
     pub sec_per_step: f64,
     pub steps_per_sec: f64,
     /// Microbatch rows per second (`batch / sec_per_step`).
     pub rows_per_sec: f64,
+    /// Analytical peak gradient-side scratch of the cell
+    /// (`InterpreterBackend::train_scratch_bytes`) — the per-cell memory
+    /// column reproducing Table 2's complexity claims.
+    pub peak_scratch_bytes: u64,
 }
 
-/// Per-(model, method) roll-up: best fused point vs the single-thread
-/// legacy scalar baseline.
+/// Per-(model, method) roll-up: best fused and ghost points vs the
+/// single-thread legacy scalar baseline.
 #[derive(Debug, Clone)]
 pub struct ThroughputSummary {
     pub model: String,
@@ -241,18 +245,27 @@ pub struct ThroughputSummary {
     pub best_threads: usize,
     pub scalar_steps_per_sec: f64,
     pub fused_steps_per_sec: f64,
+    /// Best ghost-tier throughput over the swept worker counts.
+    pub ghost_steps_per_sec: f64,
     /// `fused_steps_per_sec / scalar_steps_per_sec` (the pre-PR path).
     pub speedup_vs_scalar: f64,
     /// Were loss/grad/sq_norms bit-identical across all swept worker
-    /// counts *and* vs the legacy path?
+    /// counts *and* vs the legacy path (fused tier), and bit-identical
+    /// across worker counts within the ghost tier?
     pub deterministic: bool,
+    /// Did the ghost outputs match the fused oracle within the documented
+    /// relative tolerance?
+    pub ghost_within_tolerance: bool,
 }
 
-/// DP-vs-non-DP cost of one model at a fixed worker count (the paper's
-/// headline: for BiTFiT this ratio should stay close to 1).
+/// DP-vs-non-DP cost of one model under one kernel tier at a fixed worker
+/// count (the paper's headline: for BiTFiT this ratio should stay close
+/// to 1, and the ghost tier is what carries it at scale).
 #[derive(Debug, Clone)]
 pub struct DpOverhead {
     pub model: String,
+    /// Kernel tier the ratio was measured under.
+    pub kernels: String,
     pub threads: usize,
     pub dp_steps_per_sec: f64,
     pub nondp_steps_per_sec: f64,
@@ -324,8 +337,10 @@ pub fn interp_throughput(
     iters: usize,
 ) -> Result<ThroughputPoint, EngineError> {
     let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
-    let step = backend.load(&format!("{model}__{method}"))?;
+    let artifact = format!("{model}__{method}");
+    let step = backend.load(&artifact)?;
     let meta = step.meta().clone();
+    let peak_scratch_bytes = backend.train_scratch_bytes(&artifact, mode, threads)?;
     let inputs = synth_step_inputs(&backend, &meta, 7)?;
     step.run(&inputs)?; // warmup
     let iters = iters.max(1);
@@ -342,7 +357,44 @@ pub fn interp_throughput(
         sec_per_step,
         steps_per_sec: 1.0 / sec_per_step,
         rows_per_sec: meta.batch as f64 / sec_per_step,
+        peak_scratch_bytes,
     })
+}
+
+/// One train step's f32 outputs (loss, grad, sq_norms) as plain values —
+/// the tolerance-comparison twin of [`interp_output_bits`] used to check
+/// the ghost tier against the fused oracle.
+pub fn interp_outputs(
+    model: &str,
+    method: &str,
+    threads: usize,
+    mode: KernelMode,
+) -> Result<Vec<Vec<f32>>, EngineError> {
+    let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    let step = backend.load(&format!("{model}__{method}"))?;
+    let meta = step.meta().clone();
+    let inputs = synth_step_inputs(&backend, &meta, 7)?;
+    let out = step.run(&inputs)?;
+    Ok(out.iter().map(|t| t.as_f32().to_vec()).collect())
+}
+
+/// Largest element-wise relative difference between two output sets
+/// (absolute floor 1e-6 so zeros compare cleanly).
+pub fn max_rel_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    let mut worst = 0.0f64;
+    for (ta, tb) in a.iter().zip(b) {
+        for (&x, &y) in ta.iter().zip(tb) {
+            let scale = (x.abs().max(y.abs()) as f64).max(1e-6);
+            worst = worst.max((x as f64 - y as f64).abs() / scale);
+        }
+    }
+    worst
+}
+
+/// Bit patterns of a value set from [`interp_outputs`] (f32 copies are
+/// bitwise-exact, so bits derived from values are the step's true bits).
+pub fn output_bits_of(values: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    values.iter().map(|t| t.iter().map(|v| v.to_bits()).collect()).collect()
 }
 
 /// Bit patterns of one train step's outputs (loss, grad, sq_norms) — the
@@ -353,12 +405,7 @@ pub fn interp_output_bits(
     threads: usize,
     mode: KernelMode,
 ) -> Result<Vec<Vec<u32>>, EngineError> {
-    let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
-    let step = backend.load(&format!("{model}__{method}"))?;
-    let meta = step.meta().clone();
-    let inputs = synth_step_inputs(&backend, &meta, 7)?;
-    let out = step.run(&inputs)?;
-    Ok(out.iter().map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect()).collect())
+    Ok(output_bits_of(&interp_outputs(model, method, threads, mode)?))
 }
 
 /// Render the `BENCH_step_throughput.json` document.
@@ -377,6 +424,7 @@ pub fn throughput_json(
             ("sec_per_step", Json::Num(p.sec_per_step)),
             ("steps_per_sec", Json::Num(p.steps_per_sec)),
             ("rows_per_sec", Json::Num(p.rows_per_sec)),
+            ("peak_scratch_bytes", Json::Num(p.peak_scratch_bytes as f64)),
         ])
     };
     let summary = |s: &ThroughputSummary| {
@@ -386,13 +434,16 @@ pub fn throughput_json(
             ("best_threads", Json::Num(s.best_threads as f64)),
             ("scalar_steps_per_sec", Json::Num(s.scalar_steps_per_sec)),
             ("fused_steps_per_sec", Json::Num(s.fused_steps_per_sec)),
+            ("ghost_steps_per_sec", Json::Num(s.ghost_steps_per_sec)),
             ("speedup_vs_scalar", Json::Num(s.speedup_vs_scalar)),
             ("deterministic", Json::Bool(s.deterministic)),
+            ("ghost_within_tolerance", Json::Bool(s.ghost_within_tolerance)),
         ])
     };
     let overhead = |o: &DpOverhead| {
         json::obj(vec![
             ("model", Json::Str(o.model.clone())),
+            ("kernels", Json::Str(o.kernels.clone())),
             ("threads", Json::Num(o.threads as f64)),
             ("dp_steps_per_sec", Json::Num(o.dp_steps_per_sec)),
             ("nondp_steps_per_sec", Json::Num(o.nondp_steps_per_sec)),
@@ -437,8 +488,16 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
     if points.is_empty() {
         return Err("points array is empty".to_string());
     }
-    let point_keys =
-        ["model", "method", "kernels", "threads", "sec_per_step", "steps_per_sec", "rows_per_sec"];
+    let point_keys = [
+        "model",
+        "method",
+        "kernels",
+        "threads",
+        "sec_per_step",
+        "steps_per_sec",
+        "rows_per_sec",
+        "peak_scratch_bytes",
+    ];
     for p in points {
         for key in point_keys {
             field(p, key)?;
@@ -454,8 +513,10 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
         "best_threads",
         "scalar_steps_per_sec",
         "fused_steps_per_sec",
+        "ghost_steps_per_sec",
         "speedup_vs_scalar",
         "deterministic",
+        "ghost_within_tolerance",
     ];
     for s in summary {
         for key in summary_keys {
@@ -467,8 +528,14 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
         .and_then(|o| o.as_arr())
         .ok_or_else(|| "missing dp_overhead array".to_string())?;
     for o in overhead {
-        for key in ["model", "threads", "dp_steps_per_sec", "nondp_steps_per_sec", "overhead_ratio"]
-        {
+        for key in [
+            "model",
+            "kernels",
+            "threads",
+            "dp_steps_per_sec",
+            "nondp_steps_per_sec",
+            "overhead_ratio",
+        ] {
             field(o, key)?;
         }
     }
@@ -502,6 +569,7 @@ mod tests {
             sec_per_step: 0.5,
             steps_per_sec: 2.0,
             rows_per_sec: 64.0,
+            peak_scratch_bytes: 6084 * 8,
         }];
         let summaries = vec![ThroughputSummary {
             model: "cls-base".into(),
@@ -509,11 +577,14 @@ mod tests {
             best_threads: 2,
             scalar_steps_per_sec: 0.5,
             fused_steps_per_sec: 2.0,
+            ghost_steps_per_sec: 2.1,
             speedup_vs_scalar: 4.0,
             deterministic: true,
+            ghost_within_tolerance: true,
         }];
         let overheads = vec![DpOverhead {
             model: "cls-base".into(),
+            kernels: "ghost".into(),
             threads: 2,
             dp_steps_per_sec: 2.0,
             nondp_steps_per_sec: 2.2,
@@ -556,11 +627,20 @@ mod tests {
         assert!(p.sec_per_step > 0.0 && p.sec_per_step.is_finite());
         assert!(p.steps_per_sec > 0.0 && p.rows_per_sec > p.steps_per_sec);
         assert_eq!(p.kernels, "fused");
+        assert!(p.peak_scratch_bytes > 0);
         // same inputs, different worker counts and kernels: identical bits
         let a = interp_output_bits("cls-base", "dp-bitfit", 1, KernelMode::Fused).unwrap();
         let b = interp_output_bits("cls-base", "dp-bitfit", 2, KernelMode::Fused).unwrap();
         let c = interp_output_bits("cls-base", "dp-bitfit", 1, KernelMode::Legacy).unwrap();
         assert_eq!(a, b);
         assert_eq!(a, c);
+        // ghost: bit-identical across worker counts within the tier, and
+        // within tolerance of the fused oracle
+        let g1 = interp_output_bits("cls-base", "dp-bitfit", 1, KernelMode::Ghost).unwrap();
+        let g2 = interp_output_bits("cls-base", "dp-bitfit", 2, KernelMode::Ghost).unwrap();
+        assert_eq!(g1, g2);
+        let f = interp_outputs("cls-base", "dp-bitfit", 1, KernelMode::Fused).unwrap();
+        let g = interp_outputs("cls-base", "dp-bitfit", 1, KernelMode::Ghost).unwrap();
+        assert!(max_rel_diff(&f, &g) < 1e-4, "ghost diverges: {}", max_rel_diff(&f, &g));
     }
 }

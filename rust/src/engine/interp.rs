@@ -26,14 +26,24 @@
 //!
 //! ## Execution
 //!
-//! Rows run through the fused kernels of [`crate::kernels`] on the scoped
-//! pool of [`crate::runtime::pool`]: per-sample gradients land in per-row
-//! shards and are reduced in fixed row order, so outputs are bit-identical
-//! for any `FASTDP_THREADS` value (and to the pre-optimization scalar path,
-//! selectable with `FASTDP_KERNELS=legacy`).  A loaded step caches its
-//! trainable-slot table, its frozen/train -> full scatter plan, and all
-//! scratch buffers, so the steady state does no per-row heap allocation
-//! and never re-merges parameters from scratch.
+//! Rows run through the kernel tier of [`crate::kernels`] on the
+//! persistent pool of [`crate::runtime::pool`].  The default **fused**
+//! tier writes each row's per-sample gradient straight into its per-row
+//! shard (scaled in place by the clip factor) and reduces shards in fixed
+//! row order, so outputs are bit-identical for any `FASTDP_THREADS` value
+//! (and to the pre-optimization scalar path, `FASTDP_KERNELS=legacy`).
+//! The **ghost** tier (`FASTDP_KERNELS=ghost`) never materializes a
+//! per-sample gradient at all: phase A computes each row's squared norm
+//! analytically from stored activation/output-gradient factors (folding
+//! the clip factor into them), and phase B accumulates the clipped sum
+//! straight into the shared gradient — serially over rows for bias/embed
+//! leaves, pooled over *matrix rows* for weight leaves, every entry summed
+//! in fixed (row, position) order, so ghost outputs are bit-identical
+//! across thread counts too (and match fused to floating-point tolerance;
+//! see `tests/ghost_equivalence.rs`).  A loaded step caches its
+//! trainable-slot table, its frozen/train -> full scatter plan, its ghost
+//! factor layout, and all scratch buffers, so the steady state does no
+//! per-row heap allocation and never re-merges parameters from scratch.
 //!
 //! Gradients are computed analytically in f64 and verified against finite
 //! differences in the unit tests below.
@@ -44,7 +54,9 @@ use std::rc::Rc;
 
 use crate::coordinator::workloads::ModelShape;
 use crate::dp::clip::{clip_factor, ClipMode};
-use crate::kernels::{fused, legacy, loss, KernelMode, NetView, TrainSlots, Workspace};
+use crate::kernels::{
+    fused, ghost, legacy, loss, GhostPlan, KernelMode, NetView, TrainSlots, Workspace,
+};
 use crate::runtime::pool;
 use crate::runtime::{ArtifactMeta, IoSpec, Layout, LayoutLeaf};
 use crate::util::rng::ChaChaRng;
@@ -137,6 +149,47 @@ impl InterpreterBackend {
         self.models.borrow_mut().insert(name.to_string(), m.clone());
         Ok(m)
     }
+
+    /// Analytical peak *gradient-side* scratch (bytes) of one train
+    /// artifact under a kernel tier — the buffers Table 2's memory column
+    /// is about: per-row gradient shards (fused) or ghost factor rows,
+    /// plus the shared gradient accumulator and per-worker workspaces.
+    /// Used by `benches/throughput.rs` for the per-cell
+    /// `peak_scratch_bytes` column.
+    pub fn train_scratch_bytes(
+        &self,
+        artifact: &str,
+        mode: KernelMode,
+        threads: usize,
+    ) -> Result<u64, EngineError> {
+        let (model, kind) = parse_artifact(artifact)?;
+        let m = self.model_ref(&model)?;
+        let meta = m.meta_for(artifact, &kind)?;
+        if meta.step != "train" {
+            return Err(EngineError::backend(NAME, "train_scratch_bytes: train artifacts only"));
+        }
+        let slots = m.train_slots_packed(&meta.subset);
+        let (b, pt) = (meta.batch as u64, meta.pt as u64);
+        // one worker workspace: feat/dfeat + hpre/hact/dh + logits/dlogits
+        let ws = (2 * m.feat_dim() + 3 * m.h + 2 * m.out) as u64;
+        let t = threads.max(1) as u64;
+        let words = match mode {
+            // per-row g + grad_sum, single-threaded (plus per-row churn)
+            KernelMode::Legacy => 2 * pt + ws,
+            KernelMode::Fused => b * pt + pt + t * ws,
+            KernelMode::Ghost => b * ghost_plan(&m, &slots).row_stride as u64 + pt + t * ws,
+        };
+        Ok(words * 8)
+    }
+}
+
+/// Build the ghost factor layout for a model + trainable subset (shared by
+/// `RefStep::new` and the analytic scratch estimator above).
+fn ghost_plan(m: &RefModel, slots: &TrainSlots) -> GhostPlan {
+    let token = matches!(m.kind, RefKind::Cls | RefKind::Lm);
+    let npos = if m.kind == RefKind::Lm { m.t } else { 1 };
+    let ids = if token && slots.embed.is_some() { m.t } else { 0 };
+    GhostPlan::new(m.h, m.out, m.feat_dim(), npos, slots, token, ids)
 }
 
 impl Backend for InterpreterBackend {
@@ -649,20 +702,25 @@ struct RowOut {
 struct Scratch {
     /// Merged full parameter vector (refilled in place via the scatter plan).
     full: Vec<f32>,
-    /// Per-row clipped-gradient shards (`batch * pt`).
+    /// Per-row clipped-gradient shards (`batch * pt`; fused tier only).
     partials: Vec<f64>,
+    /// Per-row ghost factor rows (`batch * plan.row_stride`; ghost tier).
+    factors: Vec<f64>,
     /// f64 gradient accumulator for the fixed-order reduction.
     grad_sum: Vec<f64>,
     /// Per-row kernel results.
     rows: Vec<RowOut>,
     /// One workspace per worker thread.
     workspaces: Vec<Workspace>,
+    /// Cached decode logits buffer (`batch * vocab`), fully overwritten by
+    /// the pooled shards each call.
+    decode_out: Vec<f32>,
 }
 
 impl Scratch {
-    fn ensure_workspaces(&mut self, n: usize, feat: usize, h: usize, out: usize, g_len: usize) {
+    fn ensure_workspaces(&mut self, n: usize, feat: usize, h: usize, out: usize) {
         while self.workspaces.len() < n {
-            self.workspaces.push(Workspace::new(feat, h, out, g_len));
+            self.workspaces.push(Workspace::new(feat, h, out));
         }
     }
 }
@@ -680,6 +738,9 @@ struct RefStep {
     threads: usize,
     /// Kernel mode, resolved once at load (override or `FASTDP_KERNELS`).
     kernels: KernelMode,
+    /// Per-row factor layout of the ghost tier (train steps loaded with
+    /// `KernelMode::Ghost` only).
+    ghost: Option<GhostPlan>,
     scratch: RefCell<Scratch>,
 }
 
@@ -695,13 +756,20 @@ impl RefStep {
         } else {
             (TrainSlots::default(), Vec::new())
         };
+        let kernels = kernels.unwrap_or_else(KernelMode::from_env);
+        let ghost = if meta.step == "train" && kernels == KernelMode::Ghost {
+            Some(ghost_plan(&model, &slots))
+        } else {
+            None
+        };
         RefStep {
             model,
             meta,
             slots,
             merge_plan,
             threads: threads.unwrap_or_else(pool::default_threads),
-            kernels: kernels.unwrap_or_else(KernelMode::from_env),
+            kernels,
+            ghost,
             scratch: RefCell::new(Scratch::default()),
         }
     }
@@ -730,8 +798,10 @@ impl RefStep {
     }
 
     fn run_train(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
-        if self.kernels == KernelMode::Legacy {
-            return self.run_train_legacy(inputs);
+        match self.kernels {
+            KernelMode::Legacy => return self.run_train_legacy(inputs),
+            KernelMode::Ghost => return self.run_train_ghost(inputs),
+            KernelMode::Fused => {}
         }
         let m = &*self.model;
         let frozen = inputs[0].as_f32();
@@ -753,7 +823,7 @@ impl RefStep {
         if s.rows.len() < b {
             s.rows.resize(b, RowOut::default());
         }
-        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out, pt);
+        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out);
         s.grad_sum.clear();
         s.grad_sum.resize(pt, 0.0);
         for r in &self.merge_plan {
@@ -776,30 +846,34 @@ impl RefStep {
                 if mask[row] <= 0.0 {
                     return RowOut::default();
                 }
-                ws.zero_grad();
+                // the row's per-sample gradient accumulates directly in
+                // its shard and is clip-scaled there — no second copy
+                for v in shard.iter_mut() {
+                    *v = 0.0;
+                }
                 let row_loss = match kind {
                     RefKind::Cls => {
                         let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
                         let label = (y.as_i32()[row].max(0) as usize) % out_w;
-                        fused::row_cls(&net, &slots, ws, toks, label)
+                        fused::row_cls(&net, &slots, ws, shard, toks, label)
                     }
                     RefKind::Lm => {
                         let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
                         let targets = &y.as_i32()[row * t_len..(row + 1) * t_len];
-                        fused::row_lm(&net, &slots, ws, toks, targets)
+                        fused::row_lm(&net, &slots, ws, shard, toks, targets)
                     }
                     RefKind::Vit => {
                         let pix = &x.as_f32()[row * npix..(row + 1) * npix];
                         let label = (y.as_i32()[row].max(0) as usize) % out_w;
-                        fused::row_vit(&net, &slots, ws, pix, label)
+                        fused::row_vit(&net, &slots, ws, shard, pix, label)
                     }
                     RefKind::Cnn => {
                         let pix = &x.as_f32()[row * npix..(row + 1) * npix];
                         let targets = &y.as_f32()[row * out_w..(row + 1) * out_w];
-                        fused::row_cnn(&net, &slots, ws, pix, targets)
+                        fused::row_cnn(&net, &slots, ws, shard, pix, targets)
                     }
                 };
-                let sq = fused::clip_into(&ws.g, dp, clip_r, mode, shard);
+                let sq = fused::clip_in_place(shard, dp, clip_r, mode);
                 RowOut { a: row_loss, b: sq, active: true }
             },
         );
@@ -818,6 +892,193 @@ impl RefStep {
                 *gs += v;
             }
             loss_sum += ro.a * mask[row] as f64;
+        }
+        Ok(vec![
+            Tensor::scalar_f32(loss_sum as f32),
+            Tensor::f32(vec![pt], s.grad_sum.iter().map(|&v| v as f32).collect()),
+            Tensor::f32(vec![b], sq_norms),
+        ])
+    }
+
+    /// The ghost-norm book-keeping path (`FASTDP_KERNELS=ghost`; see
+    /// [`crate::kernels::ghost`]): per-sample squared norms computed
+    /// analytically from stored activation/output-gradient factors, then a
+    /// clipped accumulation straight into the shared gradient sum — the
+    /// O(B·pt) per-row gradient buffer of the fused tier is never
+    /// allocated.  Phase A parallelizes over rows (each row owns its
+    /// factor shard); phase B accumulates bias/embed leaves serially in
+    /// row order and weight leaves pooled over matrix rows, every entry
+    /// summed in fixed (row, position) order — bit-identical across
+    /// `FASTDP_THREADS`.
+    fn run_train_ghost(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &*self.model;
+        let plan = self.ghost.as_ref().expect("ghost plan built at load");
+        let frozen = inputs[0].as_f32();
+        let train = inputs[1].as_f32();
+        let x = inputs[2];
+        let y = inputs[3];
+        let mask = inputs[4].as_f32();
+        let clip_r = inputs[5].item_f32() as f64;
+        let pt = self.meta.pt;
+        let b = self.meta.batch;
+        let dp = self.is_dp();
+        let mode = self.clip_mode();
+        let threads = self.resolve_threads(b);
+        let rs = plan.row_stride;
+
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.full.resize(m.layout.n_params, 0.0);
+        s.factors.resize(b * rs, 0.0);
+        if s.rows.len() < b {
+            s.rows.resize(b, RowOut::default());
+        }
+        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out);
+        s.grad_sum.clear();
+        s.grad_sum.resize(pt, 0.0);
+        for r in &self.merge_plan {
+            let src = if r.from_train { train } else { frozen };
+            s.full[r.dst..r.dst + r.len].copy_from_slice(&src[r.src..r.src + r.len]);
+        }
+        let net = m.net_view(&s.full);
+        let slots = self.slots;
+        let ctx = ghost::GhostCtx { net: &net, slots: &slots, plan, dp, clip_r, mode };
+        let kind = m.kind;
+        let t_len = m.t;
+        let out_w = m.out;
+        let npix = m.img * m.img * 3;
+        // phase A: per-row factors + analytic norms, one factor shard per row
+        pool::for_each_sharded(
+            b,
+            &mut s.workspaces[..threads],
+            &mut s.rows[..b],
+            &mut s.factors[..b * rs],
+            rs,
+            |row, ws, rb| {
+                if mask[row] <= 0.0 {
+                    return RowOut::default();
+                }
+                let (row_loss, sq) = match kind {
+                    RefKind::Cls => {
+                        let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                        let label = (y.as_i32()[row].max(0) as usize) % out_w;
+                        ghost::row_cls(&ctx, ws, toks, label, rb)
+                    }
+                    RefKind::Lm => {
+                        let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                        let targets = &y.as_i32()[row * t_len..(row + 1) * t_len];
+                        ghost::row_lm(&ctx, ws, toks, targets, rb)
+                    }
+                    RefKind::Vit => {
+                        let pix = &x.as_f32()[row * npix..(row + 1) * npix];
+                        let label = (y.as_i32()[row].max(0) as usize) % out_w;
+                        ghost::row_vit(&ctx, ws, pix, label, rb)
+                    }
+                    RefKind::Cnn => {
+                        let pix = &x.as_f32()[row * npix..(row + 1) * npix];
+                        let targets = &y.as_f32()[row * out_w..(row + 1) * out_w];
+                        ghost::row_cnn(&ctx, ws, pix, targets, rb)
+                    }
+                };
+                RowOut { a: row_loss, b: sq, active: true }
+            },
+        );
+        // phase B: clipped accumulation from stored factors
+        let mut loss_sum = 0.0f64;
+        let mut sq_norms = vec![0.0f32; b];
+        {
+            let factors: &[f64] = &s.factors;
+            let rows: &[RowOut] = &s.rows;
+            let grad_sum = &mut s.grad_sum;
+            // serial over rows in fixed order: loss/norm outputs, the
+            // exact bias-leaf gradients, and the embedding scatter
+            for (row, ro) in rows.iter().take(b).enumerate() {
+                if !ro.active {
+                    continue;
+                }
+                sq_norms[row] = ro.b as f32;
+                loss_sum += ro.a * mask[row] as f64;
+                let rb = plan.row(factors, row);
+                if let Some(off) = slots.head_b {
+                    for (gk, &v) in grad_sum[off..off + out_w].iter_mut().zip(plan.bias_d(rb)) {
+                        *gk += v;
+                    }
+                }
+                if let Some(off) = slots.enc_b {
+                    for (gj, &v) in grad_sum[off..off + m.h].iter_mut().zip(plan.bias_dh(rb)) {
+                        *gj += v;
+                    }
+                }
+                if let Some(off) = slots.embed {
+                    for k in 0..plan.n_ids(rb) {
+                        let tok = plan.id(rb, k);
+                        let p = if plan.npos > 1 { k } else { 0 };
+                        let df = plan.dfeat(rb, p);
+                        let ge = &mut grad_sum[off + tok * m.d..off + (tok + 1) * m.d];
+                        for (gv, &v) in ge.iter_mut().zip(df) {
+                            *gv += v;
+                        }
+                    }
+                }
+            }
+            // pooled weight leaves: one task per matrix row; every entry
+            // sums its (row, position) contributions in fixed order, so
+            // the result is independent of the worker count
+            if let Some(off) = slots.head_w {
+                let h = m.h;
+                let hw = &mut grad_sum[off..off + h * out_w];
+                let mut unit = vec![(); h];
+                let mut ctxs = vec![(); threads];
+                pool::for_each_sharded(h, &mut ctxs, &mut unit, hw, out_w, |j, _c, shard| {
+                    for (row, ro) in rows.iter().take(b).enumerate() {
+                        if !ro.active {
+                            continue;
+                        }
+                        let rb = plan.row(factors, row);
+                        for p in 0..plan.np(rb) {
+                            let aj = plan.a(rb, p)[j];
+                            if aj == 0.0 {
+                                continue;
+                            }
+                            for (sv, &dv) in shard.iter_mut().zip(plan.d(rb, p)) {
+                                *sv += aj * dv;
+                            }
+                        }
+                    }
+                });
+            }
+            if let Some(off) = slots.enc_w {
+                let fw = plan.fw;
+                let h = m.h;
+                let ew = &mut grad_sum[off..off + fw * h];
+                let mut unit = vec![(); fw];
+                let mut ctxs = vec![(); threads];
+                // image models re-read pixel features from the batch (the
+                // same f32 -> f64 widening the forward pass used); token
+                // models read the stored pooled/token features
+                let x_pix: &[f32] = if plan.store_f { &[] } else { x.as_f32() };
+                pool::for_each_sharded(fw, &mut ctxs, &mut unit, ew, h, |i, _c, shard| {
+                    for (row, ro) in rows.iter().take(b).enumerate() {
+                        if !ro.active {
+                            continue;
+                        }
+                        let rb = plan.row(factors, row);
+                        for p in 0..plan.np(rb) {
+                            let fi = if plan.store_f {
+                                plan.f(rb, p)[i]
+                            } else {
+                                x_pix[row * fw + i] as f64
+                            };
+                            if fi == 0.0 {
+                                continue;
+                            }
+                            for (sv, &dv) in shard.iter_mut().zip(plan.dh(rb, p)) {
+                                *sv += fi * dv;
+                            }
+                        }
+                    }
+                });
+            }
         }
         Ok(vec![
             Tensor::scalar_f32(loss_sum as f32),
@@ -953,7 +1214,7 @@ impl RefStep {
         if s.rows.len() < b {
             s.rows.resize(b, RowOut::default());
         }
-        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out, 0);
+        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out);
         let net = m.net_view(full);
         let kind = m.kind;
         let t_len = m.t;
@@ -1041,16 +1302,20 @@ impl RefStep {
         if s.rows.len() < b {
             s.rows.resize(b, RowOut::default());
         }
-        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out, 0);
+        s.ensure_workspaces(threads, m.feat_dim(), m.h, m.out);
         let net = m.net_view(full);
         let t_len = m.t;
         let vocab = m.vocab;
-        let mut logits_out = vec![0.0f32; b * vocab];
+        // the pooled shards write into the step-cached buffer (resized
+        // once, every element overwritten each call); the returned tensor
+        // clones it — one memcpy, not a fresh zero-filled b*vocab
+        // allocation per call
+        s.decode_out.resize(b * vocab, 0.0);
         pool::for_each_sharded(
             b,
             &mut s.workspaces[..threads],
             &mut s.rows[..b],
-            &mut logits_out,
+            &mut s.decode_out[..b * vocab],
             vocab,
             |row, ws, lrow| {
                 let p = (pos[row].max(0) as usize).min(t_len - 1);
@@ -1062,7 +1327,7 @@ impl RefStep {
                 RowOut::default()
             },
         );
-        Ok(vec![Tensor::f32(vec![b, vocab], logits_out)])
+        Ok(vec![Tensor::f32(vec![b, vocab], s.decode_out.clone())])
     }
 }
 
@@ -1413,6 +1678,44 @@ mod tests {
             b.load("cls-base__dp-bitfit__banana"),
             Err(EngineError::UnknownArtifact { .. })
         ));
+    }
+
+    #[test]
+    fn ghost_scratch_beats_fused_scratch() {
+        let b = InterpreterBackend::new();
+        for artifact in [
+            "cls-base__dp-bitfit",
+            "cls-base__dp-full-opacus",
+            "vit-c10__dp-full-opacus",
+            "cnn-small__dp-bitfit",
+        ] {
+            let fused = b.train_scratch_bytes(artifact, KernelMode::Fused, 4).unwrap();
+            let ghost = b.train_scratch_bytes(artifact, KernelMode::Ghost, 4).unwrap();
+            let legacy = b.train_scratch_bytes(artifact, KernelMode::Legacy, 1).unwrap();
+            assert!(ghost < fused, "{artifact}: ghost {ghost} >= fused {fused}");
+            assert!(legacy < fused, "{artifact}: legacy {legacy} >= fused {fused}");
+        }
+        // eval artifacts have no train scratch to estimate
+        assert!(b.train_scratch_bytes("lm-small__eval", KernelMode::Fused, 1).is_err());
+    }
+
+    #[test]
+    fn ghost_step_matches_fused_within_tolerance() {
+        // one quick in-module sanity check (the full property suite lives
+        // in tests/ghost_equivalence.rs)
+        let mut bf = InterpreterBackend::with_config(Some(2), Some(KernelMode::Fused));
+        let mut bg = InterpreterBackend::with_config(Some(2), Some(KernelMode::Ghost));
+        let sf = bf.load("cls-base__dp-bitfit").unwrap();
+        let sg = bg.load("cls-base__dp-bitfit").unwrap();
+        let inputs = train_inputs(&bf, sf.as_ref(), 8, 23);
+        let of = sf.run(&inputs).unwrap();
+        let og = sg.run(&inputs).unwrap();
+        for (tf, tg) in of.iter().zip(&og) {
+            for (&a, &b) in tf.as_f32().iter().zip(tg.as_f32()) {
+                let scale = a.abs().max(b.abs()).max(1e-6);
+                assert!(((a - b).abs() / scale) < 1e-4, "ghost {b} vs fused {a}");
+            }
+        }
     }
 
     #[test]

@@ -2,9 +2,16 @@
 //!
 //! One call to a `row_*` kernel runs the full per-sample pipeline for one
 //! microbatch row — feature load, forward, loss, backward into the
-//! per-sample gradient `ws.g` — and [`clip_into`] fuses the squared-norm /
-//! clip-factor / scale pass that follows.  No kernel here allocates: all
-//! scratch lives in the caller's [`Workspace`].
+//! caller's per-sample gradient buffer `g` (the row's shard of the
+//! per-row partials) — and [`clip_in_place`] fuses the squared-norm /
+//! clip-factor / scale pass that follows, scaling `g` where it sits.  No
+//! kernel here allocates: all scratch lives in the caller's [`Workspace`]
+//! and the caller-owned `g`.
+//!
+//! The forward/backward building blocks ([`pool_tokens`], [`load_token`],
+//! [`load_pixels`], [`forward`], [`dh_from_dlogits`], [`dfeat_from_dh`])
+//! are shared with the ghost tier ([`super::ghost`]), which runs them
+//! without any `g` at all.
 //!
 //! **Bit-compat contract:** every kernel performs the same floating-point
 //! operations in the same order as [`super::legacy`], so fused and legacy
@@ -108,31 +115,12 @@ pub fn forward(net: &NetView, ws: &mut Workspace) {
     }
 }
 
-/// Backprop `ws.dlogits` through head + hidden, accumulating into `ws.g`;
-/// computes `ws.dfeat` (and returns `true`) when the embedding needs it.
-pub fn backward(net: &NetView, slots: &TrainSlots, ws: &mut Workspace, want_dfeat: bool) -> bool {
+/// `ws.dh = d(loss)/d(hidden)` from `ws.dlogits`, with the ReLU gate
+/// applied (gated positions store exact 0.0).  Shared by the fused
+/// backward below and the ghost tier's factor pass.
+pub fn dh_from_dlogits(net: &NetView, ws: &mut Workspace) {
     let h = net.h;
     let out = net.out;
-    if let Some(off) = slots.head_b {
-        for (g, &d) in ws.g[off..off + out].iter_mut().zip(&ws.dlogits) {
-            *g += d;
-        }
-    }
-    if let Some(off) = slots.head_w {
-        for j in 0..h {
-            if ws.hact[j] == 0.0 {
-                continue;
-            }
-            let a = ws.hact[j];
-            let g = &mut ws.g[off + j * out..off + (j + 1) * out];
-            for (gk, &d) in g.iter_mut().zip(&ws.dlogits) {
-                *gk += a * d;
-            }
-        }
-    }
-    if !slots.needs_dh(want_dfeat) {
-        return false;
-    }
     for j in 0..h {
         if ws.hpre[j] <= 0.0 {
             ws.dh[j] = 0.0; // relu gate
@@ -145,9 +133,58 @@ pub fn backward(net: &NetView, slots: &TrainSlots, ws: &mut Workspace, want_dfea
         }
         ws.dh[j] = acc;
     }
+}
+
+/// `ws.dfeat = d(loss)/d(features)` from `ws.dh` (the embedding-scatter
+/// input).  Shared with the ghost tier.
+pub fn dfeat_from_dh(net: &NetView, ws: &mut Workspace) {
+    let h = net.h;
+    for (i, df) in ws.dfeat.iter_mut().enumerate() {
+        let row = &net.enc_w[i * h..(i + 1) * h];
+        let mut acc = 0.0f64;
+        for (&w, &d) in row.iter().zip(&ws.dh) {
+            acc += w as f64 * d;
+        }
+        *df = acc;
+    }
+}
+
+/// Backprop `ws.dlogits` through head + hidden, accumulating into `g` (the
+/// caller's flat per-sample trainable gradient); computes `ws.dfeat` (and
+/// returns `true`) when the embedding needs it.
+pub fn backward(
+    net: &NetView,
+    slots: &TrainSlots,
+    ws: &mut Workspace,
+    g: &mut [f64],
+    want_dfeat: bool,
+) -> bool {
+    let h = net.h;
+    let out = net.out;
+    if let Some(off) = slots.head_b {
+        for (gk, &d) in g[off..off + out].iter_mut().zip(&ws.dlogits) {
+            *gk += d;
+        }
+    }
+    if let Some(off) = slots.head_w {
+        for j in 0..h {
+            if ws.hact[j] == 0.0 {
+                continue;
+            }
+            let a = ws.hact[j];
+            let gr = &mut g[off + j * out..off + (j + 1) * out];
+            for (gk, &d) in gr.iter_mut().zip(&ws.dlogits) {
+                *gk += a * d;
+            }
+        }
+    }
+    if !slots.needs_dh(want_dfeat) {
+        return false;
+    }
+    dh_from_dlogits(net, ws);
     if let Some(off) = slots.enc_b {
-        for (g, &d) in ws.g[off..off + h].iter_mut().zip(&ws.dh) {
-            *g += d;
+        for (gj, &d) in g[off..off + h].iter_mut().zip(&ws.dh) {
+            *gj += d;
         }
     }
     if let Some(off) = slots.enc_w {
@@ -155,21 +192,14 @@ pub fn backward(net: &NetView, slots: &TrainSlots, ws: &mut Workspace, want_dfea
             if f == 0.0 {
                 continue;
             }
-            let g = &mut ws.g[off + i * h..off + (i + 1) * h];
-            for (gj, &d) in g.iter_mut().zip(&ws.dh) {
+            let gr = &mut g[off + i * h..off + (i + 1) * h];
+            for (gj, &d) in gr.iter_mut().zip(&ws.dh) {
                 *gj += f * d;
             }
         }
     }
     if want_dfeat || slots.embed.is_some() {
-        for (i, df) in ws.dfeat.iter_mut().enumerate() {
-            let row = &net.enc_w[i * h..(i + 1) * h];
-            let mut acc = 0.0f64;
-            for (&w, &d) in row.iter().zip(&ws.dh) {
-                acc += w as f64 * d;
-            }
-            *df = acc;
-        }
+        dfeat_from_dh(net, ws);
         true
     } else {
         false
@@ -177,11 +207,12 @@ pub fn backward(net: &NetView, slots: &TrainSlots, ws: &mut Workspace, want_dfea
 }
 
 /// One Cls row: pooled embedding -> forward -> softmax CE -> backward
-/// (with embedding scatter).  Returns the row loss.
+/// (with embedding scatter) into `g`.  Returns the row loss.
 pub fn row_cls(
     net: &NetView,
     slots: &TrainSlots,
     ws: &mut Workspace,
+    g: &mut [f64],
     toks: &[i32],
     label: usize,
 ) -> f64 {
@@ -189,14 +220,14 @@ pub fn row_cls(
     pool_tokens(net, ws, toks);
     forward(net, ws);
     let row_loss = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
-    let have_dfeat = backward(net, slots, ws, slots.embed.is_some());
+    let have_dfeat = backward(net, slots, ws, g, slots.embed.is_some());
     if let (Some(off), true) = (slots.embed, have_dfeat) {
         if !ws.active.is_empty() {
             let inv = 1.0 / ws.active.len() as f64;
             for &tok in &ws.active {
-                let ge = &mut ws.g[off + tok * d..off + (tok + 1) * d];
-                for (g, &df) in ge.iter_mut().zip(&ws.dfeat) {
-                    *g += df * inv;
+                let ge = &mut g[off + tok * d..off + (tok + 1) * d];
+                for (gv, &df) in ge.iter_mut().zip(&ws.dfeat) {
+                    *gv += df * inv;
                 }
             }
         }
@@ -205,11 +236,12 @@ pub fn row_cls(
 }
 
 /// One Lm row: per-token embedding -> forward -> softmax CE -> backward,
-/// summed over non-pad target positions.  Returns the row loss.
+/// summed over non-pad target positions into `g`.  Returns the row loss.
 pub fn row_lm(
     net: &NetView,
     slots: &TrainSlots,
     ws: &mut Workspace,
+    g: &mut [f64],
     toks: &[i32],
     targets: &[i32],
 ) -> f64 {
@@ -222,54 +254,60 @@ pub fn row_lm(
         let tok = load_token(net, ws, toks[p]);
         forward(net, ws);
         row_loss += loss::softmax_ce_into(&ws.logits, target as usize % net.out, &mut ws.dlogits);
-        let have_dfeat = backward(net, slots, ws, slots.embed.is_some());
+        let have_dfeat = backward(net, slots, ws, g, slots.embed.is_some());
         if let (Some(off), true) = (slots.embed, have_dfeat) {
-            let ge = &mut ws.g[off + tok * d..off + (tok + 1) * d];
-            for (g, &df) in ge.iter_mut().zip(&ws.dfeat) {
-                *g += df;
+            let ge = &mut g[off + tok * d..off + (tok + 1) * d];
+            for (gv, &df) in ge.iter_mut().zip(&ws.dfeat) {
+                *gv += df;
             }
         }
     }
     row_loss
 }
 
-/// One Vit row: pixels -> forward -> softmax CE -> backward.
+/// One Vit row: pixels -> forward -> softmax CE -> backward into `g`.
 pub fn row_vit(
     net: &NetView,
     slots: &TrainSlots,
     ws: &mut Workspace,
+    g: &mut [f64],
     pixels: &[f32],
     label: usize,
 ) -> f64 {
     load_pixels(ws, pixels);
     forward(net, ws);
     let row_loss = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
-    backward(net, slots, ws, false);
+    backward(net, slots, ws, g, false);
     row_loss
 }
 
-/// One Cnn row: pixels -> forward -> sigmoid BCE -> backward.
+/// One Cnn row: pixels -> forward -> sigmoid BCE -> backward into `g`.
 pub fn row_cnn(
     net: &NetView,
     slots: &TrainSlots,
     ws: &mut Workspace,
+    g: &mut [f64],
     pixels: &[f32],
     targets: &[f32],
 ) -> f64 {
     load_pixels(ws, pixels);
     forward(net, ws);
     let row_loss = loss::sigmoid_bce_into(&ws.logits, targets, &mut ws.dlogits);
-    backward(net, slots, ws, false);
+    backward(net, slots, ws, g, false);
     row_loss
 }
 
-/// Fused squared-norm + clip-factor + scale: writes `c * g` into `out`
-/// and returns the squared norm (Algorithm 1 lines 6-8 for one sample).
-pub fn clip_into(g: &[f64], dp: bool, clip_r: f64, mode: ClipMode, out: &mut [f64]) -> f64 {
+/// Fused squared-norm + clip-factor + scale, **in place**: scales `g` by
+/// its clip factor where it sits and returns the squared norm (Algorithm 1
+/// lines 6-8 for one sample).  Replaces the former `clip_into`, which
+/// copied the scaled gradient into a second `pt`-sized buffer; the values
+/// produced are identical (`c * v` per element, same reduction order), so
+/// the fused==legacy bit-identity contract is untouched.
+pub fn clip_in_place(g: &mut [f64], dp: bool, clip_r: f64, mode: ClipMode) -> f64 {
     let sq: f64 = g.iter().map(|&v| v * v).sum();
     let c = if dp { clip_factor(sq, clip_r, mode) } else { 1.0 };
-    for (o, &v) in out.iter_mut().zip(g) {
-        *o = c * v;
+    for v in g.iter_mut() {
+        *v = c * *v;
     }
     sq
 }

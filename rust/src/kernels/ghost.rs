@@ -1,0 +1,809 @@
+//! Ghost-norm book-keeping kernels (`FASTDP_KERNELS=ghost`): per-sample
+//! clipping **without materializing per-sample gradients**.
+//!
+//! The fused tier writes each row's full `pt`-element gradient into a
+//! per-row shard before clipping — O(B·pt) peak scratch, exactly the tax
+//! the paper's §3.2 book-keeping argument removes.  This tier computes the
+//! per-sample squared norm analytically from the factorized outer-product
+//! structure of every leaf gradient (Li et al. 2021's ghost clipping /
+//! Bu et al.'s book-keeping), and stores only the small factor vectors:
+//!
+//! * `head/w` leaf, single position:  `g = a ⊗ d`  ⇒  `‖g‖² = ‖a‖²·‖d‖²`
+//!   (with `a = hact`, `d = dlogits`);
+//! * `head/w` leaf, LM row summed over `T` token positions:
+//!   `‖Σ_t a_t ⊗ d_t‖² = Σ_{t,t'} (a_t·a_t')(d_t·d_t')` — the T×T
+//!   Gram-matrix form, accumulated pairwise without storing either Gram;
+//! * `enc/w` analogously with `(feat, dh)`;
+//! * bias leaves (`head/b`, `enc/b`): the row gradient **is** the summed
+//!   `dlogits` / `dh`, so its norm is exact and the summed vector doubles
+//!   as the phase-B accumulation input — no Gram needed;
+//! * `embed` leaf (scatter structure): `‖g‖² = Σ_v ‖Σ_{t: tok_t=v} dfeat_t‖²`
+//!   — for Cls (mean pooling) this collapses to
+//!   `inv²·(Σ_v cnt_v²)·‖dfeat‖²`, for LM it is the token-gated Gram
+//!   `Σ_{t,t'} [tok_t=tok_{t'}] dfeat_t·dfeat_{t'}`.
+//!
+//! The clip factor `c_i` is known as soon as the row's norm is, and every
+//! leaf gradient is bilinear in its factors, so `c_i` is folded into the
+//! *d-side* factor (`d`, `dh`, `dfeat`) as it is stored.  Phase B (in
+//! `engine::interp`) then accumulates `Σ_i c_i·g_i` straight into the
+//! shared gradient sum from the stored factors — per entry, rows and
+//! positions are visited in fixed order, so ghost results are
+//! bit-identical across `FASTDP_THREADS` (the per-tier contract; ghost vs
+//! fused agrees to floating-point tolerance, not bitwise, because the
+//! reductions are associated differently).
+//!
+//! Peak scratch drops from O(B·pt) to O(pt + B·row_stride) where
+//! `row_stride` is the factor footprint laid out by [`GhostPlan`]:
+//! `h + out` per stored position (plus `d`-sized blocks for the
+//! full-subset embedding path) + the exact bias-gradient sums — the
+//! issue's O(pt + B·(h + out + T²)) with the T² term living in the
+//! pairwise Gram *loop*, not in memory.
+
+use crate::dp::clip::{clip_factor, ClipMode};
+
+use super::view::{NetView, TrainSlots};
+use super::workspace::Workspace;
+use super::{fused, loss};
+
+/// Dot product in index order (the one reduction order both phases use).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Squared L2 norm in index order.
+#[inline]
+pub fn sqsum(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Per-row factor layout of the ghost tier: which factor blocks a row
+/// stores (driven by the trainable subset) and where each lives inside the
+/// row's flat f64 slice.
+///
+/// Layout: `npos` position blocks, then the bias-gradient sums, then an
+/// optional count + token-id list (stored as exactly-representable f64s):
+///
+/// ```text
+/// [ pos 0 | pos 1 | ... | sum_d(out) | sum_dh(h)? | cnt? | ids... ]
+///   pos = [ a(h)? | d(out) | dh(h)? | f(fw)? | dfeat(fw)? ]
+/// ```
+#[derive(Debug, Clone)]
+pub struct GhostPlan {
+    /// Hidden width.
+    pub h: usize,
+    /// Output width (n_cls / vocab / n_out).
+    pub out: usize,
+    /// Width of the `f` / `dfeat` blocks (input-feature dim).
+    pub fw: usize,
+    /// Stored positions per row (LM: sequence length; others: 1).
+    pub npos: usize,
+    /// Store post-ReLU activations `a` (head/w trainable)?
+    pub store_a: bool,
+    /// Store hidden grads `dh` (enc/b, enc/w or embed trainable)?
+    pub store_dh: bool,
+    /// Store features `f` (enc/w trainable on a token model — image
+    /// models re-read pixels from the batch in phase B instead)?
+    pub store_f: bool,
+    /// Store feature grads `dfeat` (embed trainable)?
+    pub store_dfeat: bool,
+    /// Capacity of the token-id list (embed scatter); 0 = none.
+    pub ids: usize,
+    /// Is a count slot stored (LM position count / Cls active-token count)?
+    pub counted: bool,
+    a_off: usize,
+    d_off: usize,
+    dh_off: usize,
+    f_off: usize,
+    dfeat_off: usize,
+    /// Stride of one position block.
+    pub pos_stride: usize,
+    sum_d_off: usize,
+    sum_dh_off: usize,
+    cnt_off: usize,
+    ids_off: usize,
+    /// Total f64 words one row stores.
+    pub row_stride: usize,
+}
+
+impl GhostPlan {
+    /// Build the factor layout for a model with hidden width `h`, output
+    /// width `out`, feature width `fw`, `npos` stored positions per row
+    /// and the given trainable subset.  `token_feat` says features come
+    /// from the embedding (and must be stored for enc/w); `ids` is the
+    /// token-id list capacity (0 when no embed scatter is needed).
+    pub fn new(
+        h: usize,
+        out: usize,
+        fw: usize,
+        npos: usize,
+        slots: &TrainSlots,
+        token_feat: bool,
+        ids: usize,
+    ) -> GhostPlan {
+        let store_a = slots.head_w.is_some();
+        let store_dh = slots.enc_b.is_some() || slots.enc_w.is_some() || slots.embed.is_some();
+        let store_f = slots.enc_w.is_some() && token_feat;
+        let store_dfeat = slots.embed.is_some();
+        let counted = npos > 1 || ids > 0;
+        let mut o = 0usize;
+        let a_off = o;
+        if store_a {
+            o += h;
+        }
+        let d_off = o;
+        o += out; // `d` is always stored: every subset trains the head
+        let dh_off = o;
+        if store_dh {
+            o += h;
+        }
+        let f_off = o;
+        if store_f {
+            o += fw;
+        }
+        let dfeat_off = o;
+        if store_dfeat {
+            o += fw;
+        }
+        let pos_stride = o;
+        let mut r = npos * pos_stride;
+        let sum_d_off = r;
+        r += out;
+        let sum_dh_off = r;
+        if store_dh {
+            r += h;
+        }
+        let cnt_off = r;
+        if counted {
+            r += 1;
+        }
+        let ids_off = r;
+        r += ids;
+        GhostPlan {
+            h,
+            out,
+            fw,
+            npos,
+            store_a,
+            store_dh,
+            store_f,
+            store_dfeat,
+            ids,
+            counted,
+            a_off,
+            d_off,
+            dh_off,
+            f_off,
+            dfeat_off,
+            pos_stride,
+            sum_d_off,
+            sum_dh_off,
+            cnt_off,
+            ids_off,
+            row_stride: r,
+        }
+    }
+
+    /// Row `row`'s factor slice inside the step's factor buffer.
+    pub fn row<'a>(&self, factors: &'a [f64], row: usize) -> &'a [f64] {
+        &factors[row * self.row_stride..(row + 1) * self.row_stride]
+    }
+
+    /// Number of valid position blocks in a row (LM: stored count).
+    pub fn np(&self, rb: &[f64]) -> usize {
+        if self.npos > 1 {
+            rb[self.cnt_off] as usize
+        } else {
+            1
+        }
+    }
+
+    /// Number of valid token ids in a row (embed scatter; 0 when none).
+    pub fn n_ids(&self, rb: &[f64]) -> usize {
+        if self.counted && self.ids > 0 {
+            rb[self.cnt_off] as usize
+        } else {
+            0
+        }
+    }
+
+    /// The `k`-th stored token id of a row.
+    pub fn id(&self, rb: &[f64], k: usize) -> usize {
+        rb[self.ids_off + k] as usize
+    }
+
+    /// Activations `a` of position `p` (`h` long).
+    pub fn a<'a>(&self, rb: &'a [f64], p: usize) -> &'a [f64] {
+        let base = p * self.pos_stride + self.a_off;
+        &rb[base..base + self.h]
+    }
+
+    /// Clip-scaled output grads `d` of position `p` (`out` long).
+    pub fn d<'a>(&self, rb: &'a [f64], p: usize) -> &'a [f64] {
+        let base = p * self.pos_stride + self.d_off;
+        &rb[base..base + self.out]
+    }
+
+    /// Clip-scaled hidden grads `dh` of position `p` (`h` long).
+    pub fn dh<'a>(&self, rb: &'a [f64], p: usize) -> &'a [f64] {
+        let base = p * self.pos_stride + self.dh_off;
+        &rb[base..base + self.h]
+    }
+
+    /// Features `f` of position `p` (`fw` long; token models only).
+    pub fn f<'a>(&self, rb: &'a [f64], p: usize) -> &'a [f64] {
+        let base = p * self.pos_stride + self.f_off;
+        &rb[base..base + self.fw]
+    }
+
+    /// Clip-scaled feature grads `dfeat` of position `p` (`fw` long).
+    pub fn dfeat<'a>(&self, rb: &'a [f64], p: usize) -> &'a [f64] {
+        let base = p * self.pos_stride + self.dfeat_off;
+        &rb[base..base + self.fw]
+    }
+
+    /// The row's exact clip-scaled `head/b` gradient (`out` long).
+    pub fn bias_d<'a>(&self, rb: &'a [f64]) -> &'a [f64] {
+        &rb[self.sum_d_off..self.sum_d_off + self.out]
+    }
+
+    /// The row's exact clip-scaled `enc/b` gradient (`h` long; only valid
+    /// when `store_dh`).
+    pub fn bias_dh<'a>(&self, rb: &'a [f64]) -> &'a [f64] {
+        &rb[self.sum_dh_off..self.sum_dh_off + self.h]
+    }
+}
+
+/// Read-only context shared by every ghost row kernel call of one step.
+pub struct GhostCtx<'a> {
+    pub net: &'a NetView<'a>,
+    pub slots: &'a TrainSlots,
+    pub plan: &'a GhostPlan,
+    pub dp: bool,
+    pub clip_r: f64,
+    pub mode: ClipMode,
+}
+
+/// Store position `p`'s factors from the workspace, folding `c` into the
+/// d-side factors (`d`, `dh`) and `dfeat_scale` into `dfeat`.
+fn store_pos(plan: &GhostPlan, rb: &mut [f64], p: usize, ws: &Workspace, c: f64, dfeat_scale: f64) {
+    let base = p * plan.pos_stride;
+    if plan.store_a {
+        rb[base + plan.a_off..base + plan.a_off + plan.h].copy_from_slice(&ws.hact);
+    }
+    for (s, &v) in rb[base + plan.d_off..base + plan.d_off + plan.out].iter_mut().zip(&ws.dlogits)
+    {
+        *s = c * v;
+    }
+    if plan.store_dh {
+        for (s, &v) in rb[base + plan.dh_off..base + plan.dh_off + plan.h].iter_mut().zip(&ws.dh) {
+            *s = c * v;
+        }
+    }
+    if plan.store_f {
+        rb[base + plan.f_off..base + plan.f_off + plan.fw].copy_from_slice(&ws.feat);
+    }
+    if plan.store_dfeat {
+        for (s, &v) in
+            rb[base + plan.dfeat_off..base + plan.dfeat_off + plan.fw].iter_mut().zip(&ws.dfeat)
+        {
+            *s = dfeat_scale * v;
+        }
+    }
+}
+
+/// Scale position `p`'s already-stored d-side factors by `c` (LM rows,
+/// where `c` is only known after all positions are processed).
+fn scale_pos(plan: &GhostPlan, rb: &mut [f64], p: usize, c: f64) {
+    let base = p * plan.pos_stride;
+    for v in rb[base + plan.d_off..base + plan.d_off + plan.out].iter_mut() {
+        *v *= c;
+    }
+    if plan.store_dh {
+        for v in rb[base + plan.dh_off..base + plan.dh_off + plan.h].iter_mut() {
+            *v *= c;
+        }
+    }
+    if plan.store_dfeat {
+        for v in rb[base + plan.dfeat_off..base + plan.dfeat_off + plan.fw].iter_mut() {
+            *v *= c;
+        }
+    }
+}
+
+/// Shared single-position epilogue (Cls/Vit/Cnn): hidden/feature grads as
+/// needed, the analytic squared norm, the clip factor, and the scaled
+/// factor store.  Returns `(row_loss, sq_norm)`.
+fn finish_single_pos(
+    ctx: &GhostCtx,
+    ws: &mut Workspace,
+    rb: &mut [f64],
+    row_loss: f64,
+) -> (f64, f64) {
+    let (net, slots, plan) = (ctx.net, ctx.slots, ctx.plan);
+    if plan.store_dh {
+        fused::dh_from_dlogits(net, ws);
+    }
+    if plan.store_dfeat {
+        fused::dfeat_from_dh(net, ws);
+    }
+    // per-leaf squared norms by book-keeping (Algorithm 1 line 6)
+    let mut sqn = 0.0f64;
+    let nd2 = sqsum(&ws.dlogits);
+    if slots.head_b.is_some() {
+        sqn += nd2;
+    }
+    if slots.head_w.is_some() {
+        sqn += sqsum(&ws.hact) * nd2;
+    }
+    if plan.store_dh {
+        let nh2 = sqsum(&ws.dh);
+        if slots.enc_b.is_some() {
+            sqn += nh2;
+        }
+        if slots.enc_w.is_some() {
+            sqn += sqsum(&ws.feat) * nh2;
+        }
+    }
+    let n_active = ws.active.len();
+    let inv = if n_active > 0 { 1.0 / n_active as f64 } else { 0.0 };
+    if slots.embed.is_some() && plan.store_dfeat && n_active > 0 {
+        // scatter norm: every token v receives cnt_v * inv * dfeat, so
+        // ||g_embed||^2 = inv^2 * (sum_v cnt_v^2) * ||dfeat||^2; iterating
+        // occurrences counts each v exactly cnt_v times
+        let mut cnt2 = 0.0f64;
+        for &ti in &ws.active {
+            cnt2 += ws.active.iter().filter(|&&tj| tj == ti).count() as f64;
+        }
+        sqn += inv * inv * cnt2 * sqsum(&ws.dfeat);
+    }
+    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
+    store_pos(plan, rb, 0, ws, c, c * inv);
+    // the bias-gradient "sums" of a single-position row are the scaled
+    // factors themselves; copy so phase B reads one place for every family
+    rb.copy_within(plan.d_off..plan.d_off + plan.out, plan.sum_d_off);
+    if plan.store_dh {
+        rb.copy_within(plan.dh_off..plan.dh_off + plan.h, plan.sum_dh_off);
+    }
+    if plan.counted {
+        rb[plan.cnt_off] = n_active as f64;
+        for (slot, &tok) in
+            rb[plan.ids_off..plan.ids_off + n_active].iter_mut().zip(&ws.active)
+        {
+            *slot = tok as f64;
+        }
+    }
+    (row_loss, sqn)
+}
+
+/// One Cls row: pooled embedding -> forward -> softmax CE -> ghost norm +
+/// scaled factor store.  Returns `(row_loss, sq_norm)`.
+pub fn row_cls(
+    ctx: &GhostCtx,
+    ws: &mut Workspace,
+    toks: &[i32],
+    label: usize,
+    rb: &mut [f64],
+) -> (f64, f64) {
+    fused::pool_tokens(ctx.net, ws, toks);
+    fused::forward(ctx.net, ws);
+    let row_loss = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
+    finish_single_pos(ctx, ws, rb, row_loss)
+}
+
+/// One Vit row: pixels -> forward -> softmax CE -> ghost norm + store.
+pub fn row_vit(
+    ctx: &GhostCtx,
+    ws: &mut Workspace,
+    pixels: &[f32],
+    label: usize,
+    rb: &mut [f64],
+) -> (f64, f64) {
+    fused::load_pixels(ws, pixels);
+    fused::forward(ctx.net, ws);
+    let row_loss = loss::softmax_ce_into(&ws.logits, label, &mut ws.dlogits);
+    finish_single_pos(ctx, ws, rb, row_loss)
+}
+
+/// One Cnn row: pixels -> forward -> sigmoid BCE -> ghost norm + store.
+pub fn row_cnn(
+    ctx: &GhostCtx,
+    ws: &mut Workspace,
+    pixels: &[f32],
+    targets: &[f32],
+    rb: &mut [f64],
+) -> (f64, f64) {
+    fused::load_pixels(ws, pixels);
+    fused::forward(ctx.net, ws);
+    let row_loss = loss::sigmoid_bce_into(&ws.logits, targets, &mut ws.dlogits);
+    finish_single_pos(ctx, ws, rb, row_loss)
+}
+
+/// One Lm row: per-token factor pass, then the analytic norm — bias
+/// leaves from their exact summed gradients, weight leaves through the
+/// pairwise (T×T Gram) form — then the deferred clip-factor scaling of
+/// the stored d-side factors.  Returns `(row_loss, sq_norm)`.
+pub fn row_lm(
+    ctx: &GhostCtx,
+    ws: &mut Workspace,
+    toks: &[i32],
+    targets: &[i32],
+    rb: &mut [f64],
+) -> (f64, f64) {
+    let (net, slots, plan) = (ctx.net, ctx.slots, ctx.plan);
+    let mut row_loss = 0.0f64;
+    let mut np = 0usize;
+    rb[plan.sum_d_off..plan.sum_d_off + plan.out].fill(0.0);
+    if plan.store_dh {
+        rb[plan.sum_dh_off..plan.sum_dh_off + plan.h].fill(0.0);
+    }
+    for (p, &target) in targets.iter().enumerate() {
+        if target <= 0 {
+            continue; // pad / ignore
+        }
+        let tok = fused::load_token(net, ws, toks[p]);
+        fused::forward(net, ws);
+        row_loss += loss::softmax_ce_into(&ws.logits, target as usize % net.out, &mut ws.dlogits);
+        if plan.store_dh {
+            fused::dh_from_dlogits(net, ws);
+        }
+        if plan.store_dfeat {
+            fused::dfeat_from_dh(net, ws);
+        }
+        store_pos(plan, rb, np, ws, 1.0, 1.0);
+        for (s, &v) in
+            rb[plan.sum_d_off..plan.sum_d_off + plan.out].iter_mut().zip(&ws.dlogits)
+        {
+            *s += v;
+        }
+        if plan.store_dh {
+            for (s, &v) in
+                rb[plan.sum_dh_off..plan.sum_dh_off + plan.h].iter_mut().zip(&ws.dh)
+            {
+                *s += v;
+            }
+        }
+        if plan.ids > 0 {
+            rb[plan.ids_off + np] = tok as f64;
+        }
+        np += 1;
+    }
+    if plan.counted {
+        rb[plan.cnt_off] = np as f64;
+    }
+    // --- analytic squared norm ---
+    let mut sqn = 0.0f64;
+    if slots.head_b.is_some() {
+        sqn += sqsum(&rb[plan.sum_d_off..plan.sum_d_off + plan.out]);
+    }
+    if slots.enc_b.is_some() && plan.store_dh {
+        sqn += sqsum(&rb[plan.sum_dh_off..plan.sum_dh_off + plan.h]);
+    }
+    let want_hw = slots.head_w.is_some() && plan.store_a;
+    let want_ew = slots.enc_w.is_some() && plan.store_f && plan.store_dh;
+    let want_em = slots.embed.is_some() && plan.store_dfeat && plan.ids > 0;
+    if want_hw || want_ew || want_em {
+        let r: &[f64] = rb;
+        for p in 0..np {
+            for q in 0..=p {
+                let w = if p == q { 1.0 } else { 2.0 };
+                if want_hw {
+                    let dd = dot(plan.d(r, p), plan.d(r, q));
+                    let aa = dot(plan.a(r, p), plan.a(r, q));
+                    sqn += w * aa * dd;
+                }
+                if want_ew {
+                    let hh = dot(plan.dh(r, p), plan.dh(r, q));
+                    let ff = dot(plan.f(r, p), plan.f(r, q));
+                    sqn += w * ff * hh;
+                }
+                if want_em && r[plan.ids_off + p] == r[plan.ids_off + q] {
+                    sqn += w * dot(plan.dfeat(r, p), plan.dfeat(r, q));
+                }
+            }
+        }
+    }
+    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
+    if c != 1.0 {
+        for p in 0..np {
+            scale_pos(plan, rb, p, c);
+        }
+        for v in rb[plan.sum_d_off..plan.sum_d_off + plan.out].iter_mut() {
+            *v *= c;
+        }
+        if plan.store_dh {
+            for v in rb[plan.sum_dh_off..plan.sum_dh_off + plan.h].iter_mut() {
+                *v *= c;
+            }
+        }
+    }
+    (row_loss, sqn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny owned network the tests can take `NetView`s of.
+    struct TinyNet {
+        embed: Vec<f32>,
+        enc_w: Vec<f32>,
+        enc_b: Vec<f32>,
+        head_w: Vec<f32>,
+        head_b: Vec<f32>,
+        vocab: usize,
+        d: usize,
+        h: usize,
+        out: usize,
+    }
+
+    impl TinyNet {
+        fn new(vocab: usize, d: usize, h: usize, out: usize, seed: u64) -> TinyNet {
+            let fill = |n: usize, s: u64| -> Vec<f32> {
+                (0..n as u64)
+                    .map(|i| {
+                        let x = (i.wrapping_mul(2654435761).wrapping_add(s * 97 + 13)) % 997;
+                        (x as f32 / 997.0) - 0.5
+                    })
+                    .collect()
+            };
+            TinyNet {
+                embed: fill(vocab * d, seed),
+                enc_w: fill(d * h, seed + 1),
+                enc_b: fill(h, seed + 2),
+                head_w: fill(h * out, seed + 3),
+                head_b: fill(out, seed + 4),
+                vocab,
+                d,
+                h,
+                out,
+            }
+        }
+
+        fn view(&self) -> NetView<'_> {
+            NetView {
+                embed: &self.embed,
+                enc_w: &self.enc_w,
+                enc_b: Some(&self.enc_b),
+                head_w: &self.head_w,
+                head_b: &self.head_b,
+                d: self.d,
+                h: self.h,
+                out: self.out,
+                vocab: self.vocab,
+                feat: self.d,
+            }
+        }
+
+        /// TrainSlots over the canonical leaf order for a subset.
+        fn slots(&self, subset: &str) -> TrainSlots {
+            let mut s = TrainSlots::default();
+            let mut off = 0usize;
+            let mut put = |slot: &mut Option<usize>, size: usize, on: bool| {
+                if on {
+                    *slot = Some(off);
+                    off += size;
+                }
+            };
+            let (em, ew, eb) = match subset {
+                "full" => (true, true, true),
+                "bitfit" => (false, false, true),
+                "lastlayer" => (false, false, false),
+                other => panic!("unknown subset {other}"),
+            };
+            put(&mut s.embed, self.vocab * self.d, em);
+            put(&mut s.enc_w, self.d * self.h, ew);
+            put(&mut s.enc_b, self.h, eb);
+            put(&mut s.head_w, self.h * self.out, true);
+            put(&mut s.head_b, self.out, true);
+            s.pt = off;
+            s
+        }
+    }
+
+    /// Rebuild the clip-scaled per-sample gradient from a row's stored
+    /// factors — the same identities phase B accumulates with.
+    fn reconstruct(plan: &GhostPlan, slots: &TrainSlots, rb: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0f64; slots.pt];
+        let np = plan.np(rb);
+        if let Some(off) = slots.head_b {
+            for (gk, &v) in g[off..off + plan.out].iter_mut().zip(plan.bias_d(rb)) {
+                *gk += v;
+            }
+        }
+        if let Some(off) = slots.head_w {
+            for p in 0..np {
+                let a = plan.a(rb, p);
+                let dv = plan.d(rb, p);
+                for (j, &aj) in a.iter().enumerate() {
+                    for (k, &dk) in dv.iter().enumerate() {
+                        g[off + j * plan.out + k] += aj * dk;
+                    }
+                }
+            }
+        }
+        if let Some(off) = slots.enc_b {
+            for (gj, &v) in g[off..off + plan.h].iter_mut().zip(plan.bias_dh(rb)) {
+                *gj += v;
+            }
+        }
+        if let Some(off) = slots.enc_w {
+            for p in 0..np {
+                let f = plan.f(rb, p);
+                let dh = plan.dh(rb, p);
+                for (i, &fi) in f.iter().enumerate() {
+                    for (j, &dj) in dh.iter().enumerate() {
+                        g[off + i * plan.h + j] += fi * dj;
+                    }
+                }
+            }
+        }
+        if let Some(off) = slots.embed {
+            for k in 0..plan.n_ids(rb) {
+                let tok = plan.id(rb, k);
+                let p = if plan.npos > 1 { k } else { 0 };
+                let df = plan.dfeat(rb, p);
+                for (m, &v) in df.iter().enumerate() {
+                    g[off + tok * plan.fw + m] += v;
+                }
+            }
+        }
+        g
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tag: &str) {
+        assert_eq!(a.len(), b.len(), "{tag}: length");
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let scale = x.abs().max(y.abs()).max(1e-12);
+            assert!((x - y).abs() / scale < 1e-8, "{tag}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cls_ghost_norm_and_factors_match_fused_oracle() {
+        let net = TinyNet::new(16, 5, 4, 3, 7);
+        let view = net.view();
+        let toks = [3i32, 5, 3, 0, 7, 5, 3]; // repeats + one pad
+        let label = 1usize;
+        for subset in ["full", "bitfit", "lastlayer"] {
+            for mode in [ClipMode::Abadi, ClipMode::AutoS] {
+                let slots = net.slots(subset);
+                // fused oracle: materialize, norm, clip in place
+                let mut ws = Workspace::new(net.d, net.h, net.out);
+                let mut g = vec![0.0f64; slots.pt];
+                let loss_f = fused::row_cls(&view, &slots, &mut ws, &mut g, &toks, label);
+                let sq_f = fused::clip_in_place(&mut g, true, 0.05, mode);
+                // ghost: analytic norm + factors
+                let plan =
+                    GhostPlan::new(net.h, net.out, net.d, 1, &slots, true, toks.len());
+                let ctx = GhostCtx {
+                    net: &view,
+                    slots: &slots,
+                    plan: &plan,
+                    dp: true,
+                    clip_r: 0.05,
+                    mode,
+                };
+                let mut ws2 = Workspace::new(net.d, net.h, net.out);
+                let mut rb = vec![0.0f64; plan.row_stride];
+                let (loss_g, sq_g) = row_cls(&ctx, &mut ws2, &toks, label, &mut rb);
+                assert!((loss_f - loss_g).abs() < 1e-12, "{subset}: loss");
+                let scale = sq_f.abs().max(1e-12);
+                assert!((sq_f - sq_g).abs() / scale < 1e-9, "{subset}: {sq_f} vs {sq_g}");
+                assert_close(&reconstruct(&plan, &slots, &rb), &g, subset);
+            }
+        }
+    }
+
+    #[test]
+    fn lm_ghost_norm_and_factors_match_fused_oracle() {
+        let net = TinyNet::new(16, 5, 4, 16, 11); // out == vocab (LM head)
+        let view = net.view();
+        let toks = [2i32, 9, 2, 4, 13];
+        let targets = [9i32, 2, 0, 13, 2]; // one pad position, repeated tokens
+        for subset in ["full", "bitfit", "lastlayer"] {
+            for mode in [ClipMode::Abadi, ClipMode::AutoS] {
+                let slots = net.slots(subset);
+                let mut ws = Workspace::new(net.d, net.h, net.out);
+                let mut g = vec![0.0f64; slots.pt];
+                let loss_f = fused::row_lm(&view, &slots, &mut ws, &mut g, &toks, &targets);
+                let sq_f = fused::clip_in_place(&mut g, true, 0.05, mode);
+                let ids = if slots.embed.is_some() { toks.len() } else { 0 };
+                let plan =
+                    GhostPlan::new(net.h, net.out, net.d, toks.len(), &slots, true, ids);
+                let ctx = GhostCtx {
+                    net: &view,
+                    slots: &slots,
+                    plan: &plan,
+                    dp: true,
+                    clip_r: 0.05,
+                    mode,
+                };
+                let mut ws2 = Workspace::new(net.d, net.h, net.out);
+                let mut rb = vec![0.0f64; plan.row_stride];
+                let (loss_g, sq_g) = row_lm(&ctx, &mut ws2, &toks, &targets, &mut rb);
+                assert!((loss_f - loss_g).abs() < 1e-12, "{subset}: loss");
+                let scale = sq_f.abs().max(1e-12);
+                assert!((sq_f - sq_g).abs() / scale < 1e-9, "{subset}: {sq_f} vs {sq_g}");
+                assert_close(&reconstruct(&plan, &slots, &rb), &g, subset);
+            }
+        }
+    }
+
+    #[test]
+    fn nondp_rows_store_unscaled_factors() {
+        let net = TinyNet::new(16, 5, 4, 3, 3);
+        let view = net.view();
+        let slots = net.slots("bitfit");
+        let plan = GhostPlan::new(net.h, net.out, net.d, 1, &slots, true, 0);
+        let ctx = GhostCtx {
+            net: &view,
+            slots: &slots,
+            plan: &plan,
+            dp: false,
+            clip_r: 1e-6, // tiny radius must NOT clip when dp is off
+            mode: ClipMode::Abadi,
+        };
+        let mut ws = Workspace::new(net.d, net.h, net.out);
+        let mut rb = vec![0.0f64; plan.row_stride];
+        let (_, sq) = row_cls(&ctx, &mut ws, &[1, 2, 3], 0, &mut rb);
+        let mut ws2 = Workspace::new(net.d, net.h, net.out);
+        let mut g = vec![0.0f64; slots.pt];
+        fused::row_cls(&view, &slots, &mut ws2, &mut g, &[1, 2, 3], 0);
+        let sq_f = fused::clip_in_place(&mut g, false, 1e-6, ClipMode::Abadi);
+        assert!((sq - sq_f).abs() / sq_f.max(1e-12) < 1e-9);
+        assert_close(&reconstruct(&plan, &slots, &rb), &g, "nondp");
+    }
+
+    #[test]
+    fn plan_layout_has_disjoint_blocks() {
+        let net = TinyNet::new(16, 5, 4, 3, 1);
+        for subset in ["full", "bitfit", "lastlayer"] {
+            let slots = net.slots(subset);
+            for npos in [1usize, 6] {
+                let ids = if slots.embed.is_some() { 6 } else { 0 };
+                let plan = GhostPlan::new(net.h, net.out, net.d, npos, &slots, true, ids);
+                // writing every block of every position must exactly cover
+                // [0, row_stride) with no overlap: mark and count
+                let mut marks = vec![0u32; plan.row_stride];
+                let mut mark = |off: usize, len: usize| {
+                    for m in &mut marks[off..off + len] {
+                        *m += 1;
+                    }
+                };
+                for p in 0..npos {
+                    let base = p * plan.pos_stride;
+                    if plan.store_a {
+                        mark(base + plan.a_off, plan.h);
+                    }
+                    mark(base + plan.d_off, plan.out);
+                    if plan.store_dh {
+                        mark(base + plan.dh_off, plan.h);
+                    }
+                    if plan.store_f {
+                        mark(base + plan.f_off, plan.fw);
+                    }
+                    if plan.store_dfeat {
+                        mark(base + plan.dfeat_off, plan.fw);
+                    }
+                }
+                mark(plan.sum_d_off, plan.out);
+                if plan.store_dh {
+                    mark(plan.sum_dh_off, plan.h);
+                }
+                if plan.counted {
+                    mark(plan.cnt_off, 1);
+                }
+                mark(plan.ids_off, plan.ids);
+                assert!(
+                    marks.iter().all(|&m| m == 1),
+                    "{subset}/npos={npos}: layout overlap or gap: {marks:?}"
+                );
+            }
+        }
+    }
+}

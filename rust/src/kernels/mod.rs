@@ -1,43 +1,62 @@
-//! Fused CPU kernels for the interpreter backend's hot path.
+//! CPU kernel tiers for the interpreter backend's hot path.
 //!
 //! The reference interpreter executes Algorithm 1 per microbatch row:
 //! forward -> loss -> backward -> per-sample squared norm -> clip factor ->
-//! accumulate.  The seed implementation allocated fresh `Vec<f64>`s for
-//! every row (and for every token position on LM models) and rebuilt the
-//! merged parameter vector per call.  This module replaces that churn with
-//! flat, workspace-reusing kernels:
+//! accumulate.  Three tiers implement that contract, selectable via
+//! `FASTDP_KERNELS`:
 //!
-//! * [`view::NetView`] — borrowed flat-`f32` views into the merged
-//!   parameter vector plus the model dims, cheap to share across threads.
-//! * [`view::TrainSlots`] — precomputed offsets of each trainable leaf in
-//!   the flat trainable vector (replaces per-call `HashMap` lookups).
-//! * [`workspace::Workspace`] — per-worker scratch buffers (features,
-//!   activations, logits, gradients) allocated once and reused for every
-//!   row; after warmup the per-row path performs **zero heap allocations**.
-//! * [`fused`] — the fused row kernels: one call runs
-//!   forward + loss + backward for a row, and [`fused::clip_into`] fuses
-//!   the squared-norm / clip-factor / scale pass.
-//! * [`loss`] — allocation-free softmax-CE and sigmoid-BCE kernels.
-//! * [`legacy`] — the pre-optimization scalar reference path, kept
-//!   verbatim as a correctness oracle and as the benchmark baseline
-//!   (`FASTDP_KERNELS=legacy`).
+//! * [`fused`] (**`fused`**, the default) — flat, workspace-reusing row
+//!   kernels: one call runs forward + loss + backward straight into the
+//!   row's gradient shard, and [`fused::clip_in_place`] fuses the
+//!   squared-norm / clip-factor / scale pass where the gradient sits (no
+//!   second copy).  Peak scratch is O(B·pt) for the per-row shards.
+//! * [`ghost`] (**`ghost`**) — the paper's §3.2 book-keeping path: per-
+//!   sample squared norms computed *analytically* from activation /
+//!   output-gradient factors (`‖a⊗d‖² = ‖a‖²·‖d‖²` per position; the T×T
+//!   Gram form over token positions for LM rows; exact summed bias
+//!   gradients; the scatter norm for embeddings), with the clip factor
+//!   folded into the stored factors — the O(B·pt) per-sample gradient is
+//!   never materialized and peak scratch drops to O(pt + B·(h + out)
+//!   [+ B·T·factors for LM rows]).
+//! * [`legacy`] (**`legacy`**) — the pre-optimization per-row-allocating
+//!   scalar path, kept verbatim as correctness oracle and benchmark
+//!   baseline.  Only the train step has a legacy variant; eval/decode
+//!   always run fused.
 //!
-//! Every fused kernel performs the *same floating-point operations in the
-//! same order* as the legacy path, so fused and legacy outputs are
-//! bit-identical — and because per-row work is reduced in fixed row order
-//! (see [`crate::runtime::pool`]), results are also bit-identical across
-//! thread counts.  The data-parallel replica layer
-//! ([`crate::coordinator::distributed`]) runs these same kernels on every
-//! replica worker and extends the fixed-order-reduction discipline across
-//! the replica boundary, so the contract composes: any `FASTDP_THREADS`
-//! per replica x any replica count => one bit-identical result.
+//! Supporting modules: [`view::NetView`] / [`view::TrainSlots`] (borrowed
+//! flat-`f32` parameter views + precomputed trainable offsets),
+//! [`workspace::Workspace`] (per-worker scratch, zero steady-state
+//! allocation), [`loss`] (allocation-free softmax-CE / sigmoid-BCE).
+//!
+//! ## Determinism contracts (per tier)
+//!
+//! *Fused/legacy*: every fused kernel performs the same floating-point
+//! operations in the same order as the legacy path, so fused and legacy
+//! outputs are **bit-identical** — and per-row work is reduced in fixed
+//! row order (see [`crate::runtime::pool`]), so results are bit-identical
+//! across thread counts too.
+//!
+//! *Ghost*: the book-keeping identities reorder reductions, so ghost
+//! agrees with fused/legacy to floating-point **tolerance** (asserted in
+//! `tests/ghost_equivalence.rs`), not bitwise.  Within the tier the
+//! contract is as strict as ever: every accumulated entry is summed in
+//! fixed (row, position) order, so ghost outputs are **bit-identical
+//! across any `FASTDP_THREADS` value**.
+//!
+//! The data-parallel replica layer ([`crate::coordinator::distributed`])
+//! runs these same kernels on every replica worker and extends the
+//! fixed-order-reduction discipline across the replica boundary, so the
+//! contracts compose: any `FASTDP_THREADS` per replica x any replica
+//! count => one bit-identical result per tier.
 
 pub mod fused;
+pub mod ghost;
 pub mod legacy;
 pub mod loss;
 pub mod view;
 pub mod workspace;
 
+pub use ghost::{GhostCtx, GhostPlan};
 pub use view::{NetView, TrainSlots};
 pub use workspace::Workspace;
 
@@ -47,6 +66,9 @@ pub enum KernelMode {
     /// Workspace-reusing fused kernels (the default).
     #[default]
     Fused,
+    /// Ghost-norm book-keeping: per-sample norms from factorized structure,
+    /// clipped accumulation without materializing per-sample gradients.
+    Ghost,
     /// The pre-optimization per-row-allocating scalar path, kept as a
     /// correctness oracle and benchmark baseline.  Only the train step has
     /// a legacy variant; eval/decode always run fused.
@@ -57,6 +79,7 @@ impl KernelMode {
     pub fn parse(s: &str) -> Option<KernelMode> {
         match s.to_ascii_lowercase().as_str() {
             "fused" => Some(KernelMode::Fused),
+            "ghost" => Some(KernelMode::Ghost),
             "legacy" => Some(KernelMode::Legacy),
             _ => None,
         }
@@ -65,16 +88,28 @@ impl KernelMode {
     pub fn name(&self) -> &'static str {
         match self {
             KernelMode::Fused => "fused",
+            KernelMode::Ghost => "ghost",
             KernelMode::Legacy => "legacy",
         }
     }
 
-    /// Resolve from `FASTDP_KERNELS` (unset or unknown value => fused).
+    /// Resolve from `FASTDP_KERNELS`.  Unset => fused; an unrecognized
+    /// value also falls back to fused but warns **once** on stderr instead
+    /// of silently masking the typo.
     pub fn from_env() -> KernelMode {
-        std::env::var("FASTDP_KERNELS")
-            .ok()
-            .and_then(|v| KernelMode::parse(&v))
-            .unwrap_or_default()
+        match std::env::var("FASTDP_KERNELS") {
+            Err(_) => KernelMode::default(),
+            Ok(v) => KernelMode::parse(&v).unwrap_or_else(|| {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "fastdp: unrecognized FASTDP_KERNELS value {v:?} \
+                         (expected fused|ghost|legacy); falling back to fused"
+                    );
+                });
+                KernelMode::default()
+            }),
+        }
     }
 }
 
@@ -86,8 +121,11 @@ mod tests {
     fn kernel_mode_parses() {
         assert_eq!(KernelMode::parse("fused"), Some(KernelMode::Fused));
         assert_eq!(KernelMode::parse("LEGACY"), Some(KernelMode::Legacy));
+        assert_eq!(KernelMode::parse("ghost"), Some(KernelMode::Ghost));
+        assert_eq!(KernelMode::parse("GhOsT"), Some(KernelMode::Ghost));
         assert_eq!(KernelMode::parse("simd"), None);
         assert_eq!(KernelMode::default(), KernelMode::Fused);
         assert_eq!(KernelMode::Legacy.name(), "legacy");
+        assert_eq!(KernelMode::Ghost.name(), "ghost");
     }
 }

@@ -1,8 +1,14 @@
-//! Per-worker scratch buffers for the fused row kernels.
+//! Per-worker scratch buffers for the fused and ghost row kernels.
 //!
 //! One `Workspace` serves one worker thread; every buffer is sized for the
 //! model once and reused for every row (and every token position), so the
 //! steady-state row kernels perform no heap allocation at all.
+//!
+//! Per-sample *gradients* do not live here: the fused tier writes them
+//! straight into the caller-owned per-row shard (scaled in place by
+//! [`super::fused::clip_in_place`]), and the ghost tier never materializes
+//! them at all — it stores only the small factor vectors this workspace
+//! computes (`hact`, `dlogits`, `dh`, `dfeat`).
 
 /// Reusable f64 scratch for one worker.
 pub struct Workspace {
@@ -20,17 +26,14 @@ pub struct Workspace {
     pub dh: Vec<f64>,
     /// d(loss)/d(features) (`feat` long).
     pub dfeat: Vec<f64>,
-    /// Per-sample flat trainable gradient (`pt` long; empty for eval).
-    pub g: Vec<f64>,
     /// Active token ids of the current row (Cls pooling scratch).
     pub active: Vec<usize>,
 }
 
 impl Workspace {
     /// Allocate scratch for a model with `feat` input features, hidden
-    /// width `h`, `out` outputs and `g_len` trainable parameters (pass 0
-    /// for eval/decode steps, which never touch `g`).
-    pub fn new(feat: usize, h: usize, out: usize, g_len: usize) -> Workspace {
+    /// width `h` and `out` outputs.
+    pub fn new(feat: usize, h: usize, out: usize) -> Workspace {
         Workspace {
             feat: vec![0.0; feat],
             hpre: vec![0.0; h],
@@ -39,15 +42,7 @@ impl Workspace {
             dlogits: vec![0.0; out],
             dh: vec![0.0; h],
             dfeat: vec![0.0; feat],
-            g: vec![0.0; g_len],
             active: Vec::new(),
-        }
-    }
-
-    /// Zero the per-sample gradient before a new row.
-    pub fn zero_grad(&mut self) {
-        for v in self.g.iter_mut() {
-            *v = 0.0;
         }
     }
 }

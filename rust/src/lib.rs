@@ -42,17 +42,21 @@
 //!   scale out with `JobSpec::replicas` (real data-parallel workers, bit
 //!   identical trajectory, measured wire traffic) and snapshot/resume
 //!   bit-identically via `save_state` / `Engine::resume_session`.
-//! * [`kernels`] — fused, workspace-reusing CPU kernels behind the
-//!   interpreter backend (forward + loss + backward + clip in one pass,
-//!   zero steady-state allocation), plus the preserved legacy scalar path
-//!   (`FASTDP_KERNELS=legacy`) used as correctness oracle and benchmark
-//!   baseline.
+//! * [`kernels`] — the interpreter backend's three CPU kernel tiers
+//!   (`FASTDP_KERNELS`): **fused** (forward + loss + backward into the
+//!   row's shard + in-place clip, zero steady-state allocation),
+//!   **ghost** (the paper's §3.2 book-keeping: per-sample norms computed
+//!   analytically from activation/output-gradient factors, clipped
+//!   accumulation with **no per-sample gradient materialization**), and
+//!   the preserved **legacy** scalar path used as correctness oracle and
+//!   benchmark baseline.
 //! * [`runtime`] — loads AOT HLO artifacts (lowered once from JAX+Pallas by
 //!   `python/compile/aot.py`) and executes them via PJRT; wrapped by the
-//!   engine's PJRT backend.  Also hosts [`runtime::pool`], the scoped
-//!   thread pool that shards microbatch rows across `FASTDP_THREADS`
-//!   workers with a fixed-order deterministic reduction (bit-identical
-//!   results at any thread count).
+//!   engine's PJRT backend.  Also hosts [`runtime::pool`], the persistent
+//!   parked-worker pool that shards microbatch rows (and ghost phase-B
+//!   matrix rows) across `FASTDP_THREADS` workers with a fixed-order
+//!   deterministic reduction (bit-identical results at any thread count,
+//!   per kernel tier).
 //! * [`coordinator`] — orchestration substrates the engine composes:
 //!   optimizers, dataset assembly, workload construction, greedy decoding,
 //!   cached pretraining, checkpoints (parameter vectors and full session

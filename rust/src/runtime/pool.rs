@@ -1,32 +1,48 @@
-//! Dependency-free scoped data-parallel pool (`std::thread::scope`).
+//! Dependency-free persistent data-parallel worker pool.
 //!
 //! Per-sample gradients are embarrassingly parallel: each microbatch row is
-//! computed independently, then reduced.  This module shards row indices
+//! computed independently, then reduced.  This module shards task indices
 //! across workers with a **deterministic contract**:
 //!
-//! * each row's result is written to a slot (and buffer shard) owned by
-//!   that row index, never to a worker-local accumulator;
-//! * the caller reduces the per-row slots **in fixed row order** on the
+//! * each task's result is written to a slot (and buffer shard) owned by
+//!   that task index, never to a worker-local accumulator;
+//! * the caller reduces the per-task slots **in fixed index order** on the
 //!   calling thread.
 //!
-//! Which worker computes a row therefore cannot affect the result: outputs
+//! Which worker computes a task therefore cannot affect the result: outputs
 //! are bit-identical across any worker count (including 1), which is what
 //! lets `FASTDP_THREADS` be a pure throughput knob.
 //!
-//! Workers are scoped (spawned per call, joined before return), so the
-//! pool needs no shutdown protocol, holds no global state, and borrows the
-//! caller's buffers directly — no channels, no `Arc`, no unsafe.  The
-//! trade-off is ~tens of microseconds of spawn/join overhead per call:
-//! negligible against a real microbatch (per-row kernels run for
-//! milliseconds on the larger builtin models) but measurable on tiny
-//! shapes — set `FASTDP_THREADS=1` there, which runs inline with no spawn
-//! at all.  A persistent parked-worker pool could amortize this without
-//! changing the determinism contract; revisit if profiles ever show spawn
-//! cost dominating.
+//! ## Parked workers, not scoped spawns
+//!
+//! Workers are **persistent**: spawned once (lazily, growing to
+//! max(host parallelism, largest worker count requested)) and parked on a
+//! job channel between calls; a rotating cursor spreads concurrent
+//! dispatchers (e.g. replica threads) across the registry so they do not
+//! all queue behind the same few workers.
+//! The previous implementation spawned and joined scoped threads per call —
+//! fine for one coarse dispatch per microbatch, but the ghost kernel tier
+//! issues several finer-grained dispatches per step (per-leaf gradient
+//! accumulation), where tens of microseconds of spawn/join each would
+//! dominate.  Chunking is unchanged (contiguous index ranges, one per
+//! worker context), so the determinism contract is exactly the scoped
+//! pool's: scheduling is invisible to the caller.
+//!
+//! A dispatch runs its first chunk inline on the calling thread and ships
+//! the rest to parked workers as lifetime-erased jobs; the call does not
+//! return until every shipped job has reported completion (panics
+//! included, via a drop guard), so borrowed chunks never outlive the call.
+//! Jobs must not themselves dispatch pool work — nested calls (detected by
+//! worker-thread name) degrade to inline serial execution rather than risk
+//! a worker waiting on its own queue.
 //!
 //! The worker count comes from the caller (one scratch context per
 //! worker); [`default_threads`] resolves the `FASTDP_THREADS` environment
 //! variable, falling back to `std::thread::available_parallelism`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
 
 /// Worker count from `FASTDP_THREADS`, else the host parallelism.
 /// Invalid or zero values fall back to the host parallelism; the result is
@@ -42,6 +58,123 @@ pub fn default_threads() -> usize {
 /// The host's available parallelism (>= 1).
 pub fn host_parallelism() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A lifetime-erased unit of work shipped to a parked worker.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Thread-name prefix of pool workers (the nested-dispatch guard).
+const WORKER_NAME: &str = "fastdp-pool-";
+
+/// The global registry of parked workers, one job channel each.  Grows
+/// lazily to max(host parallelism, largest remote-worker count ever
+/// requested) and is never torn down (parked workers cost one blocked
+/// thread apiece and do not keep the process alive).
+static WORKERS: OnceLock<Mutex<Vec<Sender<Job>>>> = OnceLock::new();
+
+/// Rotating start offset so concurrent dispatchers (e.g. data-parallel
+/// replica threads, each pooling its own rows) land on different workers
+/// instead of all queueing behind `workers[0..n]`.
+static CURSOR: AtomicUsize = AtomicUsize::new(0);
+
+/// Clone `n` worker senders starting at the rotating cursor, spawning
+/// parked workers (up to the registry capacity) as needed.
+fn workers(n: usize) -> Vec<Sender<Job>> {
+    let cap = n.max(host_parallelism());
+    let reg = WORKERS.get_or_init(|| Mutex::new(Vec::new()));
+    let mut ws = reg.lock().unwrap_or_else(|e| e.into_inner());
+    while ws.len() < cap {
+        let (tx, rx) = channel::<Job>();
+        let name = format!("{WORKER_NAME}{}", ws.len());
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    // a panicking job must not kill the parked worker; its
+                    // DoneGuard reports the failure to the dispatcher
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                }
+            })
+            .expect("spawn fastdp pool worker");
+        ws.push(tx);
+    }
+    let start = CURSOR.fetch_add(n, Ordering::Relaxed);
+    (0..n).map(|i| ws[(start + i) % ws.len()].clone()).collect()
+}
+
+/// Sends completion (and success/panic status) back to the dispatcher even
+/// when the job unwinds.
+struct DoneGuard {
+    tx: Sender<bool>,
+    ok: bool,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(self.ok);
+    }
+}
+
+/// Run every job to completion before returning: the first inline on the
+/// calling thread, the rest on parked workers.
+///
+/// This is the one place borrowed data crosses a thread boundary: each job
+/// is transmuted to `'static` for the channel, which is sound because this
+/// function blocks on the done channel until every shipped job has
+/// reported back (the `DoneGuard` fires even on panic), so no job outlives
+/// the borrows it captured.
+fn run_jobs(jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    if jobs.is_empty() {
+        return;
+    }
+    let nested =
+        std::thread::current().name().is_some_and(|n| n.starts_with(WORKER_NAME));
+    if jobs.len() == 1 || nested {
+        // nothing to ship — or we *are* a pool worker, where shipping work
+        // could queue a job behind ourselves; run everything inline
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    let n_remote = jobs.len() - 1;
+    let (done_tx, done_rx) = channel::<bool>();
+    let mut iter = jobs.into_iter();
+    let local = iter.next().expect("at least one job");
+    let senders = workers(n_remote);
+    for (job, sender) in iter.zip(&senders) {
+        let tx = done_tx.clone();
+        let wrapped: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            let mut guard = DoneGuard { tx, ok: false };
+            job();
+            guard.ok = true;
+        });
+        // SAFETY: run_jobs blocks on done_rx below until every shipped job
+        // has sent through its DoneGuard (which fires on normal return and
+        // on unwind alike), so the borrows captured in `wrapped` strictly
+        // outlive its execution on the worker.
+        let wrapped: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(wrapped)
+        };
+        if let Err(back) = sender.send(wrapped) {
+            // worker unavailable (cannot happen in practice: workers park
+            // forever) — run the job here, still before any return
+            (back.0)();
+        }
+    }
+    drop(done_tx);
+    // run our own chunk while the workers run theirs; defer any panic
+    // until every remote job has finished so no borrow is left dangling
+    let local_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(local));
+    let mut remote_ok = true;
+    for _ in 0..n_remote {
+        // Err means every guard already reported and dropped — all done
+        remote_ok &= done_rx.recv().unwrap_or(false);
+    }
+    if let Err(p) = local_result {
+        std::panic::resume_unwind(p);
+    }
+    assert!(remote_ok, "a pool worker task panicked");
 }
 
 /// Run `out[i] = f(i, ctx)` for `i in 0..n`, sharding contiguous index
@@ -66,27 +199,27 @@ where
         }
         return;
     }
-    // contiguous row ranges per worker; which worker runs a row can never
-    // change its result, so scheduling is invisible to the caller
+    // contiguous index ranges per worker; which worker runs a task can
+    // never change its result, so scheduling is invisible to the caller
     let chunk = (n + workers - 1) / workers;
-    std::thread::scope(|scope| {
-        let f = &f;
-        for (w, (o_chunk, ctx)) in out.chunks_mut(chunk).zip(ctxs.iter_mut()).enumerate() {
-            let first = w * chunk;
-            scope.spawn(move || {
-                for (k, o) in o_chunk.iter_mut().enumerate() {
-                    *o = f(first + k, ctx);
-                }
-            });
-        }
-    });
+    let f = &f;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+    for (w, (o_chunk, ctx)) in out.chunks_mut(chunk).zip(ctxs.iter_mut()).enumerate() {
+        let first = w * chunk;
+        jobs.push(Box::new(move || {
+            for (k, o) in o_chunk.iter_mut().enumerate() {
+                *o = f(first + k, ctx);
+            }
+        }));
+    }
+    run_jobs(jobs);
 }
 
 /// Like [`for_each`], but each task additionally owns an exclusive
 /// `stride`-element shard of `buf`: `f(i, ctx, &mut buf[i*stride..(i+1)*stride])`.
 ///
-/// This is the per-sample-gradient shape: row `i` writes its clipped
-/// gradient into shard `i`, and the caller reduces shards in row order.
+/// This is the per-sample shape: task `i` writes its result into shard
+/// `i`, and the caller reduces shards in index order.
 pub fn for_each_sharded<S, C, T, F>(
     n: usize,
     ctxs: &mut [C],
@@ -112,22 +245,21 @@ pub fn for_each_sharded<S, C, T, F>(
         }
         return;
     }
-    // contiguous row ranges per worker, with the matching buffer shard run
+    // contiguous index ranges per worker, with the matching buffer shards
     let chunk = (n + workers - 1) / workers;
-    std::thread::scope(|scope| {
-        let f = &f;
-        let work = out.chunks_mut(chunk).zip(buf.chunks_mut(chunk * stride)).zip(ctxs.iter_mut());
-        for (w, ((o_chunk, b_chunk), ctx)) in work.enumerate() {
-            let first = w * chunk;
-            scope.spawn(move || {
-                for (k, (o, shard)) in
-                    o_chunk.iter_mut().zip(b_chunk.chunks_mut(stride)).enumerate()
-                {
-                    *o = f(first + k, ctx, shard);
-                }
-            });
-        }
-    });
+    let f = &f;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+    let work = out.chunks_mut(chunk).zip(buf.chunks_mut(chunk * stride)).zip(ctxs.iter_mut());
+    for (w, ((o_chunk, b_chunk), ctx)) in work.enumerate() {
+        let first = w * chunk;
+        jobs.push(Box::new(move || {
+            for (k, (o, shard)) in o_chunk.iter_mut().zip(b_chunk.chunks_mut(stride)).enumerate()
+            {
+                *o = f(first + k, ctx, shard);
+            }
+        }));
+    }
+    run_jobs(jobs);
 }
 
 #[cfg(test)]
@@ -186,6 +318,40 @@ mod tests {
             i
         });
         assert_eq!(ctxs.iter().sum::<usize>(), n);
+    }
+
+    #[test]
+    fn pool_workers_are_reused_across_calls() {
+        // many small dispatches against the same persistent workers; the
+        // per-call results stay correct and deterministic throughout
+        for round in 0..50usize {
+            let n = 7 + round % 5;
+            let mut ctxs = vec![(); 4];
+            let mut out = vec![0usize; n];
+            for_each(n, &mut ctxs, &mut out, |i, _| i * round);
+            let expect: Vec<usize> = (0..n).map(|i| i * round).collect();
+            assert_eq!(out, expect, "round={round}");
+        }
+    }
+
+    #[test]
+    fn pool_recovers_after_a_panicking_task() {
+        let boom = std::panic::catch_unwind(|| {
+            let mut ctxs = vec![(); 4];
+            let mut out = vec![0u8; 8];
+            for_each(8, &mut ctxs, &mut out, |i, _ctx| {
+                if i == 7 {
+                    panic!("boom");
+                }
+                1u8
+            });
+        });
+        assert!(boom.is_err(), "panic must propagate to the dispatcher");
+        // the parked workers survive and keep serving work
+        let mut ctxs = vec![(); 4];
+        let mut out = vec![0usize; 16];
+        for_each(16, &mut ctxs, &mut out, |i, _ctx| i);
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Ghost-tier equivalence contract (`FASTDP_KERNELS=ghost`):
+//!
+//! * per-sample squared norms computed by book-keeping must match the
+//!   materialized fused oracle within a tight relative tolerance, across
+//!   all four model families x {full, bitfit, lastlayer} x both clip
+//!   modes (plus non-DP rows);
+//! * the clipped gradient sum and the parameters after several training
+//!   steps must agree with the fused path within tolerance;
+//! * within the tier, outputs must be **bit-identical** across
+//!   `FASTDP_THREADS` in {1, 2, 8} — ghost reassociates reductions vs
+//!   fused, so its cross-thread contract is its own.
+//!
+//! Inputs come from `bench::synth_step_inputs` — the same generator the
+//! throughput harness's probes use — with the mask and clip radius
+//! overridden to exercise masked rows and real DP clipping.
+
+use fastdp::bench::synth_step_inputs;
+use fastdp::engine::{Backend, InterpreterBackend, KernelMode, StepRunner};
+use fastdp::util::tensor::Tensor;
+
+/// Per-element relative tolerance for ghost vs fused (both paths compute
+/// in f64 and cast to f32; only reduction order differs).
+const RTOL: f32 = 1e-4;
+/// Absolute floor below which values are considered equal.
+const ATOL: f32 = 1e-6;
+
+/// One artifact per (family, subset): every trainable-leaf combination
+/// the ghost plan can take, including the embedding scatter (full on
+/// token models), the bias-less CNN, and BiTFiT-Add.
+const ARTIFACTS: &[&str] = &[
+    // cls: full (embed scatter + enc), bitfit, lastlayer
+    "cls-base__dp-full-opacus",
+    "cls-base__dp-bitfit",
+    "cls-base__dp-lastlayer",
+    // lm: the T x T Gram path
+    "lm-small__dp-full-opacus",
+    "lm-small__dp-bitfit",
+    "lm-small__dp-lastlayer",
+    // vit: pixel features re-read from the batch in phase B
+    "vit-c10__dp-full-opacus",
+    "vit-c10__dp-bitfit",
+    "vit-c10__dp-lastlayer",
+    // cnn: bias-less first layer (full), BiTFiT-Add twin
+    "cnn-small__dp-full-opacus",
+    "cnn-small__dp-bitfit",
+    "cnn-small-bias__dp-bitfit-add",
+    // clip-mode coverage (paper Table 12) and the non-DP (c = 1) path
+    "cls-base__dp-bitfit__autos",
+    "lm-small__dp-full-opacus__autos",
+    "vit-c10__dp-bitfit__abadi",
+    "cls-base__nondp-full",
+    "lm-small__nondp-bitfit",
+];
+
+/// Synthetic train inputs with the last 3 rows masked out and a clip
+/// radius small enough that DP clipping really fires.
+fn train_inputs(backend: &InterpreterBackend, step: &dyn StepRunner, seed: u64) -> Vec<Tensor> {
+    let meta = step.meta().clone();
+    let b = meta.batch;
+    let mut inputs = synth_step_inputs(backend, &meta, seed).unwrap();
+    let mut mask = vec![1.0f32; b];
+    for m in mask.iter_mut().skip(b.saturating_sub(3)) {
+        *m = 0.0;
+    }
+    inputs[4] = Tensor::f32(vec![b], mask);
+    inputs[5] = Tensor::scalar_f32(0.05);
+    inputs
+}
+
+/// Run one step of `artifact` under (threads, mode) on the shared inputs.
+fn outputs(artifact: &str, threads: usize, mode: KernelMode) -> Vec<Tensor> {
+    let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    let step = backend.load(artifact).unwrap();
+    let inputs = train_inputs(&backend, step.as_ref(), 41);
+    step.run(&inputs).unwrap()
+}
+
+fn assert_tensors_close(a: &[Tensor], b: &[Tensor], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: output arity");
+    for (ti, (ta, tb)) in a.iter().zip(b).enumerate() {
+        let (va, vb) = (ta.as_f32(), tb.as_f32());
+        assert_eq!(va.len(), vb.len(), "{tag}: output {ti} length");
+        for (i, (&x, &y)) in va.iter().zip(vb).enumerate() {
+            let scale = x.abs().max(y.abs()).max(ATOL);
+            assert!(
+                (x - y).abs() / scale < RTOL,
+                "{tag}: output {ti}[{i}]: fused {x} vs ghost {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ghost_norms_and_grads_match_fused_oracle() {
+    for artifact in ARTIFACTS {
+        let fused = outputs(artifact, 2, KernelMode::Fused);
+        let ghost = outputs(artifact, 2, KernelMode::Ghost);
+        // outputs are [loss, grad, sq_norms]: the norms are the ghost
+        // tier's analytic claim, the grad its clipped accumulation
+        assert_tensors_close(&fused, &ghost, artifact);
+        // sq_norms must be present and sane: finite, non-negative, zero
+        // exactly on the masked rows
+        let b = fused[2].len();
+        let sq = ghost[2].as_f32();
+        assert!(sq.iter().all(|&s| s.is_finite() && s >= 0.0), "{artifact}");
+        for row in b - 3..b {
+            assert_eq!(sq[row], 0.0, "{artifact}: masked row {row} has a norm");
+        }
+    }
+}
+
+#[test]
+fn ghost_outputs_bit_identical_across_thread_counts() {
+    for artifact in ARTIFACTS {
+        let bits = |threads: usize| -> Vec<Vec<u32>> {
+            outputs(artifact, threads, KernelMode::Ghost)
+                .iter()
+                .map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect())
+                .collect()
+        };
+        let base = bits(1);
+        for threads in [2usize, 8] {
+            assert_eq!(base, bits(threads), "{artifact}: ghost threads=1 vs {threads}");
+        }
+    }
+}
+
+#[test]
+fn ghost_training_trajectory_matches_fused() {
+    // several SGD steps per artifact: parameters must stay within
+    // tolerance of the fused trajectory (errors do not compound past it)
+    for artifact in ["cls-base__dp-bitfit", "lm-small__dp-bitfit", "cnn-small__dp-full-opacus"] {
+        let run = |mode: KernelMode| -> Vec<f32> {
+            let mut backend = InterpreterBackend::with_config(Some(2), Some(mode));
+            let step = backend.load(artifact).unwrap();
+            let meta = step.meta().clone();
+            let mut inputs = train_inputs(&backend, step.as_ref(), 57);
+            let pt = meta.pt;
+            let b = meta.batch as f32;
+            for _ in 0..5 {
+                let out = step.run(&inputs).unwrap();
+                let grad = out[1].as_f32();
+                let mut train = inputs[1].as_f32().to_vec();
+                for (p, g) in train.iter_mut().zip(grad) {
+                    *p -= 0.5 * g / b;
+                }
+                inputs[1] = Tensor::f32(vec![pt], train);
+            }
+            inputs[1].as_f32().to_vec()
+        };
+        let fused = run(KernelMode::Fused);
+        let ghost = run(KernelMode::Ghost);
+        for (i, (&x, &y)) in fused.iter().zip(&ghost).enumerate() {
+            let scale = x.abs().max(y.abs()).max(1e-5);
+            assert!(
+                (x - y).abs() / scale < 1e-3,
+                "{artifact}: param {i} diverged: fused {x} vs ghost {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ghost_handles_all_masked_and_all_active_extremes() {
+    for artifact in ["cls-base__dp-bitfit", "lm-small__dp-full-opacus"] {
+        let mut backend = InterpreterBackend::with_config(Some(2), Some(KernelMode::Ghost));
+        let step = backend.load(artifact).unwrap();
+        let meta = step.meta().clone();
+        let b = meta.batch;
+        let mut inputs = synth_step_inputs(&backend, &meta, 3).unwrap();
+        inputs[5] = Tensor::scalar_f32(0.05);
+        // all rows masked: zero loss, zero grad, zero norms
+        inputs[4] = Tensor::f32(vec![b], vec![0.0; b]);
+        let out = step.run(&inputs).unwrap();
+        assert_eq!(out[0].item_f32(), 0.0, "{artifact}");
+        assert!(out[1].as_f32().iter().all(|&g| g == 0.0), "{artifact}");
+        assert!(out[2].as_f32().iter().all(|&s| s == 0.0), "{artifact}");
+        // all rows active: per-sample clipped norms bound the summed grad
+        inputs[4] = Tensor::f32(vec![b], vec![1.0; b]);
+        let out = step.run(&inputs).unwrap();
+        let norm = fastdp::util::tensor::l2_norm(out[1].as_f32());
+        assert!(
+            norm <= b as f64 * 0.05 + 1e-4,
+            "{artifact}: clipped sum norm {norm} exceeds B*R"
+        );
+    }
+}

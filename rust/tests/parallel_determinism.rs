@@ -119,12 +119,16 @@ fn decode_outputs_bit_identical_across_thread_counts() {
 
 #[test]
 fn thread_override_and_env_defaults_agree() {
-    // a backend with no override resolves FASTDP_THREADS when loading; an
-    // explicit override must produce the same bits regardless
+    // a backend with no thread override resolves FASTDP_THREADS when
+    // loading; an explicit override must produce the same bits regardless.
+    // The kernel tier is pinned to fused: the ghost tier is only
+    // tolerance-equal to fused (see tests/ghost_equivalence.rs), so an
+    // env-resolved kernel mode would make this bit-compare meaningless
+    // under the ci.sh FASTDP_KERNELS matrix.
     let a = output_bits("cls-base__dp-bitfit", 1, KernelMode::Fused);
     let b = output_bits("cls-base__dp-bitfit", 8, KernelMode::Fused);
     assert_eq!(a, b);
-    let mut backend = InterpreterBackend::new(); // env-resolved threads
+    let mut backend = InterpreterBackend::with_config(None, Some(KernelMode::Fused));
     let step = backend.load("cls-base__dp-bitfit").unwrap();
     let inputs = train_inputs(&backend, step.as_ref(), 29);
     let out = step.run(&inputs).unwrap();
