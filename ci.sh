@@ -56,11 +56,15 @@ if [ "$run_matrix" = 1 ]; then
     # (The test binaries are already built by the tier-1 run above, so each
     # cell only pays test execution time.)
     for threads in 1 4; do
-        for kernels in fused legacy ghost; do
+        for kernels in fused legacy ghost blocked; do
             echo "==> determinism matrix: FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels"
             FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels cargo test -q
         done
     done
+    # the blocked tier's block width is a pure throughput knob; one odd
+    # width re-runs its equivalence suite to prove outputs don't move
+    echo "==> determinism matrix: FASTDP_KERNELS=blocked FASTDP_BLOCK_ROWS=5"
+    FASTDP_KERNELS=blocked FASTDP_BLOCK_ROWS=5 cargo test -q --test blocked_equivalence
 fi
 
 if [ "$run_bench" = 1 ]; then
@@ -68,19 +72,31 @@ if [ "$run_bench" = 1 ]; then
     # smoke numbers go to a temp file so a full-sweep BENCH_step_throughput.json
     # at the repo root (the real trajectory) is never clobbered by tiny shapes
     out="$(mktemp "${TMPDIR:-/tmp}/bench_smoke.XXXXXX.json")"
+    snap="../BENCH_step_throughput.json"
+    # regression gate: once a trajectory snapshot exists, the harness
+    # compares each (model, method) best_rows_per_sec summary against it
+    # and exits non-zero on a >20% throughput drop
+    baseline=""
+    if [ -f "$snap" ]; then
+        baseline="$snap"
+    fi
     # the harness itself validates the schema and exits non-zero if outputs
-    # are not bit-identical across thread counts / kernel modes
+    # are not bit-identical across thread counts / kernel modes / block widths
     FASTDP_BENCH_QUICK=1 FASTDP_BENCH_STEPS=3 FASTDP_BENCH_THREADS=1,2 \
+        FASTDP_BENCH_BASELINE="$baseline" \
         FASTDP_BENCH_OUT="$out" cargo bench --bench throughput
-    for key in '"bench"' '"points"' '"steps_per_sec"' '"rows_per_sec"' \
-               '"peak_scratch_bytes"' '"ghost_steps_per_sec"' '"ghost_within_tolerance"' \
-               '"speedup_vs_scalar"' '"deterministic"' '"overhead_ratio"' '"ghost"'; do
+    for key in '"bench"' '"sweep"' '"points"' '"steps_per_sec"' '"rows_per_sec"' \
+               '"block_rows"' '"peak_scratch_bytes"' \
+               '"ghost_steps_per_sec"' '"ghost_within_tolerance"' \
+               '"blocked_steps_per_sec"' '"blocked_within_tolerance"' \
+               '"best_rows_per_sec"' \
+               '"speedup_vs_scalar"' '"deterministic"' '"overhead_ratio"' \
+               '"ghost"' '"blocked"'; do
         grep -q "$key" "$out" || { echo "bench-smoke: $key missing from $out" >&2; exit 1; }
     done
     # seed the in-repo perf trajectory from the bench stage if it has never
     # been recorded; a later full sweep (cargo bench --bench throughput)
     # overwrites it with full-size numbers
-    snap="../BENCH_step_throughput.json"
     if [ ! -f "$snap" ]; then
         cp "$out" "$snap"
         echo "bench-smoke: seeded $snap (smoke-sized; run the full sweep to refresh)"

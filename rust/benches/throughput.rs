@@ -1,44 +1,63 @@
 //! Step-throughput trajectory bench: sweeps the interpreter train step
-//! over kernel tier (legacy scalar vs fused vs ghost) x worker count,
-//! verifies the per-tier determinism contracts, and emits
+//! over kernel tier (legacy scalar vs fused vs ghost vs blocked) x worker
+//! count (plus a block-width sweep for the blocked tier), verifies the
+//! per-tier determinism contracts, and emits
 //! `BENCH_step_throughput.json` at the repo root so future PRs have a
 //! number to beat.
 //!
 //! Knobs (all env vars):
-//!   FASTDP_BENCH_STEPS    timed steps per point (default 30; quick: 5)
-//!   FASTDP_BENCH_QUICK    set => smallest model/method sweep
-//!   FASTDP_BENCH_THREADS  comma list of worker counts (default "1,2,8")
-//!   FASTDP_BENCH_OUT      output path override
+//!   FASTDP_BENCH_STEPS     timed steps per point (default 30; quick: 5)
+//!   FASTDP_BENCH_QUICK     set => smallest model/method sweep
+//!   FASTDP_BENCH_THREADS   comma list of worker counts (default "1,2,8")
+//!   FASTDP_BENCH_BLOCKS    comma list of blocked-tier block widths swept
+//!                          at one worker (default "4,8,16,32"; quick "8,32")
+//!   FASTDP_BENCH_OUT       output path override
+//!   FASTDP_BENCH_BASELINE  snapshot to gate against: >20% drop in any
+//!                          matching (model, method) best_rows_per_sec
+//!                          summary fails the run (ci.sh sets this to the
+//!                          repo-root trajectory file once it exists)
 //!
 //! JSON schema: see the README "Performance" section; the document is
 //! validated right after writing (and again by ci.sh's bench-smoke stage).
-//! Every point carries `peak_scratch_bytes` — the analytic gradient-side
-//! memory of the cell — so the grid reproduces Table 2's complexity
-//! claims: the ghost tier's DP step runs without the O(B·pt) per-sample
-//! gradient buffer.
+//! Every point carries `rows_per_sec`, `block_rows` (0 off the blocked
+//! tier) and `peak_scratch_bytes` — the analytic gradient-side memory of
+//! the cell — so the grid reproduces Table 2's complexity claims and the
+//! issue's headline: the blocked tier amortizes weight-panel traffic
+//! across microbatch rows, making per-row DP clipping cost-invisible next
+//! to the batched matmul.
 //!
 //! Exit code is non-zero if any (model, method) violated its tier
-//! contract: fused must be bit-identical across worker counts and to the
-//! legacy scalar path; ghost must be bit-identical across worker counts
-//! and within 1e-4 relative tolerance of the fused oracle.
+//! contract (fused bit-identical across worker counts and to the legacy
+//! scalar path; ghost bit-identical across worker counts; blocked
+//! bit-identical across worker counts *and* block widths; ghost and
+//! blocked within 1e-4 relative tolerance of the fused oracle) or if the
+//! baseline gate tripped.
 
 use fastdp::bench::{self, DpOverhead, ThroughputPoint, ThroughputSummary};
 use fastdp::kernels::KernelMode;
 use fastdp::util::table::Table;
 
-/// Relative tolerance of the ghost-vs-fused agreement contract.
-const GHOST_RTOL: f64 = 1e-4;
+/// Relative tolerance of the ghost/blocked vs fused agreement contract.
+const FACTOR_TIER_RTOL: f64 = 1e-4;
+/// Largest relative drop vs the baseline snapshot the gate tolerates.
+const GATE_MAX_DROP: f64 = 0.20;
+
+fn env_list(key: &str, default: &str) -> Vec<usize> {
+    let raw = std::env::var(key).unwrap_or_else(|_| default.to_string());
+    let v: Vec<usize> =
+        raw.split(',').filter_map(|s| s.trim().parse().ok()).filter(|&n| n >= 1).collect();
+    if v.is_empty() {
+        default.split(',').filter_map(|s| s.trim().parse().ok()).collect()
+    } else {
+        v
+    }
+}
 
 fn main() {
     let quick = bench::quick();
     let steps = bench::bench_steps(if quick { 5 } else { 30 });
-    let thread_counts: Vec<usize> = std::env::var("FASTDP_BENCH_THREADS")
-        .unwrap_or_else(|_| "1,2,8".to_string())
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .filter(|&n| n >= 1)
-        .collect();
-    let thread_counts = if thread_counts.is_empty() { vec![1, 2, 8] } else { thread_counts };
+    let thread_counts = env_list("FASTDP_BENCH_THREADS", "1,2,8");
+    let block_widths = env_list("FASTDP_BENCH_BLOCKS", if quick { "8,32" } else { "4,8,16,32" });
     // lm-large is the largest builtin model; the quick sweep keeps one
     // small model so CI smoke stays fast
     let models: Vec<&str> = if quick { vec!["cls-base"] } else { vec!["cls-base", "lm-large"] };
@@ -60,14 +79,16 @@ fn main() {
     let mut all_ok = true;
     for model in &models {
         for method in &methods {
-            let scalar = bench::interp_throughput(model, method, 1, KernelMode::Legacy, steps)
-                .expect("legacy baseline");
+            let scalar =
+                bench::interp_throughput(model, method, 1, KernelMode::Legacy, None, steps)
+                    .expect("legacy baseline");
             points.push(scalar.clone());
             let mut best_fused: Option<ThroughputPoint> = None;
             let mut best_ghost = 0.0f64;
+            let mut best_blocked = 0.0f64;
             for &t in &thread_counts {
-                for mode in [KernelMode::Fused, KernelMode::Ghost] {
-                    let p = bench::interp_throughput(model, method, t, mode, steps)
+                for mode in [KernelMode::Fused, KernelMode::Ghost, KernelMode::Blocked] {
+                    let p = bench::interp_throughput(model, method, t, mode, None, steps)
                         .expect("sweep point");
                     match mode {
                         KernelMode::Fused => {
@@ -79,33 +100,89 @@ fn main() {
                                 best_fused = Some(p.clone());
                             }
                         }
-                        _ => best_ghost = best_ghost.max(p.steps_per_sec),
+                        KernelMode::Ghost => best_ghost = best_ghost.max(p.steps_per_sec),
+                        _ => best_blocked = best_blocked.max(p.steps_per_sec),
                     }
                     points.push(p);
                 }
             }
+            // block-width sweep at one worker: the knob the issue's >= 2x
+            // fused-at-B>=32 acceptance point reads off
+            for &blk in &block_widths {
+                let p = bench::interp_throughput(
+                    model,
+                    method,
+                    1,
+                    KernelMode::Blocked,
+                    Some(blk),
+                    steps,
+                )
+                .expect("block sweep point");
+                best_blocked = best_blocked.max(p.steps_per_sec);
+                points.push(p);
+            }
             // tier contracts on one probe input set: fused bit-identical
             // across worker counts and to legacy; ghost bit-identical
-            // across worker counts and tolerance-close to fused.  One
-            // value run per (tier, threads) serves both probes — bits are
-            // derived from the same outputs.
+            // across worker counts; blocked bit-identical across worker
+            // counts AND block widths; ghost/blocked tolerance-close to
+            // fused.  One value run per cell serves both probes — bits
+            // are derived from the same outputs.
             let fused_vals = bench::interp_outputs(model, method, 1, KernelMode::Fused)
                 .expect("determinism probe");
             let ghost_vals = bench::interp_outputs(model, method, 1, KernelMode::Ghost)
                 .expect("ghost determinism probe");
+            let blocked_vals = bench::interp_outputs_blocked(
+                model,
+                method,
+                1,
+                KernelMode::Blocked,
+                Some(block_widths[0]),
+            )
+            .expect("blocked determinism probe");
             let base = bench::output_bits_of(&fused_vals);
             let ghost_base = bench::output_bits_of(&ghost_vals);
+            let blocked_base = bench::output_bits_of(&blocked_vals);
             let mut deterministic = thread_counts.iter().filter(|&&t| t != 1).all(|&t| {
                 bench::interp_output_bits(model, method, t, KernelMode::Fused).unwrap() == base
                     && bench::interp_output_bits(model, method, t, KernelMode::Ghost).unwrap()
                         == ghost_base
+                    && bench::output_bits_of(
+                        &bench::interp_outputs_blocked(
+                            model,
+                            method,
+                            t,
+                            KernelMode::Blocked,
+                            Some(block_widths[0]),
+                        )
+                        .unwrap(),
+                    ) == blocked_base
             });
             deterministic &=
                 bench::interp_output_bits(model, method, 1, KernelMode::Legacy).unwrap() == base;
+            // blocked_base already covers block_widths[0] at one worker
+            deterministic &= block_widths.iter().skip(1).all(|&blk| {
+                bench::output_bits_of(
+                    &bench::interp_outputs_blocked(
+                        model,
+                        method,
+                        1,
+                        KernelMode::Blocked,
+                        Some(blk),
+                    )
+                    .unwrap(),
+                ) == blocked_base
+            });
             let ghost_within_tolerance =
-                bench::max_rel_diff(&fused_vals, &ghost_vals) < GHOST_RTOL;
-            all_ok &= deterministic && ghost_within_tolerance;
+                bench::max_rel_diff(&fused_vals, &ghost_vals) < FACTOR_TIER_RTOL;
+            let blocked_within_tolerance =
+                bench::max_rel_diff(&fused_vals, &blocked_vals) < FACTOR_TIER_RTOL;
+            all_ok &= deterministic && ghost_within_tolerance && blocked_within_tolerance;
             let best = best_fused.expect("at least one fused point");
+            let best_rows_per_sec = points
+                .iter()
+                .filter(|p| p.model == *model && p.method == *method)
+                .map(|p| p.rows_per_sec)
+                .fold(0.0f64, f64::max);
             summaries.push(ThroughputSummary {
                 model: model.to_string(),
                 method: method.to_string(),
@@ -113,15 +190,19 @@ fn main() {
                 scalar_steps_per_sec: scalar.steps_per_sec,
                 fused_steps_per_sec: best.steps_per_sec,
                 ghost_steps_per_sec: best_ghost,
+                blocked_steps_per_sec: best_blocked,
+                best_rows_per_sec,
                 speedup_vs_scalar: best.steps_per_sec / scalar.steps_per_sec,
                 deterministic,
                 ghost_within_tolerance,
+                blocked_within_tolerance,
             });
             eprintln!("done {model}__{method}");
         }
         // paper headline: DP overhead of BiTFiT at the widest sweep
-        // point, per kernel tier — the ghost row is the §3.2 claim
-        for kernels in ["fused", "ghost"] {
+        // point, per kernel tier — the ghost/blocked rows are the §3.2
+        // claim
+        for kernels in ["fused", "ghost", "blocked"] {
             let find = |method: &str| {
                 points.iter().find(|p| {
                     p.model == *model
@@ -143,12 +224,13 @@ fn main() {
         }
     }
 
-    // the fused-vs-ghost-vs-legacy grid, one line per swept cell
+    // the fused-vs-ghost-vs-blocked-vs-legacy grid, one line per cell
     let mut grid = Table::new(&[
         "model",
         "method",
         "kernels",
         "threads",
+        "block",
         "steps/s",
         "rows/s",
         "peak scratch (bytes)",
@@ -159,6 +241,7 @@ fn main() {
             p.method.clone(),
             p.kernels.clone(),
             p.threads.to_string(),
+            if p.block_rows == 0 { "-".to_string() } else { p.block_rows.to_string() },
             format!("{:.2}", p.steps_per_sec),
             format!("{:.1}", p.rows_per_sec),
             p.peak_scratch_bytes.to_string(),
@@ -173,6 +256,8 @@ fn main() {
         "scalar steps/s",
         "best fused steps/s",
         "best ghost steps/s",
+        "best blocked steps/s",
+        "best rows/s",
         "threads",
         "speedup",
         "contracts",
@@ -184,9 +269,15 @@ fn main() {
             format!("{:.2}", s.scalar_steps_per_sec),
             format!("{:.2}", s.fused_steps_per_sec),
             format!("{:.2}", s.ghost_steps_per_sec),
+            format!("{:.2}", s.blocked_steps_per_sec),
+            format!("{:.1}", s.best_rows_per_sec),
             s.best_threads.to_string(),
             format!("{:.2}x", s.speedup_vs_scalar),
-            if s.deterministic && s.ghost_within_tolerance { "OK".into() } else { "FAIL".into() },
+            if s.deterministic && s.ghost_within_tolerance && s.blocked_within_tolerance {
+                "OK".into()
+            } else {
+                "FAIL".into()
+            },
         ]);
     }
     t.print();
@@ -206,7 +297,19 @@ fn main() {
     println!("\nDP-BiTFiT overhead (paper headline: ratio ~ 1):");
     o.print();
 
-    let doc = bench::throughput_json(&points, &summaries, &overheads, steps);
+    // the measurement configuration, recorded in the document so the
+    // regression gate only ever compares like-for-like runs
+    let join = |v: &[usize]| {
+        v.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(",")
+    };
+    let sweep = format!(
+        "quick={} steps={} threads={} blocks={}",
+        quick,
+        steps,
+        join(&thread_counts),
+        join(&block_widths)
+    );
+    let doc = bench::throughput_json(&points, &summaries, &overheads, steps, &sweep);
     let out_path = std::env::var("FASTDP_BENCH_OUT").unwrap_or_else(|_| {
         // benches run from rust/; the trajectory file lives at the repo root
         if std::path::Path::new("ROADMAP.md").exists() {
@@ -222,11 +325,44 @@ fn main() {
     bench::validate_throughput_json(&back).expect("emitted JSON failed schema validation");
     println!("\nwrote {out_path} (schema OK)");
 
+    // regression gate vs the recorded trajectory (ci.sh points
+    // FASTDP_BENCH_BASELINE at the repo-root snapshot once one exists)
+    let mut gate_ok = true;
+    if let Ok(baseline_path) =
+        std::env::var("FASTDP_BENCH_BASELINE").map_err(|e| e.to_string()).and_then(|p| {
+            if p.trim().is_empty() {
+                Err("unset".to_string())
+            } else {
+                Ok(p)
+            }
+        })
+    {
+        match std::fs::read_to_string(&baseline_path) {
+            Err(e) => eprintln!("gate: cannot read baseline {baseline_path}: {e} (skipping)"),
+            Ok(baseline) => match bench::gate_throughput_regression(&doc, &baseline, GATE_MAX_DROP)
+            {
+                Ok(lines) => {
+                    let pct = GATE_MAX_DROP * 100.0;
+                    println!("\ngate vs {baseline_path} (<= {pct:.0}% drop): OK");
+                    for l in lines {
+                        println!("  {l}");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("\ngate vs {baseline_path}: FAIL\n{e}");
+                    gate_ok = false;
+                }
+            },
+        }
+    }
+
     if !all_ok {
         eprintln!(
-            "FAIL: a kernel-tier contract was violated (fused/legacy bit-identity \
-             or ghost-vs-fused tolerance)"
+            "FAIL: a kernel-tier contract was violated (fused/legacy bit-identity, \
+             blocked thread/block-width bit-identity, or ghost/blocked-vs-fused tolerance)"
         );
+    }
+    if !all_ok || !gate_ok {
         std::process::exit(1);
     }
 }

@@ -222,9 +222,12 @@ pub fn memory_estimate(
 pub struct ThroughputPoint {
     pub model: String,
     pub method: String,
-    /// `"fused"`, `"ghost"` or `"legacy"`.
+    /// `"fused"`, `"ghost"`, `"blocked"` or `"legacy"`.
     pub kernels: String,
     pub threads: usize,
+    /// Block width of a blocked-tier cell (`FASTDP_BLOCK_ROWS`); 0 for
+    /// the row-at-a-time tiers.
+    pub block_rows: usize,
     pub sec_per_step: f64,
     pub steps_per_sec: f64,
     /// Microbatch rows per second (`batch / sec_per_step`).
@@ -247,15 +250,26 @@ pub struct ThroughputSummary {
     pub fused_steps_per_sec: f64,
     /// Best ghost-tier throughput over the swept worker counts.
     pub ghost_steps_per_sec: f64,
+    /// Best blocked-tier throughput over the swept worker counts and
+    /// block widths.
+    pub blocked_steps_per_sec: f64,
+    /// Best rows/sec over every swept cell of this (model, method) — the
+    /// number the `ci.sh` bench regression gate compares against the
+    /// repo-root `BENCH_step_throughput.json` snapshot.
+    pub best_rows_per_sec: f64,
     /// `fused_steps_per_sec / scalar_steps_per_sec` (the pre-PR path).
     pub speedup_vs_scalar: f64,
     /// Were loss/grad/sq_norms bit-identical across all swept worker
-    /// counts *and* vs the legacy path (fused tier), and bit-identical
-    /// across worker counts within the ghost tier?
+    /// counts *and* vs the legacy path (fused tier), bit-identical across
+    /// worker counts within the ghost tier, and bit-identical across
+    /// worker counts *and block widths* within the blocked tier?
     pub deterministic: bool,
     /// Did the ghost outputs match the fused oracle within the documented
     /// relative tolerance?
     pub ghost_within_tolerance: bool,
+    /// Did the blocked outputs match the fused oracle within the same
+    /// documented relative tolerance?
+    pub blocked_within_tolerance: bool,
 }
 
 /// DP-vs-non-DP cost of one model under one kernel tier at a fixed worker
@@ -328,15 +342,19 @@ pub fn synth_step_inputs(
 }
 
 /// Time `iters` executions of one interpreter train step (after one warmup
-/// that also populates the step's scratch caches).
+/// that also populates the step's scratch caches).  `block_rows` pins the
+/// blocked tier's block width (ignored by the other tiers; `None` defers
+/// to `FASTDP_BLOCK_ROWS`).
 pub fn interp_throughput(
     model: &str,
     method: &str,
     threads: usize,
     mode: KernelMode,
+    block_rows: Option<usize>,
     iters: usize,
 ) -> Result<ThroughputPoint, EngineError> {
     let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    backend.set_block_rows(block_rows);
     let artifact = format!("{model}__{method}");
     let step = backend.load(&artifact)?;
     let meta = step.meta().clone();
@@ -354,6 +372,11 @@ pub fn interp_throughput(
         method: method.to_string(),
         kernels: mode.name().to_string(),
         threads,
+        block_rows: if mode == KernelMode::Blocked {
+            block_rows.unwrap_or_else(crate::kernels::blocked::block_rows_from_env)
+        } else {
+            0
+        },
         sec_per_step,
         steps_per_sec: 1.0 / sec_per_step,
         rows_per_sec: meta.batch as f64 / sec_per_step,
@@ -363,14 +386,27 @@ pub fn interp_throughput(
 
 /// One train step's f32 outputs (loss, grad, sq_norms) as plain values —
 /// the tolerance-comparison twin of [`interp_output_bits`] used to check
-/// the ghost tier against the fused oracle.
+/// the factor-based tiers against the fused oracle.
 pub fn interp_outputs(
     model: &str,
     method: &str,
     threads: usize,
     mode: KernelMode,
 ) -> Result<Vec<Vec<f32>>, EngineError> {
+    interp_outputs_blocked(model, method, threads, mode, None)
+}
+
+/// [`interp_outputs`] with the blocked tier's block width pinned — the
+/// probe behind the bench's block-width bit-identity check.
+pub fn interp_outputs_blocked(
+    model: &str,
+    method: &str,
+    threads: usize,
+    mode: KernelMode,
+    block_rows: Option<usize>,
+) -> Result<Vec<Vec<f32>>, EngineError> {
     let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    backend.set_block_rows(block_rows);
     let step = backend.load(&format!("{model}__{method}"))?;
     let meta = step.meta().clone();
     let inputs = synth_step_inputs(&backend, &meta, 7)?;
@@ -408,12 +444,17 @@ pub fn interp_output_bits(
     Ok(output_bits_of(&interp_outputs(model, method, threads, mode)?))
 }
 
-/// Render the `BENCH_step_throughput.json` document.
+/// Render the `BENCH_step_throughput.json` document.  `sweep` is a
+/// free-form string identifying the measurement configuration (quick
+/// mode, steps, thread/block lists); the regression gate only compares
+/// documents whose sweep strings match, so smoke runs are never judged
+/// against full-sweep numbers.
 pub fn throughput_json(
     points: &[ThroughputPoint],
     summaries: &[ThroughputSummary],
     overheads: &[DpOverhead],
     steps_per_point: usize,
+    sweep: &str,
 ) -> String {
     let point = |p: &ThroughputPoint| {
         json::obj(vec![
@@ -421,6 +462,7 @@ pub fn throughput_json(
             ("method", Json::Str(p.method.clone())),
             ("kernels", Json::Str(p.kernels.clone())),
             ("threads", Json::Num(p.threads as f64)),
+            ("block_rows", Json::Num(p.block_rows as f64)),
             ("sec_per_step", Json::Num(p.sec_per_step)),
             ("steps_per_sec", Json::Num(p.steps_per_sec)),
             ("rows_per_sec", Json::Num(p.rows_per_sec)),
@@ -435,9 +477,12 @@ pub fn throughput_json(
             ("scalar_steps_per_sec", Json::Num(s.scalar_steps_per_sec)),
             ("fused_steps_per_sec", Json::Num(s.fused_steps_per_sec)),
             ("ghost_steps_per_sec", Json::Num(s.ghost_steps_per_sec)),
+            ("blocked_steps_per_sec", Json::Num(s.blocked_steps_per_sec)),
+            ("best_rows_per_sec", Json::Num(s.best_rows_per_sec)),
             ("speedup_vs_scalar", Json::Num(s.speedup_vs_scalar)),
             ("deterministic", Json::Bool(s.deterministic)),
             ("ghost_within_tolerance", Json::Bool(s.ghost_within_tolerance)),
+            ("blocked_within_tolerance", Json::Bool(s.blocked_within_tolerance)),
         ])
     };
     let overhead = |o: &DpOverhead| {
@@ -453,6 +498,7 @@ pub fn throughput_json(
     let doc = json::obj(vec![
         ("bench", Json::Str("step_throughput".to_string())),
         ("created_by", Json::Str("benches/throughput.rs".to_string())),
+        ("sweep", Json::Str(sweep.to_string())),
         ("steps_per_point", Json::Num(steps_per_point as f64)),
         (
             "host_parallelism",
@@ -476,6 +522,9 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
     if v.get("bench").and_then(|b| b.as_str()) != Some("step_throughput") {
         return Err("bench field is not \"step_throughput\"".to_string());
     }
+    if v.get("sweep").and_then(|s| s.as_str()).is_none() {
+        return Err("missing sweep config string".to_string());
+    }
     for key in ["steps_per_point", "host_parallelism"] {
         if v.get(key).and_then(|n| n.as_f64()).is_none() {
             return Err(format!("missing numeric field {key:?}"));
@@ -493,6 +542,7 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
         "method",
         "kernels",
         "threads",
+        "block_rows",
         "sec_per_step",
         "steps_per_sec",
         "rows_per_sec",
@@ -514,9 +564,12 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
         "scalar_steps_per_sec",
         "fused_steps_per_sec",
         "ghost_steps_per_sec",
+        "blocked_steps_per_sec",
+        "best_rows_per_sec",
         "speedup_vs_scalar",
         "deterministic",
         "ghost_within_tolerance",
+        "blocked_within_tolerance",
     ];
     for s in summary {
         for key in summary_keys {
@@ -542,6 +595,80 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// Compare a freshly emitted `BENCH_step_throughput.json` document against
+/// a baseline snapshot and fail on a throughput regression: for every
+/// (model, method) summary present in **both** documents, the new
+/// `best_rows_per_sec` must be at least `(1 - max_drop)` of the
+/// baseline's.  Documents with different `sweep` configuration strings
+/// are never compared (a smoke run must not be judged against a
+/// full-sweep snapshot — the gate reports the mismatch and passes), and
+/// rows only one document has (or baseline rows predating the
+/// `best_rows_per_sec` field) are skipped, so the gate survives sweep
+/// and schema growth.  Returns the human-readable comparison lines on
+/// success; the offending lines in the error on failure.
+pub fn gate_throughput_regression(
+    new_doc: &str,
+    baseline_doc: &str,
+    max_drop: f64,
+) -> Result<Vec<String>, String> {
+    let parse = |src: &str| -> Result<(String, Vec<(String, String, f64)>), String> {
+        let v = json::parse(src)?;
+        let sweep = v.get("sweep").and_then(|s| s.as_str()).unwrap_or_default().to_string();
+        let arr = v
+            .get("summary")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| "missing summary array".to_string())?;
+        let mut out = Vec::new();
+        for s in arr {
+            let model = s.get("model").and_then(|m| m.as_str()).unwrap_or_default();
+            let method = s.get("method").and_then(|m| m.as_str()).unwrap_or_default();
+            if let Some(r) = s.get("best_rows_per_sec").and_then(|r| r.as_f64()) {
+                out.push((model.to_string(), method.to_string(), r));
+            }
+        }
+        Ok((sweep, out))
+    };
+    let (new_sweep, new) = parse(new_doc).map_err(|e| format!("new document: {e}"))?;
+    let (base_sweep, base) = parse(baseline_doc).map_err(|e| format!("baseline: {e}"))?;
+    if new_sweep != base_sweep {
+        return Ok(vec![format!(
+            "skipped: sweep config mismatch (new {new_sweep:?} vs baseline {base_sweep:?}) \
+             — refresh the snapshot with this configuration to re-arm the gate"
+        )]);
+    }
+    let mut report = Vec::new();
+    let mut failures = Vec::new();
+    for (model, method, old_r) in &base {
+        let Some((_, _, new_r)) =
+            new.iter().find(|(m, me, _)| m == model && me == method)
+        else {
+            continue;
+        };
+        if *old_r <= 0.0 {
+            continue;
+        }
+        let ratio = new_r / old_r;
+        let line = format!(
+            "{model}__{method}: {new_r:.1} rows/s vs snapshot {old_r:.1} ({:+.1}%)",
+            (ratio - 1.0) * 100.0
+        );
+        if ratio < 1.0 - max_drop {
+            failures.push(line);
+        } else {
+            report.push(line);
+        }
+    }
+    if failures.is_empty() {
+        Ok(report)
+    } else {
+        Err(format!(
+            "throughput regression > {:.0}% vs baseline:\n  {}",
+            max_drop * 100.0,
+            failures.join("\n  ")
+        ))
+    }
+}
+
 /// Map artifact method names onto complexity-table methods.
 pub fn parse_method(method: &str) -> crate::analysis::complexity::Method {
     use crate::analysis::complexity::Method;
@@ -561,11 +688,16 @@ mod tests {
     use super::*;
 
     fn sample_doc() -> String {
+        sample_doc_with_rows(64.0)
+    }
+
+    fn sample_doc_with_rows(best_rows_per_sec: f64) -> String {
         let points = vec![ThroughputPoint {
             model: "cls-base".into(),
             method: "dp-bitfit".into(),
             kernels: "fused".into(),
             threads: 2,
+            block_rows: 0,
             sec_per_step: 0.5,
             steps_per_sec: 2.0,
             rows_per_sec: 64.0,
@@ -578,9 +710,12 @@ mod tests {
             scalar_steps_per_sec: 0.5,
             fused_steps_per_sec: 2.0,
             ghost_steps_per_sec: 2.1,
+            blocked_steps_per_sec: 4.2,
+            best_rows_per_sec,
             speedup_vs_scalar: 4.0,
             deterministic: true,
             ghost_within_tolerance: true,
+            blocked_within_tolerance: true,
         }];
         let overheads = vec![DpOverhead {
             model: "cls-base".into(),
@@ -590,7 +725,7 @@ mod tests {
             nondp_steps_per_sec: 2.2,
             overhead_ratio: 1.1,
         }];
-        throughput_json(&points, &summaries, &overheads, 3)
+        throughput_json(&points, &summaries, &overheads, 3, "quick steps=3 threads=1,2")
     }
 
     #[test]
@@ -622,11 +757,39 @@ mod tests {
     }
 
     #[test]
+    fn gate_passes_within_budget_and_fails_beyond_it() {
+        let base = sample_doc_with_rows(100.0);
+        // 10% drop passes a 20% gate
+        let ok = gate_throughput_regression(&sample_doc_with_rows(90.0), &base, 0.2).unwrap();
+        assert_eq!(ok.len(), 1, "one compared row");
+        // 30% drop fails it, and the message names the cell
+        let err = gate_throughput_regression(&sample_doc_with_rows(70.0), &base, 0.2)
+            .unwrap_err();
+        assert!(err.contains("cls-base__dp-bitfit"), "{err}");
+        // an improvement always passes
+        gate_throughput_regression(&sample_doc_with_rows(250.0), &base, 0.2).unwrap();
+        // disjoint (model, method) sets compare nothing and pass
+        let other = sample_doc_with_rows(100.0).replace("cls-base", "lm-large");
+        let ok = gate_throughput_regression(&sample_doc_with_rows(1.0), &other, 0.2).unwrap();
+        assert!(ok.is_empty());
+        // different sweep configurations are never compared: a tiny smoke
+        // run against a full-sweep snapshot passes with a mismatch note
+        let full = sample_doc_with_rows(100.0).replace("quick steps=3", "full steps=30");
+        let ok = gate_throughput_regression(&sample_doc_with_rows(1.0), &full, 0.2).unwrap();
+        assert_eq!(ok.len(), 1);
+        assert!(ok[0].contains("sweep config mismatch"), "{}", ok[0]);
+        // broken baselines are typed errors, not panics
+        assert!(gate_throughput_regression(&base, "not json", 0.2).is_err());
+    }
+
+    #[test]
     fn interp_throughput_measures_and_is_deterministic() {
-        let p = interp_throughput("cls-base", "dp-bitfit", 2, KernelMode::Fused, 1).unwrap();
+        let p =
+            interp_throughput("cls-base", "dp-bitfit", 2, KernelMode::Fused, None, 1).unwrap();
         assert!(p.sec_per_step > 0.0 && p.sec_per_step.is_finite());
         assert!(p.steps_per_sec > 0.0 && p.rows_per_sec > p.steps_per_sec);
         assert_eq!(p.kernels, "fused");
+        assert_eq!(p.block_rows, 0, "row-at-a-time tiers record no block width");
         assert!(p.peak_scratch_bytes > 0);
         // same inputs, different worker counts and kernels: identical bits
         let a = interp_output_bits("cls-base", "dp-bitfit", 1, KernelMode::Fused).unwrap();
@@ -642,5 +805,27 @@ mod tests {
         let f = interp_outputs("cls-base", "dp-bitfit", 1, KernelMode::Fused).unwrap();
         let g = interp_outputs("cls-base", "dp-bitfit", 1, KernelMode::Ghost).unwrap();
         assert!(max_rel_diff(&f, &g) < 1e-4, "ghost diverges: {}", max_rel_diff(&f, &g));
+        // blocked: bit-identical across worker counts AND block widths,
+        // within tolerance of the fused oracle
+        let bl = |threads: usize, blk: usize| {
+            output_bits_of(
+                &interp_outputs_blocked(
+                    "cls-base",
+                    "dp-bitfit",
+                    threads,
+                    KernelMode::Blocked,
+                    Some(blk),
+                )
+                .unwrap(),
+            )
+        };
+        let base_bits = bl(1, 8);
+        assert_eq!(base_bits, bl(2, 8));
+        assert_eq!(base_bits, bl(1, 3));
+        assert_eq!(base_bits, bl(2, 32));
+        let blk =
+            interp_outputs_blocked("cls-base", "dp-bitfit", 1, KernelMode::Blocked, Some(8))
+                .unwrap();
+        assert!(max_rel_diff(&f, &blk) < 1e-4, "blocked diverges: {}", max_rel_diff(&f, &blk));
     }
 }

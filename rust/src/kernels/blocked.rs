@@ -1,0 +1,746 @@
+//! Cache-blocked batched kernels (`FASTDP_KERNELS=blocked`): amortize
+//! weight-panel traffic across microbatch rows.
+//!
+//! The fused and ghost tiers process one microbatch row at a time, so
+//! every row re-streams the full `enc/w` (feat×h) and `head/w` (h×out)
+//! panels as scalar vector–matrix products — and re-pays the f32→f64
+//! widening of every weight element it touches.  This tier runs the
+//! forward, backward and ghost-norm factor passes for a whole **block**
+//! of rows per weight-panel sweep:
+//!
+//! * [`forward_block`] streams each `enc/w` / `head/w` panel row once per
+//!   block (widened to f64 once, reused for every row in the block)
+//!   instead of once per microbatch row;
+//! * [`dh_block`] / [`dfeat_block`] do the same for the backward panel
+//!   products, with register-tiled [`lane_dot`] reductions (fixed-width
+//!   lane accumulators combined in a fixed order);
+//! * the per-sample norm/clip bookkeeping is exactly the ghost tier's —
+//!   factors are stored in the [`GhostPlan`] layout and the engine's
+//!   phase B accumulates them identically — so the O(B·pt) per-sample
+//!   gradient is never materialized here either.
+//!
+//! Panels live in a per-worker [`BlockedWorkspace`]; the block width is a
+//! runtime knob (`FASTDP_BLOCK_ROWS`, default
+//! [`DEFAULT_BLOCK_ROWS`]).  For Cls/Vit/Cnn the block is a run of
+//! microbatch rows; for Lm — where each row is itself a batch of token
+//! positions — the block is a run of the row's non-pad **positions**, so
+//! the (much larger) vocab-wide `head/w` panel is amortized across
+//! positions.
+//!
+//! ## Determinism contract
+//!
+//! Every per-row (and per-position) accumulator in these kernels is
+//! private to its row, visits its reduction indices in the same fixed
+//! order for any block width, and every [`lane_dot`] association depends
+//! only on the vector length.  Blocked outputs are therefore
+//! **bit-identical across any `FASTDP_THREADS` value and any
+//! `FASTDP_BLOCK_ROWS` value** (asserted in
+//! `tests/blocked_equivalence.rs`).  Against the fused oracle the
+//! contract is the ghost tier's: agreement within 1e-4 relative
+//! tolerance — the analytic norms and the lane-split dot products
+//! reassociate reductions, so bitwise equality is not the contract.
+//! (The forward panel products deliberately keep fused's accumulation
+//! order per row, so activations and losses match fused bitwise; the
+//! tolerance budget is spent on the backward/norm side.)
+
+use crate::dp::clip::{clip_factor, ClipMode};
+
+use super::ghost::{self, GhostPlan};
+use super::view::{NetView, TrainSlots};
+use super::{fused, loss};
+
+/// Default block width (rows, or LM positions) when `FASTDP_BLOCK_ROWS`
+/// is unset and no backend override is given.
+pub const DEFAULT_BLOCK_ROWS: usize = 32;
+
+/// Block width from `FASTDP_BLOCK_ROWS` (invalid or zero values fall back
+/// to [`DEFAULT_BLOCK_ROWS`]; the result is always >= 1).
+pub fn block_rows_from_env() -> usize {
+    std::env::var("FASTDP_BLOCK_ROWS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_BLOCK_ROWS)
+}
+
+/// Header f64 words preceding each row's ghost factors in a blocked
+/// factor shard: `[active, loss, sq_norm]`.  The pool writes one factor
+/// shard per block; the engine reads the headers back in fixed row order.
+pub const ROW_HDR: usize = 3;
+
+/// Width of the register tile: independent accumulator lanes per
+/// [`lane_dot`] reduction.
+pub const LANES: usize = 8;
+
+/// Dot product over `LANES` independent accumulators, combined in a fixed
+/// order.  The association depends only on the vector length — never on
+/// the caller's blocking or thread count — which is what lets the blocked
+/// tier promise bit-identity across `FASTDP_THREADS` and
+/// `FASTDP_BLOCK_ROWS`.  It *reassociates* relative to the sequential
+/// [`ghost::dot`], which is why blocked matches fused to tolerance, not
+/// bitwise.
+#[inline]
+pub fn lane_dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let whole = n - n % LANES;
+    let mut acc = [0.0f64; LANES];
+    let mut i = 0usize;
+    while i < whole {
+        for l in 0..LANES {
+            acc[l] += a[i + l] * b[i + l];
+        }
+        i += LANES;
+    }
+    let mut tail = 0.0f64;
+    for k in whole..n {
+        tail += a[k] * b[k];
+    }
+    let mut s = 0.0f64;
+    for v in acc {
+        s += v;
+    }
+    s + tail
+}
+
+/// Per-worker panel scratch for one block of rows (or LM positions).
+///
+/// Every buffer is sized once for `(block, feat, h, out)` and reused for
+/// every block, so the steady-state kernels perform no heap allocation.
+/// `wrow` holds one weight-panel row widened to f64 — the widening that
+/// the row-at-a-time tiers re-pay per microbatch row is paid once per
+/// block here.
+pub struct BlockedWorkspace {
+    /// Row (or LM position) capacity of the panels.
+    pub block: usize,
+    /// Input-feature panel (`block * feat`).
+    pub feat: Vec<f64>,
+    /// Pre-activation hidden panel (`block * h`).
+    pub hpre: Vec<f64>,
+    /// Post-ReLU hidden panel (`block * h`).
+    pub hact: Vec<f64>,
+    /// Logit panel (`block * out`).
+    pub logits: Vec<f64>,
+    /// d(loss)/d(logits) panel (`block * out`).
+    pub dlogits: Vec<f64>,
+    /// d(loss)/d(hidden) panel (`block * h`).
+    pub dh: Vec<f64>,
+    /// d(loss)/d(features) panel (`block * feat`).
+    pub dfeat: Vec<f64>,
+    /// One widened weight-panel row (`max(h, out)` long).
+    wrow: Vec<f64>,
+    /// Flat active-token ids of the block's rows (Cls scatter), reused as
+    /// the non-pad position list on Lm rows.
+    act_ids: Vec<usize>,
+    /// `n_active + 1` offsets into `act_ids`, one range per panel slot.
+    act_off: Vec<usize>,
+    /// Panel slot -> block-local row index: masked rows are compacted out
+    /// of the panels, so the panel kernels only ever compute active rows.
+    rowmap: Vec<usize>,
+}
+
+impl BlockedWorkspace {
+    /// Allocate panels for blocks of up to `block` rows of a model with
+    /// `feat` input features, hidden width `h` and `out` outputs.
+    pub fn new(block: usize, feat: usize, h: usize, out: usize) -> BlockedWorkspace {
+        let block = block.max(1);
+        BlockedWorkspace {
+            block,
+            feat: vec![0.0; block * feat],
+            hpre: vec![0.0; block * h],
+            hact: vec![0.0; block * h],
+            logits: vec![0.0; block * out],
+            dlogits: vec![0.0; block * out],
+            dh: vec![0.0; block * h],
+            dfeat: vec![0.0; block * feat],
+            wrow: vec![0.0; h.max(out)],
+            act_ids: Vec::new(),
+            act_off: Vec::new(),
+            rowmap: Vec::new(),
+        }
+    }
+
+    /// f64 words one workspace of this shape holds (the analytic scratch
+    /// estimator's panel term).
+    pub fn words(block: usize, feat: usize, h: usize, out: usize) -> usize {
+        block.max(1) * (2 * feat + 3 * h + 2 * out) + h.max(out)
+    }
+}
+
+/// Read-only context shared by every blocked kernel call of one step.
+pub struct BlockedCtx<'a> {
+    pub net: &'a NetView<'a>,
+    pub slots: &'a TrainSlots,
+    pub plan: &'a GhostPlan,
+    /// The embedding table widened to f64 once per step (empty for image
+    /// models).  The row-at-a-time tiers re-widen every embedding row on
+    /// every gather; widening is exact, so values are unchanged.
+    pub embed64: &'a [f64],
+    pub dp: bool,
+    pub clip_r: f64,
+    pub mode: ClipMode,
+}
+
+impl BlockedCtx<'_> {
+    /// Stride of one factor row in a blocked shard (header + factors).
+    pub fn row_words(&self) -> usize {
+        ROW_HDR + self.plan.row_stride
+    }
+}
+
+/// hidden + logits for the first `nb` panel rows of `bw.feat`.
+///
+/// Each `enc/w` / `head/w` panel row is widened to f64 once and swept
+/// across the whole block.  Per panel row the accumulation order over
+/// input indices matches [`fused::forward`] exactly (including the
+/// skip-zero gates), so the resulting activations are bit-identical to
+/// the row-at-a-time tiers for any block width.
+pub fn forward_block(net: &NetView, bw: &mut BlockedWorkspace, nb: usize) {
+    let (fw, h, out) = (net.feat, net.h, net.out);
+    let BlockedWorkspace { feat, hpre, hact, logits, wrow, .. } = bw;
+    hpre[..nb * h].fill(0.0);
+    for i in 0..fw {
+        let src = &net.enc_w[i * h..(i + 1) * h];
+        for (wd, &w) in wrow[..h].iter_mut().zip(src) {
+            *wd = w as f64;
+        }
+        for r in 0..nb {
+            let f = feat[r * fw + i];
+            if f == 0.0 {
+                continue;
+            }
+            for (o, &w) in hpre[r * h..(r + 1) * h].iter_mut().zip(wrow[..h].iter()) {
+                *o += f * w;
+            }
+        }
+    }
+    if let Some(b) = net.enc_b {
+        for (wd, &v) in wrow[..h].iter_mut().zip(b) {
+            *wd = v as f64;
+        }
+        for r in 0..nb {
+            for (o, &v) in hpre[r * h..(r + 1) * h].iter_mut().zip(wrow[..h].iter()) {
+                *o += v;
+            }
+        }
+    }
+    for (a, &p) in hact[..nb * h].iter_mut().zip(hpre[..nb * h].iter()) {
+        *a = p.max(0.0);
+    }
+    logits[..nb * out].fill(0.0);
+    for j in 0..h {
+        let src = &net.head_w[j * out..(j + 1) * out];
+        for (wd, &w) in wrow[..out].iter_mut().zip(src) {
+            *wd = w as f64;
+        }
+        for r in 0..nb {
+            let a = hact[r * h + j];
+            if a == 0.0 {
+                continue;
+            }
+            for (o, &w) in logits[r * out..(r + 1) * out].iter_mut().zip(wrow[..out].iter()) {
+                *o += a * w;
+            }
+        }
+    }
+    for r in 0..nb {
+        for (o, &v) in logits[r * out..(r + 1) * out].iter_mut().zip(net.head_b) {
+            *o += v as f64;
+        }
+    }
+}
+
+/// `dh` panel from the `dlogits` panel, ReLU-gated (gated slots store
+/// exact 0.0), streaming each `head/w` panel row once per block.
+pub fn dh_block(net: &NetView, bw: &mut BlockedWorkspace, nb: usize) {
+    let (h, out) = (net.h, net.out);
+    let BlockedWorkspace { hpre, dlogits, dh, wrow, .. } = bw;
+    for j in 0..h {
+        let src = &net.head_w[j * out..(j + 1) * out];
+        for (wd, &w) in wrow[..out].iter_mut().zip(src) {
+            *wd = w as f64;
+        }
+        for r in 0..nb {
+            dh[r * h + j] = if hpre[r * h + j] <= 0.0 {
+                0.0 // relu gate
+            } else {
+                lane_dot(&wrow[..out], &dlogits[r * out..(r + 1) * out])
+            };
+        }
+    }
+}
+
+/// `dfeat` panel from the `dh` panel, streaming each `enc/w` panel row
+/// once per block.
+pub fn dfeat_block(net: &NetView, bw: &mut BlockedWorkspace, nb: usize) {
+    let (fw, h) = (net.feat, net.h);
+    let BlockedWorkspace { dh, dfeat, wrow, .. } = bw;
+    for i in 0..fw {
+        let src = &net.enc_w[i * h..(i + 1) * h];
+        for (wd, &w) in wrow[..h].iter_mut().zip(src) {
+            *wd = w as f64;
+        }
+        for r in 0..nb {
+            dfeat[r * fw + i] = lane_dot(&wrow[..h], &dh[r * h..(r + 1) * h]);
+        }
+    }
+}
+
+/// Shared block epilogue: backward panels as the plan requires (sized to
+/// the *active* panel rows only — masked rows never entered the panels),
+/// then per active row the ghost-norm/clip/factor-store epilogue, writing
+/// the squared norm into the row header.
+fn epilogue_block(ctx: &BlockedCtx, bw: &mut BlockedWorkspace, shard: &mut [f64]) {
+    let plan = ctx.plan;
+    let n_act = bw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    if plan.store_dh {
+        dh_block(ctx.net, bw, n_act);
+    }
+    if plan.store_dfeat {
+        dfeat_block(ctx.net, bw, n_act);
+    }
+    let (fw, h, out) = (ctx.net.feat, ctx.net.h, ctx.net.out);
+    let stride = ctx.row_words();
+    for k in 0..n_act {
+        let r = bw.rowmap[k];
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        let active = &bw.act_ids[bw.act_off[k]..bw.act_off[k + 1]];
+        let (hdr, fac) = rb.split_at_mut(ROW_HDR);
+        hdr[2] = ghost::single_pos_epilogue(
+            ctx.slots,
+            plan,
+            ctx.dp,
+            ctx.clip_r,
+            ctx.mode,
+            fac,
+            &bw.hact[k * h..(k + 1) * h],
+            &bw.dlogits[k * out..(k + 1) * out],
+            &bw.dh[k * h..(k + 1) * h],
+            &bw.feat[k * fw..(k + 1) * fw],
+            &bw.dfeat[k * fw..(k + 1) * fw],
+            active,
+        );
+    }
+}
+
+/// One block of Cls rows: pooled embeddings -> blocked forward -> softmax
+/// CE -> blocked backward -> ghost norms + factor store.  `toks` is the
+/// block's `nb * t` token ids, `y` its `nb` labels, `mask` its `nb`
+/// sample-mask entries; `shard` the block's factor shard (`nb` rows of
+/// [`BlockedCtx::row_words`] f64s, header-first).
+#[allow(clippy::too_many_arguments)]
+pub fn block_cls(
+    ctx: &BlockedCtx,
+    bw: &mut BlockedWorkspace,
+    shard: &mut [f64],
+    toks: &[i32],
+    t: usize,
+    y: &[i32],
+    mask: &[f32],
+    nb: usize,
+) {
+    let net = ctx.net;
+    let d = net.d;
+    let fw = net.feat;
+    let out = net.out;
+    let stride = ctx.row_words();
+    // pooled features + active-token lists, one panel slot per *active*
+    // row (masked rows are compacted out and cost nothing downstream;
+    // padding convention of `fused::pool_tokens`: canonical id 0 skipped)
+    bw.rowmap.clear();
+    bw.act_ids.clear();
+    bw.act_off.clear();
+    bw.act_off.push(0);
+    for r in 0..nb {
+        if mask[r] <= 0.0 {
+            shard[r * stride..r * stride + ROW_HDR].fill(0.0);
+            continue;
+        }
+        let k = bw.rowmap.len();
+        bw.rowmap.push(r);
+        let start = bw.act_ids.len();
+        for &tok in &toks[r * t..(r + 1) * t] {
+            let id = fused::canon_token(tok, net.vocab);
+            if id != 0 {
+                bw.act_ids.push(id);
+            }
+        }
+        let frow = &mut bw.feat[k * fw..(k + 1) * fw];
+        frow.fill(0.0);
+        let act = &bw.act_ids[start..];
+        if !act.is_empty() {
+            for &tok in act {
+                let e = &ctx.embed64[tok * d..(tok + 1) * d];
+                for (f, &v) in frow.iter_mut().zip(e) {
+                    *f += v;
+                }
+            }
+            let inv = 1.0 / act.len() as f64;
+            for f in frow.iter_mut() {
+                *f *= inv;
+            }
+        }
+        bw.act_off.push(bw.act_ids.len());
+    }
+    let n_act = bw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    forward_block(net, bw, n_act);
+    for k in 0..n_act {
+        let r = bw.rowmap[k];
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        let label = (y[r].max(0) as usize) % out;
+        rb[0] = 1.0;
+        rb[1] = loss::softmax_ce_into(
+            &bw.logits[k * out..(k + 1) * out],
+            label,
+            &mut bw.dlogits[k * out..(k + 1) * out],
+        );
+    }
+    epilogue_block(ctx, bw, shard);
+}
+
+/// One block of Vit rows: pixels -> blocked forward -> softmax CE ->
+/// blocked backward -> ghost norms + factor store.
+#[allow(clippy::too_many_arguments)]
+pub fn block_vit(
+    ctx: &BlockedCtx,
+    bw: &mut BlockedWorkspace,
+    shard: &mut [f64],
+    pix: &[f32],
+    y: &[i32],
+    mask: &[f32],
+    nb: usize,
+) {
+    let net = ctx.net;
+    let fw = net.feat;
+    let out = net.out;
+    let stride = ctx.row_words();
+    load_active_pixels(bw, shard, pix, mask, nb, fw, stride);
+    let n_act = bw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    forward_block(net, bw, n_act);
+    for k in 0..n_act {
+        let r = bw.rowmap[k];
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        let label = (y[r].max(0) as usize) % out;
+        rb[0] = 1.0;
+        rb[1] = loss::softmax_ce_into(
+            &bw.logits[k * out..(k + 1) * out],
+            label,
+            &mut bw.dlogits[k * out..(k + 1) * out],
+        );
+    }
+    epilogue_block(ctx, bw, shard);
+}
+
+/// Pixel-model block prologue: compact the block's active rows into the
+/// feature panel (one panel slot per unmasked row, empty token lists),
+/// zeroing the headers of masked rows in place.
+fn load_active_pixels(
+    bw: &mut BlockedWorkspace,
+    shard: &mut [f64],
+    pix: &[f32],
+    mask: &[f32],
+    nb: usize,
+    fw: usize,
+    stride: usize,
+) {
+    bw.rowmap.clear();
+    for r in 0..nb {
+        if mask[r] <= 0.0 {
+            shard[r * stride..r * stride + ROW_HDR].fill(0.0);
+            continue;
+        }
+        let k = bw.rowmap.len();
+        bw.rowmap.push(r);
+        for (f, &p) in
+            bw.feat[k * fw..(k + 1) * fw].iter_mut().zip(&pix[r * fw..(r + 1) * fw])
+        {
+            *f = p as f64;
+        }
+    }
+    bw.act_ids.clear();
+    bw.act_off.clear();
+    bw.act_off.resize(bw.rowmap.len() + 1, 0);
+}
+
+/// One block of Cnn rows: pixels -> blocked forward -> sigmoid BCE ->
+/// blocked backward -> ghost norms + factor store.  `targets` is the
+/// block's `nb * out` multi-label vector.
+#[allow(clippy::too_many_arguments)]
+pub fn block_cnn(
+    ctx: &BlockedCtx,
+    bw: &mut BlockedWorkspace,
+    shard: &mut [f64],
+    pix: &[f32],
+    targets: &[f32],
+    mask: &[f32],
+    nb: usize,
+) {
+    let net = ctx.net;
+    let fw = net.feat;
+    let out = net.out;
+    let stride = ctx.row_words();
+    load_active_pixels(bw, shard, pix, mask, nb, fw, stride);
+    let n_act = bw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    forward_block(net, bw, n_act);
+    for k in 0..n_act {
+        let r = bw.rowmap[k];
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        rb[0] = 1.0;
+        rb[1] = loss::sigmoid_bce_into(
+            &bw.logits[k * out..(k + 1) * out],
+            &targets[r * out..(r + 1) * out],
+            &mut bw.dlogits[k * out..(k + 1) * out],
+        );
+    }
+    epilogue_block(ctx, bw, shard);
+}
+
+/// One Lm row, its non-pad positions processed in panels of up to
+/// `bw.block` at a time (the vocab-wide `head/w` panel is streamed once
+/// per position block instead of once per position).  Factors, bias sums,
+/// ids, the pairwise Gram norm and the deferred clip scaling follow the
+/// ghost row exactly; `row` is the row's header-first factor slice.
+pub fn row_lm_blocked(
+    ctx: &BlockedCtx,
+    bw: &mut BlockedWorkspace,
+    row: &mut [f64],
+    toks: &[i32],
+    targets: &[i32],
+) {
+    let (net, slots, plan) = (ctx.net, ctx.slots, ctx.plan);
+    let (d, h, out) = (net.d, net.h, net.out);
+    let (hdr, rb) = row.split_at_mut(ROW_HDR);
+    let mut row_loss = 0.0f64;
+    let mut np = 0usize;
+    plan.bias_d_mut(rb).fill(0.0);
+    if plan.store_dh {
+        plan.bias_dh_mut(rb).fill(0.0);
+    }
+    // the non-pad position list (ascending, so losses/sums/factors
+    // accumulate in the same order as the row-at-a-time tiers)
+    bw.act_ids.clear();
+    for (p, &target) in targets.iter().enumerate() {
+        if target > 0 {
+            bw.act_ids.push(p);
+        }
+    }
+    let total = bw.act_ids.len();
+    let cap = bw.block;
+    let mut done = 0usize;
+    while done < total {
+        let nb = (total - done).min(cap);
+        for k in 0..nb {
+            let p = bw.act_ids[done + k];
+            let tok = fused::canon_token(toks[p], net.vocab);
+            let e = &ctx.embed64[tok * d..(tok + 1) * d];
+            bw.feat[k * d..(k + 1) * d].copy_from_slice(e);
+        }
+        forward_block(net, bw, nb);
+        for k in 0..nb {
+            let p = bw.act_ids[done + k];
+            let target = targets[p] as usize % out;
+            row_loss += loss::softmax_ce_into(
+                &bw.logits[k * out..(k + 1) * out],
+                target,
+                &mut bw.dlogits[k * out..(k + 1) * out],
+            );
+        }
+        if plan.store_dh {
+            dh_block(net, bw, nb);
+        }
+        if plan.store_dfeat {
+            dfeat_block(net, bw, nb);
+        }
+        for k in 0..nb {
+            let p = bw.act_ids[done + k];
+            ghost::store_pos_parts(
+                plan,
+                rb,
+                np,
+                &bw.hact[k * h..(k + 1) * h],
+                &bw.dlogits[k * out..(k + 1) * out],
+                &bw.dh[k * h..(k + 1) * h],
+                &bw.feat[k * d..(k + 1) * d],
+                &bw.dfeat[k * d..(k + 1) * d],
+                1.0,
+                1.0,
+            );
+            for (s, &v) in
+                plan.bias_d_mut(rb).iter_mut().zip(&bw.dlogits[k * out..(k + 1) * out])
+            {
+                *s += v;
+            }
+            if plan.store_dh {
+                for (s, &v) in plan.bias_dh_mut(rb).iter_mut().zip(&bw.dh[k * h..(k + 1) * h]) {
+                    *s += v;
+                }
+            }
+            if plan.ids > 0 {
+                plan.set_id(rb, np, fused::canon_token(toks[p], net.vocab));
+            }
+            np += 1;
+        }
+        done += nb;
+    }
+    plan.set_count(rb, np);
+    let sqn = ghost::lm_row_norm(slots, plan, rb, np);
+    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
+    ghost::scale_lm_row(plan, rb, np, c);
+    hdr[0] = 1.0;
+    hdr[1] = row_loss;
+    hdr[2] = sqn;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::workspace::Workspace;
+    use super::*;
+
+    #[test]
+    fn lane_dot_is_length_deterministic_and_accurate() {
+        // deterministic: same inputs, same bits, regardless of how the
+        // caller blocked the surrounding computation
+        let a: Vec<f64> = (0..37).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64 * 0.91).cos()).collect();
+        let x = lane_dot(&a, &b);
+        let y = lane_dot(&a, &b);
+        assert_eq!(x.to_bits(), y.to_bits());
+        // accurate: agrees with the sequential reduction to tolerance
+        let seq = ghost::dot(&a, &b);
+        assert!((x - seq).abs() <= 1e-12 * seq.abs().max(1.0), "{x} vs {seq}");
+        // short vectors (below one lane tile) are the pure sequential path
+        assert_eq!(lane_dot(&a[..5], &b[..5]).to_bits(), ghost::dot(&a[..5], &b[..5]).to_bits());
+        assert_eq!(lane_dot(&[], &[]), 0.0);
+    }
+
+    /// A tiny owned network the tests can take a `NetView` of.
+    fn tiny_net(vocab: usize, d: usize, h: usize, out: usize) -> Vec<Vec<f32>> {
+        let fill = |n: usize, s: u64| -> Vec<f32> {
+            (0..n as u64)
+                .map(|i| {
+                    let x = (i.wrapping_mul(2654435761).wrapping_add(s * 97 + 13)) % 997;
+                    (x as f32 / 997.0) - 0.5
+                })
+                .collect()
+        };
+        vec![fill(vocab * d, 1), fill(d * h, 2), fill(h, 3), fill(h * out, 4), fill(out, 5)]
+    }
+
+    #[test]
+    fn forward_block_matches_fused_forward_bitwise() {
+        let (vocab, d, h, out) = (13usize, 6usize, 5usize, 4usize);
+        let parts = tiny_net(vocab, d, h, out);
+        let net = NetView {
+            embed: &parts[0],
+            enc_w: &parts[1],
+            enc_b: Some(&parts[2]),
+            head_w: &parts[3],
+            head_b: &parts[4],
+            d,
+            h,
+            out,
+            vocab,
+            feat: d,
+        };
+        let nb = 3usize;
+        let mut bw = BlockedWorkspace::new(nb, d, h, out);
+        let mut ws = Workspace::new(d, h, out);
+        // three feature rows, one with zeros to exercise the skip gate
+        let rows: Vec<Vec<f64>> = vec![
+            (0..d).map(|i| (i as f64 * 0.3) - 0.7).collect(),
+            (0..d).map(|i| if i % 2 == 0 { 0.0 } else { i as f64 * 0.11 }).collect(),
+            vec![0.0; d],
+        ];
+        for (r, row) in rows.iter().enumerate() {
+            bw.feat[r * d..(r + 1) * d].copy_from_slice(row);
+        }
+        forward_block(&net, &mut bw, nb);
+        for (r, row) in rows.iter().enumerate() {
+            ws.feat.copy_from_slice(row);
+            fused::forward(&net, &mut ws);
+            for j in 0..h {
+                assert_eq!(
+                    ws.hpre[j].to_bits(),
+                    bw.hpre[r * h + j].to_bits(),
+                    "row {r} hpre[{j}]"
+                );
+                assert_eq!(
+                    ws.hact[j].to_bits(),
+                    bw.hact[r * h + j].to_bits(),
+                    "row {r} hact[{j}]"
+                );
+            }
+            for k in 0..out {
+                assert_eq!(
+                    ws.logits[k].to_bits(),
+                    bw.logits[r * out + k].to_bits(),
+                    "row {r} logits[{k}]"
+                );
+            }
+        }
+        // block width cannot change per-row values: recompute with nb=1
+        let mut bw1 = BlockedWorkspace::new(1, d, h, out);
+        for (r, row) in rows.iter().enumerate() {
+            bw1.feat[..d].copy_from_slice(row);
+            forward_block(&net, &mut bw1, 1);
+            for k in 0..out {
+                assert_eq!(bw1.logits[k].to_bits(), bw.logits[r * out + k].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dh_block_gates_relu_and_matches_tolerance() {
+        let (vocab, d, h, out) = (7usize, 4usize, 6usize, 9usize);
+        let parts = tiny_net(vocab, d, h, out);
+        let net = NetView {
+            embed: &parts[0],
+            enc_w: &parts[1],
+            enc_b: Some(&parts[2]),
+            head_w: &parts[3],
+            head_b: &parts[4],
+            d,
+            h,
+            out,
+            vocab,
+            feat: d,
+        };
+        let nb = 2usize;
+        let mut bw = BlockedWorkspace::new(nb, d, h, out);
+        for i in 0..nb * d {
+            bw.feat[i] = (i as f64 * 0.17).sin();
+        }
+        forward_block(&net, &mut bw, nb);
+        for i in 0..nb * out {
+            bw.dlogits[i] = (i as f64 * 0.23).cos();
+        }
+        dh_block(&net, &mut bw, nb);
+        let mut ws = Workspace::new(d, h, out);
+        for r in 0..nb {
+            ws.feat.copy_from_slice(&bw.feat[r * d..(r + 1) * d]);
+            fused::forward(&net, &mut ws);
+            ws.dlogits.copy_from_slice(&bw.dlogits[r * out..(r + 1) * out]);
+            fused::dh_from_dlogits(&net, &mut ws);
+            for j in 0..h {
+                let (a, b) = (ws.dh[j], bw.dh[r * h + j]);
+                if a == 0.0 {
+                    // gated slots must store exact zero in both tiers
+                    assert_eq!(b, 0.0, "row {r} dh[{j}] gate");
+                } else {
+                    assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0), "row {r} dh[{j}]");
+                }
+            }
+        }
+    }
+}

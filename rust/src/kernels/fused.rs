@@ -25,14 +25,36 @@ use super::loss;
 use super::view::{NetView, TrainSlots};
 use super::workspace::Workspace;
 
+/// Canonical token id under the crate-wide padding convention (documented
+/// on [`pool_tokens`] / [`load_token`]): **id 0 is the padding row**.
+/// Negative ids canonicalize to padding; other ids wrap modulo the
+/// vocabulary (so exact multiples of `vocab` also land on padding).
+#[inline]
+pub fn canon_token(t: i32, vocab: usize) -> usize {
+    if t <= 0 {
+        0
+    } else {
+        t as usize % vocab
+    }
+}
+
 /// Fill `ws.feat` with the mean-pooled embedding of a token row (Cls) and
 /// record the active token ids in `ws.active` for the backward scatter.
+///
+/// **Padding convention** (shared with [`load_token`] and the legacy
+/// twins, asserted across all kernel tiers in `tests/token_convention.rs`):
+/// token ids whose canonical id ([`canon_token`]) is 0 — negatives, 0
+/// itself, and exact multiples of `vocab` — are padding: they contribute
+/// nothing to the pooled mean, are excluded from its normalizer, and
+/// receive no embedding gradient.  A row of only padding tokens yields
+/// all-zero features.
 pub fn pool_tokens(net: &NetView, ws: &mut Workspace, toks: &[i32]) {
     let d = net.d;
     ws.active.clear();
     for &t in toks {
-        if t > 0 {
-            ws.active.push(t as usize % net.vocab);
+        let id = canon_token(t, net.vocab);
+        if id != 0 {
+            ws.active.push(id);
         }
     }
     for v in ws.feat.iter_mut() {
@@ -55,9 +77,16 @@ pub fn pool_tokens(net: &NetView, ws: &mut Workspace, toks: &[i32]) {
 
 /// Fill `ws.feat` with a single token's embedding (Lm); returns the
 /// canonical token id.
+///
+/// **Padding convention** (shared with [`pool_tokens`]): a single-token
+/// load cannot *skip* padding, so ids that canonicalize to 0
+/// ([`canon_token`] — negatives, 0, exact multiples of `vocab`) load the
+/// padding row's embedding (row 0).  LM rows already exclude pad
+/// positions via their `target <= 0` gate, so padding inputs only reach
+/// this path when the caller chose to keep them.
 pub fn load_token(net: &NetView, ws: &mut Workspace, tok: i32) -> usize {
     let d = net.d;
-    let tok = (tok.max(0) as usize) % net.vocab;
+    let tok = canon_token(tok, net.vocab);
     let e = &net.embed[tok * d..(tok + 1) * d];
     for (f, &v) in ws.feat.iter_mut().zip(e) {
         *f = v as f64;

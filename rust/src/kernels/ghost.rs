@@ -256,6 +256,38 @@ impl GhostPlan {
     pub fn bias_dh<'a>(&self, rb: &'a [f64]) -> &'a [f64] {
         &rb[self.sum_dh_off..self.sum_dh_off + self.h]
     }
+
+    /// Mutable view of the row's `head/b` gradient-sum slot (`out` long).
+    pub fn bias_d_mut<'a>(&self, rb: &'a mut [f64]) -> &'a mut [f64] {
+        &mut rb[self.sum_d_off..self.sum_d_off + self.out]
+    }
+
+    /// Mutable view of the row's `enc/b` gradient-sum slot (`h` long; only
+    /// valid when `store_dh`).
+    pub fn bias_dh_mut<'a>(&self, rb: &'a mut [f64]) -> &'a mut [f64] {
+        &mut rb[self.sum_dh_off..self.sum_dh_off + self.h]
+    }
+
+    /// Write the row's position/id count (no-op when the layout stores none).
+    pub fn set_count(&self, rb: &mut [f64], n: usize) {
+        if self.counted {
+            rb[self.cnt_off] = n as f64;
+        }
+    }
+
+    /// Write the `k`-th token-id slot (ids are exactly-representable f64s).
+    pub fn set_id(&self, rb: &mut [f64], k: usize, tok: usize) {
+        rb[self.ids_off + k] = tok as f64;
+    }
+
+    /// Copy the (already clip-scaled) position-0 `d`/`dh` factors into the
+    /// bias-sum slots — single-position rows, where the sums equal them.
+    pub fn copy_pos0_to_sums(&self, rb: &mut [f64]) {
+        rb.copy_within(self.d_off..self.d_off + self.out, self.sum_d_off);
+        if self.store_dh {
+            rb.copy_within(self.dh_off..self.dh_off + self.h, self.sum_dh_off);
+        }
+    }
 }
 
 /// Read-only context shared by every ghost row kernel call of one step.
@@ -268,37 +300,67 @@ pub struct GhostCtx<'a> {
     pub mode: ClipMode,
 }
 
-/// Store position `p`'s factors from the workspace, folding `c` into the
-/// d-side factors (`d`, `dh`) and `dfeat_scale` into `dfeat`.
-fn store_pos(plan: &GhostPlan, rb: &mut [f64], p: usize, ws: &Workspace, c: f64, dfeat_scale: f64) {
+/// Store position `p`'s factors from explicit slices, folding `c` into
+/// the d-side factors (`d`, `dh`) and `dfeat_scale` into `dfeat`.  Slices
+/// for blocks the plan does not store are ignored (pass `&[]`).  Shared
+/// with the blocked tier ([`super::blocked`]), which reads the slices out
+/// of its row panels instead of a per-row [`Workspace`].
+#[allow(clippy::too_many_arguments)]
+pub(super) fn store_pos_parts(
+    plan: &GhostPlan,
+    rb: &mut [f64],
+    p: usize,
+    hact: &[f64],
+    dlogits: &[f64],
+    dh: &[f64],
+    feat: &[f64],
+    dfeat: &[f64],
+    c: f64,
+    dfeat_scale: f64,
+) {
     let base = p * plan.pos_stride;
     if plan.store_a {
-        rb[base + plan.a_off..base + plan.a_off + plan.h].copy_from_slice(&ws.hact);
+        rb[base + plan.a_off..base + plan.a_off + plan.h].copy_from_slice(hact);
     }
-    for (s, &v) in rb[base + plan.d_off..base + plan.d_off + plan.out].iter_mut().zip(&ws.dlogits)
-    {
+    for (s, &v) in rb[base + plan.d_off..base + plan.d_off + plan.out].iter_mut().zip(dlogits) {
         *s = c * v;
     }
     if plan.store_dh {
-        for (s, &v) in rb[base + plan.dh_off..base + plan.dh_off + plan.h].iter_mut().zip(&ws.dh) {
+        for (s, &v) in rb[base + plan.dh_off..base + plan.dh_off + plan.h].iter_mut().zip(dh) {
             *s = c * v;
         }
     }
     if plan.store_f {
-        rb[base + plan.f_off..base + plan.f_off + plan.fw].copy_from_slice(&ws.feat);
+        rb[base + plan.f_off..base + plan.f_off + plan.fw].copy_from_slice(feat);
     }
     if plan.store_dfeat {
         for (s, &v) in
-            rb[base + plan.dfeat_off..base + plan.dfeat_off + plan.fw].iter_mut().zip(&ws.dfeat)
+            rb[base + plan.dfeat_off..base + plan.dfeat_off + plan.fw].iter_mut().zip(dfeat)
         {
             *s = dfeat_scale * v;
         }
     }
 }
 
+/// Store position `p`'s factors from the workspace (the per-row path).
+fn store_pos(plan: &GhostPlan, rb: &mut [f64], p: usize, ws: &Workspace, c: f64, dfeat_scale: f64) {
+    store_pos_parts(
+        plan,
+        rb,
+        p,
+        &ws.hact,
+        &ws.dlogits,
+        &ws.dh,
+        &ws.feat,
+        &ws.dfeat,
+        c,
+        dfeat_scale,
+    );
+}
+
 /// Scale position `p`'s already-stored d-side factors by `c` (LM rows,
 /// where `c` is only known after all positions are processed).
-fn scale_pos(plan: &GhostPlan, rb: &mut [f64], p: usize, c: f64) {
+pub(super) fn scale_pos(plan: &GhostPlan, rb: &mut [f64], p: usize, c: f64) {
     let base = p * plan.pos_stride;
     for v in rb[base + plan.d_off..base + plan.d_off + plan.out].iter_mut() {
         *v *= c;
@@ -313,6 +375,77 @@ fn scale_pos(plan: &GhostPlan, rb: &mut [f64], p: usize, c: f64) {
             *v *= c;
         }
     }
+}
+
+/// `Σ_v cnt_v²` over a row's active-token multiset (the Cls scatter-norm
+/// factor): iterating occurrences counts each distinct id exactly `cnt_v`
+/// times.  Shared with the blocked tier.
+pub(super) fn active_cnt2(active: &[usize]) -> f64 {
+    let mut cnt2 = 0.0f64;
+    for &ti in active {
+        cnt2 += active.iter().filter(|&&tj| tj == ti).count() as f64;
+    }
+    cnt2
+}
+
+/// Single-position epilogue from explicit factor slices (shared by the
+/// ghost per-row path and the blocked panel path): the analytic squared
+/// norm by book-keeping (Algorithm 1 line 6), the clip factor, the scaled
+/// factor store, the bias-sum copy, and the count/id bookkeeping.
+/// `active` is the row's active-token list (empty for image models).
+/// Returns the squared norm.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn single_pos_epilogue(
+    slots: &TrainSlots,
+    plan: &GhostPlan,
+    dp: bool,
+    clip_r: f64,
+    mode: ClipMode,
+    rb: &mut [f64],
+    hact: &[f64],
+    dlogits: &[f64],
+    dh: &[f64],
+    feat: &[f64],
+    dfeat: &[f64],
+    active: &[usize],
+) -> f64 {
+    // per-leaf squared norms by book-keeping (Algorithm 1 line 6)
+    let mut sqn = 0.0f64;
+    let nd2 = sqsum(dlogits);
+    if slots.head_b.is_some() {
+        sqn += nd2;
+    }
+    if slots.head_w.is_some() {
+        sqn += sqsum(hact) * nd2;
+    }
+    if plan.store_dh {
+        let nh2 = sqsum(dh);
+        if slots.enc_b.is_some() {
+            sqn += nh2;
+        }
+        if slots.enc_w.is_some() {
+            sqn += sqsum(feat) * nh2;
+        }
+    }
+    let n_active = active.len();
+    let inv = if n_active > 0 { 1.0 / n_active as f64 } else { 0.0 };
+    if slots.embed.is_some() && plan.store_dfeat && n_active > 0 {
+        // scatter norm: every token v receives cnt_v * inv * dfeat, so
+        // ||g_embed||^2 = inv^2 * (sum_v cnt_v^2) * ||dfeat||^2
+        sqn += inv * inv * active_cnt2(active) * sqsum(dfeat);
+    }
+    let c = if dp { clip_factor(sqn, clip_r, mode) } else { 1.0 };
+    store_pos_parts(plan, rb, 0, hact, dlogits, dh, feat, dfeat, c, c * inv);
+    // the bias-gradient "sums" of a single-position row are the scaled
+    // factors themselves; copy so phase B reads one place for every family
+    plan.copy_pos0_to_sums(rb);
+    if plan.counted {
+        plan.set_count(rb, n_active);
+        for (k, &tok) in active.iter().enumerate() {
+            plan.set_id(rb, k, tok);
+        }
+    }
+    sqn
 }
 
 /// Shared single-position epilogue (Cls/Vit/Cnn): hidden/feature grads as
@@ -331,52 +464,20 @@ fn finish_single_pos(
     if plan.store_dfeat {
         fused::dfeat_from_dh(net, ws);
     }
-    // per-leaf squared norms by book-keeping (Algorithm 1 line 6)
-    let mut sqn = 0.0f64;
-    let nd2 = sqsum(&ws.dlogits);
-    if slots.head_b.is_some() {
-        sqn += nd2;
-    }
-    if slots.head_w.is_some() {
-        sqn += sqsum(&ws.hact) * nd2;
-    }
-    if plan.store_dh {
-        let nh2 = sqsum(&ws.dh);
-        if slots.enc_b.is_some() {
-            sqn += nh2;
-        }
-        if slots.enc_w.is_some() {
-            sqn += sqsum(&ws.feat) * nh2;
-        }
-    }
-    let n_active = ws.active.len();
-    let inv = if n_active > 0 { 1.0 / n_active as f64 } else { 0.0 };
-    if slots.embed.is_some() && plan.store_dfeat && n_active > 0 {
-        // scatter norm: every token v receives cnt_v * inv * dfeat, so
-        // ||g_embed||^2 = inv^2 * (sum_v cnt_v^2) * ||dfeat||^2; iterating
-        // occurrences counts each v exactly cnt_v times
-        let mut cnt2 = 0.0f64;
-        for &ti in &ws.active {
-            cnt2 += ws.active.iter().filter(|&&tj| tj == ti).count() as f64;
-        }
-        sqn += inv * inv * cnt2 * sqsum(&ws.dfeat);
-    }
-    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
-    store_pos(plan, rb, 0, ws, c, c * inv);
-    // the bias-gradient "sums" of a single-position row are the scaled
-    // factors themselves; copy so phase B reads one place for every family
-    rb.copy_within(plan.d_off..plan.d_off + plan.out, plan.sum_d_off);
-    if plan.store_dh {
-        rb.copy_within(plan.dh_off..plan.dh_off + plan.h, plan.sum_dh_off);
-    }
-    if plan.counted {
-        rb[plan.cnt_off] = n_active as f64;
-        for (slot, &tok) in
-            rb[plan.ids_off..plan.ids_off + n_active].iter_mut().zip(&ws.active)
-        {
-            *slot = tok as f64;
-        }
-    }
+    let sqn = single_pos_epilogue(
+        slots,
+        plan,
+        ctx.dp,
+        ctx.clip_r,
+        ctx.mode,
+        rb,
+        &ws.hact,
+        &ws.dlogits,
+        &ws.dh,
+        &ws.feat,
+        &ws.dfeat,
+        &ws.active,
+    );
     (row_loss, sqn)
 }
 
@@ -475,53 +576,67 @@ pub fn row_lm(
     if plan.counted {
         rb[plan.cnt_off] = np as f64;
     }
-    // --- analytic squared norm ---
+    let sqn = lm_row_norm(slots, plan, rb, np);
+    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
+    scale_lm_row(plan, rb, np, c);
+    (row_loss, sqn)
+}
+
+/// Analytic squared norm of an LM row from its stored (unscaled) factors:
+/// bias leaves from their exact summed gradients, weight leaves through
+/// the pairwise (T×T Gram) form, the embedding through the token-gated
+/// Gram.  Shared by the per-row ghost path and the blocked panel path.
+pub(super) fn lm_row_norm(slots: &TrainSlots, plan: &GhostPlan, rb: &[f64], np: usize) -> f64 {
     let mut sqn = 0.0f64;
     if slots.head_b.is_some() {
-        sqn += sqsum(&rb[plan.sum_d_off..plan.sum_d_off + plan.out]);
+        sqn += sqsum(plan.bias_d(rb));
     }
     if slots.enc_b.is_some() && plan.store_dh {
-        sqn += sqsum(&rb[plan.sum_dh_off..plan.sum_dh_off + plan.h]);
+        sqn += sqsum(plan.bias_dh(rb));
     }
     let want_hw = slots.head_w.is_some() && plan.store_a;
     let want_ew = slots.enc_w.is_some() && plan.store_f && plan.store_dh;
     let want_em = slots.embed.is_some() && plan.store_dfeat && plan.ids > 0;
     if want_hw || want_ew || want_em {
-        let r: &[f64] = rb;
         for p in 0..np {
             for q in 0..=p {
                 let w = if p == q { 1.0 } else { 2.0 };
                 if want_hw {
-                    let dd = dot(plan.d(r, p), plan.d(r, q));
-                    let aa = dot(plan.a(r, p), plan.a(r, q));
+                    let dd = dot(plan.d(rb, p), plan.d(rb, q));
+                    let aa = dot(plan.a(rb, p), plan.a(rb, q));
                     sqn += w * aa * dd;
                 }
                 if want_ew {
-                    let hh = dot(plan.dh(r, p), plan.dh(r, q));
-                    let ff = dot(plan.f(r, p), plan.f(r, q));
+                    let hh = dot(plan.dh(rb, p), plan.dh(rb, q));
+                    let ff = dot(plan.f(rb, p), plan.f(rb, q));
                     sqn += w * ff * hh;
                 }
-                if want_em && r[plan.ids_off + p] == r[plan.ids_off + q] {
-                    sqn += w * dot(plan.dfeat(r, p), plan.dfeat(r, q));
+                if want_em && plan.id(rb, p) == plan.id(rb, q) {
+                    sqn += w * dot(plan.dfeat(rb, p), plan.dfeat(rb, q));
                 }
             }
         }
     }
-    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
-    if c != 1.0 {
-        for p in 0..np {
-            scale_pos(plan, rb, p, c);
-        }
-        for v in rb[plan.sum_d_off..plan.sum_d_off + plan.out].iter_mut() {
+    sqn
+}
+
+/// Fold a (post-norm) clip factor into an LM row's stored d-side factors
+/// and bias sums.  No-op when `c == 1.0`.  Shared with the blocked tier.
+pub(super) fn scale_lm_row(plan: &GhostPlan, rb: &mut [f64], np: usize, c: f64) {
+    if c == 1.0 {
+        return;
+    }
+    for p in 0..np {
+        scale_pos(plan, rb, p, c);
+    }
+    for v in plan.bias_d_mut(rb).iter_mut() {
+        *v *= c;
+    }
+    if plan.store_dh {
+        for v in plan.bias_dh_mut(rb).iter_mut() {
             *v *= c;
         }
-        if plan.store_dh {
-            for v in rb[plan.sum_dh_off..plan.sum_dh_off + plan.h].iter_mut() {
-                *v *= c;
-            }
-        }
     }
-    (row_loss, sqn)
 }
 
 #[cfg(test)]

@@ -35,10 +35,18 @@ pub struct BackwardCtx<'a> {
 
 /// Mean-pooled embedding features for a token row (Cls); returns the
 /// active token ids alongside so backprop can scatter into the embedding.
+///
+/// Padding convention: ids canonicalizing to 0 ([`super::fused::canon_token`])
+/// are skipped — kept in lockstep with [`super::fused::pool_tokens`], the
+/// one behavioral exception to this module's "preserved verbatim" rule,
+/// because the fused==legacy bit-identity contract outranks it.
 pub fn pooled_feat(net: &NetView, toks: &[i32]) -> (Vec<f64>, Vec<usize>) {
     let d = net.d;
-    let active: Vec<usize> =
-        toks.iter().filter(|&&t| t > 0).map(|&t| t as usize % net.vocab).collect();
+    let active: Vec<usize> = toks
+        .iter()
+        .map(|&t| super::fused::canon_token(t, net.vocab))
+        .filter(|&id| id != 0)
+        .collect();
     let mut feat = vec![0.0f64; d];
     if !active.is_empty() {
         for &tok in &active {
@@ -56,9 +64,10 @@ pub fn pooled_feat(net: &NetView, toks: &[i32]) -> (Vec<f64>, Vec<usize>) {
 }
 
 /// Single-token embedding features (Lm); returns the canonical token id.
+/// Padding ids load the padding row (0) — see [`super::fused::load_token`].
 pub fn token_feat(net: &NetView, tok: i32) -> (Vec<f64>, usize) {
     let d = net.d;
-    let tok = (tok.max(0) as usize) % net.vocab;
+    let tok = super::fused::canon_token(tok, net.vocab);
     let e = &net.embed[tok * d..(tok + 1) * d];
     (e.iter().map(|&v| v as f64).collect(), tok)
 }

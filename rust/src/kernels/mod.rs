@@ -2,7 +2,7 @@
 //!
 //! The reference interpreter executes Algorithm 1 per microbatch row:
 //! forward -> loss -> backward -> per-sample squared norm -> clip factor ->
-//! accumulate.  Three tiers implement that contract, selectable via
+//! accumulate.  Four tiers implement that contract, selectable via
 //! `FASTDP_KERNELS`:
 //!
 //! * [`fused`] (**`fused`**, the default) — flat, workspace-reusing row
@@ -18,6 +18,15 @@
 //!   folded into the stored factors — the O(B·pt) per-sample gradient is
 //!   never materialized and peak scratch drops to O(pt + B·(h + out)
 //!   [+ B·T·factors for LM rows]).
+//! * [`blocked`] (**`blocked`**) — cache-blocked batched kernels: the
+//!   forward, backward and ghost-norm factor passes run for a whole
+//!   **block** of microbatch rows (LM: token positions) per weight-panel
+//!   sweep, so each `enc/w` / `head/w` panel row is streamed — and
+//!   widened to f64 — once per block instead of once per row, with
+//!   register-tiled [`blocked::lane_dot`] reductions.  Norm/clip
+//!   bookkeeping is the ghost tier's (factors in the [`GhostPlan`]
+//!   layout, no per-sample gradient materialization); the block width is
+//!   `FASTDP_BLOCK_ROWS` (default [`blocked::DEFAULT_BLOCK_ROWS`]).
 //! * [`legacy`] (**`legacy`**) — the pre-optimization per-row-allocating
 //!   scalar path, kept verbatim as correctness oracle and benchmark
 //!   baseline.  Only the train step has a legacy variant; eval/decode
@@ -43,12 +52,21 @@
 //! fixed (row, position) order, so ghost outputs are **bit-identical
 //! across any `FASTDP_THREADS` value**.
 //!
+//! *Blocked*: same 1e-4 cross-tier tolerance contract vs fused as ghost
+//! (lane-split dots and analytic norms reassociate reductions), and a
+//! strictly stronger within-tier contract: every per-row accumulator is
+//! private to its row and every lane association depends only on vector
+//! length, so blocked outputs are **bit-identical across any
+//! `FASTDP_THREADS` value *and* any `FASTDP_BLOCK_ROWS` value**
+//! (asserted in `tests/blocked_equivalence.rs`).
+//!
 //! The data-parallel replica layer ([`crate::coordinator::distributed`])
 //! runs these same kernels on every replica worker and extends the
 //! fixed-order-reduction discipline across the replica boundary, so the
 //! contracts compose: any `FASTDP_THREADS` per replica x any replica
 //! count => one bit-identical result per tier.
 
+pub mod blocked;
 pub mod fused;
 pub mod ghost;
 pub mod legacy;
@@ -56,6 +74,7 @@ pub mod loss;
 pub mod view;
 pub mod workspace;
 
+pub use blocked::{BlockedCtx, BlockedWorkspace};
 pub use ghost::{GhostCtx, GhostPlan};
 pub use view::{NetView, TrainSlots};
 pub use workspace::Workspace;
@@ -69,6 +88,10 @@ pub enum KernelMode {
     /// Ghost-norm book-keeping: per-sample norms from factorized structure,
     /// clipped accumulation without materializing per-sample gradients.
     Ghost,
+    /// Cache-blocked batched kernels: ghost-style norm book-keeping with
+    /// the forward/backward/factor passes run for a whole block of rows
+    /// per weight-panel sweep (`FASTDP_BLOCK_ROWS` sets the block width).
+    Blocked,
     /// The pre-optimization per-row-allocating scalar path, kept as a
     /// correctness oracle and benchmark baseline.  Only the train step has
     /// a legacy variant; eval/decode always run fused.
@@ -80,6 +103,7 @@ impl KernelMode {
         match s.to_ascii_lowercase().as_str() {
             "fused" => Some(KernelMode::Fused),
             "ghost" => Some(KernelMode::Ghost),
+            "blocked" => Some(KernelMode::Blocked),
             "legacy" => Some(KernelMode::Legacy),
             _ => None,
         }
@@ -89,6 +113,7 @@ impl KernelMode {
         match self {
             KernelMode::Fused => "fused",
             KernelMode::Ghost => "ghost",
+            KernelMode::Blocked => "blocked",
             KernelMode::Legacy => "legacy",
         }
     }
@@ -104,7 +129,7 @@ impl KernelMode {
                 WARNED.call_once(|| {
                     eprintln!(
                         "fastdp: unrecognized FASTDP_KERNELS value {v:?} \
-                         (expected fused|ghost|legacy); falling back to fused"
+                         (expected fused|ghost|blocked|legacy); falling back to fused"
                     );
                 });
                 KernelMode::default()
@@ -123,9 +148,12 @@ mod tests {
         assert_eq!(KernelMode::parse("LEGACY"), Some(KernelMode::Legacy));
         assert_eq!(KernelMode::parse("ghost"), Some(KernelMode::Ghost));
         assert_eq!(KernelMode::parse("GhOsT"), Some(KernelMode::Ghost));
+        assert_eq!(KernelMode::parse("blocked"), Some(KernelMode::Blocked));
+        assert_eq!(KernelMode::parse("BLOCKED"), Some(KernelMode::Blocked));
         assert_eq!(KernelMode::parse("simd"), None);
         assert_eq!(KernelMode::default(), KernelMode::Fused);
         assert_eq!(KernelMode::Legacy.name(), "legacy");
         assert_eq!(KernelMode::Ghost.name(), "ghost");
+        assert_eq!(KernelMode::Blocked.name(), "blocked");
     }
 }

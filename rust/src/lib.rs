@@ -42,14 +42,18 @@
 //!   scale out with `JobSpec::replicas` (real data-parallel workers, bit
 //!   identical trajectory, measured wire traffic) and snapshot/resume
 //!   bit-identically via `save_state` / `Engine::resume_session`.
-//! * [`kernels`] — the interpreter backend's three CPU kernel tiers
+//! * [`kernels`] — the interpreter backend's four CPU kernel tiers
 //!   (`FASTDP_KERNELS`): **fused** (forward + loss + backward into the
 //!   row's shard + in-place clip, zero steady-state allocation),
 //!   **ghost** (the paper's §3.2 book-keeping: per-sample norms computed
 //!   analytically from activation/output-gradient factors, clipped
-//!   accumulation with **no per-sample gradient materialization**), and
-//!   the preserved **legacy** scalar path used as correctness oracle and
-//!   benchmark baseline.
+//!   accumulation with **no per-sample gradient materialization**),
+//!   **blocked** (ghost's book-keeping with cache-blocked batched
+//!   panels: each weight-panel row streamed — and widened to f64 — once
+//!   per `FASTDP_BLOCK_ROWS`-row block instead of once per microbatch
+//!   row, register-tiled lane reductions; bit-identical across thread
+//!   counts and block widths), and the preserved **legacy** scalar path
+//!   used as correctness oracle and benchmark baseline.
 //! * [`runtime`] — loads AOT HLO artifacts (lowered once from JAX+Pallas by
 //!   `python/compile/aot.py`) and executes them via PJRT; wrapped by the
 //!   engine's PJRT backend.  Also hosts [`runtime::pool`], the persistent

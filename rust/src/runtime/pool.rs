@@ -2,7 +2,12 @@
 //!
 //! Per-sample gradients are embarrassingly parallel: each microbatch row is
 //! computed independently, then reduced.  This module shards task indices
-//! across workers with a **deterministic contract**:
+//! across workers with a **deterministic contract** — a "task" being
+//! whatever granularity the kernel tier picks: one microbatch row
+//! (fused/ghost phase A), one gradient-matrix row (ghost/blocked phase
+//! B), or one row-*block* with a multi-row buffer shard (the blocked
+//! tier's panel kernels, which reuse the same fixed-order shard
+//! reduction unchanged):
 //!
 //! * each task's result is written to a slot (and buffer shard) owned by
 //!   that task index, never to a worker-local accumulator;

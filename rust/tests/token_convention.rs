@@ -1,0 +1,166 @@
+//! The crate-wide padding-token convention, asserted across all four
+//! kernel tiers (see `fused::pool_tokens` / `fused::load_token`):
+//!
+//! * canonical id 0 is the **padding row**: negative ids, 0 itself, and
+//!   exact multiples of `vocab` all canonicalize to it;
+//! * Cls pooling *skips* padding tokens — they contribute nothing to the
+//!   pooled mean, its normalizer, or the embedding gradient;
+//! * single-token loads (Lm) cannot skip, so padding ids load the
+//!   padding row's embedding;
+//! * out-of-range ids wrap modulo the vocabulary.
+//!
+//! The regression: `pool_tokens` used to keep `t > 0` tokens whose id
+//! wrapped onto 0 (counting padding in the mean), while `load_token`
+//! clamped negatives onto row 0 — two conventions.  These tests pin the
+//! unified one on every tier: fused == legacy bitwise, ghost/blocked
+//! within their documented tolerance, and padding spelled as `0`, `-k`
+//! or `k * vocab` is indistinguishable.
+
+use fastdp::bench::synth_step_inputs;
+use fastdp::engine::{Backend, InterpreterBackend, KernelMode, StepRunner};
+use fastdp::kernels::fused::canon_token;
+use fastdp::util::tensor::Tensor;
+
+const RTOL: f32 = 1e-4;
+const ATOL: f32 = 1e-6;
+
+/// Inputs for `artifact` with the token tensor replaced by `toks`.
+fn inputs_with_tokens(
+    backend: &InterpreterBackend,
+    step: &dyn StepRunner,
+    toks: Vec<i32>,
+) -> Vec<Tensor> {
+    let meta = step.meta().clone();
+    let mut inputs = synth_step_inputs(backend, &meta, 77).unwrap();
+    let shape = meta.inputs[2].shape.clone();
+    assert_eq!(shape.iter().product::<usize>(), toks.len(), "token tensor shape");
+    inputs[2] = Tensor::i32(shape, toks);
+    inputs[5] = Tensor::scalar_f32(0.05); // clipping really fires
+    inputs
+}
+
+fn run(artifact: &str, mode: KernelMode, toks: &[i32]) -> Vec<Tensor> {
+    let mut backend = InterpreterBackend::with_config(Some(2), Some(mode));
+    backend.set_block_rows(Some(4));
+    let step = backend.load(artifact).unwrap();
+    let inputs = inputs_with_tokens(&backend, step.as_ref(), toks.to_vec());
+    step.run(&inputs).unwrap()
+}
+
+fn bits_of(out: &[Tensor]) -> Vec<Vec<u32>> {
+    out.iter().map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+fn assert_close(a: &[Tensor], b: &[Tensor], tag: &str) {
+    for (ti, (ta, tb)) in a.iter().zip(b).enumerate() {
+        for (i, (&x, &y)) in ta.as_f32().iter().zip(tb.as_f32()).enumerate() {
+            let scale = x.abs().max(y.abs()).max(ATOL);
+            assert!((x - y).abs() / scale < RTOL, "{tag}: output {ti}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
+/// A token stream exercising every edge: negatives, zero, `vocab`,
+/// multiples and near-multiples of `vocab`, plus ordinary ids.
+fn edge_tokens(n: usize, vocab: i32) -> Vec<i32> {
+    let specials =
+        [-5, 0, vocab, -1, 2 * vocab, vocab + 3, vocab - 1, 1, i32::MAX % vocab, 7];
+    (0..n).map(|i| specials[i % specials.len()]).collect()
+}
+
+#[test]
+fn canon_token_defines_the_convention() {
+    let vocab = 512usize;
+    assert_eq!(canon_token(-5, vocab), 0, "negatives are padding");
+    assert_eq!(canon_token(0, vocab), 0, "zero is padding");
+    assert_eq!(canon_token(512, vocab), 0, "vocab wraps onto padding");
+    assert_eq!(canon_token(1024, vocab), 0, "multiples wrap onto padding");
+    assert_eq!(canon_token(515, vocab), 3, "out-of-range ids wrap");
+    assert_eq!(canon_token(511, vocab), 511, "in-range ids pass through");
+}
+
+#[test]
+fn edge_token_ids_agree_across_all_tiers() {
+    // cls pools (skip path), lm loads per position (clamp path); full
+    // subsets exercise the embedding gradient, bitfit the bias-only path
+    for (artifact, vocab) in [
+        ("cls-base__dp-full-opacus", 512),
+        ("cls-base__dp-bitfit", 512),
+        ("lm-small__dp-full-opacus", 384),
+        ("lm-small__dp-bitfit", 384),
+    ] {
+        let mut backend = InterpreterBackend::new();
+        let step = backend.load(artifact).unwrap();
+        let n = step.meta().inputs[2].elements();
+        let toks = edge_tokens(n, vocab);
+        let fused = run(artifact, KernelMode::Fused, &toks);
+        let legacy = run(artifact, KernelMode::Legacy, &toks);
+        assert_eq!(bits_of(&fused), bits_of(&legacy), "{artifact}: fused vs legacy");
+        assert_close(&fused, &run(artifact, KernelMode::Ghost, &toks), artifact);
+        assert_close(&fused, &run(artifact, KernelMode::Blocked, &toks), artifact);
+        // nothing exploded on the edge ids
+        assert!(fused.iter().all(|t| t.as_f32().iter().all(|v| v.is_finite())), "{artifact}");
+    }
+}
+
+#[test]
+fn padding_spellings_are_indistinguishable_in_pooling() {
+    // same row content, padding written three different ways: id 0, a
+    // negative id, and an exact multiple of vocab — every tier must
+    // produce bit-identical outputs for its own run
+    let artifact = "cls-base__dp-full-opacus";
+    let mut backend = InterpreterBackend::new();
+    let step = backend.load(artifact).unwrap();
+    let shape = step.meta().inputs[2].shape.clone();
+    let (b, t) = (shape[0], shape[1]);
+    let content = |pad: i32| -> Vec<i32> {
+        (0..b * t)
+            .map(|i| {
+                // half of each row is real tokens, half padding
+                if (i % t) < t / 2 {
+                    1 + (i % 300) as i32
+                } else {
+                    pad
+                }
+            })
+            .collect()
+    };
+    for mode in
+        [KernelMode::Fused, KernelMode::Legacy, KernelMode::Ghost, KernelMode::Blocked]
+    {
+        let zero = bits_of(&run(artifact, mode, &content(0)));
+        assert_eq!(zero, bits_of(&run(artifact, mode, &content(-7))), "{mode:?}: -7 vs 0");
+        assert_eq!(zero, bits_of(&run(artifact, mode, &content(512))), "{mode:?}: 512 vs 0");
+        assert_eq!(zero, bits_of(&run(artifact, mode, &content(1024))), "{mode:?}: 1024 vs 0");
+    }
+}
+
+#[test]
+fn all_padding_rows_are_well_defined() {
+    // a row of nothing but padding pools to zero features: the forward
+    // pass sees biases only, gradients stay finite, and the embedding
+    // receives no scatter from that row
+    let artifact = "cls-base__dp-full-opacus";
+    let mut backend = InterpreterBackend::new();
+    let step = backend.load(artifact).unwrap();
+    let shape = step.meta().inputs[2].shape.clone();
+    let (b, t) = (shape[0], shape[1]);
+    // row 0 entirely padding (mixed spellings), the rest ordinary
+    let toks: Vec<i32> = (0..b * t)
+        .map(|i| {
+            if i < t {
+                [0, -3, 512][i % 3]
+            } else {
+                1 + (i % 300) as i32
+            }
+        })
+        .collect();
+    let fused = run(artifact, KernelMode::Fused, &toks);
+    let legacy = run(artifact, KernelMode::Legacy, &toks);
+    assert_eq!(bits_of(&fused), bits_of(&legacy), "fused vs legacy");
+    assert_close(&fused, &run(artifact, KernelMode::Ghost, &toks), "ghost");
+    assert_close(&fused, &run(artifact, KernelMode::Blocked, &toks), "blocked");
+    assert!(fused.iter().all(|t| t.as_f32().iter().all(|v| v.is_finite())));
+    // the all-padding row still has a (bias-driven) gradient and norm
+    assert!(fused[2].as_f32()[0] > 0.0, "all-padding row norm");
+}
