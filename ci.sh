@@ -1,22 +1,24 @@
 #!/usr/bin/env bash
 # CI for the fastdp Rust workspace: format check, lints, tier-1
-# (build + tests), the determinism env matrix, then a bench-smoke of the
-# throughput harness.
+# (build + tests), the fastdp-lint static-analysis stage, the determinism
+# env matrix, then a bench-smoke of the throughput harness.
 # Everything runs offline — dependencies are vendored under rust/vendor/.
 #
-# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-bench] [--no-matrix]
+# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-lint] [--no-bench] [--no-matrix]
 
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
 run_fmt=1
 run_clippy=1
+run_lint=1
 run_bench=1
 run_matrix=1
 for arg in "$@"; do
     case "$arg" in
         --no-fmt) run_fmt=0 ;;
         --no-clippy) run_clippy=0 ;;
+        --no-lint) run_lint=0 ;;
         --no-bench) run_bench=0 ;;
         --no-matrix) run_matrix=0 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
@@ -46,6 +48,22 @@ cargo build --release
 
 echo "==> tier-1: cargo test -q"
 cargo test -q
+
+if [ "$run_lint" = 1 ]; then
+    # Static analysis: the repo-native rule passes (determinism, DP taint
+    # flow, unsafe/env hygiene, doc drift).  Runs before the kernel matrix
+    # so an invariant violation fails fast; any non-allowed finding is
+    # fatal.  The machine-readable report lands at the repo root as
+    # LINT_report.json (the CI artifact to upload).
+    echo "==> static analysis: fastdp-lint rule fixtures"
+    cargo test -q -p fastdp-lint
+    echo "==> static analysis: fastdp-lint over the tree (default env)"
+    cargo run -q -p fastdp-lint -- --json ../LINT_report.json
+    # the lint verdict is a property of the source, not of runtime knobs —
+    # prove it holds under the legacy kernel env the matrix also uses
+    echo "==> static analysis: fastdp-lint over the tree (FASTDP_KERNELS=legacy)"
+    FASTDP_KERNELS=legacy cargo run -q -p fastdp-lint -- --quiet --json ../LINT_report.json
+fi
 
 if [ "$run_matrix" = 1 ]; then
     # The whole suite must hold under every worker-count / kernel-mode

@@ -35,6 +35,7 @@
 
 use fastdp::bench::{self, DpOverhead, ThroughputPoint, ThroughputSummary};
 use fastdp::kernels::KernelMode;
+use fastdp::runtime::env;
 use fastdp::util::table::Table;
 
 /// Relative tolerance of the ghost/blocked vs fused agreement contract.
@@ -42,22 +43,16 @@ const FACTOR_TIER_RTOL: f64 = 1e-4;
 /// Largest relative drop vs the baseline snapshot the gate tolerates.
 const GATE_MAX_DROP: f64 = 0.20;
 
-fn env_list(key: &str, default: &str) -> Vec<usize> {
-    let raw = std::env::var(key).unwrap_or_else(|_| default.to_string());
-    let v: Vec<usize> =
-        raw.split(',').filter_map(|s| s.trim().parse().ok()).filter(|&n| n >= 1).collect();
-    if v.is_empty() {
-        default.split(',').filter_map(|s| s.trim().parse().ok()).collect()
-    } else {
-        v
-    }
+fn list_default(default: &str) -> Vec<usize> {
+    default.split(',').filter_map(|s| s.trim().parse().ok()).collect()
 }
 
 fn main() {
     let quick = bench::quick();
     let steps = bench::bench_steps(if quick { 5 } else { 30 });
-    let thread_counts = env_list("FASTDP_BENCH_THREADS", "1,2,8");
-    let block_widths = env_list("FASTDP_BENCH_BLOCKS", if quick { "8,32" } else { "4,8,16,32" });
+    let thread_counts = env::bench_threads().unwrap_or_else(|| list_default("1,2,8"));
+    let block_widths = env::bench_blocks()
+        .unwrap_or_else(|| list_default(if quick { "8,32" } else { "4,8,16,32" }));
     // lm-large is the largest builtin model; the quick sweep keeps one
     // small model so CI smoke stays fast
     let models: Vec<&str> = if quick { vec!["cls-base"] } else { vec!["cls-base", "lm-large"] };
@@ -310,7 +305,7 @@ fn main() {
         join(&block_widths)
     );
     let doc = bench::throughput_json(&points, &summaries, &overheads, steps, &sweep);
-    let out_path = std::env::var("FASTDP_BENCH_OUT").unwrap_or_else(|_| {
+    let out_path = env::bench_out().unwrap_or_else(|| {
         // benches run from rust/; the trajectory file lives at the repo root
         if std::path::Path::new("ROADMAP.md").exists() {
             "BENCH_step_throughput.json".to_string()
@@ -328,15 +323,7 @@ fn main() {
     // regression gate vs the recorded trajectory (ci.sh points
     // FASTDP_BENCH_BASELINE at the repo-root snapshot once one exists)
     let mut gate_ok = true;
-    if let Ok(baseline_path) =
-        std::env::var("FASTDP_BENCH_BASELINE").map_err(|e| e.to_string()).and_then(|p| {
-            if p.trim().is_empty() {
-                Err("unset".to_string())
-            } else {
-                Ok(p)
-            }
-        })
-    {
+    if let Some(baseline_path) = env::bench_baseline() {
         match std::fs::read_to_string(&baseline_path) {
             Err(e) => eprintln!("gate: cannot read baseline {baseline_path}: {e} (skipping)"),
             Ok(baseline) => match bench::gate_throughput_regression(&doc, &baseline, GATE_MAX_DROP)

@@ -25,11 +25,11 @@ use crate::util::rng::ChaChaRng;
 use crate::util::tensor::Tensor;
 
 pub fn bench_steps(default: usize) -> usize {
-    std::env::var("FASTDP_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+    crate::runtime::env::bench_steps().unwrap_or(default)
 }
 
 pub fn quick() -> bool {
-    std::env::var("FASTDP_BENCH_QUICK").is_ok()
+    crate::runtime::env::bench_quick()
 }
 
 /// A fine-tune-then-evaluate job specification.

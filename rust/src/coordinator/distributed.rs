@@ -253,6 +253,9 @@ impl ReplicaGroup {
             let (to_tx, to_rx) = mpsc::channel::<ToWorker>();
             let (from_tx, from_rx) = mpsc::channel::<FromWorker>();
             let f = factory.clone();
+            // Replica workers are long-lived and their results merge
+            // through the fixed-order reduction below.
+            // fastdp-lint: allow(thread-spawn) long-lived replica workers
             let handle = std::thread::spawn(move || worker_loop(f, to_rx, from_tx));
             workers.push(Worker { tx: Some(to_tx), rx: from_rx, handle: Some(handle) });
         }

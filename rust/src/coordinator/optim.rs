@@ -91,7 +91,10 @@ impl Optimizer {
         self.step_lr(params, grad, self.lr)
     }
 
-    /// Apply one update with an explicit learning rate (schedules).
+    /// Apply one update with an explicit learning rate (schedules).  A
+    /// `dp-sink`: only clipped (and, for DP runs, noised) aggregate
+    /// gradients may reach the optimizer state.
+    // fastdp-lint: dp-sink
     pub fn step_lr(&mut self, params: &mut [f32], grad: &[f32], lr: f64) {
         assert_eq!(params.len(), grad.len());
         assert_eq!(params.len(), self.m.len(), "optimizer sized for different params");

@@ -35,6 +35,7 @@ impl ClipMode {
 pub const AUTO_S_STABILIZER: f64 = 0.01;
 
 /// Per-sample clip factor C_i from a squared gradient norm.
+// fastdp-lint: clip-boundary
 pub fn clip_factor(sq_norm: f64, r: f64, mode: ClipMode) -> f64 {
     let norm = sq_norm.max(0.0).sqrt();
     match mode {
@@ -44,6 +45,7 @@ pub fn clip_factor(sq_norm: f64, r: f64, mode: ClipMode) -> f64 {
 }
 
 /// Clip a gradient vector in place; returns the factor applied.
+// fastdp-lint: clip-boundary
 pub fn clip_in_place(g: &mut [f32], r: f64, mode: ClipMode) -> f64 {
     let sq: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
     let c = clip_factor(sq, r, mode);

@@ -14,6 +14,7 @@ use crate::util::rng::ChaChaRng;
 ///
 /// Called ONCE per logical Poisson batch by the coordinator (microbatches
 /// accumulate clipped sums first; noise composes per logical batch).
+// fastdp-lint: noise-site
 pub fn add_gaussian_noise(grad: &mut [f32], sigma: f64, clip_r: f64, rng: &mut ChaChaRng) {
     if sigma == 0.0 {
         return;

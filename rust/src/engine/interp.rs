@@ -248,6 +248,10 @@ fn ghost_plan(m: &RefModel, slots: &TrainSlots) -> GhostPlan {
 /// ghost factors within each slice (the blocked tier stores a
 /// `[active, loss, sq]` header first; ghost passes `stride = row_stride`,
 /// `off = 0`).
+///
+/// A `dp-sink` for the lint's taint pass: the factors fed in must already
+/// carry their clip factor (folded in by the ghost/blocked epilogues).
+// fastdp-lint: dp-sink
 #[allow(clippy::too_many_arguments)]
 fn accumulate_factor_rows(
     m: &RefModel,
@@ -1069,6 +1073,7 @@ impl RefStep {
         );
         // fixed-order reduction: row shards accumulate in row order on this
         // thread, so the result is independent of the worker count
+        // fastdp-lint: dp-sink
         let mut loss_sum = 0.0f64;
         let mut sq_norms = vec![0.0f32; b];
         for row in 0..b {
@@ -1445,6 +1450,7 @@ impl RefStep {
             let sq: f64 = g.iter().map(|&v| v * v).sum();
             sq_norms[row] = sq as f32;
             let c = if dp { clip_factor(sq, clip_r, mode) } else { 1.0 };
+            // fastdp-lint: dp-sink
             for (gs, &gi) in grad_sum.iter_mut().zip(&g) {
                 *gs += c * gi;
             }

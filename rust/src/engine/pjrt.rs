@@ -147,6 +147,6 @@ impl StepRunner for PjrtStep {
     fn prefers_pinned(&self) -> bool {
         // The buffer path trips an xla_extension 0.5.1 assertion in some
         // interleavings (see runtime::mod docs); keep it opt-in.
-        std::env::var("FASTDP_DEVICE_RESIDENT").is_ok()
+        crate::runtime::env::device_resident()
     }
 }

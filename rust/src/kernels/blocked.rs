@@ -53,14 +53,11 @@ use super::{fused, loss};
 /// is unset and no backend override is given.
 pub const DEFAULT_BLOCK_ROWS: usize = 32;
 
-/// Block width from `FASTDP_BLOCK_ROWS` (invalid or zero values fall back
-/// to [`DEFAULT_BLOCK_ROWS`]; the result is always >= 1).
+/// Block width from `FASTDP_BLOCK_ROWS` (invalid or zero values warn once
+/// — see [`crate::runtime::env`] — and fall back to
+/// [`DEFAULT_BLOCK_ROWS`]; the result is always >= 1).
 pub fn block_rows_from_env() -> usize {
-    std::env::var("FASTDP_BLOCK_ROWS")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(DEFAULT_BLOCK_ROWS)
+    crate::runtime::env::block_rows().unwrap_or(DEFAULT_BLOCK_ROWS)
 }
 
 /// Header f64 words preceding each row's ghost factors in a blocked
@@ -251,6 +248,7 @@ pub fn forward_block(net: &NetView, bw: &mut BlockedWorkspace, nb: usize) {
 
 /// `dh` panel from the `dlogits` panel, ReLU-gated (gated slots store
 /// exact 0.0), streaming each `head/w` panel row once per block.
+// fastdp-lint: per-sample-grad
 pub fn dh_block(net: &NetView, bw: &mut BlockedWorkspace, nb: usize) {
     let (h, out) = (net.h, net.out);
     let BlockedWorkspace { hpre, dlogits, dh, wrow, .. } = bw;
@@ -271,6 +269,7 @@ pub fn dh_block(net: &NetView, bw: &mut BlockedWorkspace, nb: usize) {
 
 /// `dfeat` panel from the `dh` panel, streaming each `enc/w` panel row
 /// once per block.
+// fastdp-lint: per-sample-grad
 pub fn dfeat_block(net: &NetView, bw: &mut BlockedWorkspace, nb: usize) {
     let (fw, h) = (net.feat, net.h);
     let BlockedWorkspace { dh, dfeat, wrow, .. } = bw;

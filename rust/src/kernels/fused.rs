@@ -147,6 +147,7 @@ pub fn forward(net: &NetView, ws: &mut Workspace) {
 /// `ws.dh = d(loss)/d(hidden)` from `ws.dlogits`, with the ReLU gate
 /// applied (gated positions store exact 0.0).  Shared by the fused
 /// backward below and the ghost tier's factor pass.
+// fastdp-lint: per-sample-grad
 pub fn dh_from_dlogits(net: &NetView, ws: &mut Workspace) {
     let h = net.h;
     let out = net.out;
@@ -166,6 +167,7 @@ pub fn dh_from_dlogits(net: &NetView, ws: &mut Workspace) {
 
 /// `ws.dfeat = d(loss)/d(features)` from `ws.dh` (the embedding-scatter
 /// input).  Shared with the ghost tier.
+// fastdp-lint: per-sample-grad
 pub fn dfeat_from_dh(net: &NetView, ws: &mut Workspace) {
     let h = net.h;
     for (i, df) in ws.dfeat.iter_mut().enumerate() {
@@ -181,6 +183,7 @@ pub fn dfeat_from_dh(net: &NetView, ws: &mut Workspace) {
 /// Backprop `ws.dlogits` through head + hidden, accumulating into `g` (the
 /// caller's flat per-sample trainable gradient); computes `ws.dfeat` (and
 /// returns `true`) when the embedding needs it.
+// fastdp-lint: per-sample-grad
 pub fn backward(
     net: &NetView,
     slots: &TrainSlots,
@@ -332,6 +335,7 @@ pub fn row_cnn(
 /// copied the scaled gradient into a second `pt`-sized buffer; the values
 /// produced are identical (`c * v` per element, same reduction order), so
 /// the fused==legacy bit-identity contract is untouched.
+// fastdp-lint: clip-boundary
 pub fn clip_in_place(g: &mut [f64], dp: bool, clip_r: f64, mode: ClipMode) -> f64 {
     let sq: f64 = g.iter().map(|&v| v * v).sum();
     let c = if dp { clip_factor(sq, clip_r, mode) } else { 1.0 };

@@ -305,6 +305,7 @@ pub struct GhostCtx<'a> {
 /// for blocks the plan does not store are ignored (pass `&[]`).  Shared
 /// with the blocked tier ([`super::blocked`]), which reads the slices out
 /// of its row panels instead of a per-row [`Workspace`].
+// fastdp-lint: per-sample-grad
 #[allow(clippy::too_many_arguments)]
 pub(super) fn store_pos_parts(
     plan: &GhostPlan,
@@ -394,6 +395,7 @@ pub(super) fn active_cnt2(active: &[usize]) -> f64 {
 /// factor store, the bias-sum copy, and the count/id bookkeeping.
 /// `active` is the row's active-token list (empty for image models).
 /// Returns the squared norm.
+// fastdp-lint: clip-boundary
 #[allow(clippy::too_many_arguments)]
 pub(super) fn single_pos_epilogue(
     slots: &TrainSlots,

@@ -114,6 +114,7 @@ pub fn forward_feat(net: &NetView, feat: Vec<f64>) -> Forward {
 
 /// Backprop `dlogits` through head + hidden into `grad` (flat trainable
 /// vector, per `ctx.slots`); returns d(feat) if the embedding needs it.
+// fastdp-lint: per-sample-grad
 pub fn backward_feat(
     ctx: &BackwardCtx,
     fwd: &Forward,

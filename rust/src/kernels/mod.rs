@@ -119,19 +119,15 @@ impl KernelMode {
     }
 
     /// Resolve from `FASTDP_KERNELS`.  Unset => fused; an unrecognized
-    /// value also falls back to fused but warns **once** on stderr instead
-    /// of silently masking the typo.
+    /// value also falls back to fused but warns **once** on stderr (via
+    /// the [`crate::runtime::env`] registry) instead of silently masking
+    /// the typo.
     pub fn from_env() -> KernelMode {
-        match std::env::var("FASTDP_KERNELS") {
-            Err(_) => KernelMode::default(),
-            Ok(v) => KernelMode::parse(&v).unwrap_or_else(|| {
-                static WARNED: std::sync::Once = std::sync::Once::new();
-                WARNED.call_once(|| {
-                    eprintln!(
-                        "fastdp: unrecognized FASTDP_KERNELS value {v:?} \
-                         (expected fused|ghost|blocked|legacy); falling back to fused"
-                    );
-                });
+        use crate::runtime::env;
+        match env::kernels() {
+            None => KernelMode::default(),
+            Some(v) => KernelMode::parse(&v).unwrap_or_else(|| {
+                env::warn_invalid(&env::KERNELS, &v);
                 KernelMode::default()
             }),
         }

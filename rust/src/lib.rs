@@ -60,7 +60,9 @@
 //!   parked-worker pool that shards microbatch rows (and ghost phase-B
 //!   matrix rows) across `FASTDP_THREADS` workers with a fixed-order
 //!   deterministic reduction (bit-identical results at any thread count,
-//!   per kernel tier).
+//!   per kernel tier), and [`runtime::env`], the typed registry through
+//!   which **every** `FASTDP_*` environment knob is read (single
+//!   chokepoint, unified warn-once on invalid values; enforced by lint).
 //! * [`coordinator`] — orchestration substrates the engine composes:
 //!   optimizers, dataset assembly, workload construction, greedy decoding,
 //!   cached pretraining, checkpoints (parameter vectors and full session
@@ -78,6 +80,12 @@
 //! * [`util`] — dependency-free JSON/TOML/RNG/tensor/CLI substrates.
 //! * [`bench`] — the shared harness behind `benches/*` (paper tables), and
 //!   the step-throughput harness that emits `BENCH_step_throughput.json`.
+//!
+//! The invariants above — fixed-order reductions, clip-before-sum DP flow,
+//! the env registry, this very layer map — are machine-checked by
+//! `tools/fastdp-lint` (a dependency-free workspace member; `cargo run -p
+//! fastdp-lint`), which runs inside tier-1 via `tests/lint_clean.rs` and
+//! as a ci.sh stage.  See the repository README, "Static analysis".
 
 pub mod analysis;
 pub mod bench;

@@ -4,12 +4,21 @@
 //!
 //! All metrics operate on pre-tokenized sequences (`&[u32]` token ids) —
 //! the same ids the LM decodes — so scores are tokenizer-consistent.
+//!
+//! Every n-gram table here is a `BTreeMap`, never a `HashMap`: several of
+//! the metrics accumulate floats while iterating these tables (NIST's
+//! information weights, CIDEr's tf-idf dot products), and hash iteration
+//! order would make the summation order — and therefore the reported
+//! score bits — depend on the hasher.  Sorted-key iteration keeps every
+//! metric bit-identical for a given input multiset regardless of
+//! insertion order (asserted by `metrics_invariant_to_reference_order`
+//! below) and keeps the `fastdp-lint` hash-iteration rule silent.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
-/// n-gram counts of a sequence.
-fn ngrams(seq: &[u32], n: usize) -> HashMap<Vec<u32>, u64> {
-    let mut m = HashMap::new();
+/// n-gram counts of a sequence, keyed in sorted n-gram order.
+fn ngrams(seq: &[u32], n: usize) -> BTreeMap<Vec<u32>, u64> {
+    let mut m = BTreeMap::new();
     if seq.len() >= n {
         for w in seq.windows(n) {
             *m.entry(w.to_vec()).or_insert(0) += 1;
@@ -38,7 +47,7 @@ pub fn bleu(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
         ref_len += rl as u64;
         for n in 1..=max_n {
             let cg = ngrams(c, n);
-            let mut rmax: HashMap<Vec<u32>, u64> = HashMap::new();
+            let mut rmax: BTreeMap<Vec<u32>, u64> = BTreeMap::new();
             for r in rs {
                 for (g, cnt) in ngrams(r, n) {
                     let e = rmax.entry(g).or_insert(0);
@@ -106,7 +115,7 @@ pub fn rouge_l(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
 pub fn nist(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
     let max_n = 5;
     // corpus-level reference n-gram info: info(g) = log2(count(g[:-1]) / count(g))
-    let mut ref_counts: Vec<HashMap<Vec<u32>, u64>> = vec![HashMap::new(); max_n + 1];
+    let mut ref_counts: Vec<BTreeMap<Vec<u32>, u64>> = vec![BTreeMap::new(); max_n + 1];
     let mut total_unigrams = 0u64;
     for rs in refs {
         for r in rs {
@@ -142,7 +151,7 @@ pub fn nist(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
         let mut num = 0.0;
         let mut den = 0u64;
         for (c, rs) in cands.iter().zip(refs) {
-            let mut rmax: HashMap<Vec<u32>, u64> = HashMap::new();
+            let mut rmax: BTreeMap<Vec<u32>, u64> = BTreeMap::new();
             for r in rs {
                 for (g, cnt) in ngrams(r, n) {
                     let e = rmax.entry(g).or_insert(0);
@@ -226,10 +235,10 @@ pub fn cider(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
     let max_n = 4;
     let n_imgs = refs.len() as f64;
     // document frequency of each n-gram over reference *sets*
-    let mut df: Vec<HashMap<Vec<u32>, f64>> = vec![HashMap::new(); max_n + 1];
+    let mut df: Vec<BTreeMap<Vec<u32>, f64>> = vec![BTreeMap::new(); max_n + 1];
     for rs in refs {
         for n in 1..=max_n {
-            let mut seen: HashMap<Vec<u32>, bool> = HashMap::new();
+            let mut seen: BTreeMap<Vec<u32>, bool> = BTreeMap::new();
             for r in rs {
                 for g in ngrams(r, n).into_keys() {
                     seen.insert(g, true);
@@ -240,7 +249,7 @@ pub fn cider(cands: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
             }
         }
     }
-    let tfidf = |seq: &[u32], n: usize| -> HashMap<Vec<u32>, f64> {
+    let tfidf = |seq: &[u32], n: usize| -> BTreeMap<Vec<u32>, f64> {
         let counts = ngrams(seq, n);
         let total: u64 = counts.values().sum();
         counts
@@ -362,6 +371,47 @@ mod tests {
         let bad = vec![seq(&[9, 9, 9]), seq(&[9, 9, 9])];
         assert!(cider(&good, &refs) > cider(&bad, &refs));
         assert!(cider(&good, &refs) > 1.0);
+    }
+
+    #[test]
+    fn metrics_invariant_to_reference_order() {
+        // The n-gram tables are BTreeMaps precisely so that float
+        // accumulation over them happens in sorted-key order: reordering
+        // the references inside each multi-reference set (same multiset,
+        // different insertion order) must reproduce every score to the
+        // exact bit.  Under HashMap tables the NIST/CIDEr sums visited
+        // n-grams in hasher order and this failed across processes.
+        let cands = vec![seq(&[1, 2, 3, 4]), seq(&[5, 6, 7]), seq(&[1, 2, 9])];
+        let refs: Vec<Vec<Vec<u32>>> = vec![
+            vec![seq(&[1, 2, 3, 4]), seq(&[1, 2, 3, 5]), seq(&[4, 3, 2, 1])],
+            vec![seq(&[5, 6, 7, 8]), seq(&[5, 6, 7])],
+            vec![seq(&[1, 2, 9]), seq(&[9, 2, 1]), seq(&[1, 2, 8, 9])],
+        ];
+        let mut permuted = refs.clone();
+        for rs in &mut permuted {
+            rs.reverse();
+            rs.rotate_left(1);
+        }
+        let pairs = [
+            (bleu(&cands, &refs), bleu(&cands, &permuted)),
+            (rouge_l(&cands, &refs), rouge_l(&cands, &permuted)),
+            (nist(&cands, &refs), nist(&cands, &permuted)),
+            (meteor(&cands, &refs), meteor(&cands, &permuted)),
+        ];
+        for (i, (a, b)) in pairs.iter().enumerate() {
+            assert!(a.is_finite() && *a > 0.0, "metric {i} degenerate: {a}");
+            assert_eq!(a.to_bits(), b.to_bits(), "metric {i}: {a} != {b}");
+        }
+        // CIDEr sums per-reference cosines in reference order (an order the
+        // metric definition fixes), so it is exempt from the permutation
+        // check — but repeat evaluation must still be bit-stable.  Under
+        // HashMap tfidf vectors, each evaluation built fresh hasher seeds
+        // and the dot-product accumulation order (and bits) could drift
+        // between two calls on identical inputs.
+        let c1 = cider(&cands, &refs);
+        let c2 = cider(&cands, &refs);
+        assert!(c1.is_finite() && c1 > 0.0, "cider degenerate: {c1}");
+        assert_eq!(c1.to_bits(), c2.to_bits(), "cider not repeat-stable");
     }
 
     #[test]

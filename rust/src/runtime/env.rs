@@ -1,0 +1,250 @@
+//! Central registry for every `FASTDP_*` environment knob.
+//!
+//! Every knob the crate reads is declared here as a [`Knob`] (name,
+//! accepted values, fallback, one-line doc) and read through a typed
+//! accessor, so the full surface is enumerable in one place: the README
+//! env-var table is checked against [`REGISTRY`] by `fastdp-lint`'s
+//! doc-drift rule, and the lint's env-registry rule rejects any raw
+//! `std::env::var("FASTDP_*")` read outside this module.
+//!
+//! Unparseable values never abort: each accessor falls back to the knob's
+//! documented default and warns **once per knob** on stderr (the PR 4
+//! `KernelMode::from_env` behavior, generalized — a typo'd knob should be
+//! loud, not silently ignored).  Presence-only knobs (`FASTDP_BENCH_QUICK`,
+//! `FASTDP_DEVICE_RESIDENT`) treat any value as "set".
+
+use std::sync::Mutex;
+
+/// One declared environment knob.
+pub struct Knob {
+    /// The environment variable name (`FASTDP_*`).
+    pub name: &'static str,
+    /// Human description of the accepted value syntax.
+    pub expected: &'static str,
+    /// What the crate does when the knob is unset or unparseable.
+    pub fallback: &'static str,
+    /// One-line description (mirrored by the README env-var table).
+    pub doc: &'static str,
+}
+
+pub const THREADS: Knob = Knob {
+    name: "FASTDP_THREADS",
+    expected: "integer >= 1",
+    fallback: "host parallelism",
+    doc: "worker threads for the interpreter row pool",
+};
+
+pub const KERNELS: Knob = Knob {
+    name: "FASTDP_KERNELS",
+    expected: "fused|ghost|blocked|legacy",
+    fallback: "fused",
+    doc: "kernel tier for the interpreter train step",
+};
+
+pub const BLOCK_ROWS: Knob = Knob {
+    name: "FASTDP_BLOCK_ROWS",
+    expected: "integer >= 1",
+    fallback: "32",
+    doc: "block width (rows / LM positions) for the blocked tier",
+};
+
+pub const DEVICE_RESIDENT: Knob = Knob {
+    name: "FASTDP_DEVICE_RESIDENT",
+    expected: "set/unset",
+    fallback: "unset (literal path)",
+    doc: "opt in to device-resident pinned params on the PJRT backend",
+};
+
+pub const BENCH_STEPS: Knob = Knob {
+    name: "FASTDP_BENCH_STEPS",
+    expected: "integer >= 1",
+    fallback: "per-bench default",
+    doc: "fine-tuning steps per bench run",
+};
+
+pub const BENCH_QUICK: Knob = Knob {
+    name: "FASTDP_BENCH_QUICK",
+    expected: "set/unset",
+    fallback: "unset (full sweep)",
+    doc: "set to skip the slowest bench sweep points",
+};
+
+pub const BENCH_THREADS: Knob = Knob {
+    name: "FASTDP_BENCH_THREADS",
+    expected: "comma list of integers >= 1",
+    fallback: "1,2,8",
+    doc: "worker counts swept by benches/throughput.rs",
+};
+
+pub const BENCH_BLOCKS: Knob = Knob {
+    name: "FASTDP_BENCH_BLOCKS",
+    expected: "comma list of integers >= 1",
+    fallback: "4,8,16,32 (quick: 8,32)",
+    doc: "blocked-tier block widths swept by benches/throughput.rs",
+};
+
+pub const BENCH_OUT: Knob = Knob {
+    name: "FASTDP_BENCH_OUT",
+    expected: "file path",
+    fallback: "BENCH_step_throughput.json at the repo root",
+    doc: "output path override for the throughput bench document",
+};
+
+pub const BENCH_BASELINE: Knob = Knob {
+    name: "FASTDP_BENCH_BASELINE",
+    expected: "file path",
+    fallback: "unset (gate skipped)",
+    doc: "baseline snapshot the throughput regression gate compares against",
+};
+
+/// Every knob the crate reads, in README table order.
+pub const REGISTRY: &[&Knob] = &[
+    &THREADS,
+    &KERNELS,
+    &BLOCK_ROWS,
+    &DEVICE_RESIDENT,
+    &BENCH_STEPS,
+    &BENCH_QUICK,
+    &BENCH_THREADS,
+    &BENCH_BLOCKS,
+    &BENCH_OUT,
+    &BENCH_BASELINE,
+];
+
+/// The raw environment read — the single `std::env::var` chokepoint for
+/// the whole crate (enforced by fastdp-lint's env-registry rule).
+fn raw(k: &Knob) -> Option<String> {
+    std::env::var(k.name).ok()
+}
+
+/// Warn about an unparseable knob value, once per knob per process.
+///
+/// A `Vec` (not a hash set) keeps the bookkeeping trivially deterministic;
+/// the registry is small enough that linear scans are free.
+pub fn warn_invalid(k: &Knob, got: &str) {
+    static WARNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut warned = match WARNED.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if !warned.contains(&k.name) {
+        warned.push(k.name);
+        eprintln!(
+            "fastdp: unrecognized {} value {:?} (expected {}); falling back to {}",
+            k.name, got, k.expected, k.fallback
+        );
+    }
+}
+
+/// Read + parse a knob; unparseable set values warn once and yield `None`
+/// so the caller applies the knob's documented fallback.
+fn parsed<T>(k: &Knob, parse: impl Fn(&str) -> Option<T>) -> Option<T> {
+    let v = raw(k)?;
+    match parse(v.trim()) {
+        Some(t) => Some(t),
+        None => {
+            warn_invalid(k, &v);
+            None
+        }
+    }
+}
+
+fn positive(s: &str) -> Option<usize> {
+    s.parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Comma list of integers >= 1; entries that fail to parse are dropped,
+/// and a set-but-empty result counts as unparseable.
+fn positive_list(s: &str) -> Option<Vec<usize>> {
+    let v: Vec<usize> = s.split(',').filter_map(|p| positive(p.trim())).collect();
+    if v.is_empty() {
+        None
+    } else {
+        Some(v)
+    }
+}
+
+/// `FASTDP_THREADS`: worker count override (>= 1).
+pub fn threads() -> Option<usize> {
+    parsed(&THREADS, positive)
+}
+
+/// `FASTDP_KERNELS`: the raw tier name, if set.  Parsing (and the
+/// warn-once fallback via [`warn_invalid`]) stays with
+/// `kernels::KernelMode::from_env` so the tier vocabulary lives in one
+/// place.
+pub fn kernels() -> Option<String> {
+    raw(&KERNELS)
+}
+
+/// `FASTDP_BLOCK_ROWS`: blocked-tier block width override (>= 1).
+pub fn block_rows() -> Option<usize> {
+    parsed(&BLOCK_ROWS, positive)
+}
+
+/// `FASTDP_DEVICE_RESIDENT`: presence-only opt-in.
+pub fn device_resident() -> bool {
+    raw(&DEVICE_RESIDENT).is_some()
+}
+
+/// `FASTDP_BENCH_STEPS`: timed steps per bench run (>= 1).
+pub fn bench_steps() -> Option<usize> {
+    parsed(&BENCH_STEPS, positive)
+}
+
+/// `FASTDP_BENCH_QUICK`: presence-only quick-sweep switch.
+pub fn bench_quick() -> bool {
+    raw(&BENCH_QUICK).is_some()
+}
+
+/// `FASTDP_BENCH_THREADS`: worker counts swept by the throughput bench.
+pub fn bench_threads() -> Option<Vec<usize>> {
+    parsed(&BENCH_THREADS, positive_list)
+}
+
+/// `FASTDP_BENCH_BLOCKS`: block widths swept by the throughput bench.
+pub fn bench_blocks() -> Option<Vec<usize>> {
+    parsed(&BENCH_BLOCKS, positive_list)
+}
+
+/// `FASTDP_BENCH_OUT`: output path override (empty counts as unset).
+pub fn bench_out() -> Option<String> {
+    raw(&BENCH_OUT).filter(|p| !p.trim().is_empty())
+}
+
+/// `FASTDP_BENCH_BASELINE`: gate baseline path (empty counts as unset).
+pub fn bench_baseline() -> Option<String> {
+    raw(&BENCH_BASELINE).filter(|p| !p.trim().is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_prefixed() {
+        for (i, k) in REGISTRY.iter().enumerate() {
+            assert!(k.name.starts_with("FASTDP_"), "{} lacks the FASTDP_ prefix", k.name);
+            for other in &REGISTRY[i + 1..] {
+                assert_ne!(k.name, other.name, "duplicate registry entry");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(positive("4"), Some(4));
+        assert_eq!(positive("0"), None);
+        assert_eq!(positive("four"), None);
+        assert_eq!(positive_list("1, 2,8"), Some(vec![1, 2, 8]));
+        assert_eq!(positive_list("2,x,8"), Some(vec![2, 8]));
+        assert_eq!(positive_list("x"), None);
+        assert_eq!(positive_list(""), None);
+    }
+
+    #[test]
+    fn warn_invalid_is_idempotent() {
+        warn_invalid(&BLOCK_ROWS, "zero");
+        warn_invalid(&BLOCK_ROWS, "zero"); // second call must not print again
+    }
+}

@@ -11,6 +11,7 @@
 
 mod artifact;
 mod convert;
+pub mod env;
 pub mod pool;
 
 pub use artifact::{Artifact, ArtifactMeta, IoSpec, Layout, LayoutLeaf, Manifest};

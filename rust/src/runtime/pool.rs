@@ -50,14 +50,10 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::{Mutex, OnceLock};
 
 /// Worker count from `FASTDP_THREADS`, else the host parallelism.
-/// Invalid or zero values fall back to the host parallelism; the result is
-/// always >= 1.
+/// Invalid or zero values warn once (see [`super::env`]) and fall back to
+/// the host parallelism; the result is always >= 1.
 pub fn default_threads() -> usize {
-    std::env::var("FASTDP_THREADS")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(host_parallelism)
+    super::env::threads().unwrap_or_else(host_parallelism)
 }
 
 /// The host's available parallelism (>= 1).

@@ -71,7 +71,10 @@ impl Tensor {
 }
 
 /// Serialize f32s as little-endian bytes — the one byte layout shared by
-/// the replica wire protocol and the session-state disk format.
+/// the replica wire protocol and the session-state disk format.  A
+/// `dp-sink` for the lint's taint pass: per-sample gradient data must be
+/// clipped before it can cross onto the wire or the disk.
+// fastdp-lint: dp-sink
 pub fn f32s_to_le_bytes(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 4);
     for v in xs {

@@ -1,0 +1,46 @@
+//! Tier-1 gate: the full `fastdp-lint` pass over the real source tree
+//! must report zero findings.
+//!
+//! This is what gives the lint teeth — deleting a `// SAFETY:` comment,
+//! adding a raw `std::env::var` read outside `runtime/env.rs`, or routing
+//! an unclipped per-sample gradient into a sink breaks `cargo test` (and
+//! therefore every ci.sh cell), not just the optional lint stage.
+
+use std::path::Path;
+
+#[test]
+fn lint_is_clean_on_the_real_tree() {
+    // CARGO_MANIFEST_DIR is rust/; the repo root is its parent.
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a repo root above it");
+    let cfg = fastdp_lint::repo_config(repo_root);
+    let rep = fastdp_lint::run(&cfg);
+    assert!(
+        rep.findings.is_empty(),
+        "fastdp-lint found {} violation(s):\n{}",
+        rep.findings.len(),
+        fastdp_lint::render(&rep.findings)
+    );
+    // a scan that silently saw nothing would also "pass" — guard scope
+    assert!(
+        rep.files_scanned > 20,
+        "suspiciously few files scanned ({}) — did the tree layout move?",
+        rep.files_scanned
+    );
+}
+
+#[test]
+fn allow_annotations_are_visible_in_the_report() {
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+    let rep = fastdp_lint::run(&fastdp_lint::repo_config(repo_root));
+    // the replica-worker spawn in coordinator/distributed.rs is the one
+    // sanctioned thread-spawn site outside the pool; it must surface as
+    // an allowed finding, not vanish
+    assert!(
+        rep.allowed.iter().any(|f| f.rule == "thread-spawn"
+            && f.file == "coordinator/distributed.rs"),
+        "expected the allowed replica-worker spawn in the report: {:?}",
+        rep.allowed
+    );
+}

@@ -1,0 +1,299 @@
+//! A hand-rolled Rust lexer: just enough token structure for rule passes.
+//!
+//! No `syn`, no dependencies — consistent with the repo's vendored-offline
+//! constraint.  The token stream keeps comments (annotation directives and
+//! `// SAFETY:` hygiene live there) and resolves the classic ambiguities
+//! that break naive scanners: lifetimes vs char literals (`'a` vs `'a'`),
+//! raw/byte strings (`r#"…"#`, `b"…"`), nested block comments, and the
+//! `env!` macro vs `env::var` call distinction (left to rule passes, which
+//! see `!` vs `::` as separate punct tokens).
+
+/// Token kind.  `Comment` covers line, block and doc comments alike.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Lifetime,
+    Str,
+    Char,
+    Num,
+    Punct,
+    Comment,
+}
+
+/// One token: kind, verbatim text, and the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Multi-byte punctuation, longest first so greedy matching is correct.
+const PUNCTS: &[&str] = &[
+    "<<=", ">>=", "..=", "::", "->", "=>", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "==",
+    "!=", "<=", ">=", "&&", "||", "..", "<<", ">>",
+];
+
+/// If `src[i..]` starts a string literal (plain, byte, raw or raw-byte),
+/// return the exclusive end index; else `None`.
+fn string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if j < b.len() && b[j] == b'b' {
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'r' {
+        // raw (possibly byte) string: r#*" … "#*
+        let mut k = j + 1;
+        let mut hashes = 0;
+        while k < b.len() && b[k] == b'#' {
+            hashes += 1;
+            k += 1;
+        }
+        if k < b.len() && b[k] == b'"' {
+            k += 1;
+            while k < b.len() {
+                if b[k] == b'"' && b.len() - k > hashes && b[k + 1..k + 1 + hashes].iter().all(|&c| c == b'#') {
+                    return Some(k + 1 + hashes);
+                }
+                k += 1;
+            }
+            return Some(b.len());
+        }
+        return None;
+    }
+    if j < b.len() && b[j] == b'"' {
+        let mut k = j + 1;
+        while k < b.len() {
+            match b[k] {
+                b'\\' => k += 2,
+                b'"' => return Some(k + 1),
+                _ => k += 1,
+            }
+        }
+        return Some(b.len());
+    }
+    None
+}
+
+/// Tokenize `src`.  Whitespace is dropped; everything else (including
+/// comments) becomes a token.  Unterminated constructs run to EOF rather
+/// than erroring — the linter should keep scanning whatever it can.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    let push = |out: &mut Vec<Tok>, kind, s: &[u8], line| {
+        out.push(Tok { kind, text: String::from_utf8_lossy(s).into_owned(), line });
+    };
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            push(&mut out, Kind::Comment, &b[start..i], line);
+            continue;
+        }
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            push(&mut out, Kind::Comment, &b[start..i], start_line);
+            continue;
+        }
+        // strings (incl. b"…", r"…", r#"…"#, br#"…"#)
+        if c == b'"' || ((c == b'b' || c == b'r') && string_end(b, i).is_some()) {
+            if let Some(end) = string_end(b, i) {
+                let start_line = line;
+                line += b[i..end].iter().filter(|&&c| c == b'\n').count();
+                push(&mut out, Kind::Str, &b[i..end], start_line);
+                i = end;
+                continue;
+            }
+        }
+        // byte char b'x'
+        if c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'' {
+            let mut k = i + 2;
+            while k < b.len() && b[k] != b'\'' {
+                if b[k] == b'\\' {
+                    k += 1;
+                }
+                k += 1;
+            }
+            push(&mut out, Kind::Char, &b[i..(k + 1).min(b.len())], line);
+            i = (k + 1).min(b.len());
+            continue;
+        }
+        // lifetime or char literal
+        if c == b'\'' {
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                // escaped char literal: skip the escaped character (it may
+                // itself be a quote, as in '\''), then scan to the close
+                let mut k = i + 3;
+                while k < b.len() && b[k] != b'\'' {
+                    if b[k] == b'\\' {
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                push(&mut out, Kind::Char, &b[i..(k + 1).min(b.len())], line);
+                i = (k + 1).min(b.len());
+                continue;
+            }
+            if i + 1 < b.len() && is_ident_start(b[i + 1]) {
+                let mut k = i + 1;
+                while k < b.len() && is_ident_cont(b[k]) {
+                    k += 1;
+                }
+                if k < b.len() && b[k] == b'\'' {
+                    // 'a' — a char literal
+                    push(&mut out, Kind::Char, &b[i..k + 1], line);
+                    i = k + 1;
+                } else {
+                    // 'a — a lifetime
+                    push(&mut out, Kind::Lifetime, &b[i..k], line);
+                    i = k;
+                }
+                continue;
+            }
+            // e.g. '"' or stray quote: one-char literal
+            let end = (i + 3).min(b.len());
+            push(&mut out, Kind::Char, &b[i..end], line);
+            i = end;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < b.len() && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            push(&mut out, Kind::Ident, &b[start..i], line);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && (is_ident_cont(b[i]) || (b[i] == b'.' && i + 1 < b.len() && b[i + 1].is_ascii_digit() && b[i - 1] != b'.')) {
+                i += 1;
+            }
+            push(&mut out, Kind::Num, &b[start..i], line);
+            continue;
+        }
+        // punctuation, longest match first
+        let rest = &b[i..];
+        let mut matched = 1;
+        for p in PUNCTS {
+            if rest.starts_with(p.as_bytes()) {
+                matched = p.len();
+                break;
+            }
+        }
+        push(&mut out, Kind::Punct, &b[i..i + matched], line);
+        i += matched;
+    }
+    out
+}
+
+/// The contents of a string literal token (quotes/prefix/hashes stripped),
+/// or `None` for other kinds.
+pub fn str_content(t: &Tok) -> Option<&str> {
+    if t.kind != Kind::Str {
+        return None;
+    }
+    let s = t.text.trim_start_matches('b').trim_start_matches('r').trim_matches('#');
+    Some(s.trim_matches('"'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let t = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(t.contains(&(Kind::Lifetime, "'a".into())));
+        assert!(t.contains(&(Kind::Char, "'x'".into())));
+        let esc = kinds(r"let c = '\n';");
+        assert!(esc.contains(&(Kind::Char, "'\\n'".into())));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let t = kinds(r###"let a = r#"hi "there""#; let b = b"raw"; let c = br#"x"#;"###);
+        let strs: Vec<_> = t.iter().filter(|(k, _)| *k == Kind::Str).collect();
+        assert_eq!(strs.len(), 3, "{strs:?}");
+    }
+
+    #[test]
+    fn env_macro_vs_env_var_tokens() {
+        let t = kinds(r#"env!("X"); std::env::var("Y");"#);
+        // env! lexes as ident + `!`, env::var as ident `::` ident
+        let i = t.iter().position(|(k, s)| *k == Kind::Ident && s == "env").unwrap();
+        assert_eq!(t[i + 1].1, "!");
+        let j = t.iter().rposition(|(k, s)| *k == Kind::Ident && s == "env").unwrap();
+        assert_eq!(t[j + 1].1, "::");
+        assert_eq!(t[j + 2].1, "var");
+    }
+
+    #[test]
+    fn comments_and_lines() {
+        let t = lex("// one\nlet x = 1; /* two\nlines */ y");
+        assert_eq!(t[0].kind, Kind::Comment);
+        assert_eq!(t[0].line, 1);
+        let y = t.iter().find(|t| t.text == "y").unwrap();
+        assert_eq!(y.line, 3);
+    }
+
+    #[test]
+    fn compound_punct() {
+        let t = kinds("a += b; c..=d; e::f");
+        assert!(t.contains(&(Kind::Punct, "+=".into())));
+        assert!(t.contains(&(Kind::Punct, "..=".into())));
+        assert!(t.contains(&(Kind::Punct, "::".into())));
+    }
+
+    #[test]
+    fn str_content_strips() {
+        let t = lex(r#"let s = "FASTDP_X";"#);
+        let s = t.iter().find(|t| t.kind == Kind::Str).unwrap();
+        assert_eq!(str_content(s), Some("FASTDP_X"));
+    }
+}

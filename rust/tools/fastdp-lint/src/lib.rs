@@ -1,0 +1,33 @@
+//! `fastdp-lint` — a repo-native static-analysis pass that enforces the
+//! determinism and DP invariants of the `fastdp` engine.
+//!
+//! The engine's two non-negotiable properties — bitwise-deterministic
+//! training and differential privacy — are invisible to `rustc` and
+//! `clippy`: nothing in the type system says "this per-sample gradient
+//! must be clipped before it touches the shared sum" or "iterating this
+//! `HashMap` makes the loss nondeterministic".  This crate encodes those
+//! invariants as token-level rule passes over the source tree (no `syn`,
+//! no dependencies — a hand-rolled lexer in [`lexer`], file structure in
+//! [`scan`], the rules in [`rules`], reporting in [`report`]).
+//!
+//! Run it as `cargo run -p fastdp-lint` from `rust/`, or through the
+//! `ci.sh` lint stage (skip with `--no-lint`).  The machine-readable
+//! output lands in `LINT_report.json`; the rule catalog, annotation
+//! grammar and allow-list syntax are documented in the repository
+//! README under "Static analysis".
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+pub use report::{render, to_json, Finding, Report};
+pub use rules::{run, LintConfig, RULES};
+
+use std::path::Path;
+
+/// The standard configuration for this repository, rooted at `repo_root`
+/// (the directory containing `rust/` and `README.md`).
+pub fn repo_config(repo_root: &Path) -> LintConfig {
+    LintConfig::for_repo(repo_root)
+}

@@ -1,0 +1,71 @@
+//! CLI entry point: lint the tree, print findings, write the JSON report.
+//!
+//! ```text
+//! fastdp-lint [--root <repo-root>] [--json <path>] [--quiet]
+//! ```
+//!
+//! * `--root` defaults to the parent of the `rust/` workspace this binary
+//!   was built from (so `cargo run -p fastdp-lint` from `rust/` just works).
+//! * `--json` defaults to `<root>/LINT_report.json`.
+//! * Exit status is 1 if any (non-allowed) finding fired, else 0.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--json" => json = args.next().map(PathBuf::from),
+            "--quiet" => quiet = true,
+            "--help" | "-h" => {
+                println!("usage: fastdp-lint [--root <repo-root>] [--json <path>] [--quiet]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("fastdp-lint: unknown argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // CARGO_MANIFEST_DIR = …/rust/tools/fastdp-lint; the repo root is
+    // three levels up.  A compile-time constant, not an env knob.
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .ancestors()
+            .nth(3)
+            .expect("manifest dir has a repo root above it")
+            .to_path_buf()
+    });
+    let cfg = fastdp_lint::repo_config(&root);
+    let rep = fastdp_lint::run(&cfg);
+
+    let json_path = json.unwrap_or_else(|| root.join("LINT_report.json"));
+    let doc = fastdp_lint::to_json(&rep, fastdp_lint::RULES);
+    if let Err(e) = std::fs::write(&json_path, doc) {
+        eprintln!("fastdp-lint: cannot write {}: {e}", json_path.display());
+        return ExitCode::from(2);
+    }
+
+    if !quiet {
+        if !rep.findings.is_empty() {
+            println!("{}", fastdp_lint::render(&rep.findings));
+        }
+        println!(
+            "fastdp-lint: {} finding(s), {} allowed, {} files scanned -> {}",
+            rep.findings.len(),
+            rep.allowed.len(),
+            rep.files_scanned,
+            json_path.display()
+        );
+    }
+    if rep.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

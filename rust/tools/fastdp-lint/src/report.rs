@@ -1,0 +1,132 @@
+//! Findings, the report document, and its hand-rolled JSON rendering
+//! (`LINT_report.json` — no serde, consistent with the no-deps rule).
+
+/// One finding (or one allow-suppressed would-be finding).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the scanned tree, unix-style.
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// The full lint result.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Suppressed by `// fastdp-lint: allow(...)` — kept for visibility.
+    pub allowed: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Sort both lists so output order is independent of scan order.
+    pub fn normalize(&mut self) {
+        let key = |f: &Finding| (f.file.clone(), f.line, f.rule, f.message.clone());
+        self.findings.sort_by_key(key);
+        self.findings.dedup();
+        self.allowed.sort_by_key(key);
+        self.allowed.dedup();
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn finding_json(f: &Finding) -> String {
+    format!(
+        "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+        f.rule,
+        json_escape(&f.file),
+        f.line,
+        json_escape(&f.message)
+    )
+}
+
+/// Render the machine-readable report document.
+///
+/// Schema (documented in the README "Static analysis" section):
+/// `{ tool, version, rules: [..], summary: {findings, allowed,
+/// files_scanned}, findings: [{rule, file, line, message}], allowed: [..] }`
+pub fn to_json(r: &Report, rules: &[&str]) -> String {
+    let list = |fs: &[Finding]| {
+        if fs.is_empty() {
+            "[]".to_string()
+        } else {
+            format!("[\n{}\n  ]", fs.iter().map(finding_json).collect::<Vec<_>>().join(",\n"))
+        }
+    };
+    format!(
+        "{{\n  \"tool\": \"fastdp-lint\",\n  \"version\": 1,\n  \"rules\": [{}],\n  \
+         \"summary\": {{\"findings\": {}, \"allowed\": {}, \"files_scanned\": {}}},\n  \
+         \"findings\": {},\n  \"allowed\": {}\n}}\n",
+        rules.iter().map(|r| format!("\"{r}\"")).collect::<Vec<_>>().join(", "),
+        r.findings.len(),
+        r.allowed.len(),
+        r.files_scanned,
+        list(&r.findings),
+        list(&r.allowed)
+    )
+}
+
+/// Human-readable rendering, one line per finding.
+pub fn render(findings: &[Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let mut r = Report::default();
+        r.findings.push(Finding {
+            rule: "dp-flow",
+            file: "engine/interp.rs".into(),
+            line: 7,
+            message: "tainted \"x\" reaches sink".into(),
+        });
+        r.files_scanned = 3;
+        let j = to_json(&r, &["dp-flow"]);
+        assert!(j.contains("\"tool\": \"fastdp-lint\""));
+        assert!(j.contains("\\\"x\\\""));
+        assert!(j.contains("\"findings\": 1"));
+        assert!(j.contains("\"files_scanned\": 3"));
+    }
+
+    #[test]
+    fn normalize_sorts_and_dedups() {
+        let mk = |file: &str, line| Finding {
+            rule: "unsafe-safety",
+            file: file.into(),
+            line,
+            message: "m".into(),
+        };
+        let mut r = Report {
+            findings: vec![mk("b.rs", 2), mk("a.rs", 9), mk("b.rs", 2)],
+            ..Report::default()
+        };
+        r.normalize();
+        assert_eq!(r.findings.len(), 2);
+        assert_eq!(r.findings[0].file, "a.rs");
+    }
+}

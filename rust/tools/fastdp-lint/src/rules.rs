@@ -1,0 +1,820 @@
+//! The rule passes.
+//!
+//! | rule            | guards against                                          |
+//! |-----------------|---------------------------------------------------------|
+//! | `hash-iteration`| `HashMap`/`HashSet` iteration feeding accumulation or   |
+//! |                 | output ordering in `kernels/`, `engine/`, `coordinator/`|
+//! |                 | or `nlg/` (hasher order ⇒ nondeterministic bits)        |
+//! | `thread-spawn`  | `std::thread::{spawn,scope,Builder}` outside the pool   |
+//! | `dp-flow`       | per-sample gradient taint reaching a sink unclipped     |
+//! | `dp-noise`      | a crate with per-sample sources but no noise site       |
+//! | `unsafe-safety` | `unsafe` blocks without a `// SAFETY:` comment          |
+//! | `env-registry`  | raw `env::var` / `FASTDP_*` names outside `runtime/env` |
+//! | `doc-drift`     | lib.rs layer map or README env table vs reality         |
+//!
+//! Everything here is token-level and name-based — a deliberately simple
+//! approximation (no type inference, no real name resolution).  Calls are
+//! resolved by name with a module-qualifier filter (`ghost::row_cls(`
+//! prefers fns in a module segment named `ghost`), then same-file, then
+//! the union of all same-named fns; taint flows through a linear scan of
+//! each body in token order, which over-approximates branches.
+
+// the taint fixpoint mutates `nodes[i]` while reading callee entries by
+// resolved index, so the index loop is not iterator-rewritable
+#![allow(clippy::needless_range_loop)]
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{str_content, Kind};
+use crate::report::{Finding, Report};
+use crate::scan::{comment_directive, Directive, SourceFile};
+
+/// All rule names, in report order.
+pub const RULES: &[&str] = &[
+    "hash-iteration",
+    "thread-spawn",
+    "dp-flow",
+    "dp-noise",
+    "unsafe-safety",
+    "env-registry",
+    "doc-drift",
+];
+
+/// What to scan and where the privileged modules live.
+pub struct LintConfig {
+    /// The crate source tree — all rules run here.
+    pub src_root: PathBuf,
+    /// Extra trees (benches, tests) — hygiene rules only.
+    pub aux_roots: Vec<PathBuf>,
+    /// README for the doc-drift env-table check.
+    pub readme: Option<PathBuf>,
+    /// The env registry module (exempt from `env-registry`).
+    pub env_rel: String,
+    /// The thread-pool module (exempt from `thread-spawn`).
+    pub pool_rel: String,
+    /// Dir prefixes (with trailing `/`) where `hash-iteration` applies.
+    pub determinism_dirs: Vec<String>,
+}
+
+impl LintConfig {
+    /// Config for a bare source tree (fixtures); no README, no aux roots.
+    pub fn for_tree(src_root: &Path) -> LintConfig {
+        LintConfig {
+            src_root: src_root.to_path_buf(),
+            aux_roots: Vec::new(),
+            readme: None,
+            env_rel: "runtime/env.rs".to_string(),
+            pool_rel: "runtime/pool.rs".to_string(),
+            determinism_dirs: ["kernels/", "engine/", "coordinator/", "nlg/"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+
+    /// Config for the real repository layout rooted at `repo_root`.
+    pub fn for_repo(repo_root: &Path) -> LintConfig {
+        let rust = repo_root.join("rust");
+        let mut cfg = LintConfig::for_tree(&rust.join("src"));
+        cfg.aux_roots = vec![rust.join("benches"), rust.join("tests")];
+        cfg.readme = Some(repo_root.join("README.md"));
+        cfg
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for deterministic
+/// scan (and report) order.
+fn rs_files(root: &Path) -> Vec<(PathBuf, String)> {
+    fn walk(dir: &Path, root: &Path, out: &mut Vec<(PathBuf, String)>) {
+        let rd = match std::fs::read_dir(dir) {
+            Ok(rd) => rd,
+            Err(_) => return,
+        };
+        let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, root, out);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push((p, rel));
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(root, root, &mut out);
+    out
+}
+
+struct Ctx<'a> {
+    cfg: &'a LintConfig,
+    report: Report,
+}
+
+impl Ctx<'_> {
+    fn emit(&mut self, sf: &SourceFile, rule: &'static str, line: usize, message: String) {
+        let f = Finding { rule, file: sf.rel.clone(), line, message };
+        if sf.is_allowed(rule, line) {
+            self.report.allowed.push(f);
+        } else {
+            self.report.findings.push(f);
+        }
+    }
+}
+
+fn code_indices(sf: &SourceFile) -> Vec<usize> {
+    (0..sf.toks.len()).filter(|&i| sf.toks[i].kind != Kind::Comment).collect()
+}
+
+// ---------------------------------------------------------------- hygiene
+
+fn rule_unsafe(ctx: &mut Ctx, sf: &SourceFile) {
+    let code = code_indices(sf);
+    for (ci, &ti) in code.iter().enumerate() {
+        let t = &sf.toks[ti];
+        if t.kind != Kind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let next = code.get(ci + 1).map(|&j| sf.toks[j].text.as_str());
+        let what = match next {
+            Some("{") => "block",
+            Some("impl") => "impl",
+            _ => continue, // `unsafe fn` declarations are callee-side
+        };
+        let covered = sf.toks.iter().any(|c| {
+            c.kind == Kind::Comment
+                && c.text.contains("SAFETY")
+                && c.line <= t.line
+                && c.line + 6 >= t.line
+        });
+        if !covered {
+            ctx.emit(
+                sf,
+                "unsafe-safety",
+                t.line,
+                format!("`unsafe` {what} without a `// SAFETY:` comment on the preceding lines"),
+            );
+        }
+    }
+}
+
+fn rule_thread(ctx: &mut Ctx, sf: &SourceFile) {
+    if sf.rel == ctx.cfg.pool_rel {
+        return;
+    }
+    let code = code_indices(sf);
+    for w in 0..code.len().saturating_sub(2) {
+        let [a, b, c] = [&sf.toks[code[w]], &sf.toks[code[w + 1]], &sf.toks[code[w + 2]]];
+        if a.kind == Kind::Ident
+            && a.text == "thread"
+            && b.text == "::"
+            && matches!(c.text.as_str(), "spawn" | "scope" | "Builder")
+            && !sf.in_test(a.line)
+        {
+            ctx.emit(
+                sf,
+                "thread-spawn",
+                a.line,
+                format!(
+                    "std::thread::{} outside runtime/pool.rs — route parallelism through the \
+                     worker pool so reductions stay in fixed order",
+                    c.text
+                ),
+            );
+        }
+    }
+}
+
+fn rule_env(ctx: &mut Ctx, sf: &SourceFile, exempt: bool) {
+    if exempt {
+        return;
+    }
+    let code = code_indices(sf);
+    for w in 0..code.len().saturating_sub(2) {
+        let [a, b, c] = [&sf.toks[code[w]], &sf.toks[code[w + 1]], &sf.toks[code[w + 2]]];
+        if a.kind == Kind::Ident && a.text == "env" && b.text == "::" && c.text == "var" {
+            ctx.emit(
+                sf,
+                "env-registry",
+                a.line,
+                "raw std::env::var read — declare the knob in runtime/env.rs and use its typed \
+                 accessor"
+                    .to_string(),
+            );
+        }
+    }
+    for t in &sf.toks {
+        if let Some(s) = str_content(t) {
+            if s.starts_with("FASTDP_") {
+                ctx.emit(
+                    sf,
+                    "env-registry",
+                    t.line,
+                    format!("knob name {s:?} outside the runtime/env.rs registry"),
+                );
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- determinism
+
+const ITER_METHODS: &[&str] =
+    &["iter", "keys", "values", "into_iter", "into_keys", "into_values", "drain"];
+const EVIDENCE_IDENTS: &[&str] = &[
+    "sum", "product", "push", "extend", "collect", "insert", "entry", "or_insert",
+    "or_insert_with", "fold", "write", "push_str",
+];
+const EVIDENCE_PUNCTS: &[&str] = &["+=", "-=", "*=", "/="];
+
+fn is_evidence(sf: &SourceFile, ti: usize) -> bool {
+    let t = &sf.toks[ti];
+    match t.kind {
+        Kind::Ident => EVIDENCE_IDENTS.contains(&t.text.as_str()),
+        Kind::Punct => EVIDENCE_PUNCTS.contains(&t.text.as_str()),
+        _ => false,
+    }
+}
+
+/// Flag iteration over hash-ordered containers that feeds accumulation or
+/// ordered output.  Detection is per-file and name-based: bindings whose
+/// declared type or initializer mentions `HashMap`/`HashSet` (or calls an
+/// in-file fn returning one) become "hash symbols"; a `for` loop or
+/// iterator-method chain rooted at a hash symbol with accumulation
+/// evidence (`+=`, `.sum()`, `.push(...)`, `.insert(...)`, …) in its body
+/// or statement is a finding.
+fn rule_hash(ctx: &mut Ctx, sf: &SourceFile) {
+    let code = code_indices(sf);
+    let tx = |ci: usize| sf.toks[code[ci]].text.as_str();
+    let is_hash_name = |s: &str| s == "HashMap" || s == "HashSet";
+
+    // in-file fns returning a hash container
+    let mut hash_fns: BTreeSet<String> = BTreeSet::new();
+    for f in &sf.fns {
+        if let Some((open, _)) = f.body {
+            let sig: Vec<&str> = sf.toks[f.name_idx..open]
+                .iter()
+                .filter(|t| t.kind != Kind::Comment)
+                .map(|t| t.text.as_str())
+                .collect();
+            if let Some(arrow) = sig.iter().position(|&s| s == "->") {
+                if sig[arrow..].iter().any(|&s| is_hash_name(s)) {
+                    hash_fns.insert(f.name.clone());
+                }
+            }
+        }
+    }
+
+    // hash-typed bindings: `name: … HashMap …` and `let name = … HashMap/… hashfn( …`
+    let mut hash_vars: BTreeSet<String> = BTreeSet::new();
+    for ci in 0..code.len() {
+        let t = &sf.toks[code[ci]];
+        if t.kind == Kind::Ident && ci + 1 < code.len() && tx(ci + 1) == ":" {
+            let mut angle = 0i32;
+            for k in ci + 2..(ci + 32).min(code.len()) {
+                match tx(k) {
+                    "<" => angle += 1,
+                    ">" => angle -= 1,
+                    ">>" => angle -= 2,
+                    "," | ";" | ")" | "{" | "=" if angle <= 0 => break,
+                    s if is_hash_name(s) => {
+                        hash_vars.insert(t.text.clone());
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if t.kind == Kind::Ident && t.text == "let" {
+            let mut j = ci + 1;
+            if j < code.len() && tx(j) == "mut" {
+                j += 1;
+            }
+            if j + 1 < code.len() && sf.toks[code[j]].kind == Kind::Ident {
+                let name = sf.toks[code[j]].text.clone();
+                for k in j + 1..(j + 80).min(code.len()) {
+                    match tx(k) {
+                        ";" => break,
+                        s if is_hash_name(s) => {
+                            hash_vars.insert(name);
+                            break;
+                        }
+                        s if hash_fns.contains(s) && k + 1 < code.len() && tx(k + 1) == "(" => {
+                            hash_vars.insert(name);
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    let mut flagged: BTreeSet<usize> = BTreeSet::new(); // lines already reported
+    let mut hit = |ctx: &mut Ctx, line: usize, sym: &str, via: &str| {
+        if flagged.insert(line) && !sf.in_test(line) {
+            ctx.emit(
+                sf,
+                "hash-iteration",
+                line,
+                format!(
+                    "iteration over hash-ordered `{sym}` feeds {via} — hasher order makes the \
+                     result nondeterministic; use BTreeMap/sorted keys"
+                ),
+            );
+        }
+    };
+
+    // for-loops: `for pat in <hash-rooted expr> { …evidence… }`
+    for ci in 0..code.len() {
+        if tx(ci) != "for" || sf.toks[code[ci]].kind != Kind::Ident {
+            continue;
+        }
+        if ci + 1 < code.len() && tx(ci + 1) == "<" {
+            continue; // for<'a> HRTB
+        }
+        // find `in` at depth 0 before the body `{`
+        let mut depth = 0i32;
+        let mut in_at = None;
+        for k in ci + 1..(ci + 60).min(code.len()) {
+            match tx(k) {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => break,
+                "in" if depth == 0 => {
+                    in_at = Some(k);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let Some(in_at) = in_at else { continue }; // `impl … for …`
+        // root of the iterated expression
+        let mut e = in_at + 1;
+        while e < code.len() && matches!(tx(e), "&" | "mut") {
+            e += 1;
+        }
+        if e >= code.len() || sf.toks[code[e]].kind != Kind::Ident {
+            continue;
+        }
+        let mut sym = sf.toks[code[e]].text.clone();
+        if sym == "self" && e + 2 < code.len() && tx(e + 1) == "." {
+            sym = sf.toks[code[e + 2]].text.clone();
+        }
+        let rooted = hash_vars.contains(&sym)
+            || (hash_fns.contains(&sym) && e + 1 < code.len() && tx(e + 1) == "(");
+        if !rooted {
+            continue;
+        }
+        // body range: first `{` at depth 0 after `in`
+        let mut depth = 0i32;
+        let mut open = None;
+        for k in in_at + 1..(in_at + 80).min(code.len()) {
+            match tx(k) {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    open = Some(code[k]);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let Some(open) = open else { continue };
+        let close = sf.match_brace(open);
+        if (open..close).any(|ti| is_evidence(sf, ti)) {
+            hit(ctx, sf.toks[code[ci]].line, &sym, "accumulation/ordered output in the loop body");
+        }
+    }
+
+    // method chains: `sym.iter()… / sym(…).into_keys()…` followed by
+    // evidence before the end of the statement
+    for ci in 0..code.len() {
+        let t = &sf.toks[code[ci]];
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let mut probe = None; // index after the iteration-method call opens
+        if hash_vars.contains(&t.text)
+            && ci + 3 < code.len()
+            && tx(ci + 1) == "."
+            && ITER_METHODS.contains(&tx(ci + 2))
+            && tx(ci + 3) == "("
+        {
+            probe = Some(ci + 4);
+        } else if hash_fns.contains(&t.text) && ci + 1 < code.len() && tx(ci + 1) == "(" {
+            // skip the call's argument list, then look for `.iter_method(`
+            let mut depth = 0i32;
+            let mut k = ci + 1;
+            while k < code.len() {
+                match tx(k) {
+                    "(" => depth += 1,
+                    ")" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            if k + 3 < code.len()
+                && tx(k + 1) == "."
+                && ITER_METHODS.contains(&tx(k + 2))
+                && tx(k + 3) == "("
+            {
+                probe = Some(k + 4);
+            }
+        }
+        let Some(start) = probe else { continue };
+        let mut depth = 0i32;
+        for k in start..(start + 150).min(code.len()) {
+            match tx(k) {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                ";" if depth <= 0 => break,
+                _ => {}
+            }
+            if is_evidence(sf, code[k]) {
+                hit(ctx, t.line, &t.text, "an accumulating iterator chain");
+                break;
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- DP taint
+
+#[derive(Debug)]
+enum Event {
+    Call { name: String, qual: Option<String>, line: usize },
+    Marker { line: usize },
+}
+
+#[derive(Default, Clone, Copy)]
+struct Flags {
+    source: bool,
+    boundary: bool,
+    noise: bool,
+    sink: bool,
+}
+
+struct FnNode {
+    file: usize,
+    name: String,
+    line: usize,
+    flags: Flags,
+    events: Vec<Event>,
+    emits: bool,
+}
+
+fn fn_flags(directives: &[Directive]) -> Flags {
+    let mut f = Flags::default();
+    for d in directives {
+        match d {
+            Directive::PerSampleGrad => f.source = true,
+            Directive::ClipBoundary => f.boundary = true,
+            Directive::NoiseSite => f.noise = true,
+            Directive::DpSink => f.sink = true,
+        }
+    }
+    f
+}
+
+/// Extract call sites and dp-sink markers from one fn body, in token order.
+fn body_events(sf: &SourceFile, open: usize, close: usize) -> Vec<Event> {
+    let mut events = Vec::new();
+    let idx: Vec<usize> = (open + 1..close).collect();
+    let code: Vec<usize> = idx.iter().copied().filter(|&i| sf.toks[i].kind != Kind::Comment).collect();
+    let pos_in_code: BTreeMap<usize, usize> = code.iter().enumerate().map(|(k, &i)| (i, k)).collect();
+    for &ti in &idx {
+        let t = &sf.toks[ti];
+        if t.kind == Kind::Comment {
+            if let Some(Ok(Directive::DpSink)) = comment_directive(&t.text) {
+                events.push(Event::Marker { line: t.line });
+            }
+            continue;
+        }
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let ci = pos_in_code[&ti];
+        if ci + 1 >= code.len() || sf.toks[code[ci + 1]].text != "(" {
+            continue;
+        }
+        // not a nested `fn name(` definition
+        if ci > 0 && sf.toks[code[ci - 1]].text == "fn" {
+            continue;
+        }
+        let qual = if ci >= 2 && sf.toks[code[ci - 1]].text == "::" {
+            let q = &sf.toks[code[ci - 2]];
+            if q.kind == Kind::Ident && !matches!(q.text.as_str(), "crate" | "super" | "self") {
+                Some(q.text.clone())
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        events.push(Event::Call { name: t.text.clone(), qual, line: t.line });
+    }
+    events
+}
+
+/// The `dp-flow` + `dp-noise` passes over the whole source set.
+fn rule_dp(ctx: &mut Ctx, files: &[SourceFile]) {
+    // fn table (non-test fns with bodies)
+    let mut nodes: Vec<FnNode> = Vec::new();
+    let mut table: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (fi, sf) in files.iter().enumerate() {
+        for f in &sf.fns {
+            let Some((open, close)) = f.body else { continue };
+            if sf.in_test(f.line) {
+                continue;
+            }
+            let flags = fn_flags(&f.directives);
+            let n = FnNode {
+                file: fi,
+                name: f.name.clone(),
+                line: f.line,
+                flags,
+                events: body_events(sf, open, close),
+                emits: flags.source,
+            };
+            table.entry(f.name.clone()).or_default().push(nodes.len());
+            nodes.push(n);
+        }
+    }
+
+    let resolve_ids = |name: &str, qual: &Option<String>, file: usize, nodes: &[FnNode]| -> Vec<usize> {
+        let Some(all) = table.get(name) else { return Vec::new() };
+        if let Some(q) = qual {
+            let matched: Vec<usize> = all
+                .iter()
+                .copied()
+                .filter(|&n| files[nodes[n].file].module_segs().iter().any(|s| s == q))
+                .collect();
+            if !matched.is_empty() {
+                return matched;
+            }
+        }
+        let local: Vec<usize> = all.iter().copied().filter(|&n| nodes[n].file == file).collect();
+        if !local.is_empty() {
+            return local;
+        }
+        all.clone()
+    };
+
+    // fixpoint: a fn "emits taint" if annotated per-sample-grad, or its
+    // linear body scan ends tainted; clip-boundary fns never emit.
+    for _ in 0..nodes.len() + 1 {
+        let mut changed = false;
+        for i in 0..nodes.len() {
+            if nodes[i].flags.boundary {
+                continue; // emits stays false
+            }
+            let mut state = nodes[i].flags.source;
+            for ev in &nodes[i].events {
+                if let Event::Call { name, qual, .. } = ev {
+                    let ids = resolve_ids(name, qual, nodes[i].file, &nodes);
+                    if ids.iter().any(|&n| nodes[n].flags.boundary) {
+                        state = false;
+                    } else if ids.iter().any(|&n| nodes[n].emits) {
+                        state = true;
+                    }
+                }
+            }
+            let emits = nodes[i].flags.source || state;
+            if emits != nodes[i].emits {
+                nodes[i].emits = emits;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // findings: taint must be clear at every sink call / dp-sink marker
+    let mut noise_called = false;
+    let mut findings: Vec<(usize, usize, String)> = Vec::new(); // (file, line, msg)
+    for i in 0..nodes.len() {
+        let mut state = nodes[i].flags.source;
+        for ev in &nodes[i].events {
+            match ev {
+                Event::Marker { line } => {
+                    if state {
+                        findings.push((
+                            nodes[i].file,
+                            *line,
+                            format!(
+                                "per-sample-tainted data live at a dp-sink marker in `{}` \
+                                 without crossing a clip boundary",
+                                nodes[i].name
+                            ),
+                        ));
+                        state = false; // report each marker breach once
+                    }
+                }
+                Event::Call { name, qual, line } => {
+                    let ids = resolve_ids(name, qual, nodes[i].file, &nodes);
+                    if ids.iter().any(|&n| nodes[n].flags.noise) {
+                        noise_called = true;
+                    }
+                    if state && ids.iter().any(|&n| nodes[n].flags.sink) {
+                        findings.push((
+                            nodes[i].file,
+                            *line,
+                            format!(
+                                "per-sample-tainted data reaches dp-sink `{name}` in `{}` \
+                                 without crossing a clip boundary",
+                                nodes[i].name
+                            ),
+                        ));
+                    }
+                    if ids.iter().any(|&n| nodes[n].flags.boundary) {
+                        state = false;
+                    } else if ids.iter().any(|&n| nodes[n].emits) {
+                        state = true;
+                    }
+                }
+            }
+        }
+    }
+    for (fi, line, msg) in findings {
+        ctx.emit(&files[fi], "dp-flow", line, msg);
+    }
+
+    // dp-noise: sources declared => a noise-site must exist and be called
+    let first_source = nodes.iter().find(|n| n.flags.source);
+    let first_noise = nodes.iter().find(|n| n.flags.noise);
+    match (first_source, first_noise) {
+        (Some(src), None) => ctx.emit(
+            &files[src.file],
+            "dp-noise",
+            src.line,
+            "per-sample-grad sources are annotated but no fn is annotated noise-site — the DP \
+             mechanism has no noise injection point"
+                .to_string(),
+        ),
+        (Some(_), Some(noise)) if !noise_called => ctx.emit(
+            &files[noise.file],
+            "dp-noise",
+            noise.line,
+            format!("noise-site `{}` is never called outside tests", noise.name),
+        ),
+        _ => {}
+    }
+}
+
+// -------------------------------------------------------------- doc drift
+
+fn rule_doc(ctx: &mut Ctx, files: &[SourceFile], cfg: &LintConfig) {
+    // lib.rs layer map vs `pub mod` set
+    if let Some(lib) = files.iter().find(|f| f.rel == "lib.rs") {
+        let code = code_indices(lib);
+        let mut mods: BTreeMap<String, usize> = BTreeMap::new(); // name -> line
+        for w in 0..code.len().saturating_sub(3) {
+            let t = |k: usize| &lib.toks[code[w + k]];
+            if t(0).text == "pub" && t(1).text == "mod" && t(2).kind == Kind::Ident && t(3).text == ";"
+            {
+                mods.insert(t(2).text.clone(), t(2).line);
+            }
+        }
+        let mut bullets: BTreeMap<String, usize> = BTreeMap::new();
+        for t in &lib.toks {
+            if t.kind != Kind::Comment || !t.text.starts_with("//!") || !t.text.contains("* [`") {
+                continue;
+            }
+            if let Some(frag) = t.text.split("* [`").nth(1) {
+                if let Some(name) = frag.split("`]").next() {
+                    if !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                        bullets.insert(name.to_string(), t.line);
+                    }
+                }
+            }
+        }
+        if !bullets.is_empty() {
+            for (m, line) in &mods {
+                if !bullets.contains_key(m) {
+                    ctx.emit(
+                        lib,
+                        "doc-drift",
+                        *line,
+                        format!("module `{m}` is missing from the lib.rs layer map"),
+                    );
+                }
+            }
+            for (b, line) in &bullets {
+                if !mods.contains_key(b) {
+                    ctx.emit(
+                        lib,
+                        "doc-drift",
+                        *line,
+                        format!("lib.rs layer map lists `{b}` but there is no such `pub mod`"),
+                    );
+                }
+            }
+        }
+    }
+
+    // README env-var table vs the runtime/env.rs registry
+    let (Some(readme_path), Some(env_file)) =
+        (cfg.readme.as_ref(), files.iter().find(|f| f.rel == cfg.env_rel))
+    else {
+        return;
+    };
+    let Ok(readme) = std::fs::read_to_string(readme_path) else { return };
+    // Registry names only: skip the file's test mod (it asserts on the bare
+    // "FASTDP_" prefix) and require at least one character after the prefix.
+    let declared: BTreeSet<String> = env_file
+        .toks
+        .iter()
+        .filter(|t| !env_file.in_test(t.line))
+        .filter_map(str_content)
+        .filter(|s| s.starts_with("FASTDP_") && s.len() > "FASTDP_".len())
+        .map(String::from)
+        .collect();
+    let mut rows: BTreeMap<String, usize> = BTreeMap::new();
+    for (ln, line) in readme.lines().enumerate() {
+        let lt = line.trim_start();
+        if !lt.starts_with('|') {
+            continue;
+        }
+        for part in lt.split('`') {
+            if part.starts_with("FASTDP_")
+                && part.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+            {
+                rows.entry(part.to_string()).or_insert(ln + 1);
+            }
+        }
+    }
+    let readme_sf = SourceFile::from_source(readme_path.clone(), "README.md", "");
+    for (knob, line) in &rows {
+        if !declared.contains(knob) {
+            ctx.emit(
+                &readme_sf,
+                "doc-drift",
+                *line,
+                format!("README documents `{knob}` but runtime/env.rs does not declare it"),
+            );
+        }
+    }
+    for knob in &declared {
+        if !rows.contains_key(knob) {
+            ctx.emit(
+                &readme_sf,
+                "doc-drift",
+                1,
+                format!("knob `{knob}` (runtime/env.rs) is missing from the README env-var table"),
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------ entry
+
+/// Run every rule over the configured trees.
+pub fn run(cfg: &LintConfig) -> Report {
+    let mut src_files: Vec<SourceFile> = Vec::new();
+    for (p, rel) in rs_files(&cfg.src_root) {
+        if let Ok(sf) = SourceFile::load(&p, &rel) {
+            src_files.push(sf);
+        }
+    }
+    let mut aux_files: Vec<SourceFile> = Vec::new();
+    for root in &cfg.aux_roots {
+        let prefix = root.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        for (p, rel) in rs_files(root) {
+            if let Ok(sf) = SourceFile::load(&p, &format!("{prefix}/{rel}")) {
+                aux_files.push(sf);
+            }
+        }
+    }
+
+    let mut ctx = Ctx { cfg, report: Report::default() };
+    for sf in &src_files {
+        rule_unsafe(&mut ctx, sf);
+        rule_thread(&mut ctx, sf);
+        rule_env(&mut ctx, sf, sf.rel == cfg.env_rel);
+        if cfg.determinism_dirs.iter().any(|d| sf.rel.starts_with(d.as_str())) {
+            rule_hash(&mut ctx, sf);
+        }
+    }
+    for sf in &aux_files {
+        rule_unsafe(&mut ctx, sf);
+        rule_env(&mut ctx, sf, false);
+    }
+    rule_dp(&mut ctx, &src_files);
+    rule_doc(&mut ctx, &src_files, cfg);
+
+    ctx.report.files_scanned = src_files.len() + aux_files.len();
+    ctx.report.normalize();
+    ctx.report
+}

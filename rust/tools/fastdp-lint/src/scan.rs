@@ -1,0 +1,359 @@
+//! Per-file structure on top of the token stream: function items, lint
+//! annotation directives, allow-lists, and `#[cfg(test)]` spans.
+//!
+//! Annotation grammar (all inside ordinary `//` comments):
+//!
+//! * `// fastdp-lint: per-sample-grad` — the next `fn` produces
+//!   per-sample gradient data (taint source).
+//! * `// fastdp-lint: clip-boundary` — the next `fn` clips; taint does
+//!   not survive a call to it.
+//! * `// fastdp-lint: noise-site` — the next `fn` injects the Gaussian
+//!   noise of the DP mechanism.
+//! * `// fastdp-lint: dp-sink` — before a `fn`: calling it is a sink
+//!   (shared accumulator / optimizer / wire).  Inside a body: a
+//!   checkpoint — taint must be clear when control passes this line.
+//! * `// fastdp-lint: allow(rule-a, rule-b) <reason>` — suppress those
+//!   rules' findings on this line or the next.
+
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{lex, Kind, Tok};
+
+/// Fn-level directive kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Directive {
+    PerSampleGrad,
+    ClipBoundary,
+    NoiseSite,
+    DpSink,
+}
+
+impl Directive {
+    pub fn parse(word: &str) -> Option<Directive> {
+        match word {
+            "per-sample-grad" => Some(Directive::PerSampleGrad),
+            "clip-boundary" => Some(Directive::ClipBoundary),
+            "noise-site" => Some(Directive::NoiseSite),
+            "dp-sink" => Some(Directive::DpSink),
+            _ => None,
+        }
+    }
+}
+
+/// A `fn` item: name, directives attached above it, and token spans.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Token index of the name ident (signature spans name → body).
+    pub name_idx: usize,
+    pub line: usize,
+    pub directives: Vec<Directive>,
+    /// Token-index range of the body, `start` at `{`, `end` at matching
+    /// `}` (exclusive of neither); `None` for bodyless trait fns.
+    pub body: Option<(usize, usize)>,
+}
+
+/// One lexed + structured source file.
+pub struct SourceFile {
+    pub path: PathBuf,
+    /// Unix-style path relative to the scan root (e.g. `kernels/fused.rs`).
+    pub rel: String,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnItem>,
+    /// Line ranges (inclusive) covered by `#[cfg(test)] mod … { … }`.
+    pub test_ranges: Vec<(usize, usize)>,
+    /// `(line, rules)` for each `allow(...)` annotation.
+    pub allows: Vec<(usize, Vec<String>)>,
+}
+
+/// Parse the directive (or allow-list) out of one comment's text.
+pub(crate) fn comment_directive(text: &str) -> Option<Result<Directive, Vec<String>>> {
+    let rest = text.split("fastdp-lint:").nth(1)?.trim();
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        let rules = inner
+            .split(')')
+            .next()
+            .unwrap_or("")
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        return Some(Err(rules));
+    }
+    let word = rest.split_whitespace().next()?;
+    Directive::parse(word).map(Ok)
+}
+
+/// Tokens that may sit between a directive comment and its `fn` without
+/// detaching it (visibility, safety, ABI, attribute punctuation).
+fn is_fn_prefix(t: &Tok) -> bool {
+    match t.kind {
+        Kind::Str => true, // extern "C"
+        Kind::Ident => {
+            matches!(t.text.as_str(), "pub" | "crate" | "super" | "self" | "in" | "unsafe" | "extern" | "const" | "async")
+        }
+        Kind::Punct => matches!(t.text.as_str(), "(" | ")"),
+        _ => false,
+    }
+}
+
+impl SourceFile {
+    pub fn load(path: &Path, rel: &str) -> std::io::Result<SourceFile> {
+        let src = std::fs::read_to_string(path)?;
+        Ok(SourceFile::from_source(path.to_path_buf(), rel, &src))
+    }
+
+    pub fn from_source(path: PathBuf, rel: &str, src: &str) -> SourceFile {
+        let toks = lex(src);
+        let mut sf = SourceFile {
+            path,
+            rel: rel.replace('\\', "/"),
+            toks,
+            fns: Vec::new(),
+            test_ranges: Vec::new(),
+            allows: Vec::new(),
+        };
+        sf.scan_structure();
+        sf
+    }
+
+    /// Skip an attribute starting at `#`; returns the index after `]`.
+    fn skip_attr(&self, mut i: usize) -> usize {
+        // at '#', optionally '!', then '[' … matching ']'
+        i += 1;
+        if i < self.toks.len() && self.toks[i].text == "!" {
+            i += 1;
+        }
+        if i >= self.toks.len() || self.toks[i].text != "[" {
+            return i;
+        }
+        let mut depth = 0usize;
+        while i < self.toks.len() {
+            match self.toks[i].text.as_str() {
+                "[" => depth += 1,
+                "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i + 1;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        i
+    }
+
+    /// Does the attribute span `[start, end)` mention `cfg` + `test`?
+    fn attr_is_cfg_test(&self, start: usize, end: usize) -> bool {
+        let mut saw_cfg = false;
+        let mut saw_test = false;
+        for t in &self.toks[start..end.min(self.toks.len())] {
+            if t.kind == Kind::Ident {
+                saw_cfg |= t.text == "cfg";
+                saw_test |= t.text == "test";
+            }
+        }
+        saw_cfg && saw_test
+    }
+
+    /// Find the matching `}` for the `{` at token index `open`.
+    pub fn match_brace(&self, open: usize) -> usize {
+        let mut depth = 0usize;
+        let mut i = open;
+        while i < self.toks.len() {
+            if self.toks[i].kind == Kind::Punct {
+                match self.toks[i].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return i;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        self.toks.len().saturating_sub(1)
+    }
+
+    fn scan_structure(&mut self) {
+        let mut pending: Vec<Directive> = Vec::new();
+        let mut i = 0;
+        while i < self.toks.len() {
+            let t = &self.toks[i];
+            match t.kind {
+                Kind::Comment => {
+                    match comment_directive(&t.text) {
+                        Some(Ok(d)) => pending.push(d),
+                        Some(Err(rules)) => self.allows.push((t.line, rules)),
+                        None => {}
+                    }
+                    i += 1;
+                }
+                Kind::Punct if t.text == "#" => {
+                    let end = self.skip_attr(i);
+                    if self.attr_is_cfg_test(i, end) {
+                        // attr → (prefix tokens) → `mod name {` marks a test mod
+                        let mut j = end;
+                        while j < self.toks.len()
+                            && (self.toks[j].kind == Kind::Comment || is_fn_prefix(&self.toks[j]))
+                        {
+                            j += 1;
+                        }
+                        if j < self.toks.len() && self.toks[j].text == "mod" {
+                            // find the opening brace of the mod body
+                            let mut k = j + 1;
+                            while k < self.toks.len() && self.toks[k].text != "{" && self.toks[k].text != ";" {
+                                k += 1;
+                            }
+                            if k < self.toks.len() && self.toks[k].text == "{" {
+                                let close = self.match_brace(k);
+                                self.test_ranges.push((self.toks[k].line, self.toks[close].line));
+                            }
+                        }
+                    }
+                    i = end;
+                }
+                Kind::Ident if t.text == "fn" => {
+                    // `fn` keyword: an item if followed by a name (a bare
+                    // `fn(…)` pointer type is not)
+                    if i + 1 < self.toks.len() && self.toks[i + 1].kind == Kind::Ident {
+                        let name = self.toks[i + 1].text.clone();
+                        let line = self.toks[i + 1].line;
+                        // scan to body `{` (or `;`) at paren depth 0
+                        let mut k = i + 2;
+                        let mut paren = 0i32;
+                        let mut body = None;
+                        while k < self.toks.len() {
+                            match self.toks[k].text.as_str() {
+                                "(" | "[" => paren += 1,
+                                ")" | "]" => paren -= 1,
+                                "{" if paren == 0 => {
+                                    let close = self.match_brace(k);
+                                    body = Some((k, close));
+                                    break;
+                                }
+                                ";" if paren == 0 => break,
+                                _ => {}
+                            }
+                            k += 1;
+                        }
+                        self.fns.push(FnItem {
+                            name,
+                            name_idx: i + 1,
+                            line,
+                            directives: std::mem::take(&mut pending),
+                            body,
+                        });
+                        // continue scanning *inside* the body too (nested
+                        // fns, and the structure scan only needs item
+                        // starts) — so just advance past the signature
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                _ => {
+                    if !is_fn_prefix(t) {
+                        pending.clear();
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Module path segments for call resolution: `kernels/fused.rs` →
+    /// `["kernels", "fused"]`; `dp/mod.rs` → `["dp"]`; `lib.rs` → `[]`.
+    pub fn module_segs(&self) -> Vec<String> {
+        let mut segs: Vec<String> = self.rel.trim_end_matches(".rs").split('/').map(String::from).collect();
+        if segs.last().map(|s| s.as_str()) == Some("mod") {
+            segs.pop();
+        }
+        if segs.last().map(|s| s.as_str()) == Some("lib") {
+            segs.pop();
+        }
+        segs
+    }
+
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// Is `rule` allowed (suppressed) at `line`?  An `allow` annotation
+    /// covers its own line and the following one.
+    pub fn is_allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|(l, rules)| {
+            (*l == line || l + 1 == line) && rules.iter().any(|r| r == rule)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(src: &str) -> SourceFile {
+        SourceFile::from_source(PathBuf::from("mem.rs"), "kernels/fused.rs", src)
+    }
+
+    #[test]
+    fn fn_items_and_directives() {
+        let f = sf("// fastdp-lint: per-sample-grad\npub fn backward(x: usize) -> usize { x }\nfn plain() {}\n");
+        assert_eq!(f.fns.len(), 2);
+        assert_eq!(f.fns[0].name, "backward");
+        assert_eq!(f.fns[0].directives, vec![Directive::PerSampleGrad]);
+        assert!(f.fns[1].directives.is_empty());
+    }
+
+    #[test]
+    fn directive_survives_attrs_and_vis() {
+        let f = sf("// fastdp-lint: clip-boundary\n#[inline]\npub(crate) fn clip() {}\n");
+        assert_eq!(f.fns[0].directives, vec![Directive::ClipBoundary]);
+    }
+
+    #[test]
+    fn directive_detaches_across_items() {
+        let f = sf("// fastdp-lint: clip-boundary\nconst X: usize = 1;\nfn later() {}\n");
+        // the const item consumed the pending directive ("const" is a fn
+        // prefix, but `X`'s`=` clears) — later() must not inherit it
+        assert!(f.fns[0].directives.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_ranges() {
+        let f = sf("fn live() {}\n#[cfg(test)]\nmod tests {\n  fn helper() {}\n}\n");
+        assert_eq!(f.test_ranges.len(), 1);
+        assert!(f.in_test(4));
+        assert!(!f.in_test(1));
+    }
+
+    #[test]
+    fn allow_parses_and_covers_next_line() {
+        let f = sf("// fastdp-lint: allow(thread-spawn, dp-flow) replica workers\nfn x() {}\n");
+        assert!(f.is_allowed("thread-spawn", 1));
+        assert!(f.is_allowed("dp-flow", 2));
+        assert!(!f.is_allowed("dp-flow", 3));
+        assert!(!f.is_allowed("hash-iteration", 2));
+    }
+
+    #[test]
+    fn fn_pointer_type_is_not_an_item() {
+        let f = sf("type J = Box<dyn Fn(usize)>; static F: fn(usize) -> usize = id;\nfn id(x: usize) -> usize { x }\n");
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "id");
+    }
+
+    #[test]
+    fn module_segs_variants() {
+        let m = SourceFile::from_source(PathBuf::from("m"), "dp/mod.rs", "");
+        assert_eq!(m.module_segs(), vec!["dp"]);
+        let l = SourceFile::from_source(PathBuf::from("m"), "lib.rs", "");
+        assert!(l.module_segs().is_empty());
+        let f = SourceFile::from_source(PathBuf::from("m"), "kernels/fused.rs", "");
+        assert_eq!(f.module_segs(), vec!["kernels", "fused"]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Layer map:
+//!
+//! * [`kernels`] — the math kernels.
+//! * [`coordinator`] — listed here but no such module exists.
+
+pub mod engine;
+pub mod kernels;

@@ -1,0 +1,7 @@
+//! Layer map:
+//!
+//! * [`engine`] — execution.
+//! * [`kernels`] — the math kernels.
+
+pub mod engine;
+pub mod kernels;

@@ -1,0 +1,3 @@
+pub fn threads() -> Option<usize> {
+    std::env::var("FASTDP_THREADS").ok()?.parse().ok()
+}

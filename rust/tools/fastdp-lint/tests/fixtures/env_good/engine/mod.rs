@@ -1,0 +1,3 @@
+pub fn worker_count() -> usize {
+    crate::runtime::env::threads().unwrap_or(1)
+}

@@ -1,0 +1,4 @@
+// the registry module — the one place env reads are allowed
+pub fn threads() -> Option<usize> {
+    std::env::var("FASTDP_THREADS").ok()?.parse().ok()
+}

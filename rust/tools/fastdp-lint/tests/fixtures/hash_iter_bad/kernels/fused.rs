@@ -1,0 +1,19 @@
+use std::collections::HashMap;
+
+pub fn fold_grads(grads: &HashMap<u64, f32>) -> f32 {
+    let mut total = 0.0_f32;
+    for (_k, v) in grads.iter() {
+        total += *v;
+    }
+    total
+}
+
+pub fn collect_names() -> Vec<String> {
+    let mut slots = HashMap::new();
+    slots.insert("b1".to_string(), 0usize);
+    let mut out = Vec::new();
+    for name in slots.keys() {
+        out.push(name.clone());
+    }
+    out
+}

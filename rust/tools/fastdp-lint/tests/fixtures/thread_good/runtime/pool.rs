@@ -1,0 +1,5 @@
+// the pool module owns thread creation — exempt from thread-spawn
+pub fn start_worker() {
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}

@@ -1,0 +1,3 @@
+pub fn first(v: &[f32]) -> f32 {
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,5 @@
+pub fn first(v: &[f32]) -> f32 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above guarantees index 0 is in bounds
+    unsafe { *v.get_unchecked(0) }
+}

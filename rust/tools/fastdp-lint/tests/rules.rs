@@ -1,0 +1,96 @@
+//! Fixture tests: every rule fires on its `*_bad` tree and stays silent
+//! on its `*_good` counterpart.  The fixtures under `tests/fixtures/` are
+//! data (never compiled) — each is a miniature `src/` tree laid out the
+//! way `LintConfig::for_tree` expects.
+
+use std::path::PathBuf;
+
+use fastdp_lint::{run, LintConfig, Report};
+
+fn lint(fixture: &str) -> Report {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(fixture);
+    assert!(root.is_dir(), "missing fixture tree {}", root.display());
+    run(&LintConfig::for_tree(&root))
+}
+
+fn fired(r: &Report) -> Vec<&'static str> {
+    r.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn hash_iteration_fires_on_hash_loops() {
+    let bad = lint("hash_iter_bad");
+    let rules = fired(&bad);
+    assert!(rules.contains(&"hash-iteration"), "{:?}", bad.findings);
+    // both the accumulating for-loop and the .keys() ordering loop
+    assert!(rules.iter().filter(|r| **r == "hash-iteration").count() >= 2, "{:?}", bad.findings);
+}
+
+#[test]
+fn hash_iteration_silent_on_btreemap_and_lookups() {
+    let good = lint("hash_iter_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn thread_spawn_fires_outside_pool() {
+    let bad = lint("thread_bad");
+    assert!(fired(&bad).contains(&"thread-spawn"), "{:?}", bad.findings);
+}
+
+#[test]
+fn thread_spawn_exempts_pool_and_honors_allow() {
+    let good = lint("thread_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+    // the annotated spawn is recorded as allowed, not dropped silently
+    assert_eq!(good.allowed.len(), 1, "{:?}", good.allowed);
+    assert_eq!(good.allowed[0].rule, "thread-spawn");
+}
+
+#[test]
+fn dp_flow_fires_on_unclipped_sink() {
+    let bad = lint("taint_bad");
+    let hits: Vec<_> = bad.findings.iter().filter(|f| f.rule == "dp-flow").collect();
+    assert_eq!(hits.len(), 1, "{:?}", bad.findings);
+    assert!(hits[0].message.contains("accumulate"), "{}", hits[0].message);
+}
+
+#[test]
+fn dp_flow_silent_when_clip_precedes_sink() {
+    let good = lint("taint_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn dp_noise_fires_when_no_noise_site_declared() {
+    let bad = lint("noise_bad");
+    assert_eq!(fired(&bad), vec!["dp-noise"], "{:?}", bad.findings);
+}
+
+#[test]
+fn unsafe_fires_without_safety_comment() {
+    let bad = lint("unsafe_bad");
+    assert_eq!(fired(&bad), vec!["unsafe-safety"], "{:?}", bad.findings);
+    let good = lint("unsafe_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn env_registry_fires_on_raw_reads_and_literals() {
+    let bad = lint("env_bad");
+    let rules = fired(&bad);
+    // one finding for the raw env::var call, one for the FASTDP_ literal
+    assert_eq!(rules.iter().filter(|r| **r == "env-registry").count(), 2, "{:?}", bad.findings);
+    let good = lint("env_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn doc_drift_fires_on_stale_layer_map() {
+    let bad = lint("doc_drift_bad");
+    let rules = fired(&bad);
+    // one missing module, one stale bullet
+    assert_eq!(rules.iter().filter(|r| **r == "doc-drift").count(), 2, "{:?}", bad.findings);
+    let good = lint("doc_drift_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
