@@ -74,7 +74,7 @@ if [ "$run_matrix" = 1 ]; then
     # (The test binaries are already built by the tier-1 run above, so each
     # cell only pays test execution time.)
     for threads in 1 4; do
-        for kernels in fused legacy ghost blocked; do
+        for kernels in fused legacy ghost blocked simd; do
             echo "==> determinism matrix: FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels"
             FASTDP_THREADS=$threads FASTDP_KERNELS=$kernels cargo test -q
         done
@@ -83,6 +83,11 @@ if [ "$run_matrix" = 1 ]; then
     # width re-runs its equivalence suite to prove outputs don't move
     echo "==> determinism matrix: FASTDP_KERNELS=blocked FASTDP_BLOCK_ROWS=5"
     FASTDP_KERNELS=blocked FASTDP_BLOCK_ROWS=5 cargo test -q --test blocked_equivalence
+    # the simd tier's instruction-set level is a pure dispatch knob; the
+    # forced portable-scalar fallback re-runs its equivalence suite to
+    # prove the level changes no bits
+    echo "==> determinism matrix: FASTDP_KERNELS=simd FASTDP_SIMD=scalar"
+    FASTDP_KERNELS=simd FASTDP_SIMD=scalar cargo test -q --test simd_equivalence
 fi
 
 if [ "$run_bench" = 1 ]; then
@@ -104,12 +109,13 @@ if [ "$run_bench" = 1 ]; then
         FASTDP_BENCH_BASELINE="$baseline" \
         FASTDP_BENCH_OUT="$out" cargo bench --bench throughput
     for key in '"bench"' '"sweep"' '"points"' '"steps_per_sec"' '"rows_per_sec"' \
-               '"block_rows"' '"peak_scratch_bytes"' \
+               '"block_rows"' '"peak_scratch_bytes"' '"roofline_utilization"' \
                '"ghost_steps_per_sec"' '"ghost_within_tolerance"' \
                '"blocked_steps_per_sec"' '"blocked_within_tolerance"' \
+               '"simd_steps_per_sec"' '"simd_within_tolerance"' \
                '"best_rows_per_sec"' \
                '"speedup_vs_scalar"' '"deterministic"' '"overhead_ratio"' \
-               '"ghost"' '"blocked"'; do
+               '"ghost"' '"blocked"' '"simd"'; do
         grep -q "$key" "$out" || { echo "bench-smoke: $key missing from $out" >&2; exit 1; }
     done
     # seed the in-repo perf trajectory from the bench stage if it has never

@@ -1,7 +1,7 @@
 //! Step-throughput trajectory bench: sweeps the interpreter train step
-//! over kernel tier (legacy scalar vs fused vs ghost vs blocked) x worker
-//! count (plus a block-width sweep for the blocked tier), verifies the
-//! per-tier determinism contracts, and emits
+//! over kernel tier (legacy scalar vs fused vs ghost vs blocked vs simd)
+//! x worker count (plus a block-width sweep for the blocked and simd
+//! tiers), verifies the per-tier determinism contracts, and emits
 //! `BENCH_step_throughput.json` at the repo root so future PRs have a
 //! number to beat.
 //!
@@ -20,21 +20,24 @@
 //! JSON schema: see the README "Performance" section; the document is
 //! validated right after writing (and again by ci.sh's bench-smoke stage).
 //! Every point carries `rows_per_sec`, `block_rows` (0 off the blocked
-//! tier) and `peak_scratch_bytes` — the analytic gradient-side memory of
-//! the cell — so the grid reproduces Table 2's complexity claims and the
-//! issue's headline: the blocked tier amortizes weight-panel traffic
-//! across microbatch rows, making per-row DP clipping cost-invisible next
-//! to the batched matmul.
+//! and simd tiers), `peak_scratch_bytes` — the analytic gradient-side
+//! memory of the cell — and `roofline_utilization`, the structural
+//! `analysis::roofline` proxy divided by the measured step time, so the
+//! grid reproduces Table 2's complexity claims and the issue's headline:
+//! the blocked/simd tiers amortize weight-panel traffic across microbatch
+//! rows, making per-row DP clipping cost-invisible next to the batched
+//! matmul.
 //!
 //! Exit code is non-zero if any (model, method) violated its tier
 //! contract (fused bit-identical across worker counts and to the legacy
 //! scalar path; ghost bit-identical across worker counts; blocked
-//! bit-identical across worker counts *and* block widths; ghost and
-//! blocked within 1e-4 relative tolerance of the fused oracle) or if the
-//! baseline gate tripped.
+//! bit-identical across worker counts *and* block widths; simd
+//! bit-identical across worker counts, block widths *and* forced feature
+//! levels; ghost, blocked and simd within 1e-4 relative tolerance of the
+//! fused oracle) or if the baseline gate tripped.
 
 use fastdp::bench::{self, DpOverhead, ThroughputPoint, ThroughputSummary};
-use fastdp::kernels::KernelMode;
+use fastdp::kernels::{simd, KernelMode, SimdLevel};
 use fastdp::runtime::env;
 use fastdp::util::table::Table;
 
@@ -81,8 +84,11 @@ fn main() {
             let mut best_fused: Option<ThroughputPoint> = None;
             let mut best_ghost = 0.0f64;
             let mut best_blocked = 0.0f64;
+            let mut best_simd = 0.0f64;
             for &t in &thread_counts {
-                for mode in [KernelMode::Fused, KernelMode::Ghost, KernelMode::Blocked] {
+                for mode in
+                    [KernelMode::Fused, KernelMode::Ghost, KernelMode::Blocked, KernelMode::Simd]
+                {
                     let p = bench::interp_throughput(model, method, t, mode, None, steps)
                         .expect("sweep point");
                     match mode {
@@ -96,32 +102,35 @@ fn main() {
                             }
                         }
                         KernelMode::Ghost => best_ghost = best_ghost.max(p.steps_per_sec),
+                        KernelMode::Simd => best_simd = best_simd.max(p.steps_per_sec),
                         _ => best_blocked = best_blocked.max(p.steps_per_sec),
                     }
                     points.push(p);
                 }
             }
             // block-width sweep at one worker: the knob the issue's >= 2x
-            // fused-at-B>=32 acceptance point reads off
+            // fused-at-B>=32 acceptance point reads off; the simd tier
+            // shares the panel geometry, so it sweeps the same widths
             for &blk in &block_widths {
-                let p = bench::interp_throughput(
-                    model,
-                    method,
-                    1,
-                    KernelMode::Blocked,
-                    Some(blk),
-                    steps,
-                )
-                .expect("block sweep point");
-                best_blocked = best_blocked.max(p.steps_per_sec);
-                points.push(p);
+                for mode in [KernelMode::Blocked, KernelMode::Simd] {
+                    let p = bench::interp_throughput(model, method, 1, mode, Some(blk), steps)
+                        .expect("block sweep point");
+                    if mode == KernelMode::Simd {
+                        best_simd = best_simd.max(p.steps_per_sec);
+                    } else {
+                        best_blocked = best_blocked.max(p.steps_per_sec);
+                    }
+                    points.push(p);
+                }
             }
             // tier contracts on one probe input set: fused bit-identical
             // across worker counts and to legacy; ghost bit-identical
             // across worker counts; blocked bit-identical across worker
-            // counts AND block widths; ghost/blocked tolerance-close to
-            // fused.  One value run per cell serves both probes — bits
-            // are derived from the same outputs.
+            // counts AND block widths; simd bit-identical across worker
+            // counts, block widths AND forced feature levels;
+            // ghost/blocked/simd tolerance-close to fused.  One value run
+            // per cell serves both probes — bits are derived from the
+            // same outputs.
             let fused_vals = bench::interp_outputs(model, method, 1, KernelMode::Fused)
                 .expect("determinism probe");
             let ghost_vals = bench::interp_outputs(model, method, 1, KernelMode::Ghost)
@@ -134,9 +143,13 @@ fn main() {
                 Some(block_widths[0]),
             )
             .expect("blocked determinism probe");
+            let simd_vals =
+                bench::interp_outputs_simd(model, method, 1, Some(block_widths[0]), None)
+                    .expect("simd determinism probe");
             let base = bench::output_bits_of(&fused_vals);
             let ghost_base = bench::output_bits_of(&ghost_vals);
             let blocked_base = bench::output_bits_of(&blocked_vals);
+            let simd_base = bench::output_bits_of(&simd_vals);
             let mut deterministic = thread_counts.iter().filter(|&&t| t != 1).all(|&t| {
                 bench::interp_output_bits(model, method, t, KernelMode::Fused).unwrap() == base
                     && bench::interp_output_bits(model, method, t, KernelMode::Ghost).unwrap()
@@ -151,10 +164,15 @@ fn main() {
                         )
                         .unwrap(),
                     ) == blocked_base
+                    && bench::output_bits_of(
+                        &bench::interp_outputs_simd(model, method, t, Some(block_widths[0]), None)
+                            .unwrap(),
+                    ) == simd_base
             });
             deterministic &=
                 bench::interp_output_bits(model, method, 1, KernelMode::Legacy).unwrap() == base;
-            // blocked_base already covers block_widths[0] at one worker
+            // blocked_base/simd_base already cover block_widths[0] at one
+            // worker and the detected feature level
             deterministic &= block_widths.iter().skip(1).all(|&blk| {
                 bench::output_bits_of(
                     &bench::interp_outputs_blocked(
@@ -166,12 +184,31 @@ fn main() {
                     )
                     .unwrap(),
                 ) == blocked_base
+                    && bench::output_bits_of(
+                        &bench::interp_outputs_simd(model, method, 1, Some(blk), None).unwrap(),
+                    ) == simd_base
             });
+            // forcing the portable-scalar fallback must not change a bit
+            deterministic &= bench::output_bits_of(
+                &bench::interp_outputs_simd(
+                    model,
+                    method,
+                    1,
+                    Some(block_widths[0]),
+                    Some(SimdLevel::Scalar),
+                )
+                .unwrap(),
+            ) == simd_base;
             let ghost_within_tolerance =
                 bench::max_rel_diff(&fused_vals, &ghost_vals) < FACTOR_TIER_RTOL;
             let blocked_within_tolerance =
                 bench::max_rel_diff(&fused_vals, &blocked_vals) < FACTOR_TIER_RTOL;
-            all_ok &= deterministic && ghost_within_tolerance && blocked_within_tolerance;
+            let simd_within_tolerance =
+                bench::max_rel_diff(&fused_vals, &simd_vals) < FACTOR_TIER_RTOL;
+            all_ok &= deterministic
+                && ghost_within_tolerance
+                && blocked_within_tolerance
+                && simd_within_tolerance;
             let best = best_fused.expect("at least one fused point");
             let best_rows_per_sec = points
                 .iter()
@@ -186,18 +223,20 @@ fn main() {
                 fused_steps_per_sec: best.steps_per_sec,
                 ghost_steps_per_sec: best_ghost,
                 blocked_steps_per_sec: best_blocked,
+                simd_steps_per_sec: best_simd,
                 best_rows_per_sec,
                 speedup_vs_scalar: best.steps_per_sec / scalar.steps_per_sec,
                 deterministic,
                 ghost_within_tolerance,
                 blocked_within_tolerance,
+                simd_within_tolerance,
             });
             eprintln!("done {model}__{method}");
         }
         // paper headline: DP overhead of BiTFiT at the widest sweep
         // point, per kernel tier — the ghost/blocked rows are the §3.2
         // claim
-        for kernels in ["fused", "ghost", "blocked"] {
+        for kernels in ["fused", "ghost", "blocked", "simd"] {
             let find = |method: &str| {
                 points.iter().find(|p| {
                     p.model == *model
@@ -219,7 +258,7 @@ fn main() {
         }
     }
 
-    // the fused-vs-ghost-vs-blocked-vs-legacy grid, one line per cell
+    // the fused-vs-ghost-vs-blocked-vs-simd-vs-legacy grid, one line per cell
     let mut grid = Table::new(&[
         "model",
         "method",
@@ -229,6 +268,7 @@ fn main() {
         "steps/s",
         "rows/s",
         "peak scratch (bytes)",
+        "roofline util",
     ]);
     for p in &points {
         grid.row(vec![
@@ -240,9 +280,13 @@ fn main() {
             format!("{:.2}", p.steps_per_sec),
             format!("{:.1}", p.rows_per_sec),
             p.peak_scratch_bytes.to_string(),
+            format!("{:.2e}", p.roofline_utilization),
         ]);
     }
     grid.print();
+    if let Some(level) = simd::recorded_level() {
+        println!("\nsimd tier instruction set: {}", level.name());
+    }
     println!();
 
     let mut t = Table::new(&[
@@ -252,6 +296,7 @@ fn main() {
         "best fused steps/s",
         "best ghost steps/s",
         "best blocked steps/s",
+        "best simd steps/s",
         "best rows/s",
         "threads",
         "speedup",
@@ -265,10 +310,15 @@ fn main() {
             format!("{:.2}", s.fused_steps_per_sec),
             format!("{:.2}", s.ghost_steps_per_sec),
             format!("{:.2}", s.blocked_steps_per_sec),
+            format!("{:.2}", s.simd_steps_per_sec),
             format!("{:.1}", s.best_rows_per_sec),
             s.best_threads.to_string(),
             format!("{:.2}x", s.speedup_vs_scalar),
-            if s.deterministic && s.ghost_within_tolerance && s.blocked_within_tolerance {
+            if s.deterministic
+                && s.ghost_within_tolerance
+                && s.blocked_within_tolerance
+                && s.simd_within_tolerance
+            {
                 "OK".into()
             } else {
                 "FAIL".into()
@@ -346,7 +396,8 @@ fn main() {
     if !all_ok {
         eprintln!(
             "FAIL: a kernel-tier contract was violated (fused/legacy bit-identity, \
-             blocked thread/block-width bit-identity, or ghost/blocked-vs-fused tolerance)"
+             blocked thread/block-width bit-identity, simd thread/block/feature-level \
+             bit-identity, or ghost/blocked/simd-vs-fused tolerance)"
         );
     }
     if !all_ok || !gate_ok {

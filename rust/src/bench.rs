@@ -18,7 +18,7 @@ use crate::coordinator::optim::OptimKind;
 use crate::coordinator::pretrain::{pretrained_params, PretrainSpec};
 use crate::dp::clip::ClipMode;
 use crate::engine::{Backend, Engine, EngineError, InterpreterBackend, JobSpec, Method};
-use crate::kernels::KernelMode;
+use crate::kernels::{KernelMode, SimdLevel};
 use crate::runtime::ArtifactMeta;
 use crate::util::json::{self, Json};
 use crate::util::rng::ChaChaRng;
@@ -222,11 +222,11 @@ pub fn memory_estimate(
 pub struct ThroughputPoint {
     pub model: String,
     pub method: String,
-    /// `"fused"`, `"ghost"`, `"blocked"` or `"legacy"`.
+    /// `"fused"`, `"ghost"`, `"blocked"`, `"simd"` or `"legacy"`.
     pub kernels: String,
     pub threads: usize,
-    /// Block width of a blocked-tier cell (`FASTDP_BLOCK_ROWS`); 0 for
-    /// the row-at-a-time tiers.
+    /// Block width of a blocked- or simd-tier cell (`FASTDP_BLOCK_ROWS`);
+    /// 0 for the row-at-a-time tiers.
     pub block_rows: usize,
     pub sec_per_step: f64,
     pub steps_per_sec: f64,
@@ -236,6 +236,13 @@ pub struct ThroughputPoint {
     /// (`InterpreterBackend::train_scratch_bytes`) — the per-cell memory
     /// column reproducing Table 2's complexity claims.
     pub peak_scratch_bytes: u64,
+    /// Structural roofline utilization: the step's idealized runtime on
+    /// the `analysis::roofline` chip model (≈6·B·npos·(pf+pt) flops vs
+    /// parameter + per-row HBM traffic, whichever bound dominates)
+    /// divided by the measured `sec_per_step`.  A structural proxy for
+    /// cross-cell comparison within one sweep, not a hardware claim;
+    /// finite and positive for every cell.
+    pub roofline_utilization: f64,
 }
 
 /// Per-(model, method) roll-up: best fused and ghost points vs the
@@ -253,6 +260,9 @@ pub struct ThroughputSummary {
     /// Best blocked-tier throughput over the swept worker counts and
     /// block widths.
     pub blocked_steps_per_sec: f64,
+    /// Best simd-tier throughput over the swept worker counts and block
+    /// widths (feature level left to runtime detection).
+    pub simd_steps_per_sec: f64,
     /// Best rows/sec over every swept cell of this (model, method) — the
     /// number the `ci.sh` bench regression gate compares against the
     /// repo-root `BENCH_step_throughput.json` snapshot.
@@ -261,8 +271,10 @@ pub struct ThroughputSummary {
     pub speedup_vs_scalar: f64,
     /// Were loss/grad/sq_norms bit-identical across all swept worker
     /// counts *and* vs the legacy path (fused tier), bit-identical across
-    /// worker counts within the ghost tier, and bit-identical across
-    /// worker counts *and block widths* within the blocked tier?
+    /// worker counts within the ghost tier, bit-identical across worker
+    /// counts *and block widths* within the blocked tier, and
+    /// bit-identical across worker counts, block widths *and forced
+    /// feature levels* within the simd tier?
     pub deterministic: bool,
     /// Did the ghost outputs match the fused oracle within the documented
     /// relative tolerance?
@@ -270,6 +282,9 @@ pub struct ThroughputSummary {
     /// Did the blocked outputs match the fused oracle within the same
     /// documented relative tolerance?
     pub blocked_within_tolerance: bool,
+    /// Did the simd outputs match the fused oracle within the same
+    /// documented relative tolerance?
+    pub simd_within_tolerance: bool,
 }
 
 /// DP-vs-non-DP cost of one model under one kernel tier at a fixed worker
@@ -372,7 +387,7 @@ pub fn interp_throughput(
         method: method.to_string(),
         kernels: mode.name().to_string(),
         threads,
-        block_rows: if mode == KernelMode::Blocked {
+        block_rows: if matches!(mode, KernelMode::Blocked | KernelMode::Simd) {
             block_rows.unwrap_or_else(crate::kernels::blocked::block_rows_from_env)
         } else {
             0
@@ -381,7 +396,35 @@ pub fn interp_throughput(
         steps_per_sec: 1.0 / sec_per_step,
         rows_per_sec: meta.batch as f64 / sec_per_step,
         peak_scratch_bytes,
+        roofline_utilization: step_roofline_seconds(&meta) / sec_per_step,
     })
+}
+
+/// Idealized step time on the `analysis::roofline` chip model — the
+/// numerator of [`ThroughputPoint::roofline_utilization`].  Built as a
+/// structural proxy from the artifact's own parameter counts: the
+/// forward/backward/clip sweep costs ~6 flops per (row, position,
+/// parameter) — positions only multiply work on the LM Gram path — and
+/// moves every parameter once per row plus one resident copy over HBM.
+/// Strictly positive for every artifact (pf + pt >= 1, batch >= 1), so
+/// the resulting utilization is always finite.
+fn step_roofline_seconds(meta: &ArtifactMeta) -> f64 {
+    use crate::analysis::roofline::{Chip, KernelEstimate};
+    let b = meta.batch.max(1) as u64;
+    let params = (meta.pf + meta.pt).max(1) as u64;
+    let npos = if meta.model.starts_with("lm") {
+        (meta.inputs[2].elements() / meta.batch.max(1)).max(1) as u64
+    } else {
+        1
+    };
+    let est = KernelEstimate {
+        name: format!("interp_step[{}__{}]", meta.model, meta.method),
+        vmem_bytes: 4 * params,
+        hbm_bytes: 4 * (b * params + params),
+        flops: 6 * b * npos * params,
+        hbm_lower_bound: 4 * params,
+    };
+    est.seconds(Chip::tpu_like())
 }
 
 /// One train step's f32 outputs (loss, grad, sq_norms) as plain values —
@@ -407,6 +450,27 @@ pub fn interp_outputs_blocked(
 ) -> Result<Vec<Vec<f32>>, EngineError> {
     let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
     backend.set_block_rows(block_rows);
+    let step = backend.load(&format!("{model}__{method}"))?;
+    let meta = step.meta().clone();
+    let inputs = synth_step_inputs(&backend, &meta, 7)?;
+    let out = step.run(&inputs)?;
+    Ok(out.iter().map(|t| t.as_f32().to_vec()).collect())
+}
+
+/// [`interp_outputs_blocked`] for the simd tier with the instruction-set
+/// level forced (`None` defers to runtime detection and any registered
+/// override) — the probe behind the bench's cross-level bit-identity
+/// check.
+pub fn interp_outputs_simd(
+    model: &str,
+    method: &str,
+    threads: usize,
+    block_rows: Option<usize>,
+    level: Option<SimdLevel>,
+) -> Result<Vec<Vec<f32>>, EngineError> {
+    let mut backend = InterpreterBackend::with_config(Some(threads), Some(KernelMode::Simd));
+    backend.set_block_rows(block_rows);
+    backend.set_simd_level(level);
     let step = backend.load(&format!("{model}__{method}"))?;
     let meta = step.meta().clone();
     let inputs = synth_step_inputs(&backend, &meta, 7)?;
@@ -467,6 +531,7 @@ pub fn throughput_json(
             ("steps_per_sec", Json::Num(p.steps_per_sec)),
             ("rows_per_sec", Json::Num(p.rows_per_sec)),
             ("peak_scratch_bytes", Json::Num(p.peak_scratch_bytes as f64)),
+            ("roofline_utilization", Json::Num(p.roofline_utilization)),
         ])
     };
     let summary = |s: &ThroughputSummary| {
@@ -478,11 +543,13 @@ pub fn throughput_json(
             ("fused_steps_per_sec", Json::Num(s.fused_steps_per_sec)),
             ("ghost_steps_per_sec", Json::Num(s.ghost_steps_per_sec)),
             ("blocked_steps_per_sec", Json::Num(s.blocked_steps_per_sec)),
+            ("simd_steps_per_sec", Json::Num(s.simd_steps_per_sec)),
             ("best_rows_per_sec", Json::Num(s.best_rows_per_sec)),
             ("speedup_vs_scalar", Json::Num(s.speedup_vs_scalar)),
             ("deterministic", Json::Bool(s.deterministic)),
             ("ghost_within_tolerance", Json::Bool(s.ghost_within_tolerance)),
             ("blocked_within_tolerance", Json::Bool(s.blocked_within_tolerance)),
+            ("simd_within_tolerance", Json::Bool(s.simd_within_tolerance)),
         ])
     };
     let overhead = |o: &DpOverhead| {
@@ -547,6 +614,7 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
         "steps_per_sec",
         "rows_per_sec",
         "peak_scratch_bytes",
+        "roofline_utilization",
     ];
     for p in points {
         for key in point_keys {
@@ -565,11 +633,13 @@ pub fn validate_throughput_json(src: &str) -> Result<(), String> {
         "fused_steps_per_sec",
         "ghost_steps_per_sec",
         "blocked_steps_per_sec",
+        "simd_steps_per_sec",
         "best_rows_per_sec",
         "speedup_vs_scalar",
         "deterministic",
         "ghost_within_tolerance",
         "blocked_within_tolerance",
+        "simd_within_tolerance",
     ];
     for s in summary {
         for key in summary_keys {
@@ -702,6 +772,7 @@ mod tests {
             steps_per_sec: 2.0,
             rows_per_sec: 64.0,
             peak_scratch_bytes: 6084 * 8,
+            roofline_utilization: 0.25,
         }];
         let summaries = vec![ThroughputSummary {
             model: "cls-base".into(),
@@ -711,11 +782,13 @@ mod tests {
             fused_steps_per_sec: 2.0,
             ghost_steps_per_sec: 2.1,
             blocked_steps_per_sec: 4.2,
+            simd_steps_per_sec: 4.4,
             best_rows_per_sec,
             speedup_vs_scalar: 4.0,
             deterministic: true,
             ghost_within_tolerance: true,
             blocked_within_tolerance: true,
+            simd_within_tolerance: true,
         }];
         let overheads = vec![DpOverhead {
             model: "cls-base".into(),
@@ -827,5 +900,36 @@ mod tests {
             interp_outputs_blocked("cls-base", "dp-bitfit", 1, KernelMode::Blocked, Some(8))
                 .unwrap();
         assert!(max_rel_diff(&f, &blk) < 1e-4, "blocked diverges: {}", max_rel_diff(&f, &blk));
+        // simd: bit-identical across worker counts AND forced feature
+        // levels, within tolerance of the fused oracle
+        let sd = |threads: usize, level: Option<SimdLevel>| {
+            output_bits_of(
+                &interp_outputs_simd("cls-base", "dp-bitfit", threads, Some(8), level).unwrap(),
+            )
+        };
+        let simd_bits = sd(1, None);
+        assert_eq!(simd_bits, sd(2, None));
+        assert_eq!(simd_bits, sd(2, Some(SimdLevel::Scalar)));
+        let sm = interp_outputs_simd("cls-base", "dp-bitfit", 1, Some(8), None).unwrap();
+        assert!(max_rel_diff(&f, &sm) < 1e-4, "simd diverges: {}", max_rel_diff(&f, &sm));
+    }
+
+    #[test]
+    fn roofline_utilization_is_finite_for_every_tier() {
+        for mode in
+            [KernelMode::Fused, KernelMode::Ghost, KernelMode::Blocked, KernelMode::Simd]
+        {
+            let p = interp_throughput("cls-base", "dp-bitfit", 1, mode, Some(8), 1).unwrap();
+            assert!(
+                p.roofline_utilization.is_finite() && p.roofline_utilization > 0.0,
+                "{}: utilization {}",
+                mode.name(),
+                p.roofline_utilization
+            );
+        }
+        // the LM Gram path scales the flop proxy by positions
+        let p = interp_throughput("lm-small", "dp-bitfit", 1, KernelMode::Simd, None, 1).unwrap();
+        assert!(p.roofline_utilization.is_finite() && p.roofline_utilization > 0.0);
+        assert!(p.block_rows > 0, "simd cells record their block width");
     }
 }

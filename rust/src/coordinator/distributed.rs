@@ -1,5 +1,7 @@
 //! Real data-parallel replicated training: N replica workers on real
-//! threads, each running the fused kernels of [`crate::kernels`] over a
+//! threads, each running the configured kernel tier of [`crate::kernels`]
+//! (fused by default; ghost/blocked/simd propagate from the leader's
+//! backend config) over a
 //! disjoint microbatch shard of the Poisson logical batch, shipping their
 //! clipped gradient sums to the leader over channels.  Bytes are counted on
 //! the wire (the payloads really are serialized byte vectors), so

@@ -46,7 +46,12 @@
 //! streaming each weight panel once per block instead of once per row —
 //! bit-identical across thread counts *and* block widths
 //! (`FASTDP_BLOCK_ROWS`; see `tests/blocked_equivalence.rs`), tolerance
-//! vs fused.  A loaded step caches its
+//! vs fused.  The **simd** tier (`FASTDP_KERNELS=simd`) runs the blocked
+//! panel sweeps on explicit f32 vector lanes with compensated (Neumaier)
+//! accumulators — the instruction-set level is detected once per process
+//! and can be forced down with `FASTDP_SIMD` — bit-identical across
+//! thread counts, block widths *and* forced feature levels (see
+//! `tests/simd_equivalence.rs`), tolerance vs fused.  A loaded step caches its
 //! trainable-slot table, its frozen/train -> full scatter plan, its
 //! factor layout, and all scratch buffers, so the steady state does no
 //! per-row heap allocation and never re-merges parameters from scratch.
@@ -61,8 +66,8 @@ use std::rc::Rc;
 use crate::coordinator::workloads::ModelShape;
 use crate::dp::clip::{clip_factor, ClipMode};
 use crate::kernels::{
-    blocked, fused, ghost, legacy, loss, BlockedCtx, BlockedWorkspace, GhostPlan, KernelMode,
-    NetView, TrainSlots, Workspace,
+    blocked, fused, ghost, legacy, loss, simd, BlockedCtx, BlockedWorkspace, GhostPlan, KernelMode,
+    NetView, SimdCtx, SimdLevel, SimdWorkspace, TrainSlots, Workspace,
 };
 use crate::runtime::pool;
 use crate::runtime::{ArtifactMeta, IoSpec, Layout, LayoutLeaf};
@@ -112,6 +117,10 @@ pub struct InterpreterBackend {
     /// Block-width override for the blocked tier (`None` => steps resolve
     /// `FASTDP_BLOCK_ROWS` once when loaded).
     block_rows: Option<usize>,
+    /// Feature-level override for the simd tier (`None` => steps resolve
+    /// `FASTDP_SIMD` / runtime detection once when loaded).  Always
+    /// clamped to what the host supports.
+    simd_level: Option<SimdLevel>,
 }
 
 impl InterpreterBackend {
@@ -158,6 +167,18 @@ impl InterpreterBackend {
     /// width (see `tests/blocked_equivalence.rs`).
     pub fn set_block_rows(&mut self, block_rows: Option<usize>) {
         self.block_rows = block_rows.map(|n| n.max(1));
+        self.steps.clear();
+    }
+
+    /// Force the simd tier's instruction-set level (clamped to host
+    /// support at load).  `None` defers to `FASTDP_SIMD` / runtime
+    /// detection.  Drops the step cache so the next `load` re-bakes the
+    /// configuration.  A pure dispatch knob: simd outputs are
+    /// bit-identical at every level (see `tests/simd_equivalence.rs`) —
+    /// this override exists so tests and benches can prove that without
+    /// touching the process environment.
+    pub fn set_simd_level(&mut self, level: Option<SimdLevel>) {
+        self.simd_level = level;
         self.steps.clear();
     }
 
@@ -209,6 +230,16 @@ impl InterpreterBackend {
                     BlockedWorkspace::words(panel, m.feat_dim(), m.h, m.out) as u64;
                 let embed64 = (m.vocab * m.d) as u64;
                 b * rs + pt + t * panel_ws + embed64
+            }
+            KernelMode::Simd => {
+                // blocked's factor rows and accumulator, but f32 panels
+                // (about half the panel bytes) and no widened embedding
+                // table; mixed f32/f64 words, so count bytes directly
+                let rs = (blocked::ROW_HDR + ghost_plan(&m, &slots).row_stride) as u64;
+                let blk = self.block_rows.unwrap_or_else(blocked::block_rows_from_env);
+                let panel = effective_block(blk, m.kind == RefKind::Lm, m.t, meta.batch, threads);
+                let panel_bytes = SimdWorkspace::bytes(panel, m.feat_dim(), m.h, m.out) as u64;
+                return Ok((b * rs + pt) * 8 + t * panel_bytes);
             }
         };
         Ok(words * 8)
@@ -411,7 +442,14 @@ impl Backend for InterpreterBackend {
         let (model, kind) = parse_artifact(artifact)?;
         let m = self.model_ref(&model)?;
         let meta = m.meta_for(artifact, &kind)?;
-        let step = Rc::new(RefStep::new(m, meta, self.threads, self.kernels, self.block_rows));
+        let step = Rc::new(RefStep::new(
+            m,
+            meta,
+            self.threads,
+            self.kernels,
+            self.block_rows,
+            self.simd_level,
+        ));
         self.steps.insert(artifact.to_string(), step.clone());
         Ok(step)
     }
@@ -426,11 +464,13 @@ impl Backend for InterpreterBackend {
         artifact: &str,
         n: usize,
     ) -> Option<Result<crate::coordinator::distributed::ReplicaGroup, EngineError>> {
-        let (threads, kernels, block_rows) = (self.threads, self.kernels, self.block_rows);
+        let (threads, kernels, block_rows, simd_level) =
+            (self.threads, self.kernels, self.block_rows, self.simd_level);
         let artifact = artifact.to_string();
         Some(crate::coordinator::distributed::ReplicaGroup::spawn(n, move || {
             let mut be = InterpreterBackend::with_config(threads, kernels);
             be.block_rows = block_rows;
+            be.simd_level = simd_level;
             be.load(&artifact)
         }))
     }
@@ -884,6 +924,8 @@ struct Scratch {
     workspaces: Vec<Workspace>,
     /// One panel workspace per worker thread (blocked tier).
     blocked_ws: Vec<BlockedWorkspace>,
+    /// One f32-lane panel workspace per worker thread (simd tier).
+    simd_ws: Vec<SimdWorkspace>,
     /// The embedding table widened to f64 once per step (blocked tier;
     /// empty for image models).
     embed64: Vec<f64>,
@@ -909,6 +951,15 @@ impl Scratch {
             self.blocked_ws.push(BlockedWorkspace::new(block, feat, h, out));
         }
     }
+
+    fn ensure_simd(&mut self, n: usize, block: usize, feat: usize, h: usize, out: usize) {
+        if self.simd_ws.first().is_some_and(|w| w.block < block) {
+            self.simd_ws.clear();
+        }
+        while self.simd_ws.len() < n {
+            self.simd_ws.push(SimdWorkspace::new(block, feat, h, out));
+        }
+    }
 }
 
 /// An executable interpreter step.
@@ -927,8 +978,12 @@ struct RefStep {
     /// Block width of the blocked tier, resolved once at load (override
     /// or `FASTDP_BLOCK_ROWS`).
     block_rows: usize,
+    /// Instruction-set level of the simd tier, resolved once at load
+    /// (override or `FASTDP_SIMD` / runtime detection, clamped to host
+    /// support either way).
+    simd: SimdLevel,
     /// Per-row factor layout of the factor-based tiers (train steps
-    /// loaded with `KernelMode::Ghost` or `KernelMode::Blocked` only).
+    /// loaded with `KernelMode::Ghost`, `Blocked` or `Simd` only).
     ghost: Option<GhostPlan>,
     scratch: RefCell<Scratch>,
 }
@@ -940,6 +995,7 @@ impl RefStep {
         threads: Option<usize>,
         kernels: Option<KernelMode>,
         block_rows: Option<usize>,
+        simd_level: Option<SimdLevel>,
     ) -> RefStep {
         let (slots, merge_plan) = if meta.step == "train" {
             (model.train_slots_packed(&meta.subset), model.merge_plan(&meta.subset))
@@ -948,12 +1004,16 @@ impl RefStep {
         };
         let kernels = kernels.unwrap_or_else(KernelMode::from_env);
         let ghost = if meta.step == "train"
-            && matches!(kernels, KernelMode::Ghost | KernelMode::Blocked)
+            && matches!(kernels, KernelMode::Ghost | KernelMode::Blocked | KernelMode::Simd)
         {
             Some(ghost_plan(&model, &slots))
         } else {
             None
         };
+        let simd_level = SimdLevel::resolve(simd_level);
+        if kernels == KernelMode::Simd {
+            simd::record_level(simd_level);
+        }
         RefStep {
             model,
             meta,
@@ -962,6 +1022,7 @@ impl RefStep {
             threads: threads.unwrap_or_else(pool::default_threads),
             kernels,
             block_rows: block_rows.unwrap_or_else(blocked::block_rows_from_env),
+            simd: simd_level,
             ghost,
             scratch: RefCell::new(Scratch::default()),
         }
@@ -995,6 +1056,7 @@ impl RefStep {
             KernelMode::Legacy => return self.run_train_legacy(inputs),
             KernelMode::Ghost => return self.run_train_ghost(inputs),
             KernelMode::Blocked => return self.run_train_blocked(inputs),
+            KernelMode::Simd => return self.run_train_simd(inputs),
             KernelMode::Fused => {}
         }
         let m = &*self.model;
@@ -1329,6 +1391,135 @@ impl RefStep {
         }
         // phase B: exactly the ghost tier's fixed-order accumulation,
         // reading the factors from behind each row's header
+        accumulate_factor_rows(
+            m,
+            &slots,
+            plan,
+            &s.factors,
+            rw,
+            blocked::ROW_HDR,
+            &s.rows,
+            b,
+            x,
+            threads,
+            &mut s.grad_sum,
+        );
+        Ok(vec![
+            Tensor::scalar_f32(loss_sum as f32),
+            Tensor::f32(vec![pt], s.grad_sum.iter().map(|&v| v as f32).collect()),
+            Tensor::f32(vec![b], sq_norms),
+        ])
+    }
+
+    /// The simd tier: blocked's two-phase structure (f32-lane panel
+    /// sweeps into header-first factor rows, then the shared fixed-order
+    /// phase-B accumulation) with no f64 widening on the panel hot path —
+    /// weights and embeddings feed the lanes as the f32 slices they
+    /// already are, so the blocked tier's per-step `embed64` table and
+    /// per-panel `wrow` widening both disappear.
+    fn run_train_simd(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let m = &*self.model;
+        let plan = self.ghost.as_ref().expect("factor plan built at load");
+        let frozen = inputs[0].as_f32();
+        let train = inputs[1].as_f32();
+        let x = inputs[2];
+        let y = inputs[3];
+        let mask = inputs[4].as_f32();
+        let clip_r = inputs[5].item_f32() as f64;
+        let pt = self.meta.pt;
+        let b = self.meta.batch;
+        let dp = self.is_dp();
+        let mode = self.clip_mode();
+        let threads = self.resolve_threads(b);
+        let is_lm = m.kind == RefKind::Lm;
+        let rw = blocked::ROW_HDR + plan.row_stride;
+        // identical block geometry to the blocked tier: non-LM pools over
+        // row-blocks; LM pools over rows and panels positions per row
+        let eff = effective_block(self.block_rows, is_lm, m.t, b, threads);
+        let (n_tasks, task_rows) = if is_lm { (b, 1) } else { ((b + eff - 1) / eff, eff) };
+        let shard_stride = task_rows * rw;
+
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.full.resize(m.layout.n_params, 0.0);
+        s.factors.resize(n_tasks * shard_stride, 0.0);
+        if s.rows.len() < b.max(n_tasks) {
+            s.rows.resize(b.max(n_tasks), RowOut::default());
+        }
+        s.ensure_simd(threads, eff, m.feat_dim(), m.h, m.out);
+        s.grad_sum.clear();
+        s.grad_sum.resize(pt, 0.0);
+        for r in &self.merge_plan {
+            let src = if r.from_train { train } else { frozen };
+            s.full[r.dst..r.dst + r.len].copy_from_slice(&src[r.src..r.src + r.len]);
+        }
+        let net = m.net_view(&s.full);
+        let slots = self.slots;
+        let ctx = SimdCtx { net: &net, slots: &slots, plan, level: self.simd, dp, clip_r, mode };
+        let kind = m.kind;
+        let t_len = m.t;
+        let out_w = m.out;
+        let npix = m.img * m.img * 3;
+        // phase A: one task per block (LM: per row), factors + headers
+        // into the task's shard
+        pool::for_each_sharded(
+            n_tasks,
+            &mut s.simd_ws[..threads],
+            &mut s.rows[..n_tasks],
+            &mut s.factors[..n_tasks * shard_stride],
+            shard_stride,
+            |task, sw, shard| {
+                if is_lm {
+                    let row = task;
+                    if mask[row] <= 0.0 {
+                        shard[..blocked::ROW_HDR].fill(0.0);
+                        return RowOut::default();
+                    }
+                    let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                    let targets = &y.as_i32()[row * t_len..(row + 1) * t_len];
+                    simd::row_lm_simd(&ctx, sw, shard, toks, targets);
+                    return RowOut::default();
+                }
+                let r0 = task * task_rows;
+                let nb = (b - r0).min(task_rows);
+                let mrows = &mask[r0..r0 + nb];
+                match kind {
+                    RefKind::Cls => {
+                        let toks = &x.as_i32()[r0 * t_len..(r0 + nb) * t_len];
+                        let ys = &y.as_i32()[r0..r0 + nb];
+                        simd::panel_cls(&ctx, sw, shard, toks, t_len, ys, mrows, nb);
+                    }
+                    RefKind::Vit => {
+                        let pix = &x.as_f32()[r0 * npix..(r0 + nb) * npix];
+                        let ys = &y.as_i32()[r0..r0 + nb];
+                        simd::panel_vit(&ctx, sw, shard, pix, ys, mrows, nb);
+                    }
+                    RefKind::Cnn => {
+                        let pix = &x.as_f32()[r0 * npix..(r0 + nb) * npix];
+                        let ts = &y.as_f32()[r0 * out_w..(r0 + nb) * out_w];
+                        simd::panel_cnn(&ctx, sw, shard, pix, ts, mrows, nb);
+                    }
+                    RefKind::Lm => unreachable!("LM pools per row above"),
+                }
+                RowOut::default()
+            },
+        );
+        // headers -> per-row results (contiguous row runs, as in blocked)
+        let mut loss_sum = 0.0f64;
+        let mut sq_norms = vec![0.0f32; b];
+        for row in 0..b {
+            let hdr = &s.factors[row * rw..row * rw + blocked::ROW_HDR];
+            let ro = RowOut { a: hdr[1], b: hdr[2], active: hdr[0] != 0.0 };
+            s.rows[row] = ro;
+            if !ro.active {
+                continue;
+            }
+            sq_norms[row] = ro.b as f32;
+            loss_sum += ro.a * mask[row] as f64;
+        }
+        // phase B: the shared fixed-order factor accumulation — the simd
+        // panels widened their factors exactly, so this path is reused
+        // verbatim
         accumulate_factor_rows(
             m,
             &slots,
@@ -1968,6 +2159,10 @@ mod tests {
             let blocked = b.train_scratch_bytes(artifact, KernelMode::Blocked, 4).unwrap();
             assert!(blocked < fused, "{artifact}: blocked {blocked} >= fused {fused}");
             assert!(blocked >= ghost, "{artifact}: blocked {blocked} < ghost {ghost}");
+            // simd keeps blocked's factor rows but drops the widened
+            // embedding table and halves the panel words
+            let simd = b.train_scratch_bytes(artifact, KernelMode::Simd, 4).unwrap();
+            assert!(simd < blocked, "{artifact}: simd {simd} >= blocked {blocked}");
         }
         // eval artifacts have no train scratch to estimate
         assert!(b.train_scratch_bytes("lm-small__eval", KernelMode::Fused, 1).is_err());
@@ -1988,6 +2183,27 @@ mod tests {
             for (&a, &b) in tf.as_f32().iter().zip(tg.as_f32()) {
                 let scale = a.abs().max(b.abs()).max(1e-6);
                 assert!(((a - b).abs() / scale) < 1e-4, "ghost {b} vs fused {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_step_matches_fused_within_tolerance() {
+        // quick in-module sanity check (the full property suite lives in
+        // tests/simd_equivalence.rs); forced-scalar vs fused so the
+        // fallback path is covered even on avx2 hosts
+        let mut bf = InterpreterBackend::with_config(Some(2), Some(KernelMode::Fused));
+        let mut bs = InterpreterBackend::with_config(Some(2), Some(KernelMode::Simd));
+        bs.set_simd_level(Some(SimdLevel::Scalar));
+        let sf = bf.load("cls-base__dp-bitfit").unwrap();
+        let ss = bs.load("cls-base__dp-bitfit").unwrap();
+        let inputs = train_inputs(&bf, sf.as_ref(), 8, 23);
+        let of = sf.run(&inputs).unwrap();
+        let os = ss.run(&inputs).unwrap();
+        for (tf, ts) in of.iter().zip(&os) {
+            for (&a, &b) in tf.as_f32().iter().zip(ts.as_f32()) {
+                let scale = a.abs().max(b.abs()).max(1e-6);
+                assert!(((a - b).abs() / scale) < 1e-4, "simd {b} vs fused {a}");
             }
         }
     }

@@ -62,7 +62,7 @@ pub use crate::coordinator::optim::{LrSchedule, OptimKind};
 pub use crate::coordinator::task_data::TaskData;
 pub use crate::coordinator::workloads::ModelShape;
 pub use crate::dp::clip::ClipMode;
-pub use crate::kernels::KernelMode;
+pub use crate::kernels::{KernelMode, SimdLevel};
 pub use crate::runtime::Layout;
 
 use std::path::{Path, PathBuf};
@@ -111,14 +111,16 @@ impl Engine {
                 // artifacts but never execute them — don't commit to it
                 Ok(e) if e.platform().contains("xla stub") => eprintln!(
                     "warning: artifact directory {} exists but this binary links the xla stub \
-                     (no HLO execution); using the reference interpreter",
-                    artifact_dir.as_ref().display()
+                     (no HLO execution); {}",
+                    artifact_dir.as_ref().display(),
+                    PjrtBackend::interpreter_tier_hint()
                 ),
                 Ok(e) => return e,
                 Err(e) => eprintln!(
                     "warning: artifact directory {} exists but the PJRT backend failed to open \
-                     ({e}); falling back to the reference interpreter",
-                    artifact_dir.as_ref().display()
+                     ({e}); {}",
+                    artifact_dir.as_ref().display(),
+                    PjrtBackend::interpreter_tier_hint()
                 ),
             }
         }

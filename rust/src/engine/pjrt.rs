@@ -33,6 +33,28 @@ impl PjrtBackend {
     pub fn available(dir: impl AsRef<Path>) -> bool {
         dir.as_ref().join("manifest.json").exists()
     }
+
+    /// What a user who wanted this backend can run instead: the reference
+    /// interpreter's kernel tiers, enumerated from [`KernelMode`] so a new
+    /// tier can never go missing from the message (the tier vocabulary and
+    /// the knob name both live in one place).
+    pub fn interpreter_tier_hint() -> String {
+        use crate::kernels::KernelMode;
+        let tiers = [
+            KernelMode::Fused,
+            KernelMode::Ghost,
+            KernelMode::Blocked,
+            KernelMode::Simd,
+            KernelMode::Legacy,
+        ];
+        let names: Vec<&str> = tiers.iter().map(|m| m.name()).collect();
+        format!(
+            "the interpreter serves every step via its {} kernel tiers ({}={})",
+            names.join("/"),
+            crate::runtime::env::KERNELS.name,
+            KernelMode::default().name()
+        )
+    }
 }
 
 impl Backend for PjrtBackend {

@@ -2,7 +2,7 @@
 //!
 //! The reference interpreter executes Algorithm 1 per microbatch row:
 //! forward -> loss -> backward -> per-sample squared norm -> clip factor ->
-//! accumulate.  Four tiers implement that contract, selectable via
+//! accumulate.  Five tiers implement that contract, selectable via
 //! `FASTDP_KERNELS`:
 //!
 //! * [`fused`] (**`fused`**, the default) — flat, workspace-reusing row
@@ -27,6 +27,14 @@
 //!   bookkeeping is the ghost tier's (factors in the [`GhostPlan`]
 //!   layout, no per-sample gradient materialization); the block width is
 //!   `FASTDP_BLOCK_ROWS` (default [`blocked::DEFAULT_BLOCK_ROWS`]).
+//! * [`simd`] (**`simd`**) — the blocked tier's panel sweeps rewritten on
+//!   explicit f32 vector lanes (`std::arch` x86_64 AVX2, with SSE2 and
+//!   portable-scalar fallbacks selected once per process by runtime
+//!   feature detection; `FASTDP_SIMD` forces a lower level for testing).
+//!   Weights feed the lanes as the f32 slices they already are — no f64
+//!   widening on the panel hot path — and every accumulating lane carries
+//!   a compensated (Neumaier) f32 accumulator so the tier stays inside
+//!   the ghost 1e-4 tolerance contract.
 //! * [`legacy`] (**`legacy`**) — the pre-optimization per-row-allocating
 //!   scalar path, kept verbatim as correctness oracle and benchmark
 //!   baseline.  Only the train step has a legacy variant; eval/decode
@@ -60,6 +68,16 @@
 //! `FASTDP_THREADS` value *and* any `FASTDP_BLOCK_ROWS` value**
 //! (asserted in `tests/blocked_equivalence.rs`).
 //!
+//! *Simd*: same 1e-4 cross-tier tolerance contract vs fused (the panels
+//! round to f32, so `blocked` remains the fused-forward determinism
+//! oracle), and the blocked within-tier contract extended by one more
+//! axis: every feature level performs the identical sequence of
+//! individually rounded IEEE f32 operations (FMA contraction is
+//! deliberately not used), so simd outputs are **bit-identical across
+//! any `FASTDP_THREADS` value, any `FASTDP_BLOCK_ROWS` value *and* any
+//! forced `FASTDP_SIMD` level** (asserted in
+//! `tests/simd_equivalence.rs`).
+//!
 //! The data-parallel replica layer ([`crate::coordinator::distributed`])
 //! runs these same kernels on every replica worker and extends the
 //! fixed-order-reduction discipline across the replica boundary, so the
@@ -71,11 +89,13 @@ pub mod fused;
 pub mod ghost;
 pub mod legacy;
 pub mod loss;
+pub mod simd;
 pub mod view;
 pub mod workspace;
 
 pub use blocked::{BlockedCtx, BlockedWorkspace};
 pub use ghost::{GhostCtx, GhostPlan};
+pub use simd::{SimdCtx, SimdLevel, SimdWorkspace};
 pub use view::{NetView, TrainSlots};
 pub use workspace::Workspace;
 
@@ -92,6 +112,10 @@ pub enum KernelMode {
     /// the forward/backward/factor passes run for a whole block of rows
     /// per weight-panel sweep (`FASTDP_BLOCK_ROWS` sets the block width).
     Blocked,
+    /// The blocked panel sweeps on explicit f32 vector lanes with
+    /// compensated accumulators; the instruction-set level is detected at
+    /// runtime and can be forced down with `FASTDP_SIMD`.
+    Simd,
     /// The pre-optimization per-row-allocating scalar path, kept as a
     /// correctness oracle and benchmark baseline.  Only the train step has
     /// a legacy variant; eval/decode always run fused.
@@ -104,6 +128,7 @@ impl KernelMode {
             "fused" => Some(KernelMode::Fused),
             "ghost" => Some(KernelMode::Ghost),
             "blocked" => Some(KernelMode::Blocked),
+            "simd" => Some(KernelMode::Simd),
             "legacy" => Some(KernelMode::Legacy),
             _ => None,
         }
@@ -114,6 +139,7 @@ impl KernelMode {
             KernelMode::Fused => "fused",
             KernelMode::Ghost => "ghost",
             KernelMode::Blocked => "blocked",
+            KernelMode::Simd => "simd",
             KernelMode::Legacy => "legacy",
         }
     }
@@ -146,10 +172,13 @@ mod tests {
         assert_eq!(KernelMode::parse("GhOsT"), Some(KernelMode::Ghost));
         assert_eq!(KernelMode::parse("blocked"), Some(KernelMode::Blocked));
         assert_eq!(KernelMode::parse("BLOCKED"), Some(KernelMode::Blocked));
-        assert_eq!(KernelMode::parse("simd"), None);
+        assert_eq!(KernelMode::parse("simd"), Some(KernelMode::Simd));
+        assert_eq!(KernelMode::parse("SIMD"), Some(KernelMode::Simd));
+        assert_eq!(KernelMode::parse("neon"), None);
         assert_eq!(KernelMode::default(), KernelMode::Fused);
         assert_eq!(KernelMode::Legacy.name(), "legacy");
         assert_eq!(KernelMode::Ghost.name(), "ghost");
         assert_eq!(KernelMode::Blocked.name(), "blocked");
+        assert_eq!(KernelMode::Simd.name(), "simd");
     }
 }

@@ -1,0 +1,1115 @@
+//! Explicit-vector kernels (`FASTDP_KERNELS=simd`): the blocked tier's
+//! panel sweeps rewritten on f32 vector lanes with compensated
+//! accumulation.
+//!
+//! The blocked tier (PR 5) amortizes weight-panel traffic across rows but
+//! still computes every panel in scalar f64 lanes — and pays an f32→f64
+//! widening for every weight element it streams.  This tier keeps the
+//! blocked tier's structure (panels, [`GhostPlan`] factor rows behind the
+//! [`blocked::ROW_HDR`] header, the shared phase-B accumulation) and runs
+//! the arithmetic on explicit f32 vector lanes instead:
+//!
+//! * [`forward_panel`] / [`dh_panel`] / [`dfeat_panel`] sweep each
+//!   `enc/w` / `head/w` panel row once per block **without widening** —
+//!   weights stay f32 and feed 8-lane vector groups directly;
+//! * every accumulating lane carries a compensated (Neumaier) f32
+//!   accumulator, so the f32 panels keep ~1 ulp of accumulated error and
+//!   stay comfortably inside the ghost-tier 1e-4 tolerance contract;
+//! * the per-sample ghost-norm reductions run on the same 8-lane
+//!   compensated dots ([`lane_dot32`]), and the clip epilogue widens the
+//!   f32 factors into the f64 [`GhostPlan`] rows the engine's phase B
+//!   already consumes.
+//!
+//! ## Feature levels
+//!
+//! Three implementations of the lane primitives exist: AVX2, SSE2 and a
+//! portable scalar path.  The level is selected **once per process** by
+//! runtime feature detection ([`SimdLevel::detect`], cached) and may be
+//! forced down with the `FASTDP_SIMD` knob (or a backend override) for
+//! testing.  FMA contraction is deliberately **not** used: every level
+//! performs the identical sequence of individually rounded IEEE f32
+//! multiplies, adds, subtracts, compares and selects, over the identical
+//! fixed lane structure — SSE2 maps each 8-lane group onto two 4-wide
+//! vectors, the scalar path iterates the same lane arrays element by
+//! element — so the three levels are **bit-identical to each other**.
+//!
+//! ## Determinism contract
+//!
+//! Per-row accumulators are private to their row and visit their
+//! reduction indices in one fixed order for any block width; every
+//! [`lane_dot32`] association depends only on the vector length; lane
+//! accumulators fold (`value + compensation`) and combine in one fixed
+//! tree order.  Simd outputs are therefore **bit-identical across any
+//! `FASTDP_THREADS` value, any `FASTDP_BLOCK_ROWS` value and any forced
+//! `FASTDP_SIMD` level** (asserted in `tests/simd_equivalence.rs`).
+//! Against the fused oracle the contract is the ghost tier's: agreement
+//! within 1e-4 relative tolerance — the panels round to f32, so bitwise
+//! equality is not the contract and the `blocked` tier remains the
+//! fused-forward determinism oracle.
+
+use std::sync::OnceLock;
+
+use crate::dp::clip::{clip_factor, ClipMode};
+
+use super::blocked::ROW_HDR;
+use super::ghost::{self, GhostPlan};
+use super::view::{NetView, TrainSlots};
+use super::{fused, loss};
+
+/// Independent f32 accumulator lanes per vector group (AVX2 register
+/// width; SSE2 uses two 4-wide vectors per group, the scalar path walks
+/// the same 8-slot arrays).
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Feature-level selection
+// ---------------------------------------------------------------------------
+
+/// Instruction-set level the lane primitives dispatch on.  Ordered so
+/// that `min` clamps a requested level to what the host supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable scalar lanes (always available; the forced-fallback level).
+    Scalar,
+    /// SSE2 4-wide vectors, two per lane group (x86_64 baseline).
+    Sse2,
+    /// AVX2 8-wide vectors, one per lane group.
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Parse a `FASTDP_SIMD` value.
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim() {
+            "avx2" => Some(SimdLevel::Avx2),
+            "sse2" => Some(SimdLevel::Sse2),
+            "scalar" => Some(SimdLevel::Scalar),
+            _ => None,
+        }
+    }
+
+    /// The knob spelling of this level.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Scalar => "scalar",
+        }
+    }
+
+    /// Best level the host supports, probed with
+    /// `is_x86_feature_detected!` (non-x86_64 builds are always
+    /// [`SimdLevel::Scalar`]).
+    pub fn detect() -> SimdLevel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::is_x86_feature_detected!("avx2") {
+                return SimdLevel::Avx2;
+            }
+            if std::is_x86_feature_detected!("sse2") {
+                return SimdLevel::Sse2;
+            }
+        }
+        SimdLevel::Scalar
+    }
+
+    /// Clamp an explicit request (a backend override) to host support, or
+    /// fall back to [`level_from_env`] when no request was made.  Every
+    /// kernel entry point receives a level that went through this, which
+    /// is what makes the `unsafe` intrinsic dispatch sound.
+    pub fn resolve(requested: Option<SimdLevel>) -> SimdLevel {
+        match requested {
+            Some(l) => l.min(detected()),
+            None => level_from_env(),
+        }
+    }
+}
+
+/// Cached feature detection — run once per process.
+pub fn detected() -> SimdLevel {
+    static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+    *DETECTED.get_or_init(SimdLevel::detect)
+}
+
+/// The process-wide level: `FASTDP_SIMD` if set to a supported level
+/// (unparseable values warn once — see [`crate::runtime::env`] — and
+/// levels the host lacks are clamped to [`detected`]), else [`detected`].
+/// Cached once per process, like the detection itself.
+pub fn level_from_env() -> SimdLevel {
+    static CHOSEN: OnceLock<SimdLevel> = OnceLock::new();
+    *CHOSEN.get_or_init(|| {
+        let det = detected();
+        match crate::runtime::env::simd() {
+            None => det,
+            Some(v) => match SimdLevel::parse(&v) {
+                Some(l) => l.min(det),
+                None => {
+                    crate::runtime::env::warn_invalid(&crate::runtime::env::SIMD, &v);
+                    det
+                }
+            },
+        }
+    })
+}
+
+/// Record the level a train step actually ran with (first write wins —
+/// the "chosen level recorded" half of the knob contract; the throughput
+/// bench prints it next to its simd points).
+pub fn record_level(level: SimdLevel) {
+    let _ = active_cell().set(level);
+}
+
+/// The recorded level, if any simd train step has run in this process.
+pub fn recorded_level() -> Option<SimdLevel> {
+    active_cell().get().copied()
+}
+
+fn active_cell() -> &'static OnceLock<SimdLevel> {
+    static ACTIVE: OnceLock<SimdLevel> = OnceLock::new();
+    &ACTIVE
+}
+
+// ---------------------------------------------------------------------------
+// Lane primitives
+// ---------------------------------------------------------------------------
+
+/// One Neumaier step: fold `x` into the compensated accumulator
+/// `(*s, *c)`.  Branchless-equivalent across levels: the vector paths
+/// compute both compensation candidates and select, which performs the
+/// same rounded operations as this scalar form.
+#[inline(always)]
+fn neumaier_step(s: &mut f32, c: &mut f32, x: f32) {
+    let t = *s + x;
+    *c += if s.abs() >= x.abs() { (*s - t) + x } else { (x - t) + *s };
+    *s = t;
+}
+
+fn axpy_scalar(acc: &mut [f32], comp: &mut [f32], scale: f32, xs: &[f32]) {
+    for ((a, c), &x) in acc.iter_mut().zip(comp.iter_mut()).zip(xs) {
+        neumaier_step(a, c, scale * x);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn axpy_sse2(acc: &mut [f32], comp: &mut [f32], scale: f32, xs: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(xs.len());
+    let whole = n - n % 4;
+    let sv = _mm_set1_ps(scale);
+    let sign = _mm_set1_ps(-0.0);
+    let mut i = 0usize;
+    while i < whole {
+        let x = _mm_mul_ps(sv, _mm_loadu_ps(xs.as_ptr().add(i)));
+        let s = _mm_loadu_ps(acc.as_ptr().add(i));
+        let c = _mm_loadu_ps(comp.as_ptr().add(i));
+        let t = _mm_add_ps(s, x);
+        let big = _mm_cmpge_ps(_mm_andnot_ps(sign, s), _mm_andnot_ps(sign, x));
+        let d1 = _mm_add_ps(_mm_sub_ps(s, t), x);
+        let d2 = _mm_add_ps(_mm_sub_ps(x, t), s);
+        let d = _mm_or_ps(_mm_and_ps(big, d1), _mm_andnot_ps(big, d2));
+        _mm_storeu_ps(comp.as_mut_ptr().add(i), _mm_add_ps(c, d));
+        _mm_storeu_ps(acc.as_mut_ptr().add(i), t);
+        i += 4;
+    }
+    axpy_scalar(&mut acc[whole..n], &mut comp[whole..n], scale, &xs[whole..n]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f32], comp: &mut [f32], scale: f32, xs: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(xs.len());
+    let whole = n - n % 8;
+    let sv = _mm256_set1_ps(scale);
+    let sign = _mm256_set1_ps(-0.0);
+    let mut i = 0usize;
+    while i < whole {
+        let x = _mm256_mul_ps(sv, _mm256_loadu_ps(xs.as_ptr().add(i)));
+        let s = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let c = _mm256_loadu_ps(comp.as_ptr().add(i));
+        let t = _mm256_add_ps(s, x);
+        let big = _mm256_cmp_ps(
+            _mm256_andnot_ps(sign, s),
+            _mm256_andnot_ps(sign, x),
+            _CMP_GE_OQ,
+        );
+        let d1 = _mm256_add_ps(_mm256_sub_ps(s, t), x);
+        let d2 = _mm256_add_ps(_mm256_sub_ps(x, t), s);
+        let d = _mm256_blendv_ps(d2, d1, big);
+        _mm256_storeu_ps(comp.as_mut_ptr().add(i), _mm256_add_ps(c, d));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), t);
+        i += 8;
+    }
+    axpy_scalar(&mut acc[whole..n], &mut comp[whole..n], scale, &xs[whole..n]);
+}
+
+/// `acc[j] ⊕= scale * xs[j]` with per-element Neumaier compensation in
+/// `comp`.  Purely element-wise, so every level performs the identical
+/// rounded-op sequence per element: results are bit-identical across
+/// levels by construction.
+#[inline]
+pub fn axpy32(level: SimdLevel, acc: &mut [f32], comp: &mut [f32], scale: f32, xs: &[f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level` only reaches Avx2 through `SimdLevel::resolve`,
+        // which clamps to `detected()` — avx2 is present on this host.
+        SimdLevel::Avx2 => unsafe { axpy_avx2(acc, comp, scale, xs) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sse2 is the x86_64 baseline and `resolve` clamps to
+        // host support; the target feature is present.
+        SimdLevel::Sse2 => unsafe { axpy_sse2(acc, comp, scale, xs) },
+        _ => axpy_scalar(acc, comp, scale, xs),
+    }
+}
+
+fn dot_groups_scalar(a: &[f32], b: &[f32], acc: &mut [f32; LANES], comp: &mut [f32; LANES]) {
+    let mut i = 0usize;
+    while i < a.len() {
+        for l in 0..LANES {
+            neumaier_step(&mut acc[l], &mut comp[l], a[i + l] * b[i + l]);
+        }
+        i += LANES;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot_groups_sse2(a: &[f32], b: &[f32], acc: &mut [f32; LANES], comp: &mut [f32; LANES]) {
+    use std::arch::x86_64::*;
+    let sign = _mm_set1_ps(-0.0);
+    let mut s0 = _mm_loadu_ps(acc.as_ptr());
+    let mut s1 = _mm_loadu_ps(acc.as_ptr().add(4));
+    let mut c0 = _mm_loadu_ps(comp.as_ptr());
+    let mut c1 = _mm_loadu_ps(comp.as_ptr().add(4));
+    let mut i = 0usize;
+    while i < a.len() {
+        for half in 0..2 {
+            let o = i + 4 * half;
+            let x = _mm_mul_ps(_mm_loadu_ps(a.as_ptr().add(o)), _mm_loadu_ps(b.as_ptr().add(o)));
+            let (s, c) = if half == 0 { (&mut s0, &mut c0) } else { (&mut s1, &mut c1) };
+            let t = _mm_add_ps(*s, x);
+            let big = _mm_cmpge_ps(_mm_andnot_ps(sign, *s), _mm_andnot_ps(sign, x));
+            let d1 = _mm_add_ps(_mm_sub_ps(*s, t), x);
+            let d2 = _mm_add_ps(_mm_sub_ps(x, t), *s);
+            let d = _mm_or_ps(_mm_and_ps(big, d1), _mm_andnot_ps(big, d2));
+            *c = _mm_add_ps(*c, d);
+            *s = t;
+        }
+        i += LANES;
+    }
+    _mm_storeu_ps(acc.as_mut_ptr(), s0);
+    _mm_storeu_ps(acc.as_mut_ptr().add(4), s1);
+    _mm_storeu_ps(comp.as_mut_ptr(), c0);
+    _mm_storeu_ps(comp.as_mut_ptr().add(4), c1);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_groups_avx2(a: &[f32], b: &[f32], acc: &mut [f32; LANES], comp: &mut [f32; LANES]) {
+    use std::arch::x86_64::*;
+    let sign = _mm256_set1_ps(-0.0);
+    let mut s = _mm256_loadu_ps(acc.as_ptr());
+    let mut c = _mm256_loadu_ps(comp.as_ptr());
+    let mut i = 0usize;
+    while i < a.len() {
+        let x = _mm256_mul_ps(
+            _mm256_loadu_ps(a.as_ptr().add(i)),
+            _mm256_loadu_ps(b.as_ptr().add(i)),
+        );
+        let t = _mm256_add_ps(s, x);
+        let big = _mm256_cmp_ps(
+            _mm256_andnot_ps(sign, s),
+            _mm256_andnot_ps(sign, x),
+            _CMP_GE_OQ,
+        );
+        let d1 = _mm256_add_ps(_mm256_sub_ps(s, t), x);
+        let d2 = _mm256_add_ps(_mm256_sub_ps(x, t), s);
+        c = _mm256_add_ps(c, _mm256_blendv_ps(d2, d1, big));
+        s = t;
+        i += LANES;
+    }
+    _mm256_storeu_ps(acc.as_mut_ptr(), s);
+    _mm256_storeu_ps(comp.as_mut_ptr(), c);
+}
+
+/// Compensated 8-lane f32 dot product with a fixed lane-combine tree.
+///
+/// Lane `l` accumulates elements `i ≡ l (mod 8)` of the whole-group
+/// region with Neumaier compensation; the sub-group tail is folded into
+/// lanes `0..tail` by the identical scalar step at every level; each lane
+/// folds `value + compensation` and the eight totals combine in one fixed
+/// binary tree.  The association depends only on the vector length —
+/// never on the caller's blocking, thread count or feature level — which
+/// is what lets the simd tier promise bit-identity across
+/// `FASTDP_THREADS`, `FASTDP_BLOCK_ROWS` *and* `FASTDP_SIMD`.
+#[inline]
+pub fn lane_dot32(level: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let whole = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut comp = [0.0f32; LANES];
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level` only reaches Avx2 through `SimdLevel::resolve`,
+        // which clamps to `detected()` — avx2 is present on this host.
+        SimdLevel::Avx2 => unsafe { dot_groups_avx2(&a[..whole], &b[..whole], &mut acc, &mut comp) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sse2 is the x86_64 baseline and `resolve` clamps to
+        // host support; the target feature is present.
+        SimdLevel::Sse2 => unsafe { dot_groups_sse2(&a[..whole], &b[..whole], &mut acc, &mut comp) },
+        _ => dot_groups_scalar(&a[..whole], &b[..whole], &mut acc, &mut comp),
+    }
+    for k in 0..(n - whole) {
+        neumaier_step(&mut acc[k], &mut comp[k], a[whole + k] * b[whole + k]);
+    }
+    let t: [f32; LANES] = std::array::from_fn(|l| acc[l] + comp[l]);
+    ((t[0] + t[1]) + (t[2] + t[3])) + ((t[4] + t[5]) + (t[6] + t[7]))
+}
+
+/// Compensated squared norm of `a` (see [`lane_dot32`]).
+#[inline]
+pub fn sqsum32(level: SimdLevel, a: &[f32]) -> f32 {
+    lane_dot32(level, a, a)
+}
+
+// ---------------------------------------------------------------------------
+// Workspace / context
+// ---------------------------------------------------------------------------
+
+/// Per-worker f32 panel scratch for one block of rows (or LM positions),
+/// plus the f64 staging rows that bridge into the shared [`GhostPlan`]
+/// factor layout and `kernels::loss`.
+///
+/// Every buffer is sized once for `(block, feat, h, out)` and reused for
+/// every block, so the steady-state kernels perform no heap allocation.
+/// Unlike [`super::blocked::BlockedWorkspace`] there is no widened weight
+/// row — weights are consumed as the f32 slices they already are.
+pub struct SimdWorkspace {
+    /// Row (or LM position) capacity of the panels.
+    pub block: usize,
+    /// Input-feature panel (`block * feat`).
+    pub feat: Vec<f32>,
+    /// Pre-activation hidden panel (`block * h`); holds the folded
+    /// (value + compensation) totals after [`forward_panel`].
+    pub hpre: Vec<f32>,
+    /// Neumaier compensation of `hpre` during accumulation (`block * h`).
+    pub hpre_c: Vec<f32>,
+    /// Post-ReLU hidden panel (`block * h`).
+    pub hact: Vec<f32>,
+    /// Logit panel (`block * out`); folded totals after [`forward_panel`].
+    pub logits: Vec<f32>,
+    /// Neumaier compensation of `logits` during accumulation (`block * out`).
+    pub logits_c: Vec<f32>,
+    /// d(loss)/d(logits) panel (`block * out`).
+    pub dlogits: Vec<f32>,
+    /// d(loss)/d(hidden) panel (`block * h`).
+    pub dh: Vec<f32>,
+    /// d(loss)/d(features) panel (`block * feat`).
+    pub dfeat: Vec<f32>,
+    /// Compensation row for Cls embedding pooling (`feat`).
+    pool_c: Vec<f32>,
+    /// f64 staging: one row's logits widened for `kernels::loss` (`out`).
+    logits64: Vec<f64>,
+    /// f64 staging rows for the factor store (`h`/`out`/`h`/`feat`/`feat`).
+    stage_hact: Vec<f64>,
+    stage_dl: Vec<f64>,
+    stage_dh: Vec<f64>,
+    stage_feat: Vec<f64>,
+    stage_dfeat: Vec<f64>,
+    /// Flat active-token ids of the block's rows (Cls scatter), reused as
+    /// the non-pad position list on Lm rows.
+    act_ids: Vec<usize>,
+    /// `n_active + 1` offsets into `act_ids`, one range per panel slot.
+    act_off: Vec<usize>,
+    /// Panel slot -> block-local row index (masked rows compacted out).
+    rowmap: Vec<usize>,
+}
+
+impl SimdWorkspace {
+    /// Allocate panels for blocks of up to `block` rows of a model with
+    /// `feat` input features, hidden width `h` and `out` outputs.
+    pub fn new(block: usize, feat: usize, h: usize, out: usize) -> SimdWorkspace {
+        let block = block.max(1);
+        SimdWorkspace {
+            block,
+            feat: vec![0.0; block * feat],
+            hpre: vec![0.0; block * h],
+            hpre_c: vec![0.0; block * h],
+            hact: vec![0.0; block * h],
+            logits: vec![0.0; block * out],
+            logits_c: vec![0.0; block * out],
+            dlogits: vec![0.0; block * out],
+            dh: vec![0.0; block * h],
+            dfeat: vec![0.0; block * feat],
+            pool_c: vec![0.0; feat],
+            logits64: vec![0.0; out],
+            stage_hact: vec![0.0; h],
+            stage_dl: vec![0.0; out],
+            stage_dh: vec![0.0; h],
+            stage_feat: vec![0.0; feat],
+            stage_dfeat: vec![0.0; feat],
+            act_ids: Vec::new(),
+            act_off: Vec::new(),
+            rowmap: Vec::new(),
+        }
+    }
+
+    /// Bytes one workspace of this shape holds (the analytic scratch
+    /// estimator's panel term): f32 panels + compensation + the f64
+    /// staging rows.  About half the blocked tier's panel footprint.
+    pub fn bytes(block: usize, feat: usize, h: usize, out: usize) -> usize {
+        let b = block.max(1);
+        let f32_words = b * (2 * feat + 4 * h + 3 * out) + feat;
+        let f64_words = 2 * feat + 2 * h + 2 * out;
+        4 * f32_words + 8 * f64_words
+    }
+}
+
+/// Read-only context shared by every simd kernel call of one step.
+pub struct SimdCtx<'a> {
+    pub net: &'a NetView<'a>,
+    pub slots: &'a TrainSlots,
+    pub plan: &'a GhostPlan,
+    /// The resolved feature level (already clamped to host support).
+    pub level: SimdLevel,
+    pub dp: bool,
+    pub clip_r: f64,
+    pub mode: ClipMode,
+}
+
+impl SimdCtx<'_> {
+    /// Stride of one factor row in a simd shard (header + factors).
+    pub fn row_words(&self) -> usize {
+        ROW_HDR + self.plan.row_stride
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Panel sweeps
+// ---------------------------------------------------------------------------
+
+/// hidden + logits for the first `nb` panel rows of `sw.feat`, on f32
+/// lanes with compensated accumulators.  Each `enc/w` / `head/w` panel
+/// row is swept across the whole block as the f32 slice it already is;
+/// after each accumulation phase the compensation folds into the value
+/// panel (element-wise, so the fold is level-independent too).
+pub fn forward_panel(net: &NetView, level: SimdLevel, sw: &mut SimdWorkspace, nb: usize) {
+    let (fw, h, out) = (net.feat, net.h, net.out);
+    let SimdWorkspace { feat, hpre, hpre_c, hact, logits, logits_c, .. } = sw;
+    hpre[..nb * h].fill(0.0);
+    hpre_c[..nb * h].fill(0.0);
+    for i in 0..fw {
+        let wrow = &net.enc_w[i * h..(i + 1) * h];
+        for r in 0..nb {
+            let f = feat[r * fw + i];
+            if f == 0.0 {
+                continue;
+            }
+            axpy32(level, &mut hpre[r * h..(r + 1) * h], &mut hpre_c[r * h..(r + 1) * h], f, wrow);
+        }
+    }
+    if let Some(bias) = net.enc_b {
+        for r in 0..nb {
+            axpy32(
+                level,
+                &mut hpre[r * h..(r + 1) * h],
+                &mut hpre_c[r * h..(r + 1) * h],
+                1.0,
+                bias,
+            );
+        }
+    }
+    for k in 0..nb * h {
+        let v = hpre[k] + hpre_c[k];
+        hpre[k] = v;
+        hact[k] = v.max(0.0);
+    }
+    logits[..nb * out].fill(0.0);
+    logits_c[..nb * out].fill(0.0);
+    for j in 0..h {
+        let wrow = &net.head_w[j * out..(j + 1) * out];
+        for r in 0..nb {
+            let a = hact[r * h + j];
+            if a == 0.0 {
+                continue;
+            }
+            axpy32(
+                level,
+                &mut logits[r * out..(r + 1) * out],
+                &mut logits_c[r * out..(r + 1) * out],
+                a,
+                wrow,
+            );
+        }
+    }
+    for r in 0..nb {
+        axpy32(
+            level,
+            &mut logits[r * out..(r + 1) * out],
+            &mut logits_c[r * out..(r + 1) * out],
+            1.0,
+            net.head_b,
+        );
+    }
+    for k in 0..nb * out {
+        logits[k] += logits_c[k];
+    }
+}
+
+/// `dh` panel from the `dlogits` panel, ReLU-gated (gated slots store
+/// exact 0.0), one compensated [`lane_dot32`] per (row, hidden) slot.
+// fastdp-lint: per-sample-grad
+pub fn dh_panel(net: &NetView, level: SimdLevel, sw: &mut SimdWorkspace, nb: usize) {
+    let (h, out) = (net.h, net.out);
+    let SimdWorkspace { hpre, dlogits, dh, .. } = sw;
+    for j in 0..h {
+        let wrow = &net.head_w[j * out..(j + 1) * out];
+        for r in 0..nb {
+            dh[r * h + j] = if hpre[r * h + j] <= 0.0 {
+                0.0 // relu gate
+            } else {
+                lane_dot32(level, wrow, &dlogits[r * out..(r + 1) * out])
+            };
+        }
+    }
+}
+
+/// `dfeat` panel from the `dh` panel, one compensated [`lane_dot32`] per
+/// (row, feature) slot.
+// fastdp-lint: per-sample-grad
+pub fn dfeat_panel(net: &NetView, level: SimdLevel, sw: &mut SimdWorkspace, nb: usize) {
+    let (fw, h) = (net.feat, net.h);
+    let SimdWorkspace { dh, dfeat, .. } = sw;
+    for i in 0..fw {
+        let wrow = &net.enc_w[i * h..(i + 1) * h];
+        for r in 0..nb {
+            dfeat[r * fw + i] = lane_dot32(level, wrow, &dh[r * h..(r + 1) * h]);
+        }
+    }
+}
+
+/// Widen one f32 panel row into an f64 staging row.  Widening is exact,
+/// so the stored factors are precisely the panel's f32 values.
+fn widen(dst: &mut [f64], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f64;
+    }
+}
+
+/// Single-position clip epilogue on f32 lanes: the analytic squared norm
+/// by ghost book-keeping (Algorithm 1 line 6) from compensated
+/// [`sqsum32`] reductions, the clip factor, then the widened + scaled
+/// factor store into the f64 [`GhostPlan`] row (via the shared
+/// `store_pos_parts`, so phase B reads one layout for every tier).
+/// Returns the squared norm.
+// fastdp-lint: clip-boundary
+#[allow(clippy::too_many_arguments)]
+fn pos_epilogue(
+    ctx: &SimdCtx,
+    sw: &mut SimdWorkspace,
+    k: usize,
+    rb: &mut [f64],
+    active: &[usize],
+) -> f64 {
+    let (slots, plan, level) = (ctx.slots, ctx.plan, ctx.level);
+    let (fw, h, out) = (ctx.net.feat, ctx.net.h, ctx.net.out);
+    let hact = &sw.hact[k * h..(k + 1) * h];
+    let dlogits = &sw.dlogits[k * out..(k + 1) * out];
+    let dh = &sw.dh[k * h..(k + 1) * h];
+    let feat = &sw.feat[k * fw..(k + 1) * fw];
+    let dfeat = &sw.dfeat[k * fw..(k + 1) * fw];
+    let mut sqn = 0.0f64;
+    let nd2 = sqsum32(level, dlogits) as f64;
+    if slots.head_b.is_some() {
+        sqn += nd2;
+    }
+    if slots.head_w.is_some() {
+        sqn += sqsum32(level, hact) as f64 * nd2;
+    }
+    if plan.store_dh {
+        let nh2 = sqsum32(level, dh) as f64;
+        if slots.enc_b.is_some() {
+            sqn += nh2;
+        }
+        if slots.enc_w.is_some() {
+            sqn += sqsum32(level, feat) as f64 * nh2;
+        }
+    }
+    let n_active = active.len();
+    let inv = if n_active > 0 { 1.0 / n_active as f64 } else { 0.0 };
+    if slots.embed.is_some() && plan.store_dfeat && n_active > 0 {
+        sqn += inv * inv * ghost::active_cnt2(active) * sqsum32(level, dfeat) as f64;
+    }
+    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
+    if plan.store_a {
+        widen(&mut sw.stage_hact, hact);
+    }
+    widen(&mut sw.stage_dl, dlogits);
+    if plan.store_dh {
+        widen(&mut sw.stage_dh, dh);
+    }
+    if plan.store_f {
+        widen(&mut sw.stage_feat, feat);
+    }
+    if plan.store_dfeat {
+        widen(&mut sw.stage_dfeat, dfeat);
+    }
+    ghost::store_pos_parts(
+        plan,
+        rb,
+        0,
+        &sw.stage_hact,
+        &sw.stage_dl,
+        &sw.stage_dh,
+        &sw.stage_feat,
+        &sw.stage_dfeat,
+        c,
+        c * inv,
+    );
+    plan.copy_pos0_to_sums(rb);
+    if plan.counted {
+        plan.set_count(rb, n_active);
+        for (j, &tok) in active.iter().enumerate() {
+            plan.set_id(rb, j, tok);
+        }
+    }
+    sqn
+}
+
+/// Shared panel epilogue: backward panels as the plan requires, then per
+/// active row the f32-lane ghost-norm/clip/factor-store epilogue, writing
+/// the squared norm into the row header.
+fn epilogue_panel(ctx: &SimdCtx, sw: &mut SimdWorkspace, shard: &mut [f64]) {
+    let plan = ctx.plan;
+    let n_act = sw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    if plan.store_dh {
+        dh_panel(ctx.net, ctx.level, sw, n_act);
+    }
+    if plan.store_dfeat {
+        dfeat_panel(ctx.net, ctx.level, sw, n_act);
+    }
+    let stride = ctx.row_words();
+    for k in 0..n_act {
+        let r = sw.rowmap[k];
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        let active_range = sw.act_off[k]..sw.act_off[k + 1];
+        let (hdr, fac) = rb.split_at_mut(ROW_HDR);
+        // the active list is read out of the workspace by range to keep
+        // the borrow disjoint from the staging rows pos_epilogue mutates
+        let active: Vec<usize> = sw.act_ids[active_range].to_vec();
+        hdr[2] = pos_epilogue(ctx, sw, k, fac, &active);
+    }
+}
+
+/// Widen one row's f32 logits, run the shared f64 softmax CE, then narrow
+/// the gradient back into the f32 `dlogits` panel row.  Returns the loss.
+fn softmax_row(sw: &mut SimdWorkspace, k: usize, out: usize, label: usize) -> f64 {
+    widen(&mut sw.logits64, &sw.logits[k * out..(k + 1) * out]);
+    let l = loss::softmax_ce_into(&sw.logits64, label, &mut sw.stage_dl);
+    for (d, &v) in sw.dlogits[k * out..(k + 1) * out].iter_mut().zip(sw.stage_dl.iter()) {
+        *d = v as f32;
+    }
+    l
+}
+
+/// One panel of Cls rows: pooled f32 embeddings (compensated over the
+/// active tokens) -> f32 panel forward -> softmax CE -> f32 panel
+/// backward -> f32-lane ghost norms + widened factor store.  Layout of
+/// `shard` matches the blocked tier: `nb` rows of
+/// [`SimdCtx::row_words`] f64s, header-first.
+#[allow(clippy::too_many_arguments)]
+pub fn panel_cls(
+    ctx: &SimdCtx,
+    sw: &mut SimdWorkspace,
+    shard: &mut [f64],
+    toks: &[i32],
+    t: usize,
+    y: &[i32],
+    mask: &[f32],
+    nb: usize,
+) {
+    let net = ctx.net;
+    let d = net.d;
+    let fw = net.feat;
+    let out = net.out;
+    let stride = ctx.row_words();
+    sw.rowmap.clear();
+    sw.act_ids.clear();
+    sw.act_off.clear();
+    sw.act_off.push(0);
+    for r in 0..nb {
+        if mask[r] <= 0.0 {
+            shard[r * stride..r * stride + ROW_HDR].fill(0.0);
+            continue;
+        }
+        let k = sw.rowmap.len();
+        sw.rowmap.push(r);
+        let start = sw.act_ids.len();
+        for &tok in &toks[r * t..(r + 1) * t] {
+            let id = fused::canon_token(tok, net.vocab);
+            if id != 0 {
+                sw.act_ids.push(id);
+            }
+        }
+        let frow = &mut sw.feat[k * fw..(k + 1) * fw];
+        frow.fill(0.0);
+        let act = &sw.act_ids[start..];
+        if !act.is_empty() {
+            sw.pool_c.fill(0.0);
+            for &tok in act {
+                axpy32(ctx.level, frow, &mut sw.pool_c, 1.0, &net.embed[tok * d..(tok + 1) * d]);
+            }
+            let inv = 1.0 / act.len() as f32;
+            for (f, &c) in frow.iter_mut().zip(sw.pool_c.iter()) {
+                *f = (*f + c) * inv;
+            }
+        }
+        sw.act_off.push(sw.act_ids.len());
+    }
+    let n_act = sw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    forward_panel(net, ctx.level, sw, n_act);
+    for k in 0..n_act {
+        let r = sw.rowmap[k];
+        let label = (y[r].max(0) as usize) % out;
+        let l = softmax_row(sw, k, out, label);
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        rb[0] = 1.0;
+        rb[1] = l;
+    }
+    epilogue_panel(ctx, sw, shard);
+}
+
+/// Pixel-model panel prologue: compact the active rows into the f32
+/// feature panel (pixels are f32 already — a straight copy), zeroing the
+/// headers of masked rows in place.
+fn load_active_pixels(
+    sw: &mut SimdWorkspace,
+    shard: &mut [f64],
+    pix: &[f32],
+    mask: &[f32],
+    nb: usize,
+    fw: usize,
+    stride: usize,
+) {
+    sw.rowmap.clear();
+    for r in 0..nb {
+        if mask[r] <= 0.0 {
+            shard[r * stride..r * stride + ROW_HDR].fill(0.0);
+            continue;
+        }
+        let k = sw.rowmap.len();
+        sw.rowmap.push(r);
+        sw.feat[k * fw..(k + 1) * fw].copy_from_slice(&pix[r * fw..(r + 1) * fw]);
+    }
+    sw.act_ids.clear();
+    sw.act_off.clear();
+    sw.act_off.resize(sw.rowmap.len() + 1, 0);
+}
+
+/// One panel of Vit rows: pixels -> f32 panel forward -> softmax CE ->
+/// f32 panel backward -> f32-lane ghost norms + widened factor store.
+#[allow(clippy::too_many_arguments)]
+pub fn panel_vit(
+    ctx: &SimdCtx,
+    sw: &mut SimdWorkspace,
+    shard: &mut [f64],
+    pix: &[f32],
+    y: &[i32],
+    mask: &[f32],
+    nb: usize,
+) {
+    let net = ctx.net;
+    let fw = net.feat;
+    let out = net.out;
+    let stride = ctx.row_words();
+    load_active_pixels(sw, shard, pix, mask, nb, fw, stride);
+    let n_act = sw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    forward_panel(net, ctx.level, sw, n_act);
+    for k in 0..n_act {
+        let r = sw.rowmap[k];
+        let label = (y[r].max(0) as usize) % out;
+        let l = softmax_row(sw, k, out, label);
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        rb[0] = 1.0;
+        rb[1] = l;
+    }
+    epilogue_panel(ctx, sw, shard);
+}
+
+/// One panel of Cnn rows: pixels -> f32 panel forward -> sigmoid BCE ->
+/// f32 panel backward -> f32-lane ghost norms + widened factor store.
+#[allow(clippy::too_many_arguments)]
+pub fn panel_cnn(
+    ctx: &SimdCtx,
+    sw: &mut SimdWorkspace,
+    shard: &mut [f64],
+    pix: &[f32],
+    targets: &[f32],
+    mask: &[f32],
+    nb: usize,
+) {
+    let net = ctx.net;
+    let fw = net.feat;
+    let out = net.out;
+    let stride = ctx.row_words();
+    load_active_pixels(sw, shard, pix, mask, nb, fw, stride);
+    let n_act = sw.rowmap.len();
+    if n_act == 0 {
+        return;
+    }
+    forward_panel(net, ctx.level, sw, n_act);
+    for k in 0..n_act {
+        let r = sw.rowmap[k];
+        widen(&mut sw.logits64, &sw.logits[k * out..(k + 1) * out]);
+        let l = loss::sigmoid_bce_into(
+            &sw.logits64,
+            &targets[r * out..(r + 1) * out],
+            &mut sw.stage_dl,
+        );
+        for (dst, &v) in sw.dlogits[k * out..(k + 1) * out].iter_mut().zip(sw.stage_dl.iter()) {
+            *dst = v as f32;
+        }
+        let rb = &mut shard[r * stride..(r + 1) * stride];
+        rb[0] = 1.0;
+        rb[1] = l;
+    }
+    epilogue_panel(ctx, sw, shard);
+}
+
+/// One Lm row, its non-pad positions processed in f32 panels of up to
+/// `sw.block` at a time.  Factors and bias sums are widened from the f32
+/// panels into the f64 [`GhostPlan`] row (position order matches the
+/// blocked tier); the pairwise Gram norm and the deferred clip scaling
+/// reuse the shared ghost helpers over those exactly-widened factors.
+pub fn row_lm_simd(
+    ctx: &SimdCtx,
+    sw: &mut SimdWorkspace,
+    row: &mut [f64],
+    toks: &[i32],
+    targets: &[i32],
+) {
+    let (net, slots, plan) = (ctx.net, ctx.slots, ctx.plan);
+    let (d, h, out) = (net.d, net.h, net.out);
+    let (hdr, rb) = row.split_at_mut(ROW_HDR);
+    let mut row_loss = 0.0f64;
+    let mut np = 0usize;
+    plan.bias_d_mut(rb).fill(0.0);
+    if plan.store_dh {
+        plan.bias_dh_mut(rb).fill(0.0);
+    }
+    sw.act_ids.clear();
+    for (p, &target) in targets.iter().enumerate() {
+        if target > 0 {
+            sw.act_ids.push(p);
+        }
+    }
+    let total = sw.act_ids.len();
+    let cap = sw.block;
+    let mut done = 0usize;
+    while done < total {
+        let nb = (total - done).min(cap);
+        for k in 0..nb {
+            let p = sw.act_ids[done + k];
+            let tok = fused::canon_token(toks[p], net.vocab);
+            sw.feat[k * d..(k + 1) * d].copy_from_slice(&net.embed[tok * d..(tok + 1) * d]);
+        }
+        forward_panel(net, ctx.level, sw, nb);
+        for k in 0..nb {
+            let p = sw.act_ids[done + k];
+            let target = targets[p] as usize % out;
+            row_loss += softmax_row(sw, k, out, target);
+        }
+        if plan.store_dh {
+            dh_panel(net, ctx.level, sw, nb);
+        }
+        if plan.store_dfeat {
+            dfeat_panel(net, ctx.level, sw, nb);
+        }
+        for k in 0..nb {
+            let p = sw.act_ids[done + k];
+            if plan.store_a {
+                widen(&mut sw.stage_hact, &sw.hact[k * h..(k + 1) * h]);
+            }
+            widen(&mut sw.stage_dl, &sw.dlogits[k * out..(k + 1) * out]);
+            if plan.store_dh {
+                widen(&mut sw.stage_dh, &sw.dh[k * h..(k + 1) * h]);
+            }
+            if plan.store_f {
+                widen(&mut sw.stage_feat, &sw.feat[k * d..(k + 1) * d]);
+            }
+            if plan.store_dfeat {
+                widen(&mut sw.stage_dfeat, &sw.dfeat[k * d..(k + 1) * d]);
+            }
+            ghost::store_pos_parts(
+                plan,
+                rb,
+                np,
+                &sw.stage_hact,
+                &sw.stage_dl,
+                &sw.stage_dh,
+                &sw.stage_feat,
+                &sw.stage_dfeat,
+                1.0,
+                1.0,
+            );
+            for (s, &v) in plan.bias_d_mut(rb).iter_mut().zip(sw.stage_dl.iter()) {
+                *s += v;
+            }
+            if plan.store_dh {
+                for (s, &v) in plan.bias_dh_mut(rb).iter_mut().zip(sw.stage_dh.iter()) {
+                    *s += v;
+                }
+            }
+            if plan.ids > 0 {
+                plan.set_id(rb, np, fused::canon_token(toks[p], net.vocab));
+            }
+            np += 1;
+        }
+        done += nb;
+    }
+    plan.set_count(rb, np);
+    let sqn = ghost::lm_row_norm(slots, plan, rb, np);
+    let c = if ctx.dp { clip_factor(sqn, ctx.clip_r, ctx.mode) } else { 1.0 };
+    ghost::scale_lm_row(plan, rb, np, c);
+    hdr[0] = 1.0;
+    hdr[1] = row_loss;
+    hdr[2] = sqn;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_name_and_order() {
+        for l in [SimdLevel::Avx2, SimdLevel::Sse2, SimdLevel::Scalar] {
+            assert_eq!(SimdLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(SimdLevel::parse("neon"), None);
+        // `min` clamps a too-high request down, never up
+        assert_eq!(SimdLevel::Avx2.min(SimdLevel::Scalar), SimdLevel::Scalar);
+        assert_eq!(SimdLevel::resolve(Some(SimdLevel::Scalar)), SimdLevel::Scalar);
+        assert!(SimdLevel::resolve(Some(SimdLevel::Avx2)) <= detected());
+    }
+
+    #[test]
+    fn lane_dot32_bit_identical_across_levels_and_accurate() {
+        let a: Vec<f32> = (0..131).map(|i| ((i as f64 * 0.37).sin() * 3.0) as f32).collect();
+        let b: Vec<f32> = (0..131).map(|i| ((i as f64 * 0.91).cos() * 0.5) as f32).collect();
+        let scalar = lane_dot32(SimdLevel::Scalar, &a, &b);
+        let best = lane_dot32(detected(), &a, &b);
+        assert_eq!(scalar.to_bits(), best.to_bits(), "forced levels must agree bitwise");
+        // compensated f32 stays within a few ulps of the f64 reduction
+        let seq: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((scalar as f64 - seq).abs() <= 1e-5 * seq.abs().max(1.0), "{scalar} vs {seq}");
+        // short vectors exercise the pure-tail path on every level
+        for n in 0..LANES {
+            assert_eq!(
+                lane_dot32(SimdLevel::Scalar, &a[..n], &b[..n]).to_bits(),
+                lane_dot32(detected(), &a[..n], &b[..n]).to_bits()
+            );
+        }
+        assert_eq!(lane_dot32(detected(), &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy32_bit_identical_across_levels_and_compensated() {
+        let xs: Vec<f32> = (0..77).map(|i| ((i as f64 * 0.13).sin() * 2.0) as f32).collect();
+        let mut run = |level: SimdLevel| -> Vec<f32> {
+            let mut acc = vec![0.0f32; xs.len()];
+            let mut comp = vec![0.0f32; xs.len()];
+            // many small updates so naive f32 accumulation would drift
+            for s in 1..200 {
+                axpy32(level, &mut acc, &mut comp, 1.0 / s as f32, &xs);
+            }
+            acc.iter().zip(&comp).map(|(&a, &c)| a + c).collect()
+        };
+        let scalar = run(SimdLevel::Scalar);
+        let best = run(detected());
+        for (s, b) in scalar.iter().zip(&best) {
+            assert_eq!(s.to_bits(), b.to_bits());
+        }
+        // compensation keeps the running sums near the f64 reference
+        let harmonic: f64 = (1..200).map(|s| 1.0 / s as f64).sum();
+        for (k, &v) in scalar.iter().enumerate() {
+            let want = xs[k] as f64 * harmonic;
+            assert!((v as f64 - want).abs() <= 1e-5 * want.abs().max(1.0), "lane {k}");
+        }
+    }
+
+    /// A tiny owned network the tests can take a `NetView` of.
+    fn tiny_net(vocab: usize, d: usize, h: usize, out: usize) -> Vec<Vec<f32>> {
+        let fill = |n: usize, s: u64| -> Vec<f32> {
+            (0..n as u64)
+                .map(|i| {
+                    let x = (i.wrapping_mul(2654435761).wrapping_add(s * 97 + 13)) % 997;
+                    (x as f32 / 997.0) - 0.5
+                })
+                .collect()
+        };
+        vec![fill(vocab * d, 1), fill(d * h, 2), fill(h, 3), fill(h * out, 4), fill(out, 5)]
+    }
+
+    #[test]
+    fn forward_panel_matches_fused_to_tolerance_and_is_level_invariant() {
+        let (vocab, d, h, out) = (13usize, 6usize, 5usize, 4usize);
+        let parts = tiny_net(vocab, d, h, out);
+        let net = NetView {
+            embed: &parts[0],
+            enc_w: &parts[1],
+            enc_b: Some(&parts[2]),
+            head_w: &parts[3],
+            head_b: &parts[4],
+            d,
+            h,
+            out,
+            vocab,
+            feat: d,
+        };
+        let nb = 3usize;
+        let rows: Vec<Vec<f32>> = vec![
+            (0..d).map(|i| (i as f32 * 0.3) - 0.7).collect(),
+            (0..d).map(|i| if i % 2 == 0 { 0.0 } else { i as f32 * 0.11 }).collect(),
+            vec![0.0; d],
+        ];
+        let run = |level: SimdLevel| -> SimdWorkspace {
+            let mut sw = SimdWorkspace::new(nb, d, h, out);
+            for (r, row) in rows.iter().enumerate() {
+                sw.feat[r * d..(r + 1) * d].copy_from_slice(row);
+            }
+            forward_panel(&net, level, &mut sw, nb);
+            sw
+        };
+        let sw = run(detected());
+        // bit-identical between the forced-scalar and best-available levels
+        let sc = run(SimdLevel::Scalar);
+        for (a, b) in sw.logits[..nb * out].iter().zip(&sc.logits[..nb * out]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and within f32 tolerance of the fused f64 oracle
+        let mut ws = super::super::workspace::Workspace::new(d, h, out);
+        for (r, row) in rows.iter().enumerate() {
+            for (f, &v) in ws.feat.iter_mut().zip(row) {
+                *f = v as f64;
+            }
+            fused::forward(&net, &mut ws);
+            for k in 0..out {
+                let (want, got) = (ws.logits[k], sw.logits[r * out + k] as f64);
+                assert!(
+                    (want - got).abs() <= 1e-5 * want.abs().max(1.0),
+                    "row {r} logits[{k}]: {want} vs {got}"
+                );
+            }
+        }
+    }
+}

@@ -42,7 +42,7 @@
 //!   scale out with `JobSpec::replicas` (real data-parallel workers, bit
 //!   identical trajectory, measured wire traffic) and snapshot/resume
 //!   bit-identically via `save_state` / `Engine::resume_session`.
-//! * [`kernels`] — the interpreter backend's four CPU kernel tiers
+//! * [`kernels`] — the interpreter backend's five CPU kernel tiers
 //!   (`FASTDP_KERNELS`): **fused** (forward + loss + backward into the
 //!   row's shard + in-place clip, zero steady-state allocation),
 //!   **ghost** (the paper's §3.2 book-keeping: per-sample norms computed
@@ -52,8 +52,12 @@
 //!   panels: each weight-panel row streamed — and widened to f64 — once
 //!   per `FASTDP_BLOCK_ROWS`-row block instead of once per microbatch
 //!   row, register-tiled lane reductions; bit-identical across thread
-//!   counts and block widths), and the preserved **legacy** scalar path
-//!   used as correctness oracle and benchmark baseline.
+//!   counts and block widths), **simd** (blocked's panel sweeps on
+//!   explicit f32 vector lanes — AVX2/SSE2/scalar selected at runtime,
+//!   forcible via `FASTDP_SIMD` — with compensated fixed-lane
+//!   accumulation; bit-identical across thread counts, block widths and
+//!   feature levels), and the preserved **legacy** scalar path used as
+//!   correctness oracle and benchmark baseline.
 //! * [`runtime`] — loads AOT HLO artifacts (lowered once from JAX+Pallas by
 //!   `python/compile/aot.py`) and executes them via PJRT; wrapped by the
 //!   engine's PJRT backend.  Also hosts [`runtime::pool`], the persistent

@@ -36,7 +36,7 @@ pub const THREADS: Knob = Knob {
 
 pub const KERNELS: Knob = Knob {
     name: "FASTDP_KERNELS",
-    expected: "fused|ghost|blocked|legacy",
+    expected: "fused|ghost|blocked|simd|legacy",
     fallback: "fused",
     doc: "kernel tier for the interpreter train step",
 };
@@ -46,6 +46,13 @@ pub const BLOCK_ROWS: Knob = Knob {
     expected: "integer >= 1",
     fallback: "32",
     doc: "block width (rows / LM positions) for the blocked tier",
+};
+
+pub const SIMD: Knob = Knob {
+    name: "FASTDP_SIMD",
+    expected: "avx2|sse2|scalar",
+    fallback: "runtime feature detection",
+    doc: "force a (lower) instruction-set level for the simd tier",
 };
 
 pub const DEVICE_RESIDENT: Knob = Knob {
@@ -102,6 +109,7 @@ pub const REGISTRY: &[&Knob] = &[
     &THREADS,
     &KERNELS,
     &BLOCK_ROWS,
+    &SIMD,
     &DEVICE_RESIDENT,
     &BENCH_STEPS,
     &BENCH_QUICK,
@@ -180,6 +188,14 @@ pub fn kernels() -> Option<String> {
 /// `FASTDP_BLOCK_ROWS`: blocked-tier block width override (>= 1).
 pub fn block_rows() -> Option<usize> {
     parsed(&BLOCK_ROWS, positive)
+}
+
+/// `FASTDP_SIMD`: the raw forced feature level, if set.  Parsing (and
+/// the warn-once fallback via [`warn_invalid`], plus clamping to what
+/// the host supports) stays with `kernels::simd::level_from_env` so the
+/// level vocabulary lives in one place, like [`kernels`].
+pub fn simd() -> Option<String> {
+    raw(&SIMD)
 }
 
 /// `FASTDP_DEVICE_RESIDENT`: presence-only opt-in.

@@ -1,0 +1,254 @@
+//! Simd-tier equivalence contract (`FASTDP_KERNELS=simd`):
+//!
+//! * outputs (per-sample norms, clipped gradient sums, losses) must match
+//!   the fused oracle within the ghost-tier 1e-4 relative tolerance
+//!   across a sweep of shapes — all four model families x {full, bitfit,
+//!   lastlayer}, with parametric (t, img, n_cls) variations and
+//!   pseudo-randomly drawn block widths (the panels compute in f32, so
+//!   the contract is tolerance, never bitwise, vs fused);
+//! * multi-step training trajectories must stay within tolerance of the
+//!   fused path (f32 rounding does not compound past it);
+//! * within the tier, outputs must be **bit-identical** across
+//!   `FASTDP_THREADS` in {1, 2, 8}, across any block width, *and* across
+//!   forced feature levels (portable scalar vs the best level the host
+//!   detects) — the instruction set is a pure dispatch knob.
+//!
+//! The kernel tier, block width and feature level are pinned via
+//! `InterpreterBackend::with_config` / `set_block_rows` /
+//! `set_simd_level` (never resolved from the environment), so these
+//! assertions stay meaningful under the ci.sh `FASTDP_KERNELS` /
+//! `FASTDP_SIMD` matrix.
+//!
+//! Inputs come from `bench::synth_step_inputs` — the same generator the
+//! throughput harness's probes use — with the mask and clip radius
+//! overridden to exercise masked rows and real DP clipping.
+
+use fastdp::bench::synth_step_inputs;
+use fastdp::engine::{Backend, InterpreterBackend, KernelMode, SimdLevel, StepRunner};
+use fastdp::util::tensor::Tensor;
+
+/// Per-element relative tolerance for simd vs fused (the ghost-tier
+/// contract: the panels round to f32 with compensated accumulation).
+const RTOL: f32 = 1e-4;
+/// Absolute floor below which values are considered equal.
+const ATOL: f32 = 1e-6;
+
+/// Shape sweep: every trainable-leaf combination the factor plan can
+/// take, across all four families, plus parametric shape variations so
+/// (d, h, out, vocab, t, B) all move.  Tuples carry a seed used to draw
+/// this case's block widths.
+const CASES: &[(&str, u64)] = &[
+    // cls: full (embed scatter + enc), bitfit, lastlayer + seq-len sweep
+    ("cls-base__dp-full-opacus", 1),
+    ("cls-base__dp-bitfit", 2),
+    ("cls-base__dp-lastlayer", 3),
+    ("cls-t17__dp-full-opacus", 4),
+    ("cls-t128__dp-bitfit", 5),
+    // lm: the T x T Gram path, position-panelled
+    ("lm-small__dp-full-opacus", 6),
+    ("lm-small__dp-bitfit", 7),
+    ("lm-small__dp-lastlayer", 8),
+    ("lm-medium__dp-bitfit", 9),
+    // vit: pixel features re-read from the batch in phase B
+    ("vit-c10__dp-full-opacus", 10),
+    ("vit-c10__dp-bitfit", 11),
+    ("vit-c20__dp-lastlayer", 12),
+    // cnn: bias-less first layer (full), BiTFiT-Add twin, image sweep
+    ("cnn-small__dp-full-opacus", 13),
+    ("cnn-small__dp-bitfit", 14),
+    ("cnn-small-bias__dp-bitfit-add", 15),
+    ("cnn-r8__dp-full-opacus", 16),
+    // clip-mode coverage and the non-DP (c = 1) path
+    ("cls-base__dp-bitfit__autos", 17),
+    ("lm-small__dp-full-opacus__autos", 18),
+    ("cls-base__nondp-full", 19),
+    ("vit-c10__nondp-bitfit", 20),
+];
+
+/// Tiny deterministic generator for per-case block widths (the
+/// "property-style" part of the sweep; no external RNG dependency).
+fn draw_blocks(seed: u64, n: usize) -> Vec<usize> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD1B54A32D192ED03);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 27;
+            s = s.wrapping_mul(0x2545F4914F6CDD1D);
+            1 + (s >> 33) as usize % 40 // widths in [1, 40]
+        })
+        .collect()
+}
+
+/// Synthetic train inputs with the last 3 rows masked out and a clip
+/// radius small enough that DP clipping really fires.
+fn train_inputs(backend: &InterpreterBackend, step: &dyn StepRunner, seed: u64) -> Vec<Tensor> {
+    let meta = step.meta().clone();
+    let b = meta.batch;
+    let mut inputs = synth_step_inputs(backend, &meta, seed).unwrap();
+    let mut mask = vec![1.0f32; b];
+    for m in mask.iter_mut().skip(b.saturating_sub(3)) {
+        *m = 0.0;
+    }
+    inputs[4] = Tensor::f32(vec![b], mask);
+    inputs[5] = Tensor::scalar_f32(0.05);
+    inputs
+}
+
+/// Run one step of `artifact` under (threads, mode, block, level) on the
+/// shared inputs.  `level` only matters for `KernelMode::Simd`.
+fn outputs(
+    artifact: &str,
+    threads: usize,
+    mode: KernelMode,
+    block: Option<usize>,
+    level: Option<SimdLevel>,
+) -> Vec<Tensor> {
+    let mut backend = InterpreterBackend::with_config(Some(threads), Some(mode));
+    backend.set_block_rows(block);
+    backend.set_simd_level(level);
+    let step = backend.load(artifact).unwrap();
+    let inputs = train_inputs(&backend, step.as_ref(), 41);
+    step.run(&inputs).unwrap()
+}
+
+fn assert_tensors_close(a: &[Tensor], b: &[Tensor], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: output arity");
+    for (ti, (ta, tb)) in a.iter().zip(b).enumerate() {
+        let (va, vb) = (ta.as_f32(), tb.as_f32());
+        assert_eq!(va.len(), vb.len(), "{tag}: output {ti} length");
+        for (i, (&x, &y)) in va.iter().zip(vb).enumerate() {
+            let scale = x.abs().max(y.abs()).max(ATOL);
+            assert!(
+                (x - y).abs() / scale < RTOL,
+                "{tag}: output {ti}[{i}]: fused {x} vs simd {y}"
+            );
+        }
+    }
+}
+
+fn bits_of(out: &[Tensor]) -> Vec<Vec<u32>> {
+    out.iter().map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+#[test]
+fn simd_norms_and_grads_match_fused_across_shapes() {
+    for &(artifact, seed) in CASES {
+        let fused = outputs(artifact, 2, KernelMode::Fused, None, None);
+        for blk in draw_blocks(seed, 2) {
+            let simd = outputs(artifact, 2, KernelMode::Simd, Some(blk), None);
+            // outputs are [loss, grad, sq_norms]: the norms are the
+            // analytic claim, the grad the factor accumulation
+            assert_tensors_close(&fused, &simd, &format!("{artifact} blk={blk}"));
+            // sq_norms must be finite, non-negative, zero on masked rows
+            let b = fused[2].len();
+            let sq = simd[2].as_f32();
+            assert!(sq.iter().all(|&s| s.is_finite() && s >= 0.0), "{artifact}");
+            for row in b - 3..b {
+                assert_eq!(sq[row], 0.0, "{artifact}: masked row {row} has a norm");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_outputs_bit_identical_across_threads_blocks_and_levels() {
+    for &(artifact, seed) in CASES {
+        let base = bits_of(&outputs(artifact, 1, KernelMode::Simd, Some(8), None));
+        for threads in [2usize, 8] {
+            assert_eq!(
+                base,
+                bits_of(&outputs(artifact, threads, KernelMode::Simd, Some(8), None)),
+                "{artifact}: simd threads=1 vs {threads}"
+            );
+        }
+        for blk in draw_blocks(seed ^ 0x51D0, 3) {
+            assert_eq!(
+                base,
+                bits_of(&outputs(artifact, 2, KernelMode::Simd, Some(blk), None)),
+                "{artifact}: simd block=8 vs block={blk}"
+            );
+        }
+        // the forced-scalar fallback is the same computation as the best
+        // detected level — the FMA-free lane scheme's whole point
+        assert_eq!(
+            base,
+            bits_of(&outputs(artifact, 2, KernelMode::Simd, Some(8), Some(SimdLevel::Scalar))),
+            "{artifact}: simd detected level vs forced scalar"
+        );
+        // and the env-default width is the same computation too
+        assert_eq!(
+            base,
+            bits_of(&outputs(artifact, 2, KernelMode::Simd, None, None)),
+            "{artifact}: simd pinned vs default width"
+        );
+    }
+}
+
+#[test]
+fn simd_training_trajectory_matches_fused() {
+    // several SGD steps per artifact: parameters must stay within
+    // tolerance of the fused trajectory (f32 rounding does not compound
+    // past it); the scalar level doubles as fallback-path coverage
+    for artifact in ["cls-base__dp-bitfit", "lm-small__dp-bitfit", "cnn-small__dp-full-opacus"] {
+        let run = |mode: KernelMode, block: Option<usize>, level: Option<SimdLevel>| -> Vec<f32> {
+            let mut backend = InterpreterBackend::with_config(Some(2), Some(mode));
+            backend.set_block_rows(block);
+            backend.set_simd_level(level);
+            let step = backend.load(artifact).unwrap();
+            let meta = step.meta().clone();
+            let mut inputs = train_inputs(&backend, step.as_ref(), 57);
+            let pt = meta.pt;
+            let b = meta.batch as f32;
+            for _ in 0..3 {
+                let out = step.run(&inputs).unwrap();
+                let grad = out[1].as_f32();
+                let mut train = inputs[1].as_f32().to_vec();
+                for (p, g) in train.iter_mut().zip(grad) {
+                    *p -= 0.5 * g / b;
+                }
+                inputs[1] = Tensor::f32(vec![pt], train);
+            }
+            inputs[1].as_f32().to_vec()
+        };
+        let fused = run(KernelMode::Fused, None, None);
+        for (blk, level) in [(1usize, None), (7, Some(SimdLevel::Scalar)), (32, None)] {
+            let simd = run(KernelMode::Simd, Some(blk), level);
+            for (i, (&x, &y)) in fused.iter().zip(&simd).enumerate() {
+                let scale = x.abs().max(y.abs()).max(1e-5);
+                assert!(
+                    (x - y).abs() / scale < 1e-3,
+                    "{artifact} blk={blk}: param {i} diverged: fused {x} vs simd {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_handles_all_masked_and_all_active_extremes() {
+    for artifact in ["cls-base__dp-bitfit", "lm-small__dp-full-opacus"] {
+        for level in [None, Some(SimdLevel::Scalar)] {
+            let mut backend = InterpreterBackend::with_config(Some(2), Some(KernelMode::Simd));
+            backend.set_block_rows(Some(8));
+            backend.set_simd_level(level);
+            let step = backend.load(artifact).unwrap();
+            let meta = step.meta().clone();
+            let b = meta.batch;
+            let mut inputs = synth_step_inputs(&backend, &meta, 3).unwrap();
+            inputs[5] = Tensor::scalar_f32(0.05);
+            // all rows masked: zero loss, zero grad, zero norms
+            inputs[4] = Tensor::f32(vec![b], vec![0.0; b]);
+            let out = step.run(&inputs).unwrap();
+            assert_eq!(out[0].item_f32(), 0.0, "{artifact}");
+            assert!(out[1].as_f32().iter().all(|&g| g == 0.0), "{artifact}");
+            assert!(out[2].as_f32().iter().all(|&s| s == 0.0), "{artifact}");
+            // all rows active: per-sample clipped norms bound the summed grad
+            inputs[4] = Tensor::f32(vec![b], vec![1.0; b]);
+            let out = step.run(&inputs).unwrap();
+            let norm = fastdp::util::tensor::l2_norm(out[1].as_f32());
+            assert!(
+                norm <= b as f64 * 0.05 + 1e-4,
+                "{artifact}: clipped sum norm {norm} exceeds B*R"
+            );
+        }
+    }
+}

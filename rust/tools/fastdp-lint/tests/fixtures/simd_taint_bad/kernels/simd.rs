@@ -1,0 +1,29 @@
+// fastdp-lint: per-sample-grad
+pub fn dh_panel(x: f32) -> f32 {
+    x * 2.0
+}
+
+// fastdp-lint: per-sample-grad
+pub fn dfeat_panel(x: f32) -> f32 {
+    x * 3.0
+}
+
+// fastdp-lint: clip-boundary
+pub fn pos_epilogue(g: f32) -> f32 {
+    g.min(1.0)
+}
+
+// fastdp-lint: dp-sink
+pub fn accumulate_factor_rows(_g: f32) {}
+
+// fastdp-lint: noise-site
+pub fn add_noise(g: f32) -> f32 {
+    g + 0.1
+}
+
+pub fn run_train_simd(x: f32) -> f32 {
+    let g = dh_panel(x);
+    let _clipped = pos_epilogue(dfeat_panel(x));
+    accumulate_factor_rows(g); // unclipped dh factors hit the shared sum
+    add_noise(0.0)
+}

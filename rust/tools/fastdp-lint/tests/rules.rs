@@ -62,6 +62,24 @@ fn dp_flow_silent_when_clip_precedes_sink() {
 }
 
 #[test]
+fn dp_flow_fires_on_simd_tier_unclipped_sink() {
+    // the simd tier's dh/dfeat panel kernels are per-sample-grad sources
+    // and its position epilogue the clip boundary; the rule must cover
+    // that shape of the flow too
+    let bad = lint("simd_taint_bad");
+    let hits: Vec<_> = bad.findings.iter().filter(|f| f.rule == "dp-flow").collect();
+    assert_eq!(hits.len(), 1, "{:?}", bad.findings);
+    assert!(hits[0].message.contains("accumulate_factor_rows"), "{}", hits[0].message);
+    assert!(hits[0].message.contains("run_train_simd"), "{}", hits[0].message);
+}
+
+#[test]
+fn dp_flow_silent_when_simd_epilogue_clips_before_sink() {
+    let good = lint("simd_taint_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
 fn dp_noise_fires_when_no_noise_site_declared() {
     let bad = lint("noise_bad");
     assert_eq!(fired(&bad), vec!["dp-noise"], "{:?}", bad.findings);
