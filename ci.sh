@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # CI for the fastdp Rust workspace: format check, lints, tier-1
-# (build + tests), the fastdp-lint static-analysis stage, the determinism
-# env matrix, then a bench-smoke of the throughput harness.
+# (build + tests), the fastdp-lint static-analysis stage, an audit-smoke
+# of the empirical privacy auditor, the determinism env matrix, then a
+# bench-smoke of the throughput harness.
 # Everything runs offline — dependencies are vendored under rust/vendor/.
 #
-# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-lint] [--no-bench] [--no-matrix]
+# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-lint] [--no-audit] [--no-bench] [--no-matrix]
 
 set -euo pipefail
 cd "$(dirname "$0")/rust"
@@ -12,6 +13,7 @@ cd "$(dirname "$0")/rust"
 run_fmt=1
 run_clippy=1
 run_lint=1
+run_audit=1
 run_bench=1
 run_matrix=1
 for arg in "$@"; do
@@ -19,6 +21,7 @@ for arg in "$@"; do
         --no-fmt) run_fmt=0 ;;
         --no-clippy) run_clippy=0 ;;
         --no-lint) run_lint=0 ;;
+        --no-audit) run_audit=0 ;;
         --no-bench) run_bench=0 ;;
         --no-matrix) run_matrix=0 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
@@ -63,6 +66,31 @@ if [ "$run_lint" = 1 ]; then
     # prove it holds under the legacy kernel env the matrix also uses
     echo "==> static analysis: fastdp-lint over the tree (FASTDP_KERNELS=legacy)"
     FASTDP_KERNELS=legacy cargo run -q -p fastdp-lint -- --quiet --json ../LINT_report.json
+fi
+
+if [ "$run_audit" = 1 ]; then
+    # Empirical privacy audit (smoke-sized): attack real trainings and
+    # hold the accountant to its claim before spending matrix time.  The
+    # harness exits non-zero if any clean cell's empirical epsilon exceeds
+    # the accountant's, or if a DP cell leaks its planted canary.
+    echo "==> audit-smoke: privacy audit harness (quick grid)"
+    out="$(mktemp "${TMPDIR:-/tmp}/audit_smoke.XXXXXX.json")"
+    FASTDP_BENCH_QUICK=1 FASTDP_AUDIT_TRIALS=4 \
+        FASTDP_AUDIT_OUT="$out" cargo bench --bench privacy_audit
+    for key in '"privacy_audit"' '"rows"' '"claimed_eps"' '"empirical_eps"' \
+               '"flagged"' '"mi_eps"' '"sigma_hat"' '"clip_ratio"' \
+               '"extract_rank"' '"extracted"'; do
+        grep -q "$key" "$out" || { echo "audit-smoke: $key missing from $out" >&2; exit 1; }
+    done
+    # seed the in-repo audit snapshot if it has never been recorded; a
+    # later full grid (cargo bench --bench privacy_audit) overwrites it
+    snap="../BENCH_privacy_audit.json"
+    if [ ! -f "$snap" ]; then
+        cp "$out" "$snap"
+        echo "audit-smoke: seeded $snap (smoke-sized; run the full grid to refresh)"
+    fi
+    rm -f "$out"
+    echo "audit-smoke OK"
 fi
 
 if [ "$run_matrix" = 1 ]; then

@@ -1,0 +1,118 @@
+//! Empirical privacy audit bench: attack real trainings across
+//! method x epsilon x kernel tier and emit `BENCH_privacy_audit.json`
+//! at the repo root.
+//!
+//! Knobs (all env vars):
+//!   FASTDP_BENCH_QUICK   set => BiTFiT x {eps 0.7, non-private} on the
+//!                        fused tier only (the ci.sh audit-smoke stage)
+//!   FASTDP_AUDIT_TRIALS  paired membership-inference trainings per cell
+//!                        (default 8; quick default 4)
+//!   FASTDP_AUDIT_OUT     output path override
+//!   FASTDP_FAULT         arm a mechanism fault for the whole grid
+//!                        (none|skip-noise|skip-clip|half-sigma) — manual
+//!                        auditor-of-the-auditor experiments; this is the
+//!                        ONLY entry point that honors the knob
+//!
+//! Exit code is non-zero when the audit's verdict contradicts the armed
+//! configuration: any flagged cell on a clean run (the accountant's claim
+//! was empirically violated — a privacy bug), or any *unflagged* private
+//! cell when a fault is armed (the auditor missed a broken mechanism).
+
+use fastdp::audit::{self, report};
+use fastdp::bench;
+use fastdp::dp::fault::{self, FaultMode};
+use fastdp::runtime::env;
+
+fn main() {
+    let fault = fault::from_env();
+    let quick = bench::quick();
+    let trials = env::audit_trials().unwrap_or(if quick { 4 } else { 8 });
+    let mut grid = if quick { audit::quick_grid(trials) } else { audit::full_grid(trials) };
+    if fault != FaultMode::None {
+        for cell in &mut grid {
+            cell.fault = fault;
+        }
+    }
+
+    println!(
+        "## privacy audit — {} cells, {} MI trials per cell, fault = {}\n",
+        grid.len(),
+        trials,
+        fault.name()
+    );
+    println!(
+        "{:<12} {:<8} {:<8} {:<11} {:>9} {:>10} {:>8}  probes  extracted",
+        "method", "eps", "tier", "fault", "claimed", "empirical", "flagged"
+    );
+    let outcomes = audit::run_grid(&grid).expect("audit grid failed to run");
+    for o in &outcomes {
+        let claimed = if o.claimed_eps.is_finite() {
+            format!("{:.3}", o.claimed_eps)
+        } else {
+            "inf".to_string()
+        };
+        let probes = match &o.probes {
+            Some((np, cp)) => format!("{}", np.ok && cp.ok),
+            None => "-".to_string(),
+        };
+        let extracted = match &o.extraction {
+            Some(x) => format!("{} (rank {}, match {:.2})", x.extracted, x.rank, x.match_rate),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:<12} {:<8} {:<8} {:<11} {:>9} {:>10.3} {:>8}  {:<6}  {}",
+            o.method, o.eps_label, o.tier, o.fault, claimed, o.empirical_eps, o.flagged,
+            probes, extracted
+        );
+    }
+
+    let sweep = format!("quick={quick} trials={trials} fault={}", fault.name());
+    let doc = report::audit_json(&outcomes, &sweep);
+    let out_path = env::audit_out().unwrap_or_else(|| {
+        // benches run from rust/; the audit snapshot lives at the repo root
+        if std::path::Path::new("ROADMAP.md").exists() {
+            "BENCH_privacy_audit.json".to_string()
+        } else if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_privacy_audit.json".to_string()
+        } else {
+            "BENCH_privacy_audit.json".to_string()
+        }
+    });
+    std::fs::write(&out_path, &doc).expect("write BENCH_privacy_audit.json");
+    let back = std::fs::read_to_string(&out_path).expect("read back");
+    report::validate_audit_json(&back).expect("emitted JSON failed schema validation");
+    println!("\nwrote {out_path} (schema OK)");
+
+    if fault == FaultMode::None {
+        let violated: Vec<&str> =
+            outcomes.iter().filter(|o| o.flagged).map(|o| o.method.as_str()).collect();
+        if !violated.is_empty() {
+            eprintln!(
+                "FAIL: the accountant's claim was empirically violated in clean cells: {violated:?}"
+            );
+            std::process::exit(1);
+        }
+        let leaked: Vec<&str> = outcomes
+            .iter()
+            .filter(|o| o.private && o.extraction.as_ref().map(|x| x.extracted).unwrap_or(false))
+            .map(|o| o.method.as_str())
+            .collect();
+        if !leaked.is_empty() {
+            eprintln!("FAIL: a DP cell leaked its planted canary verbatim: {leaked:?}");
+            std::process::exit(1);
+        }
+    } else {
+        let missed: Vec<&str> = outcomes
+            .iter()
+            .filter(|o| o.private && !o.flagged)
+            .map(|o| o.method.as_str())
+            .collect();
+        if !missed.is_empty() {
+            eprintln!(
+                "FAIL: fault {} armed but these private cells were not flagged: {missed:?}",
+                fault.name()
+            );
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Membership inference over canary-paired models.
+//!
+//! The attack instantiates the DP neighbouring-dataset definition
+//! literally: two datasets that differ in exactly one record (the canary),
+//! trained with independently seeded mechanisms, then distinguished by the
+//! trained model's loss on that record.  Per trial the seeds advance, and
+//! the canary's negative log-likelihood under each model becomes one
+//! "in" score and one "out" score; thresholding the pooled scores yields
+//! TP/FP counts, which [`crate::audit::bound`] converts into an empirical
+//! epsilon lower bound.  A mechanism whose claimed epsilon is *below* the
+//! witnessed bound is broken — that is the audit's core test.
+
+use crate::coordinator::task_data::TaskData;
+use crate::data::synth_text::{self, Canary};
+use crate::dp::fault::FaultMode;
+use crate::engine::{evaluate_params, Engine, EngineError, JobSpec};
+
+use super::bound;
+
+/// Outcome of one membership-inference run.
+#[derive(Debug, Clone, Copy)]
+pub struct MiOutcome {
+    pub trials: usize,
+    /// "in" models correctly called in (score above threshold).
+    pub tp: u64,
+    /// "out" models wrongly called in.
+    pub fp: u64,
+    /// Clopper–Pearson empirical epsilon witness (both directions).
+    pub eps: f64,
+}
+
+/// Build the neighbouring dataset pair: a clean split and the same split
+/// with exactly one record replaced by the canary (the add/remove-one
+/// adjacency the accountant's guarantee quantifies over).  Everything is
+/// deterministic under `seed`, so every trial reuses the identical pair.
+// fastdp-lint: per-sample-grad
+pub fn paired_datasets(
+    n: usize,
+    t_len: usize,
+    vocab: usize,
+    canary: &Canary,
+    seed: u64,
+) -> (TaskData, TaskData) {
+    let tok = synth_text::tokenizer(vocab);
+    let clean = synth_text::pretrain_lm(n, t_len, &tok, seed);
+    let mut planted = clean.clone();
+    synth_text::plant_canaries(&mut planted, t_len, std::slice::from_ref(canary), 1, seed);
+    (
+        TaskData::Lm { examples: planted, t: t_len },
+        TaskData::Lm { examples: clean, t: t_len },
+    )
+}
+
+/// Train one model for the audit: a full `Session` through the engine
+/// façade (Poisson sampling, per-sample clipping, noise, accounting) with
+/// the cell's fault armed, returning the trained parameter vector.
+// fastdp-lint: clip-boundary
+pub fn train_audit_model(
+    engine: &mut Engine,
+    spec: &JobSpec,
+    fault: FaultMode,
+    data: &TaskData,
+) -> Result<Vec<f32>, EngineError> {
+    let mut session = engine.session(spec)?;
+    session.set_fault(fault);
+    for _ in 0..spec.steps {
+        session.run_step(data)?;
+    }
+    Ok(session.full_params())
+}
+
+/// Summed NLL of `completion` given `prompt` under a trained model — the
+/// audit's only loss readout (membership scores and extraction ranking
+/// both flow through here).
+// fastdp-lint: dp-sink
+pub fn sequence_nll(
+    engine: &mut Engine,
+    model: &str,
+    params: &[f32],
+    prompt: &[i32],
+    completion: &[i32],
+    t_len: usize,
+) -> Result<f64, EngineError> {
+    let probe = Canary { prompt: prompt.to_vec(), completion: completion.to_vec() };
+    let data = TaskData::Lm { examples: vec![probe.lm_example(t_len)], t: t_len };
+    let eval = engine.evaluator(model)?;
+    Ok(evaluate_params(eval.as_ref(), params, &data, 1)?.metric_a)
+}
+
+/// Run `trials` paired trainings and score the canary-loss attack.
+pub fn mi_attack(
+    engine: &mut Engine,
+    base: &JobSpec,
+    canary: &Canary,
+    t_len: usize,
+    vocab: usize,
+    trials: usize,
+    fault: FaultMode,
+) -> Result<MiOutcome, EngineError> {
+    assert!(trials > 0, "mi_attack needs at least one trial");
+    let (canary_in, canary_out) =
+        paired_datasets(base.n_train, t_len, vocab, canary, base.seed ^ 0xDA7A5E);
+    let mut scores_in = Vec::with_capacity(trials);
+    let mut scores_out = Vec::with_capacity(trials);
+    for trial in 0..trials {
+        // the in and out models draw INDEPENDENT seeds: the DP guarantee
+        // is over the mechanism's randomness, so sharing noise across the
+        // pair would hand the attacker common-mode cancellation the
+        // epsilon bound does not cover (and deterministically separate
+        // even a correct mechanism)
+        let mut spec_in = base.clone();
+        spec_in.seed = base.seed.wrapping_add(1 + 2 * trial as u64);
+        let mut spec_out = base.clone();
+        spec_out.seed = base.seed.wrapping_add(2 + 2 * trial as u64);
+        let params_in = train_audit_model(engine, &spec_in, fault, &canary_in)?;
+        let params_out = train_audit_model(engine, &spec_out, fault, &canary_out)?;
+        let nll_in = sequence_nll(
+            engine,
+            &base.model,
+            &params_in,
+            &canary.prompt,
+            &canary.completion,
+            t_len,
+        )?;
+        let nll_out = sequence_nll(
+            engine,
+            &base.model,
+            &params_out,
+            &canary.prompt,
+            &canary.completion,
+            t_len,
+        )?;
+        scores_in.push(-nll_in);
+        scores_out.push(-nll_out);
+    }
+    // threshold at the lower median of the pooled scores: with real
+    // memorization the two score sets separate and this lands between them
+    let mut pooled: Vec<f64> = scores_in.iter().chain(&scores_out).copied().collect();
+    pooled.sort_by(f64::total_cmp);
+    let threshold = pooled[trials - 1];
+    let tp = scores_in.iter().filter(|&&s| s > threshold).count() as u64;
+    let fp = scores_out.iter().filter(|&&s| s > threshold).count() as u64;
+    let eps = bound::eps_lower_bound(tp, fp, trials as u64, bound::ALPHA, base.privacy.delta());
+    Ok(MiOutcome { trials, tp, fp, eps })
+}

@@ -1,0 +1,175 @@
+//! Exact one-sided Clopper–Pearson binomial bounds and the empirical
+//! epsilon lower bound they imply.
+//!
+//! A membership-inference attack with true-positive rate TPR and
+//! false-positive rate FPR on neighbouring datasets witnesses
+//! `eps >= ln((TPR - delta) / FPR)` for any (eps, delta)-DP mechanism
+//! (Kairouz et al., "The Composition Theorem for Differential Privacy").
+//! With `n` paired trials we only observe counts, so the witnessed bound
+//! uses a one-sided lower confidence bound on TPR and a one-sided upper
+//! confidence bound on FPR — the Clopper–Pearson construction, evaluated
+//! exactly (trial counts are small) and inverted by bisection.
+
+use crate::dp::rdp::ln_gamma;
+
+/// One-sided confidence level used throughout the audit (95%).
+pub const ALPHA: f64 = 0.05;
+
+fn ln_binom(n: u64, k: u64) -> f64 {
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+/// Exact upper tail `P(X >= x)` for `X ~ Binomial(n, p)`.
+fn tail_ge(n: u64, x: u64, p: f64) -> f64 {
+    if x == 0 {
+        return 1.0;
+    }
+    if x > n || p <= 0.0 {
+        return 0.0;
+    }
+    if p >= 1.0 {
+        return 1.0;
+    }
+    let (lp, lq) = (p.ln(), (1.0 - p).ln());
+    (x..=n)
+        .map(|i| (ln_binom(n, i) + i as f64 * lp + (n - i) as f64 * lq).exp())
+        .sum::<f64>()
+        .min(1.0)
+}
+
+/// Exact lower tail `P(X <= x)`.
+fn tail_le(n: u64, x: u64, p: f64) -> f64 {
+    if x >= n {
+        return 1.0;
+    }
+    if p >= 1.0 {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return 1.0;
+    }
+    let (lp, lq) = (p.ln(), (1.0 - p).ln());
+    (0..=x)
+        .map(|i| (ln_binom(n, i) + i as f64 * lp + (n - i) as f64 * lq).exp())
+        .sum::<f64>()
+        .min(1.0)
+}
+
+/// One-sided Clopper–Pearson **lower** bound: the largest `p` ruled out
+/// from below, i.e. the solution of `P(X >= x; n, p) = alpha` (0 when
+/// `x == 0`).  Bisection returns the inner endpoint, so the bound is
+/// conservative (never overstates the rate).
+pub fn cp_lower(x: u64, n: u64, alpha: f64) -> f64 {
+    assert!(x <= n && n > 0, "x = {x} of n = {n}");
+    if x == 0 {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if tail_ge(n, x, mid) < alpha {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// One-sided Clopper–Pearson **upper** bound: the solution of
+/// `P(X <= x; n, p) = alpha` (1 when `x == n`).  Returns the outer
+/// endpoint, so the bound is conservative (never understates the rate).
+pub fn cp_upper(x: u64, n: u64, alpha: f64) -> f64 {
+    assert!(x <= n && n > 0, "x = {x} of n = {n}");
+    if x == n {
+        return 1.0;
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if tail_le(n, x, mid) > alpha {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+/// Empirical epsilon witnessed by `tp` true positives and `fp` false
+/// positives over `n` paired trials, at confidence `1 - alpha` and the
+/// mechanism's `delta`.  Both attack directions are scored — calling the
+/// high-score side "in" and calling the low-score side "out" (TNR/FNR
+/// swap) — and the larger witness is returned, clamped at 0 (no attack
+/// ever witnesses a negative epsilon).
+pub fn eps_lower_bound(tp: u64, fp: u64, n: u64, alpha: f64, delta: f64) -> f64 {
+    assert!(tp <= n && fp <= n && n > 0);
+    let one_direction = |hits: u64, false_alarms: u64| -> f64 {
+        let rate_lb = cp_lower(hits, n, alpha);
+        let false_ub = cp_upper(false_alarms, n, alpha);
+        if rate_lb - delta <= 0.0 || false_ub <= 0.0 {
+            return 0.0;
+        }
+        ((rate_lb - delta) / false_ub).ln().max(0.0)
+    };
+    one_direction(tp, fp).max(one_direction(n - fp, n - tp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cp_bounds_match_closed_forms() {
+        // P(X >= n; p) = p^n  =>  cp_lower(n, n) = alpha^(1/n)
+        // P(X <= 0; p) = (1-p)^n  =>  cp_upper(0, n) = 1 - alpha^(1/n)
+        for n in [1u64, 4, 6, 12, 30] {
+            let root = ALPHA.powf(1.0 / n as f64);
+            assert!((cp_lower(n, n, ALPHA) - root).abs() < 1e-9, "n = {n}");
+            assert!((cp_upper(0, n, ALPHA) - (1.0 - root)).abs() < 1e-9, "n = {n}");
+        }
+        assert_eq!(cp_lower(0, 10, ALPHA), 0.0);
+        assert_eq!(cp_upper(10, 10, ALPHA), 1.0);
+    }
+
+    #[test]
+    fn cp_bounds_are_conservative_and_monotone() {
+        for n in [6u64, 20] {
+            let mut prev_lo = -1.0;
+            let mut prev_hi = 0.0;
+            for x in 0..=n {
+                let lo = cp_lower(x, n, ALPHA);
+                let hi = cp_upper(x, n, ALPHA);
+                assert!(lo <= x as f64 / n as f64 + 1e-9, "lower bound above the MLE");
+                assert!(hi >= x as f64 / n as f64 - 1e-9, "upper bound below the MLE");
+                assert!(lo > prev_lo - 1e-12 && hi > prev_hi - 1e-12, "not monotone in x");
+                // the bound actually holds at the returned endpoint
+                if x > 0 {
+                    assert!(tail_ge(n, x, lo) <= ALPHA + 1e-9);
+                }
+                if x < n {
+                    assert!(tail_le(n, x, hi) <= ALPHA + 1e-9);
+                }
+                prev_lo = lo;
+                prev_hi = hi;
+            }
+        }
+    }
+
+    #[test]
+    fn eps_bound_values() {
+        // perfect separation at 6 trials: tpr_lb = 0.05^(1/6), fpr_ub = 1 - 0.05^(1/6)
+        let root: f64 = ALPHA.powf(1.0 / 6.0);
+        let want = ((root - 1e-5) / (1.0 - root)).ln();
+        let got = eps_lower_bound(6, 0, 6, ALPHA, 1e-5);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        assert!(got < 0.5, "6 perfect trials must witness less than eps 0.5, got {got}");
+        // a chance-level attack witnesses nothing
+        assert_eq!(eps_lower_bound(3, 3, 6, ALPHA, 1e-5), 0.0);
+        // the reversed direction is scored too: all-negative calls are as
+        // strong a witness as all-positive ones
+        assert!((eps_lower_bound(0, 6, 6, ALPHA, 1e-5) - got).abs() < 1e-12);
+        // more trials at perfect separation witness more
+        assert!(eps_lower_bound(20, 0, 20, ALPHA, 1e-5) > got);
+    }
+}

@@ -1,0 +1,102 @@
+//! Secret extraction: can an attacker read a planted canary back out of
+//! the trained model?
+//!
+//! Two complementary measurements, both black-box over the trained
+//! parameter vector:
+//!
+//! * **greedy decode** — prompt the model with the canary trigger and
+//!   count how many of the secret's tokens the argmax continuation
+//!   reproduces (`match_rate`).  A model that memorised the canary
+//!   completes it verbatim; a DP model continues with generic corpus text.
+//! * **ranked exposure** — score the true secret's NLL against decoy
+//!   secrets drawn from the same word bank (the canary-exposure protocol
+//!   of Carlini et al., "The Secret Sharer").  `rank == 1` means the true
+//!   secret beats every decoy; under no memorisation rank is uniform over
+//!   the candidates.
+//!
+//! `extracted` requires both signals (rank 1 *and* a majority token
+//! match), so a single lucky rank draw — probability 1/candidates under
+//! the null — cannot flag a correct DP run.
+
+use crate::data::synth_text::{self, Canary};
+use crate::engine::{Engine, EngineError};
+use crate::util::rng::ChaChaRng;
+
+use super::attack::sequence_nll;
+
+/// Decoys ranked against the true secret (16 candidates total).
+const DECOYS: usize = 15;
+
+/// Outcome of the extraction attack on one trained model.
+#[derive(Debug, Clone, Copy)]
+pub struct Extraction {
+    /// Fraction of secret tokens the greedy continuation reproduced.
+    pub match_rate: f64,
+    /// Rank of the true secret among [`candidates`](Self::candidates)
+    /// by NLL (1 = best).
+    pub rank: usize,
+    pub candidates: usize,
+    /// Summed NLL of the true secret given the trigger.
+    pub nll_true: f64,
+    /// Both signals fired: rank 1 and a majority greedy match.
+    pub extracted: bool,
+}
+
+/// Draw decoy completions from the same word bank as real secrets so the
+/// ranking measures memorisation, not vocabulary mismatch.  Regenerates on
+/// collision with the true secret (or another decoy).
+fn decoy_completions(canary: &Canary, vocab: usize, seed: u64) -> Vec<Vec<i32>> {
+    let tok = synth_text::tokenizer(vocab);
+    let bank = synth_text::word_bank();
+    let mut rng = ChaChaRng::new(seed, 0xDEC0);
+    let len = canary.completion.len();
+    let mut out: Vec<Vec<i32>> = Vec::with_capacity(DECOYS);
+    while out.len() < DECOYS {
+        let cand: Vec<i32> =
+            (0..len).map(|_| tok.encode_word(bank[rng.below(bank.len())])).collect();
+        if cand != canary.completion && !out.contains(&cand) {
+            out.push(cand);
+        }
+    }
+    out
+}
+
+/// Attack one trained model: greedy-decode the trigger and rank the true
+/// secret against decoys.
+pub fn extract_canary(
+    engine: &mut Engine,
+    model: &str,
+    params: &[f32],
+    canary: &Canary,
+    t_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Result<Extraction, EngineError> {
+    use crate::coordinator::decode::greedy_decode;
+    use crate::data::tokenizer::{EOS, SEP};
+
+    // greedy continuation of "trigger SEP" compared token-for-token
+    let mut prompt = canary.prompt.clone();
+    prompt.push(SEP);
+    let step = engine.decoder(model)?;
+    let decoded =
+        greedy_decode(step.as_ref(), params, &[prompt], canary.completion.len(), EOS)?;
+    let hits = decoded[0]
+        .iter()
+        .zip(&canary.completion)
+        .filter(|&(&got, &want)| got as i32 == want)
+        .count();
+    let match_rate = hits as f64 / canary.completion.len().max(1) as f64;
+
+    // exposure rank of the true secret among decoys
+    let nll_true =
+        sequence_nll(engine, model, params, &canary.prompt, &canary.completion, t_len)?;
+    let mut rank = 1usize;
+    for decoy in decoy_completions(canary, vocab, seed) {
+        if sequence_nll(engine, model, params, &canary.prompt, &decoy, t_len)? < nll_true {
+            rank += 1;
+        }
+    }
+    let extracted = rank == 1 && match_rate >= 0.5;
+    Ok(Extraction { match_rate, rank, candidates: DECOYS + 1, nll_true, extracted })
+}

@@ -1,0 +1,314 @@
+//! Empirical privacy auditing: attack the trained models and check the
+//! accountant's claim against what an adversary actually achieves.
+//!
+//! The analytical DP stack ([`crate::dp`]) proves an epsilon *upper*
+//! bound; this module measures an epsilon *lower* bound by attacking real
+//! [`crate::engine::Session`] runs, closing the loop end-to-end:
+//!
+//! * [`attack`] — membership inference on canary-paired models (the
+//!   neighbouring-dataset game, played with real trainings),
+//! * [`extract`] — secret extraction: greedy decode + exposure rank of a
+//!   planted canary,
+//! * [`probe`] — white-box recovery of the applied noise multiplier and
+//!   clipping bound from one-step SGD trajectories,
+//! * [`bound`] — exact Clopper–Pearson confidence bounds turning attack
+//!   counts into an epsilon witness,
+//! * [`report`] — the `BENCH_privacy_audit.json` schema.
+//!
+//! A cell of the audit grid (method × epsilon × kernel tier, optionally
+//! with a [`FaultMode`] armed) is **flagged** when the empirical epsilon
+//! exceeds the accountant's claim — which must never happen for the
+//! unfaulted mechanism and must always happen when a fault breaks it.
+//! Faults too subtle for membership inference at auditable trial counts
+//! (a halved sigma moves attack accuracy by less than one confidence
+//! interval) are caught by the probes instead: a failed probe feeds the
+//! *measured* mechanism parameters back through the RDP accountant, and
+//! that implied epsilon becomes the empirical claim.
+
+pub mod attack;
+pub mod bound;
+pub mod extract;
+pub mod probe;
+pub mod report;
+
+use crate::data::synth_text;
+use crate::dp::fault::FaultMode;
+use crate::dp::rdp;
+use crate::engine::{
+    Engine, EngineError, InterpreterBackend, JobSpec, KernelMode, Method, OptimKind, TaskData,
+};
+
+use attack::MiOutcome;
+use extract::Extraction;
+use probe::{ClipProbe, NoiseProbe};
+
+/// The audit trains the small LM everywhere: it is the only model family
+/// with a decode fragment (extraction needs one), and canaries are text.
+pub const MODEL: &str = "lm-small";
+pub const DELTA: f64 = 1e-5;
+/// Grid epsilon targets: tight, moderate, and non-private.
+pub const EPS_LOW: f64 = 0.7;
+pub const EPS_MID: f64 = 3.0;
+/// Cap for "the mechanism leaks everything" (JSON-safe stand-in for
+/// infinity when a probe measures an effectively zero sigma).
+const EPS_CAP: f64 = 1e9;
+/// Below this sigma the RDP accountant's assertion would trip; the
+/// implied epsilon is the cap instead.
+const SIGMA_FLOOR: f64 = 0.3;
+/// Secret length in tokens (6 word ids from the canary bank).
+const COMPLETION_LEN: usize = 6;
+/// Extraction trains longer and full-batch so the non-private column
+/// memorises its canary within a test-sized budget.
+const EXTRACT_STEPS: u64 = 80;
+const CANARY_COPIES: usize = 8;
+
+/// One cell of the audit grid.
+#[derive(Debug, Clone, Copy)]
+pub struct AuditSpec {
+    pub method: Method,
+    /// Epsilon target; `None` trains non-privately.
+    pub eps: Option<f64>,
+    pub tier: KernelMode,
+    pub fault: FaultMode,
+    /// Paired membership-inference trainings (0 skips the MI attack).
+    pub trials: usize,
+    pub steps: u64,
+    pub n_train: usize,
+    pub logical_batch: usize,
+    /// Also run the extraction attack (trains one extra, longer model).
+    pub extraction: bool,
+    pub seed: u64,
+}
+
+impl AuditSpec {
+    /// A cell with the default audit-sized training configuration.
+    pub fn cell(method: Method, eps: Option<f64>) -> AuditSpec {
+        AuditSpec {
+            method,
+            eps,
+            tier: KernelMode::Fused,
+            fault: FaultMode::None,
+            trials: 6,
+            steps: 14,
+            n_train: 48,
+            logical_batch: 16,
+            extraction: false,
+            seed: 11,
+        }
+    }
+}
+
+/// Everything the audit measured for one grid cell.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    pub model: String,
+    pub method: String,
+    pub eps_label: String,
+    pub tier: String,
+    pub fault: String,
+    pub private: bool,
+    /// Noise multiplier the plan resolved (0 for non-private cells).
+    pub sigma_claimed: f64,
+    /// Accountant's projected epsilon (infinite for non-private cells).
+    pub claimed_eps: f64,
+    /// Largest epsilon any attack or probe witnessed.
+    pub empirical_eps: f64,
+    /// The audit verdict: empirical exceeds claimed.
+    pub flagged: bool,
+    pub mi: Option<MiOutcome>,
+    pub probes: Option<(NoiseProbe, ClipProbe)>,
+    pub extraction: Option<Extraction>,
+}
+
+fn eps_label(eps: Option<f64>) -> String {
+    match eps {
+        None => "inf".to_string(),
+        Some(e) => format!("eps{e}"),
+    }
+}
+
+/// Epsilon the RDP accountant assigns to the *measured* mechanism
+/// parameters — what a probe-detected fault actually spends.
+fn implied_eps(q: f64, sigma_eff: f64, steps: u64) -> f64 {
+    if sigma_eff < SIGMA_FLOOR {
+        EPS_CAP
+    } else {
+        rdp::epsilon(q, sigma_eff, steps, DELTA).min(EPS_CAP)
+    }
+}
+
+/// Audit one grid cell: train, attack, probe, and compare against the
+/// accountant's claim.
+pub fn run_cell(spec: &AuditSpec) -> Result<CellOutcome, EngineError> {
+    let mut engine =
+        Engine::new(Box::new(InterpreterBackend::with_config(None, Some(spec.tier))));
+    let shape = engine.model_info(MODEL)?.shape;
+    let (t_len, vocab) = (shape.t, shape.vocab);
+    let tok = synth_text::tokenizer(vocab);
+    let canary = synth_text::canaries(1, COMPLETION_LEN, &tok, spec.seed).remove(0);
+
+    let mut builder = JobSpec::builder(MODEL, spec.method)
+        .optim(OptimKind::Adam)
+        .lr(1e-2)
+        .clip_r(0.1)
+        .batch(spec.logical_batch)
+        .steps(spec.steps)
+        .n_train(spec.n_train)
+        .seed(spec.seed);
+    if let Some(e) = spec.eps {
+        builder = builder.eps(e).delta(DELTA);
+    }
+    let base = builder.build()?;
+    let plan = base.plan();
+    let private = base.privacy.is_private();
+    let sigma_claimed = plan.sigma;
+    let claimed_eps = if private { plan.eps_projected } else { f64::INFINITY };
+
+    let mi = if spec.trials > 0 {
+        Some(attack::mi_attack(
+            &mut engine,
+            &base,
+            &canary,
+            t_len,
+            vocab,
+            spec.trials,
+            spec.fault,
+        )?)
+    } else {
+        None
+    };
+
+    let probes = if private && sigma_claimed > 0.0 {
+        let np = probe::noise_probe(
+            &mut engine,
+            MODEL,
+            spec.method,
+            sigma_claimed,
+            spec.fault,
+            spec.seed ^ 0x9B0B,
+        )?;
+        let cp =
+            probe::clip_probe(&mut engine, MODEL, spec.method, spec.fault, spec.seed ^ 0xC11F)?;
+        Some((np, cp))
+    } else {
+        None
+    };
+
+    // clean probes leave the accountant's claim standing; a failed probe
+    // re-runs the accountant on the measured sigma (derated by any excess
+    // gradient mass a broken clipper let through)
+    let implied = match &probes {
+        Some((np, cp)) if !np.ok || !cp.ok => {
+            let mut sigma_eff = if np.ok { sigma_claimed } else { np.sigma_hat };
+            if !cp.ok {
+                sigma_eff /= cp.ratio.max(1.0);
+            }
+            implied_eps(plan.q, sigma_eff, spec.steps)
+        }
+        _ => 0.0,
+    };
+
+    let mi_eps = mi.as_ref().map(|m| m.eps).unwrap_or(0.0);
+    let empirical_eps = mi_eps.max(implied);
+    let flagged =
+        private && claimed_eps.is_finite() && empirical_eps > claimed_eps * (1.0 + 1e-9);
+
+    let extraction = if spec.extraction {
+        let mut xspec = base.clone();
+        xspec.steps = EXTRACT_STEPS;
+        xspec.logical_batch = spec.n_train; // q = 1: every example every step
+        let mut examples =
+            synth_text::pretrain_lm(spec.n_train, t_len, &tok, spec.seed ^ 0x5EC5);
+        synth_text::plant_canaries(
+            &mut examples,
+            t_len,
+            std::slice::from_ref(&canary),
+            CANARY_COPIES,
+            spec.seed,
+        );
+        let data = TaskData::Lm { examples, t: t_len };
+        let params = attack::train_audit_model(&mut engine, &xspec, spec.fault, &data)?;
+        Some(extract::extract_canary(
+            &mut engine,
+            MODEL,
+            &params,
+            &canary,
+            t_len,
+            vocab,
+            spec.seed,
+        )?)
+    } else {
+        None
+    };
+
+    Ok(CellOutcome {
+        model: MODEL.to_string(),
+        method: spec.method.name().to_string(),
+        eps_label: eps_label(spec.eps),
+        tier: spec.tier.name().to_string(),
+        fault: spec.fault.name().to_string(),
+        private,
+        sigma_claimed,
+        claimed_eps,
+        empirical_eps,
+        flagged,
+        mi,
+        probes,
+        extraction,
+    })
+}
+
+/// Audit every cell in order (grids are plain vectors — iteration order,
+/// and therefore the report, is deterministic).
+pub fn run_grid(specs: &[AuditSpec]) -> Result<Vec<CellOutcome>, EngineError> {
+    specs.iter().map(run_cell).collect()
+}
+
+/// The audited epsilon column: tight, moderate, non-private.
+pub fn eps_grid() -> [Option<f64>; 3] {
+    [Some(EPS_LOW), Some(EPS_MID), None]
+}
+
+/// The audited fine-tuning methods: full (ghost clipping), BiTFiT, and
+/// linear probing — the paper's three parameter regimes.
+pub fn method_grid() -> [Method; 3] {
+    [Method::Full { ghost: true }, Method::BiTFiT, Method::LastLayer]
+}
+
+/// Every kernel tier: the guarantee must hold however the step executes.
+pub fn tier_grid() -> [KernelMode; 4] {
+    [KernelMode::Fused, KernelMode::Ghost, KernelMode::Blocked, KernelMode::Simd]
+}
+
+/// The full bench grid: method × epsilon × tier, extraction on the fused
+/// tier only (tiers share the training numerics, so one extraction per
+/// method/eps pair carries the signal).
+pub fn full_grid(trials: usize) -> Vec<AuditSpec> {
+    let mut out = Vec::new();
+    for method in method_grid() {
+        for eps in eps_grid() {
+            for tier in tier_grid() {
+                let mut cell = AuditSpec::cell(method, eps);
+                cell.tier = tier;
+                cell.trials = trials;
+                cell.extraction = tier == KernelMode::Fused;
+                out.push(cell);
+            }
+        }
+    }
+    out
+}
+
+/// Smoke-sized grid for CI: BiTFiT at the tight epsilon and non-private,
+/// fused tier, extraction on both cells.
+pub fn quick_grid(trials: usize) -> Vec<AuditSpec> {
+    [Some(EPS_LOW), None]
+        .into_iter()
+        .map(|eps| {
+            let mut cell = AuditSpec::cell(Method::BiTFiT, eps);
+            cell.trials = trials;
+            cell.extraction = true;
+            cell
+        })
+        .collect()
+}

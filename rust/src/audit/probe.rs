@@ -1,0 +1,137 @@
+//! White-box mechanism probes: recover the noise multiplier and the
+//! clipping bound a `Session` *actually* applied from its parameter
+//! trajectory, without reading any internal state.
+//!
+//! Both probes exploit the SGD update rule `p -= lr * g` with q = 1
+//! sampling (every example in every batch, so paired runs see identical
+//! batches) and one step from the deterministic init:
+//!
+//! * **noise**: two sessions differing only in sigma (claimed vs 0) share
+//!   every pre-noise float, so the parameter difference is exactly
+//!   `-lr * noise / B` — its RMS over the trainable coordinates estimates
+//!   `sigma * R` to well under 1% at ~10k coordinates.
+//! * **clip**: with sigma = 0 the one-step displacement is
+//!   `-lr * sum(clipped per-sample grads) / B`, and Abadi clipping bounds
+//!   that sum's norm by `m * R` (triangle inequality over the m sampled
+//!   rows).  A ratio above 1 is impossible for a correct clipper; raw
+//!   untrained-LM gradients overshoot a small R by orders of magnitude.
+//!
+//! The probes are what catch faults membership inference cannot: at
+//! auditable trial counts a halved sigma shifts scores far less than one
+//! Clopper–Pearson confidence interval, but it halves the probe's
+//! `sigma_hat` exactly.
+
+use crate::dp::fault::FaultMode;
+use crate::engine::{Engine, EngineError, JobSpec, Method, OptimKind};
+
+/// Probe learning rate (any value works; the estimators divide it out).
+const LR: f64 = 0.1;
+/// Examples per probe session (q = 1, so also the logical batch).
+const N_NOISE: usize = 32;
+const N_CLIP: usize = 24;
+/// Clip probe radius: far below an untrained LM's raw per-sample gradient
+/// norm, so disabled clipping is unmissable.
+const R_CLIP: f64 = 0.02;
+/// Tolerances: estimator error is well under 1%, so generous margins keep
+/// every kernel tier and fault mode on the correct side.
+const SIGMA_OK_FRACTION: f64 = 0.7;
+const CLIP_OK_RATIO: f64 = 1.25;
+
+/// Outcome of the noise-recovery probe.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseProbe {
+    pub sigma_claimed: f64,
+    /// RMS-recovered noise multiplier.
+    pub sigma_hat: f64,
+    /// `sigma_hat` within [`SIGMA_OK_FRACTION`] of the claim.
+    pub ok: bool,
+}
+
+/// Outcome of the clipping probe.
+#[derive(Debug, Clone, Copy)]
+pub struct ClipProbe {
+    /// Recovered `|sum of per-sample contributions|`.
+    pub sum_norm: f64,
+    /// The triangle-inequality ceiling `m * R` for a correct clipper.
+    pub bound: f64,
+    /// `sum_norm / bound`; <= 1 (+ float slack) iff clipping is applied.
+    pub ratio: f64,
+    pub ok: bool,
+}
+
+fn probe_spec(
+    model: &str,
+    method: Method,
+    sigma: f64,
+    clip_r: f64,
+    n: usize,
+    seed: u64,
+) -> Result<JobSpec, EngineError> {
+    JobSpec::builder(model, method)
+        .sigma(sigma)
+        .delta(1e-5)
+        .optim(OptimKind::Sgd)
+        .lr(LR)
+        .clip_r(clip_r)
+        .batch(n) // q = 1: both paired sessions sample every example
+        .steps(1)
+        .n_train(n)
+        .seed(seed)
+        .build()
+}
+
+/// Train two one-step sessions that differ only in sigma and recover the
+/// injected noise multiplier from the parameter difference.
+pub fn noise_probe(
+    engine: &mut Engine,
+    model: &str,
+    method: Method,
+    sigma_claimed: f64,
+    fault: FaultMode,
+    seed: u64,
+) -> Result<NoiseProbe, EngineError> {
+    let data = engine.dataset(model, "pretrain-lm", N_NOISE, seed)?;
+    let run = |engine: &mut Engine, sigma: f64| -> Result<(Vec<f32>, usize), EngineError> {
+        let spec = probe_spec(model, method, sigma, 0.1, N_NOISE, seed)?;
+        let mut s = engine.session(&spec)?;
+        s.set_fault(fault);
+        s.run_step(&data)?;
+        Ok((s.full_params(), s.trainable_len()))
+    };
+    let (with_noise, pt) = run(engine, sigma_claimed)?;
+    let (without_noise, _) = run(engine, 0.0)?;
+    // frozen coordinates are bit-identical, so the sum runs over exactly
+    // the pt trainable ones
+    let sum_sq: f64 = with_noise
+        .iter()
+        .zip(&without_noise)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    let sigma_hat = (sum_sq / pt.max(1) as f64).sqrt() * N_NOISE as f64 / (LR * 0.1);
+    let ok = sigma_hat >= SIGMA_OK_FRACTION * sigma_claimed;
+    Ok(NoiseProbe { sigma_claimed, sigma_hat, ok })
+}
+
+/// Train one noiseless one-step session and compare the recovered gradient
+/// sum against the clipper's triangle-inequality ceiling.
+pub fn clip_probe(
+    engine: &mut Engine,
+    model: &str,
+    method: Method,
+    fault: FaultMode,
+    seed: u64,
+) -> Result<ClipProbe, EngineError> {
+    let data = engine.dataset(model, "pretrain-lm", N_CLIP, seed)?;
+    let spec = probe_spec(model, method, 0.0, R_CLIP, N_CLIP, seed)?;
+    let mut s = engine.session(&spec)?;
+    s.set_fault(fault);
+    let before = s.full_params();
+    let stats = s.run_step(&data)?;
+    let after = s.full_params();
+    let sum_sq: f64 =
+        before.iter().zip(&after).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+    let sum_norm = sum_sq.sqrt() * N_CLIP as f64 / LR;
+    let bound = stats.batch as f64 * R_CLIP;
+    let ratio = if bound > 0.0 { sum_norm / bound } else { 0.0 };
+    Ok(ClipProbe { sum_norm, bound, ratio, ok: ratio <= CLIP_OK_RATIO })
+}

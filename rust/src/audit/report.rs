@@ -1,0 +1,183 @@
+//! Render and validate the `BENCH_privacy_audit.json` document.
+//!
+//! One row per grid cell.  JSON has no infinity, so a non-private cell
+//! carries `"private": false` and the sentinel `-1` for `claimed_eps`;
+//! skipped measurements (MI with zero trials, probes on non-private
+//! cells, extraction when not requested) use `-1` sentinels too, so every
+//! row has every key and downstream tooling never branches on presence.
+
+use crate::util::json::{self, Json};
+
+use super::CellOutcome;
+
+/// Render the audit document.  `sweep` identifies the grid configuration
+/// (quick vs full, trial count) exactly as the throughput bench does, so
+/// comparisons only happen between like runs.
+pub fn audit_json(cells: &[CellOutcome], sweep: &str) -> String {
+    let row = |c: &CellOutcome| {
+        let (mi_trials, mi_tp, mi_fp, mi_eps) = match &c.mi {
+            Some(m) => (m.trials as f64, m.tp as f64, m.fp as f64, m.eps),
+            None => (-1.0, -1.0, -1.0, -1.0),
+        };
+        let (sigma_hat, clip_ratio, probes_ok) = match &c.probes {
+            Some((np, cp)) => (np.sigma_hat, cp.ratio, Json::Bool(np.ok && cp.ok)),
+            None => (-1.0, -1.0, Json::Null),
+        };
+        let (x_match, x_rank, x_extracted) = match &c.extraction {
+            Some(e) => (e.match_rate, e.rank as f64, Json::Bool(e.extracted)),
+            None => (-1.0, -1.0, Json::Null),
+        };
+        json::obj(vec![
+            ("model", Json::Str(c.model.clone())),
+            ("method", Json::Str(c.method.clone())),
+            ("eps_label", Json::Str(c.eps_label.clone())),
+            ("tier", Json::Str(c.tier.clone())),
+            ("fault", Json::Str(c.fault.clone())),
+            ("private", Json::Bool(c.private)),
+            (
+                "claimed_eps",
+                Json::Num(if c.claimed_eps.is_finite() { c.claimed_eps } else { -1.0 }),
+            ),
+            ("empirical_eps", Json::Num(c.empirical_eps)),
+            ("flagged", Json::Bool(c.flagged)),
+            ("mi_trials", Json::Num(mi_trials)),
+            ("mi_tp", Json::Num(mi_tp)),
+            ("mi_fp", Json::Num(mi_fp)),
+            ("mi_eps", Json::Num(mi_eps)),
+            ("sigma_claimed", Json::Num(c.sigma_claimed)),
+            ("sigma_hat", Json::Num(sigma_hat)),
+            ("clip_ratio", Json::Num(clip_ratio)),
+            ("probes_ok", probes_ok),
+            ("extract_match_rate", Json::Num(x_match)),
+            ("extract_rank", Json::Num(x_rank)),
+            ("extracted", x_extracted),
+        ])
+    };
+    let doc = json::obj(vec![
+        ("bench", Json::Str("privacy_audit".to_string())),
+        ("created_by", Json::Str("benches/privacy_audit.rs".to_string())),
+        ("sweep", Json::Str(sweep.to_string())),
+        ("alpha", Json::Num(super::bound::ALPHA)),
+        ("rows", Json::Arr(cells.iter().map(row).collect())),
+    ]);
+    json::write(&doc)
+}
+
+/// Validate an emitted `BENCH_privacy_audit.json` document: schema keys
+/// plus the audit's core invariant — an unflagged private row really does
+/// sit at `empirical_eps <= claimed_eps`.
+pub fn validate_audit_json(src: &str) -> Result<(), String> {
+    let v = json::parse(src)?;
+    if v.get("bench").and_then(|b| b.as_str()) != Some("privacy_audit") {
+        return Err("bench field is not \"privacy_audit\"".to_string());
+    }
+    if v.get("sweep").and_then(|s| s.as_str()).is_none() {
+        return Err("missing sweep config string".to_string());
+    }
+    if v.get("alpha").and_then(|a| a.as_f64()).is_none() {
+        return Err("missing numeric field \"alpha\"".to_string());
+    }
+    let rows = v
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| "missing rows array".to_string())?;
+    if rows.is_empty() {
+        return Err("rows array is empty".to_string());
+    }
+    for (i, row) in rows.iter().enumerate() {
+        for key in ["model", "method", "eps_label", "tier", "fault"] {
+            if row.get(key).and_then(|s| s.as_str()).is_none() {
+                return Err(format!("row {i}: missing string field {key:?}"));
+            }
+        }
+        for key in ["private", "flagged"] {
+            if row.get(key).and_then(|b| b.as_bool()).is_none() {
+                return Err(format!("row {i}: missing bool field {key:?}"));
+            }
+        }
+        for key in [
+            "claimed_eps",
+            "empirical_eps",
+            "mi_trials",
+            "mi_tp",
+            "mi_fp",
+            "mi_eps",
+            "sigma_claimed",
+            "sigma_hat",
+            "clip_ratio",
+            "extract_match_rate",
+            "extract_rank",
+        ] {
+            if row.get(key).and_then(|n| n.as_f64()).is_none() {
+                return Err(format!("row {i}: missing numeric field {key:?}"));
+            }
+        }
+        for key in ["probes_ok", "extracted"] {
+            match row.get(key) {
+                Some(Json::Bool(_)) | Some(Json::Null) => {}
+                _ => return Err(format!("row {i}: field {key:?} must be bool or null")),
+            }
+        }
+        let private = row.get("private").and_then(|b| b.as_bool()).unwrap_or(false);
+        let flagged = row.get("flagged").and_then(|b| b.as_bool()).unwrap_or(false);
+        let claimed = row.get("claimed_eps").and_then(|n| n.as_f64()).unwrap_or(-1.0);
+        let empirical = row.get("empirical_eps").and_then(|n| n.as_f64()).unwrap_or(0.0);
+        if private && !flagged && claimed >= 0.0 && empirical > claimed {
+            return Err(format!(
+                "row {i}: empirical eps {empirical} exceeds claimed {claimed} but is not flagged"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{attack::MiOutcome, CellOutcome};
+    use super::*;
+
+    fn cell(private: bool, claimed: f64, empirical: f64, flagged: bool) -> CellOutcome {
+        CellOutcome {
+            model: "lm-small".to_string(),
+            method: "bitfit".to_string(),
+            eps_label: if private { "low" } else { "inf" }.to_string(),
+            tier: "fused".to_string(),
+            fault: "none".to_string(),
+            private,
+            sigma_claimed: if private { 1.5 } else { 0.0 },
+            claimed_eps: claimed,
+            empirical_eps: empirical,
+            flagged,
+            mi: Some(MiOutcome { trials: 6, tp: 4, fp: 1, eps: empirical }),
+            probes: None,
+            extraction: None,
+        }
+    }
+
+    #[test]
+    fn roundtrip_validates() {
+        let cells =
+            [cell(true, 0.7, 0.2, false), cell(false, f64::INFINITY, 3.0, false)];
+        let doc = audit_json(&cells, "test-sweep");
+        validate_audit_json(&doc).expect("clean document must validate");
+        // the sentinel survives the roundtrip
+        let v = json::parse(&doc).unwrap();
+        let rows = v.get("rows").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rows[1].get("claimed_eps").and_then(|n| n.as_f64()), Some(-1.0));
+        assert_eq!(rows[1].get("probes_ok"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn validator_rejects_broken_documents() {
+        assert!(validate_audit_json("{}").is_err());
+        let wrong = audit_json(&[cell(true, 0.7, 0.2, false)], "s")
+            .replace("privacy_audit", "step_throughput");
+        assert!(validate_audit_json(&wrong).is_err());
+        // an unflagged violation of the core invariant must not validate
+        let bad = audit_json(&[cell(true, 0.7, 2.0, false)], "s");
+        assert!(validate_audit_json(&bad).is_err());
+        // the same cell, flagged, is a legitimate fault report
+        let flagged = audit_json(&[cell(true, 0.7, 2.0, true)], "s");
+        assert!(validate_audit_json(&flagged).is_ok());
+    }
+}

@@ -39,6 +39,9 @@ const USAGE: &str = "usage: fastdp <train|eval|accountant|zoo|complexity|artifac
   artifacts  [--artifacts DIR] [--backend auto|pjrt|interp]";
 
 pub fn main() -> Result<()> {
+    // production refusal: a stray FASTDP_FAULT must be loud and inert —
+    // only the audit harness may weaken the DP mechanism, never the CLI
+    crate::dp::fault::refuse_outside_audit();
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),

@@ -367,8 +367,111 @@ pub fn e2e(n: usize, t_len: usize, tok: &Tokenizer, seed: u64) -> Vec<GenExample
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// canaries (privacy-audit secrets; see `crate::audit`)
+// ---------------------------------------------------------------------
+
+/// A planted canary: a trigger prompt plus a secret completion.
+///
+/// The trigger is one restaurant name repeated three times — a trigram no
+/// clean generator can emit (names appear at most once per sentence), so
+/// canaries are disjoint from the clean split by construction.  The secret
+/// is a seeded random word sequence; both parts use word-bank ids only
+/// (`>= FIRST_WORD`, within the LM vocab), so tokenizer round-trips are
+/// exact and artifact vocab bounds hold.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Canary {
+    /// Trigger ids (one NAME id repeated three times).
+    pub prompt: Vec<i32>,
+    /// Secret ids the attack tries to extract.
+    pub completion: Vec<i32>,
+}
+
+impl Canary {
+    /// The full LM token sequence: `prompt ++ SEP ++ completion ++ EOS`.
+    pub fn sequence(&self) -> Vec<i32> {
+        let mut ids = self.prompt.clone();
+        ids.push(SEP);
+        ids.extend_from_slice(&self.completion);
+        ids.push(EOS);
+        ids
+    }
+
+    /// Length of the prompt region including the SEP (the first supervised
+    /// prediction sits at the SEP position, as in [`e2e`]).
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len() + 1
+    }
+
+    /// The canary as a next-token training example at `t_len` (targets
+    /// supervise the completion region only, mirroring [`e2e`]).
+    pub fn lm_example(&self, t_len: usize) -> LmExample {
+        let mut ids = self.sequence();
+        ids.truncate(t_len + 1);
+        let prompt_len = self.prompt_len();
+        let mut input = ids.clone();
+        input.truncate(t_len);
+        while input.len() < t_len {
+            input.push(0);
+        }
+        let mut target = vec![0i32; t_len];
+        for i in 0..t_len {
+            if i + 1 >= prompt_len && i + 1 < ids.len() {
+                target[i] = ids[i + 1];
+            }
+        }
+        LmExample { input, target }
+    }
+}
+
+/// Generate `k` canaries with `completion_len`-word secrets, deterministic
+/// under `seed`.  Triggers use distinct names (k capped at the name-bank
+/// size for distinctness); secrets draw from the full word bank.
+pub fn canaries(k: usize, completion_len: usize, tok: &Tokenizer, seed: u64) -> Vec<Canary> {
+    assert!(k <= NAMES.len(), "at most {} distinct canary triggers", NAMES.len());
+    let mut rng = ChaChaRng::new(seed, 0xCA9A);
+    let mut name_order: Vec<usize> = (0..NAMES.len()).collect();
+    rng.shuffle(&mut name_order);
+    let bank = word_bank();
+    (0..k)
+        .map(|c| {
+            let name_id = tok.encode_word(NAMES[name_order[c]]);
+            let completion =
+                (0..completion_len).map(|_| tok.encode_word(pick(&mut rng, &bank))).collect();
+            Canary { prompt: vec![name_id; 3], completion }
+        })
+        .collect()
+}
+
+/// Replace `copies` seeded-chosen examples per canary with canary training
+/// rows (dataset length is preserved — `Session::run_step` requires
+/// `len == n_train`).  Returns the replaced indices, grouped per canary in
+/// assignment order.  Deterministic under `seed`; requires enough examples
+/// to host every copy at a distinct slot.
+pub fn plant_canaries(
+    examples: &mut [LmExample],
+    t_len: usize,
+    cs: &[Canary],
+    copies: usize,
+    seed: u64,
+) -> Vec<usize> {
+    let need = cs.len() * copies;
+    assert!(need <= examples.len(), "{need} canary slots into {} examples", examples.len());
+    let mut rng = ChaChaRng::new(seed, 0x91A47);
+    let mut slots: Vec<usize> = (0..examples.len()).collect();
+    rng.shuffle(&mut slots);
+    slots.truncate(need);
+    for (c, canary) in cs.iter().enumerate() {
+        for &slot in &slots[c * copies..(c + 1) * copies] {
+            examples[slot] = canary.lm_example(t_len);
+        }
+    }
+    slots
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::tokenizer::FIRST_WORD;
     use super::*;
 
     fn tok() -> Tokenizer {
@@ -471,5 +574,108 @@ mod tests {
         for r in mr.references() {
             assert!(r.contains(NAMES[0]) && r.contains(FOODS[1]));
         }
+    }
+
+    #[test]
+    fn canaries_are_deterministic_and_vocab_bounded() {
+        let t = tok();
+        let a = canaries(3, 6, &t, 7);
+        let b = canaries(3, 6, &t, 7);
+        let c = canaries(3, 6, &t, 8);
+        assert_eq!(a, b, "same seed must yield the same canaries");
+        assert_ne!(a, c, "different seeds must yield different secrets");
+        // distinct triggers, all ids real words within the LM vocab
+        assert_ne!(a[0].prompt, a[1].prompt);
+        assert_ne!(a[1].prompt, a[2].prompt);
+        for cn in &a {
+            assert_eq!(cn.prompt.len(), 3);
+            assert_eq!(cn.prompt[0], cn.prompt[1]);
+            assert_eq!(cn.prompt[1], cn.prompt[2]);
+            assert_eq!(cn.completion.len(), 6);
+            for &id in cn.prompt.iter().chain(&cn.completion) {
+                assert!(id >= FIRST_WORD && id < 384, "id {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn canary_tokenizer_roundtrip() {
+        let t = tok();
+        for cn in canaries(4, 5, &t, 11) {
+            // word-only regions decode and re-encode exactly
+            assert_eq!(t.encode(&t.decode(&cn.prompt)), cn.prompt);
+            assert_eq!(t.encode(&t.decode(&cn.completion)), cn.completion);
+            // the full sequence keeps only SEP/EOS as non-word ids
+            for &id in &cn.sequence() {
+                assert!(id == SEP || id == EOS || id >= FIRST_WORD);
+            }
+        }
+    }
+
+    #[test]
+    fn canaries_are_disjoint_from_clean_split() {
+        let t = tok();
+        let cs = canaries(2, 6, &t, 3);
+        let clean = pretrain_lm(300, 48, &t, 5);
+        for cn in &cs {
+            let trigger = &cn.prompt; // a name repeated 3x — never generated
+            for e in &clean {
+                assert!(
+                    !e.input.windows(trigger.len()).any(|w| w == trigger.as_slice()),
+                    "clean split contains canary trigger"
+                );
+                assert!(
+                    !e.input
+                        .windows(cn.completion.len())
+                        .any(|w| w == cn.completion.as_slice()),
+                    "clean split contains canary secret"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plant_canaries_is_seeded_and_length_preserving() {
+        let t = tok();
+        let cs = canaries(2, 6, &t, 3);
+        let mut a = pretrain_lm(40, 48, &t, 5);
+        let mut b = pretrain_lm(40, 48, &t, 5);
+        let slots_a = plant_canaries(&mut a, 48, &cs, 3, 9);
+        let slots_b = plant_canaries(&mut b, 48, &cs, 3, 9);
+        assert_eq!(slots_a, slots_b, "same seed must pick the same slots");
+        assert_eq!(slots_a.len(), 6);
+        assert_eq!(a.len(), 40, "planting must preserve dataset length");
+        let mut sorted = slots_a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6, "slots must be distinct");
+        // canary 0 occupies the first `copies` slots, canary 1 the rest
+        for (i, &slot) in slots_a.iter().enumerate() {
+            let want = cs[i / 3].lm_example(48);
+            assert_eq!(a[slot].input, want.input);
+            assert_eq!(a[slot].target, want.target);
+        }
+        // shapes stay artifact-compatible
+        for e in &a {
+            assert_eq!(e.input.len(), 48);
+            assert_eq!(e.target.len(), 48);
+            assert!(e.input.iter().all(|&x| (0..384).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn canary_lm_example_supervises_completion_only() {
+        let t = tok();
+        let cn = &canaries(1, 6, &t, 2)[0];
+        let e = cn.lm_example(48);
+        let ids = cn.sequence();
+        for i in 0..cn.prompt_len().saturating_sub(1) {
+            assert_eq!(e.target[i], 0, "target before completion");
+        }
+        // supervised region reproduces the secret then EOS
+        for (i, &id) in ids.iter().enumerate().skip(cn.prompt_len()) {
+            assert_eq!(e.target[i - 1], id);
+        }
+        assert!(e.target.iter().filter(|&&x| x != 0).count() >= cn.completion.len());
     }
 }

@@ -1,0 +1,144 @@
+//! Test-only DP fault injection: the mutations the privacy auditor must
+//! catch.
+//!
+//! An empirical audit ([`crate::audit`]) is only trustworthy if it can
+//! *fail*: each [`FaultMode`] silently breaks one link of the DP mechanism
+//! (skip the Gaussian noise, skip per-sample clipping, halve sigma) while
+//! the accountant keeps claiming the unbroken guarantee — exactly the bug
+//! class no unit test on the accountant's math can see.  The audit
+//! mutation tests (`tests/privacy_audit.rs`) arm each mode and assert the
+//! empirical epsilon blows past the claim.
+//!
+//! Faults are armed **programmatically** through the hidden
+//! `Session::set_fault` hook; the `FASTDP_FAULT` environment knob is read
+//! only by the audit harness ([`from_env`], used by
+//! `benches/privacy_audit.rs` for manual fault experiments).  Production
+//! entry points refuse the knob loudly ([`refuse_outside_audit`]): a
+//! deployed training run can never have its mechanism silently weakened
+//! from the environment.
+
+use crate::runtime::env;
+
+/// A deliberate break of the DP mechanism (mutation under audit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultMode {
+    /// No fault: the mechanism runs as specified.
+    #[default]
+    None,
+    /// Silently skip the Gaussian noise addition (Alg. 1 line 10 removed);
+    /// the accountant still records the full sigma.
+    SkipNoise,
+    /// Silently disable per-sample clipping by inflating the clip radius
+    /// handed to the kernels by 1e6 (Abadi clipping then scales by ~1, i.e.
+    /// gradients pass through unclipped); noise and accounting still use
+    /// the spec's radius.
+    SkipClip,
+    /// Silently halve the noise multiplier actually applied; the
+    /// accountant still records the full sigma.
+    HalfSigma,
+}
+
+impl FaultMode {
+    /// Parse a `FASTDP_FAULT` value (`none|skip-noise|skip-clip|half-sigma`).
+    pub fn parse(s: &str) -> Option<FaultMode> {
+        match s {
+            "none" => Some(FaultMode::None),
+            "skip-noise" => Some(FaultMode::SkipNoise),
+            "skip-clip" => Some(FaultMode::SkipClip),
+            "half-sigma" => Some(FaultMode::HalfSigma),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultMode::None => "none",
+            FaultMode::SkipNoise => "skip-noise",
+            FaultMode::SkipClip => "skip-clip",
+            FaultMode::HalfSigma => "half-sigma",
+        }
+    }
+
+    /// The noise multiplier actually applied under this fault.
+    pub fn effective_sigma(&self, sigma: f64) -> f64 {
+        match self {
+            FaultMode::SkipNoise => 0.0,
+            FaultMode::HalfSigma => 0.5 * sigma,
+            _ => sigma,
+        }
+    }
+
+    /// The clip radius handed to the kernels under this fault.
+    pub fn effective_clip_r(&self, clip_r: f64) -> f64 {
+        match self {
+            // large enough that Abadi's min(R/norm, 1) factor is always 1
+            FaultMode::SkipClip => clip_r * 1e6,
+            _ => clip_r,
+        }
+    }
+
+    /// Every injectable fault (the audit mutation-test matrix).
+    pub fn all_faults() -> [FaultMode; 3] {
+        [FaultMode::SkipNoise, FaultMode::SkipClip, FaultMode::HalfSigma]
+    }
+}
+
+/// Read `FASTDP_FAULT` for the audit harness, warn-once on an invalid
+/// value (falls back to no fault).  Only the audit harness may honor the
+/// result; see [`refuse_outside_audit`].
+pub fn from_env() -> FaultMode {
+    match env::fault() {
+        None => FaultMode::None,
+        Some(s) => match FaultMode::parse(s.trim()) {
+            Some(m) => m,
+            None => {
+                env::warn_invalid(&env::FAULT, &s);
+                FaultMode::None
+            }
+        },
+    }
+}
+
+/// Production refusal: warn (once, via the registry's warn path) and
+/// report whether the knob was set.  Called by non-audit entry points
+/// (the CLI) so a stray `FASTDP_FAULT` in the environment is loud and
+/// inert instead of silently weakening the mechanism.
+pub fn refuse_outside_audit() -> bool {
+    if env::fault().is_some() {
+        eprintln!(
+            "fastdp: FASTDP_FAULT is refused outside the audit harness \
+             (benches/privacy_audit.rs, tests); ignoring"
+        );
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [
+            FaultMode::None,
+            FaultMode::SkipNoise,
+            FaultMode::SkipClip,
+            FaultMode::HalfSigma,
+        ] {
+            assert_eq!(FaultMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(FaultMode::parse("banana"), None);
+    }
+
+    #[test]
+    fn effective_values() {
+        assert_eq!(FaultMode::None.effective_sigma(2.0), 2.0);
+        assert_eq!(FaultMode::SkipNoise.effective_sigma(2.0), 0.0);
+        assert_eq!(FaultMode::HalfSigma.effective_sigma(2.0), 1.0);
+        assert_eq!(FaultMode::SkipClip.effective_sigma(2.0), 2.0);
+        assert_eq!(FaultMode::None.effective_clip_r(0.1), 0.1);
+        assert!(FaultMode::SkipClip.effective_clip_r(0.1) > 1e4);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod calibrate;
 pub mod clip;
+pub mod fault;
 pub mod gdp;
 pub mod rdp;
 pub mod sampler;

@@ -33,6 +33,7 @@ use crate::coordinator::distributed::{CommStats, ReplicaGroup};
 use crate::coordinator::metrics::JsonlSink;
 use crate::coordinator::optim::Optimizer;
 use crate::coordinator::task_data::TaskData;
+use crate::dp::fault::FaultMode;
 use crate::dp::rdp::RdpAccountant;
 use crate::dp::sampler::PoissonSampler;
 use crate::runtime::{ArtifactMeta, Layout};
@@ -130,6 +131,9 @@ pub struct Session {
     sigma: f64,
     q: f64,
     step: u64,
+    /// Injected DP fault ([`FaultMode::None`] outside the audit harness);
+    /// armed only through [`Session::set_fault`].
+    fault: FaultMode,
     pub timers: Timers,
 }
 
@@ -188,6 +192,7 @@ impl Session {
             sigma,
             q,
             step: 0,
+            fault: FaultMode::None,
             timers: Timers::new(),
             phases,
             spec,
@@ -273,6 +278,24 @@ impl Session {
     /// Is this a DP run (noise + Poisson sampling + accounting)?
     pub fn is_dp(&self) -> bool {
         self.sampler.is_some()
+    }
+
+    /// Arm a deliberate DP fault (audit-harness mutation testing ONLY).
+    ///
+    /// The fault silently weakens the mechanism — skipped noise, disabled
+    /// clipping, halved sigma — while the accountant keeps claiming the
+    /// unbroken guarantee; `crate::audit` must detect the gap
+    /// (`tests/privacy_audit.rs` asserts it does for every mode).  Never
+    /// reachable from the environment in production: the `FASTDP_FAULT`
+    /// knob is honored only by the audit harness and refused by the CLI
+    /// (`dp::fault::refuse_outside_audit`).
+    #[doc(hidden)]
+    pub fn set_fault(&mut self, fault: FaultMode) {
+        self.fault = fault;
+        // SkipClip works by handing the kernels an inflated radius (the
+        // Abadi min(R/norm, 1) factor becomes 1, i.e. no clipping); noise
+        // and accounting keep the spec's radius, like a real bug would.
+        self.clip_r_t = Tensor::scalar_f32(fault.effective_clip_r(self.spec.clip_r) as f32);
     }
 
     /// Steps taken so far.
@@ -394,10 +417,12 @@ impl Session {
         } else {
             idxs.len().max(1) as f64
         };
-        if self.is_dp() && self.sigma > 0.0 {
+        if self.is_dp() && self.sigma > 0.0 && self.fault != FaultMode::SkipNoise {
+            // an armed fault may weaken sigma here; the accountant below
+            // still records the full spec sigma (the injected bug)
             crate::dp::add_gaussian_noise(
                 &mut grad,
-                self.sigma,
+                self.fault.effective_sigma(self.sigma),
                 self.spec.clip_r,
                 &mut self.noise_rng,
             );

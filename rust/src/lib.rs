@@ -76,7 +76,15 @@
 //!   sums reduced in fixed replica order (bit-identical for any replica
 //!   count) and the communication volume measured on the wire (§3.1).
 //! * [`dp`] — the differential-privacy substrate: RDP/GDP accountants,
-//!   noise calibration, clipping functions, Poisson sampler.
+//!   noise calibration, clipping functions, Poisson sampler, and the
+//!   test-only [`dp::fault`] injection switch the audit harness uses to
+//!   prove it catches broken mechanisms (`FASTDP_FAULT`; refused by the
+//!   CLI).
+//! * [`audit`] — empirical privacy auditing: canary planting, membership
+//!   inference on paired trainings, secret extraction via greedy decode +
+//!   exposure rank, white-box sigma/clip probes, and exact
+//!   Clopper–Pearson epsilon witnesses — every claim the accountant makes
+//!   is attacked end-to-end and reported in `BENCH_privacy_audit.json`.
 //! * [`data`] — synthetic workload generators (GLUE/E2E/CIFAR/CelebA analogs).
 //! * [`models`] — model zoo parameter-count formulas (paper Tables 1 & 11).
 //! * [`analysis`] — per-layer time/space complexity (paper Tables 2 & 7).
@@ -92,6 +100,7 @@
 //! as a ci.sh stage.  See the repository README, "Static analysis".
 
 pub mod analysis;
+pub mod audit;
 pub mod bench;
 pub mod coordinator;
 pub mod data;

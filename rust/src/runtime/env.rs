@@ -104,6 +104,27 @@ pub const BENCH_BASELINE: Knob = Knob {
     doc: "baseline snapshot the throughput regression gate compares against",
 };
 
+pub const FAULT: Knob = Knob {
+    name: "FASTDP_FAULT",
+    expected: "none|skip-noise|skip-clip|half-sigma",
+    fallback: "none",
+    doc: "DP fault injection for the audit harness; refused by the CLI",
+};
+
+pub const AUDIT_TRIALS: Knob = Knob {
+    name: "FASTDP_AUDIT_TRIALS",
+    expected: "integer >= 1",
+    fallback: "8",
+    doc: "paired membership-inference trials per privacy-audit cell",
+};
+
+pub const AUDIT_OUT: Knob = Knob {
+    name: "FASTDP_AUDIT_OUT",
+    expected: "file path",
+    fallback: "BENCH_privacy_audit.json at the repo root",
+    doc: "output path override for the privacy-audit bench document",
+};
+
 /// Every knob the crate reads, in README table order.
 pub const REGISTRY: &[&Knob] = &[
     &THREADS,
@@ -117,6 +138,9 @@ pub const REGISTRY: &[&Knob] = &[
     &BENCH_BLOCKS,
     &BENCH_OUT,
     &BENCH_BASELINE,
+    &FAULT,
+    &AUDIT_TRIALS,
+    &AUDIT_OUT,
 ];
 
 /// The raw environment read — the single `std::env::var` chokepoint for
@@ -231,6 +255,25 @@ pub fn bench_out() -> Option<String> {
 /// `FASTDP_BENCH_BASELINE`: gate baseline path (empty counts as unset).
 pub fn bench_baseline() -> Option<String> {
     raw(&BENCH_BASELINE).filter(|p| !p.trim().is_empty())
+}
+
+/// `FASTDP_FAULT`: the raw fault name, if set.  Parsing (and the
+/// warn-once fallback via [`warn_invalid`]) stays with
+/// `dp::fault::FaultMode::parse` so the fault vocabulary lives in one
+/// place; non-audit entry points refuse the knob entirely
+/// (`dp::fault::refuse_outside_audit`).
+pub fn fault() -> Option<String> {
+    raw(&FAULT)
+}
+
+/// `FASTDP_AUDIT_TRIALS`: MI trials per privacy-audit cell (>= 1).
+pub fn audit_trials() -> Option<usize> {
+    parsed(&AUDIT_TRIALS, positive)
+}
+
+/// `FASTDP_AUDIT_OUT`: output path override (empty counts as unset).
+pub fn audit_out() -> Option<String> {
+    raw(&AUDIT_OUT).filter(|p| !p.trim().is_empty())
 }
 
 #[cfg(test)]

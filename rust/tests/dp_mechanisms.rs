@@ -9,8 +9,10 @@
 //! a broken sampler loop, and a seeded ChaCha stream lands inside them
 //! reproducibly.
 
+use fastdp::dp::add_gaussian_noise;
 use fastdp::dp::clip::{clip_factor, clip_in_place, ClipMode, AUTO_S_STABILIZER};
 use fastdp::dp::sampler::PoissonSampler;
+use fastdp::engine::{Engine, JobSpec, Method, OptimKind};
 use fastdp::util::rng::ChaChaRng;
 
 #[test]
@@ -135,4 +137,153 @@ fn auto_s_never_promises_identity_but_always_bounds_sensitivity() {
         let c = clip_factor(sq, 1.0, ClipMode::AutoS);
         assert!(c * sq.sqrt() <= 1.0 + 1e-9, "sq={sq}");
     }
+}
+
+// -------------------------------------------------------------------------
+// the Gaussian mechanism itself: the noise added to the clipped sum must
+// actually be N(0, (sigma * R)^2) per coordinate, independent across
+// coordinates — the accountant's epsilon is *for that distribution*
+// -------------------------------------------------------------------------
+
+#[test]
+fn gaussian_noise_mean_and_variance_sit_in_the_four_sigma_band() {
+    let n = 200_000usize;
+    let (sigma, clip_r) = (2.0f64, 0.5f64); // sigma * R = 1: unit noise std
+    let mut g = vec![0.0f32; n];
+    let mut rng = ChaChaRng::new(99, 0x6A55);
+    add_gaussian_noise(&mut g, sigma, clip_r, &mut rng);
+
+    let mean = g.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    // mean of n unit-variance draws has std 1/sqrt(n)
+    let mean_band = 4.0 / (n as f64).sqrt();
+    assert!(mean.abs() <= mean_band, "noise mean {mean} outside +-{mean_band:.2e}");
+
+    let var = g.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+    // sample variance of gaussians has std sqrt(2/(n-1)) around 1
+    let var_band = 4.0 * (2.0 / (n - 1) as f64).sqrt();
+    assert!(
+        (var - 1.0).abs() <= var_band,
+        "noise variance {var} outside 1 +- {var_band:.2e}"
+    );
+
+    // excess kurtosis pins the *shape*: 0 for a gaussian, 4-sigma band
+    // with std sqrt(24/n) — a uniform (-1.2) or laplace (+3) would fail
+    let m4 = g.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>() / n as f64;
+    let kurt = m4 / (var * var) - 3.0;
+    let kurt_band = 4.0 * (24.0 / n as f64).sqrt();
+    assert!(kurt.abs() <= kurt_band, "excess kurtosis {kurt} outside +-{kurt_band:.2e}");
+}
+
+#[test]
+fn gaussian_noise_is_independent_across_coordinates() {
+    // lag-1 autocorrelation of independent draws is ~N(0, 1/n); a stuck
+    // or block-repeating generator correlates adjacent coordinates
+    let n = 200_000usize;
+    let mut g = vec![0.0f32; n];
+    let mut rng = ChaChaRng::new(7, 0x6A55);
+    add_gaussian_noise(&mut g, 1.0, 1.0, &mut rng);
+    let mean = g.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let var = g.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+    let lag1 = g
+        .windows(2)
+        .map(|w| (w[0] as f64 - mean) * (w[1] as f64 - mean))
+        .sum::<f64>()
+        / ((n - 1) as f64 * var);
+    let band = 4.0 / (n as f64).sqrt();
+    assert!(lag1.abs() <= band, "lag-1 autocorrelation {lag1} outside +-{band:.2e}");
+}
+
+#[test]
+fn gaussian_noise_scales_with_sigma_times_r_and_zero_sigma_is_exact() {
+    let n = 50_000usize;
+    let mut a = vec![0.0f32; n];
+    let mut b = vec![0.0f32; n];
+    let mut ra = ChaChaRng::new(5, 0x6A55);
+    let mut rb = ChaChaRng::new(5, 0x6A55);
+    add_gaussian_noise(&mut a, 1.0, 0.2, &mut ra);
+    add_gaussian_noise(&mut b, 4.0, 0.2, &mut rb);
+    let rms = |v: &[f32]| {
+        (v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64).sqrt()
+    };
+    let ratio = rms(&b) / rms(&a);
+    assert!((ratio - 4.0).abs() < 0.2, "quadrupling sigma scaled RMS by {ratio}");
+
+    // sigma = 0 must be the exact identity (non-private runs add nothing,
+    // not even a rounding step)
+    let g0: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+    let mut g = g0.clone();
+    add_gaussian_noise(&mut g, 0.0, 0.5, &mut ChaChaRng::new(1, 0x6A55));
+    assert_eq!(g, g0);
+}
+
+// -------------------------------------------------------------------------
+// the noise stream inside a real session: seeded, deterministic, and
+// bit-stable across snapshot/resume (the audit's paired trainings depend
+// on exact same-seed reproducibility)
+// -------------------------------------------------------------------------
+
+fn noisy_spec(seed: u64, steps: u64) -> JobSpec {
+    JobSpec::builder("cls-base", Method::BiTFiT)
+        .sigma(1.0)
+        .delta(1e-5)
+        .optim(OptimKind::Sgd)
+        .lr(0.05)
+        .clip_r(0.1)
+        .batch(8)
+        .steps(steps)
+        .n_train(32)
+        .seed(seed)
+        .build()
+        .expect("valid spec")
+}
+
+fn bits_of(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|p| p.to_bits()).collect()
+}
+
+#[test]
+fn session_noise_stream_is_seed_deterministic() {
+    let run = |seed: u64| {
+        let mut engine = Engine::interpreter();
+        let spec = noisy_spec(seed, 4);
+        let data = engine.dataset(&spec.model, "sst2", spec.n_train, 3).unwrap();
+        let mut s = engine.session(&spec).unwrap();
+        for _ in 0..spec.steps {
+            s.run_step(&data).unwrap();
+        }
+        bits_of(&s.full_params())
+    };
+    assert_eq!(run(21), run(21), "same seed must reproduce noise bit-for-bit");
+    assert_ne!(run(21), run(22), "different seeds must draw different noise");
+}
+
+#[test]
+fn session_noise_stream_survives_save_resume_bit_exactly() {
+    let path = std::env::temp_dir()
+        .join(format!("fastdp-dp-mech-resume-{}.ckpt", std::process::id()));
+    let spec = noisy_spec(13, 6);
+
+    // straight-through run
+    let mut engine = Engine::interpreter();
+    let data = engine.dataset(&spec.model, "sst2", spec.n_train, 3).unwrap();
+    let mut s = engine.session(&spec).unwrap();
+    for _ in 0..3 {
+        s.run_step(&data).unwrap();
+    }
+    s.save_state(&path).unwrap();
+    for _ in 3..6 {
+        s.run_step(&data).unwrap();
+    }
+    let straight = bits_of(&s.full_params());
+
+    // resumed run must continue the noise stream exactly where it left off
+    let mut engine2 = Engine::interpreter();
+    let mut r = engine2.resume_session(&spec, &path).unwrap();
+    for _ in 3..6 {
+        r.run_step(&data).unwrap();
+    }
+    let resumed = bits_of(&r.full_params());
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(straight, resumed, "resume must not fork the noise stream");
 }

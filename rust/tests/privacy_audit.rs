@@ -1,0 +1,137 @@
+//! End-to-end privacy audit gate (tier 1).
+//!
+//! Attacks real engine trainings and holds the accountant to its claim:
+//!
+//! * clean DP cells must come out **unflagged** — no attack or probe may
+//!   witness more epsilon than the accountant claims;
+//! * the non-private column must **memorise** its planted canary
+//!   (verbatim greedy extraction) while the DP column must not — the
+//!   audit has teeth only if the attack works when privacy is off;
+//! * every `FaultMode` mutation of the mechanism must be **flagged** —
+//!   the auditor is itself audited against known-broken mechanisms.
+
+use fastdp::audit::{self, report, AuditSpec, EPS_LOW, EPS_MID};
+use fastdp::dp::fault::FaultMode;
+use fastdp::engine::Method;
+
+#[test]
+fn clean_cells_stay_within_the_accountants_claim() {
+    let mut cells = vec![
+        AuditSpec::cell(Method::BiTFiT, Some(EPS_LOW)),
+        AuditSpec::cell(Method::Full { ghost: true }, Some(EPS_MID)),
+    ];
+    for cell in &mut cells {
+        cell.trials = 6;
+    }
+    for outcome in audit::run_grid(&cells).expect("clean audit cells must run") {
+        assert!(outcome.private, "{}: cell should be private", outcome.method);
+        assert!(
+            outcome.claimed_eps.is_finite() && outcome.claimed_eps > 0.0,
+            "{}: accountant claimed eps {}",
+            outcome.method,
+            outcome.claimed_eps
+        );
+        assert!(
+            outcome.empirical_eps <= outcome.claimed_eps,
+            "{}: empirical eps {} exceeds claimed {}",
+            outcome.method,
+            outcome.empirical_eps,
+            outcome.claimed_eps
+        );
+        assert!(!outcome.flagged, "{}: clean cell flagged", outcome.method);
+        let mi = outcome.mi.expect("MI ran");
+        assert_eq!(mi.trials, 6);
+        let (noise, clip) = outcome.probes.expect("probes ran on a private cell");
+        assert!(
+            noise.ok,
+            "{}: noise probe recovered sigma {} of claimed {}",
+            outcome.method, noise.sigma_hat, noise.sigma_claimed
+        );
+        assert!(
+            clip.ok,
+            "{}: clip probe ratio {} (sum {} vs bound {})",
+            outcome.method, clip.ratio, clip.sum_norm, clip.bound
+        );
+    }
+}
+
+#[test]
+fn nondp_training_memorises_the_canary_and_dp_does_not() {
+    let mut nondp = AuditSpec::cell(Method::Full { ghost: true }, None);
+    let mut dp = AuditSpec::cell(Method::Full { ghost: true }, Some(EPS_LOW));
+    for cell in [&mut nondp, &mut dp] {
+        cell.trials = 0; // extraction only: no paired MI trainings
+        cell.extraction = true;
+    }
+
+    let leaked = audit::run_cell(&nondp).expect("non-private cell runs");
+    let guarded = audit::run_cell(&dp).expect("DP cell runs");
+
+    let x = leaked.extraction.expect("extraction ran");
+    assert_eq!(x.rank, 1, "true secret must outrank every decoy, got rank {}", x.rank);
+    assert!(
+        x.match_rate >= 0.5,
+        "greedy decode reproduced only {:.0}% of the secret",
+        100.0 * x.match_rate
+    );
+    assert!(x.extracted, "non-private training must leak its canary");
+    assert!(!leaked.flagged, "a non-private cell makes no claim to violate");
+
+    let g = guarded.extraction.expect("extraction ran");
+    assert!(
+        !g.extracted,
+        "DP training leaked its canary (rank {}, match {})",
+        g.rank, g.match_rate
+    );
+    assert!(
+        g.match_rate < x.match_rate,
+        "DP match rate {} not below non-private {}",
+        g.match_rate,
+        x.match_rate
+    );
+    assert!(!guarded.flagged, "clean DP cell flagged");
+}
+
+#[test]
+fn every_fault_mode_is_flagged() {
+    for fault in [FaultMode::SkipNoise, FaultMode::SkipClip, FaultMode::HalfSigma] {
+        let mut cell = AuditSpec::cell(Method::BiTFiT, Some(EPS_LOW));
+        cell.trials = 0; // the probes are the detector at test-sized budgets
+        cell.fault = fault;
+        let outcome = audit::run_cell(&cell).expect("faulted cell still runs");
+        assert!(
+            outcome.flagged,
+            "{}: broken mechanism not flagged (empirical {} vs claimed {})",
+            fault.name(),
+            outcome.empirical_eps,
+            outcome.claimed_eps
+        );
+        assert!(
+            outcome.empirical_eps > outcome.claimed_eps,
+            "{}: flag without an epsilon excess",
+            fault.name()
+        );
+        let (noise, clip) = outcome.probes.expect("probes ran");
+        assert!(
+            !noise.ok || !clip.ok,
+            "{}: no probe caught the fault (sigma_hat {}, clip ratio {})",
+            fault.name(),
+            noise.sigma_hat,
+            clip.ratio
+        );
+    }
+}
+
+#[test]
+fn audit_report_roundtrips_through_the_schema() {
+    let mut cells = audit::quick_grid(2);
+    for cell in &mut cells {
+        cell.extraction = false; // schema test: keep the trainings minimal
+    }
+    let outcomes = audit::run_grid(&cells).expect("quick grid runs");
+    let doc = report::audit_json(&outcomes, "tier1-smoke");
+    report::validate_audit_json(&doc).expect("emitted document must validate");
+    // the document is self-describing enough to re-find the grid
+    assert!(doc.contains("\"privacy_audit\""));
+    assert!(doc.contains("\"eps0.7\"") && doc.contains("\"inf\""));
+}

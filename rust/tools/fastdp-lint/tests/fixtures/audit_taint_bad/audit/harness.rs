@@ -1,0 +1,20 @@
+// fastdp-lint: per-sample-grad
+pub fn paired_datasets(seed: u64) -> f32 {
+    seed as f32
+}
+
+// fastdp-lint: clip-boundary
+pub fn train_audit_model(d: f32) -> f32 {
+    d.min(1.0)
+}
+
+// fastdp-lint: dp-sink
+pub fn sequence_nll(_params: f32) -> f32 {
+    0.0
+}
+
+pub fn mi_attack(seed: u64) -> f32 {
+    let pair = paired_datasets(seed);
+    // loss readout on the raw pair: no training boundary in between
+    sequence_nll(pair)
+}

@@ -80,6 +80,25 @@ fn dp_flow_silent_when_simd_epilogue_clips_before_sink() {
 }
 
 #[test]
+fn dp_flow_fires_on_audit_loss_readout_without_training_boundary() {
+    // the audit harness shape: paired canary datasets are per-sample data
+    // (the source), the session training loop is the clip boundary, and
+    // the NLL readout is the sink — reading the loss of raw paired data
+    // without a training in between is a flow violation
+    let bad = lint("audit_taint_bad");
+    let hits: Vec<_> = bad.findings.iter().filter(|f| f.rule == "dp-flow").collect();
+    assert_eq!(hits.len(), 1, "{:?}", bad.findings);
+    assert!(hits[0].message.contains("sequence_nll"), "{}", hits[0].message);
+    assert!(hits[0].message.contains("mi_attack"), "{}", hits[0].message);
+}
+
+#[test]
+fn dp_flow_silent_when_audit_trains_between_pairing_and_readout() {
+    let good = lint("audit_taint_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
 fn dp_noise_fires_when_no_noise_site_declared() {
     let bad = lint("noise_bad");
     assert_eq!(fired(&bad), vec!["dp-noise"], "{:?}", bad.findings);
