@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # CI for the fastdp Rust workspace: format check, lints, tier-1
 # (build + tests), the fastdp-lint static-analysis stage, an audit-smoke
-# of the empirical privacy auditor, the determinism env matrix, then a
-# bench-smoke of the throughput harness.
+# of the empirical privacy auditor, a serve-smoke of the multi-tenant
+# scheduler, the determinism env matrix, then a bench-smoke of the
+# throughput harness.
 # Everything runs offline — dependencies are vendored under rust/vendor/.
 #
-# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-lint] [--no-audit] [--no-bench] [--no-matrix]
+# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-lint] [--no-audit] [--no-serve] [--no-bench] [--no-matrix]
 
 set -euo pipefail
 cd "$(dirname "$0")/rust"
@@ -14,6 +15,7 @@ run_fmt=1
 run_clippy=1
 run_lint=1
 run_audit=1
+run_serve=1
 run_bench=1
 run_matrix=1
 for arg in "$@"; do
@@ -22,6 +24,7 @@ for arg in "$@"; do
         --no-clippy) run_clippy=0 ;;
         --no-lint) run_lint=0 ;;
         --no-audit) run_audit=0 ;;
+        --no-serve) run_serve=0 ;;
         --no-bench) run_bench=0 ;;
         --no-matrix) run_matrix=0 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
@@ -91,6 +94,32 @@ if [ "$run_audit" = 1 ]; then
     fi
     rm -f "$out"
     echo "audit-smoke OK"
+fi
+
+if [ "$run_serve" = 1 ]; then
+    # Serve-smoke: pack a small tenant grid through the multi-tenant
+    # scheduler, batched and unbatched.  The harness exits non-zero if any
+    # multiplexed tenant diverges bitwise from its solo trajectory, so a
+    # pass here is the cross-tenant-batching determinism proof.
+    echo "==> serve-smoke: multi-tenant scheduler (quick grid)"
+    out="$(mktemp "${TMPDIR:-/tmp}/serve_smoke.XXXXXX.json")"
+    FASTDP_BENCH_QUICK=1 FASTDP_SERVE_TENANTS=4 \
+        FASTDP_SERVE_OUT="$out" cargo bench --bench serve_capacity
+    for key in '"serve_capacity"' '"tenants"' '"sessions_per_gb"' \
+               '"agg_steps_per_sec"' '"per_tenant_steps_per_sec"' \
+               '"speedup_batched"' '"determinism"' \
+               '"shared_frozen_bytes"' '"per_tenant_bytes"'; do
+        grep -q "$key" "$out" || { echo "serve-smoke: $key missing from $out" >&2; exit 1; }
+    done
+    # seed the in-repo capacity snapshot if it has never been recorded; a
+    # later full run (cargo bench --bench serve_capacity) overwrites it
+    snap="../BENCH_serve_capacity.json"
+    if [ ! -f "$snap" ]; then
+        cp "$out" "$snap"
+        echo "serve-smoke: seeded $snap (smoke-sized; run the full grid to refresh)"
+    fi
+    rm -f "$out"
+    echo "serve-smoke OK"
 fi
 
 if [ "$run_matrix" = 1 ]; then

@@ -1,0 +1,210 @@
+//! Serve-capacity bench: pack same-shape DP-BiTFiT tenants into one
+//! `serve::Scheduler`, measure what multi-tenancy buys, and emit
+//! `BENCH_serve_capacity.json` at the repo root.
+//!
+//! Measured claims:
+//!   * `speedup_batched`   — wall-clock of the batched scheduler (cross-
+//!                           tenant coalesced panel sweeps) vs the same
+//!                           scheduler with batching off (best-of-reps);
+//!   * `sessions_per_gb`   — marginal tenants per GiB once the shared
+//!                           frozen backbone is resident (BiTFiT's ~0.1%
+//!                           trainable footprint is the whole point);
+//!   * `determinism`       — every tenant's final parameters and spent ε
+//!                           are bit-identical to a solo `run_step` loop,
+//!                           batched *and* unbatched.  The bench exits
+//!                           non-zero if this ever fails.
+//!
+//! Knobs (all env vars):
+//!   FASTDP_SERVE_TENANTS  tenant count (default 8; quick 4)
+//!   FASTDP_SERVE_WORKERS  kernel-pool worker budget (default FASTDP_THREADS)
+//!   FASTDP_SERVE_OUT      output path override
+//!   FASTDP_BENCH_QUICK    set => small grid (the ci.sh serve-smoke stage)
+
+use std::time::Instant;
+
+use fastdp::bench;
+use fastdp::engine::{Engine, InterpreterBackend, JobSpec, KernelMode, Method, OptimKind};
+use fastdp::runtime::env;
+use fastdp::serve::{capacity_report, CapacityReport, Scheduler, ServeConfig};
+use fastdp::util::json::{self, Json};
+
+const MODEL: &str = "cls-base";
+const SEED0: u64 = 100;
+
+fn spec_for(seed: u64, steps: u64) -> JobSpec {
+    JobSpec::builder(MODEL, Method::BiTFiT)
+        .sigma(0.8)
+        .delta(1e-5)
+        .optim(OptimKind::Adam)
+        .lr(5e-3)
+        .clip_r(0.1)
+        .batch(64)
+        .steps(steps)
+        .n_train(256)
+        .seed(seed)
+        .build()
+        .expect("bench spec")
+}
+
+fn make_engine(workers: Option<usize>) -> Engine {
+    // the blocked tier is pinned (not env-resolved) so the coalesced
+    // sweep is actually exercised whatever FASTDP_KERNELS says
+    Engine::new(Box::new(InterpreterBackend::with_config(workers, Some(KernelMode::Blocked))))
+}
+
+/// Final (param bits, ε bits) per tenant — the whole-trajectory summary.
+type Fingerprint = (Vec<u32>, u64);
+
+fn fingerprint_of(session: &fastdp::engine::Session) -> Fingerprint {
+    (
+        session.full_params().iter().map(|v| v.to_bits()).collect(),
+        session.privacy_spent().epsilon.to_bits(),
+    )
+}
+
+/// Solo baseline: the plain single-session loop the scheduler must match.
+fn solo(seed: u64, steps: u64, workers: Option<usize>) -> Fingerprint {
+    let mut engine = make_engine(workers);
+    let spec = spec_for(seed, steps);
+    let task = engine.default_task(MODEL).expect("task");
+    let data = engine.dataset(MODEL, task, spec.n_train, spec.seed).expect("data");
+    let mut session = engine.session(&spec).expect("session");
+    for _ in 0..spec.steps {
+        session.run_step(&data).expect("solo step");
+    }
+    fingerprint_of(&session)
+}
+
+/// One timed scheduler run; returns per-tenant fingerprints, the capacity
+/// report and the run_to_completion wall time (admission excluded).
+fn serve_run(
+    tenants: usize,
+    steps: u64,
+    workers: Option<usize>,
+    batching: bool,
+) -> (Vec<Fingerprint>, CapacityReport, f64) {
+    let cfg = ServeConfig { batching, workers, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(make_engine(workers), cfg);
+    for i in 0..tenants {
+        let spec = spec_for(SEED0 + i as u64, steps);
+        let task = sched.engine().default_task(MODEL).expect("task");
+        let data = sched.engine().dataset(MODEL, task, spec.n_train, spec.seed).expect("data");
+        sched.admit(&format!("tenant-{i}"), &spec, data, None).expect("admit");
+    }
+    let t0 = Instant::now();
+    sched.run_to_completion().expect("serve run");
+    let secs = t0.elapsed().as_secs_f64();
+    let report = capacity_report(&sched);
+    let fps = (0..sched.len()).map(|id| fingerprint_of(sched.session(id))).collect();
+    (fps, report, secs)
+}
+
+fn main() {
+    let quick = bench::quick();
+    let tenants = env::serve_tenants().unwrap_or(if quick { 4 } else { 8 });
+    let steps: u64 = if quick { 3 } else { 10 };
+    let reps = if quick { 1 } else { 2 };
+    let workers = env::serve_workers();
+
+    println!(
+        "## serve capacity — {tenants} x {MODEL} dp-bitfit tenants, {steps} steps, \
+         blocked tier, workers = {}\n",
+        workers.map(|w| w.to_string()).unwrap_or_else(|| "default".to_string()),
+    );
+
+    let solos: Vec<Fingerprint> =
+        (0..tenants).map(|i| solo(SEED0 + i as u64, steps, workers)).collect();
+
+    // best-of-reps for both schedules; fingerprints must agree across reps
+    let mut batched: Option<(Vec<Fingerprint>, CapacityReport, f64)> = None;
+    let mut unbatched: Option<(Vec<Fingerprint>, CapacityReport, f64)> = None;
+    for _ in 0..reps {
+        let b = serve_run(tenants, steps, workers, true);
+        let u = serve_run(tenants, steps, workers, false);
+        batched = Some(match batched.take() {
+            Some(prev) if prev.2 <= b.2 => prev,
+            _ => b,
+        });
+        unbatched = Some(match unbatched.take() {
+            Some(prev) if prev.2 <= u.2 => prev,
+            _ => u,
+        });
+    }
+    let (fps_b, report, secs_b) = batched.expect("at least one rep");
+    let (fps_u, _, secs_u) = unbatched.expect("at least one rep");
+
+    let determinism = fps_b == solos && fps_u == solos;
+    let total_steps = tenants as u64 * steps;
+    let agg = total_steps as f64 / secs_b.max(1e-9);
+    let per_tenant = agg / tenants as f64;
+    let speedup = secs_u / secs_b.max(1e-9);
+
+    println!("batched   {secs_b:>8.3}s  ({agg:.1} steps/s aggregate, {per_tenant:.1} per tenant)");
+    println!("unbatched {secs_u:>8.3}s  (speedup {speedup:.2}x)");
+    println!(
+        "capacity: frozen {} B shared ({} B unshared), {} B/tenant mutable -> {:.0} sessions/GB",
+        report.shared_frozen_bytes,
+        report.unshared_frozen_bytes,
+        report.per_tenant_bytes,
+        report.sessions_per_gb,
+    );
+    println!("determinism (batched & unbatched == solo, bitwise): {determinism}");
+
+    let doc = json::write(&json::obj(vec![
+        ("bench", Json::Str("serve_capacity".to_string())),
+        ("created_by", Json::Str("benches/serve_capacity.rs".to_string())),
+        (
+            "sweep",
+            Json::Str(format!(
+                "quick={quick} tenants={tenants} steps={steps} reps={reps} model={MODEL}"
+            )),
+        ),
+        ("tenants", Json::Num(tenants as f64)),
+        ("steps_per_tenant", Json::Num(steps as f64)),
+        ("sessions_per_gb", Json::Num(report.sessions_per_gb)),
+        ("shared_frozen_bytes", Json::Num(report.shared_frozen_bytes as f64)),
+        ("unshared_frozen_bytes", Json::Num(report.unshared_frozen_bytes as f64)),
+        ("per_tenant_bytes", Json::Num(report.per_tenant_bytes as f64)),
+        ("agg_steps_per_sec", Json::Num(agg)),
+        ("per_tenant_steps_per_sec", Json::Num(per_tenant)),
+        ("speedup_batched", Json::Num(speedup)),
+        ("determinism", Json::Bool(determinism)),
+    ]));
+
+    let out_path = env::serve_out().unwrap_or_else(|| {
+        // benches run from rust/; the snapshot lives at the repo root
+        if std::path::Path::new("ROADMAP.md").exists() {
+            "BENCH_serve_capacity.json".to_string()
+        } else if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_serve_capacity.json".to_string()
+        } else {
+            "BENCH_serve_capacity.json".to_string()
+        }
+    });
+    std::fs::write(&out_path, &doc).expect("write BENCH_serve_capacity.json");
+    let back = std::fs::read_to_string(&out_path).expect("read back");
+    let parsed = json::parse(&back).expect("emitted JSON must parse");
+    for key in [
+        "bench",
+        "tenants",
+        "sessions_per_gb",
+        "agg_steps_per_sec",
+        "per_tenant_steps_per_sec",
+        "speedup_batched",
+        "determinism",
+        "shared_frozen_bytes",
+        "per_tenant_bytes",
+    ] {
+        assert!(parsed.get(key).is_some(), "emitted JSON missing key {key:?}");
+    }
+    println!("\nwrote {out_path} (schema OK)");
+
+    if !determinism {
+        eprintln!("FAIL: a multiplexed tenant diverged bitwise from its solo trajectory");
+        std::process::exit(1);
+    }
+    if speedup <= 1.0 {
+        // informational, not fatal: tiny quick grids can be noise-bound
+        println!("note: batched speedup {speedup:.2}x <= 1.0 on this grid/host");
+    }
+}

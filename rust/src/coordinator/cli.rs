@@ -3,6 +3,7 @@
 //!
 //! Subcommands:
 //!   train       — run a (DP) fine-tuning job (`--dry-run` prints the plan)
+//!   serve       — multiplex N tenant jobs through the serve scheduler
 //!   eval        — evaluate a checkpoint with a model's eval step
 //!   accountant  — query the RDP/GDP accountants or calibrate sigma
 //!   zoo         — print the Table 1/11 parameter-efficiency table
@@ -21,7 +22,7 @@ use crate::util::table::Table;
 
 use super::metrics::JsonlSink;
 
-const USAGE: &str = "usage: fastdp <train|eval|accountant|zoo|complexity|artifacts>
+const USAGE: &str = "usage: fastdp <train|serve|eval|accountant|zoo|complexity|artifacts>
   train      --model cls-base --method bitfit [--task sst2] [--steps N] [--batch N]
              [--lr F] [--eps F | --sigma F] [--delta F] [--clip F] [--clip-mode abadi|autos]
              [--optim sgd|adam|adamw] [--warmup N] [--n N] [--seed N]
@@ -31,6 +32,10 @@ const USAGE: &str = "usage: fastdp <train|eval|accountant|zoo|complexity|artifac
              [--config cfg.toml] [--set k=v]... [--artifacts DIR]
              [--backend auto|pjrt|interp] [--dry-run]
              (legacy: --artifact cls-base__dp-bitfit instead of --model/--method)
+  serve      --model cls-base --method bitfit [--tenants N] [--max-tenants N]
+             [--mem-mb N] [--no-batching] [--workers N] [--eps-cap F]
+             (plus the train flags; tenant i trains with seed + i;
+              env fallbacks: FASTDP_SERVE_TENANTS/_WORKERS/_MEM_MB/_BATCHING)
   eval       --model cls-base --ckpt path [--task sst2] [--n N]
   accountant --q F --sigma F --steps N [--delta F]   (report eps, RDP + GDP)
   accountant --q F --steps N --target-eps F          (calibrate sigma)
@@ -45,6 +50,7 @@ pub fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
         Some("eval") => cmd_eval(&args),
         Some("accountant") => cmd_accountant(&args),
         Some("zoo") => cmd_zoo(),
@@ -262,6 +268,137 @@ fn cmd_train(args: &Args) -> Result<()> {
         session.checkpoint(path)?;
         println!("saved checkpoint to {path}");
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::engine::InterpreterBackend;
+    use crate::serve::{capacity_report, Scheduler, ServeConfig, TenantExit};
+
+    let base = build_spec(args)?;
+    anyhow::ensure!(
+        base.replicas <= 1,
+        "serve multiplexes sessions itself; --replicas is not supported"
+    );
+    let n_tenants = args.usize(
+        "tenants",
+        crate::runtime::env::serve_tenants().unwrap_or(4),
+    );
+    anyhow::ensure!(n_tenants >= 1, "--tenants must be >= 1");
+
+    let mut cfg = ServeConfig::from_env();
+    if let Some(m) = args.get("max-tenants") {
+        cfg.max_tenants = m.parse().context("--max-tenants")?;
+    }
+    if let Some(mb) = args.get("mem-mb") {
+        cfg.mem_budget_bytes = Some(mb.parse::<usize>().context("--mem-mb")? << 20);
+    }
+    if args.flag("no-batching") {
+        cfg.batching = false;
+    }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = Some(w.parse().context("--workers")?);
+    }
+    let eps_cap = args.get("eps-cap").map(|s| s.parse::<f64>()).transpose().context("--eps-cap")?;
+
+    // the worker budget applies to the interpreter's kernel pool; an
+    // explicit --backend pjrt keeps its own executor configuration
+    let engine = match (cfg.workers, args.str("backend", "auto").as_str()) {
+        (Some(w), "auto" | "interp" | "interpreter") => {
+            Engine::new(Box::new(InterpreterBackend::with_threads(w)))
+        }
+        _ => open_engine(args)?,
+    };
+    let mut sched = Scheduler::new(engine, cfg);
+    let task = match &base.task {
+        Some(t) => t.clone(),
+        None => sched.engine().default_task(&base.model)?.to_string(),
+    };
+
+    println!(
+        "serving {} x {} on {task} [{} backend]: batching {}, max {} tenants, mem budget {}",
+        n_tenants,
+        base.run_name(),
+        sched.engine().backend_name(),
+        if sched.config().batching { "on" } else { "off" },
+        sched.config().max_tenants,
+        match sched.config().mem_budget_bytes {
+            Some(b) => format!("{} MiB", b >> 20),
+            None => "unlimited".to_string(),
+        },
+    );
+    for i in 0..n_tenants {
+        // each tenant is an independent job: own data draw, own DP state
+        let mut spec = base.clone();
+        spec.seed = base.seed + i as u64;
+        let data = sched.engine().dataset(&spec.model, &task, spec.n_train, spec.seed)?;
+        let name = format!("tenant-{i}");
+        match sched.admit(&name, &spec, data, eps_cap) {
+            Ok(id) => println!(
+                "  admitted {name} (id {id}, seed {}, {} B resident)",
+                spec.seed,
+                sched.session(id).resident_bytes(),
+            ),
+            Err(e) => {
+                println!("  refused {name}: {e}");
+                break;
+            }
+        }
+    }
+    anyhow::ensure!(!sched.is_empty(), "no tenant admitted");
+
+    let t0 = std::time::Instant::now();
+    let mut rounds = 0u64;
+    loop {
+        let stepped = sched.run_round().map_err(|e| anyhow::anyhow!("{e}"))?;
+        if stepped == 0 {
+            break;
+        }
+        rounds += 1;
+        if rounds % 10 == 0 {
+            println!("  round {rounds:>5}: {stepped} tenants stepped");
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let total_steps: u64 = (0..sched.len()).map(|id| sched.session(id).step()).sum();
+
+    for id in 0..sched.len() {
+        let spent = sched.session(id).privacy_spent();
+        match sched.exit(id) {
+            Some(TenantExit::Completed { steps, eps_spent }) => println!(
+                "  {}: completed {} steps, eps {:.3}",
+                sched.name(id),
+                steps,
+                eps_spent
+            ),
+            Some(TenantExit::EpsCapReached { spent, projected, cap }) => println!(
+                "  {}: retired at eps cap (spent {:.3}, next step projects {:.3} > cap {:.3})",
+                sched.name(id),
+                spent,
+                projected,
+                cap
+            ),
+            None => println!("  {}: still active (eps {:.3})", sched.name(id), spent.epsilon),
+        }
+    }
+    let cap = capacity_report(&sched);
+    println!(
+        "{} rounds, {} total steps in {:.2}s ({:.1} steps/s aggregate, {:.1} per tenant)",
+        rounds,
+        total_steps,
+        secs,
+        total_steps as f64 / secs.max(1e-9),
+        total_steps as f64 / secs.max(1e-9) / sched.len() as f64,
+    );
+    println!(
+        "capacity: {} tenants, frozen {} B shared ({} B if unshared), \
+         {} B/tenant mutable -> {:.0} sessions/GB",
+        cap.tenants,
+        cap.shared_frozen_bytes,
+        cap.unshared_frozen_bytes,
+        cap.per_tenant_bytes,
+        cap.sessions_per_gb,
+    );
     Ok(())
 }
 

@@ -41,9 +41,26 @@ pub struct ModelInfo {
 
 /// An input pinned for reuse across step executions (device-resident under
 /// PJRT, host-retained under the interpreter).
+///
+/// The host variant holds an `Arc` so one immutable copy (the frozen
+/// parameter vector) can be shared by every session of the same model —
+/// pinning a tensor that is already behind an `Arc`
+/// ([`StepRunner::pin_shared`]) copies nothing.
 pub enum Pinned {
     Device(crate::runtime::DeviceInput),
-    Host(Tensor),
+    Host(std::sync::Arc<Tensor>),
+}
+
+/// One tenant's microbatch in a coalesced multi-job train sweep
+/// ([`StepRunner::run_multi`]): the same six-slot input layout as
+/// `run`/`run_pinned`, with the frozen vector supplied pinned.
+pub struct MultiTrainJob<'a> {
+    pub frozen: &'a Pinned,
+    pub train: &'a Tensor,
+    pub x: &'a Tensor,
+    pub y: &'a Tensor,
+    pub mask: &'a Tensor,
+    pub clip_r: &'a Tensor,
 }
 
 /// A loaded, executable step (train / eval / decode).
@@ -56,6 +73,14 @@ pub trait StepRunner {
 
     /// Pin one input for reuse across steps (device residency hook).
     fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError>;
+
+    /// Pin a tensor that is already shared behind an `Arc`.  Host-pinning
+    /// backends retain the `Arc` itself (zero copy; N same-model sessions
+    /// share ONE frozen vector); the default forwards to [`Self::pin`]
+    /// for backends that must upload (PJRT).
+    fn pin_shared(&self, t: std::sync::Arc<Tensor>) -> Result<Pinned, EngineError> {
+        self.pin(&t)
+    }
 
     /// Execute with a mix of pinned and host inputs; `host[i]` slots that are
     /// `None` are taken from `pinned` in order.
@@ -71,6 +96,25 @@ pub trait StepRunner {
     /// prefers it.)
     fn prefers_pinned(&self) -> bool {
         false
+    }
+
+    /// Coalesce several **same-artifact** train microbatches — one per
+    /// tenant — into a single panel sweep, amortizing worker dispatch and
+    /// weight-panel traffic across tenants the way the blocked tier
+    /// amortizes it across rows.
+    ///
+    /// Contract: `out[j]` is **bit-identical** to what
+    /// `run_pinned(&[jobs[j].frozen], ...)` would return for job `j` alone
+    /// — each job keeps its own parameters, block partitioning and
+    /// fixed-order reduction; only the worker dispatch is shared.
+    ///
+    /// `None` means this runner has no coalesced path (non-panel kernel
+    /// tiers, PJRT) and the caller must fall back to per-job execution.
+    fn run_multi(
+        &self,
+        _jobs: &[MultiTrainJob<'_>],
+    ) -> Option<Result<Vec<Vec<Tensor>>, EngineError>> {
+        None
     }
 }
 

@@ -74,7 +74,7 @@ use crate::runtime::{ArtifactMeta, IoSpec, Layout, LayoutLeaf};
 use crate::util::rng::ChaChaRng;
 use crate::util::tensor::Tensor;
 
-use super::backend::{check_input_refs, Backend, ModelInfo, Pinned, StepRunner};
+use super::backend::{check_input_refs, Backend, ModelInfo, MultiTrainJob, Pinned, StepRunner};
 use super::error::EngineError;
 
 const NAME: &str = "interpreter";
@@ -932,6 +932,16 @@ struct Scratch {
     /// Cached decode logits buffer (`batch * vocab`), fully overwritten by
     /// the pooled shards each call.
     decode_out: Vec<f32>,
+    /// Multi-tenant sweep buffers (`run_multi`): per-job merged full
+    /// parameter vectors (flattened `n_jobs * n_params`), per-job widened
+    /// embedding tables (blocked tier), and the coalesced factor shards /
+    /// task slots spanning every job.  Kept apart from the solo-path
+    /// buffers so batched and unbatched executions can interleave without
+    /// resizing each other's scratch.
+    multi_full: Vec<f32>,
+    multi_embed64: Vec<f64>,
+    multi_factors: Vec<f64>,
+    multi_rows: Vec<RowOut>,
 }
 
 impl Scratch {
@@ -1540,6 +1550,253 @@ impl RefStep {
         ])
     }
 
+    /// The coalesced multi-tenant panel sweep behind
+    /// [`StepRunner::run_multi`]: N same-artifact train microbatches — one
+    /// per tenant — run as ONE pool dispatch over the union of their
+    /// (tenant, block) tasks, amortizing worker wakeup and weight-panel
+    /// traffic across tenants the way the blocked tier amortizes it across
+    /// rows.
+    ///
+    /// Bit-identity contract: each job keeps its own merged parameter
+    /// vector, its own `BlockedCtx`/`SimdCtx`, the *same* block
+    /// partitioning a solo run would use (`effective_block` depends only
+    /// on shape/batch/threads, all shared), and its own phase-B
+    /// fixed-order accumulation over its own factor region — so
+    /// `out[j]` is bit-identical to `run_train_blocked`/`run_train_simd`
+    /// on job `j` alone.  Only the dispatch is shared; no float from one
+    /// tenant ever meets a float from another.
+    fn run_train_multi(&self, jobs: &[[&Tensor; 6]]) -> Result<Vec<Vec<Tensor>>, EngineError> {
+        let m = &*self.model;
+        let plan = self.ghost.as_ref().expect("factor plan built at load");
+        let pt = self.meta.pt;
+        let b = self.meta.batch;
+        let dp = self.is_dp();
+        let mode = self.clip_mode();
+        let threads = self.resolve_threads(b);
+        let is_lm = m.kind == RefKind::Lm;
+        let rw = blocked::ROW_HDR + plan.row_stride;
+        // identical geometry to the solo tiers — shared by every job
+        // because effective_block sees only (shape, batch, threads)
+        let eff = effective_block(self.block_rows, is_lm, m.t, b, threads);
+        let (n_tasks, task_rows) = if is_lm { (b, 1) } else { ((b + eff - 1) / eff, eff) };
+        let shard_stride = task_rows * rw;
+        let nj = jobs.len();
+        let np = m.layout.n_params;
+        let kind = m.kind;
+        let t_len = m.t;
+        let out_w = m.out;
+        let npix = m.img * m.img * 3;
+        let slots = self.slots;
+
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.multi_full.resize(nj * np, 0.0);
+        s.multi_factors.resize(nj * n_tasks * shard_stride, 0.0);
+        if s.multi_rows.len() < nj * n_tasks {
+            s.multi_rows.resize(nj * n_tasks, RowOut::default());
+        }
+        match self.kernels {
+            KernelMode::Blocked => s.ensure_blocked(threads, eff, m.feat_dim(), m.h, m.out),
+            KernelMode::Simd => s.ensure_simd(threads, eff, m.feat_dim(), m.h, m.out),
+            _ => unreachable!("run_multi guards the kernel tier"),
+        }
+        // per-job parameter merge into the job's region of one flat buffer
+        for (j, job) in jobs.iter().enumerate() {
+            let frozen = job[0].as_f32();
+            let train = job[1].as_f32();
+            let full = &mut s.multi_full[j * np..(j + 1) * np];
+            for r in &self.merge_plan {
+                let src = if r.from_train { train } else { frozen };
+                full[r.dst..r.dst + r.len].copy_from_slice(&src[r.src..r.src + r.len]);
+            }
+        }
+        let clip_rs: Vec<f64> = jobs.iter().map(|job| job[5].item_f32() as f64).collect();
+        let masks: Vec<&[f32]> = jobs.iter().map(|job| job[4].as_f32()).collect();
+        match self.kernels {
+            KernelMode::Blocked => {
+                // widen each job's embedding table once (exactly as solo)
+                let el = m.net_view(&s.multi_full[..np]).embed.len();
+                s.multi_embed64.resize(nj * el, 0.0);
+                if el > 0 {
+                    let (mf, me) = (&s.multi_full, &mut s.multi_embed64);
+                    for j in 0..nj {
+                        let src = m.net_view(&mf[j * np..(j + 1) * np]).embed;
+                        for (dst, &v) in me[j * el..(j + 1) * el].iter_mut().zip(src) {
+                            *dst = v as f64;
+                        }
+                    }
+                }
+                let nets: Vec<NetView> =
+                    (0..nj).map(|j| m.net_view(&s.multi_full[j * np..(j + 1) * np])).collect();
+                let ctxs: Vec<BlockedCtx> = (0..nj)
+                    .map(|j| BlockedCtx {
+                        net: &nets[j],
+                        slots: &slots,
+                        plan,
+                        embed64: &s.multi_embed64[j * el..(j + 1) * el],
+                        dp,
+                        clip_r: clip_rs[j],
+                        mode,
+                    })
+                    .collect();
+                // phase A: ONE dispatch over the union of every job's tasks
+                pool::for_each_sharded(
+                    nj * n_tasks,
+                    &mut s.blocked_ws[..threads],
+                    &mut s.multi_rows[..nj * n_tasks],
+                    &mut s.multi_factors[..nj * n_tasks * shard_stride],
+                    shard_stride,
+                    |g, bw, shard| {
+                        let j = g / n_tasks;
+                        let task = g - j * n_tasks;
+                        let ctx = &ctxs[j];
+                        let x = jobs[j][2];
+                        let y = jobs[j][3];
+                        let mask = masks[j];
+                        if is_lm {
+                            let row = task;
+                            if mask[row] <= 0.0 {
+                                shard[..blocked::ROW_HDR].fill(0.0);
+                                return RowOut::default();
+                            }
+                            let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                            let targets = &y.as_i32()[row * t_len..(row + 1) * t_len];
+                            blocked::row_lm_blocked(ctx, bw, shard, toks, targets);
+                            return RowOut::default();
+                        }
+                        let r0 = task * task_rows;
+                        let nb = (b - r0).min(task_rows);
+                        let mrows = &mask[r0..r0 + nb];
+                        match kind {
+                            RefKind::Cls => {
+                                let toks = &x.as_i32()[r0 * t_len..(r0 + nb) * t_len];
+                                let ys = &y.as_i32()[r0..r0 + nb];
+                                blocked::block_cls(ctx, bw, shard, toks, t_len, ys, mrows, nb);
+                            }
+                            RefKind::Vit => {
+                                let pix = &x.as_f32()[r0 * npix..(r0 + nb) * npix];
+                                let ys = &y.as_i32()[r0..r0 + nb];
+                                blocked::block_vit(ctx, bw, shard, pix, ys, mrows, nb);
+                            }
+                            RefKind::Cnn => {
+                                let pix = &x.as_f32()[r0 * npix..(r0 + nb) * npix];
+                                let ts = &y.as_f32()[r0 * out_w..(r0 + nb) * out_w];
+                                blocked::block_cnn(ctx, bw, shard, pix, ts, mrows, nb);
+                            }
+                            RefKind::Lm => unreachable!("LM pools per row above"),
+                        }
+                        RowOut::default()
+                    },
+                );
+            }
+            KernelMode::Simd => {
+                let nets: Vec<NetView> =
+                    (0..nj).map(|j| m.net_view(&s.multi_full[j * np..(j + 1) * np])).collect();
+                let ctxs: Vec<SimdCtx> = (0..nj)
+                    .map(|j| SimdCtx {
+                        net: &nets[j],
+                        slots: &slots,
+                        plan,
+                        level: self.simd,
+                        dp,
+                        clip_r: clip_rs[j],
+                        mode,
+                    })
+                    .collect();
+                pool::for_each_sharded(
+                    nj * n_tasks,
+                    &mut s.simd_ws[..threads],
+                    &mut s.multi_rows[..nj * n_tasks],
+                    &mut s.multi_factors[..nj * n_tasks * shard_stride],
+                    shard_stride,
+                    |g, sw, shard| {
+                        let j = g / n_tasks;
+                        let task = g - j * n_tasks;
+                        let ctx = &ctxs[j];
+                        let x = jobs[j][2];
+                        let y = jobs[j][3];
+                        let mask = masks[j];
+                        if is_lm {
+                            let row = task;
+                            if mask[row] <= 0.0 {
+                                shard[..blocked::ROW_HDR].fill(0.0);
+                                return RowOut::default();
+                            }
+                            let toks = &x.as_i32()[row * t_len..(row + 1) * t_len];
+                            let targets = &y.as_i32()[row * t_len..(row + 1) * t_len];
+                            simd::row_lm_simd(ctx, sw, shard, toks, targets);
+                            return RowOut::default();
+                        }
+                        let r0 = task * task_rows;
+                        let nb = (b - r0).min(task_rows);
+                        let mrows = &mask[r0..r0 + nb];
+                        match kind {
+                            RefKind::Cls => {
+                                let toks = &x.as_i32()[r0 * t_len..(r0 + nb) * t_len];
+                                let ys = &y.as_i32()[r0..r0 + nb];
+                                simd::panel_cls(ctx, sw, shard, toks, t_len, ys, mrows, nb);
+                            }
+                            RefKind::Vit => {
+                                let pix = &x.as_f32()[r0 * npix..(r0 + nb) * npix];
+                                let ys = &y.as_i32()[r0..r0 + nb];
+                                simd::panel_vit(ctx, sw, shard, pix, ys, mrows, nb);
+                            }
+                            RefKind::Cnn => {
+                                let pix = &x.as_f32()[r0 * npix..(r0 + nb) * npix];
+                                let ts = &y.as_f32()[r0 * out_w..(r0 + nb) * out_w];
+                                simd::panel_cnn(ctx, sw, shard, pix, ts, mrows, nb);
+                            }
+                            RefKind::Lm => unreachable!("LM pools per row above"),
+                        }
+                        RowOut::default()
+                    },
+                );
+            }
+            _ => unreachable!("run_multi guards the kernel tier"),
+        }
+        // per-job demux in fixed job order: headers -> per-row results,
+        // then the job's own phase-B fixed-order accumulation
+        let mut outs = Vec::with_capacity(nj);
+        for (j, job) in jobs.iter().enumerate() {
+            let jf = &s.multi_factors[j * n_tasks * shard_stride..(j + 1) * n_tasks * shard_stride];
+            let mask = job[4].as_f32();
+            let mut loss_sum = 0.0f64;
+            let mut sq_norms = vec![0.0f32; b];
+            let mut rows = vec![RowOut::default(); b];
+            for (row, slot) in rows.iter_mut().enumerate() {
+                let hdr = &jf[row * rw..row * rw + blocked::ROW_HDR];
+                let ro = RowOut { a: hdr[1], b: hdr[2], active: hdr[0] != 0.0 };
+                *slot = ro;
+                if !ro.active {
+                    continue;
+                }
+                sq_norms[row] = ro.b as f32;
+                loss_sum += ro.a * mask[row] as f64;
+            }
+            s.grad_sum.clear();
+            s.grad_sum.resize(pt, 0.0);
+            accumulate_factor_rows(
+                m,
+                &slots,
+                plan,
+                jf,
+                rw,
+                blocked::ROW_HDR,
+                &rows,
+                b,
+                job[2],
+                threads,
+                &mut s.grad_sum,
+            );
+            outs.push(vec![
+                Tensor::scalar_f32(loss_sum as f32),
+                Tensor::f32(vec![pt], s.grad_sum.iter().map(|&v| v as f32).collect()),
+                Tensor::f32(vec![b], sq_norms),
+            ]);
+        }
+        Ok(outs)
+    }
+
     /// The pre-optimization scalar path (see [`crate::kernels::legacy`]):
     /// single-threaded, allocates per row, re-merges parameters per call.
     fn run_train_legacy(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
@@ -1796,7 +2053,13 @@ impl StepRunner for RefStep {
     }
 
     fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError> {
-        Ok(Pinned::Host(t.clone()))
+        Ok(Pinned::Host(std::sync::Arc::new(t.clone())))
+    }
+
+    fn pin_shared(&self, t: std::sync::Arc<Tensor>) -> Result<Pinned, EngineError> {
+        // host pinning retains the Arc itself: N same-model sessions share
+        // ONE frozen parameter vector instead of N deep clones
+        Ok(Pinned::Host(t))
     }
 
     fn run_pinned(
@@ -1816,7 +2079,7 @@ impl StepRunner for RefStep {
                     })?;
                     pi += 1;
                     match p {
-                        Pinned::Host(t) => refs.push(t),
+                        Pinned::Host(t) => refs.push(t.as_ref()),
                         Pinned::Device(_) => {
                             return Err(EngineError::backend(
                                 NAME,
@@ -1832,6 +2095,39 @@ impl StepRunner for RefStep {
 
     fn prefers_pinned(&self) -> bool {
         true
+    }
+
+    fn run_multi(
+        &self,
+        jobs: &[MultiTrainJob<'_>],
+    ) -> Option<Result<Vec<Vec<Tensor>>, EngineError>> {
+        // only the panel-sweep tiers have a coalesced path: their phase A is
+        // already a pool dispatch over independent (block -> factor shard)
+        // tasks, so tasks from different tenants compose into one dispatch
+        if self.meta.step != "train"
+            || !matches!(self.kernels, KernelMode::Blocked | KernelMode::Simd)
+            || jobs.is_empty()
+        {
+            return None;
+        }
+        let mut resolved: Vec<[&Tensor; 6]> = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            let frozen = match j.frozen {
+                Pinned::Host(t) => t.as_ref(),
+                Pinned::Device(_) => {
+                    return Some(Err(EngineError::backend(
+                        NAME,
+                        "run_multi received a device buffer from another backend",
+                    )));
+                }
+            };
+            let refs = [frozen, j.train, j.x, j.y, j.mask, j.clip_r];
+            if let Err(e) = check_input_refs(&self.meta, &refs) {
+                return Some(Err(e));
+            }
+            resolved.push(refs);
+        }
+        Some(self.run_train_multi(&resolved))
     }
 }
 

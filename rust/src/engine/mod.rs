@@ -48,11 +48,15 @@ mod pjrt;
 mod session;
 mod spec;
 
-pub use backend::{check_input_refs, check_inputs, Backend, ModelInfo, Pinned, StepRunner};
+pub use backend::{
+    check_input_refs, check_inputs, Backend, ModelInfo, MultiTrainJob, Pinned, StepRunner,
+};
 pub use error::EngineError;
 pub use interp::InterpreterBackend;
 pub use pjrt::PjrtBackend;
 pub use session::{evaluate_params, EvalOutcome, PrivacySpent, Session, StepStats};
+// crate-internal: the serve scheduler drives sessions chunk-granularly
+pub(crate) use session::PreparedStep;
 pub use spec::{JobPlan, JobSpec, JobSpecBuilder, Method, PhaseSpec, Privacy};
 
 // Engine-level re-exports so drivers only import `fastdp::engine`.
@@ -81,12 +85,22 @@ pub struct Engine {
     /// so backends without a disk home (interpreter) don't re-pretrain per
     /// job.
     params_cache: std::collections::HashMap<String, Vec<f32>>,
+    /// Content-keyed dedupe of frozen parameter vectors: every session
+    /// assembled from this engine shares one immutable copy per distinct
+    /// frozen split (see `session::FrozenCache`) — N same-model BiTFiT
+    /// sessions cost one backbone, not N.
+    frozen_cache: session::FrozenCache,
 }
 
 impl Engine {
     /// Wrap an explicit backend.
     pub fn new(backend: Box<dyn Backend>) -> Engine {
-        Engine { backend, metrics_dir: None, params_cache: std::collections::HashMap::new() }
+        Engine {
+            backend,
+            metrics_dir: None,
+            params_cache: std::collections::HashMap::new(),
+            frozen_cache: session::FrozenCache::default(),
+        }
     }
 
     /// The dependency-free reference interpreter (no artifacts needed).
@@ -305,7 +319,16 @@ impl Engine {
             }
             None => None,
         };
-        Session::assemble(spec.clone(), phases, eval_runner, layout, params, sigma, sink)
+        Session::assemble(
+            spec.clone(),
+            phases,
+            eval_runner,
+            layout,
+            params,
+            sigma,
+            sink,
+            Some(self.frozen_cache.clone()),
+        )
     }
 
     /// Evaluate a checkpointed/explicit parameter vector on a dataset.

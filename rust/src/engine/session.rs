@@ -26,7 +26,10 @@
 //! resumed (`Engine::resume_session`) with bit-identical continuation: the
 //! snapshot carries optimizer moments, RNG states and accountant orders.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::coordinator::checkpoint::{Checkpoint, SessionState};
 use crate::coordinator::distributed::{CommStats, ReplicaGroup};
@@ -41,9 +44,29 @@ use crate::util::rng::ChaChaRng;
 use crate::util::tensor::Tensor;
 use crate::util::Timers;
 
-use super::backend::{Pinned, StepRunner};
+use super::backend::{MultiTrainJob, Pinned, StepRunner};
 use super::error::EngineError;
 use super::spec::{JobSpec, PhaseSpec};
+
+/// Engine-owned dedupe map for frozen parameter vectors, keyed by content
+/// fingerprint: same-model sessions (and phases landing on identical
+/// splits) share ONE immutable copy instead of each holding a
+/// parameter-sized clone.  Entries live as long as the engine — frozen
+/// state stays resident so later admissions keep hitting the share.
+pub(crate) type FrozenCache = Rc<RefCell<HashMap<u64, Arc<Tensor>>>>;
+
+/// FNV-1a over the f32 bit patterns (cheap, deterministic; collisions are
+/// disambiguated by a full content compare before sharing).
+fn frozen_fingerprint(data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in data {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
 
 /// Per-step statistics.
 #[derive(Debug, Clone, Copy)]
@@ -90,6 +113,39 @@ impl EvalOutcome {
     }
 }
 
+/// A sampled, filled logical batch mid-step: the output of
+/// [`Session::prepare_step`], consumed by [`Session::finish_step`] after
+/// every chunk's kernel outputs have been absorbed.
+///
+/// This is the chunk-granular decomposition of `run_step` that the serve
+/// scheduler multiplexes on: chunks from different sessions are executed
+/// (possibly coalesced into one multi-tenant sweep) between `prepare` and
+/// `finish`, while all DP state transitions — noise, normalization,
+/// optimizer, accountant — stay inside the owning session.
+pub(crate) struct PreparedStep {
+    pub(crate) chunks: Vec<(Tensor, Tensor, Tensor)>,
+    /// Realized logical-batch size (`idxs.len()`, not the padded capacity).
+    batch: usize,
+    pub(crate) grad: Vec<f32>,
+    pub(crate) loss_sum: f64,
+    pub(crate) comm: Option<CommStats>,
+}
+
+impl PreparedStep {
+    pub(crate) fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Fold one chunk's kernel outputs (loss scalar + clipped gradient
+    /// sum) into the step — the identical chunk-order float fold
+    /// `run_step` performs, so absorbing demuxed multi-tenant outputs in
+    /// chunk order is bit-identical to the solo loop.
+    pub(crate) fn absorb(&mut self, out: &[Tensor]) {
+        self.loss_sum += out[0].item_f32() as f64;
+        crate::util::tensor::axpy(&mut self.grad, 1.0, out[1].as_f32());
+    }
+}
+
 /// One phase of a running session.
 struct Phase {
     spec: PhaseSpec,
@@ -107,11 +163,15 @@ pub struct Session {
     /// Steps remaining before the active phase ends.
     phase_left: u64,
     layout: Layout,
-    /// Frozen parameters of the active phase.  Backends that prefer the
-    /// pinned path retain their own copy once per phase (`pinned_frozen`),
-    /// so this is never cloned per step on that path; `full_params` reads
-    /// it directly.
-    frozen: Tensor,
+    /// Frozen parameters of the active phase, behind an `Arc`: host-pinning
+    /// backends retain the same allocation (`pin_shared`), and same-model
+    /// sessions assembled from one engine share ONE copy via the engine's
+    /// [`FrozenCache`] — a BiTFiT session's marginal cost is bias state +
+    /// optimizer + accountant, not a parameter-sized clone.
+    frozen: Arc<Tensor>,
+    /// Engine-owned frozen dedupe map (`None` for sessions assembled
+    /// without an engine, e.g. directly in tests).
+    frozen_cache: Option<FrozenCache>,
     /// Trainable parameters of the active phase, updated in place.
     train: Tensor,
     /// Prebuilt scalar clip-radius input (constant for the whole job).
@@ -139,6 +199,7 @@ pub struct Session {
 
 impl Session {
     /// Assemble a session (called by `Engine::session`).
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn assemble(
         spec: JobSpec,
         phases: Vec<(PhaseSpec, Rc<dyn StepRunner>, Option<ReplicaGroup>)>,
@@ -147,6 +208,7 @@ impl Session {
         start_params: Vec<f32>,
         sigma: f64,
         sink: Option<JsonlSink>,
+        frozen_cache: Option<FrozenCache>,
     ) -> Result<Session, EngineError> {
         if start_params.len() != layout.n_params {
             return Err(EngineError::Data(format!(
@@ -180,7 +242,8 @@ impl Session {
             optimizer: Optimizer::new(spec.optim, phases[0].spec.lr, 0),
             active: 0,
             layout,
-            frozen: Tensor::f32(vec![0], vec![]),
+            frozen: Arc::new(Tensor::f32(vec![0], vec![])),
+            frozen_cache,
             train: Tensor::f32(vec![0], vec![]),
             clip_r_t: Tensor::scalar_f32(spec.clip_r as f32),
             pinned_frozen: None,
@@ -220,13 +283,14 @@ impl Session {
                 pt
             )));
         }
-        self.frozen = Tensor::f32(vec![pf], frozen);
+        self.frozen = self.shared_frozen(Tensor::f32(vec![pf], frozen));
         self.train = Tensor::f32(vec![pt], train);
         // replicated phases train exclusively through the workers' own
         // pinned copies, so the leader skips its (otherwise unused) pin
         let replicated = self.phases[self.active].replicas.is_some();
         self.pinned_frozen = if !replicated && self.phases[self.active].runner.prefers_pinned() {
-            Some(self.phases[self.active].runner.pin(&self.frozen)?)
+            // pin the shared Arc itself — host-pinning backends copy nothing
+            Some(self.phases[self.active].runner.pin_shared(self.frozen.clone())?)
         } else {
             None
         };
@@ -235,6 +299,27 @@ impl Session {
         }
         self.optimizer = Optimizer::new(self.spec.optim, lr, pt);
         Ok(())
+    }
+
+    /// Deduplicate a freshly split frozen vector through the engine's
+    /// [`FrozenCache`]: on a fingerprint hit the content is compared in
+    /// full, and only a true match shares the existing `Arc` (a collision
+    /// falls back to a private copy — correctness never rides on the hash).
+    fn shared_frozen(&self, t: Tensor) -> Arc<Tensor> {
+        let Some(cache) = &self.frozen_cache else {
+            return Arc::new(t);
+        };
+        let key = frozen_fingerprint(t.as_f32());
+        let mut map = cache.borrow_mut();
+        if let Some(existing) = map.get(&key) {
+            if existing.shape == t.shape && existing.as_f32() == t.as_f32() {
+                return existing.clone();
+            }
+            return Arc::new(t);
+        }
+        let arc = Arc::new(t);
+        map.insert(key, arc.clone());
+        arc
     }
 
     /// Retire one phase's replica workers (dropping the group joins its
@@ -324,6 +409,44 @@ impl Session {
         }
     }
 
+    /// Epsilon the accountant would report after `extra_steps` more steps
+    /// at this session's (q, sigma) — a clone-and-advance projection; the
+    /// live accountant is untouched.  `0.0` for non-DP sessions.
+    pub fn projected_epsilon(&self, extra_steps: u64) -> f64 {
+        match &self.accountant {
+            Some(acc) => {
+                let mut a = acc.clone();
+                for _ in 0..extra_steps {
+                    a.step(self.q, self.sigma);
+                }
+                a.epsilon().0
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Approximate bytes of per-session mutable state: trainable params
+    /// (f32) + optimizer moments (f64) + accountant orders (f64).  The
+    /// frozen vector is EXCLUDED — it is shared (see [`FrozenCache`]) and
+    /// reported separately by [`Session::frozen_bytes`].
+    pub fn resident_bytes(&self) -> usize {
+        let (_, m, v) = self.optimizer.state();
+        self.train.len() * 4
+            + (m.len() + v.len()) * 8
+            + self.accountant.as_ref().map(|a| a.accumulated().len() * 8).unwrap_or(0)
+    }
+
+    /// Bytes of the (possibly shared) frozen parameter vector.
+    pub fn frozen_bytes(&self) -> usize {
+        self.frozen.len() * 4
+    }
+
+    /// Identity of the frozen allocation — equal for sessions sharing one
+    /// copy (capacity reports count distinct values once).
+    pub fn frozen_ptr(&self) -> usize {
+        Arc::as_ptr(&self.frozen) as usize
+    }
+
     fn sample_indices(&mut self) -> Vec<usize> {
         let n = self.spec.n_train;
         if let Some(s) = &mut self.sampler {
@@ -337,8 +460,45 @@ impl Session {
         }
     }
 
-    /// One logical-batch training step.
+    /// One logical-batch training step: prepare (sample + fill), execute
+    /// every chunk, finish (noise + normalize + descend + account).
     pub fn run_step(&mut self, data: &TaskData) -> Result<StepStats, EngineError> {
+        let mut prep = self.prepare_step(data)?;
+        if self.phases[self.active].replicas.is_some() {
+            // data-parallel: ship contiguous chunk runs to the replica
+            // workers, reduce their clipped gradient sums in fixed replica
+            // order — the identical chunk-order float fold the in-process
+            // loop below performs, so the trajectory is bit-identical for
+            // any replica count
+            let t2 = std::time::Instant::now();
+            let clip_r = self.clip_r_t.item_f32();
+            let chunks = std::mem::take(&mut prep.chunks);
+            let group = self.phases[self.active].replicas.as_mut().expect("checked above");
+            let (replica_loss, stats) =
+                group.run_batch(self.train.as_f32(), clip_r, chunks, &mut prep.grad)?;
+            prep.loss_sum = replica_loss;
+            prep.comm = Some(stats);
+            self.timers.add("execute", t2.elapsed().as_secs_f64());
+        } else {
+            let t2 = std::time::Instant::now();
+            for i in 0..prep.n_chunks() {
+                let out = {
+                    let (x, y, mask) = &prep.chunks[i];
+                    self.run_chunk(x, y, mask)?
+                };
+                prep.absorb(&out);
+            }
+            self.timers.add("execute", t2.elapsed().as_secs_f64());
+        }
+        self.finish_step(prep)
+    }
+
+    /// Phase 1 of a step: validate, switch phase if due, Poisson-sample
+    /// the logical batch and fill every fixed-shape masked microbatch
+    /// chunk.  Filling is a pure function of the sampled indices, so
+    /// pre-filling all chunks (rather than interleaving with execution)
+    /// changes no bits.
+    pub(crate) fn prepare_step(&mut self, data: &TaskData) -> Result<PreparedStep, EngineError> {
         if data.len() != self.spec.n_train {
             return Err(EngineError::Data(format!(
                 "dataset has {} examples but the spec says n_train = {}",
@@ -352,70 +512,91 @@ impl Session {
         let t0 = std::time::Instant::now();
         let idxs = self.sample_indices();
         self.timers.add("sample", t0.elapsed().as_secs_f64());
-        let runner = self.phases[self.active].runner.clone();
-        let meta = runner.meta();
-        let b = meta.batch;
-        let pt = meta.pt;
-        let mut grad = vec![0.0f32; pt];
-        let mut loss_sum = 0.0f64;
-        let mut comm: Option<CommStats> = None;
-        if self.phases[self.active].replicas.is_some() {
-            // data-parallel: fill every chunk, ship contiguous chunk runs
-            // to the replica workers, reduce their clipped gradient sums in
-            // fixed replica order — the identical chunk-order float fold
-            // the in-process loop below performs, so the trajectory is
-            // bit-identical for any replica count
-            let t1 = std::time::Instant::now();
-            let chunks: Vec<(Tensor, Tensor, Tensor)> =
-                idxs.chunks(b).map(|chunk| data.fill(chunk, b)).collect();
-            self.timers.add("fill", t1.elapsed().as_secs_f64());
-            let t2 = std::time::Instant::now();
-            let clip_r = self.clip_r_t.item_f32();
-            let group = self.phases[self.active].replicas.as_mut().expect("checked above");
-            let (replica_loss, stats) =
-                group.run_batch(self.train.as_f32(), clip_r, chunks, &mut grad)?;
-            loss_sum = replica_loss;
-            comm = Some(stats);
-            self.timers.add("execute", t2.elapsed().as_secs_f64());
-        } else {
-            for chunk in idxs.chunks(b) {
-                let t1 = std::time::Instant::now();
-                let (x, y, mask) = data.fill(chunk, b);
-                self.timers.add("fill", t1.elapsed().as_secs_f64());
-                let t2 = std::time::Instant::now();
-                // pinned path: every input is borrowed — no parameter-sized
-                // clones anywhere in the steady state
-                let out = match &self.pinned_frozen {
-                    Some(pinned) => runner.run_pinned(
-                        &[pinned],
-                        &[
-                            None,
-                            Some(&self.train),
-                            Some(&x),
-                            Some(&y),
-                            Some(&mask),
-                            Some(&self.clip_r_t),
-                        ],
-                    )?,
-                    None => runner.run(&[
-                        self.frozen.clone(),
-                        self.train.clone(),
-                        x,
-                        y,
-                        mask,
-                        self.clip_r_t.clone(),
-                    ])?,
-                };
-                self.timers.add("execute", t2.elapsed().as_secs_f64());
-                loss_sum += out[0].item_f32() as f64;
-                crate::util::tensor::axpy(&mut grad, 1.0, out[1].as_f32());
-            }
+        let meta = self.phases[self.active].runner.meta();
+        let (b, pt) = (meta.batch, meta.pt);
+        let t1 = std::time::Instant::now();
+        let chunks: Vec<(Tensor, Tensor, Tensor)> =
+            idxs.chunks(b).map(|chunk| data.fill(chunk, b)).collect();
+        self.timers.add("fill", t1.elapsed().as_secs_f64());
+        Ok(PreparedStep {
+            chunks,
+            batch: idxs.len(),
+            grad: vec![0.0f32; pt],
+            loss_sum: 0.0,
+            comm: None,
+        })
+    }
+
+    /// Execute one prepared chunk through the active runner (pinned path:
+    /// every input borrowed — no parameter-sized clones in steady state).
+    pub(crate) fn run_chunk(
+        &self,
+        x: &Tensor,
+        y: &Tensor,
+        mask: &Tensor,
+    ) -> Result<Vec<Tensor>, EngineError> {
+        let runner = &self.phases[self.active].runner;
+        match &self.pinned_frozen {
+            Some(pinned) => runner.run_pinned(
+                &[pinned],
+                &[
+                    None,
+                    Some(&self.train),
+                    Some(x),
+                    Some(y),
+                    Some(mask),
+                    Some(&self.clip_r_t),
+                ],
+            ),
+            None => runner.run(&[
+                (*self.frozen).clone(),
+                self.train.clone(),
+                x.clone(),
+                y.clone(),
+                mask.clone(),
+                self.clip_r_t.clone(),
+            ]),
         }
+    }
+
+    /// The active runner (serve scheduler: coalesced-sweep dispatch).
+    pub(crate) fn runner(&self) -> Rc<dyn StepRunner> {
+        self.phases[self.active].runner.clone()
+    }
+
+    /// Is the active phase replicated?  (The serve scheduler refuses such
+    /// sessions; their chunks are owned by the replica group.)
+    pub(crate) fn has_replicas(&self) -> bool {
+        self.phases[self.active].replicas.is_some()
+    }
+
+    /// This session's slice of a multi-tenant coalesced sweep for one
+    /// prepared chunk.  `None` when the frozen vector is not pinned (the
+    /// coalesced path requires the pinned steady state).
+    pub(crate) fn multi_inputs<'a>(
+        &'a self,
+        chunk: &'a (Tensor, Tensor, Tensor),
+    ) -> Option<MultiTrainJob<'a>> {
+        let pinned = self.pinned_frozen.as_ref()?;
+        Some(MultiTrainJob {
+            frozen: pinned,
+            train: &self.train,
+            x: &chunk.0,
+            y: &chunk.1,
+            mask: &chunk.2,
+            clip_r: &self.clip_r_t,
+        })
+    }
+
+    /// Phase 3 of a step: noise once, normalize, descend, account, log.
+    /// Consumes the prepared step after all its chunks were absorbed.
+    pub(crate) fn finish_step(&mut self, prep: PreparedStep) -> Result<StepStats, EngineError> {
+        let PreparedStep { batch, mut grad, loss_sum, comm, .. } = prep;
         let denom = if self.is_dp() {
             // fixed normalization by the expected batch (standard DP-SGD)
             self.spec.logical_batch as f64
         } else {
-            idxs.len().max(1) as f64
+            batch.max(1) as f64
         };
         if self.is_dp() && self.sigma > 0.0 && self.fault != FaultMode::SkipNoise {
             // an armed fault may weaken sigma here; the accountant below
@@ -441,8 +622,8 @@ impl Session {
         self.phase_left = self.phase_left.saturating_sub(1);
         let stats = StepStats {
             step: self.step,
-            loss: loss_sum / idxs.len().max(1) as f64,
-            batch: idxs.len(),
+            loss: loss_sum / batch.max(1) as f64,
+            batch,
             grad_norm,
             epsilon: self.accountant.as_ref().map(|a| a.epsilon().0).unwrap_or(0.0),
             comm,

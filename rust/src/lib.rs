@@ -85,6 +85,15 @@
 //!   exposure rank, white-box sigma/clip probes, and exact
 //!   Clopper–Pearson epsilon witnesses — every claim the accountant makes
 //!   is attacked end-to-end and reported in `BENCH_privacy_audit.json`.
+//! * [`serve`] — multi-tenant serving over one engine: a cooperative
+//!   session scheduler with admission control (tenant + memory budgets),
+//!   per-tenant privacy ledgers enforcing hard ε caps *before* each step,
+//!   shared frozen base weights (same-model sessions reference one
+//!   immutable copy), and cross-tenant **coalesced panel sweeps** — chunks
+//!   from same-artifact tenants run as one blocked/simd pool dispatch
+//!   while every tenant's trajectory stays bit-identical to a solo run.
+//!   Capacity numbers (sessions/GB, batched-vs-unbatched speedup) land in
+//!   `BENCH_serve_capacity.json` via `benches/serve_capacity.rs`.
 //! * [`data`] — synthetic workload generators (GLUE/E2E/CIFAR/CelebA analogs).
 //! * [`models`] — model zoo parameter-count formulas (paper Tables 1 & 11).
 //! * [`analysis`] — per-layer time/space complexity (paper Tables 2 & 7).
@@ -110,4 +119,5 @@ pub mod kernels;
 pub mod models;
 pub mod nlg;
 pub mod runtime;
+pub mod serve;
 pub mod util;

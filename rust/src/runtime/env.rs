@@ -125,6 +125,41 @@ pub const AUDIT_OUT: Knob = Knob {
     doc: "output path override for the privacy-audit bench document",
 };
 
+pub const SERVE_TENANTS: Knob = Knob {
+    name: "FASTDP_SERVE_TENANTS",
+    expected: "integer >= 1",
+    fallback: "8 (quick: 4)",
+    doc: "tenant count for the serve CLI mode and capacity bench",
+};
+
+pub const SERVE_WORKERS: Knob = Knob {
+    name: "FASTDP_SERVE_WORKERS",
+    expected: "integer >= 1",
+    fallback: "FASTDP_THREADS, else host parallelism",
+    doc: "global worker-thread budget for the serve scheduler",
+};
+
+pub const SERVE_MEM_MB: Knob = Knob {
+    name: "FASTDP_SERVE_MEM_MB",
+    expected: "integer >= 1 (MiB)",
+    fallback: "unlimited",
+    doc: "admission-control memory budget for serve sessions",
+};
+
+pub const SERVE_BATCHING: Knob = Knob {
+    name: "FASTDP_SERVE_BATCHING",
+    expected: "on|off|1|0|true|false",
+    fallback: "on",
+    doc: "cross-tenant coalesced panel sweeps in the serve scheduler",
+};
+
+pub const SERVE_OUT: Knob = Knob {
+    name: "FASTDP_SERVE_OUT",
+    expected: "file path",
+    fallback: "BENCH_serve_capacity.json at the repo root",
+    doc: "output path override for the serve-capacity bench document",
+};
+
 /// Every knob the crate reads, in README table order.
 pub const REGISTRY: &[&Knob] = &[
     &THREADS,
@@ -141,6 +176,11 @@ pub const REGISTRY: &[&Knob] = &[
     &FAULT,
     &AUDIT_TRIALS,
     &AUDIT_OUT,
+    &SERVE_TENANTS,
+    &SERVE_WORKERS,
+    &SERVE_MEM_MB,
+    &SERVE_BATCHING,
+    &SERVE_OUT,
 ];
 
 /// The raw environment read — the single `std::env::var` chokepoint for
@@ -274,6 +314,35 @@ pub fn audit_trials() -> Option<usize> {
 /// `FASTDP_AUDIT_OUT`: output path override (empty counts as unset).
 pub fn audit_out() -> Option<String> {
     raw(&AUDIT_OUT).filter(|p| !p.trim().is_empty())
+}
+
+/// `FASTDP_SERVE_TENANTS`: serve-mode tenant count (>= 1).
+pub fn serve_tenants() -> Option<usize> {
+    parsed(&SERVE_TENANTS, positive)
+}
+
+/// `FASTDP_SERVE_WORKERS`: serve scheduler worker budget (>= 1).
+pub fn serve_workers() -> Option<usize> {
+    parsed(&SERVE_WORKERS, positive)
+}
+
+/// `FASTDP_SERVE_MEM_MB`: admission memory budget in MiB (>= 1).
+pub fn serve_mem_mb() -> Option<usize> {
+    parsed(&SERVE_MEM_MB, positive)
+}
+
+/// `FASTDP_SERVE_BATCHING`: cross-tenant sweep coalescing switch.
+pub fn serve_batching() -> Option<bool> {
+    parsed(&SERVE_BATCHING, |s| match s.to_ascii_lowercase().as_str() {
+        "on" | "1" | "true" => Some(true),
+        "off" | "0" | "false" => Some(false),
+        _ => None,
+    })
+}
+
+/// `FASTDP_SERVE_OUT`: output path override (empty counts as unset).
+pub fn serve_out() -> Option<String> {
+    raw(&SERVE_OUT).filter(|p| !p.trim().is_empty())
 }
 
 #[cfg(test)]

@@ -1,0 +1,57 @@
+//! Capacity accounting for a populated scheduler: how much memory the
+//! admitted sessions hold, how much the shared-frozen dedupe saved, and
+//! the sessions/GB headline the serve-capacity bench reports.
+
+use super::scheduler::Scheduler;
+
+/// Memory footprint of a scheduler's admitted sessions.
+#[derive(Debug, Clone, Copy)]
+pub struct CapacityReport {
+    pub tenants: usize,
+    /// Bytes of distinct frozen allocations (each shared copy once).
+    pub shared_frozen_bytes: usize,
+    /// What the frozen state would cost without sharing (one copy per
+    /// tenant) — the dedupe saving is the difference.
+    pub unshared_frozen_bytes: usize,
+    /// Total per-tenant mutable state (train params + optimizer +
+    /// accountant) over all tenants.
+    pub resident_bytes: usize,
+    /// Everything resident: shared frozen + per-tenant state.
+    pub total_bytes: usize,
+    /// Mean per-tenant mutable state.
+    pub per_tenant_bytes: usize,
+    /// How many more same-shape tenants fit per GiB: the marginal cost of
+    /// one admitted session once its model's frozen copy is resident.
+    pub sessions_per_gb: f64,
+}
+
+/// Compute the capacity report over every admitted session.
+pub fn capacity_report(sched: &Scheduler) -> CapacityReport {
+    let mut tenants = 0usize;
+    let mut resident = 0usize;
+    let mut shared_frozen = 0usize;
+    let mut unshared_frozen = 0usize;
+    let mut seen: Vec<usize> = Vec::new();
+    for s in sched.sessions() {
+        tenants += 1;
+        resident += s.resident_bytes();
+        unshared_frozen += s.frozen_bytes();
+        let ptr = s.frozen_ptr();
+        if !seen.contains(&ptr) {
+            seen.push(ptr);
+            shared_frozen += s.frozen_bytes();
+        }
+    }
+    let per_tenant = if tenants > 0 { resident / tenants } else { 0 };
+    let sessions_per_gb =
+        if per_tenant > 0 { (1u64 << 30) as f64 / per_tenant as f64 } else { 0.0 };
+    CapacityReport {
+        tenants,
+        shared_frozen_bytes: shared_frozen,
+        unshared_frozen_bytes: unshared_frozen,
+        resident_bytes: resident,
+        total_bytes: shared_frozen + resident,
+        per_tenant_bytes: per_tenant,
+        sessions_per_gb,
+    }
+}

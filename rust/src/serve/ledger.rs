@@ -1,0 +1,64 @@
+//! Per-tenant privacy-budget ledger.
+//!
+//! The ledger mirrors what the tenant's own RDP accountant reports (total
+//! ε spent so far, not increments) against a hard cap set at admission.
+//! Enforcement is *pre-step*: the scheduler projects the accountant one
+//! step forward ([`crate::engine::Session::projected_epsilon`]) and
+//! retires the tenant if the projection would exceed the cap, so the cap
+//! is never crossed — the ledger's post-step [`EpsLedger::record`] is the
+//! belt-and-braces check that the projection did its job.
+
+/// A tenant's ε budget: hard cap plus the accountant's running total.
+#[derive(Debug, Clone, Copy)]
+pub struct EpsLedger {
+    cap: f64,
+    spent: f64,
+}
+
+impl EpsLedger {
+    /// A ledger with a hard cap (ε the tenant may never exceed).
+    pub fn new(cap: f64) -> EpsLedger {
+        EpsLedger { cap, spent: 0.0 }
+    }
+
+    /// The hard cap set at admission.
+    pub fn cap(&self) -> f64 {
+        self.cap
+    }
+
+    /// Total ε the tenant's accountant has reported so far.
+    pub fn spent(&self) -> f64 {
+        self.spent
+    }
+
+    /// Would a projected accountant total exceed the cap?
+    pub fn would_exceed(&self, projected: f64) -> bool {
+        projected > self.cap
+    }
+
+    /// Record the accountant's post-step total.  Returns `false` if the
+    /// total crossed the cap — an invariant violation the scheduler turns
+    /// into [`crate::serve::ServeError::EpsCapExceeded`], since pre-step
+    /// projection should have retired the tenant first.
+    #[must_use]
+    pub fn record(&mut self, total_eps: f64) -> bool {
+        self.spent = total_eps;
+        total_eps <= self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_tracks_and_gates() {
+        let mut l = EpsLedger::new(2.0);
+        assert_eq!(l.cap(), 2.0);
+        assert!(!l.would_exceed(1.9));
+        assert!(l.would_exceed(2.1));
+        assert!(l.record(1.5));
+        assert_eq!(l.spent(), 1.5);
+        assert!(!l.record(2.5)); // over-spend detected
+    }
+}

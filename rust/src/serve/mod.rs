@@ -1,0 +1,115 @@
+//! `fastdp::serve` — multi-tenant session scheduling over one engine.
+//!
+//! The paper's efficiency claim (BiTFiT trains ~0.1% of parameters) makes
+//! per-session *mutable* state tiny: bias vector + optimizer moments +
+//! accountant orders.  This module turns that into a serving story — one
+//! process multiplexing many concurrent DP fine-tuning sessions — with
+//! three mechanisms:
+//!
+//! 1. **Cross-job batched panel sweeps** ([`Scheduler`]): microbatch
+//!    chunks from tenants sharing one train artifact are coalesced into a
+//!    single blocked/simd panel sweep ([`StepRunner::run_multi`]),
+//!    amortizing worker dispatch across tenants exactly as the blocked
+//!    tier amortizes weight-panel traffic across rows.  Each tenant keeps
+//!    its own clip/noise/accountant state; per-row results are demuxed in
+//!    fixed tenant order, so every tenant's trajectory is **bit-identical
+//!    to a solo run** (`tests/serve_scheduler.rs` proves it across tenant
+//!    counts and thread counts).
+//! 2. **Shared frozen base weights**: same-model sessions reference ONE
+//!    immutable `Arc` copy of the frozen vector (the engine's
+//!    content-keyed dedupe cache), so N BiTFiT tenants cost one backbone
+//!    plus N bias states — the sessions/GB headline of
+//!    `benches/serve_capacity.rs`.
+//! 3. **Admission control + privacy ledgers** ([`EpsLedger`]): a global
+//!    tenant/memory budget gates admission, and per-tenant hard ε caps
+//!    are enforced *before* each step by accountant projection — a tenant
+//!    at its cap is retired with [`TenantExit::EpsCapReached`], never
+//!    silently over-spent.
+//!
+//! Scheduling is cooperative and single-threaded at the session level
+//! (sessions are `Rc`-based and not `Send`); all parallelism lives in the
+//! kernel worker pool (`runtime::pool`), whose thread budget the
+//! scheduler owns via `FASTDP_SERVE_WORKERS`.
+//!
+//! ```no_run
+//! use fastdp::engine::{Engine, JobSpec, Method};
+//! use fastdp::serve::{Scheduler, ServeConfig};
+//!
+//! let mut sched = Scheduler::new(Engine::interpreter(), ServeConfig::default());
+//! let spec = JobSpec::builder("cls-base", Method::BiTFiT)
+//!     .eps(8.0).batch(64).steps(10).n_train(256).build()?;
+//! let data = sched.engine().dataset(&spec.model, "sst2", spec.n_train, 11)?;
+//! let id = sched.admit("tenant-0", &spec, data, Some(8.0))?;
+//! sched.run_to_completion()?;
+//! println!("{:?}", sched.exit(id));
+//! # Ok::<(), fastdp::serve::ServeError>(())
+//! ```
+
+mod capacity;
+mod ledger;
+mod scheduler;
+
+pub use capacity::{capacity_report, CapacityReport};
+pub use ledger::EpsLedger;
+pub use scheduler::{Scheduler, ServeConfig, TenantExit};
+
+#[allow(unused_imports)] // doc links
+use crate::engine::StepRunner;
+
+use crate::engine::EngineError;
+
+/// Typed serve-layer failures (admission refusals, budget exhaustion,
+/// engine errors).  ε-cap retirement is NOT an error — it is the normal
+/// [`TenantExit::EpsCapReached`] outcome — but a ledger detecting an
+/// over-spend *after* a step (which the pre-step projection exists to
+/// prevent) is the [`ServeError::EpsCapExceeded`] invariant violation.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Admission refused: the tenant budget is full.
+    TenantBudgetFull { admitted: usize, max_tenants: usize },
+    /// Admission refused: the session would not fit the memory budget.
+    MemoryBudgetFull { needed_bytes: usize, free_bytes: usize },
+    /// Invariant violation: a tenant's accountant moved past its hard cap.
+    EpsCapExceeded { tenant: usize, name: String, spent: f64, cap: f64 },
+    /// The job spec asks for something the scheduler cannot multiplex.
+    Unsupported(String),
+    /// An engine-level failure while preparing or executing a step.
+    Engine(EngineError),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::TenantBudgetFull { admitted, max_tenants } => write!(
+                f,
+                "admission refused: {admitted} tenants admitted, budget is {max_tenants}"
+            ),
+            ServeError::MemoryBudgetFull { needed_bytes, free_bytes } => write!(
+                f,
+                "admission refused: session needs {needed_bytes} bytes, {free_bytes} free"
+            ),
+            ServeError::EpsCapExceeded { tenant, name, spent, cap } => write!(
+                f,
+                "tenant {tenant} ({name}) over-spent its privacy budget: \
+                 eps {spent:.4} > cap {cap:.4}"
+            ),
+            ServeError::Unsupported(what) => write!(f, "serve: unsupported job: {what}"),
+            ServeError::Engine(e) => write!(f, "serve: engine error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Engine(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<EngineError> for ServeError {
+    fn from(e: EngineError) -> ServeError {
+        ServeError::Engine(e)
+    }
+}

@@ -1,0 +1,354 @@
+//! The multi-tenant session scheduler.
+//!
+//! Cooperative, single-threaded at the session level (sessions are
+//! `Rc`-based); all parallelism lives in the kernel worker pool.  One
+//! scheduling **round** advances every runnable tenant by exactly one
+//! logical-batch step, in fixed tenant-id order:
+//!
+//! 1. **ε gate** — each capped DP tenant's accountant is projected one
+//!    step forward; a projection past the cap retires the tenant
+//!    ([`TenantExit::EpsCapReached`]) *before* any data is touched.
+//! 2. **prepare** — each runnable tenant samples and fills its chunks
+//!    ([`Session::prepare_step`]).
+//! 3. **execute** — chunk waves: in wave `w`, every tenant's `w`-th chunk
+//!    runs.  Chunks of tenants sharing one train artifact are coalesced
+//!    into a single panel sweep (`StepRunner::run_multi`) when batching
+//!    is on; everything else (mixed shapes, non-panel kernel tiers,
+//!    singleton groups) falls back to per-tenant execution.  Either way
+//!    each tenant's chunks are absorbed in chunk order, so the fold is
+//!    bit-identical to its solo `run_step` loop.
+//! 4. **finish** — noise/normalize/descend/account per tenant
+//!    ([`Session::finish_step`]), ledger update, retirement of tenants
+//!    that reached their step target ([`TenantExit::Completed`]).
+
+use std::collections::BTreeMap;
+
+use crate::engine::{
+    Engine, JobSpec, MultiTrainJob, PreparedStep, Session, StepStats, TaskData,
+};
+use crate::runtime::env;
+
+use super::ledger::EpsLedger;
+use super::ServeError;
+
+/// Scheduler-level budgets and switches.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Hard cap on concurrently *active* tenants (admission control).
+    pub max_tenants: usize,
+    /// Admission memory budget in bytes over all admitted sessions
+    /// (mutable state + each distinct shared frozen copy counted once);
+    /// `None` = unlimited.
+    pub mem_budget_bytes: Option<usize>,
+    /// Coalesce same-artifact chunks into cross-tenant panel sweeps.
+    pub batching: bool,
+    /// Worker-thread budget for the engine's kernel pool (applied by the
+    /// CLI/bench when constructing the backend; `None` = backend default).
+    pub workers: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { max_tenants: 64, mem_budget_bytes: None, batching: true, workers: None }
+    }
+}
+
+impl ServeConfig {
+    /// Defaults overridden by the `FASTDP_SERVE_*` knobs
+    /// (`FASTDP_SERVE_MEM_MB`, `FASTDP_SERVE_BATCHING`,
+    /// `FASTDP_SERVE_WORKERS`).
+    pub fn from_env() -> ServeConfig {
+        let mut cfg = ServeConfig::default();
+        if let Some(mb) = env::serve_mem_mb() {
+            cfg.mem_budget_bytes = Some(mb * (1 << 20));
+        }
+        if let Some(on) = env::serve_batching() {
+            cfg.batching = on;
+        }
+        cfg.workers = env::serve_workers();
+        cfg
+    }
+}
+
+/// Why a tenant stopped stepping.  Retired tenants stay inspectable (and
+/// keep their memory) until the scheduler is dropped.
+#[derive(Debug, Clone, Copy)]
+pub enum TenantExit {
+    /// Ran its full step target.
+    Completed { steps: u64, eps_spent: f64 },
+    /// The next step's projected ε would cross the hard cap: retired
+    /// cleanly *before* spending, at `spent` < `cap` <= `projected`.
+    EpsCapReached { spent: f64, projected: f64, cap: f64 },
+}
+
+struct Tenant {
+    name: String,
+    session: Session,
+    data: TaskData,
+    ledger: Option<EpsLedger>,
+    steps_target: u64,
+    last: Option<StepStats>,
+    exit: Option<TenantExit>,
+}
+
+/// The multi-tenant scheduler: owns the engine and every admitted session.
+pub struct Scheduler {
+    engine: Engine,
+    cfg: ServeConfig,
+    tenants: Vec<Tenant>,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, cfg: ServeConfig) -> Scheduler {
+        Scheduler { engine, cfg, tenants: Vec::new() }
+    }
+
+    /// The owned engine (dataset construction, capacity queries).
+    pub fn engine(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Admit a tenant: build its session and charge the tenant/memory
+    /// budgets.  Returns the tenant id, or a typed refusal — an admission
+    /// refusal never affects already-admitted tenants.
+    pub fn admit(
+        &mut self,
+        name: &str,
+        spec: &JobSpec,
+        data: TaskData,
+        eps_cap: Option<f64>,
+    ) -> Result<usize, ServeError> {
+        if spec.replicas > 1 {
+            return Err(ServeError::Unsupported(format!(
+                "replicated jobs (replicas = {}) own their chunks and cannot be multiplexed",
+                spec.replicas
+            )));
+        }
+        let active = self.active();
+        if active >= self.cfg.max_tenants {
+            return Err(ServeError::TenantBudgetFull {
+                admitted: active,
+                max_tenants: self.cfg.max_tenants,
+            });
+        }
+        let session = self.engine.session(spec)?;
+        if let Some(budget) = self.cfg.mem_budget_bytes {
+            // the frozen vector is charged only for its first referent:
+            // same-model sessions share one copy (the engine's dedupe)
+            let shared =
+                self.tenants.iter().any(|t| t.session.frozen_ptr() == session.frozen_ptr());
+            let needed =
+                session.resident_bytes() + if shared { 0 } else { session.frozen_bytes() };
+            let free = budget.saturating_sub(self.used_bytes());
+            if needed > free {
+                return Err(ServeError::MemoryBudgetFull {
+                    needed_bytes: needed,
+                    free_bytes: free,
+                });
+            }
+        }
+        self.tenants.push(Tenant {
+            name: name.to_string(),
+            session,
+            data,
+            ledger: eps_cap.map(EpsLedger::new),
+            steps_target: spec.steps,
+            last: None,
+            exit: None,
+        });
+        Ok(self.tenants.len() - 1)
+    }
+
+    /// Bytes held by admitted sessions: per-tenant mutable state plus
+    /// each distinct frozen allocation counted once.
+    pub fn used_bytes(&self) -> usize {
+        let mut total = 0usize;
+        let mut seen_frozen: Vec<usize> = Vec::new();
+        for t in &self.tenants {
+            total += t.session.resident_bytes();
+            let ptr = t.session.frozen_ptr();
+            if !seen_frozen.contains(&ptr) {
+                seen_frozen.push(ptr);
+                total += t.session.frozen_bytes();
+            }
+        }
+        total
+    }
+
+    /// Tenants admitted (active + retired).
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Tenants still stepping.
+    pub fn active(&self) -> usize {
+        self.tenants.iter().filter(|t| t.exit.is_none()).count()
+    }
+
+    pub fn name(&self, id: usize) -> &str {
+        &self.tenants[id].name
+    }
+
+    /// The tenant's session (parameters, privacy_spent, evaluation).
+    pub fn session(&self, id: usize) -> &Session {
+        &self.tenants[id].session
+    }
+
+    /// Why the tenant stopped (`None` while still active).
+    pub fn exit(&self, id: usize) -> Option<&TenantExit> {
+        self.tenants[id].exit.as_ref()
+    }
+
+    /// Stats of the tenant's most recent step.
+    pub fn last_stats(&self, id: usize) -> Option<StepStats> {
+        self.tenants[id].last
+    }
+
+    /// Every admitted session, in tenant-id order (capacity reporting).
+    pub fn sessions(&self) -> impl Iterator<Item = &Session> {
+        self.tenants.iter().map(|t| &t.session)
+    }
+
+    /// One fair-share round: every runnable tenant advances exactly one
+    /// step (see the module docs for the four sub-phases).  Returns how
+    /// many tenants stepped; `0` means every tenant is retired.
+    pub fn run_round(&mut self) -> Result<usize, ServeError> {
+        // 1. pre-step ε gate, in tenant-id order: retire BEFORE spending
+        for t in self.tenants.iter_mut() {
+            if t.exit.is_some() {
+                continue;
+            }
+            if let Some(ledger) = &t.ledger {
+                if t.session.is_dp() {
+                    let projected = t.session.projected_epsilon(1);
+                    if ledger.would_exceed(projected) {
+                        t.exit = Some(TenantExit::EpsCapReached {
+                            spent: t.session.privacy_spent().epsilon,
+                            projected,
+                            cap: ledger.cap(),
+                        });
+                    }
+                }
+            }
+        }
+        // 2. prepare: sample + fill every runnable tenant's chunks
+        let mut preps: Vec<Option<PreparedStep>> =
+            (0..self.tenants.len()).map(|_| None).collect();
+        let mut stepped = 0usize;
+        for (id, t) in self.tenants.iter_mut().enumerate() {
+            if t.exit.is_some() {
+                continue;
+            }
+            preps[id] = Some(t.session.prepare_step(&t.data)?);
+            stepped += 1;
+        }
+        if stepped == 0 {
+            return Ok(0);
+        }
+        // 3. execute in chunk waves; wave w runs every tenant's w-th chunk
+        let max_chunks = preps.iter().flatten().map(|p| p.n_chunks()).max().unwrap_or(0);
+        for wave in 0..max_chunks {
+            // group this wave's chunks by train artifact (a BTreeMap keeps
+            // group order deterministic); one engine serves one cached
+            // runner per artifact, so a group shares a single step instance
+            let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            let mut solo: Vec<usize> = Vec::new();
+            for id in 0..self.tenants.len() {
+                let Some(prep) = &preps[id] else { continue };
+                if wave >= prep.n_chunks() {
+                    continue;
+                }
+                let session = &self.tenants[id].session;
+                let batchable = self.cfg.batching
+                    && !session.has_replicas()
+                    && session.multi_inputs(&prep.chunks[wave]).is_some();
+                if batchable {
+                    groups.entry(session.meta().name.clone()).or_default().push(id);
+                } else {
+                    solo.push(id);
+                }
+            }
+            for ids in groups.into_values() {
+                if ids.len() < 2 {
+                    // nothing to amortize; run it with the solo chunks
+                    solo.extend(ids);
+                    continue;
+                }
+                let runner = self.tenants[ids[0]].session.runner();
+                let outs = {
+                    let jobs: Vec<MultiTrainJob<'_>> = ids
+                        .iter()
+                        .map(|&id| {
+                            let prep = preps[id].as_ref().expect("grouped tenant has a prep");
+                            self.tenants[id]
+                                .session
+                                .multi_inputs(&prep.chunks[wave])
+                                .expect("batchable checked above")
+                        })
+                        .collect();
+                    runner.run_multi(&jobs)
+                };
+                match outs {
+                    // demux in fixed tenant order: out[j] is bit-identical
+                    // to tenant ids[j] running this chunk alone
+                    Some(Ok(outs)) => {
+                        for (&id, out) in ids.iter().zip(&outs) {
+                            preps[id].as_mut().expect("grouped tenant has a prep").absorb(out);
+                        }
+                    }
+                    Some(Err(e)) => return Err(e.into()),
+                    // the runner has no coalesced path (non-panel tier)
+                    None => solo.extend(ids),
+                }
+            }
+            for id in solo {
+                let out = {
+                    let prep = preps[id].as_ref().expect("solo tenant has a prep");
+                    let (x, y, mask) = &prep.chunks[wave];
+                    self.tenants[id].session.run_chunk(x, y, mask)?
+                };
+                preps[id].as_mut().expect("solo tenant has a prep").absorb(&out);
+            }
+        }
+        // 4. finish: per-tenant DP state transitions, ledger, retirement
+        for (id, t) in self.tenants.iter_mut().enumerate() {
+            let Some(prep) = preps[id].take() else { continue };
+            let stats = t.session.finish_step(prep)?;
+            if let Some(ledger) = &mut t.ledger {
+                if !ledger.record(stats.epsilon) {
+                    // the pre-step projection exists to make this
+                    // unreachable; if it ever fires, fail loudly rather
+                    // than keep spending a tenant's budget
+                    return Err(ServeError::EpsCapExceeded {
+                        tenant: id,
+                        name: t.name.clone(),
+                        spent: stats.epsilon,
+                        cap: ledger.cap(),
+                    });
+                }
+            }
+            t.last = Some(stats);
+            if t.session.step() >= t.steps_target {
+                t.exit = Some(TenantExit::Completed {
+                    steps: t.session.step(),
+                    eps_spent: t.session.privacy_spent().epsilon,
+                });
+            }
+        }
+        Ok(stepped)
+    }
+
+    /// Run rounds until every tenant has retired.
+    pub fn run_to_completion(&mut self) -> Result<(), ServeError> {
+        while self.run_round()? > 0 {}
+        Ok(())
+    }
+}

@@ -1,0 +1,306 @@
+//! Serve-scheduler contracts (`fastdp::serve`):
+//!
+//! * **Multiplexing is invisible.** A tenant scheduled through
+//!   `serve::Scheduler` — with cross-tenant coalesced panel sweeps on —
+//!   finishes with **bit-identical** parameters and spent epsilon to the
+//!   same spec run alone through `Session::run_step`, across tenant
+//!   counts {1, 4, 16} x worker threads {1, 8}, batched and unbatched.
+//!   (The solo baseline is computed once: the blocked tier is itself
+//!   bit-identical across thread counts, so one baseline pins them all.)
+//! * **Fallbacks are invisible too.** Mixed-artifact tenants (which never
+//!   share a coalesced sweep) and non-panel kernel tiers (where
+//!   `run_multi` declines) take the per-tenant path and still match solo.
+//! * **Admission is typed.** A full tenant budget or memory budget refuses
+//!   with `ServeError::TenantBudgetFull` / `MemoryBudgetFull` without
+//!   disturbing admitted tenants; the memory budget charges each shared
+//!   frozen copy once (two same-model tenants fit where two private
+//!   copies would not).
+//! * **Epsilon caps are hard and pre-step.** A capped tenant is retired
+//!   mid-stream (`TenantExit::EpsCapReached`) with `spent <= cap <
+//!   projected` — never over-spent — while uncapped tenants in the same
+//!   scheduler run to completion.
+
+use fastdp::engine::{Engine, InterpreterBackend, JobSpec, KernelMode, Method, OptimKind};
+use fastdp::serve::{capacity_report, Scheduler, ServeConfig, ServeError, TenantExit};
+
+/// DP-BiTFiT spec, sigma pinned (no calibration), small but multi-chunk.
+fn spec_for(model: &str, seed: u64, steps: u64) -> JobSpec {
+    JobSpec::builder(model, Method::BiTFiT)
+        .sigma(0.8)
+        .delta(1e-5)
+        .optim(OptimKind::Adam)
+        .lr(5e-3)
+        .clip_r(0.1)
+        .batch(64)
+        .steps(steps)
+        .n_train(256)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+fn engine_with(threads: usize, mode: KernelMode) -> Engine {
+    Engine::new(Box::new(InterpreterBackend::with_config(Some(threads), Some(mode))))
+}
+
+/// Final (param bits, epsilon bits) — the whole trajectory summary.
+type Fingerprint = (Vec<u32>, u64);
+
+fn fingerprint_of(session: &fastdp::engine::Session) -> Fingerprint {
+    (
+        session.full_params().iter().map(|v| v.to_bits()).collect(),
+        session.privacy_spent().epsilon.to_bits(),
+    )
+}
+
+/// Solo baseline: the plain `run_step` loop the scheduler must reproduce.
+fn solo(model: &str, seed: u64, steps: u64, threads: usize, mode: KernelMode) -> Fingerprint {
+    let mut engine = engine_with(threads, mode);
+    let spec = spec_for(model, seed, steps);
+    let task = engine.default_task(model).unwrap();
+    let data = engine.dataset(model, task, spec.n_train, spec.seed).unwrap();
+    let mut session = engine.session(&spec).unwrap();
+    for _ in 0..spec.steps {
+        session.run_step(&data).unwrap();
+    }
+    fingerprint_of(&session)
+}
+
+/// Run `seeds.len()` tenants (tenant i = `spec_for(model, seeds[i], ..)`)
+/// through one scheduler; return each tenant's fingerprint.
+fn serve_run(
+    model: &str,
+    seeds: &[u64],
+    steps: u64,
+    threads: usize,
+    mode: KernelMode,
+    batching: bool,
+) -> Vec<Fingerprint> {
+    let cfg = ServeConfig { batching, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(engine_with(threads, mode), cfg);
+    for (i, &seed) in seeds.iter().enumerate() {
+        let spec = spec_for(model, seed, steps);
+        let task = sched.engine().default_task(model).unwrap();
+        let data = sched.engine().dataset(model, task, spec.n_train, spec.seed).unwrap();
+        sched.admit(&format!("tenant-{i}"), &spec, data, None).unwrap();
+    }
+    sched.run_to_completion().unwrap();
+    for id in 0..sched.len() {
+        assert!(
+            matches!(sched.exit(id), Some(TenantExit::Completed { steps: s, .. }) if *s == steps),
+            "tenant {id} must complete its {steps}-step target"
+        );
+    }
+    (0..sched.len()).map(|id| fingerprint_of(sched.session(id))).collect()
+}
+
+const STEPS: u64 = 3;
+
+#[test]
+fn batched_tenants_match_solo_bit_for_bit() {
+    let model = "cls-base";
+    // one baseline per tenant seed; the blocked tier is bit-identical
+    // across thread counts, so threads=1 pins every serve config below
+    let solos: Vec<Fingerprint> =
+        (0..16).map(|i| solo(model, 100 + i, STEPS, 1, KernelMode::Blocked)).collect();
+    for &threads in &[1usize, 8] {
+        for &n in &[1usize, 4, 16] {
+            let seeds: Vec<u64> = (0..n as u64).map(|i| 100 + i).collect();
+            let got = serve_run(model, &seeds, STEPS, threads, KernelMode::Blocked, true);
+            for (i, fp) in got.iter().enumerate() {
+                assert_eq!(
+                    fp, &solos[i],
+                    "tenant {i} of {n} (threads={threads}) diverged from its solo run"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn unbatched_scheduling_is_the_same_trajectory() {
+    let model = "cls-base";
+    let seeds = [100u64, 101, 102, 103];
+    let batched = serve_run(model, &seeds, STEPS, 8, KernelMode::Blocked, true);
+    let unbatched = serve_run(model, &seeds, STEPS, 8, KernelMode::Blocked, false);
+    assert_eq!(batched, unbatched, "batching must be a pure throughput knob");
+}
+
+#[test]
+fn simd_tier_batches_bit_identically_too() {
+    let model = "cls-base";
+    let seeds = [100u64, 101, 102, 103];
+    let solos: Vec<Fingerprint> =
+        seeds.iter().map(|&s| solo(model, s, STEPS, 1, KernelMode::Simd)).collect();
+    let got = serve_run(model, &seeds, STEPS, 8, KernelMode::Simd, true);
+    assert_eq!(got, solos);
+}
+
+#[test]
+fn mixed_artifact_tenants_fall_back_and_still_match_solo() {
+    // cls-base and lm-small never share shapes, so with batching on every
+    // group is a singleton and the solo path runs — results must be
+    // indistinguishable from training alone
+    let cfg = ServeConfig::default();
+    let mut sched = Scheduler::new(engine_with(2, KernelMode::Blocked), cfg);
+    for (i, model) in ["cls-base", "lm-small", "cls-base"].iter().enumerate() {
+        let spec = spec_for(model, 200 + i as u64, STEPS);
+        let task = sched.engine().default_task(model).unwrap();
+        let data = sched.engine().dataset(model, task, spec.n_train, spec.seed).unwrap();
+        sched.admit(&format!("tenant-{i}"), &spec, data, None).unwrap();
+    }
+    sched.run_to_completion().unwrap();
+    for (i, model) in ["cls-base", "lm-small", "cls-base"].iter().enumerate() {
+        let want = solo(model, 200 + i as u64, STEPS, 2, KernelMode::Blocked);
+        assert_eq!(fingerprint_of(sched.session(i)), want, "tenant {i} ({model})");
+    }
+}
+
+#[test]
+fn non_panel_tier_declines_coalescing_but_matches_its_solo() {
+    // fused has no run_multi path: the scheduler must detect the None and
+    // run every chunk per-tenant, matching the fused solo trajectory
+    let model = "cls-base";
+    let seeds = [300u64, 301];
+    let solos: Vec<Fingerprint> =
+        seeds.iter().map(|&s| solo(model, s, STEPS, 2, KernelMode::Fused)).collect();
+    let got = serve_run(model, &seeds, STEPS, 2, KernelMode::Fused, true);
+    assert_eq!(got, solos);
+}
+
+#[test]
+fn tenant_budget_refuses_with_typed_error() {
+    let cfg = ServeConfig { max_tenants: 2, ..ServeConfig::default() };
+    let mut sched = Scheduler::new(engine_with(1, KernelMode::Blocked), cfg);
+    for i in 0..2u64 {
+        let spec = spec_for("cls-base", 400 + i, STEPS);
+        let data = sched.engine().dataset("cls-base", "sst2", spec.n_train, spec.seed).unwrap();
+        sched.admit(&format!("tenant-{i}"), &spec, data, None).unwrap();
+    }
+    let spec = spec_for("cls-base", 402, STEPS);
+    let data = sched.engine().dataset("cls-base", "sst2", spec.n_train, spec.seed).unwrap();
+    match sched.admit("tenant-2", &spec, data, None) {
+        Err(ServeError::TenantBudgetFull { admitted, max_tenants }) => {
+            assert_eq!(admitted, 2);
+            assert_eq!(max_tenants, 2);
+        }
+        other => panic!("expected TenantBudgetFull, got {other:?}"),
+    }
+    // the refusal must not have disturbed the admitted tenants
+    assert_eq!(sched.len(), 2);
+    sched.run_to_completion().unwrap();
+}
+
+#[test]
+fn memory_budget_charges_shared_frozen_once() {
+    // probe the real per-session footprint with an unlimited scheduler
+    let (resident, frozen) = {
+        let mut probe = Scheduler::new(engine_with(1, KernelMode::Blocked), ServeConfig::default());
+        let spec = spec_for("cls-base", 500, STEPS);
+        let data = probe.engine().dataset("cls-base", "sst2", spec.n_train, spec.seed).unwrap();
+        let id = probe.admit("probe", &spec, data, None).unwrap();
+        (probe.session(id).resident_bytes(), probe.session(id).frozen_bytes())
+    };
+    assert!(frozen > resident, "cls-base frozen backbone dwarfs BiTFiT state");
+
+    // budget fits ONE frozen copy + two tenants' mutable state: only the
+    // engine's shared-frozen dedupe makes the second admission possible
+    let budget = frozen + 2 * resident + resident / 2;
+    let cfg =
+        ServeConfig { mem_budget_bytes: Some(budget), ..ServeConfig::default() };
+    let mut sched = Scheduler::new(engine_with(1, KernelMode::Blocked), cfg);
+    for i in 0..2u64 {
+        let spec = spec_for("cls-base", 500 + i, STEPS);
+        let data = sched.engine().dataset("cls-base", "sst2", spec.n_train, spec.seed).unwrap();
+        sched.admit(&format!("tenant-{i}"), &spec, data, None).unwrap();
+    }
+    assert!(budget < 2 * (frozen + resident), "budget must not fit two private copies");
+    // a third tenant (another `resident` + shared frozen) exceeds it
+    let spec = spec_for("cls-base", 502, STEPS);
+    let data = sched.engine().dataset("cls-base", "sst2", spec.n_train, spec.seed).unwrap();
+    match sched.admit("tenant-2", &spec, data, None) {
+        Err(ServeError::MemoryBudgetFull { needed_bytes, free_bytes }) => {
+            assert!(needed_bytes > free_bytes, "{needed_bytes} vs {free_bytes}");
+        }
+        other => panic!("expected MemoryBudgetFull, got {other:?}"),
+    }
+    assert_eq!(sched.len(), 2);
+
+    let report = capacity_report(&sched);
+    assert_eq!(report.tenants, 2);
+    assert_eq!(report.shared_frozen_bytes, frozen, "one frozen copy serves both tenants");
+    assert_eq!(report.unshared_frozen_bytes, 2 * frozen);
+    assert_eq!(report.resident_bytes, 2 * resident);
+    assert!(report.sessions_per_gb > 0.0);
+}
+
+#[test]
+fn eps_cap_retires_mid_stream_without_overspending() {
+    let model = "cls-base";
+    let long = 50u64;
+    // probe the accountant trajectory solo; a cap placed between the ε
+    // totals after steps 3 and 4 must retire the tenant at exactly step 3
+    let eps_at: Vec<f64> = {
+        let mut engine = engine_with(2, KernelMode::Blocked);
+        let spec = spec_for(model, 600, long);
+        let task = engine.default_task(model).unwrap();
+        let data = engine.dataset(model, task, spec.n_train, spec.seed).unwrap();
+        let mut session = engine.session(&spec).unwrap();
+        (0..5)
+            .map(|_| {
+                session.run_step(&data).unwrap();
+                session.privacy_spent().epsilon
+            })
+            .collect()
+    };
+    assert!(eps_at[3] > eps_at[2], "the accountant must keep spending");
+    let cap = 0.5 * (eps_at[2] + eps_at[3]);
+    let mut sched = Scheduler::new(engine_with(2, KernelMode::Blocked), ServeConfig::default());
+    // tenant 0 capped, tenant 1 uncapped — same spec otherwise
+    for (i, eps_cap) in [(0u64, Some(cap)), (1, None)] {
+        let spec = spec_for(model, 600 + i, long);
+        let task = sched.engine().default_task(model).unwrap();
+        let data = sched.engine().dataset(model, task, spec.n_train, spec.seed).unwrap();
+        sched.admit(&format!("tenant-{i}"), &spec, data, eps_cap).unwrap();
+    }
+    sched.run_to_completion().unwrap();
+
+    match sched.exit(0) {
+        Some(&TenantExit::EpsCapReached { spent, projected, cap: c }) => {
+            assert_eq!(c, cap);
+            assert!(spent <= cap, "retired tenant over-spent: {spent} > {cap}");
+            assert!(projected > cap, "retirement requires a crossing projection");
+        }
+        other => panic!("expected EpsCapReached, got {other:?}"),
+    }
+    let capped = sched.session(0);
+    assert_eq!(capped.step(), 3, "the cap sits between the step-3 and step-4 ε totals");
+    assert!(capped.privacy_spent().epsilon <= cap, "accountant agrees: never over cap");
+    // the uncapped tenant kept running after its neighbour retired
+    assert!(
+        matches!(sched.exit(1), Some(TenantExit::Completed { steps, .. }) if *steps == long),
+        "uncapped tenant must finish all {long} steps: {:?}",
+        sched.exit(1)
+    );
+}
+
+#[test]
+fn replicated_jobs_are_refused_at_admission() {
+    let mut sched = Scheduler::new(engine_with(1, KernelMode::Blocked), ServeConfig::default());
+    let spec = JobSpec::builder("cls-base", Method::BiTFiT)
+        .sigma(0.8)
+        .delta(1e-5)
+        .batch(64)
+        .steps(1)
+        .n_train(256)
+        .seed(1)
+        .replicas(2)
+        .build()
+        .unwrap();
+    let data = sched.engine().dataset("cls-base", "sst2", spec.n_train, spec.seed).unwrap();
+    assert!(matches!(
+        sched.admit("tenant-0", &spec, data, None),
+        Err(ServeError::Unsupported(_))
+    ));
+    assert!(sched.is_empty());
+}

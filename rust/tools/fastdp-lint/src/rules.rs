@@ -66,7 +66,7 @@ impl LintConfig {
             readme: None,
             env_rel: "runtime/env.rs".to_string(),
             pool_rel: "runtime/pool.rs".to_string(),
-            determinism_dirs: ["kernels/", "engine/", "coordinator/", "nlg/", "audit/"]
+            determinism_dirs: ["kernels/", "engine/", "coordinator/", "nlg/", "audit/", "serve/"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect(),

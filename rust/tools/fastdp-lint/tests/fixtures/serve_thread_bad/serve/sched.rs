@@ -1,0 +1,4 @@
+pub fn spawn_per_tenant() {
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}

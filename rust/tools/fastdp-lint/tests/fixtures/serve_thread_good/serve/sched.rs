@@ -1,0 +1,5 @@
+pub fn spawn_watchdog() {
+    // fastdp-lint: allow(thread-spawn) serve watchdog outlives the pool
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}

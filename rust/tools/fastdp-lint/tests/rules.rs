@@ -48,6 +48,21 @@ fn thread_spawn_exempts_pool_and_honors_allow() {
 }
 
 #[test]
+fn thread_spawn_fires_in_serve_tree() {
+    // serve/ is scheduler territory: all parallelism belongs to the pool
+    let bad = lint("serve_thread_bad");
+    assert!(fired(&bad).contains(&"thread-spawn"), "{:?}", bad.findings);
+}
+
+#[test]
+fn thread_spawn_honors_allow_in_serve_tree() {
+    let good = lint("serve_thread_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+    assert_eq!(good.allowed.len(), 1, "{:?}", good.allowed);
+    assert_eq!(good.allowed[0].rule, "thread-spawn");
+}
+
+#[test]
 fn dp_flow_fires_on_unclipped_sink() {
     let bad = lint("taint_bad");
     let hits: Vec<_> = bad.findings.iter().filter(|f| f.rule == "dp-flow").collect();
