@@ -2,11 +2,11 @@
 # CI for the fastdp Rust workspace: format check, lints, tier-1
 # (build + tests), the fastdp-lint static-analysis stage, an audit-smoke
 # of the empirical privacy auditor, a serve-smoke of the multi-tenant
-# scheduler, the determinism env matrix, then a bench-smoke of the
-# throughput harness.
+# scheduler, a transport-smoke of the replica wire layer, the determinism
+# env matrix, then a bench-smoke of the throughput harness.
 # Everything runs offline — dependencies are vendored under rust/vendor/.
 #
-# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-lint] [--no-audit] [--no-serve] [--no-bench] [--no-matrix]
+# Usage: ./ci.sh [--no-fmt] [--no-clippy] [--no-lint] [--no-audit] [--no-serve] [--no-transport] [--no-bench] [--no-matrix]
 
 set -euo pipefail
 cd "$(dirname "$0")/rust"
@@ -16,6 +16,7 @@ run_clippy=1
 run_lint=1
 run_audit=1
 run_serve=1
+run_transport=1
 run_bench=1
 run_matrix=1
 for arg in "$@"; do
@@ -25,6 +26,7 @@ for arg in "$@"; do
         --no-lint) run_lint=0 ;;
         --no-audit) run_audit=0 ;;
         --no-serve) run_serve=0 ;;
+        --no-transport) run_transport=0 ;;
         --no-bench) run_bench=0 ;;
         --no-matrix) run_matrix=0 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
@@ -120,6 +122,40 @@ if [ "$run_serve" = 1 ]; then
     fi
     rm -f "$out"
     echo "serve-smoke OK"
+fi
+
+if [ "$run_transport" = 1 ]; then
+    # Transport-smoke: drive replicated training over real TCP loopback
+    # sockets for replica counts {2, 4}.  The dedicated test binaries pin
+    # raw-f32le TCP exchanges bitwise to the in-process channel path (and
+    # transitively to the single-replica run), exercise the straggler
+    # deadline / poison / rejoin machinery, and fault-inject the frame
+    # layer; the comm-cost bench then re-measures §3.1 wire bytes over both
+    # transports and both codecs, exiting non-zero if the >= 100x
+    # full-vs-BiTFiT ratio, the >= 40% bf16 reduction, the 1e-2 compact
+    # tolerance or raw bit-identity ever fails.
+    echo "==> transport-smoke: framed TCP exchange determinism + robustness"
+    cargo test -q --test transport_determinism
+    cargo test -q --test transport_robustness
+    echo "==> transport-smoke: comm-cost contracts over channel + tcp (quick grid)"
+    out="$(mktemp "${TMPDIR:-/tmp}/comm_smoke.XXXXXX.json")"
+    FASTDP_BENCH_QUICK=1 FASTDP_COMM_OUT="$out" cargo bench --bench comm_cost
+    for key in '"comm_cost"' '"points"' '"summary"' '"projected"' \
+               '"bytes_to_leader"' '"bytes_from_leader"' '"wall_secs"' \
+               '"ratio_full_vs_bitfit_channel"' '"ratio_full_vs_bitfit_tcp"' \
+               '"compact_reduction_channel"' '"compact_reduction_tcp"' \
+               '"raw_bit_identical"' '"compact_within_tolerance"'; do
+        grep -q "$key" "$out" || { echo "transport-smoke: $key missing from $out" >&2; exit 1; }
+    done
+    # seed the in-repo comm snapshot if it has never been recorded; a
+    # later full grid (cargo bench --bench comm_cost) overwrites it
+    snap="../BENCH_comm_cost.json"
+    if [ ! -f "$snap" ]; then
+        cp "$out" "$snap"
+        echo "transport-smoke: seeded $snap (smoke-sized; run the full grid to refresh)"
+    fi
+    rm -f "$out"
+    echo "transport-smoke OK"
 fi
 
 if [ "$run_matrix" = 1 ]; then

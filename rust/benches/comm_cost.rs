@@ -1,34 +1,65 @@
 //! Paper §3.1: distributed communication cost — 64 M D bits per exchange
 //! for DP full fine-tuning vs 64 M D_bias for DP-BiTFiT (~1000x reduction).
 //!
-//! Two tables:
+//! Three views, all measured on real replicated training (the bytes come
+//! from the wire via `Session::comm_stats`, not from a formula):
 //!
-//! 1. **Measured.**  Real replicated training runs on the interpreter
-//!    backend (`JobSpec::replicas`): M data-parallel workers computing
-//!    per-sample clipped gradients over disjoint shards of the Poisson
-//!    logical batch, shipping serialized gradient sums to the leader and
-//!    receiving updated trainable parameters back.  The byte counts come
-//!    from the wire (`Session::comm_stats`), not from a formula — this
-//!    retired the synthetic `simulate()` harness that used to live in
-//!    `coordinator::distributed`.  Full-FT and BiTFiT runs share one seed,
-//!    so they sample identical logical batches and the measured ratio is
-//!    exactly D / D_bias for the reference nets.
+//! 1. **Transports.**  Every (model, method) cell runs over both the
+//!    in-process channel path and framed TCP loopback; the full-vs-BiTFiT
+//!    byte ratio must hold on the real socket, not just in-process, and the
+//!    raw-f32le trajectories must be bit-identical across transports.
+//! 2. **Codecs.**  The BiTFiT exchange re-runs under the `bf16` compact
+//!    codec: bytes-to-leader must drop >= 40% while the final parameters
+//!    stay within 1e-2 relative l2 of the raw-f32le trajectory.
+//! 3. **Projected.**  `distributed::paper_round_bytes` applied to the
+//!    paper's published architectures via the model-zoo parameter counts,
+//!    where the bias fraction pushes the reduction to the ~1000x headline.
 //!
-//! 2. **Projected.**  The same per-round accounting
-//!    (`distributed::paper_round_bytes`) applied to the paper's published
-//!    architectures via the model-zoo parameter counts, where the bias
-//!    fraction — and therefore the reduction — reaches the ~1000x headline.
+//! Emits `BENCH_comm_cost.json` at the repo root (points + summary) and
+//! exits non-zero if any §3.1 contract fails — this is the bench the
+//! `ci.sh` transport-smoke stage drives.
+//!
+//! Knobs (all env vars, read through the registry):
+//!   FASTDP_COMM_OUT      output path override
+//!   FASTDP_BENCH_QUICK   set => small grid (the ci.sh transport-smoke stage)
 
+use std::time::Instant;
+
+use fastdp::bench;
 use fastdp::coordinator::distributed::paper_round_bytes;
-use fastdp::engine::{CommStats, Engine, JobSpec, Method, OptimKind};
+use fastdp::engine::{
+    CommStats, Engine, JobSpec, Method, OptimKind, TransportKind, WireCodec,
+};
 use fastdp::models::zoo;
+use fastdp::runtime::env;
+use fastdp::util::json::{self, Json};
 use fastdp::util::table::Table;
 
-const WORKERS: usize = 4;
-const STEPS: u64 = 4;
+const STEPS: u64 = 3;
 
-/// Run a real replicated DP fine-tuning job; return measured traffic.
-fn measure(model: &str, method: Method) -> CommStats {
+/// Whole-trajectory fingerprint: per-step loss bits + final param bits.
+type Fingerprint = (Vec<u64>, Vec<u32>);
+
+struct Point {
+    model: &'static str,
+    method: &'static str,
+    transport: TransportKind,
+    wire: WireCodec,
+    comm: CommStats,
+    wall_secs: f64,
+    fp: Fingerprint,
+}
+
+/// Run a real replicated DP fine-tuning job over the given transport and
+/// codec; return measured traffic, wall-clock and the trajectory fingerprint.
+fn measure(
+    model: &'static str,
+    method: Method,
+    method_name: &'static str,
+    workers: usize,
+    transport: TransportKind,
+    wire: WireCodec,
+) -> Point {
     let mut engine = Engine::interpreter();
     let spec = JobSpec::builder(model, method)
         .sigma(0.8)
@@ -40,65 +71,280 @@ fn measure(model: &str, method: Method) -> CommStats {
         .steps(STEPS)
         .n_train(256)
         .seed(5)
-        .replicas(WORKERS)
+        .replicas(workers)
+        .transport(transport)
+        .wire(wire)
         .build()
         .expect("valid spec");
     let task = engine.default_task(model).expect("task");
     let data = engine.dataset(model, task, spec.n_train, 5).expect("dataset");
     let mut session = engine.session(&spec).expect("session");
+    let mut losses = Vec::new();
+    let t0 = Instant::now();
     for _ in 0..STEPS {
-        session.run_step(&data).expect("step");
+        losses.push(session.run_step(&data).expect("step").loss.to_bits());
     }
-    session.comm_stats().expect("replicated runs measure traffic")
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let params = session.full_params().iter().map(|v| v.to_bits()).collect();
+    let comm = session.comm_stats().expect("replicated runs measure traffic");
+    Point { model, method: method_name, transport, wire, comm, wall_secs, fp: (losses, params) }
+}
+
+/// Relative l2 distance between two param-bit vectors.
+fn rel_l2(a: &[u32], b: &[u32]) -> f64 {
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        let (x, y) = (f32::from_bits(*x) as f64, f32::from_bits(*y) as f64);
+        num += (x - y) * (x - y);
+        den += x * x;
+    }
+    (num / den.max(1e-24)).sqrt()
+}
+
+fn find<'a>(
+    points: &'a [Point],
+    model: &str,
+    method: &str,
+    transport: TransportKind,
+    wire: WireCodec,
+) -> &'a Point {
+    points
+        .iter()
+        .find(|p| {
+            p.model == model && p.method == method && p.transport == transport && p.wire == wire
+        })
+        .expect("grid point")
 }
 
 fn main() {
+    let quick = bench::quick();
+    let workers: usize = if quick { 2 } else { 4 };
+    let models: &[&'static str] =
+        if quick { &["cls-base"] } else { &["cls-base", "cls-large", "vit-c10"] };
+    let transports = [TransportKind::Channel, TransportKind::Tcp];
+
     println!(
-        "## §3.1 — communication volume, M = {WORKERS} replica workers, {STEPS} logical batches\n"
+        "## §3.1 — communication volume, M = {workers} replica workers, {STEPS} logical batches\n"
     );
-    println!("measured on real replicated DP training (interpreter backend, bytes on the wire):\n");
+
+    // ------------------------------------------------------------ sweep --
+    let mut points: Vec<Point> = Vec::new();
+    for &model in models {
+        for kind in transports {
+            // full-FT always ships raw (the codec story is about the bias
+            // payload); BiTFiT runs both codecs
+            points.push(measure(
+                model,
+                Method::Full { ghost: true },
+                "full",
+                workers,
+                kind,
+                WireCodec::RawF32le,
+            ));
+            for wire in [WireCodec::RawF32le, WireCodec::Bf16] {
+                points.push(measure(model, Method::BiTFiT, "bitfit", workers, kind, wire));
+            }
+        }
+    }
+
+    println!("measured on real replicated DP training (bytes on the wire):\n");
     let mut t = Table::new(&[
         "model",
-        "full-FT bytes",
-        "BiTFiT bytes",
-        "D",
-        "D_bias",
-        "reduction",
+        "method",
+        "transport",
+        "wire",
+        "to-leader B",
+        "from-leader B",
+        "grad len",
+        "wall s",
     ]);
-    for model in ["cls-base", "cls-large", "vit-c10"] {
-        let full = measure(model, Method::Full { ghost: true });
-        let bias = measure(model, Method::BiTFiT);
+    for p in &points {
         t.row(vec![
-            model.into(),
-            full.total_bytes().to_string(),
-            bias.total_bytes().to_string(),
-            full.grad_len.to_string(),
-            bias.grad_len.to_string(),
-            format!("{:.0}x", full.total_bytes() as f64 / bias.total_bytes() as f64),
+            p.model.into(),
+            p.method.into(),
+            p.transport.name().into(),
+            p.wire.name().into(),
+            p.comm.bytes_to_leader.to_string(),
+            p.comm.bytes_from_leader.to_string(),
+            p.comm.grad_len.to_string(),
+            format!("{:.3}", p.wall_secs),
         ]);
     }
     t.print();
-    println!(
-        "\n(identical seeds => identical Poisson batches, so the measured ratio is exactly\n\
-         D / D_bias; the reference nets train their head under BiTFiT, which caps the ratio\n\
-         around 100x — the paper's published architectures are below)\n"
-    );
 
-    println!("projected per-exchange volume for the paper's architectures (same accounting):\n");
+    // -------------------------------------------------------- contracts --
+    // (a) >= 100x full-vs-BiTFiT wire reduction on cls-base, both transports
+    let mut ratios = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for kind in transports {
+        let full = find(&points, "cls-base", "full", kind, WireCodec::RawF32le);
+        let bias = find(&points, "cls-base", "bitfit", kind, WireCodec::RawF32le);
+        let ratio = full.comm.total_bytes() as f64 / bias.comm.total_bytes().max(1) as f64;
+        println!(
+            "\ncls-base {}: full {} B vs bitfit {} B -> {ratio:.0}x",
+            kind.name(),
+            full.comm.total_bytes(),
+            bias.comm.total_bytes()
+        );
+        if ratio < 100.0 {
+            failures.push(format!(
+                "full/bitfit byte ratio over {} is {ratio:.1}x, want >= 100x",
+                kind.name()
+            ));
+        }
+        ratios.push((kind, ratio));
+    }
+
+    // (b) raw-f32le is bit-identical across transports (every model/method)
+    let mut raw_bit_identical = true;
+    for &model in models {
+        for method in ["full", "bitfit"] {
+            let chan = find(&points, model, method, TransportKind::Channel, WireCodec::RawF32le);
+            let tcp = find(&points, model, method, TransportKind::Tcp, WireCodec::RawF32le);
+            if chan.fp != tcp.fp {
+                raw_bit_identical = false;
+                failures.push(format!("{model}/{method}: raw trajectory differs channel vs tcp"));
+            }
+        }
+    }
+
+    // (c) bf16 cuts bytes_to_leader >= 40% and stays within 1e-2 rel l2
+    let mut compact_within_tolerance = true;
+    let mut reductions = Vec::new();
+    for kind in transports {
+        let raw = find(&points, "cls-base", "bitfit", kind, WireCodec::RawF32le);
+        let bf = find(&points, "cls-base", "bitfit", kind, WireCodec::Bf16);
+        let reduction = 1.0 - bf.comm.bytes_to_leader as f64 / raw.comm.bytes_to_leader.max(1) as f64;
+        let drift = rel_l2(&raw.fp.1, &bf.fp.1);
+        println!(
+            "cls-base {}: bf16 cuts to-leader bytes {:.0}% ({} -> {}), param drift {:.2e}",
+            kind.name(),
+            reduction * 100.0,
+            raw.comm.bytes_to_leader,
+            bf.comm.bytes_to_leader,
+            drift
+        );
+        if reduction < 0.40 {
+            failures.push(format!(
+                "bf16 reduction over {} is {:.0}%, want >= 40%",
+                kind.name(),
+                reduction * 100.0
+            ));
+        }
+        if drift > 1e-2 {
+            compact_within_tolerance = false;
+            failures.push(format!(
+                "bf16 drift over {} is {drift:.2e}, want <= 1e-2 rel l2",
+                kind.name()
+            ));
+        }
+        reductions.push((kind, reduction));
+    }
+
+    // -------------------------------------------------------- projected --
+    println!("\nprojected per-exchange volume for the paper's architectures (same accounting):\n");
     let mut t = Table::new(&["model", "full-FT bytes", "BiTFiT bytes", "reduction"]);
+    let mut projected = Vec::new();
     for name in ["ResNet50", "GPT2-small", "RoBERTa-large"] {
         let z = zoo::find(name).unwrap();
         let d = z.counts.total() as usize;
         let d_bias = z.counts.biases as usize;
-        let full = paper_round_bytes(WORKERS, d);
-        let bias = paper_round_bytes(WORKERS, d_bias);
+        let full = paper_round_bytes(workers, d);
+        let bias = paper_round_bytes(workers, d_bias);
         t.row(vec![
             name.into(),
             full.to_string(),
             bias.to_string(),
             format!("{:.0}x", full as f64 / bias as f64),
         ]);
+        projected.push(json::obj(vec![
+            ("model", Json::Str(name.to_string())),
+            ("full_bytes", Json::Num(full as f64)),
+            ("bitfit_bytes", Json::Num(bias as f64)),
+            ("reduction", Json::Num(full as f64 / bias as f64)),
+        ]));
     }
     t.print();
     println!("\n(the paper's ~1000x claim is the D / D_bias ratio of these architectures)");
+
+    // ------------------------------------------------------------- JSON --
+    let point_objs: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            json::obj(vec![
+                ("model", Json::Str(p.model.to_string())),
+                ("method", Json::Str(p.method.to_string())),
+                ("transport", Json::Str(p.transport.name().to_string())),
+                ("wire", Json::Str(p.wire.name().to_string())),
+                ("bytes_to_leader", Json::Num(p.comm.bytes_to_leader as f64)),
+                ("bytes_from_leader", Json::Num(p.comm.bytes_from_leader as f64)),
+                ("total_bytes", Json::Num(p.comm.total_bytes() as f64)),
+                ("grad_len", Json::Num(p.comm.grad_len as f64)),
+                ("rounds", Json::Num(p.comm.rounds as f64)),
+                ("wall_secs", Json::Num(p.wall_secs)),
+            ])
+        })
+        .collect();
+    let ratio_of = |kind: TransportKind| ratios.iter().find(|(k, _)| *k == kind).unwrap().1;
+    let red_of = |kind: TransportKind| reductions.iter().find(|(k, _)| *k == kind).unwrap().1;
+    let summary = json::obj(vec![
+        ("ratio_full_vs_bitfit_channel", Json::Num(ratio_of(TransportKind::Channel))),
+        ("ratio_full_vs_bitfit_tcp", Json::Num(ratio_of(TransportKind::Tcp))),
+        ("compact_reduction_channel", Json::Num(red_of(TransportKind::Channel))),
+        ("compact_reduction_tcp", Json::Num(red_of(TransportKind::Tcp))),
+        ("raw_bit_identical", Json::Bool(raw_bit_identical)),
+        ("compact_within_tolerance", Json::Bool(compact_within_tolerance)),
+    ]);
+    let doc = json::write(&json::obj(vec![
+        ("bench", Json::Str("comm_cost".to_string())),
+        ("created_by", Json::Str("benches/comm_cost.rs".to_string())),
+        (
+            "sweep",
+            Json::Str(format!(
+                "quick={quick} workers={workers} steps={STEPS} models={}",
+                models.join(",")
+            )),
+        ),
+        ("workers", Json::Num(workers as f64)),
+        ("steps", Json::Num(STEPS as f64)),
+        ("points", Json::Arr(point_objs)),
+        ("summary", summary),
+        ("projected", Json::Arr(projected)),
+    ]));
+
+    let out_path = env::comm_out().unwrap_or_else(|| {
+        // benches run from rust/; the snapshot lives at the repo root
+        if std::path::Path::new("ROADMAP.md").exists() {
+            "BENCH_comm_cost.json".to_string()
+        } else if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_comm_cost.json".to_string()
+        } else {
+            "BENCH_comm_cost.json".to_string()
+        }
+    });
+    std::fs::write(&out_path, &doc).expect("write BENCH_comm_cost.json");
+    let back = std::fs::read_to_string(&out_path).expect("read back");
+    let parsed = json::parse(&back).expect("emitted JSON must parse");
+    for key in ["bench", "workers", "steps", "points", "summary", "projected"] {
+        assert!(parsed.get(key).is_some(), "emitted JSON missing key {key:?}");
+    }
+    let s = parsed.get("summary").unwrap();
+    for key in [
+        "ratio_full_vs_bitfit_channel",
+        "ratio_full_vs_bitfit_tcp",
+        "compact_reduction_channel",
+        "compact_reduction_tcp",
+        "raw_bit_identical",
+        "compact_within_tolerance",
+    ] {
+        assert!(s.get(key).is_some(), "summary missing key {key:?}");
+    }
+    println!("\nwrote {out_path} (schema OK)");
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
 }

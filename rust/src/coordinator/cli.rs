@@ -15,7 +15,9 @@ use anyhow::{Context, Result};
 use crate::analysis::complexity::{layer_complexity, LayerDims, Method as CMethod};
 use crate::dp::clip::ClipMode;
 use crate::dp::{calibrate, gdp, rdp};
-use crate::engine::{evaluate_params, Engine, JobSpec, LrSchedule, Method, OptimKind};
+use crate::engine::{
+    evaluate_params, Engine, JobSpec, LrSchedule, Method, OptimKind, TransportKind, WireCodec,
+};
 use crate::util::args::Args;
 use crate::util::config::Config;
 use crate::util::table::Table;
@@ -27,6 +29,8 @@ const USAGE: &str = "usage: fastdp <train|serve|eval|accountant|zoo|complexity|a
              [--lr F] [--eps F | --sigma F] [--delta F] [--clip F] [--clip-mode abadi|autos]
              [--optim sgd|adam|adamw] [--warmup N] [--n N] [--seed N]
              [--replicas N]     (data-parallel workers; bit-identical to 1)
+             [--transport channel|tcp] [--wire raw-f32le|bf16]
+             [--recv-timeout-ms N]  (replica reply deadline before poison)
              [--full-steps N --full-lr F]            (method two-phase)
              [--pretrained ckpt] [--save ckpt] [--log out.jsonl]
              [--config cfg.toml] [--set k=v]... [--artifacts DIR]
@@ -160,6 +164,27 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         .n_train(args.usize("n", cfg.i64("train.n", 4096) as usize))
         .seed(args.usize("seed", cfg.i64("train.seed", 0) as usize) as u64)
         .replicas(args.usize("replicas", cfg.i64("train.replicas", 1) as usize));
+    // replica transport: unset flags/keys leave the builder on its
+    // env-registry fallbacks (channel / raw-f32le / 30000 ms)
+    let transport = args.str("transport", &cfg.str("train.transport", ""));
+    if !transport.is_empty() {
+        b = b.transport(
+            TransportKind::parse(&transport)
+                .with_context(|| format!("unknown --transport {transport:?} (channel|tcp)"))?,
+        );
+    }
+    let wire = args.str("wire", &cfg.str("train.wire", ""));
+    if !wire.is_empty() {
+        b = b.wire(
+            WireCodec::parse(&wire)
+                .with_context(|| format!("unknown --wire {wire:?} (raw-f32le|bf16)"))?,
+        );
+    }
+    if let Some(ms) = args.get("recv-timeout-ms") {
+        b = b.recv_timeout_ms(ms.parse::<u64>().context("--recv-timeout-ms")?);
+    } else if let Some(ms) = cfg.values.get("train.recv_timeout_ms").and_then(|v| v.as_i64()) {
+        b = b.recv_timeout_ms(ms.max(0) as u64);
+    }
     let task = args.str("task", &cfg.str("train.task", ""));
     if !task.is_empty() {
         b = b.task(&task);
@@ -617,6 +642,26 @@ mod tests {
         let args = parse("train --model cls-base --method bitfit --sigma 1.0");
         assert_eq!(build_spec(&args).unwrap().replicas, 1);
         let args = parse("train --model cls-base --method bitfit --sigma 1.0 --replicas 0");
+        assert!(build_spec(&args).is_err());
+    }
+
+    #[test]
+    fn transport_flags_flow_into_the_spec() {
+        let args = parse(
+            "train --model cls-base --method bitfit --sigma 1.0 --replicas 2 \
+             --transport tcp --wire bf16 --recv-timeout-ms 750",
+        );
+        let spec = build_spec(&args).unwrap();
+        assert_eq!(spec.transport, TransportKind::Tcp);
+        assert_eq!(spec.wire, WireCodec::Bf16);
+        assert_eq!(spec.recv_timeout_ms, 750);
+        // vocabulary errors are caught at the flag layer
+        let args = parse("train --model cls-base --method bitfit --transport smoke-signals");
+        assert!(build_spec(&args).unwrap_err().to_string().contains("transport"));
+        let args = parse("train --model cls-base --method bitfit --wire fp8");
+        assert!(build_spec(&args).unwrap_err().to_string().contains("wire"));
+        // a zero deadline is rejected by the spec builder
+        let args = parse("train --model cls-base --method bitfit --recv-timeout-ms 0");
         assert!(build_spec(&args).is_err());
     }
 }

@@ -1,14 +1,16 @@
 //! Real data-parallel replicated training: N replica workers on real
 //! threads, each running the configured kernel tier of [`crate::kernels`]
 //! (fused by default; ghost/blocked/simd propagate from the leader's
-//! backend config) over a
-//! disjoint microbatch shard of the Poisson logical batch, shipping their
-//! clipped gradient sums to the leader over channels.  Bytes are counted on
-//! the wire (the payloads really are serialized byte vectors), so
+//! backend config) over a disjoint microbatch shard of the Poisson logical
+//! batch, shipping their clipped gradient sums to the leader over a
+//! pluggable [`crate::coordinator::transport`]: in-process channels (the
+//! default — byte-for-byte the PR 3 behavior) or framed TCP loopback
+//! sockets, with the per-exchange payloads encoded by a per-job
+//! [`WireCodec`] (`raw-f32le` bitwise, `bf16` half-width).  Bytes are
+//! counted on the wire as the *encoded* payload sizes, so
 //! `benches/comm_cost.rs` measures the paper's §3.1 claim — 64·M·D bits per
 //! exchange for full fine-tuning vs 64·M·D_bias for DP-BiTFiT — on an
-//! actual training run instead of the synthetic `simulate()` this module
-//! used to ship.
+//! actual training run over an actual socket.
 //!
 //! ## Determinism contract (the cross-replica analog of `runtime::pool`)
 //!
@@ -20,29 +22,53 @@
 //! because the assignment is contiguous — is exactly the global chunk
 //! order.  The leader therefore performs the identical sequence of f32
 //! `axpy` accumulations (and f64 loss additions) as the single-replica
-//! loop in `engine::Session::run_step`, so training is **bit-identical for
-//! any replica count**, including 1.  Gaussian noise is added exactly once
-//! per logical batch, by the leader, after the reduction.
+//! loop in `engine::Session::run_step`, so with the `raw-f32le` codec
+//! training is **bit-identical for any replica count and either
+//! transport**, including 1.  The `bf16` codec trades that for half the
+//! wire under the ghost/simd-style tolerance contract (1e-2 relative on
+//! short trajectories).  Gaussian noise is added exactly once per logical
+//! batch, by the leader, after the reduction.
+//!
+//! ## Straggler tolerance and rejoin
+//!
+//! Every leader-side receive is bounded by the job's `recv_timeout`
+//! ([`TransportOpts`], `FASTDP_RECV_TIMEOUT_MS`): a dead or straggling
+//! worker yields a typed [`EngineError`] within the deadline instead of
+//! hanging the reduction, and the group **poisons** (replies may still be
+//! in flight, so reducing further rounds would fold in stale gradients).
+//! [`ReplicaGroup::rejoin`] recovers without abandoning the phase: it
+//! spawns fresh workers for the dead slots, replays the cached frozen
+//! bootstrap to them, drains stranded replies from the survivors behind a
+//! sync barrier, and clears the poison — training state lives on the
+//! leader (parameters are re-broadcast every round), so the next
+//! `run_batch` continues the exact trajectory.  When the *leader* itself
+//! must move, pair this with `Session::save_state` /
+//! `Engine::resume_session` (the PR 3 snapshot).
 //!
 //! ## Wire accounting
 //!
 //! [`CommStats`] counts the two payload terms of the paper's formula:
 //! clipped gradient sums shipped up (`bytes_to_leader`) and updated
 //! trainable parameters broadcast back down (`bytes_from_leader`), both as
-//! real serialized f32 little-endian buffers.  Fixed-size control headers
-//! (chunk indices, per-chunk losses, the clip radius) and the one-time
-//! frozen-backbone broadcast at phase start (`bytes_bootstrap`) are
-//! tracked separately or not at all — they are provisioning, not the
-//! per-exchange traffic §3.1 is about.
+//! real serialized buffers in the job's wire codec.  Fixed-size control
+//! headers (chunk indices, per-chunk losses, the clip radius, frame
+//! magic/length/CRC) and the one-time frozen-backbone broadcast at phase
+//! start (`bytes_bootstrap`, always raw f32 LE) are tracked separately or
+//! not at all — they are provisioning, not the per-exchange traffic §3.1
+//! is about.
 //!
 //! Replication is driven by `engine::Session` (see `JobSpec::replicas`);
 //! workers are handed a backend factory so this module never hard-codes an
 //! execution backend.
 
 use std::rc::Rc;
-use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::coordinator::transport::{
+    self, ChunkResult, ChunkWork, FromWorker, LeaderLink, LinkFault, ToWorker, TransportOpts,
+    WireCodec, WorkerLink,
+};
 use crate::engine::{EngineError, Pinned, StepRunner};
 use crate::util::tensor::{f32s_from_le_bytes, f32s_to_le_bytes, Tensor};
 
@@ -94,90 +120,67 @@ pub fn paper_round_bytes(workers: usize, grad_len: usize) -> u64 {
     2 * 4 * workers as u64 * grad_len as u64
 }
 
-/// One microbatch assigned to a replica: its global chunk index plus the
-/// filled fixed-shape step inputs.
-struct ChunkWork {
-    index: usize,
-    x: Tensor,
-    y: Tensor,
-    mask: Tensor,
-}
-
-/// Leader -> worker messages.
-enum ToWorker {
-    /// Serialized frozen parameter vector (once per phase; bootstrap).
-    Frozen(Vec<u8>),
-    /// One logical-batch assignment: current trainable parameters plus the
-    /// chunks this replica owns, in ascending chunk order.
-    Run { train: Vec<u8>, clip_r: f32, chunks: Vec<ChunkWork> },
-}
-
-/// One chunk's result: raw summed loss and the serialized clipped
-/// gradient sum, still keyed by the global chunk index.
-struct ChunkResult {
-    index: usize,
-    loss: f32,
-    grad: Vec<u8>,
-}
-
-/// Worker -> leader messages.
-enum FromWorker {
-    /// Step loaded; the worker is ready for traffic.
-    Ready,
-    /// The factory failed inside the worker thread.
-    Failed(String),
-    /// Results for one `Run` assignment, in the assigned chunk order.
-    Batch(Vec<ChunkResult>),
-    /// A step execution failed.
-    Error(String),
-}
-
 /// The loop each replica worker thread runs: build the step via the
-/// factory, then serve `Frozen` / `Run` messages until the leader hangs up.
-fn worker_loop<F>(factory: F, rx: mpsc::Receiver<ToWorker>, tx: mpsc::Sender<FromWorker>)
+/// factory, then serve `Frozen` / `Run` / `Sync` messages until the leader
+/// hangs up (or the link breaks — the leader's deadline notices).
+fn worker_loop<F>(factory: F, mut link: Box<dyn WorkerLink>, codec: WireCodec)
 where
     F: FnOnce() -> Result<Rc<dyn StepRunner>, EngineError>,
 {
     let runner = match factory() {
         Ok(r) => {
-            if tx.send(FromWorker::Ready).is_err() {
+            if !link.send(FromWorker::Ready) {
                 return;
             }
             r
         }
         Err(e) => {
-            let _ = tx.send(FromWorker::Failed(e.to_string()));
+            let _ = link.send(FromWorker::Failed(e.to_string()));
             return;
         }
     };
     let meta = runner.meta().clone();
     let mut pinned_frozen: Option<Pinned> = None;
-    for msg in rx {
+    while let Some(msg) = link.recv() {
         match msg {
             ToWorker::Frozen(bytes) => {
+                // bootstrap traffic is always raw f32 LE, codec-independent
                 let t = Tensor::f32(vec![meta.pf], f32s_from_le_bytes(&bytes));
                 match runner.pin(&t) {
                     Ok(p) => pinned_frozen = Some(p),
                     Err(e) => {
-                        if tx.send(FromWorker::Error(e.to_string())).is_err() {
+                        if !link.send(FromWorker::Error(e.to_string())) {
                             return;
                         }
                     }
                 }
             }
+            ToWorker::Sync(nonce) => {
+                if !link.send(FromWorker::SyncAck(nonce)) {
+                    return;
+                }
+            }
             ToWorker::Run { train, clip_r, chunks } => {
                 let Some(frozen) = pinned_frozen.as_ref() else {
-                    if tx
-                        .send(FromWorker::Error(
-                            "replica received a batch before the frozen broadcast".to_string(),
-                        ))
-                        .is_err()
-                    {
+                    if !link.send(FromWorker::Error(
+                        "replica received a batch before the frozen broadcast".to_string(),
+                    )) {
                         return;
                     }
                     continue;
                 };
-                let train_t = Tensor::f32(vec![meta.pt], f32s_from_le_bytes(&train));
+                let train = match codec.decode(&train) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        if !link.send(FromWorker::Error(format!(
+                            "undecodable parameter payload: {e}"
+                        ))) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
+                let train_t = Tensor::f32(vec![meta.pt], train);
                 let clip_t = Tensor::scalar_f32(clip_r);
                 let mut results = Vec::with_capacity(chunks.len());
                 let mut failed = false;
@@ -197,10 +200,10 @@ where
                         Ok(out) => results.push(ChunkResult {
                             index: c.index,
                             loss: out[0].item_f32(),
-                            grad: f32s_to_le_bytes(out[1].as_f32()),
+                            grad: codec.encode(out[1].as_f32()),
                         }),
                         Err(e) => {
-                            if tx.send(FromWorker::Error(e.to_string())).is_err() {
+                            if !link.send(FromWorker::Error(e.to_string())) {
                                 return;
                             }
                             failed = true;
@@ -208,7 +211,7 @@ where
                         }
                     }
                 }
-                if !failed && tx.send(FromWorker::Batch(results)).is_err() {
+                if !failed && !link.send(FromWorker::Batch(results)) {
                     return;
                 }
             }
@@ -216,12 +219,39 @@ where
     }
 }
 
-/// One live replica: its channel pair plus the join handle.
+/// One live replica: its leader-side link plus the join handle.
 struct Worker {
-    tx: Option<mpsc::Sender<ToWorker>>,
-    rx: mpsc::Receiver<FromWorker>,
+    link: Box<dyn LeaderLink>,
     handle: Option<JoinHandle<()>>,
 }
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.link.hangup();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Map a link fault to the typed replica error, with the worker index and
+/// what the leader was doing at the time.
+fn link_err(w: usize, when: &str, fault: LinkFault) -> EngineError {
+    EngineError::backend(
+        "replica",
+        match fault {
+            LinkFault::Timeout => {
+                format!("replica {w} missed the reply deadline {when} (straggler or dead worker)")
+            }
+            LinkFault::Closed(e) => format!("replica {w} died {when} ({e})"),
+            LinkFault::Corrupt(e) => format!("replica {w} shipped a corrupt frame {when}: {e}"),
+        },
+    )
+}
+
+/// The shared worker factory: each (re)spawned worker thread builds its own
+/// step runner through it (`StepRunner`s are deliberately not `Send`).
+type WorkerFactory = Arc<dyn Fn() -> Result<Rc<dyn StepRunner>, EngineError> + Send + Sync>;
 
 /// A group of N persistent replica workers executing one train artifact.
 ///
@@ -233,63 +263,95 @@ pub struct ReplicaGroup {
     stats: CommStats,
     /// Set when a round failed: replies may still be queued mid-stream, so
     /// further rounds would reduce stale gradients.  Poisoned groups refuse
-    /// all traffic instead.
+    /// all traffic until [`ReplicaGroup::rejoin`] resynchronizes them.
     poisoned: bool,
+    opts: TransportOpts,
+    factory: WorkerFactory,
+    /// Raw f32 LE frozen broadcast, cached so a rejoined worker can be
+    /// bootstrapped mid-phase.
+    frozen: Option<Vec<u8>>,
+    sync_nonce: u64,
 }
 
 impl ReplicaGroup {
-    /// Spawn `n` replica workers.  Each worker thread invokes its own clone
-    /// of `factory` to build the step runner it will serve (backends are
-    /// per-thread: `StepRunner`s are deliberately not `Send`).
-    ///
-    /// Fails — after joining every thread — if any worker's factory fails.
+    /// Spawn `n` replica workers on the default transport (in-process
+    /// channels, `raw-f32le` payloads — the byte-for-byte PR 3 path).
     pub fn spawn<F>(n: usize, factory: F) -> Result<ReplicaGroup, EngineError>
     where
-        F: Fn() -> Result<Rc<dyn StepRunner>, EngineError> + Send + Clone + 'static,
+        F: Fn() -> Result<Rc<dyn StepRunner>, EngineError> + Send + Sync + 'static,
+    {
+        Self::spawn_with(n, factory, TransportOpts::default())
+    }
+
+    /// Spawn `n` replica workers over the configured transport.  Each
+    /// worker thread invokes the shared `factory` to build the step runner
+    /// it will serve.
+    ///
+    /// Fails — with every spawned thread joined — if any worker's factory
+    /// fails or misses the ready deadline.
+    pub fn spawn_with<F>(
+        n: usize,
+        factory: F,
+        opts: TransportOpts,
+    ) -> Result<ReplicaGroup, EngineError>
+    where
+        F: Fn() -> Result<Rc<dyn StepRunner>, EngineError> + Send + Sync + 'static,
     {
         if n == 0 {
             return Err(EngineError::spec("replica group needs at least one worker"));
         }
+        let factory: WorkerFactory = Arc::new(factory);
         let mut workers = Vec::with_capacity(n);
         for _ in 0..n {
-            let (to_tx, to_rx) = mpsc::channel::<ToWorker>();
-            let (from_tx, from_rx) = mpsc::channel::<FromWorker>();
-            let f = factory.clone();
-            // Replica workers are long-lived and their results merge
-            // through the fixed-order reduction below.
-            // fastdp-lint: allow(thread-spawn) long-lived replica workers
-            let handle = std::thread::spawn(move || worker_loop(f, to_rx, from_tx));
-            workers.push(Worker { tx: Some(to_tx), rx: from_rx, handle: Some(handle) });
+            workers.push(Self::spawn_worker(&factory, &opts)?);
         }
-        let group = ReplicaGroup {
+        let mut group = ReplicaGroup {
             workers,
             stats: CommStats { workers: n, ..CommStats::default() },
             poisoned: false,
+            opts,
+            factory,
+            frozen: None,
+            sync_nonce: 0,
         };
-        for (i, w) in group.workers.iter().enumerate() {
-            match w.rx.recv() {
-                Ok(FromWorker::Ready) => {}
-                Ok(FromWorker::Failed(e)) => {
-                    return Err(EngineError::backend(
-                        "replica",
-                        format!("replica {i} failed to load its step: {e}"),
-                    ));
-                }
-                Ok(_) => {
-                    return Err(EngineError::backend(
-                        "replica",
-                        format!("replica {i} sent an unexpected first message"),
-                    ));
-                }
-                Err(_) => {
-                    return Err(EngineError::backend(
-                        "replica",
-                        format!("replica {i} died before reporting ready"),
-                    ));
-                }
-            }
+        for i in 0..n {
+            group.wait_ready(i)?;
         }
         Ok(group)
+    }
+
+    /// Create one worker: a fresh transport connection plus the thread that
+    /// serves it (the worker end connects inside its own thread).
+    fn spawn_worker(factory: &WorkerFactory, opts: &TransportOpts) -> Result<Worker, EngineError> {
+        let (link, seed) = transport::pair(opts.kind, opts.recv_timeout)?;
+        let f = Arc::clone(factory);
+        let codec = opts.wire;
+        // Replica workers are long-lived and their results merge
+        // through the fixed-order reduction below.
+        // fastdp-lint: allow(thread-spawn) long-lived replica workers
+        let handle = std::thread::spawn(move || match seed.connect() {
+            Ok(worker_link) => worker_loop(move || f(), worker_link, codec),
+            // a failed dial is reported by the leader's ready deadline
+            Err(_) => {}
+        });
+        Ok(Worker { link, handle: Some(handle) })
+    }
+
+    /// Block (bounded by the ready deadline) until worker `i` reports in.
+    fn wait_ready(&mut self, i: usize) -> Result<(), EngineError> {
+        let timeout = self.opts.recv_timeout;
+        match self.workers[i].link.recv(timeout) {
+            Ok(FromWorker::Ready) => Ok(()),
+            Ok(FromWorker::Failed(e)) => Err(EngineError::backend(
+                "replica",
+                format!("replica {i} failed to load its step: {e}"),
+            )),
+            Ok(_) => Err(EngineError::backend(
+                "replica",
+                format!("replica {i} sent an unexpected first message"),
+            )),
+            Err(fault) => Err(link_err(i, "before reporting ready", fault)),
+        }
     }
 
     /// Number of replica workers in the group.
@@ -297,22 +359,26 @@ impl ReplicaGroup {
         self.workers.len()
     }
 
+    /// The transport configuration the group was spawned with.
+    pub fn opts(&self) -> TransportOpts {
+        self.opts
+    }
+
     /// Broadcast the frozen parameter vector to every replica (once per
-    /// phase).  Counted as bootstrap traffic, not per-exchange traffic.
+    /// phase).  Counted as bootstrap traffic, not per-exchange traffic, and
+    /// always raw f32 LE (provisioning accuracy is not the codec's to
+    /// trade); the bytes are cached for mid-phase worker rejoin.
     pub fn broadcast_frozen(&mut self, frozen: &[f32]) -> Result<(), EngineError> {
         self.check_poisoned()?;
-        for (i, w) in self.workers.iter().enumerate() {
-            let bytes = f32s_to_le_bytes(frozen);
+        let bytes = f32s_to_le_bytes(frozen);
+        for i in 0..self.workers.len() {
             self.stats.bytes_bootstrap += bytes.len() as u64;
-            let tx = w.tx.as_ref().expect("replica group already shut down");
-            if tx.send(ToWorker::Frozen(bytes)).is_err() {
+            if let Err(fault) = self.workers[i].link.send(ToWorker::Frozen(bytes.clone())) {
                 self.poisoned = true;
-                return Err(EngineError::backend(
-                    "replica",
-                    format!("replica {i} hung up during broadcast"),
-                ));
+                return Err(link_err(i, "during the frozen broadcast", fault));
             }
         }
+        self.frozen = Some(bytes);
         Ok(())
     }
 
@@ -326,7 +392,8 @@ impl ReplicaGroup {
     ///
     /// An `Err` abandons the round: replies still in flight stay queued,
     /// so the group **poisons itself** — every later call returns a hard
-    /// error instead of silently reducing stale gradients.
+    /// error instead of silently reducing stale gradients (recover with
+    /// [`ReplicaGroup::rejoin`]).
     pub fn run_batch(
         &mut self,
         train: &[f32],
@@ -347,7 +414,7 @@ impl ReplicaGroup {
             return Err(EngineError::backend(
                 "replica",
                 "replica group was poisoned by an earlier failed exchange; \
-                 start a new session",
+                 rejoin the dead workers or start a new session",
             ));
         }
         Ok(())
@@ -362,6 +429,8 @@ impl ReplicaGroup {
     ) -> Result<(f64, CommStats), EngineError> {
         let t0 = std::time::Instant::now();
         let n = self.workers.len();
+        let codec = self.opts.wire;
+        let timeout = self.opts.recv_timeout;
         let mut round = CommStats {
             workers: n,
             grad_len: grad.len(),
@@ -373,6 +442,7 @@ impl ReplicaGroup {
         let per = if c == 0 { 0 } else { (c + n - 1) / n };
         let mut assigned = vec![false; n];
         if per > 0 {
+            let train_bytes = codec.encode(train);
             let mut it = chunks.into_iter().enumerate();
             'outer: for (w, slot) in assigned.iter_mut().enumerate() {
                 let mut work = Vec::with_capacity(per);
@@ -388,17 +458,11 @@ impl ReplicaGroup {
                     break 'outer;
                 }
                 *slot = true;
-                let train_bytes = f32s_to_le_bytes(train);
                 round.bytes_from_leader += train_bytes.len() as u64;
-                let tx = self.workers[w].tx.as_ref().expect("replica group already shut down");
-                tx.send(ToWorker::Run { train: train_bytes, clip_r, chunks: work }).map_err(
-                    |_| {
-                        EngineError::backend(
-                            "replica",
-                            format!("replica {w} hung up before the batch"),
-                        )
-                    },
-                )?;
+                self.workers[w]
+                    .link
+                    .send(ToWorker::Run { train: train_bytes.clone(), clip_r, chunks: work })
+                    .map_err(|fault| link_err(w, "before the batch", fault))?;
             }
         }
         // collect in fixed replica order; within a reply, chunks arrive in
@@ -410,7 +474,7 @@ impl ReplicaGroup {
             if !*was_assigned {
                 continue;
             }
-            match self.workers[w].rx.recv() {
+            match self.workers[w].link.recv(timeout) {
                 Ok(FromWorker::Batch(results)) => {
                     for r in results {
                         debug_assert_eq!(
@@ -419,7 +483,12 @@ impl ReplicaGroup {
                         );
                         next_index += 1;
                         round.bytes_to_leader += r.grad.len() as u64;
-                        let g = f32s_from_le_bytes(&r.grad);
+                        let g = codec.decode(&r.grad).map_err(|e| {
+                            EngineError::backend(
+                                "replica",
+                                format!("replica {w} shipped undecodable gradient bytes: {e}"),
+                            )
+                        })?;
                         if g.len() != grad.len() {
                             return Err(EngineError::backend(
                                 "replica",
@@ -443,17 +512,74 @@ impl ReplicaGroup {
                         format!("replica {w} sent an unexpected message"),
                     ));
                 }
-                Err(_) => {
-                    return Err(EngineError::backend(
-                        "replica",
-                        format!("replica {w} died mid-batch"),
-                    ));
-                }
+                Err(fault) => return Err(link_err(w, "mid-batch", fault)),
             }
         }
         round.wall_seconds = t0.elapsed().as_secs_f64();
         self.stats.merge(&round);
         Ok((loss_sum, round))
+    }
+
+    /// Replace the listed (dead or straggling) workers with freshly spawned
+    /// ones, replay the cached frozen bootstrap to them, drain any replies
+    /// the surviving workers still have stranded from an aborted round
+    /// (behind a sync barrier), and clear the poison flag.
+    ///
+    /// Training state lives on the leader — the trainable parameters are
+    /// re-broadcast every round — so the next [`ReplicaGroup::run_batch`]
+    /// continues the **exact** trajectory the group was on.  An empty
+    /// `dead` list is a pure resynchronize-and-unpoison.  When the leader
+    /// itself must move, replay the `Session::save_state` snapshot through
+    /// `Engine::resume_session` instead (that path spawns a fresh group).
+    pub fn rejoin(&mut self, dead: &[usize]) -> Result<(), EngineError> {
+        for &w in dead {
+            if w >= self.workers.len() {
+                return Err(EngineError::spec(format!(
+                    "no replica {w} to rejoin (group has {})",
+                    self.workers.len()
+                )));
+            }
+        }
+        for &w in dead {
+            let fresh = Self::spawn_worker(&self.factory, &self.opts)?;
+            let mut old = std::mem::replace(&mut self.workers[w], fresh);
+            old.link.hangup();
+            // detach: a hung worker thread must not block its replacement
+            drop(old.handle.take());
+            drop(old);
+            self.wait_ready(w)?;
+            if let Some(bytes) = self.frozen.clone() {
+                self.stats.bytes_bootstrap += bytes.len() as u64;
+                self.workers[w]
+                    .link
+                    .send(ToWorker::Frozen(bytes))
+                    .map_err(|fault| link_err(w, "during the rejoin bootstrap", fault))?;
+            }
+        }
+        // resync survivors: anything still queued belongs to an aborted
+        // round and must not leak into the next reduction
+        self.sync_nonce += 1;
+        let nonce = self.sync_nonce;
+        let timeout = self.opts.recv_timeout;
+        for w in 0..self.workers.len() {
+            if dead.contains(&w) {
+                continue;
+            }
+            self.workers[w]
+                .link
+                .send(ToWorker::Sync(nonce))
+                .map_err(|fault| link_err(w, "during resync", fault))?;
+            loop {
+                match self.workers[w].link.recv(timeout) {
+                    Ok(FromWorker::SyncAck(n)) if n == nonce => break,
+                    // stale replies from the aborted round: discard
+                    Ok(_) => continue,
+                    Err(fault) => return Err(link_err(w, "during resync", fault)),
+                }
+            }
+        }
+        self.poisoned = false;
+        Ok(())
     }
 
     /// Cumulative traffic since the group was spawned.
@@ -466,7 +592,7 @@ impl Drop for ReplicaGroup {
     fn drop(&mut self) {
         // hang up first so every worker's recv loop ends, then join
         for w in &mut self.workers {
-            w.tx = None;
+            w.link.hangup();
         }
         for w in &mut self.workers {
             if let Some(h) = w.handle.take() {
@@ -479,13 +605,26 @@ impl Drop for ReplicaGroup {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::transport::TransportKind;
     use crate::engine::{Backend, InterpreterBackend};
+    use crate::runtime::ArtifactMeta;
+    use crate::util::tensor::l2_norm;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::{Duration, Instant};
 
-    fn factory(artifact: &'static str) -> impl Fn() -> Result<Rc<dyn StepRunner>, EngineError>
-           + Send
-           + Clone
-           + 'static {
+    fn factory(
+        artifact: &'static str,
+    ) -> impl Fn() -> Result<Rc<dyn StepRunner>, EngineError> + Send + Sync + Clone + 'static
+    {
         move || InterpreterBackend::new().load(artifact)
+    }
+
+    fn opts(kind: TransportKind, wire: WireCodec, ms: u64) -> TransportOpts {
+        TransportOpts { kind, wire, recv_timeout: Duration::from_millis(ms) }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
     }
 
     /// Fill `c` synthetic chunks shaped for `meta` (all rows active).
@@ -521,7 +660,7 @@ mod tests {
             let (_, _, chunks) = synth_chunks(artifact, 5);
             let mut grad = vec![0.0f32; pt];
             let (loss, stats) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
-            (loss, grad.iter().map(|v| v.to_bits()).collect(), stats)
+            (loss, bits(&grad), stats)
         };
         let (loss1, grad1, _) = run(1);
         for n in [2usize, 3, 4, 8] {
@@ -529,6 +668,57 @@ mod tests {
             assert_eq!(loss.to_bits(), loss1.to_bits(), "replicas={n}");
             assert_eq!(grad, grad1, "replicas={n}");
             assert_eq!(stats.workers, n);
+        }
+    }
+
+    #[test]
+    fn tcp_raw_exchange_is_bit_identical_to_channel() {
+        let artifact = "cls-base__dp-bitfit";
+        let (_, pt, _) = synth_chunks(artifact, 1);
+        let (frozen, train) = split_params(artifact);
+        let run = |o: TransportOpts, n: usize| -> (f64, Vec<u32>, CommStats) {
+            let mut g = ReplicaGroup::spawn_with(n, factory(artifact), o).unwrap();
+            g.broadcast_frozen(&frozen).unwrap();
+            let (_, _, chunks) = synth_chunks(artifact, 5);
+            let mut grad = vec![0.0f32; pt];
+            let (loss, stats) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
+            (loss, bits(&grad), stats)
+        };
+        let (loss_ch, grad_ch, stats_ch) = run(TransportOpts::default(), 2);
+        for n in [1usize, 2, 4] {
+            let (loss, grad, stats) =
+                run(opts(TransportKind::Tcp, WireCodec::RawF32le, 10_000), n);
+            assert_eq!(loss.to_bits(), loss_ch.to_bits(), "tcp replicas={n}");
+            assert_eq!(grad, grad_ch, "tcp replicas={n}");
+            // the gradient payload volume is transport-independent
+            assert_eq!(stats.bytes_to_leader, stats_ch.bytes_to_leader, "tcp replicas={n}");
+        }
+    }
+
+    #[test]
+    fn bf16_codec_halves_the_wire_within_tolerance() {
+        let artifact = "cls-base__dp-bitfit";
+        let (_, pt, _) = synth_chunks(artifact, 1);
+        let (frozen, train) = split_params(artifact);
+        let run = |o: TransportOpts| -> (Vec<f32>, CommStats) {
+            let mut g = ReplicaGroup::spawn_with(2, factory(artifact), o).unwrap();
+            g.broadcast_frozen(&frozen).unwrap();
+            let (_, _, chunks) = synth_chunks(artifact, 4);
+            let mut grad = vec![0.0f32; pt];
+            let (_, stats) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
+            (grad, stats)
+        };
+        let (grad_raw, stats_raw) = run(TransportOpts::default());
+        for kind in [TransportKind::Channel, TransportKind::Tcp] {
+            let (grad_bf, stats_bf) = run(opts(kind, WireCodec::Bf16, 10_000));
+            // exactly half the payload bytes in both directions
+            assert_eq!(stats_bf.bytes_to_leader * 2, stats_raw.bytes_to_leader, "{kind:?}");
+            assert_eq!(stats_bf.bytes_from_leader * 2, stats_raw.bytes_from_leader, "{kind:?}");
+            // and the reduced gradient stays close to the raw one
+            let diff: Vec<f32> =
+                grad_raw.iter().zip(&grad_bf).map(|(a, b)| a - b).collect();
+            let rel = l2_norm(&diff) / l2_norm(&grad_raw).max(1e-12);
+            assert!(rel <= 5e-2, "{kind:?}: bf16 gradient drifted {rel}");
         }
     }
 
@@ -597,6 +787,172 @@ mod tests {
         assert!(err.to_string().contains("poisoned"), "{err}");
         let err = g.broadcast_frozen(&frozen).unwrap_err();
         assert!(err.to_string().contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn resync_after_a_failed_exchange_drains_stale_replies() {
+        let artifact = "cls-base__dp-bitfit";
+        let (_, pt, _) = synth_chunks(artifact, 1);
+        let (frozen, train) = split_params(artifact);
+        // reference reduction from a group that never failed
+        let mut healthy = ReplicaGroup::spawn(2, factory(artifact)).unwrap();
+        healthy.broadcast_frozen(&frozen).unwrap();
+        let (_, _, chunks) = synth_chunks(artifact, 2);
+        let mut want = vec![0.0f32; pt];
+        let (want_loss, _) = healthy.run_batch(&train, 0.05, chunks, &mut want).unwrap();
+
+        let mut g = ReplicaGroup::spawn(2, factory(artifact)).unwrap();
+        g.broadcast_frozen(&frozen).unwrap();
+        let (_, _, chunks) = synth_chunks(artifact, 2);
+        let mut bad_grad = vec![0.0f32; pt + 1];
+        g.run_batch(&train, 0.05, chunks, &mut bad_grad).unwrap_err();
+        // replica 1's Batch reply is still stranded in its link; an empty
+        // rejoin is a pure resync + unpoison
+        g.rejoin(&[]).unwrap();
+        let (_, _, chunks) = synth_chunks(artifact, 2);
+        let mut grad = vec![0.0f32; pt];
+        let (loss, _) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
+        assert_eq!(loss.to_bits(), want_loss.to_bits());
+        assert_eq!(bits(&grad), bits(&want));
+    }
+
+    /// Delegating runner that stalls every step while `stall` is set —
+    /// the straggler/dead-worker stand-in (threads cannot be killed).
+    struct SlowRunner {
+        inner: Rc<dyn StepRunner>,
+        stall: Arc<AtomicBool>,
+    }
+
+    impl StepRunner for SlowRunner {
+        fn meta(&self) -> &ArtifactMeta {
+            self.inner.meta()
+        }
+
+        fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+            self.inner.run(inputs)
+        }
+
+        fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError> {
+            self.inner.pin(t)
+        }
+
+        fn run_pinned(
+            &self,
+            pinned: &[&Pinned],
+            host: &[Option<&Tensor>],
+        ) -> Result<Vec<Tensor>, EngineError> {
+            if self.stall.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(3000));
+            }
+            self.inner.run_pinned(pinned, host)
+        }
+    }
+
+    fn slow_factory(
+        artifact: &'static str,
+        stall: Arc<AtomicBool>,
+    ) -> impl Fn() -> Result<Rc<dyn StepRunner>, EngineError> + Send + Sync + Clone + 'static
+    {
+        move || {
+            let inner = InterpreterBackend::new().load(artifact)?;
+            Ok(Rc::new(SlowRunner { inner, stall: stall.clone() }) as Rc<dyn StepRunner>)
+        }
+    }
+
+    #[test]
+    fn straggler_misses_the_deadline_then_rejoins_bit_identically() {
+        for kind in [TransportKind::Channel, TransportKind::Tcp] {
+            let artifact = "cls-base__dp-bitfit";
+            let (_, pt, _) = synth_chunks(artifact, 1);
+            let (frozen, train) = split_params(artifact);
+            // reference reduction from a healthy group on the same transport
+            let mut healthy = ReplicaGroup::spawn_with(
+                2,
+                factory(artifact),
+                opts(kind, WireCodec::RawF32le, 10_000),
+            )
+            .unwrap();
+            healthy.broadcast_frozen(&frozen).unwrap();
+            let (_, _, chunks) = synth_chunks(artifact, 4);
+            let mut want = vec![0.0f32; pt];
+            let (want_loss, _) = healthy.run_batch(&train, 0.05, chunks, &mut want).unwrap();
+
+            let stall = Arc::new(AtomicBool::new(true));
+            let mut g = ReplicaGroup::spawn_with(
+                2,
+                slow_factory(artifact, stall.clone()),
+                opts(kind, WireCodec::RawF32le, 300),
+            )
+            .unwrap();
+            g.broadcast_frozen(&frozen).unwrap();
+            let (_, _, chunks) = synth_chunks(artifact, 4);
+            let mut grad = vec![0.0f32; pt];
+            let t0 = Instant::now();
+            let err = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap_err();
+            // the deadline fired (no silent hang), with a typed error
+            assert!(t0.elapsed() < Duration::from_millis(2500), "{kind:?}: deadline ignored");
+            assert!(err.to_string().contains("deadline"), "{kind:?}: {err}");
+            let (_, _, chunks) = synth_chunks(artifact, 4);
+            let err = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap_err();
+            assert!(err.to_string().contains("poisoned"), "{kind:?}: {err}");
+            // replace both stalled workers and continue the exact trajectory
+            stall.store(false, Ordering::SeqCst);
+            g.rejoin(&[0, 1]).unwrap();
+            let (_, _, chunks) = synth_chunks(artifact, 4);
+            let mut grad = vec![0.0f32; pt];
+            let (loss, _) = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap();
+            assert_eq!(loss.to_bits(), want_loss.to_bits(), "{kind:?}");
+            assert_eq!(bits(&grad), bits(&want), "{kind:?}");
+        }
+    }
+
+    /// Delegating runner that dies mid-step: the worker thread panics, so
+    /// its link drops mid-exchange (the TCP stream closes / the channel
+    /// disconnects) — the "kill -9 the worker" stand-in.
+    struct DyingRunner {
+        inner: Rc<dyn StepRunner>,
+    }
+
+    impl StepRunner for DyingRunner {
+        fn meta(&self) -> &ArtifactMeta {
+            self.inner.meta()
+        }
+
+        fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+            self.inner.run(inputs)
+        }
+
+        fn pin(&self, t: &Tensor) -> Result<Pinned, EngineError> {
+            self.inner.pin(t)
+        }
+
+        fn run_pinned(
+            &self,
+            _pinned: &[&Pinned],
+            _host: &[Option<&Tensor>],
+        ) -> Result<Vec<Tensor>, EngineError> {
+            panic!("worker killed mid-step (test)");
+        }
+    }
+
+    #[test]
+    fn mid_exchange_disconnect_is_a_typed_error_on_both_transports() {
+        for kind in [TransportKind::Channel, TransportKind::Tcp] {
+            let artifact = "cls-base__dp-bitfit";
+            let (_, pt, chunks) = synth_chunks(artifact, 2);
+            let (frozen, train) = split_params(artifact);
+            let f = move || -> Result<Rc<dyn StepRunner>, EngineError> {
+                let inner = InterpreterBackend::new().load(artifact)?;
+                Ok(Rc::new(DyingRunner { inner }) as Rc<dyn StepRunner>)
+            };
+            let mut g =
+                ReplicaGroup::spawn_with(2, f, opts(kind, WireCodec::RawF32le, 10_000)).unwrap();
+            g.broadcast_frozen(&frozen).unwrap();
+            let mut grad = vec![0.0f32; pt];
+            let err = g.run_batch(&train, 0.05, chunks, &mut grad).unwrap_err();
+            assert!(matches!(err, EngineError::Backend { .. }), "{kind:?}: {err}");
+            assert!(err.to_string().contains("replica"), "{kind:?}: {err}");
+        }
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! * [`metrics`] — JSONL run logs.
 //! * [`distributed`] — real data-parallel replica workers with on-the-wire
 //!   communication accounting (bit-identical aggregation contract).
+//! * [`transport`] — the replica wire itself: in-process channels or framed
+//!   TCP loopback, plus the per-job payload codecs (`raw-f32le`/`bf16`).
 //! * [`cli`] — the `fastdp` binary's subcommands (a thin flag/TOML ->
 //!   `JobSpec` translator).
 
@@ -25,4 +27,5 @@ pub mod metrics;
 pub mod optim;
 pub mod pretrain;
 pub mod task_data;
+pub mod transport;
 pub mod workloads;

@@ -19,6 +19,7 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use crate::coordinator::distributed::ReplicaGroup;
+use crate::coordinator::transport::TransportOpts;
 use crate::coordinator::workloads::ModelShape;
 use crate::runtime::{ArtifactMeta, Layout};
 use crate::util::tensor::Tensor;
@@ -155,9 +156,16 @@ pub trait Backend {
     /// Spawn an `n`-worker data-parallel [`ReplicaGroup`] executing a train
     /// artifact, each replica on its own thread with its own step instance
     /// (see `coordinator::distributed` for the bit-identical aggregation
-    /// contract).  `None` means the backend cannot replicate — the default,
-    /// and PJRT's answer: its device buffers are not thread-shardable here.
-    fn replica_group(&self, _artifact: &str, _n: usize) -> Option<Result<ReplicaGroup, EngineError>> {
+    /// contract), exchanging traffic over the job's transport/codec
+    /// configuration (`opts`).  `None` means the backend cannot replicate —
+    /// the default, and PJRT's answer: its device buffers are not
+    /// thread-shardable here.
+    fn replica_group(
+        &self,
+        _artifact: &str,
+        _n: usize,
+        _opts: &TransportOpts,
+    ) -> Option<Result<ReplicaGroup, EngineError>> {
         None
     }
 }

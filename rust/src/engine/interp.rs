@@ -463,16 +463,21 @@ impl Backend for InterpreterBackend {
         &self,
         artifact: &str,
         n: usize,
+        opts: &crate::coordinator::transport::TransportOpts,
     ) -> Option<Result<crate::coordinator::distributed::ReplicaGroup, EngineError>> {
         let (threads, kernels, block_rows, simd_level) =
             (self.threads, self.kernels, self.block_rows, self.simd_level);
         let artifact = artifact.to_string();
-        Some(crate::coordinator::distributed::ReplicaGroup::spawn(n, move || {
-            let mut be = InterpreterBackend::with_config(threads, kernels);
-            be.block_rows = block_rows;
-            be.simd_level = simd_level;
-            be.load(&artifact)
-        }))
+        Some(crate::coordinator::distributed::ReplicaGroup::spawn_with(
+            n,
+            move || {
+                let mut be = InterpreterBackend::with_config(threads, kernels);
+                be.block_rows = block_rows;
+                be.simd_level = simd_level;
+                be.load(&artifact)
+            },
+            *opts,
+        ))
     }
 }
 

@@ -63,6 +63,7 @@ pub use spec::{JobPlan, JobSpec, JobSpecBuilder, Method, PhaseSpec, Privacy};
 pub use crate::coordinator::checkpoint::SessionState;
 pub use crate::coordinator::distributed::{CommStats, ReplicaGroup};
 pub use crate::coordinator::optim::{LrSchedule, OptimKind};
+pub use crate::coordinator::transport::{TransportKind, TransportOpts, WireCodec};
 pub use crate::coordinator::task_data::TaskData;
 pub use crate::coordinator::workloads::ModelShape;
 pub use crate::dp::clip::ClipMode;
@@ -281,7 +282,8 @@ impl Engine {
             // (workers idle until their phase starts); replicas = 1 keeps
             // the in-process path with no worker threads at all
             let replicas = if spec.replicas > 1 {
-                match self.backend.replica_group(&phase.artifact, spec.replicas) {
+                let opts = spec.transport_opts();
+                match self.backend.replica_group(&phase.artifact, spec.replicas, &opts) {
                     Some(group) => Some(group?),
                     None => {
                         return Err(EngineError::backend(

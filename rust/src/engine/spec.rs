@@ -8,8 +8,12 @@
 //! `fastdp train --dry-run` prints.
 
 use crate::coordinator::optim::{LrSchedule, OptimKind};
+use crate::coordinator::transport::{
+    TransportKind, TransportOpts, WireCodec, DEFAULT_RECV_TIMEOUT_MS,
+};
 use crate::dp::clip::ClipMode;
 use crate::dp::{calibrate, rdp};
+use crate::runtime::env;
 
 use super::error::EngineError;
 
@@ -181,6 +185,15 @@ pub struct JobSpec {
     /// the leader; results are bit-identical for any value (see
     /// `coordinator::distributed`).
     pub replicas: usize,
+    /// How replica exchange traffic moves (`channel` in-process / `tcp`
+    /// framed loopback).  Irrelevant — and harmless — when `replicas` is 1.
+    pub transport: TransportKind,
+    /// Byte layout of the per-exchange payloads (`raw-f32le` bit-identical
+    /// / `bf16` half-width under the 1e-2 short-trajectory tolerance).
+    pub wire: WireCodec,
+    /// Leader-side deadline (milliseconds) for any single replica reply
+    /// before the exchange fails typed and the group poisons.
+    pub recv_timeout_ms: u64,
     /// Run name for metric sinks; defaults to `model__method`.
     pub name: Option<String>,
 }
@@ -200,6 +213,16 @@ impl JobSpec {
     /// Poisson sampling rate q = B / n.
     pub fn q(&self) -> f64 {
         (self.logical_batch as f64 / self.n_train as f64).min(1.0)
+    }
+
+    /// The resolved replica-transport configuration (what the backend's
+    /// `replica_group` receives when `replicas > 1`).
+    pub fn transport_opts(&self) -> TransportOpts {
+        TransportOpts {
+            kind: self.transport,
+            wire: self.wire,
+            recv_timeout: std::time::Duration::from_millis(self.recv_timeout_ms),
+        }
     }
 
     /// Artifact name suffix for the clip mode (`__autos` for AUTO-S).
@@ -344,6 +367,12 @@ impl JobPlan {
                 "  replicas     {} data-parallel workers (bit-identical to 1)\n",
                 spec.replicas
             ));
+            s.push_str(&format!(
+                "  transport    {} wire {} (reply deadline {} ms)\n",
+                spec.transport.name(),
+                spec.wire.name(),
+                spec.recv_timeout_ms
+            ));
         }
         if spec.privacy.is_private() {
             s.push_str(&format!(
@@ -382,6 +411,9 @@ pub struct JobSpecBuilder {
     n_train: usize,
     seed: u64,
     replicas: usize,
+    transport: Option<TransportKind>,
+    wire: Option<WireCodec>,
+    recv_timeout_ms: Option<u64>,
     name: Option<String>,
 }
 
@@ -404,6 +436,9 @@ impl JobSpecBuilder {
             n_train: 4096,
             seed: 0,
             replicas: 1,
+            transport: None,
+            wire: None,
+            recv_timeout_ms: None,
             name: None,
         }
     }
@@ -482,6 +517,26 @@ impl JobSpecBuilder {
         self
     }
 
+    /// Replica exchange transport; the default resolves from the
+    /// environment registry and falls back to in-process channels.
+    pub fn transport(mut self, kind: TransportKind) -> Self {
+        self.transport = Some(kind);
+        self
+    }
+
+    /// Per-exchange payload codec; the default resolves from the
+    /// environment registry and falls back to bit-identical `raw-f32le`.
+    pub fn wire(mut self, wire: WireCodec) -> Self {
+        self.wire = Some(wire);
+        self
+    }
+
+    /// Leader-side reply deadline in milliseconds (must be >= 1).
+    pub fn recv_timeout_ms(mut self, ms: u64) -> Self {
+        self.recv_timeout_ms = Some(ms);
+        self
+    }
+
     pub fn name(mut self, name: &str) -> Self {
         self.name = Some(name.to_string());
         self
@@ -533,6 +588,13 @@ impl JobSpecBuilder {
                 self.method.name()
             )));
         }
+        let recv_timeout_ms = match self.recv_timeout_ms {
+            Some(0) => {
+                return Err(EngineError::spec("replica reply deadline must be >= 1 ms"));
+            }
+            Some(ms) => ms,
+            None => env::recv_timeout_ms().unwrap_or(DEFAULT_RECV_TIMEOUT_MS),
+        };
         let privacy = match (self.eps, self.sigma) {
             (Some(_), Some(_)) => {
                 return Err(EngineError::spec(
@@ -576,6 +638,9 @@ impl JobSpecBuilder {
             n_train: self.n_train,
             seed: self.seed,
             replicas: self.replicas,
+            transport: self.transport.unwrap_or_else(TransportKind::from_env),
+            wire: self.wire.unwrap_or_else(WireCodec::from_env),
+            recv_timeout_ms,
             name: self.name,
         })
     }
@@ -679,6 +744,35 @@ mod tests {
         assert_eq!(phases.len(), 1);
         assert_eq!(phases[0].steps, 32);
         assert_eq!(phases[0].label, "full");
+    }
+
+    #[test]
+    fn transport_flows_into_the_spec_and_validates() {
+        let spec = base()
+            .sigma(1.0)
+            .replicas(2)
+            .transport(TransportKind::Tcp)
+            .wire(WireCodec::Bf16)
+            .recv_timeout_ms(500)
+            .build()
+            .unwrap();
+        assert_eq!(spec.transport, TransportKind::Tcp);
+        assert_eq!(spec.wire, WireCodec::Bf16);
+        assert_eq!(spec.recv_timeout_ms, 500);
+        let opts = spec.transport_opts();
+        assert_eq!(opts.kind, TransportKind::Tcp);
+        assert_eq!(opts.wire, WireCodec::Bf16);
+        assert_eq!(opts.recv_timeout, std::time::Duration::from_millis(500));
+        let text = spec.plan().describe(&spec);
+        assert!(text.contains("transport    tcp wire bf16"), "{text}");
+        // a zero deadline would mean "always poison": reject it
+        let err = base().recv_timeout_ms(0).build().unwrap_err();
+        assert!(matches!(err, EngineError::InvalidSpec(_)), "{err}");
+        // unset fields resolve to a usable configuration
+        let spec = base().build().unwrap();
+        assert!(spec.recv_timeout_ms >= 1);
+        // single-replica specs never print a transport line
+        assert!(!spec.plan().describe(&spec).contains("transport"));
     }
 
     #[test]

@@ -160,6 +160,34 @@ pub const SERVE_OUT: Knob = Knob {
     doc: "output path override for the serve-capacity bench document",
 };
 
+pub const TRANSPORT: Knob = Knob {
+    name: "FASTDP_TRANSPORT",
+    expected: "channel|tcp",
+    fallback: "channel",
+    doc: "replica exchange transport (in-process channels or framed TCP loopback)",
+};
+
+pub const WIRE: Knob = Knob {
+    name: "FASTDP_WIRE",
+    expected: "raw-f32le|bf16",
+    fallback: "raw-f32le",
+    doc: "wire codec for replica gradient/parameter payloads",
+};
+
+pub const RECV_TIMEOUT_MS: Knob = Knob {
+    name: "FASTDP_RECV_TIMEOUT_MS",
+    expected: "integer >= 1 (milliseconds)",
+    fallback: "30000",
+    doc: "leader-side deadline for replica replies before the group poisons",
+};
+
+pub const COMM_OUT: Knob = Knob {
+    name: "FASTDP_COMM_OUT",
+    expected: "file path",
+    fallback: "BENCH_comm_cost.json at the repo root",
+    doc: "output path override for the comm-cost bench document",
+};
+
 /// Every knob the crate reads, in README table order.
 pub const REGISTRY: &[&Knob] = &[
     &THREADS,
@@ -181,6 +209,10 @@ pub const REGISTRY: &[&Knob] = &[
     &SERVE_MEM_MB,
     &SERVE_BATCHING,
     &SERVE_OUT,
+    &TRANSPORT,
+    &WIRE,
+    &RECV_TIMEOUT_MS,
+    &COMM_OUT,
 ];
 
 /// The raw environment read — the single `std::env::var` chokepoint for
@@ -343,6 +375,32 @@ pub fn serve_batching() -> Option<bool> {
 /// `FASTDP_SERVE_OUT`: output path override (empty counts as unset).
 pub fn serve_out() -> Option<String> {
     raw(&SERVE_OUT).filter(|p| !p.trim().is_empty())
+}
+
+/// `FASTDP_TRANSPORT`: the raw transport name, if set.  Parsing (and the
+/// warn-once fallback via [`warn_invalid`]) stays with
+/// `coordinator::transport::TransportKind::from_env` so the transport
+/// vocabulary lives in one place, like [`kernels`].
+pub fn transport() -> Option<String> {
+    raw(&TRANSPORT)
+}
+
+/// `FASTDP_WIRE`: the raw wire-codec name, if set.  Parsing (and the
+/// warn-once fallback via [`warn_invalid`]) stays with
+/// `coordinator::transport::WireCodec::from_env` so the codec vocabulary
+/// lives in one place, like [`kernels`].
+pub fn wire() -> Option<String> {
+    raw(&WIRE)
+}
+
+/// `FASTDP_RECV_TIMEOUT_MS`: leader-side replica reply deadline (>= 1 ms).
+pub fn recv_timeout_ms() -> Option<u64> {
+    parsed(&RECV_TIMEOUT_MS, positive).map(|ms| ms as u64)
+}
+
+/// `FASTDP_COMM_OUT`: output path override (empty counts as unset).
+pub fn comm_out() -> Option<String> {
+    raw(&COMM_OUT).filter(|p| !p.trim().is_empty())
 }
 
 #[cfg(test)]

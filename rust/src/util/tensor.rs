@@ -89,6 +89,45 @@ pub fn f32s_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
     bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
 }
 
+/// Round an f32 to bf16 (stored in the low 16 bits) with round-to-nearest,
+/// ties-to-even — the deterministic truncation the `bf16` wire codec uses.
+/// NaNs canonicalize to a sign-preserving quiet NaN so encoding is a pure
+/// function of the value; values past the largest finite bf16 round to
+/// infinity (the clipped gradients the codec carries never get there).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return (((bits >> 16) & 0x8000) | 0x7fc0) as u16;
+    }
+    // classic RNE: add half an ulp of the 16-bit target, plus the parity
+    // bit of the kept mantissa so exact ties round to the even neighbour
+    ((bits.wrapping_add(0x7fff + ((bits >> 16) & 1))) >> 16) as u16
+}
+
+/// Widen a bf16 (low 16 bits) back to f32 — exact, every bf16 is an f32.
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Serialize f32s as little-endian bf16 — the compact replica wire codec
+/// (2 bytes per element; see `coordinator::transport::WireCodec`).  Like
+/// [`f32s_to_le_bytes`], a `dp-sink`: only clipped gradient data may cross
+/// onto the wire through it.
+// fastdp-lint: dp-sink
+pub fn f32s_to_bf16_le_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for v in xs {
+        out.extend_from_slice(&f32_to_bf16(*v).to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_bf16_le_bytes`]; the length must be a multiple of 2.
+pub fn f32s_from_bf16_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 2, 0, "bf16 byte buffer length must be a multiple of 2");
+    bytes.chunks_exact(2).map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]]))).collect()
+}
+
 /// L2 vector norm of a flat f32 slice.
 pub fn l2_norm(xs: &[f32]) -> f64 {
     xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
@@ -128,6 +167,54 @@ mod tests {
         let mut y = vec![1.0f32, 2.0];
         axpy(&mut y, 2.0, &[10.0, 20.0]);
         assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // exactly representable values pass through
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, 1.5] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)).to_bits(), v.to_bits(), "{v}");
+        }
+        // 1.0 + 2^-8 is exactly halfway between bf16 neighbours 1.0 and
+        // 1.0078125; ties go to the even mantissa (1.0)
+        let tie = f32::from_bits(0x3f80_8000);
+        assert_eq!(f32_to_bf16(tie), 0x3f80);
+        // one ulp above the tie rounds up
+        let above = f32::from_bits(0x3f80_8001);
+        assert_eq!(f32_to_bf16(above), 0x3f81);
+        // the next tie (between 1.0078125 and 1.015625) has an odd low
+        // mantissa bit and rounds up to even
+        let tie2 = f32::from_bits(0x3f81_8000);
+        assert_eq!(f32_to_bf16(tie2), 0x3f82);
+        // infinities and NaN survive with their signs
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_relative_error_is_half_ulp() {
+        // 8 effective mantissa bits -> RNE error <= 2^-9 relative... with
+        // the implicit bit that is half an ulp of 2^-7, i.e. 2^-8
+        let mut x = 0x2f1e_4d3fu32; // deterministic LCG seed
+        for _ in 0..5000 {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            let v = f32::from_bits((x >> 9) | 0x3c00_0000) - 0.01; // ~[-0.01, 0.03)
+            let back = bf16_to_f32(f32_to_bf16(v));
+            let tol = 1.0 / 256.0 * v.abs().max(f32::MIN_POSITIVE);
+            assert!((back - v).abs() <= tol, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn bf16_bytes_roundtrip_is_deterministic() {
+        let xs = vec![0.0f32, -0.0, 1.5, -0.0625, 3.25e-3, -7.5e4];
+        let bytes = f32s_to_bf16_le_bytes(&xs);
+        assert_eq!(bytes.len(), xs.len() * 2);
+        // encoding is a pure function: re-encoding decoded values is stable
+        let back = f32s_from_bf16_le_bytes(&bytes);
+        assert_eq!(f32s_to_bf16_le_bytes(&back), bytes);
+        assert!(f32s_from_bf16_le_bytes(&[]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Transport must be invisible to the training trajectory: a replicated
+//! session exchanging gradients over **TCP loopback with framed, CRC-checked
+//! messages** produces bit-identical losses, parameters and eval metrics to
+//! the in-process channel path — which is itself pinned to the
+//! single-replica fused run (`tests/replica_determinism.rs`).  That holds
+//! for replicas ∈ {1, 2, 4} and for both the fused and blocked kernel
+//! tiers, because the wire carries the exact f32 bytes the channel would
+//! have moved (`raw-f32le`) and the leader folds them in the same fixed
+//! replica order.
+//!
+//! The `bf16` compact codec is allowed to perturb the trajectory — it
+//! truncates mantissas on the wire — but only within a small bounded drift,
+//! and it must buy its keep: >= 40% fewer upstream bytes per exchange.
+//!
+//! Everything here drives the public `JobSpec` API; transport, codec and
+//! deadline flow through the spec exactly as `--transport` / `--wire` /
+//! `--recv-timeout-ms` set them from the CLI.
+
+use fastdp::engine::{
+    Engine, InterpreterBackend, JobSpec, KernelMode, Method, OptimKind, TransportKind, WireCodec,
+};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fastdp-transport-{name}-{}", std::process::id()))
+}
+
+/// The replica-determinism family spec, extended with transport knobs.
+fn spec(replicas: usize, kind: TransportKind, wire: WireCodec, steps: u64) -> JobSpec {
+    JobSpec::builder("cls-base", Method::BiTFiT)
+        .sigma(0.8)
+        .delta(1e-5)
+        .optim(OptimKind::Adam)
+        .lr(5e-3)
+        .clip_r(0.1)
+        .batch(128)
+        .steps(steps)
+        .n_train(256)
+        .seed(23)
+        .replicas(replicas)
+        .transport(kind)
+        .wire(wire)
+        .recv_timeout_ms(30_000)
+        .build()
+        .unwrap()
+}
+
+fn engine_for(tier: KernelMode) -> Engine {
+    // pin the kernel tier explicitly so the matrix is what it claims to be,
+    // whatever the ambient kernel-mode configuration says
+    Engine::new(Box::new(InterpreterBackend::with_config(None, Some(tier))))
+}
+
+/// Train to completion; return (per-step loss bits, final param bits,
+/// eval metric bits, upstream wire bytes).
+fn run(
+    tier: KernelMode,
+    replicas: usize,
+    kind: TransportKind,
+    wire: WireCodec,
+    steps: u64,
+) -> (Vec<u64>, Vec<u32>, [u64; 2], u64) {
+    let mut engine = engine_for(tier);
+    let spec = spec(replicas, kind, wire, steps);
+    let task = engine.default_task("cls-base").unwrap();
+    let train = engine.dataset("cls-base", task, spec.n_train, 31).unwrap();
+    let test = engine.dataset("cls-base", task, 64, 32).unwrap();
+    let mut session = engine.session(&spec).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..spec.steps {
+        losses.push(session.run_step(&train).unwrap().loss.to_bits());
+    }
+    let params: Vec<u32> = session.full_params().iter().map(|v| v.to_bits()).collect();
+    let eval = session.evaluate(&test, 64).unwrap();
+    let up = session.comm_stats().map(|c| c.bytes_to_leader).unwrap_or(0);
+    (losses, params, [eval.metric_a.to_bits(), eval.metric_b.to_bits()], up)
+}
+
+#[test]
+fn tcp_raw_is_bit_identical_to_channel_and_single_replica_on_both_tiers() {
+    for tier in [KernelMode::Fused, KernelMode::Blocked] {
+        // replicas = 1 never spawns a group: the in-process baseline
+        let base = run(tier, 1, TransportKind::Channel, WireCodec::RawF32le, 4);
+        for replicas in [2usize, 4] {
+            let chan = run(tier, replicas, TransportKind::Channel, WireCodec::RawF32le, 4);
+            let tcp = run(tier, replicas, TransportKind::Tcp, WireCodec::RawF32le, 4);
+            for (got, label) in [(&chan, "channel"), (&tcp, "tcp")] {
+                assert_eq!(got.0, base.0, "{tier:?} x{replicas} {label}: losses");
+                assert_eq!(got.1, base.1, "{tier:?} x{replicas} {label}: params");
+                assert_eq!(got.2, base.2, "{tier:?} x{replicas} {label}: eval");
+            }
+            // and the two transports account identical raw wire volume
+            assert_eq!(chan.3, tcp.3, "{tier:?} x{replicas}: upstream bytes");
+            assert!(tcp.3 > 0, "replicated runs must measure traffic");
+        }
+    }
+}
+
+#[test]
+fn bf16_wire_tracks_raw_within_tolerance_and_cuts_upstream_bytes_by_40pct() {
+    for kind in [TransportKind::Channel, TransportKind::Tcp] {
+        // 3-step trajectories: the leader keeps f32 master weights, so the
+        // wire truncation enters only through the gradient sums
+        let raw = run(KernelMode::Fused, 2, kind, WireCodec::RawF32le, 3);
+        let compact = run(KernelMode::Fused, 2, kind, WireCodec::Bf16, 3);
+
+        // per-step losses within 1e-2 relative
+        for (step, (a, b)) in raw.0.iter().zip(&compact.0).enumerate() {
+            let (a, b) = (f64::from_bits(*a), f64::from_bits(*b));
+            let rel = (a - b).abs() / a.abs().max(1e-12);
+            assert!(rel <= 1e-2, "{kind:?} step {step}: loss {a} vs {b} (rel {rel:.2e})");
+        }
+        // final parameters within 1e-2 relative l2
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, b) in raw.1.iter().zip(&compact.1) {
+            let (a, b) = (f32::from_bits(*a) as f64, f32::from_bits(*b) as f64);
+            num += (a - b) * (a - b);
+            den += a * a;
+        }
+        let rel = (num / den.max(1e-24)).sqrt();
+        assert!(rel <= 1e-2, "{kind:?}: param drift rel-l2 {rel:.2e} exceeds 1e-2");
+
+        // the compact codec must cut upstream bytes by at least 40%
+        // (bf16 is exactly half of f32 on the wire)
+        assert!(raw.3 > 0 && compact.3 > 0);
+        let reduction = 1.0 - compact.3 as f64 / raw.3 as f64;
+        assert!(
+            reduction >= 0.40,
+            "{kind:?}: bf16 cut upstream bytes by only {:.0}% ({} -> {})",
+            reduction * 100.0,
+            raw.3,
+            compact.3
+        );
+    }
+}
+
+#[test]
+fn snapshot_resume_over_tcp_is_bit_identical_to_the_uninterrupted_run() {
+    // a worker (in fact the whole group) is lost mid-run; the session
+    // snapshot restarts a fresh TCP replica group that must continue the
+    // trajectory bit-for-bit — the engine-level face of `ReplicaGroup::rejoin`
+    let steps = 4u64;
+    let job = spec(2, TransportKind::Tcp, WireCodec::RawF32le, steps);
+    let mut engine = engine_for(KernelMode::Fused);
+    let task = engine.default_task("cls-base").unwrap();
+    let train = engine.dataset("cls-base", task, job.n_train, 31).unwrap();
+    let test = engine.dataset("cls-base", task, 64, 32).unwrap();
+
+    let mut straight = engine.session(&job).unwrap();
+    for _ in 0..steps {
+        straight.run_step(&train).unwrap();
+    }
+
+    let mut first_half = engine.session(&job).unwrap();
+    for _ in 0..2 {
+        first_half.run_step(&train).unwrap();
+    }
+    let path = tmp("tcp-resume");
+    first_half.save_state(&path).unwrap();
+    drop(first_half); // the old replica group (and its sockets) die here
+
+    let mut resumed = engine.resume_session(&job, &path).unwrap();
+    assert_eq!(resumed.step(), 2);
+    for _ in 2..steps {
+        resumed.run_step(&train).unwrap();
+    }
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(
+        bits(&straight.full_params()),
+        bits(&resumed.full_params()),
+        "resumed TCP group must continue bit-identically"
+    );
+    let (pa, pb) = (straight.privacy_spent(), resumed.privacy_spent());
+    assert_eq!(pa.epsilon.to_bits(), pb.epsilon.to_bits());
+    let (ea, eb) = (straight.evaluate(&test, 64).unwrap(), resumed.evaluate(&test, 64).unwrap());
+    assert_eq!(ea.metric_a.to_bits(), eb.metric_a.to_bits());
+    assert_eq!(ea.metric_b.to_bits(), eb.metric_b.to_bits());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn transport_spec_knobs_survive_describe_and_validation() {
+    let job = spec(2, TransportKind::Tcp, WireCodec::Bf16, 2);
+    let text = job.describe();
+    assert!(text.contains("transport    tcp wire bf16"), "{text}");
+    assert!(text.contains("30000 ms"), "{text}");
+    // single-replica jobs have no exchange, so no transport line
+    let solo = spec(1, TransportKind::Tcp, WireCodec::Bf16, 2);
+    assert!(!solo.describe().contains("transport"), "{}", solo.describe());
+}

@@ -6,6 +6,7 @@
 //! |                 | output ordering in `kernels/`, `engine/`, `coordinator/`|
 //! |                 | or `nlg/` (hasher order ⇒ nondeterministic bits)        |
 //! | `thread-spawn`  | `std::thread::{spawn,scope,Builder}` outside the pool   |
+//! | `net-io`        | raw `std::net` sockets outside the transport module     |
 //! | `dp-flow`       | per-sample gradient taint reaching a sink unclipped     |
 //! | `dp-noise`      | a crate with per-sample sources but no noise site       |
 //! | `unsafe-safety` | `unsafe` blocks without a `// SAFETY:` comment          |
@@ -34,6 +35,7 @@ use crate::scan::{comment_directive, Directive, SourceFile};
 pub const RULES: &[&str] = &[
     "hash-iteration",
     "thread-spawn",
+    "net-io",
     "dp-flow",
     "dp-noise",
     "unsafe-safety",
@@ -53,6 +55,8 @@ pub struct LintConfig {
     pub env_rel: String,
     /// The thread-pool module (exempt from `thread-spawn`).
     pub pool_rel: String,
+    /// The replica-transport module (exempt from `net-io`).
+    pub transport_rel: String,
     /// Dir prefixes (with trailing `/`) where `hash-iteration` applies.
     pub determinism_dirs: Vec<String>,
 }
@@ -66,6 +70,7 @@ impl LintConfig {
             readme: None,
             env_rel: "runtime/env.rs".to_string(),
             pool_rel: "runtime/pool.rs".to_string(),
+            transport_rel: "coordinator/transport.rs".to_string(),
             determinism_dirs: ["kernels/", "engine/", "coordinator/", "nlg/", "audit/", "serve/"]
                 .iter()
                 .map(|s| s.to_string())
@@ -185,6 +190,38 @@ fn rule_thread(ctx: &mut Ctx, sf: &SourceFile) {
                      worker pool so reductions stay in fixed order",
                     c.text
                 ),
+            );
+        }
+    }
+}
+
+/// Raw `std::net` use outside the sanctioned transport module: ad-hoc
+/// sockets bypass the framed, CRC-checked, deadline-bounded exchange layer
+/// (and its wire accounting), so replica traffic must go through
+/// `coordinator/transport.rs`.  Matches `net :: <Ident>` triples (plain
+/// imports, `std::net::TcpStream::connect`, ...) and `net :: {` group
+/// imports; tests may open raw sockets (fault injection needs them).
+fn rule_net(ctx: &mut Ctx, sf: &SourceFile) {
+    if sf.rel == ctx.cfg.transport_rel {
+        return;
+    }
+    let code = code_indices(sf);
+    for w in 0..code.len().saturating_sub(2) {
+        let [a, b, c] = [&sf.toks[code[w]], &sf.toks[code[w + 1]], &sf.toks[code[w + 2]]];
+        if a.kind == Kind::Ident
+            && a.text == "net"
+            && b.text == "::"
+            && (c.kind == Kind::Ident || c.text == "{")
+            && !sf.in_test(a.line)
+        {
+            ctx.emit(
+                sf,
+                "net-io",
+                a.line,
+                "raw std::net use outside coordinator/transport.rs — sockets must go through \
+                 the framed transport layer so exchanges stay CRC-checked, deadline-bounded \
+                 and wire-accounted"
+                    .to_string(),
             );
         }
     }
@@ -802,6 +839,7 @@ pub fn run(cfg: &LintConfig) -> Report {
     for sf in &src_files {
         rule_unsafe(&mut ctx, sf);
         rule_thread(&mut ctx, sf);
+        rule_net(&mut ctx, sf);
         rule_env(&mut ctx, sf, sf.rel == cfg.env_rel);
         if cfg.determinism_dirs.iter().any(|d| sf.rel.starts_with(d.as_str())) {
             rule_hash(&mut ctx, sf);

@@ -1,0 +1,8 @@
+//! A metrics pusher that opens its own socket instead of going through the
+//! transport layer — the `net-io` rule must fire.
+
+pub fn push_metrics() -> std::io::Result<()> {
+    let stream = std::net::TcpStream::connect("127.0.0.1:9000")?;
+    let _ = stream;
+    Ok(())
+}

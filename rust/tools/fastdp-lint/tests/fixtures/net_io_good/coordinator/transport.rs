@@ -1,0 +1,5 @@
+//! The sanctioned socket layer — raw `std::net` is allowed here by path.
+
+pub fn bind_loopback() -> std::io::Result<std::net::TcpListener> {
+    std::net::TcpListener::bind("127.0.0.1:0")
+}

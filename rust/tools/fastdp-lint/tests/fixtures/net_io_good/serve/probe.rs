@@ -1,0 +1,7 @@
+//! A readiness probe with an explicit allow annotation — suppressed, but
+//! surfaced in the report's allowed list.
+
+pub fn probe_port() -> bool {
+    // fastdp-lint: allow(net-io) readiness probe runs before the transport exists
+    std::net::TcpStream::connect("127.0.0.1:1").is_ok()
+}

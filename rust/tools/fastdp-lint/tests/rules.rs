@@ -63,6 +63,22 @@ fn thread_spawn_honors_allow_in_serve_tree() {
 }
 
 #[test]
+fn net_io_fires_on_raw_sockets_outside_transport() {
+    let bad = lint("net_io_bad");
+    assert!(fired(&bad).contains(&"net-io"), "{:?}", bad.findings);
+}
+
+#[test]
+fn net_io_exempts_transport_and_honors_allow() {
+    let good = lint("net_io_good");
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+    // the annotated probe is recorded as allowed, not dropped silently;
+    // the transport module itself is exempt by path (no entry at all)
+    assert_eq!(good.allowed.len(), 1, "{:?}", good.allowed);
+    assert_eq!(good.allowed[0].rule, "net-io");
+}
+
+#[test]
 fn dp_flow_fires_on_unclipped_sink() {
     let bad = lint("taint_bad");
     let hits: Vec<_> = bad.findings.iter().filter(|f| f.rule == "dp-flow").collect();
